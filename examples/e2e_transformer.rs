@@ -1,0 +1,62 @@
+//! End-to-end driver (DESIGN.md §3): federated training of the causal-LM
+//! transformer across 4 simulated devices for a few hundred rounds on
+//! synthetic Markov text, exercising every layer of the stack:
+//!
+//!   Pallas matmul kernels (L1) → JAX transformer fwd/bwd (L2) → AOT HLO →
+//!   PJRT runtime → compressed-L2GD protocol + bit-metered transport (L3).
+//!
+//! Logs the loss curve and records the run for EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example e2e_transformer -- [steps]
+
+use std::sync::Arc;
+
+use pfl::algorithms::{FedAlgorithm, L2gd};
+use pfl::coordinator::{token_env, TokenEnvCfg};
+use pfl::runtime::XlaRuntime;
+
+fn main() -> anyhow::Result<()> {
+    let steps: u64 = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(300);
+
+    eprintln!("loading transformer_tiny artifacts ...");
+    let rt = XlaRuntime::load_filtered("artifacts", Some(&["transformer_tiny"]))?;
+    let backend = Arc::new(rt.backend("transformer_tiny")?);
+    let meta = rt.backend("transformer_tiny")?.meta().clone();
+    eprintln!("P = {} parameters, vocab {}, seq {}", meta.param_count,
+              meta.num_classes, meta.tokens_per_sample);
+
+    let env = token_env(&TokenEnvCfg::default(), backend);
+
+    // compressed L2GD in the FedAvg-like regime with natural compression
+    let mut alg = L2gd::from_local_and_agg(
+        0.3, 0.25, 1.0, env.n_clients(), "natural", "natural")?;
+    alg.tag = "e2e-transformer".into();
+
+    let t0 = std::time::Instant::now();
+    let series = alg.run(&env, steps, (steps / 15).max(1))?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    println!("step  comm  bits/n      train-loss  test-loss  next-tok-acc");
+    for r in &series.records {
+        println!("{:>4}  {:>4}  {:>10.3e}  {:>10.4}  {:>9.4}  {:>8.3}",
+                 r.step, r.comm_rounds, r.bits_per_client, r.train_loss,
+                 r.test_loss, r.test_acc);
+    }
+    let first = &series.records[0];
+    let last = series.last().unwrap();
+    println!("\n{} steps in {:.1}s ({:.2} steps/s incl. eval)",
+             steps, dt, steps as f64 / dt);
+    println!("loss {:.4} → {:.4}; next-token acc {:.3} → {:.3}; \
+              {:.2} MiB sent per device",
+             first.train_loss, last.train_loss, first.test_acc, last.test_acc,
+             last.bits_per_client / 8.0 / 1024.0 / 1024.0);
+    series.write_csv("results/e2e_transformer.csv")?;
+    anyhow::ensure!(last.train_loss < first.train_loss * 0.8,
+                    "e2e driver failed to learn");
+    println!("OK: loss curve recorded in results/e2e_transformer.csv");
+    Ok(())
+}

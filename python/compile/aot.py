@@ -1,0 +1,112 @@
+"""AOT compile path: lower the L2 model zoo to HLO text + manifest.
+
+Run once via ``make artifacts``. For every model in ``model.default_zoo()``
+this writes:
+
+  artifacts/<name>.grad.hlo.txt   — (theta, *batch) -> (grad, loss, correct)
+  artifacts/<name>.eval.hlo.txt   — (theta, *batch) -> (loss, correct)
+  artifacts/<name>.init.bin       — raw little-endian f32[P] initial params
+  artifacts/manifest.json         — index the Rust runtime loads
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+≥ 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+Functions are lowered with ``return_tuple=True``; the Rust side unwraps the
+tuple with ``Literal::to_tuple``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import ModelDef, default_zoo
+
+_DTYPE_NAMES = {"float32": "f32", "int32": "i32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(structs) -> list:
+    out = []
+    for s in structs:
+        name = _DTYPE_NAMES.get(str(s.dtype), str(s.dtype))
+        out.append({"shape": list(s.shape), "dtype": name})
+    return out
+
+
+def lower_model(md: ModelDef, out_dir: str, seed: int = 0) -> dict:
+    """Lower one model's grad + eval and write its artifacts."""
+    theta_s = jax.ShapeDtypeStruct((md.param_count,), "float32")
+
+    entry = {
+        "name": md.name,
+        "family": md.family,
+        "param_count": md.param_count,
+        "meta": md.meta,
+        "init": f"{md.name}.init.bin",
+    }
+    for fn_name, fn, args in (("grad", md.grad_fn, md.grad_args),
+                              ("eval", md.eval_fn, md.eval_args)):
+        lowered = jax.jit(fn).lower(theta_s, *args)
+        text = to_hlo_text(lowered)
+        fname = f"{md.name}.{fn_name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        n_out = 3 if fn_name == "grad" else 2
+        entry[fn_name] = {
+            "hlo": fname,
+            "inputs": _sig((theta_s, *args)),
+            "num_outputs": n_out,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+
+    init = md.spec.init_flat(seed)
+    assert init.size == md.param_count
+    with open(os.path.join(out_dir, f"{md.name}.init.bin"), "wb") as f:
+        f.write(init.astype("<f4").tobytes())
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="init-parameter seed (recorded in the manifest)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated model names (default: full zoo)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    zoo = default_zoo()
+    if args.only:
+        keep = set(args.only.split(","))
+        zoo = [m for m in zoo if m.name in keep]
+
+    entries = []
+    for md in zoo:
+        print(f"lowering {md.name} (P={md.param_count}) ...", flush=True)
+        entries.append(lower_model(md, args.out, seed=args.seed))
+
+    manifest = {"version": 1, "seed": args.seed, "models": entries}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(entries)} models to {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

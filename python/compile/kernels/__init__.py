@@ -1,0 +1,12 @@
+"""L1 Pallas kernels (build-time only; never imported at runtime).
+
+All kernels run with interpret=True so that AOT lowering produces plain HLO
+the CPU PJRT client can execute (real-TPU Mosaic lowering is compile-only in
+this environment; see DESIGN.md §Hardware-Adaptation).
+"""
+
+from .fused_logreg import logreg_grad
+from .matmul import matmul, pmatmul
+from .quantize import dither, natural_compress
+
+__all__ = ["logreg_grad", "matmul", "pmatmul", "natural_compress", "dither"]

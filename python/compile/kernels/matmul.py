@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: MXU-tiled matmul used by the dense layers of the L2 zoo.
+
+The GPU original would tile with threadblocks + shared memory; on TPU the
+BlockSpec index maps express the HBM↔VMEM schedule directly: grid
+(M/BM, N/BN, K/BK) with the K axis innermost so each (BM, BN) output block
+stays resident in VMEM while K-slabs of A and B stream through. The output
+block doubles as the accumulator (`@pl.when`-guarded init on the first K
+step), which is the Pallas idiom for the MXU's accumulate-in-place.
+
+interpret=True: CPU PJRT cannot run Mosaic custom-calls; the same code path
+is what `aot.py` lowers into the artifacts the Rust runtime executes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 128×128×128 tiles fill the MXU systolic array; VMEM working set is
+# (BM·BK + BK·BN + BM·BN)·4B = 192 KiB ≪ 16 MiB, leaving room for
+# double-buffered prefetch of the next K slab.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a, b, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN, bk: int = DEFAULT_BK):
+    """Tiled `a @ b` for f32[M,K] × f32[K,N]; mirrors `ref.matmul_ref`.
+
+    Inputs are zero-padded up to tile multiples; padding contributes zeros to
+    the accumulation and is sliced away from the result.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims disagree: {k} vs {k2}"
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+    if pk or pn:
+        b = jnp.pad(b, ((0, pk), (0, pn)))
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=((m + pm) // bm, (n + pn) // bn, (k + pk) // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m + pm, n + pn), jnp.float32),
+        interpret=True,
+    )(a, b)
+    return out[:m, :n]
+
+
+# --------------------------------------------------------------------------
+# Differentiable wrapper — backward pass also runs on the tiled kernel, so
+# both fwd and bwd matmuls of every dense layer lower through Pallas into
+# the AOT artifacts.
+# --------------------------------------------------------------------------
+
+@jax.custom_vjp
+def pmatmul(a, b):
+    """`a @ b` on the Pallas kernel, differentiable w.r.t. both operands."""
+    return matmul(a, b)
+
+
+def _pmatmul_fwd(a, b):
+    return matmul(a, b), (a, b)
+
+
+def _pmatmul_bwd(res, g):
+    a, b = res
+    # dA = g @ Bᵀ, dB = Aᵀ @ g — same kernel, transposed tiles.
+    return matmul(g, b.T), matmul(a.T, g)
+
+
+pmatmul.defvjp(_pmatmul_fwd, _pmatmul_bwd)

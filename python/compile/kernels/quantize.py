@@ -1,0 +1,97 @@
+"""L1 Pallas kernels: the paper's unbiased compressors as on-device math.
+
+The wire formats live in the Rust coordinator (rust/src/compress/), but the
+*numerics* of natural compression and QSGD random dithering are validated
+here against ref.py, on explicit uniform variates, so L3's codecs and L1's
+kernels provably implement the same operator (Assumption 1).
+
+Both kernels are pure VPU work (elementwise exponent/mantissa manipulation,
+8×128 lanes); they tile a flattened vector into (BLOCK,) chunks. The dither
+kernel needs the global ℓ2 norm, which is computed by a first fused pass
+(jnp) and broadcast to every block — the two-pass structure matches how a
+real TPU implementation would schedule it (norm reduce, then quantize).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 1024
+
+
+def _natural_kernel(x_ref, u_ref, o_ref):
+    x = x_ref[...]
+    u = u_ref[...]
+    a = jnp.abs(x)
+    e = jnp.floor(jnp.log2(jnp.where(a > 0, a, 1.0)))
+    low = jnp.exp2(e)
+    p_up = (a - low) / low
+    mag = jnp.where(u < p_up, 2.0 * low, low)
+    o_ref[...] = jnp.where(a > 0, jnp.sign(x) * mag, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def natural_compress(x, u, block: int = DEFAULT_BLOCK):
+    """Natural compression C_nat; mirrors `ref.natural_compress_ref`."""
+    (d,) = x.shape
+    b = min(block, d)
+    pad = (-d) % b
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        u = jnp.pad(u, (0, pad))
+    out = pl.pallas_call(
+        _natural_kernel,
+        grid=((d + pad) // b,),
+        in_specs=[
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d + pad,), jnp.float32),
+        interpret=True,
+    )(x, u)
+    return out[:d]
+
+
+def _dither_kernel(x_ref, u_ref, norm_ref, s_ref, o_ref):
+    x = x_ref[...]
+    u = u_ref[...]
+    norm = norm_ref[0]
+    s = s_ref[0]
+    safe = jnp.where(norm > 0, norm, 1.0)
+    t = s * jnp.abs(x) / safe
+    lo = jnp.floor(t)
+    level = lo + (u < (t - lo)).astype(x.dtype)
+    out = norm * jnp.sign(x) * level / s
+    o_ref[...] = jnp.where(norm > 0, out, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def dither(x, u, s, block: int = DEFAULT_BLOCK):
+    """QSGD random dithering with s levels; mirrors `ref.dither_ref`."""
+    (d,) = x.shape
+    b = min(block, d)
+    pad = (-d) % b
+    norm = jnp.sqrt(jnp.sum(x * x))[None]          # pass 1: global reduce
+    s_arr = jnp.asarray(s, jnp.float32)[None]
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        u = jnp.pad(u, (0, pad))
+    out = pl.pallas_call(
+        _dither_kernel,
+        grid=((d + pad) // b,),
+        in_specs=[
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),    # norm: broadcast
+            pl.BlockSpec((1,), lambda i: (0,)),    # s: broadcast
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d + pad,), jnp.float32),
+        interpret=True,
+    )(x, u, norm, s_arr)
+    return out[:d]

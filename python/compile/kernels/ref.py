@@ -1,0 +1,99 @@
+"""Pure-jnp correctness oracles for every Pallas kernel (L1).
+
+Each kernel in this package has a reference implementation here written in
+straight-line jax.numpy. The pytest suite (python/tests/) sweeps shapes and
+dtypes with hypothesis and asserts `assert_allclose(kernel(...), ref(...))`.
+The randomized compressors take their uniform variates as *explicit inputs*
+so kernel and reference are compared on identical randomness.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# Fused logistic-regression gradient (the paper's convex experiments, §VII-A)
+# --------------------------------------------------------------------------
+
+def logreg_grad_ref(w, x, y, sw, l2):
+    """Weighted L2-regularized logistic loss: gradient, value, #correct.
+
+    Args:
+      w:  f32[D]   parameter vector.
+      x:  f32[M,D] design matrix (rows may be padding).
+      y:  f32[M]   labels in {+1, -1}.
+      sw: f32[M]   per-sample weights; padding rows carry weight 0.
+      l2: f32[]    ridge coefficient (the paper uses L2 = 0.01).
+
+    Returns (grad f32[D], loss f32[], correct f32[]), with
+      loss = (1/W) Σ_j sw_j · log(1 + exp(-y_j x_jᵀw)) + (l2/2)‖w‖²,
+      W = Σ_j sw_j.
+    """
+    z = x @ w                                     # f32[M]
+    m = jnp.sum(sw)
+    # log(1 + exp(-t)) computed stably as logaddexp(0, -t).
+    losses = jnp.logaddexp(0.0, -y * z)
+    loss = jnp.sum(sw * losses) / m + 0.5 * l2 * jnp.sum(w * w)
+    # d/dz log(1 + exp(-y z)) = -y · σ(-y z) = -y / (1 + exp(y z)).
+    coef = sw * (-y) / (1.0 + jnp.exp(y * z))
+    grad = x.T @ coef / m + l2 * w
+    correct = jnp.sum(sw * (z * y > 0).astype(jnp.float32))
+    return grad, loss, correct
+
+
+# --------------------------------------------------------------------------
+# Tiled matmul (dense layers of the DNN models)
+# --------------------------------------------------------------------------
+
+def matmul_ref(a, b):
+    """Plain f32 matmul oracle for the MXU-tiled Pallas kernel."""
+    return jnp.matmul(a, b)
+
+
+# --------------------------------------------------------------------------
+# Natural compression (Horváth et al.) — unbiased, ω = 1/8
+# --------------------------------------------------------------------------
+
+def natural_compress_ref(x, u):
+    """Stochastic rounding of |x| to the nearest powers of two.
+
+    For x ≠ 0 with 2^e ≤ |x| < 2^{e+1}: round up to 2^{e+1} with probability
+    (|x| − 2^e)/2^e, else down to 2^e; the sign is preserved and 0 maps to 0.
+    `u ∈ [0,1)` supplies the randomness. E[C(x)] = x and
+    E‖C(x) − x‖² ≤ (1/8)‖x‖² (Assumption 1 with ω = 1/8).
+    """
+    a = jnp.abs(x)
+    e = jnp.floor(jnp.log2(jnp.where(a > 0, a, 1.0)))
+    low = jnp.exp2(e)
+    p_up = (a - low) / low                        # ∈ [0, 1)
+    mag = jnp.where(u < p_up, 2.0 * low, low)
+    return jnp.where(a > 0, jnp.sign(x) * mag, 0.0)
+
+
+# --------------------------------------------------------------------------
+# Random dithering / QSGD with s levels — unbiased
+# --------------------------------------------------------------------------
+
+def dither_ref(x, u, s):
+    """QSGD-style random dithering against the ℓ2 norm.
+
+    C(x)_i = ‖x‖₂ · sign(x_i) · ξ_i/s with ξ_i ∈ {⌊t⌋, ⌈t⌉}, t = s|x_i|/‖x‖₂,
+    P(ξ = ⌈t⌉) = t − ⌊t⌋. Unbiased; ω ≤ min(d/s², √d/s).
+    """
+    norm = jnp.sqrt(jnp.sum(x * x))
+    safe = jnp.where(norm > 0, norm, 1.0)
+    t = s * jnp.abs(x) / safe
+    lo = jnp.floor(t)
+    level = lo + (u < (t - lo)).astype(x.dtype)
+    out = norm * jnp.sign(x) * level / s
+    return jnp.where(norm > 0, out, 0.0)
+
+
+# --------------------------------------------------------------------------
+# Aggregation step (Algorithm 1, ξ_k = 1 branch)
+# --------------------------------------------------------------------------
+
+def aggregation_step_ref(xi, avg, eta_lambda_np):
+    """x_i ← x_i − (ηλ/np)(x_i − avg): the L2GD aggregation update."""
+    return xi - eta_lambda_np * (xi - avg)

@@ -1,0 +1,472 @@
+"""L2: the model zoo, defined over a single flat f32[P] parameter vector.
+
+Every model in the paper's experiments is represented here:
+
+  - ``logreg``           — §VII-A convex experiments (a1a/a2a-style data);
+                           its gradient is the fused Pallas kernel directly.
+  - ``mlp``              — small nonconvex baseline.
+  - ``resnet_tiny``      — residual blocks (the paper's ResNet-18/56 family).
+  - ``densenet_tiny``    — dense concatenation blocks (DenseNet-121 family).
+  - ``mobilenet_tiny``   — depthwise-separable blocks (MobileNet family).
+  - ``transformer_tiny`` — causal LM for the end-to-end driver example.
+
+The flat-vector convention mirrors the paper's formulation (each device owns
+x_i ∈ R^d) and makes the Rust side uniform: a client model is a Vec<f32>
+that the compressors/aggregator operate on directly. All dense layers run
+through the Pallas ``pmatmul`` kernel (fwd *and* bwd), so the L1 kernels lower
+into the very HLO artifacts the Rust runtime executes; convolutions stay at
+the lax level (their tiling is XLA's job on every backend).
+
+This module is build-time only: ``aot.py`` lowers each model's ``grad`` and
+``eval`` functions to HLO text once, and Python never runs on the training
+path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import logreg_grad, pmatmul
+
+
+# ===========================================================================
+# Flat-parameter machinery
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Layout of a flat parameter vector: ordered (name, shape, init) slots.
+
+    ``init`` is one of: "zeros", "he", "glorot", "embed", "ones".
+    """
+
+    slots: Tuple[Tuple[str, Tuple[int, ...], str], ...]
+
+    @property
+    def sizes(self) -> List[int]:
+        return [int(np.prod(s)) for _, s, _ in self.slots]
+
+    @property
+    def param_count(self) -> int:
+        return sum(self.sizes)
+
+    def unpack(self, theta: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        """Split f32[P] into named, shaped arrays (pure slicing: free in XLA)."""
+        out = {}
+        off = 0
+        for (name, shape, _), size in zip(self.slots, self.sizes):
+            out[name] = theta[off:off + size].reshape(shape)
+            off += size
+        return out
+
+    def init_flat(self, seed: int) -> np.ndarray:
+        """Properly scaled initial parameters as a flat numpy vector."""
+        rng = np.random.default_rng(seed)
+        parts = []
+        for name, shape, init in self.slots:
+            n = int(np.prod(shape))
+            if init == "zeros":
+                parts.append(np.zeros(n, np.float32))
+            elif init == "ones":
+                parts.append(np.ones(n, np.float32))
+            elif init == "embed":
+                parts.append(rng.normal(0.0, 0.02, n).astype(np.float32))
+            else:
+                fan_in, fan_out = _fans(shape)
+                if init == "he":
+                    std = math.sqrt(2.0 / fan_in)
+                else:  # glorot
+                    std = math.sqrt(2.0 / (fan_in + fan_out))
+                parts.append(rng.normal(0.0, std, n).astype(np.float32))
+        return np.concatenate(parts) if parts else np.zeros(0, np.float32)
+
+
+def _fans(shape: Sequence[int]) -> Tuple[int, int]:
+    if len(shape) == 1:
+        return shape[0], shape[0]
+    if len(shape) == 2:
+        return shape[0], shape[1]
+    # conv HWIO: receptive field × channels
+    rf = int(np.prod(shape[:-2]))
+    return rf * shape[-2], rf * shape[-1]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    """Everything aot.py needs to lower one model.
+
+    ``grad_args`` / ``eval_args`` are ShapeDtypeStructs *excluding* theta
+    (which is always the first argument, f32[P]).
+    """
+
+    name: str
+    family: str
+    spec: ParamSpec
+    grad_fn: Callable            # (theta, *batch) -> (grad, loss, correct)
+    eval_fn: Callable            # (theta, *batch) -> (loss_sum, correct)
+    grad_args: Tuple[jax.ShapeDtypeStruct, ...]
+    eval_args: Tuple[jax.ShapeDtypeStruct, ...]
+    meta: Dict
+
+    @property
+    def param_count(self) -> int:
+        return self.spec.param_count
+
+
+# ===========================================================================
+# Logistic regression (convex; §VII-A)
+# ===========================================================================
+
+def make_logreg(name: str, dim: int, batch: int, eval_batch: int,
+                l2: float = 0.01) -> ModelDef:
+    """Binary logistic regression with ridge; gradient = fused Pallas kernel.
+
+    The batch carries explicit sample weights so one static-shape executable
+    serves any shard size ≤ batch (padding rows get weight 0) — this is how
+    the a1a (321/worker) and a2a (453/worker) shards share artifacts.
+    """
+    spec = ParamSpec((("w", (dim,), "zeros"),))
+
+    def grad_fn(theta, x, y, sw):
+        g, loss, correct = logreg_grad(theta, x, y, sw, jnp.float32(l2))
+        return g, loss, correct
+
+    def eval_fn(theta, x, y, sw):
+        z = x @ theta
+        losses = jnp.logaddexp(0.0, -y * z)
+        m = jnp.sum(sw)
+        loss = jnp.sum(sw * losses) / m + 0.5 * l2 * jnp.sum(theta * theta)
+        correct = jnp.sum(sw * (z * y > 0).astype(jnp.float32))
+        return loss, correct
+
+    f32 = jnp.float32
+    grad_args = (
+        jax.ShapeDtypeStruct((batch, dim), f32),
+        jax.ShapeDtypeStruct((batch,), f32),
+        jax.ShapeDtypeStruct((batch,), f32),
+    )
+    eval_args = (
+        jax.ShapeDtypeStruct((eval_batch, dim), f32),
+        jax.ShapeDtypeStruct((eval_batch,), f32),
+        jax.ShapeDtypeStruct((eval_batch,), f32),
+    )
+    meta = {"input_dim": dim, "num_classes": 2, "train_batch": batch,
+            "eval_batch": eval_batch, "l2": l2, "kind": "logreg"}
+    return ModelDef(name, "logreg", spec, grad_fn, eval_fn,
+                    grad_args, eval_args, meta)
+
+
+# ===========================================================================
+# Shared pieces for the classifier zoo
+# ===========================================================================
+
+def _xent_and_correct(logits: jnp.ndarray, labels: jnp.ndarray):
+    """Mean cross-entropy + #correct for int labels."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == labels)
+                      .astype(jnp.float32))
+    return jnp.mean(nll), correct
+
+
+def _dense(p: Dict[str, jnp.ndarray], name: str, x: jnp.ndarray):
+    """Dense layer on the Pallas matmul kernel (differentiable)."""
+    return pmatmul(x, p[f"{name}.w"]) + p[f"{name}.b"]
+
+
+def _conv(p, name, x, stride=1, groups=1):
+    return jax.lax.conv_general_dilated(
+        x, p[f"{name}.w"], window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    ) + p[f"{name}.b"]
+
+
+def _classifier_modeldef(name, family, spec, forward, batch, eval_batch,
+                         image_hw, channels, num_classes, weight_decay):
+    """Wrap a forward(params, images)->logits into grad/eval ModelDef."""
+
+    def loss_fn(theta, x, y):
+        p = spec.unpack(theta)
+        logits = forward(p, x)
+        loss, correct = _xent_and_correct(logits, y)
+        if weight_decay > 0.0:
+            loss = loss + 0.5 * weight_decay * jnp.sum(theta * theta)
+        return loss, correct
+
+    def grad_fn(theta, x, y):
+        (loss, correct), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            theta, x, y)
+        return g, loss, correct
+
+    def eval_fn(theta, x, y):
+        return loss_fn(theta, x, y)
+
+    f32, i32 = jnp.float32, jnp.int32
+    h, w = image_hw
+    grad_args = (jax.ShapeDtypeStruct((batch, h, w, channels), f32),
+                 jax.ShapeDtypeStruct((batch,), i32))
+    eval_args = (jax.ShapeDtypeStruct((eval_batch, h, w, channels), f32),
+                 jax.ShapeDtypeStruct((eval_batch,), i32))
+    meta = {"image_hw": list(image_hw), "channels": channels,
+            "num_classes": num_classes, "train_batch": batch,
+            "eval_batch": eval_batch, "l2": weight_decay, "kind": "image"}
+    return ModelDef(name, family, spec, grad_fn, eval_fn,
+                    grad_args, eval_args, meta)
+
+
+# ===========================================================================
+# MLP
+# ===========================================================================
+
+def make_mlp(name: str, dim: int, hidden: int, num_classes: int,
+             batch: int, eval_batch: int, weight_decay: float = 0.0) -> ModelDef:
+    spec = ParamSpec((
+        ("fc1.w", (dim, hidden), "he"), ("fc1.b", (hidden,), "zeros"),
+        ("fc2.w", (hidden, num_classes), "glorot"),
+        ("fc2.b", (num_classes,), "zeros"),
+    ))
+
+    def loss_fn(theta, x, y):
+        p = spec.unpack(theta)
+        h = jax.nn.relu(_dense(p, "fc1", x))
+        logits = _dense(p, "fc2", h)
+        loss, correct = _xent_and_correct(logits, y)
+        if weight_decay > 0.0:
+            loss = loss + 0.5 * weight_decay * jnp.sum(theta * theta)
+        return loss, correct
+
+    def grad_fn(theta, x, y):
+        (loss, correct), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            theta, x, y)
+        return g, loss, correct
+
+    f32, i32 = jnp.float32, jnp.int32
+    grad_args = (jax.ShapeDtypeStruct((batch, dim), f32),
+                 jax.ShapeDtypeStruct((batch,), i32))
+    eval_args = (jax.ShapeDtypeStruct((eval_batch, dim), f32),
+                 jax.ShapeDtypeStruct((eval_batch,), i32))
+    meta = {"input_dim": dim, "num_classes": num_classes,
+            "train_batch": batch, "eval_batch": eval_batch,
+            "l2": weight_decay, "kind": "flat"}
+    return ModelDef(name, "mlp", spec, grad_fn, loss_fn,
+                    grad_args, eval_args, meta)
+
+
+# ===========================================================================
+# ResNet-tiny — residual adds, the ResNet-18/56 architectural signature
+# ===========================================================================
+
+def make_resnet_tiny(name: str = "resnet_tiny", hw: int = 16, c0: int = 8,
+                     num_classes: int = 10, batch: int = 32,
+                     eval_batch: int = 256) -> ModelDef:
+    c1 = 2 * c0
+    slots = [
+        ("stem.w", (3, 3, 3, c0), "he"), ("stem.b", (c0,), "zeros"),
+        # residual block 1 (c0 → c0)
+        ("b1c1.w", (3, 3, c0, c0), "he"), ("b1c1.b", (c0,), "zeros"),
+        ("b1c2.w", (3, 3, c0, c0), "he"), ("b1c2.b", (c0,), "zeros"),
+        # downsample + widen
+        ("down.w", (3, 3, c0, c1), "he"), ("down.b", (c1,), "zeros"),
+        # residual block 2 (c1 → c1)
+        ("b2c1.w", (3, 3, c1, c1), "he"), ("b2c1.b", (c1,), "zeros"),
+        ("b2c2.w", (3, 3, c1, c1), "he"), ("b2c2.b", (c1,), "zeros"),
+        ("head.w", (c1, num_classes), "glorot"),
+        ("head.b", (num_classes,), "zeros"),
+    ]
+    spec = ParamSpec(tuple(slots))
+
+    def forward(p, x):
+        h = jax.nn.relu(_conv(p, "stem", x))
+        r = jax.nn.relu(_conv(p, "b1c1", h))
+        h = jax.nn.relu(h + _conv(p, "b1c2", r))          # residual add
+        h = jax.nn.relu(_conv(p, "down", h, stride=2))
+        r = jax.nn.relu(_conv(p, "b2c1", h))
+        h = jax.nn.relu(h + _conv(p, "b2c2", r))          # residual add
+        h = jnp.mean(h, axis=(1, 2))                      # global avg pool
+        return _dense(p, "head", h)
+
+    return _classifier_modeldef(name, "resnet", spec, forward, batch,
+                                eval_batch, (hw, hw), 3, num_classes, 0.0)
+
+
+# ===========================================================================
+# DenseNet-tiny — feature concatenation, the DenseNet-121 signature
+# ===========================================================================
+
+def make_densenet_tiny(name: str = "densenet_tiny", hw: int = 16,
+                       c0: int = 8, growth: int = 6, layers: int = 4,
+                       num_classes: int = 10, batch: int = 32,
+                       eval_batch: int = 256) -> ModelDef:
+    slots = [("stem.w", (3, 3, 3, c0), "he"), ("stem.b", (c0,), "zeros")]
+    cin = c0
+    for i in range(layers):
+        slots += [(f"d{i}.w", (3, 3, cin, growth), "he"),
+                  (f"d{i}.b", (growth,), "zeros")]
+        cin += growth                                     # concat grows width
+    slots += [("trans.w", (1, 1, cin, 2 * c0), "he"),
+              ("trans.b", (2 * c0,), "zeros"),
+              ("head.w", (2 * c0, num_classes), "glorot"),
+              ("head.b", (num_classes,), "zeros")]
+    spec = ParamSpec(tuple(slots))
+
+    def forward(p, x):
+        h = jax.nn.relu(_conv(p, "stem", x))
+        for i in range(layers):
+            new = jax.nn.relu(_conv(p, f"d{i}", h))
+            h = jnp.concatenate([h, new], axis=-1)        # dense connectivity
+        h = jax.nn.relu(_conv(p, "trans", h))             # 1×1 transition
+        h = jnp.mean(h, axis=(1, 2))
+        return _dense(p, "head", h)
+
+    return _classifier_modeldef(name, "densenet", spec, forward, batch,
+                                eval_batch, (hw, hw), 3, num_classes, 0.0)
+
+
+# ===========================================================================
+# MobileNet-tiny — depthwise-separable convs, the MobileNet signature
+# ===========================================================================
+
+def make_mobilenet_tiny(name: str = "mobilenet_tiny", hw: int = 16,
+                        c0: int = 8, num_classes: int = 10, batch: int = 32,
+                        eval_batch: int = 256) -> ModelDef:
+    c1 = 2 * c0
+    slots = [("stem.w", (3, 3, 3, c0), "he"), ("stem.b", (c0,), "zeros")]
+    # two depthwise-separable blocks: dw 3×3 (per-channel) + pw 1×1
+    blocks = [("s1", c0, c0, 1), ("s2", c0, c1, 2), ("s3", c1, c1, 1)]
+    for bname, ci, co, _ in blocks:
+        slots += [(f"{bname}dw.w", (3, 3, 1, ci), "he"),
+                  (f"{bname}dw.b", (ci,), "zeros"),
+                  (f"{bname}pw.w", (1, 1, ci, co), "he"),
+                  (f"{bname}pw.b", (co,), "zeros")]
+    slots += [("head.w", (c1, num_classes), "glorot"),
+              ("head.b", (num_classes,), "zeros")]
+    spec = ParamSpec(tuple(slots))
+
+    def forward(p, x):
+        h = jax.nn.relu(_conv(p, "stem", x))
+        for bname, ci, _co, stride in blocks:
+            h = jax.nn.relu(_conv(p, f"{bname}dw", h, stride=stride,
+                                  groups=ci))             # depthwise
+            h = jax.nn.relu(_conv(p, f"{bname}pw", h))    # pointwise 1×1
+        h = jnp.mean(h, axis=(1, 2))
+        return _dense(p, "head", h)
+
+    return _classifier_modeldef(name, "mobilenet", spec, forward, batch,
+                                eval_batch, (hw, hw), 3, num_classes, 0.0)
+
+
+# ===========================================================================
+# Transformer-tiny — causal LM for the end-to-end driver
+# ===========================================================================
+
+def make_transformer_tiny(name: str = "transformer_tiny", vocab: int = 256,
+                          seq: int = 32, d_model: int = 64, heads: int = 2,
+                          layers: int = 2, d_ff: int = 128, batch: int = 16,
+                          eval_batch: int = 64) -> ModelDef:
+    slots = [("embed", (vocab, d_model), "embed"),
+             ("pos", (seq, d_model), "embed")]
+    for i in range(layers):
+        slots += [
+            (f"l{i}.ln1.g", (d_model,), "ones"), (f"l{i}.ln1.b", (d_model,), "zeros"),
+            (f"l{i}.qkv.w", (d_model, 3 * d_model), "glorot"),
+            (f"l{i}.qkv.b", (3 * d_model,), "zeros"),
+            (f"l{i}.proj.w", (d_model, d_model), "glorot"),
+            (f"l{i}.proj.b", (d_model,), "zeros"),
+            (f"l{i}.ln2.g", (d_model,), "ones"), (f"l{i}.ln2.b", (d_model,), "zeros"),
+            (f"l{i}.ff1.w", (d_model, d_ff), "he"), (f"l{i}.ff1.b", (d_ff,), "zeros"),
+            (f"l{i}.ff2.w", (d_ff, d_model), "glorot"), (f"l{i}.ff2.b", (d_model,), "zeros"),
+        ]
+    slots += [("lnf.g", (d_model,), "ones"), ("lnf.b", (d_model,), "zeros"),
+              ("unembed.w", (d_model, vocab), "glorot"),
+              ("unembed.b", (vocab,), "zeros")]
+    spec = ParamSpec(tuple(slots))
+    hd = d_model // heads
+
+    def _ln(g, b, x):
+        mu = jnp.mean(x, -1, keepdims=True)
+        var = jnp.var(x, -1, keepdims=True)
+        return g * (x - mu) * jax.lax.rsqrt(var + 1e-5) + b
+
+    def _mm(x2d, w):
+        # all projections run through the Pallas kernel
+        return pmatmul(x2d, w)
+
+    def forward(p, tokens):
+        """tokens i32[B, seq+1]: input = [:, :seq], target = [:, 1:]."""
+        b = tokens.shape[0]
+        inp = tokens[:, :seq]
+        tgt = tokens[:, 1:]
+        h = p["embed"][inp] + p["pos"][None, :, :]
+        mask = jnp.tril(jnp.ones((seq, seq), jnp.float32))
+        for i in range(layers):
+            x = _ln(p[f"l{i}.ln1.g"], p[f"l{i}.ln1.b"], h)
+            qkv = (_mm(x.reshape(b * seq, d_model), p[f"l{i}.qkv.w"])
+                   + p[f"l{i}.qkv.b"]).reshape(b, seq, 3, heads, hd)
+            q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+            att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+            att = jnp.where(mask[None, None] > 0, att, -1e9)
+            att = jax.nn.softmax(att, axis=-1)
+            o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, seq, d_model)
+            o = (_mm(o.reshape(b * seq, d_model), p[f"l{i}.proj.w"])
+                 + p[f"l{i}.proj.b"]).reshape(b, seq, d_model)
+            h = h + o
+            x = _ln(p[f"l{i}.ln2.g"], p[f"l{i}.ln2.b"], h)
+            f = jax.nn.relu(_mm(x.reshape(b * seq, d_model), p[f"l{i}.ff1.w"])
+                            + p[f"l{i}.ff1.b"])
+            f = (_mm(f, p[f"l{i}.ff2.w"])
+                 + p[f"l{i}.ff2.b"]).reshape(b, seq, d_model)
+            h = h + f
+        h = _ln(p["lnf.g"], p["lnf.b"], h)
+        logits = (_mm(h.reshape(b * seq, d_model), p["unembed.w"])
+                  + p["unembed.b"])
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        flat_tgt = tgt.reshape(b * seq)
+        nll = -jnp.take_along_axis(logp, flat_tgt[:, None], axis=-1)[:, 0]
+        correct = jnp.sum((jnp.argmax(logits, -1) == flat_tgt)
+                          .astype(jnp.float32))
+        return jnp.mean(nll), correct
+
+    def loss_fn(theta, tokens):
+        p = spec.unpack(theta)
+        return forward(p, tokens)
+
+    def grad_fn(theta, tokens):
+        (loss, correct), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            theta, tokens)
+        return g, loss, correct
+
+    i32 = jnp.int32
+    grad_args = (jax.ShapeDtypeStruct((batch, seq + 1), i32),)
+    eval_args = (jax.ShapeDtypeStruct((eval_batch, seq + 1), i32),)
+    meta = {"vocab": vocab, "seq": seq, "d_model": d_model,
+            "num_classes": vocab, "train_batch": batch,
+            "eval_batch": eval_batch, "l2": 0.0, "kind": "lm",
+            "tokens_per_sample": seq}
+    return ModelDef(name, "transformer", spec, grad_fn, loss_fn,
+                    grad_args, eval_args, meta)
+
+
+# ===========================================================================
+# The zoo lowered by aot.py
+# ===========================================================================
+
+def default_zoo() -> List[ModelDef]:
+    """Model instances covering every experiment in DESIGN.md §6."""
+    return [
+        # §VII-A convex: a1a-like (d=123, 321 rows/worker) and a2a-like
+        # (453 rows/worker) share one 512-row weighted executable.
+        make_logreg("logreg123", dim=123, batch=512, eval_batch=2048),
+        make_mlp("mlp_synth", dim=64, hidden=64, num_classes=10,
+                 batch=32, eval_batch=256),
+        make_resnet_tiny(),
+        make_densenet_tiny(),
+        make_mobilenet_tiny(),
+        make_transformer_tiny(),
+    ]

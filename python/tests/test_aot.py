@@ -1,0 +1,77 @@
+"""AOT path: manifest consistency and HLO-text well-formedness.
+
+Requires `make artifacts` to have run (skips otherwise): validates the
+exact bundle the Rust runtime will load.
+"""
+
+import json
+import os
+import struct
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first")
+
+
+def _manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_zoo_models():
+    from compile.model import default_zoo
+    names = {m["name"] for m in _manifest()["models"]}
+    assert names == {m.name for m in default_zoo()}
+
+
+def test_hlo_files_exist_and_parse_shape():
+    man = _manifest()
+    for m in man["models"]:
+        for fn in ("grad", "eval"):
+            path = os.path.join(ART, m[fn]["hlo"])
+            assert os.path.exists(path), path
+            text = open(path).read()
+            assert "ENTRY" in text and "ROOT" in text, path
+            # return_tuple=True: the entry computation must return a tuple
+            assert "tuple(" in text or ") tuple" in text or "(" in text
+
+
+def test_manifest_signatures_match_zoo():
+    from compile.model import default_zoo
+    zoo = {m.name: m for m in default_zoo()}
+    for m in _manifest()["models"]:
+        md = zoo[m["name"]]
+        assert m["param_count"] == md.param_count
+        grad_in = m["grad"]["inputs"]
+        assert grad_in[0] == {"shape": [md.param_count], "dtype": "f32"}
+        assert len(grad_in) == 1 + len(md.grad_args)
+        for sig, s in zip(grad_in[1:], md.grad_args):
+            assert sig["shape"] == list(s.shape)
+
+
+def test_init_bins_match_param_count_and_spec():
+    from compile.model import default_zoo
+    zoo = {m.name: m for m in default_zoo()}
+    man = _manifest()
+    for m in man["models"]:
+        path = os.path.join(ART, m["init"])
+        raw = open(path, "rb").read()
+        assert len(raw) == 4 * m["param_count"]
+        vals = np.frombuffer(raw, "<f4")
+        assert np.isfinite(vals).all()
+        expect = zoo[m["name"]].spec.init_flat(man["seed"])
+        np.testing.assert_array_equal(vals, expect)
+
+
+def test_grad_hlo_contains_while_loop_from_pallas():
+    """The interpret-mode Pallas kernels lower to grid while-loops; the
+    logreg grad artifact must actually contain the fused kernel."""
+    man = _manifest()
+    logreg = next(m for m in man["models"] if m["family"] == "logreg")
+    text = open(os.path.join(ART, logreg["grad"]["hlo"])).read()
+    assert "while" in text

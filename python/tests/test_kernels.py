@@ -1,0 +1,218 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (including tile-edge / non-divisible cases) and the
+randomized compressors are compared on *identical* uniform variates.
+This suite is the core correctness signal for the AOT artifacts: the same
+kernels lower into the HLO the Rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dither, logreg_grad, matmul, natural_compress, pmatmul
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# fused logistic gradient
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 400),
+    d=st.integers(1, 200),
+    l2=st.sampled_from([0.0, 0.01, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_logreg_grad_matches_ref(m, d, l2, seed):
+    r = _rng(seed)
+    x = jnp.asarray(r.normal(size=(m, d)).astype(np.float32))
+    y = jnp.asarray(np.where(r.random(m) < 0.5, 1.0, -1.0).astype(np.float32))
+    sw = jnp.asarray((r.random(m) < 0.8).astype(np.float32))
+    if float(jnp.sum(sw)) == 0.0:
+        sw = sw.at[0].set(1.0)
+    w = jnp.asarray(r.normal(scale=0.3, size=(d,)).astype(np.float32))
+
+    g_k, l_k, c_k = logreg_grad(w, x, y, sw, jnp.float32(l2))
+    g_r, l_r, c_r = ref.logreg_grad_ref(w, x, y, sw, l2)
+    np.testing.assert_allclose(g_k, g_r, rtol=5e-5, atol=1e-5)
+    np.testing.assert_allclose(l_k, l_r, rtol=5e-5, atol=1e-6)
+    assert float(c_k) == float(c_r)
+
+
+def test_logreg_grad_padding_rows_are_inert():
+    """Zero-weight rows (static-shape padding) must not change the result."""
+    r = _rng(7)
+    x = jnp.asarray(r.normal(size=(100, 30)).astype(np.float32))
+    y = jnp.sign(jnp.asarray(r.normal(size=(100,)).astype(np.float32)) + 0.1)
+    w = jnp.asarray(r.normal(size=(30,)).astype(np.float32))
+    sw = jnp.ones(100)
+    g1, l1, c1 = logreg_grad(w, x, y, sw, jnp.float32(0.01))
+
+    pad_x = jnp.concatenate([x, 1e3 * jnp.ones((28, 30))])
+    pad_y = jnp.concatenate([y, jnp.ones(28)])
+    pad_sw = jnp.concatenate([sw, jnp.zeros(28)])
+    g2, l2_, c2 = logreg_grad(w, pad_x, pad_y, pad_sw, jnp.float32(0.01))
+    np.testing.assert_allclose(g1, g2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(l1, l2_, rtol=1e-5)
+    assert float(c1) == float(c2)
+
+
+def test_logreg_grad_matches_autodiff():
+    """Cross-check the hand-fused gradient against jax.grad of the loss."""
+    r = _rng(3)
+    x = jnp.asarray(r.normal(size=(64, 20)).astype(np.float32))
+    y = jnp.sign(jnp.asarray(r.normal(size=(64,)) + 0.05).astype(np.float32))
+    sw = jnp.ones(64)
+    w = jnp.asarray(r.normal(scale=0.5, size=(20,)).astype(np.float32))
+
+    def loss(w):
+        z = x @ w
+        return (jnp.mean(jnp.logaddexp(0.0, -y * z))
+                + 0.5 * 0.01 * jnp.sum(w * w))
+
+    g_auto = jax.grad(loss)(w)
+    g_k, _, _ = logreg_grad(w, x, y, sw, jnp.float32(0.01))
+    np.testing.assert_allclose(g_k, g_auto, rtol=5e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# tiled matmul
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 300),
+    k=st.integers(1, 300),
+    n=st.integers(1, 300),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    r = _rng(seed)
+    a = jnp.asarray(r.normal(size=(m, k)).astype(np.float32))
+    b = jnp.asarray(r.normal(size=(k, n)).astype(np.float32))
+    np.testing.assert_allclose(matmul(a, b), ref.matmul_ref(a, b),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(128, 128, 128), (129, 127, 130),
+                                   (1, 1, 1), (256, 384, 128), (5, 500, 3)])
+def test_matmul_tile_edges(shape):
+    m, k, n = shape
+    r = _rng(0)
+    a = jnp.asarray(r.normal(size=(m, k)).astype(np.float32))
+    b = jnp.asarray(r.normal(size=(k, n)).astype(np.float32))
+    np.testing.assert_allclose(matmul(a, b), a @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_pmatmul_gradients_match_dot():
+    """custom-VJP backward must equal autodiff through jnp.matmul."""
+    r = _rng(11)
+    a = jnp.asarray(r.normal(size=(33, 47)).astype(np.float32))
+    b = jnp.asarray(r.normal(size=(47, 21)).astype(np.float32))
+
+    def f_pallas(a, b):
+        return jnp.sum(jnp.sin(pmatmul(a, b)))
+
+    def f_ref(a, b):
+        return jnp.sum(jnp.sin(a @ b))
+
+    ga_p, gb_p = jax.grad(f_pallas, argnums=(0, 1))(a, b)
+    ga_r, gb_r = jax.grad(f_ref, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(ga_p, ga_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gb_p, gb_r, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# compressor kernels (natural compression, QSGD dithering)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(d=st.integers(1, 5000), seed=st.integers(0, 2**31 - 1))
+def test_natural_matches_ref(d, seed):
+    r = _rng(seed)
+    x = jnp.asarray((r.normal(size=(d,)) * 10.0**r.integers(-3, 3))
+                    .astype(np.float32))
+    u = jnp.asarray(r.random(d).astype(np.float32))
+    np.testing.assert_allclose(natural_compress(x, u),
+                               ref.natural_compress_ref(x, u), rtol=1e-6)
+
+
+def test_natural_zero_maps_to_zero():
+    x = jnp.zeros(100)
+    u = jnp.asarray(_rng(0).random(100).astype(np.float32))
+    assert float(jnp.max(jnp.abs(natural_compress(x, u)))) == 0.0
+
+
+def test_natural_output_is_signed_power_of_two():
+    r = _rng(5)
+    x = jnp.asarray(r.normal(size=(2048,)).astype(np.float32))
+    u = jnp.asarray(r.random(2048).astype(np.float32))
+    out = np.asarray(natural_compress(x, u))
+    nz = out[out != 0]
+    exps = np.log2(np.abs(nz))
+    np.testing.assert_allclose(exps, np.round(exps), atol=1e-6)
+    assert np.all(np.sign(nz) == np.sign(np.asarray(x)[out != 0]))
+
+
+def test_natural_unbiased_monte_carlo():
+    """E[C(x)] = x within Monte-Carlo CI; variance ≤ (1/8)‖x‖² (ω = 1/8)."""
+    r = _rng(42)
+    x = jnp.asarray(r.normal(size=(256,)).astype(np.float32))
+    trials = 600
+    us = r.random((trials, 256)).astype(np.float32)
+    outs = np.stack([np.asarray(natural_compress(x, jnp.asarray(u)))
+                     for u in us])
+    mean = outs.mean(0)
+    # per-coordinate 5σ bound: sd(C(x)_i) ≤ |x_i|/√8, so the MC mean of T
+    # trials deviates by ≤ 5·|x_i|/(√8·√T) with overwhelming probability.
+    tol = 5.0 * np.abs(np.asarray(x)) / np.sqrt(8.0 * trials) + 1e-4
+    assert np.all(np.abs(mean - np.asarray(x)) <= tol)
+    sq_err = ((outs - np.asarray(x)) ** 2).sum(1).mean()
+    assert sq_err <= (1.0 / 8.0) * float(jnp.sum(x * x)) * 1.05
+
+
+@settings(max_examples=25, deadline=None)
+@given(d=st.integers(1, 5000), s=st.sampled_from([1.0, 4.0, 16.0, 255.0]),
+       seed=st.integers(0, 2**31 - 1))
+def test_dither_matches_ref(d, s, seed):
+    r = _rng(seed)
+    x = jnp.asarray(r.normal(size=(d,)).astype(np.float32))
+    u = jnp.asarray(r.random(d).astype(np.float32))
+    np.testing.assert_allclose(dither(x, u, s), ref.dither_ref(x, u, s),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_dither_levels_are_quantized():
+    """Outputs must sit on the s-level grid scaled by ‖x‖."""
+    r = _rng(9)
+    s = 8.0
+    x = jnp.asarray(r.normal(size=(512,)).astype(np.float32))
+    u = jnp.asarray(r.random(512).astype(np.float32))
+    out = np.asarray(dither(x, u, s))
+    norm = float(jnp.linalg.norm(x))
+    levels = np.abs(out) / norm * s
+    np.testing.assert_allclose(levels, np.round(levels), atol=1e-4)
+
+
+def test_dither_unbiased_monte_carlo():
+    r = _rng(17)
+    x = jnp.asarray(r.normal(size=(128,)).astype(np.float32))
+    trials = 800
+    outs = np.stack([
+        np.asarray(dither(x, jnp.asarray(r.random(128).astype(np.float32)), 4.0))
+        for _ in range(trials)])
+    # dither step is ‖x‖/s; per-coordinate sd ≤ step/2, so MC mean deviates
+    # by ≤ 5·step/(2√T) with overwhelming probability.
+    step = float(jnp.linalg.norm(x)) / 4.0
+    tol = 5.0 * step / (2.0 * np.sqrt(trials)) + 1e-4
+    assert np.all(np.abs(outs.mean(0) - np.asarray(x)) <= tol)

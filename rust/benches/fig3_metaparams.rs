@@ -1,0 +1,34 @@
+//! Bench: regenerate Fig 3 (meta-parameter study) at bench scale.
+//! Prints the paper's two sweeps (loss vs p at λ=10; loss vs λ at p=0.65)
+//! for a1a- and a2a-shaped data, plus the wall time per sweep point.
+//!
+//!     cargo bench --bench fig3_metaparams
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use pfl::experiments::fig3;
+
+fn main() {
+    for (tag, cfg) in [("a1a", fig3::Fig3Cfg::a1a()), ("a2a", fig3::Fig3Cfg::a2a())] {
+        harness::header(&format!("Fig 3 [{tag}]: loss vs p (λ = 10, K = {})", cfg.iters));
+        let ps = [0.1, 0.2, 0.3, 0.4, 0.5, 0.65, 0.8, 0.9];
+        let t0 = std::time::Instant::now();
+        let sweep = fig3::sweep_p(&cfg, 10.0, &ps).expect("sweep");
+        let dt = t0.elapsed().as_secs_f64() / ps.len() as f64;
+        let best = sweep.iter().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap();
+        for (p, loss) in &sweep {
+            let marker = if p == &best.0 { "  <- best" } else { "" };
+            println!("  p = {p:<5} f = {loss:.5}{marker}");
+        }
+        println!("  [{dt:.2}s per point; paper: interior optimum near p ≈ 0.4]");
+
+        harness::header(&format!("Fig 3 [{tag}]: loss vs λ (p = 0.65)"));
+        let lambdas = [0.0, 0.5, 2.0, 5.0, 10.0, 25.0];
+        let sweep = fig3::sweep_lambda(&cfg, 0.65, &lambdas).expect("sweep");
+        for (lam, loss) in &sweep {
+            println!("  λ = {lam:<5} f = {loss:.5}");
+        }
+    }
+    println!("\n[fig3 bench complete]");
+}

@@ -1,0 +1,69 @@
+//! Minimal bench harness shared by all `harness = false` benches
+//! (criterion is not in the offline vendor set).
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+/// Time `f` for `iters` iterations after `warmup` runs; returns per-call
+/// stats in nanoseconds.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    Stats::of(&samples)
+}
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub p50_ns: f64,
+}
+
+impl Stats {
+    pub fn of(samples: &[f64]) -> Stats {
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / (n - 1.0).max(1.0);
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Stats {
+            mean_ns: mean,
+            std_ns: var.sqrt(),
+            min_ns: s[0],
+            p50_ns: s[s.len() / 2],
+        }
+    }
+
+    pub fn human(&self) -> String {
+        fn h(ns: f64) -> String {
+            if ns < 1e3 {
+                format!("{ns:.0}ns")
+            } else if ns < 1e6 {
+                format!("{:.2}µs", ns / 1e3)
+            } else if ns < 1e9 {
+                format!("{:.2}ms", ns / 1e6)
+            } else {
+                format!("{:.2}s", ns / 1e9)
+            }
+        }
+        format!("{} ±{} (p50 {})", h(self.mean_ns), h(self.std_ns), h(self.p50_ns))
+    }
+
+    /// Throughput given bytes processed per call.
+    pub fn gbps(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.mean_ns
+    }
+}
+
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}

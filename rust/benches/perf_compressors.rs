@@ -1,0 +1,48 @@
+//! Perf bench: compressor encode / decode / fused decode-add throughput
+//! (the §Perf L3 hot path — every communication round runs these once per
+//! client over a P-sized vector).
+//!
+//!     cargo bench --bench perf_compressors
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use harness::bench;
+use pfl::compress::from_spec;
+use pfl::util::Rng;
+
+fn main() {
+    let specs = ["identity", "natural", "qsgd:15", "terngrad",
+                 "bernoulli:0.1", "randk:5000", "topk:5000"];
+    for &d in &[10_000usize, 100_000, 1_000_000] {
+        harness::header(&format!("compressor throughput, d = {d} (f32 = {} KiB)",
+                                 d * 4 / 1024));
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let bytes = d * 4;
+        println!("  {:<15} {:>22} {:>10} {:>22} {:>10} {:>22}",
+                 "codec", "encode", "GB/s", "decode", "GB/s", "decode_add");
+        for spec in specs {
+            let c = from_spec(spec).unwrap();
+            let iters = if d >= 1_000_000 { 10 } else { 40 };
+            let mut rng2 = Rng::new(2);
+            let enc = bench(2, iters, || {
+                std::hint::black_box(c.compress(&x, &mut rng2));
+            });
+            let compressed = c.compress(&x, &mut Rng::new(3));
+            let mut out = vec![0.0f32; d];
+            let dec = bench(2, iters, || {
+                compressed.decode_into(&mut out);
+                std::hint::black_box(&out);
+            });
+            let mut acc = vec![0.0f32; d];
+            let dad = bench(2, iters, || {
+                compressed.decode_add(&mut acc, 0.1);
+                std::hint::black_box(&acc);
+            });
+            println!("  {:<15} {:>22} {:>10.2} {:>22} {:>10.2} {:>22}",
+                     c.name(), enc.human(), enc.gbps(bytes), dec.human(),
+                     dec.gbps(bytes), dad.human());
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! Perf bench: end-to-end L2GD step latency — local gradient steps and
+//! fresh aggregation rounds — on the native backend (protocol overhead)
+//! and the XLA backend (full PJRT path), across n × P.
+//!
+//!     cargo bench --bench perf_round_latency
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use std::sync::Arc;
+
+use harness::bench;
+use pfl::algorithms::{FedAlgorithm, L2gd};
+use pfl::data::synth;
+use pfl::runtime::{NativeLogreg, XlaRuntime};
+use pfl::util::threadpool::ThreadPool;
+
+fn env(backend: Arc<dyn pfl::runtime::Backend>, n: usize, d: usize,
+       rows: usize) -> pfl::algorithms::FedEnv {
+    let (train, test) = synth::logistic_split(rows * n, 128, d, 0.03, 0);
+    let shards = train.split_contiguous(n);
+    pfl::algorithms::FedEnv {
+        backend,
+        shards,
+        train_eval: train,
+        test,
+        pool: ThreadPool::new(ThreadPool::default_size()),
+        seed: 0,
+    }
+}
+
+fn time_run(label: &str, mut alg: L2gd, e: &pfl::algorithms::FedEnv, steps: u64) {
+    let st = bench(1, 3, || {
+        std::hint::black_box(alg.run(e, steps, steps).unwrap());
+    });
+    println!("  {:<40} {:>20}  ({:.1} steps/ms)",
+             label, st.human(), steps as f64 / (st.mean_ns / 1e6));
+}
+
+fn main() {
+    harness::header("L2GD end-to-end step latency (native logreg backend)");
+    for (n, d) in [(5usize, 123usize), (10, 123), (10, 2048), (50, 123)] {
+        let be = Arc::new(NativeLogreg::new(d, 0.01, 512, 512));
+        let e = env(be, n, d, 300);
+        let alg = L2gd::from_local_and_agg(0.4, 0.3, 0.5, n,
+                                           "natural", "natural").unwrap();
+        time_run(&format!("n={n} d={d} natural/natural 100 steps"), alg, &e, 100);
+        let alg = L2gd::from_local_and_agg(0.4, 0.3, 0.5, n,
+                                           "identity", "identity").unwrap();
+        time_run(&format!("n={n} d={d} identity 100 steps"), alg, &e, 100);
+    }
+
+    if let Ok(rt) = XlaRuntime::load_filtered("artifacts", Some(&["logreg123"])) {
+        harness::header("L2GD end-to-end step latency (XLA PJRT backend, logreg123)");
+        let be = Arc::new(rt.backend("logreg123").unwrap());
+        for n in [5usize, 10] {
+            let e = env(be.clone(), n, 123, 300);
+            let alg = L2gd::from_local_and_agg(0.4, 0.3, 0.5, n,
+                                               "natural", "natural").unwrap();
+            time_run(&format!("n={n} d=123 natural 100 steps"), alg, &e, 100);
+        }
+    } else {
+        println!("\n[skipping XLA section: run `make artifacts`]");
+    }
+}

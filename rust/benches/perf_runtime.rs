@@ -1,0 +1,71 @@
+//! Perf bench: PJRT execution overhead — gradient call latency through the
+//! AOT HLO path vs the native oracle, and the literal-marshalling share.
+//!
+//!     cargo bench --bench perf_runtime
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use harness::bench;
+use pfl::data::{synth, Batcher};
+use pfl::runtime::{Backend, Batch, NativeLogreg, XlaRuntime};
+use pfl::util::Rng;
+
+fn main() {
+    let Ok(rt) = XlaRuntime::load_filtered(
+        "artifacts",
+        Some(&["logreg123", "resnet_tiny", "transformer_tiny"]),
+    ) else {
+        println!("[run `make artifacts` first]");
+        return;
+    };
+
+    harness::header("logreg123 grad: XLA/PJRT vs native oracle (B=512, d=123)");
+    let data = synth::logistic(321, 123, 0.05, 7);
+    let (x, y, sw) = Batcher::new(&data).full_weighted(512);
+    let batch = Batch::Weighted { x, y, sw };
+    let theta = vec![0.02f32; 123];
+
+    let xla = rt.backend("logreg123").unwrap();
+    let native = NativeLogreg::new(123, 0.01, 512, 2048);
+    let sx = bench(3, 30, || {
+        std::hint::black_box(xla.grad(&theta, &batch).unwrap());
+    });
+    let sn = bench(3, 30, || {
+        std::hint::black_box(native.grad(&theta, &batch).unwrap());
+    });
+    println!("  xla    {:>24}", sx.human());
+    println!("  native {:>24}", sn.human());
+    println!("  ratio  {:.2}x (PJRT dispatch + literal marshalling overhead)",
+             sx.mean_ns / sn.mean_ns);
+
+    harness::header("DNN grad latency through PJRT");
+    for name in ["resnet_tiny", "transformer_tiny"] {
+        let be = rt.backend(name).unwrap();
+        let meta = be.meta().clone();
+        let mut rng = Rng::new(0);
+        let shard = match meta.kind.as_str() {
+            "lm" => synth::tokens(64, 32, 256, 0.9, 1),
+            _ => synth::images(128, 10, 16, 3, 2.0, 1),
+        };
+        let b = be.make_train_batch(&shard, &mut rng);
+        let theta = be.init_params();
+        let st = bench(2, 15, || {
+            std::hint::black_box(be.grad(&theta, &b).unwrap());
+        });
+        println!("  {:<18} P={:<8} {:>20}", name, meta.param_count, st.human());
+    }
+
+    harness::header("literal marshalling share (build inputs, no execute)");
+    let st = bench(3, 100, || {
+        let l = xla::Literal::vec1(&theta[..]);
+        std::hint::black_box(l);
+    });
+    println!("  theta literal (123 f32): {:>18}", st.human());
+    let big: Vec<f32> = vec![0.5; 512 * 123];
+    let st = bench(3, 100, || {
+        let l = xla::Literal::vec1(&big[..]).reshape(&[512, 123]).unwrap();
+        std::hint::black_box(l);
+    });
+    println!("  batch literal (512×123): {:>18}", st.human());
+}

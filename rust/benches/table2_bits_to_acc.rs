@@ -1,0 +1,42 @@
+//! Bench: regenerate Table II at bench scale — bits/n for compressed L2GD
+//! vs compressed FedAvg to reach the target test accuracy, per model.
+//!
+//!     cargo bench --bench table2_bits_to_acc
+//!     PFL_BENCH_STEPS=1000 PFL_TARGET=0.7 cargo bench --bench table2_bits_to_acc
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use pfl::experiments::dnn;
+use pfl::runtime::XlaRuntime;
+
+fn main() {
+    let steps: u64 = std::env::var("PFL_BENCH_STEPS")
+        .ok().and_then(|s| s.parse().ok()).unwrap_or(150);
+    let target: f64 = std::env::var("PFL_TARGET")
+        .ok().and_then(|s| s.parse().ok()).unwrap_or(0.3);
+    let models = ["densenet_tiny", "mobilenet_tiny", "resnet_tiny"];
+    let rt = XlaRuntime::load_filtered("artifacts", Some(&models))
+        .expect("run `make artifacts` first");
+
+    harness::header(&format!(
+        "Table II (scaled): bits/n to reach {target} top-1 test acc, n = 10"));
+    println!("  {:<16} {:>8} {:>14} {:>14} {:>9}",
+             "model", "params", "L2GD bits/n", "FedAvg bits/n", "ratio");
+    for model in models {
+        let mut cfg = dnn::DnnCfg::for_model(model, steps);
+        cfg.eval_every = (steps / 40).max(1); // fine-grained crossing detection
+        cfg.env.n_train = 1000;
+        cfg.env.n_test = 256;
+        let row = dnn::run_table2(&rt, &cfg, target).expect("table2");
+        let fmt = |x: Option<f64>| x.map_or("> budget".to_string(),
+                                            |v| format!("{v:.3e}"));
+        println!("  {:<16} {:>8} {:>14} {:>14} {:>9}",
+                 row.model, row.params, fmt(row.l2gd_bits), fmt(row.baseline_bits),
+                 row.ratio().map_or("—".to_string(), |r| format!("{r:.1}x")));
+    }
+    println!("\n[paper, at full scale (10⁷-param models, 0.7 target): \
+              L2GD ~10¹¹-10¹² vs FedAvg ~10¹⁵-10¹⁶ bits/n (~10⁴x). our \
+              scaled models preserve the direction and a large ratio; the \
+              absolute magnitude tracks the ~10³x smaller param counts]");
+}

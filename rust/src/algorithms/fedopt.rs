@@ -1,0 +1,147 @@
+//! FedOpt / FedAdam (Reddi et al. 2020): FedAvg local training with an
+//! adaptive server optimizer over the aggregated pseudo-gradient. The paper
+//! uses it as its strongest no-compression baseline ("the only comparable
+//! baseline for L2GD", §VII-B).
+
+use std::sync::Mutex;
+
+use super::{client_rngs, evaluate, FedAlgorithm, FedEnv};
+use crate::metrics::Series;
+use crate::model::{axpy, weighted_mean};
+use crate::transport::Network;
+
+pub struct FedOpt {
+    pub local_lr: f64,
+    pub local_steps: usize,
+    /// server Adam parameters
+    pub server_lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub tau: f64,
+}
+
+impl FedOpt {
+    pub fn new(local_lr: f64, local_steps: usize, server_lr: f64) -> FedOpt {
+        FedOpt { local_lr, local_steps, server_lr, beta1: 0.9, beta2: 0.99, tau: 1e-3 }
+    }
+}
+
+impl FedAlgorithm for FedOpt {
+    fn label(&self) -> String {
+        format!("fedopt:lr={},T={},slr={}", self.local_lr, self.local_steps, self.server_lr)
+    }
+
+    fn run(&mut self, env: &FedEnv, rounds: u64, eval_every: u64) -> anyhow::Result<Series> {
+        let n = env.n_clients();
+        let d = env.backend.param_count();
+        let weights = env.shard_weights();
+        let lr = self.local_lr as f32;
+
+        let mut w = env.backend.init_params();
+        let mut m = vec![0.0f64; d];
+        let mut v = vec![0.0f64; d];
+        let mut net = Network::new(n);
+        let rngs: Vec<Mutex<crate::util::Rng>> =
+            client_rngs(env.seed ^ 0x0b7, n).into_iter().map(Mutex::new).collect();
+
+        let mut series = Series::new(self.label());
+        series.records.push(evaluate(env, &vec![w.clone(); n], 0, &net)?);
+
+        let bits_model = 32 * d as u64; // uncompressed f32 wire
+
+        for r in 1..=rounds {
+            net.begin_round();
+            net.downlink_broadcast(r, bits_model);
+
+            let local_steps = self.local_steps;
+            let w_ref = &w;
+            let locals = env.pool.scope_map(&env.shards, |i, shard| {
+                let mut rng = rngs[i].lock().unwrap();
+                let mut wi = w_ref.clone();
+                for _ in 0..local_steps {
+                    let batch = env.backend.make_train_batch(shard, &mut rng);
+                    match env.backend.grad(&wi, &batch) {
+                        Ok(g) => axpy(&mut wi, -lr, &g.grad),
+                        Err(e) => return Err(e),
+                    }
+                }
+                Ok(wi)
+            });
+            let mut deltas: Vec<Vec<f32>> = Vec::with_capacity(n);
+            for (i, wi) in locals.into_iter().enumerate() {
+                let wi = wi?;
+                net.uplink(r, i, bits_model);
+                let delta: Vec<f32> = w.iter().zip(&wi).map(|(a, b)| a - b).collect();
+                deltas.push(delta);
+            }
+            net.end_round();
+
+            // server Adam on the pseudo-gradient Δ̄
+            let dbar = weighted_mean(&deltas, &weights);
+            for j in 0..d {
+                let g = dbar[j] as f64;
+                m[j] = self.beta1 * m[j] + (1.0 - self.beta1) * g;
+                v[j] = self.beta2 * v[j] + (1.0 - self.beta2) * g * g;
+                w[j] -= (self.server_lr * m[j] / (v[j].sqrt() + self.tau)) as f32;
+            }
+
+            if r % eval_every == 0 || r == rounds {
+                series.records.push(evaluate(env, &vec![w.clone(); n], r, &net)?);
+                if !series.records.last().unwrap().is_finite() {
+                    break; // diverged: record it and stop (paper §B)
+                }
+            }
+        }
+        Ok(series)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::runtime::NativeLogreg;
+    use crate::util::threadpool::ThreadPool;
+    use std::sync::Arc;
+
+    fn env(n: usize, seed: u64) -> FedEnv {
+        let (data, test) = synth::logistic_split(40 * n, 80, 12, 0.02, seed);
+        let shards = data.split_contiguous(n);
+        FedEnv {
+            backend: Arc::new(NativeLogreg::new(12, 0.01, 64, 128)),
+            shards,
+            train_eval: data,
+            test,
+            pool: ThreadPool::new(4),
+            seed,
+        }
+    }
+
+    #[test]
+    fn fedopt_learns() {
+        let e = env(4, 0);
+        let mut alg = FedOpt::new(0.5, 3, 0.05);
+        let s = alg.run(&e, 50, 10).unwrap();
+        let last = s.records.last().unwrap();
+        assert!(last.test_acc > 0.8, "acc {}", last.test_acc);
+        assert!(last.train_loss < s.records[0].train_loss);
+    }
+
+    #[test]
+    fn sends_full_models_every_round() {
+        let e = env(3, 1);
+        let mut alg = FedOpt::new(0.3, 2, 0.05);
+        let s = alg.run(&e, 10, 5).unwrap();
+        let last = s.records.last().unwrap();
+        assert_eq!(last.bits_up, 10 * 3 * 32 * 12);
+        assert_eq!(last.bits_down, 10 * 3 * 32 * 12);
+    }
+
+    #[test]
+    fn adam_state_stays_finite() {
+        let e = env(2, 2);
+        let mut alg = FedOpt::new(1.0, 4, 0.5); // aggressive rates
+        let s = alg.run(&e, 30, 30).unwrap();
+        assert!(s.records.last().unwrap().train_loss.is_finite());
+    }
+}

@@ -1,0 +1,111 @@
+//! Federated training algorithms.
+//!
+//! * [`l2gd::L2gd`] — **the paper's contribution**: compressed L2GD
+//!   (Algorithm 1) with bidirectional compression over the probabilistic
+//!   protocol.
+//! * [`fedavg::FedAvg`] — the FedAvg baseline, plus the paper's
+//!   error-feedback-style difference compression (§VII-B).
+//! * [`fedopt::FedOpt`] — server-Adam baseline (Reddi et al.), the paper's
+//!   strongest no-compression comparator.
+//!
+//! All algorithms run against a [`FedEnv`] (backend + shards + test data)
+//! and emit a [`Series`] of per-evaluation [`Record`]s with exact bit
+//! accounting from the transport layer.
+
+pub mod fedavg;
+pub mod fedopt;
+pub mod l2gd;
+
+use std::sync::Arc;
+
+use crate::data::Dataset;
+use crate::metrics::{Record, Series};
+use crate::runtime::Backend;
+use crate::transport::Network;
+use crate::util::threadpool::ThreadPool;
+use crate::util::Rng;
+
+pub use fedavg::FedAvg;
+pub use fedopt::FedOpt;
+pub use l2gd::L2gd;
+
+/// Shared training environment.
+pub struct FedEnv {
+    pub backend: Arc<dyn Backend>,
+    /// per-client training shards (heterogeneous)
+    pub shards: Vec<Dataset>,
+    /// subsample of the union train set for global-model train metrics
+    pub train_eval: Dataset,
+    pub test: Dataset,
+    pub pool: ThreadPool,
+    pub seed: u64,
+}
+
+impl FedEnv {
+    pub fn n_clients(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// |D_i| weights for weighted aggregation (the paper's w_i).
+    pub fn shard_weights(&self) -> Vec<f64> {
+        self.shards.iter().map(|s| s.len() as f64).collect()
+    }
+}
+
+/// Common trait: run for `steps` iterations, evaluating every `eval_every`.
+pub trait FedAlgorithm {
+    fn label(&self) -> String;
+    fn run(&mut self, env: &FedEnv, steps: u64, eval_every: u64) -> anyhow::Result<Series>;
+}
+
+/// Evaluate global + personalized metrics into a `Record`.
+///
+/// `xs` are the per-client models (identical copies for the global-model
+/// algorithms). The global model is the plain mean — the paper's evaluation
+/// object for Top-1 accuracy; the personalized objective (1/n)Σ f_i(x_i)
+/// is what Fig 3 plots.
+pub fn evaluate(env: &FedEnv, xs: &[Vec<f32>], step: u64, net: &Network)
+                -> anyhow::Result<Record> {
+    let global = crate::model::mean_of(xs);
+    let be = &env.backend;
+    let train_b = be.make_eval_batch(&env.train_eval);
+    let test_b = be.make_eval_batch(&env.test);
+    let train = be.eval(&global, &train_b)?;
+    let test = be.eval(&global, &test_b)?;
+
+    // personalized: each client's model on its own shard (pooled)
+    let per: Vec<(f64, f64)> = env.pool.scope_map(xs, |i, x| {
+        let b = be.make_eval_batch(&env.shards[i]);
+        match be.eval(x, &b) {
+            Ok(e) => (e.loss, e.accuracy),
+            Err(_) => (f64::NAN, f64::NAN),
+        }
+    });
+    let n = per.len() as f64;
+    let personal_loss = per.iter().map(|p| p.0).sum::<f64>() / n;
+    let personal_acc = per.iter().map(|p| p.1).sum::<f64>() / n;
+    // non-finite metrics are recorded, not raised: divergence is a result
+    // (the paper reports FedAvg diverging at stepsize 0.2, §B) — runs stop
+    // early via `Record::is_finite` in the training loops.
+
+    Ok(Record {
+        step,
+        comm_rounds: net.comm_rounds(),
+        bits_per_client: net.bits_per_client(),
+        bits_up: net.total_bits_up(),
+        bits_down: net.total_bits_down(),
+        train_loss: train.loss,
+        train_acc: train.accuracy,
+        test_loss: test.loss,
+        test_acc: test.accuracy,
+        personal_loss,
+        personal_acc,
+        sim_time_s: net.simulated_comm_time_s(),
+    })
+}
+
+/// Per-client RNG streams forked deterministically from the run seed.
+pub fn client_rngs(seed: u64, n: usize) -> Vec<Rng> {
+    let mut root = Rng::new(seed);
+    (0..n).map(|i| root.fork(i as u64 + 1)).collect()
+}

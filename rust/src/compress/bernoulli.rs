@@ -1,0 +1,143 @@
+//! Bernoulli sparsifier (Khirirat et al. 2018): keep each coordinate with
+//! probability q, rescaled by 1/q. Unbiased with ω = (1 − q)/q.
+//!
+//! Wire format: 64-bit mask seed + 32-bit kept-count + raw f32 values of the
+//! kept coordinates. The receiver regenerates the Bernoulli mask from the
+//! seed (both ends share the RNG), so mask bits cost 64 on the wire instead
+//! of d — expected size 64 + 32 + 32·q·d bits.
+
+use super::{Codec, Compressed, Compressor};
+use crate::util::{BitReader, BitWriter, Rng};
+
+pub struct Bernoulli {
+    q: f32,
+}
+
+impl Bernoulli {
+    pub fn new(q: f32) -> Bernoulli {
+        assert!(q > 0.0 && q <= 1.0);
+        Bernoulli { q }
+    }
+}
+
+impl Compressor for Bernoulli {
+    fn name(&self) -> String {
+        format!("bernoulli:{}", self.q)
+    }
+
+    fn omega(&self, _dim: usize) -> Option<f64> {
+        Some((1.0 - self.q as f64) / self.q as f64)
+    }
+
+    fn compress(&self, x: &[f32], rng: &mut Rng) -> Compressed {
+        let mask_seed = rng.next_u64();
+        let mut mask_rng = Rng::new(mask_seed);
+        let mut w = BitWriter::with_capacity(8 + 4 + (x.len() as f32 * self.q) as usize * 4);
+        w.put(mask_seed & 0x1FF_FFFF_FFFF_FFFF, 57 - 4); // low 53 bits
+        w.put(mask_seed >> 53, 11); // high 11 bits (57-bit put limit)
+        let mut kept_vals = Vec::new();
+        for &v in x {
+            if mask_rng.f32() < self.q {
+                kept_vals.push(v);
+            }
+        }
+        w.put_u32(kept_vals.len() as u32);
+        for v in kept_vals {
+            w.put_f32(v);
+        }
+        let bits = w.bit_len();
+        Compressed::new(w.finish(), bits, x.len(), Codec::Bernoulli { q: self.q })
+    }
+}
+
+fn read_seed(r: &mut BitReader) -> u64 {
+    let low = r.get(53);
+    let high = r.get(11);
+    low | (high << 53)
+}
+
+pub(super) fn decode(payload: &[u8], q: f32, out: &mut [f32]) {
+    out.fill(0.0);
+    decode_add(payload, q, out, 1.0);
+}
+
+pub(super) fn decode_add(payload: &[u8], q: f32, acc: &mut [f32], scale: f32) {
+    let mut r = BitReader::new(payload);
+    let seed = read_seed(&mut r);
+    let mut mask_rng = Rng::new(seed);
+    let count = r.get_u32() as usize;
+    let inv_q = scale / q;
+    let mut seen = 0usize;
+    for a in acc.iter_mut() {
+        if mask_rng.f32() < q {
+            debug_assert!(seen < count);
+            seen += 1;
+            *a += inv_q * r.get_f32();
+        }
+    }
+    debug_assert_eq!(seen, count);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil;
+
+    #[test]
+    fn kept_coordinates_are_scaled_by_inv_q() {
+        let x = testutil::test_vector(400, 1);
+        let b = Bernoulli::new(0.25);
+        let y = b.apply(&x, &mut Rng::new(2));
+        let mut kept = 0;
+        for (xi, yi) in x.iter().zip(&y) {
+            if *yi != 0.0 {
+                kept += 1;
+                assert!((yi - xi * 4.0).abs() < 1e-5, "{xi} -> {yi}");
+            }
+        }
+        // q = 0.25 over 400 coords: ~100 kept
+        assert!((50..180).contains(&kept), "kept = {kept}");
+    }
+
+    #[test]
+    fn wire_size_tracks_kept_count() {
+        let x = testutil::test_vector(1000, 3);
+        let c = Bernoulli::new(0.1).compress(&x, &mut Rng::new(4));
+        let kept = (c.bits - 64 - 32) / 32;
+        assert!((40..220).contains(&kept), "kept = {kept}");
+        assert!(c.bits < 32 * 1000 / 2, "bits = {}", c.bits);
+    }
+
+    #[test]
+    fn assumption1_holds() {
+        let x = testutil::test_vector(64, 5);
+        testutil::check_assumption1(&Bernoulli::new(0.3), &x, 1200, 19);
+    }
+
+    #[test]
+    fn q_one_is_identity() {
+        let x = testutil::test_vector(100, 7);
+        let y = Bernoulli::new(1.0).apply(&x, &mut Rng::new(8));
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn omega_formula() {
+        assert!((Bernoulli::new(0.1).omega(10).unwrap() - 9.0).abs() < 1e-5);
+        assert_eq!(Bernoulli::new(1.0).omega(10).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn decode_add_matches_decode() {
+        let x = testutil::test_vector(150, 9);
+        let c = Bernoulli::new(0.5).compress(&x, &mut Rng::new(10));
+        let y = c.decode();
+        let mut acc = vec![2.0f32; 150];
+        c.decode_add(&mut acc, 0.25);
+        for i in 0..150 {
+            assert!((acc[i] - (2.0 + 0.25 * y[i])).abs() < 1e-5);
+        }
+    }
+}

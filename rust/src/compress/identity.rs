@@ -1,0 +1,69 @@
+//! Identity "compressor": raw f32 wire format (ω = 0).
+//!
+//! The no-compression baseline every experiment compares against; its
+//! 32·d wire bits are exactly what FedAvg/FedOpt send per vector.
+
+use super::{Codec, Compressed, Compressor};
+use crate::util::Rng;
+
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn name(&self) -> String {
+        "identity".into()
+    }
+
+    fn omega(&self, _dim: usize) -> Option<f64> {
+        Some(0.0)
+    }
+
+    fn compress(&self, x: &[f32], _rng: &mut Rng) -> Compressed {
+        let mut payload = Vec::with_capacity(x.len() * 4);
+        for &v in x {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        Compressed::new(payload, 32 * x.len() as u64, x.len(), Codec::Identity)
+    }
+}
+
+pub(super) fn decode(payload: &[u8], out: &mut [f32]) {
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = f32::from_le_bytes(payload[4 * i..4 * i + 4].try_into().unwrap());
+    }
+}
+
+pub(super) fn decode_add(payload: &[u8], acc: &mut [f32], scale: f32) {
+    for (i, a) in acc.iter_mut().enumerate() {
+        *a += scale * f32::from_le_bytes(payload[4 * i..4 * i + 4].try_into().unwrap());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_roundtrip() {
+        let x = vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE, 1e30];
+        let mut rng = Rng::new(0);
+        let c = Identity.compress(&x, &mut rng);
+        assert_eq!(c.bits, 160);
+        assert_eq!(c.decode(), x);
+    }
+
+    #[test]
+    fn decode_add_accumulates() {
+        let x = vec![1.0f32, 2.0];
+        let mut rng = Rng::new(0);
+        let c = Identity.compress(&x, &mut rng);
+        let mut acc = vec![10.0f32, 10.0];
+        c.decode_add(&mut acc, 0.5);
+        assert_eq!(acc, vec![10.5, 11.0]);
+    }
+
+    #[test]
+    fn omega_zero() {
+        assert_eq!(Identity.omega(100), Some(0.0));
+        assert!(Identity.unbiased());
+    }
+}

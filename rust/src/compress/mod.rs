@@ -1,0 +1,252 @@
+//! Bidirectional communication compression (the paper's §IV).
+//!
+//! Every operator from Table I is implemented with a *real bit-packed wire
+//! format* — `compress` produces the bytes that would cross the network and
+//! `Compressed::decode` reconstructs the vector — so the bits/n metric the
+//! paper reports is measured, not estimated.
+//!
+//! Unbiased operators satisfy Assumption 1: `E[C(x)] = x` and
+//! `E‖C(x) − x‖² ≤ ω‖x‖²`; `omega(d)` returns the constant the theory
+//! module (§V–§VI) consumes. Top-k is biased (kept as the paper's
+//! proof-of-concept; `omega` returns `None`).
+
+pub mod bernoulli;
+pub mod identity;
+pub mod natural;
+pub mod qsgd;
+pub mod randk;
+pub mod terngrad;
+pub mod topk;
+
+use crate::util::Rng;
+
+pub use bernoulli::Bernoulli;
+pub use identity::Identity;
+pub use natural::Natural;
+pub use qsgd::Qsgd;
+pub use randk::RandK;
+pub use terngrad::TernGrad;
+pub use topk::TopK;
+
+/// A compressed vector: exact wire bits + everything needed to decode.
+#[derive(Clone, Debug)]
+pub struct Compressed {
+    pub payload: Vec<u8>,
+    /// exact encoded size in bits (before byte-alignment padding)
+    pub bits: u64,
+    pub dim: usize,
+    codec: Codec,
+}
+
+#[derive(Clone, Debug)]
+enum Codec {
+    Identity,
+    Natural,
+    Qsgd { s: u32 },
+    TernGrad,
+    Bernoulli { q: f32 },
+    RandK { k: usize },
+    TopK { k: usize },
+}
+
+impl Compressed {
+    /// Reconstruct the (randomly rounded / sparsified) vector.
+    pub fn decode(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim];
+        self.decode_into(&mut out);
+        out
+    }
+
+    /// Decode into a caller-provided buffer (hot path: no allocation).
+    pub fn decode_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.dim);
+        match &self.codec {
+            Codec::Identity => identity::decode(&self.payload, out),
+            Codec::Natural => natural::decode(&self.payload, out),
+            Codec::Qsgd { s } => qsgd::decode_with_s(&self.payload, *s, out, 1.0, false),
+            Codec::TernGrad => terngrad::decode(&self.payload, out),
+            Codec::Bernoulli { q } => bernoulli::decode(&self.payload, *q, out),
+            Codec::RandK { k } => randk::decode(&self.payload, *k, out),
+            Codec::TopK { k } => topk::decode(&self.payload, *k, out),
+        }
+    }
+
+    /// Fused decode + scaled accumulate: `acc += scale · decode()`.
+    /// The master's aggregation ȳ = (1/n) Σ C_i(x_i) runs on this to avoid
+    /// materializing n temporary vectors (§Perf).
+    pub fn decode_add(&self, acc: &mut [f32], scale: f32) {
+        assert_eq!(acc.len(), self.dim);
+        match &self.codec {
+            Codec::Identity => identity::decode_add(&self.payload, acc, scale),
+            Codec::Natural => natural::decode_add(&self.payload, acc, scale),
+            Codec::Qsgd { s } => qsgd::decode_with_s(&self.payload, *s, acc, scale, true),
+            Codec::TernGrad => terngrad::decode_add(&self.payload, acc, scale),
+            Codec::Bernoulli { q } => bernoulli::decode_add(&self.payload, *q, acc, scale),
+            Codec::RandK { k } => randk::decode_add(&self.payload, *k, acc, scale),
+            Codec::TopK { k } => topk::decode_add(&self.payload, *k, acc, scale),
+        }
+    }
+
+    fn new(payload: Vec<u8>, bits: u64, dim: usize, codec: Codec) -> Compressed {
+        Compressed { payload, bits, dim, codec }
+    }
+}
+
+/// A compression operator C : R^d → R^d (Assumption 1 interface).
+pub trait Compressor: Send + Sync {
+    fn name(&self) -> String;
+
+    /// Variance bound ω (Assumption 1); `None` for biased operators.
+    fn omega(&self, dim: usize) -> Option<f64>;
+
+    fn unbiased(&self) -> bool {
+        self.omega(1).is_some()
+    }
+
+    fn compress(&self, x: &[f32], rng: &mut Rng) -> Compressed;
+
+    /// Convenience: compress→decode (what the receiving end sees).
+    fn apply(&self, x: &[f32], rng: &mut Rng) -> Vec<f32> {
+        self.compress(x, rng).decode()
+    }
+}
+
+/// Parse a compressor spec string:
+/// `identity` | `natural` | `qsgd:<s>` | `terngrad` | `bernoulli:<q>` |
+/// `randk:<k>` | `topk:<k>`.
+pub fn from_spec(spec: &str) -> anyhow::Result<Box<dyn Compressor>> {
+    let (name, arg) = match spec.split_once(':') {
+        Some((n, a)) => (n, Some(a)),
+        None => (spec, None),
+    };
+    let need = |what: &str| {
+        anyhow::anyhow!("compressor `{name}` requires `:{what}` (got `{spec}`)")
+    };
+    Ok(match name {
+        "identity" | "none" => Box::new(Identity),
+        "natural" => Box::new(Natural),
+        "qsgd" => {
+            let s: u32 = arg.ok_or_else(|| need("levels"))?.parse()?;
+            anyhow::ensure!(s >= 1, "qsgd levels must be ≥ 1");
+            Box::new(Qsgd::new(s))
+        }
+        "terngrad" => Box::new(TernGrad),
+        "bernoulli" => {
+            let q: f32 = arg.ok_or_else(|| need("prob"))?.parse()?;
+            anyhow::ensure!(q > 0.0 && q <= 1.0, "bernoulli prob must be in (0,1]");
+            Box::new(Bernoulli::new(q))
+        }
+        "randk" => {
+            let k: usize = arg.ok_or_else(|| need("k"))?.parse()?;
+            anyhow::ensure!(k >= 1, "randk k must be ≥ 1");
+            Box::new(RandK::new(k))
+        }
+        "topk" => {
+            let k: usize = arg.ok_or_else(|| need("k"))?.parse()?;
+            anyhow::ensure!(k >= 1, "topk k must be ≥ 1");
+            Box::new(TopK::new(k))
+        }
+        other => anyhow::bail!("unknown compressor `{other}`"),
+    })
+}
+
+/// The unbiased client-side set used across the paper's DNN experiments.
+pub fn paper_suite(dim: usize) -> Vec<Box<dyn Compressor>> {
+    let k = (dim / 20).max(1);
+    vec![
+        Box::new(Natural),
+        Box::new(Qsgd::new(15)),
+        Box::new(TernGrad),
+        Box::new(Bernoulli::new(0.1)),
+        Box::new(TopK::new(k)),
+    ]
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::util::stats::{l2_dist_sq, l2_norm};
+
+    /// Monte-Carlo check of Assumption 1 on a fixed vector.
+    ///
+    /// Variance: `E‖C(x) − x‖² ≤ ω‖x‖²` within 5% MC slack.
+    /// Unbiasedness: the MC mean satisfies `E‖mean − x‖² = Var_total/T ≤
+    /// ω‖x‖²/T`, so `‖mean − x‖ ≤ 6√(ω/T)·‖x‖` is a sound aggregate bound
+    /// (robust to rare-event coordinates where per-coordinate empirical
+    /// CIs are meaningless).
+    pub fn check_assumption1(c: &dyn Compressor, x: &[f32], trials: usize, seed: u64) {
+        let d = x.len();
+        let omega = c.omega(d).expect("unbiased compressor");
+        let mut rng = Rng::new(seed);
+        let mut mean = vec![0.0f64; d];
+        let mut var_acc = 0.0f64;
+        for _ in 0..trials {
+            let y = c.apply(x, &mut rng);
+            for i in 0..d {
+                mean[i] += y[i] as f64;
+            }
+            var_acc += l2_dist_sq(&y, x);
+        }
+        let norm_sq = l2_norm(x).powi(2);
+        // variance bound
+        let mc_var = var_acc / trials as f64;
+        assert!(
+            mc_var <= omega * norm_sq * 1.05 + 1e-9,
+            "{}: E‖C(x)−x‖² = {mc_var:.4} exceeds ω‖x‖² = {:.4}",
+            c.name(),
+            omega * norm_sq
+        );
+        // unbiasedness (aggregate ℓ2 bound)
+        let mut dev_sq = 0.0f64;
+        for i in 0..d {
+            let m = mean[i] / trials as f64;
+            dev_sq += (m - x[i] as f64).powi(2);
+        }
+        let bound = 6.0 * (omega / trials as f64).sqrt() * norm_sq.sqrt() + 1e-7;
+        assert!(
+            dev_sq.sqrt() <= bound,
+            "{}: ‖MC-mean − x‖ = {:.5} exceeds 6σ bound {bound:.5}",
+            c.name(),
+            dev_sq.sqrt()
+        );
+    }
+
+    pub fn test_vector(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..d)
+            .map(|_| rng.normal_f32(0.0, 1.0) * 10f32.powi(rng.below(5) as i32 - 2))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parsing() {
+        assert_eq!(from_spec("identity").unwrap().name(), "identity");
+        assert_eq!(from_spec("natural").unwrap().name(), "natural");
+        assert_eq!(from_spec("qsgd:8").unwrap().name(), "qsgd:8");
+        assert_eq!(from_spec("terngrad").unwrap().name(), "terngrad");
+        assert_eq!(from_spec("bernoulli:0.25").unwrap().name(), "bernoulli:0.25");
+        assert_eq!(from_spec("randk:10").unwrap().name(), "randk:10");
+        assert_eq!(from_spec("topk:5").unwrap().name(), "topk:5");
+        assert!(from_spec("qsgd").is_err());
+        assert!(from_spec("bernoulli:1.5").is_err());
+        assert!(from_spec("nope").is_err());
+    }
+
+    #[test]
+    fn paper_suite_covers_table1() {
+        let suite = paper_suite(1000);
+        let names: Vec<String> = suite.iter().map(|c| c.name()).collect();
+        assert!(names.iter().any(|n| n == "natural"));
+        assert!(names.iter().any(|n| n.starts_with("qsgd")));
+        assert!(names.iter().any(|n| n == "terngrad"));
+        assert!(names.iter().any(|n| n.starts_with("bernoulli")));
+        assert!(names.iter().any(|n| n.starts_with("topk")));
+        // exactly one biased operator in the suite (Top-k)
+        assert_eq!(suite.iter().filter(|c| !c.unbiased()).count(), 1);
+    }
+}

@@ -1,0 +1,158 @@
+//! Natural compression (Horváth et al. 2019): stochastic rounding to signed
+//! powers of two. Unbiased with ω = 1/8 — the smallest-variance operator in
+//! Table I, and the one the paper finds "empirically behaves the best".
+//!
+//! Wire format: 9 bits/coordinate — 1 sign + 8-bit exponent code, where
+//! code 0 ⇒ value 0 and code c ∈ [1, 255] ⇒ magnitude 2^(c − 128)
+//! (covers 2^-127 .. 2^127; f32 subnormal results flush to zero).
+
+use super::{Codec, Compressed, Compressor};
+use crate::util::{BitReader, BitWriter, Rng};
+
+pub struct Natural;
+
+const BIAS: i32 = 128;
+
+impl Compressor for Natural {
+    fn name(&self) -> String {
+        "natural".into()
+    }
+
+    fn omega(&self, _dim: usize) -> Option<f64> {
+        Some(0.125)
+    }
+
+    fn compress(&self, x: &[f32], rng: &mut Rng) -> Compressed {
+        let mut w = BitWriter::with_capacity(x.len() * 9 / 8 + 8);
+        // §Perf: one 9-bit put per coordinate (sign in the low bit — wire
+        // format identical to the two-put version), and the rounding
+        // probability read directly off the mantissa field:
+        // for normal a = (1 + m/2²³)·2^e, (a − 2^e)/2^e = m/2²³ exactly.
+        const INV_M: f32 = 1.0 / (1u32 << 23) as f32;
+        for &v in x {
+            let bits = v.to_bits();
+            let exp_field = (bits >> 23) & 0xFF;
+            // zero, subnormal (flush), inf/NaN all map to code 0
+            if exp_field == 0 || exp_field == 0xFF || !v.is_finite() {
+                w.put(0, 9);
+                continue;
+            }
+            let mant = bits & 0x7F_FFFF;
+            let e = exp_field as i32 - 127; // 2^e ≤ |v| < 2^{e+1}
+            let p_up = mant as f32 * INV_M;
+            let e_out = if rng.f32() < p_up { e + 1 } else { e };
+            let code = (e_out + BIAS).clamp(1, 255) as u64;
+            let sign = (bits >> 31) as u64;
+            w.put(sign | (code << 1), 9);
+        }
+        let bits = w.bit_len();
+        Compressed::new(w.finish(), bits, x.len(), Codec::Natural)
+    }
+}
+
+#[inline]
+fn sym(sign: bool, code: u64) -> f32 {
+    if code == 0 {
+        return 0.0;
+    }
+    let e = code as i32 - BIAS; // ∈ [-127, 127]
+    let exp_field = e + 127;
+    let mag = if (1..=254).contains(&exp_field) {
+        f32::from_bits((exp_field as u32) << 23)
+    } else if exp_field <= 0 {
+        0.0 // subnormal flush
+    } else {
+        f32::MAX
+    };
+    if sign { -mag } else { mag }
+}
+
+/// §Perf: 512-entry table mapping the 9-bit wire symbol straight to its
+/// f32 value — replaces the per-coordinate branch chain in `sym`.
+fn lut(scale: f32) -> [f32; 512] {
+    let mut t = [0.0f32; 512];
+    for (v, slot) in t.iter_mut().enumerate() {
+        *slot = scale * sym(v & 1 != 0, (v >> 1) as u64);
+    }
+    t
+}
+
+pub(super) fn decode(payload: &[u8], out: &mut [f32]) {
+    let t = lut(1.0);
+    let mut r = BitReader::new(payload);
+    for o in out.iter_mut() {
+        *o = t[r.get(9) as usize];
+    }
+}
+
+pub(super) fn decode_add(payload: &[u8], acc: &mut [f32], scale: f32) {
+    let t = lut(scale);
+    let mut r = BitReader::new(payload);
+    for a in acc.iter_mut() {
+        *a += t[r.get(9) as usize];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil;
+
+    #[test]
+    fn wire_is_9_bits_per_coordinate() {
+        let x = testutil::test_vector(1000, 1);
+        let c = Natural.compress(&x, &mut Rng::new(0));
+        assert_eq!(c.bits, 9 * 1000);
+        assert_eq!(c.payload.len(), (9 * 1000 + 7) / 8);
+    }
+
+    #[test]
+    fn outputs_are_signed_powers_of_two() {
+        let x = testutil::test_vector(512, 2);
+        let y = Natural.apply(&x, &mut Rng::new(3));
+        for (xi, yi) in x.iter().zip(&y) {
+            if *xi == 0.0 {
+                assert_eq!(*yi, 0.0);
+                continue;
+            }
+            assert_eq!(yi.signum(), xi.signum());
+            let m = yi.abs().log2();
+            assert!((m - m.round()).abs() < 1e-6, "{yi} not a power of two");
+            // within a factor of 2 of the input
+            assert!(yi.abs() >= xi.abs() * 0.999 / 2.0 && yi.abs() <= xi.abs() * 2.001,
+                    "{xi} -> {yi}");
+        }
+    }
+
+    #[test]
+    fn powers_of_two_are_fixed_points() {
+        let x = vec![1.0f32, -2.0, 0.5, 4096.0, -0.015625];
+        let y = Natural.apply(&x, &mut Rng::new(9));
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn assumption1_holds() {
+        let x = testutil::test_vector(128, 4);
+        testutil::check_assumption1(&Natural, &x, 800, 5);
+    }
+
+    #[test]
+    fn zeros_and_nonfinite_map_to_zero() {
+        let x = vec![0.0f32, f32::NAN, f32::INFINITY, -0.0];
+        let y = Natural.apply(&x, &mut Rng::new(0));
+        assert_eq!(y, vec![0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn decode_add_matches_decode() {
+        let x = testutil::test_vector(333, 6);
+        let c = Natural.compress(&x, &mut Rng::new(7));
+        let y = c.decode();
+        let mut acc = vec![1.0f32; 333];
+        c.decode_add(&mut acc, 2.0);
+        for i in 0..333 {
+            assert!((acc[i] - (1.0 + 2.0 * y[i])).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! QSGD / random dithering (Alistarh et al. 2017) with `s` levels.
+//!
+//! C(x)_i = ‖x‖₂ · sign(x_i) · ξ_i/s, ξ_i ∈ {⌊t⌋, ⌈t⌉}, t = s|x_i|/‖x‖₂,
+//! P(ξ = ⌈t⌉) = t − ⌊t⌋. Unbiased with ω ≤ min(d/s², √d/s).
+//!
+//! Wire format: 32-bit norm header, then per coordinate 1 sign bit +
+//! Elias-γ(level + 1). Since E[Σ levels] ≤ s·√d, the γ-code keeps dense
+//! small levels near 1–3 bits — the "encoding" half of QSGD's guarantee.
+
+use super::{Codec, Compressed, Compressor};
+use crate::util::{BitReader, BitWriter, Rng};
+
+pub struct Qsgd {
+    s: u32,
+}
+
+impl Qsgd {
+    pub fn new(s: u32) -> Qsgd {
+        assert!(s >= 1);
+        Qsgd { s }
+    }
+}
+
+impl Compressor for Qsgd {
+    fn name(&self) -> String {
+        format!("qsgd:{}", self.s)
+    }
+
+    fn omega(&self, dim: usize) -> Option<f64> {
+        let d = dim as f64;
+        let s = self.s as f64;
+        Some((d / (s * s)).min(d.sqrt() / s))
+    }
+
+    fn compress(&self, x: &[f32], rng: &mut Rng) -> Compressed {
+        let norm = crate::util::stats::l2_norm(x) as f32;
+        let mut w = BitWriter::with_capacity(x.len() / 2 + 8);
+        w.put_f32(norm);
+        if norm > 0.0 {
+            // §Perf: hoist the s/norm division and emit sign + Elias-γ as a
+            // single put (bitstream identical to sign-then-γ): LSB-first the
+            // code is [sign][nbits−1 zeros][reversed m], 2·nbits total.
+            let k = self.s as f32 / norm;
+            for &v in x {
+                let t = k * v.abs(); // ∈ [0, s]
+                let lo = t as u64;   // floor for t ≥ 0
+                let level = lo + (rng.f32() < (t - lo as f32)) as u64;
+                let m = level + 1;
+                let nbits = 64 - m.leading_zeros();
+                let sign = (v < 0.0) as u64;
+                if 2 * nbits <= 57 {
+                    let rev = m.reverse_bits() >> (64 - nbits);
+                    w.put(sign | (rev << nbits), 2 * nbits);
+                } else {
+                    w.put(sign, 1);
+                    w.put_elias_gamma(m);
+                }
+            }
+        }
+        let bits = w.bit_len();
+        Compressed::new(w.finish(), bits, x.len(), Codec::Qsgd { s: self.s })
+    }
+}
+
+/// Decode (`add = false`) or fused decode-accumulate (`add = true`).
+/// `s` rides in the `Codec` enum rather than the payload header, so the
+/// wire carries only the norm + per-coordinate codes.
+pub(super) fn decode_with_s(payload: &[u8], s: u32, out: &mut [f32], scale: f32, add: bool) {
+    let mut r = BitReader::new(payload);
+    let norm = r.get_f32();
+    if norm <= 0.0 {
+        if !add {
+            out.fill(0.0);
+        }
+        return;
+    }
+    let step = norm / s as f32;
+    for o in out.iter_mut() {
+        let neg = r.get_bit();
+        let level = (r.get_elias_gamma() - 1) as f32;
+        let mut v = step * level;
+        if neg {
+            v = -v;
+        }
+        if add {
+            *o += scale * v;
+        } else {
+            *o = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil;
+    use crate::util::stats::l2_norm;
+
+    #[test]
+    fn roundtrip_levels_on_grid() {
+        let x = testutil::test_vector(500, 1);
+        let q = Qsgd::new(8);
+        let c = q.compress(&x, &mut Rng::new(2));
+        let y = c.decode();
+        let norm = l2_norm(&x) as f32;
+        let step = norm / 8.0;
+        for (xi, yi) in x.iter().zip(&y) {
+            let lv = yi.abs() / step;
+            assert!((lv - lv.round()).abs() < 1e-3, "level off-grid: {yi}");
+            if *yi != 0.0 {
+                assert_eq!(yi.signum(), xi.signum());
+            }
+        }
+    }
+
+    #[test]
+    fn assumption1_holds_s4() {
+        let x = testutil::test_vector(64, 3);
+        testutil::check_assumption1(&Qsgd::new(4), &x, 800, 11);
+    }
+
+    #[test]
+    fn assumption1_holds_s1_terngrad_regime() {
+        let x = testutil::test_vector(32, 5);
+        testutil::check_assumption1(&Qsgd::new(1), &x, 800, 13);
+    }
+
+    #[test]
+    fn zero_vector_compresses_to_header_only() {
+        let x = vec![0.0f32; 100];
+        let c = Qsgd::new(8).compress(&x, &mut Rng::new(0));
+        assert_eq!(c.bits, 32);
+        assert_eq!(c.decode(), x);
+    }
+
+    #[test]
+    fn wire_much_smaller_than_raw_for_large_s_d() {
+        // E[bits/coord] ≈ 1 + E[2⌊log₂(level+1)⌋+1]; for s = 15, d = 10k,
+        // levels are mostly 0/1 ⇒ ≈ 2.5 bits ≪ 32.
+        let x = testutil::test_vector(10_000, 7);
+        let c = Qsgd::new(15).compress(&x, &mut Rng::new(1));
+        assert!(c.bits < 8 * 10_000, "bits = {}", c.bits);
+        assert!(c.bits > 32 + 2 * 10_000);
+    }
+
+    #[test]
+    fn omega_formula() {
+        let q = Qsgd::new(10);
+        // d = 100, s = 10: min(100/100, 10/10) = 1.0
+        assert_eq!(q.omega(100).unwrap(), 1.0);
+        // d = 10000, s = 10: min(100, 10) = 10
+        assert_eq!(q.omega(10_000).unwrap(), 10.0);
+    }
+
+    #[test]
+    fn decode_add_matches_decode() {
+        let x = testutil::test_vector(200, 9);
+        let c = Qsgd::new(4).compress(&x, &mut Rng::new(4));
+        let y = c.decode();
+        let mut acc = vec![0.5f32; 200];
+        c.decode_add(&mut acc, -1.5);
+        for i in 0..200 {
+            assert!((acc[i] - (0.5 - 1.5 * y[i])).abs() < 1e-5);
+        }
+    }
+}

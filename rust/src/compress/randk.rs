@@ -1,0 +1,109 @@
+//! Rand-k sparsifier: keep k uniformly chosen coordinates scaled by d/k.
+//! Unbiased with ω = d/k − 1 — the textbook unbiased sparsifier, included
+//! as the unbiased counterpart to Top-k.
+//!
+//! Wire format: 64-bit selection seed + k raw f32 values; the receiver
+//! regenerates the index set from the seed (shared RNG), so indices cost
+//! 64 bits total instead of k·log₂d.
+
+use super::{Codec, Compressed, Compressor};
+use crate::util::{BitReader, BitWriter, Rng};
+
+pub struct RandK {
+    k: usize,
+}
+
+impl RandK {
+    pub fn new(k: usize) -> RandK {
+        assert!(k >= 1);
+        RandK { k }
+    }
+}
+
+impl Compressor for RandK {
+    fn name(&self) -> String {
+        format!("randk:{}", self.k)
+    }
+
+    fn omega(&self, dim: usize) -> Option<f64> {
+        let k = self.k.min(dim) as f64;
+        Some(dim as f64 / k - 1.0)
+    }
+
+    fn compress(&self, x: &[f32], rng: &mut Rng) -> Compressed {
+        let k = self.k.min(x.len());
+        let seed = rng.next_u64();
+        let idx = Rng::new(seed).sample_indices(x.len(), k);
+        let mut w = BitWriter::with_capacity(8 + 4 * k);
+        w.put(seed & ((1 << 53) - 1), 53);
+        w.put(seed >> 53, 11);
+        for &i in &idx {
+            w.put_f32(x[i]);
+        }
+        let bits = w.bit_len();
+        Compressed::new(w.finish(), bits, x.len(), Codec::RandK { k })
+    }
+}
+
+pub(super) fn decode(payload: &[u8], k: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    decode_add(payload, k, out, 1.0);
+}
+
+pub(super) fn decode_add(payload: &[u8], k: usize, acc: &mut [f32], scale: f32) {
+    let mut r = BitReader::new(payload);
+    let seed = r.get(53) | (r.get(11) << 53);
+    let d = acc.len();
+    let k = k.min(d);
+    let idx = Rng::new(seed).sample_indices(d, k);
+    let rescale = scale * d as f32 / k as f32;
+    for &i in &idx {
+        acc[i] += rescale * r.get_f32();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil;
+
+    #[test]
+    fn exactly_k_nonzeros_scaled() {
+        let x = testutil::test_vector(200, 1);
+        let rk = RandK::new(20);
+        let y = rk.apply(&x, &mut Rng::new(2));
+        let nz: Vec<usize> = (0..200).filter(|&i| y[i] != 0.0).collect();
+        assert!(nz.len() <= 20); // (could collide with a genuine 0 in x)
+        for &i in &nz {
+            assert!((y[i] - x[i] * 10.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn wire_is_seed_plus_k_floats() {
+        let x = testutil::test_vector(1000, 3);
+        let c = RandK::new(50).compress(&x, &mut Rng::new(4));
+        assert_eq!(c.bits, 64 + 32 * 50);
+    }
+
+    #[test]
+    fn assumption1_holds() {
+        let x = testutil::test_vector(60, 5);
+        testutil::check_assumption1(&RandK::new(15), &x, 1500, 21);
+    }
+
+    #[test]
+    fn k_geq_d_is_identity() {
+        let x = testutil::test_vector(10, 7);
+        let y = RandK::new(100).apply(&x, &mut Rng::new(8));
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn omega_formula() {
+        assert_eq!(RandK::new(10).omega(100).unwrap(), 9.0);
+        assert_eq!(RandK::new(100).omega(100).unwrap(), 0.0);
+    }
+}

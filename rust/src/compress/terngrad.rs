@@ -1,0 +1,136 @@
+//! TernGrad (Wen et al. 2017): ternary quantization against the ℓ∞ norm.
+//!
+//! C(x)_i = m · sign(x_i) · B_i with m = ‖x‖∞ and B_i ~ Bernoulli(|x_i|/m).
+//! Unbiased. Variance: E‖C−x‖² = Σ_i |x_i|(m − |x_i|) ≤ m‖x‖₁ − ‖x‖² ≤
+//! (√d − 1)‖x‖², so ω = √d − 1 is the Assumption-1 constant we expose
+//! (tight when mass concentrates on one coordinate).
+//!
+//! Wire format: 32-bit scale header + 2 bits/coordinate
+//! (00 = 0, 01 = +m, 10 = −m).
+
+use super::{Codec, Compressed, Compressor};
+use crate::util::{BitReader, BitWriter, Rng};
+
+pub struct TernGrad;
+
+impl Compressor for TernGrad {
+    fn name(&self) -> String {
+        "terngrad".into()
+    }
+
+    fn omega(&self, dim: usize) -> Option<f64> {
+        Some(((dim as f64).sqrt() - 1.0).max(0.0))
+    }
+
+    fn compress(&self, x: &[f32], rng: &mut Rng) -> Compressed {
+        let m = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let mut w = BitWriter::with_capacity(x.len() / 4 + 8);
+        w.put_f32(m);
+        if m > 0.0 {
+            for &v in x {
+                let keep = rng.f32() < v.abs() / m;
+                let code = if !keep || v == 0.0 {
+                    0u64
+                } else if v > 0.0 {
+                    1
+                } else {
+                    2
+                };
+                w.put(code, 2);
+            }
+        }
+        let bits = w.bit_len();
+        Compressed::new(w.finish(), bits, x.len(), Codec::TernGrad)
+    }
+}
+
+pub(super) fn decode(payload: &[u8], out: &mut [f32]) {
+    let mut r = BitReader::new(payload);
+    let m = r.get_f32();
+    if m <= 0.0 {
+        out.fill(0.0);
+        return;
+    }
+    for o in out.iter_mut() {
+        *o = match r.get(2) {
+            1 => m,
+            2 => -m,
+            _ => 0.0,
+        };
+    }
+}
+
+pub(super) fn decode_add(payload: &[u8], acc: &mut [f32], scale: f32) {
+    let mut r = BitReader::new(payload);
+    let m = r.get_f32();
+    if m <= 0.0 {
+        return;
+    }
+    let pm = scale * m;
+    for a in acc.iter_mut() {
+        match r.get(2) {
+            1 => *a += pm,
+            2 => *a -= pm,
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil;
+
+    #[test]
+    fn wire_is_2_bits_per_coordinate_plus_header() {
+        let x = testutil::test_vector(1000, 1);
+        let c = TernGrad.compress(&x, &mut Rng::new(0));
+        assert_eq!(c.bits, 32 + 2 * 1000);
+    }
+
+    #[test]
+    fn outputs_are_ternary() {
+        let x = testutil::test_vector(500, 2);
+        let m = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let y = TernGrad.apply(&x, &mut Rng::new(1));
+        for v in &y {
+            assert!(*v == 0.0 || (v.abs() - m).abs() < 1e-6, "{v} vs m={m}");
+        }
+    }
+
+    #[test]
+    fn max_coordinate_always_survives() {
+        // |x_i| = m ⇒ keep-probability 1
+        let x = vec![0.1f32, -5.0, 0.2];
+        for seed in 0..20 {
+            let y = TernGrad.apply(&x, &mut Rng::new(seed));
+            assert_eq!(y[1], -5.0);
+        }
+    }
+
+    #[test]
+    fn assumption1_holds() {
+        let x = testutil::test_vector(64, 3);
+        testutil::check_assumption1(&TernGrad, &x, 1000, 17);
+    }
+
+    #[test]
+    fn zero_vector() {
+        let x = vec![0.0f32; 10];
+        let c = TernGrad.compress(&x, &mut Rng::new(0));
+        assert_eq!(c.bits, 32);
+        assert_eq!(c.decode(), x);
+    }
+
+    #[test]
+    fn decode_add_matches_decode() {
+        let x = testutil::test_vector(100, 4);
+        let c = TernGrad.compress(&x, &mut Rng::new(5));
+        let y = c.decode();
+        let mut acc = vec![1.0f32; 100];
+        c.decode_add(&mut acc, 3.0);
+        for i in 0..100 {
+            assert!((acc[i] - (1.0 + 3.0 * y[i])).abs() < 1e-5);
+        }
+    }
+}

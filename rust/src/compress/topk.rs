@@ -1,0 +1,137 @@
+//! Top-k sparsifier (Aji & Heafield 2017): keep the k largest-magnitude
+//! coordinates. **Biased** — the paper includes it "out of scientific
+//! curiosity" (§VII-B); extending the theory to biased operators is listed
+//! as future work, so `omega` returns `None` and the theory module refuses
+//! it. It is a δ-contraction with δ = k/d (`contraction_delta`).
+//!
+//! Wire format: per kept coordinate ⌈log₂ d⌉ index bits + 32 value bits.
+
+use super::{Codec, Compressed, Compressor};
+use crate::util::{BitReader, BitWriter, Rng};
+
+pub struct TopK {
+    k: usize,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> TopK {
+        assert!(k >= 1);
+        TopK { k }
+    }
+
+    /// δ such that E‖C(x) − x‖² ≤ (1 − δ)‖x‖² (contractive-compressor
+    /// constant; k/d for Top-k).
+    pub fn contraction_delta(&self, dim: usize) -> f64 {
+        (self.k.min(dim) as f64) / dim as f64
+    }
+}
+
+fn index_bits(d: usize) -> u32 {
+    (usize::BITS - (d - 1).leading_zeros()).max(1)
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> String {
+        format!("topk:{}", self.k)
+    }
+
+    fn omega(&self, _dim: usize) -> Option<f64> {
+        None // biased: Assumption 1 does not hold
+    }
+
+    fn compress(&self, x: &[f32], _rng: &mut Rng) -> Compressed {
+        let d = x.len();
+        let k = self.k.min(d);
+        // partial selection of the k largest |x_i|
+        let mut idx: Vec<usize> = (0..d).collect();
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            x[b].abs().partial_cmp(&x[a].abs()).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut top: Vec<usize> = idx[..k].to_vec();
+        top.sort_unstable(); // ascending indices compress better + cache-friendly decode
+        let ib = index_bits(d);
+        let mut w = BitWriter::with_capacity((k * (ib as usize + 32)) / 8 + 8);
+        for &i in &top {
+            w.put(i as u64, ib);
+            w.put_f32(x[i]);
+        }
+        let bits = w.bit_len();
+        Compressed::new(w.finish(), bits, d, Codec::TopK { k })
+    }
+}
+
+pub(super) fn decode(payload: &[u8], k: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    decode_add(payload, k, out, 1.0);
+}
+
+pub(super) fn decode_add(payload: &[u8], k: usize, acc: &mut [f32], scale: f32) {
+    let d = acc.len();
+    let k = k.min(d);
+    let ib = index_bits(d);
+    let mut r = BitReader::new(payload);
+    for _ in 0..k {
+        let i = r.get(ib) as usize;
+        let v = r.get_f32();
+        acc[i] += scale * v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil;
+
+    #[test]
+    fn keeps_largest_magnitudes_exactly() {
+        let x = vec![0.1f32, -9.0, 0.5, 3.0, -0.2, 7.0];
+        let y = TopK::new(3).apply(&x, &mut Rng::new(0));
+        assert_eq!(y, vec![0.0, -9.0, 0.0, 3.0, 0.0, 7.0]);
+    }
+
+    #[test]
+    fn is_contraction() {
+        // E‖C(x) − x‖² ≤ (1 − k/d)‖x‖² — deterministic here
+        let x = testutil::test_vector(500, 1);
+        let tk = TopK::new(50);
+        let y = tk.apply(&x, &mut Rng::new(0));
+        let err: f64 = x.iter().zip(&y).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
+        let norm: f64 = x.iter().map(|&a| (a as f64).powi(2)).sum();
+        assert!(err <= (1.0 - tk.contraction_delta(500)) * norm + 1e-9);
+    }
+
+    #[test]
+    fn is_biased_and_refuses_omega() {
+        assert!(TopK::new(5).omega(100).is_none());
+        assert!(!TopK::new(5).unbiased());
+    }
+
+    #[test]
+    fn wire_size_formula() {
+        let x = testutil::test_vector(1000, 2);
+        let c = TopK::new(100).compress(&x, &mut Rng::new(0));
+        // ⌈log₂ 1000⌉ = 10 index bits + 32 value bits per coordinate
+        assert_eq!(c.bits, 100 * (10 + 32));
+    }
+
+    #[test]
+    fn k_geq_d_keeps_everything() {
+        let x = testutil::test_vector(10, 3);
+        let y = TopK::new(64).apply(&x, &mut Rng::new(0));
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn decode_add_matches_decode() {
+        let x = testutil::test_vector(300, 4);
+        let c = TopK::new(30).compress(&x, &mut Rng::new(0));
+        let y = c.decode();
+        let mut acc = vec![1.0f32; 300];
+        c.decode_add(&mut acc, 2.0);
+        for i in 0..300 {
+            assert!((acc[i] - (1.0 + 2.0 * y[i])).abs() < 1e-5);
+        }
+    }
+}

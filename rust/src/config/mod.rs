@@ -1,0 +1,201 @@
+//! Experiment configuration: JSON files + CLI overrides → one validated
+//! `TrainConfig`. Presets reproduce the paper's setups (DESIGN.md §6).
+
+use crate::util::cli::Args;
+use crate::util::json::{self, Value};
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// backend: `native_logreg` or a manifest model name (e.g. `resnet_tiny`)
+    pub model: String,
+    /// `l2gd` | `fedavg` | `fedopt`
+    pub algo: String,
+    pub n_clients: usize,
+    pub steps: u64,
+    pub eval_every: u64,
+    pub seed: u64,
+    // --- L2GD ---
+    pub p: f64,
+    pub lambda: f64,
+    /// explicit η; if 0, derived from local_lr/agg (from_local_and_agg)
+    pub eta: f64,
+    pub agg: f64,
+    // --- shared ---
+    pub local_lr: f64,
+    pub local_steps: usize,
+    pub server_lr: f64,
+    pub client_comp: String,
+    pub master_comp: String,
+    /// Dirichlet α for image environments
+    pub dirichlet_alpha: f64,
+    pub out_dir: String,
+    pub artifacts: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "native_logreg".into(),
+            algo: "l2gd".into(),
+            n_clients: 10,
+            steps: 500,
+            eval_every: 50,
+            seed: 0,
+            p: 0.4,
+            lambda: 10.0,
+            eta: 0.0,
+            agg: 0.1,
+            local_lr: 0.05,
+            local_steps: 2,
+            server_lr: 0.05,
+            client_comp: "natural".into(),
+            master_comp: "natural".into(),
+            dirichlet_alpha: 0.5,
+            out_dir: "results".into(),
+            artifacts: "artifacts".into(),
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_json(v: &Value) -> anyhow::Result<TrainConfig> {
+        let mut c = TrainConfig::default();
+        let gs = |k: &str, cur: &str| -> String {
+            v.get(k).and_then(|x| x.as_str()).map(str::to_string)
+                .unwrap_or_else(|| cur.to_string())
+        };
+        let gf = |k: &str, cur: f64| v.get(k).and_then(|x| x.as_f64()).unwrap_or(cur);
+        let gu = |k: &str, cur: usize| v.get(k).and_then(|x| x.as_usize()).unwrap_or(cur);
+        c.model = gs("model", &c.model);
+        c.algo = gs("algo", &c.algo);
+        c.n_clients = gu("n_clients", c.n_clients);
+        c.steps = gu("steps", c.steps as usize) as u64;
+        c.eval_every = gu("eval_every", c.eval_every as usize) as u64;
+        c.seed = gu("seed", c.seed as usize) as u64;
+        c.p = gf("p", c.p);
+        c.lambda = gf("lambda", c.lambda);
+        c.eta = gf("eta", c.eta);
+        c.agg = gf("agg", c.agg);
+        c.local_lr = gf("local_lr", c.local_lr);
+        c.local_steps = gu("local_steps", c.local_steps);
+        c.server_lr = gf("server_lr", c.server_lr);
+        c.client_comp = gs("client_comp", &c.client_comp);
+        c.master_comp = gs("master_comp", &c.master_comp);
+        c.dirichlet_alpha = gf("dirichlet_alpha", c.dirichlet_alpha);
+        c.out_dir = gs("out_dir", &c.out_dir);
+        c.artifacts = gs("artifacts", &c.artifacts);
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Load `--config file.json` (if given), then apply CLI overrides.
+    pub fn from_args(args: &Args) -> anyhow::Result<TrainConfig> {
+        let base = match args.get("config") {
+            Some(path) => {
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow::anyhow!("read {path}: {e}"))?;
+                let v = json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+                TrainConfig::from_json(&v)?
+            }
+            None => TrainConfig::default(),
+        };
+        let mut c = base;
+        if let Some(v) = args.get("model") { c.model = v.to_string(); }
+        if let Some(v) = args.get("algo") { c.algo = v.to_string(); }
+        c.n_clients = args.parse_or("n", c.n_clients)?;
+        c.steps = args.parse_or("steps", c.steps)?;
+        c.eval_every = args.parse_or("eval-every", c.eval_every)?;
+        c.seed = args.parse_or("seed", c.seed)?;
+        c.p = args.parse_or("p", c.p)?;
+        c.lambda = args.parse_or("lambda", c.lambda)?;
+        c.eta = args.parse_or("eta", c.eta)?;
+        c.agg = args.parse_or("agg", c.agg)?;
+        c.local_lr = args.parse_or("local-lr", c.local_lr)?;
+        c.local_steps = args.parse_or("local-steps", c.local_steps)?;
+        c.server_lr = args.parse_or("server-lr", c.server_lr)?;
+        if let Some(v) = args.get("client-comp") { c.client_comp = v.to_string(); }
+        if let Some(v) = args.get("master-comp") { c.master_comp = v.to_string(); }
+        c.dirichlet_alpha = args.parse_or("alpha", c.dirichlet_alpha)?;
+        if let Some(v) = args.get("out") { c.out_dir = v.to_string(); }
+        if let Some(v) = args.get("artifacts") { c.artifacts = v.to_string(); }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(matches!(self.algo.as_str(), "l2gd" | "fedavg" | "fedopt"),
+                        "unknown algo `{}`", self.algo);
+        anyhow::ensure!(self.n_clients >= 1, "need ≥ 1 client");
+        anyhow::ensure!((0.0..1.0).contains(&self.p) || self.algo != "l2gd",
+                        "l2gd needs p in (0,1)");
+        anyhow::ensure!(self.steps >= 1 && self.eval_every >= 1, "bad step counts");
+        // compressor specs must parse
+        crate::compress::from_spec(&self.client_comp)?;
+        crate::compress::from_spec(&self.master_comp)?;
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("model".into(), Value::Str(self.model.clone())),
+            ("algo".into(), Value::Str(self.algo.clone())),
+            ("n_clients".into(), Value::Num(self.n_clients as f64)),
+            ("steps".into(), Value::Num(self.steps as f64)),
+            ("eval_every".into(), Value::Num(self.eval_every as f64)),
+            ("seed".into(), Value::Num(self.seed as f64)),
+            ("p".into(), Value::Num(self.p)),
+            ("lambda".into(), Value::Num(self.lambda)),
+            ("eta".into(), Value::Num(self.eta)),
+            ("agg".into(), Value::Num(self.agg)),
+            ("local_lr".into(), Value::Num(self.local_lr)),
+            ("local_steps".into(), Value::Num(self.local_steps as f64)),
+            ("server_lr".into(), Value::Num(self.server_lr)),
+            ("client_comp".into(), Value::Str(self.client_comp.clone())),
+            ("master_comp".into(), Value::Str(self.master_comp.clone())),
+            ("dirichlet_alpha".into(), Value::Num(self.dirichlet_alpha)),
+            ("out_dir".into(), Value::Str(self.out_dir.clone())),
+            ("artifacts".into(), Value::Str(self.artifacts.clone())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let c = TrainConfig { p: 0.65, lambda: 25.0, ..Default::default() };
+        let v = c.to_json();
+        let c2 = TrainConfig::from_json(&v).unwrap();
+        assert_eq!(c2.p, 0.65);
+        assert_eq!(c2.lambda, 25.0);
+        assert_eq!(c2.model, c.model);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let args = Args::parse(
+            ["--p", "0.2", "--client-comp", "qsgd:8", "--steps", "99"]
+                .iter().map(|s| s.to_string()),
+            &[],
+        ).unwrap();
+        let c = TrainConfig::from_args(&args).unwrap();
+        assert_eq!(c.p, 0.2);
+        assert_eq!(c.client_comp, "qsgd:8");
+        assert_eq!(c.steps, 99);
+        assert_eq!(c.lambda, TrainConfig::default().lambda);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let mut c = TrainConfig { algo: "sgd".into(), ..Default::default() };
+        assert!(c.validate().is_err());
+        c.algo = "l2gd".into();
+        c.client_comp = "nope".into();
+        assert!(c.validate().is_err());
+        c.client_comp = "natural".into();
+        c.p = 1.5;
+        assert!(c.validate().is_err());
+    }
+}

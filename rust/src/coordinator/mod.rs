@@ -1,0 +1,254 @@
+//! Environment builders: wire datasets, partitioners and backends into the
+//! [`FedEnv`] the algorithms consume. This is the leader-side setup path of
+//! the system (the launcher `pfl` CLI and every bench goes through here).
+
+use std::sync::Arc;
+
+use crate::algorithms::FedEnv;
+use crate::data::{dirichlet, libsvm, synth};
+use crate::runtime::{Backend, NativeLogreg};
+use crate::util::threadpool::ThreadPool;
+use crate::util::Rng;
+
+/// The paper's §VII-A convex setup: a1a/a2a-shaped logistic data split
+/// contiguously over `n` workers (a real LIBSVM file is used when present
+/// at `libsvm_path`, otherwise the synthetic substitute of identical shape).
+#[derive(Clone, Debug)]
+pub struct LogregEnvCfg {
+    pub n_clients: usize,
+    pub rows_per_worker: usize, // a1a: 321, a2a: 453
+    pub dim: usize,             // 123
+    pub noise: f64,
+    pub l2: f32,
+    pub seed: u64,
+    pub libsvm_path: Option<String>,
+}
+
+impl Default for LogregEnvCfg {
+    fn default() -> Self {
+        LogregEnvCfg {
+            n_clients: 5,
+            rows_per_worker: 321,
+            dim: 123,
+            noise: 0.05,
+            l2: 0.01,
+            seed: 0,
+            libsvm_path: None,
+        }
+    }
+}
+
+/// Build the convex environment on the pure-Rust backend (used for the huge
+/// Fig 3 sweeps; the XLA artifact path is exercised by `logreg_env_with`).
+pub fn logreg_env(cfg: &LogregEnvCfg) -> FedEnv {
+    let backend: Arc<dyn Backend> = Arc::new(NativeLogreg::new(
+        cfg.dim,
+        cfg.l2,
+        padded(cfg.rows_per_worker),
+        2048,
+    ));
+    logreg_env_with(cfg, backend)
+}
+
+/// Same environment, caller-chosen backend (native or `XlaRuntime::backend`).
+pub fn logreg_env_with(cfg: &LogregEnvCfg, backend: Arc<dyn Backend>) -> FedEnv {
+    let total = cfg.n_clients * cfg.rows_per_worker;
+    let (train, test) = match cfg
+        .libsvm_path
+        .as_deref()
+        .and_then(|p| libsvm::load_if_present(p, cfg.dim))
+    {
+        // real LIBSVM file: hold out the tail third as the test set
+        Some(all) => {
+            let n_train = (all.len() * 3) / 4;
+            let train = all.subset(&(0..n_train).collect::<Vec<_>>());
+            let test = all.subset(&(n_train..all.len()).collect::<Vec<_>>());
+            (train, test)
+        }
+        None => synth::logistic_split(total, total / 3, cfg.dim, cfg.noise, cfg.seed),
+    };
+    let shards = train.split_contiguous(cfg.n_clients);
+    FedEnv {
+        backend,
+        shards,
+        train_eval: train,
+        test,
+        pool: ThreadPool::new(ThreadPool::default_size()),
+        seed: cfg.seed,
+    }
+}
+
+fn padded(rows: usize) -> usize {
+    rows.next_power_of_two().max(64)
+}
+
+/// The paper's §VII-B DNN setup: synthetic-CIFAR images partitioned with
+/// Dirichlet(α) heterogeneity over `n` clients.
+#[derive(Clone, Debug)]
+pub struct ImageEnvCfg {
+    pub n_clients: usize,
+    pub dirichlet_alpha: f64,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub hw: usize,
+    pub channels: usize,
+    pub classes: usize,
+    pub separation: f32,
+    pub seed: u64,
+}
+
+impl Default for ImageEnvCfg {
+    fn default() -> Self {
+        ImageEnvCfg {
+            n_clients: 10,
+            dirichlet_alpha: 0.5,
+            n_train: 2000,
+            n_test: 512,
+            hw: 16,
+            channels: 3,
+            classes: 10,
+            separation: 1.5,
+            seed: 0,
+        }
+    }
+}
+
+pub fn image_env(cfg: &ImageEnvCfg, backend: Arc<dyn Backend>) -> FedEnv {
+    let (train, test) = synth::images_split(cfg.n_train, cfg.n_test, cfg.classes,
+                                            cfg.hw, cfg.channels,
+                                            cfg.separation, cfg.seed);
+    let mut rng = Rng::new(cfg.seed ^ 0xD121);
+    let shards = dirichlet::partition(&train, cfg.n_clients, cfg.dirichlet_alpha,
+                                      8, &mut rng);
+    FedEnv {
+        backend,
+        shards,
+        train_eval: train,
+        test,
+        pool: ThreadPool::new(ThreadPool::default_size()),
+        seed: cfg.seed,
+    }
+}
+
+/// Token-sequence environment for the transformer end-to-end driver.
+#[derive(Clone, Debug)]
+pub struct TokenEnvCfg {
+    pub n_clients: usize,
+    pub n_train_seq: usize,
+    pub n_test_seq: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    pub determinism: f64,
+    pub seed: u64,
+}
+
+impl Default for TokenEnvCfg {
+    fn default() -> Self {
+        TokenEnvCfg {
+            n_clients: 4,
+            n_train_seq: 2000,
+            n_test_seq: 256,
+            seq: 32,
+            vocab: 256,
+            determinism: 0.85,
+            seed: 0,
+        }
+    }
+}
+
+pub fn token_env(cfg: &TokenEnvCfg, backend: Arc<dyn Backend>) -> FedEnv {
+    let (train, test) = synth::tokens_split(cfg.n_train_seq, cfg.n_test_seq,
+                                            cfg.seq, cfg.vocab,
+                                            cfg.determinism, cfg.seed);
+    let shards = train.split_contiguous(cfg.n_clients);
+    FedEnv {
+        backend,
+        shards,
+        train_eval: train,
+        test,
+        pool: ThreadPool::new(ThreadPool::default_size()),
+        seed: cfg.seed,
+    }
+}
+
+/// Build the environment matching a manifest model's `kind` (used by the
+/// `pfl train` CLI path).
+pub fn env_for_model(rt: &crate::runtime::XlaRuntime, model: &str,
+                     n_clients: usize, dirichlet_alpha: f64, seed: u64)
+                     -> anyhow::Result<FedEnv> {
+    let backend = rt.backend(model)?;
+    let kind = backend.meta().kind.clone();
+    let be: Arc<dyn Backend> = Arc::new(backend);
+    Ok(match kind.as_str() {
+        "logreg" => logreg_env_with(
+            &LogregEnvCfg { n_clients, seed, ..Default::default() }, be),
+        "lm" => token_env(
+            &TokenEnvCfg { n_clients, seed, ..Default::default() }, be),
+        _ => image_env(
+            &ImageEnvCfg { n_clients, dirichlet_alpha, seed, ..Default::default() },
+            be),
+    })
+}
+
+/// Instantiate the algorithm a `TrainConfig` describes.
+pub fn algo_from_config(cfg: &crate::config::TrainConfig)
+                        -> anyhow::Result<Box<dyn crate::algorithms::FedAlgorithm>> {
+    use crate::algorithms::{FedAvg, FedOpt, L2gd};
+    Ok(match cfg.algo.as_str() {
+        "l2gd" => {
+            let alg = if cfg.eta > 0.0 {
+                L2gd::new(cfg.p, cfg.lambda, cfg.eta, cfg.n_clients,
+                          &cfg.client_comp, &cfg.master_comp)?
+            } else {
+                L2gd::from_local_and_agg(cfg.p, cfg.local_lr, cfg.agg,
+                                         cfg.n_clients, &cfg.client_comp,
+                                         &cfg.master_comp)?
+            };
+            Box::new(alg)
+        }
+        "fedavg" => Box::new(FedAvg::new(cfg.local_lr, cfg.local_steps,
+                                         &cfg.client_comp, &cfg.master_comp)?),
+        "fedopt" => Box::new(FedOpt::new(cfg.local_lr, cfg.local_steps,
+                                         cfg.server_lr)),
+        other => anyhow::bail!("unknown algo `{other}`"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logreg_env_matches_paper_shapes() {
+        let env = logreg_env(&LogregEnvCfg::default());
+        assert_eq!(env.n_clients(), 5);
+        assert_eq!(env.shards[0].len(), 321);
+        assert_eq!(env.shards[0].feat_len(), 123);
+        assert_eq!(env.backend.param_count(), 123);
+    }
+
+    #[test]
+    fn image_env_is_heterogeneous() {
+        // backend-free check via a native stand-in is impossible (image
+        // models need XLA), so use a trivial native logreg backend just to
+        // construct the env and inspect the shards.
+        let cfg = ImageEnvCfg { n_train: 1000, ..Default::default() };
+        let be: Arc<dyn Backend> = Arc::new(NativeLogreg::new(4, 0.0, 8, 8));
+        let env = image_env(&cfg, be);
+        assert_eq!(env.n_clients(), 10);
+        let het = crate::data::dirichlet::heterogeneity_tv(&env.shards);
+        assert!(het > 0.1, "tv = {het}");
+        for s in &env.shards {
+            assert!(s.len() >= 8);
+        }
+    }
+
+    #[test]
+    fn token_env_shapes() {
+        let cfg = TokenEnvCfg { n_train_seq: 200, ..Default::default() };
+        let be: Arc<dyn Backend> = Arc::new(NativeLogreg::new(4, 0.0, 8, 8));
+        let env = token_env(&cfg, be);
+        assert_eq!(env.shards.len(), 4);
+        assert_eq!(env.shards[0].feat_len(), 33);
+    }
+}

@@ -1,0 +1,212 @@
+//! In-memory datasets and batching.
+//!
+//! Features are stored row-major and flattened; `feat_shape` records the
+//! per-sample shape (`[123]` for a1a-style rows, `[16,16,3]` for images,
+//! `[33]` for token windows). Labels are class indices; the logreg family
+//! maps {0,1} → {−1,+1} at batch-assembly time.
+
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub features: Vec<f32>,
+    pub feat_shape: Vec<usize>,
+    pub labels: Vec<i32>,
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    pub fn new(features: Vec<f32>, feat_shape: Vec<usize>, labels: Vec<i32>,
+               num_classes: usize) -> Dataset {
+        let fl: usize = feat_shape.iter().product();
+        assert_eq!(features.len(), fl * labels.len(),
+                   "feature buffer disagrees with shape × count");
+        Dataset { features, feat_shape, labels, num_classes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn feat_len(&self) -> usize {
+        self.feat_shape.iter().product()
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let fl = self.feat_len();
+        &self.features[i * fl..(i + 1) * fl]
+    }
+
+    /// Materialize a subset (used by the partitioner).
+    pub fn subset(&self, indices: &[usize]) -> Dataset {
+        let fl = self.feat_len();
+        let mut features = Vec::with_capacity(indices.len() * fl);
+        let mut labels = Vec::with_capacity(indices.len());
+        for &i in indices {
+            features.extend_from_slice(self.row(i));
+            labels.push(self.labels[i]);
+        }
+        Dataset::new(features, self.feat_shape.clone(), labels, self.num_classes)
+    }
+
+    /// Contiguous equal split into `n` shards (the paper's a1a/a2a setup:
+    /// "shuffled examples in the train set, we did not perform any extra
+    /// shuffling" → contiguous cut). Remainder rows go to the last shard.
+    pub fn split_contiguous(&self, n: usize) -> Vec<Dataset> {
+        assert!(n >= 1 && self.len() >= n);
+        let per = self.len() / n;
+        (0..n)
+            .map(|i| {
+                let lo = i * per;
+                let hi = if i == n - 1 { self.len() } else { lo + per };
+                self.subset(&(lo..hi).collect::<Vec<_>>())
+            })
+            .collect()
+    }
+
+    /// Class histogram (for heterogeneity diagnostics).
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.num_classes];
+        for &l in &self.labels {
+            c[l as usize] += 1;
+        }
+        c
+    }
+}
+
+/// Assembles fixed-size batches from a shard.
+///
+/// Sampling is with-replacement uniform (the stochastic-gradient regime of
+/// the DNN experiments) via `sample`, or the full shard padded to a static
+/// executable size via `full_weighted` (the full-gradient convex regime).
+pub struct Batcher<'a> {
+    pub data: &'a Dataset,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(data: &'a Dataset) -> Batcher<'a> {
+        Batcher { data }
+    }
+
+    /// Uniform with-replacement minibatch: (features, labels).
+    pub fn sample(&self, batch: usize, rng: &mut Rng) -> (Vec<f32>, Vec<i32>) {
+        let fl = self.data.feat_len();
+        let mut xs = Vec::with_capacity(batch * fl);
+        let mut ys = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let i = rng.usize_below(self.data.len());
+            xs.extend_from_slice(self.data.row(i));
+            ys.push(self.data.labels[i]);
+        }
+        (xs, ys)
+    }
+
+    /// Entire shard padded with zero-weight rows to `padded` rows:
+    /// (features, ±1 labels, sample weights). Requires len ≤ padded.
+    pub fn full_weighted(&self, padded: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let n = self.data.len();
+        assert!(n <= padded, "shard ({n}) exceeds executable batch ({padded})");
+        let fl = self.data.feat_len();
+        let mut xs = vec![0.0f32; padded * fl];
+        xs[..n * fl].copy_from_slice(&self.data.features);
+        let mut ys = vec![1.0f32; padded];
+        let mut sw = vec![0.0f32; padded];
+        for i in 0..n {
+            ys[i] = if self.data.labels[i] > 0 { 1.0 } else { -1.0 };
+            sw[i] = 1.0;
+        }
+        (xs, ys, sw)
+    }
+
+    /// First `k` rows (deterministic eval subsample), padded like
+    /// `full_weighted`.
+    pub fn eval_weighted(&self, k: usize, padded: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let n = self.data.len().min(k);
+        let sub = self.data.subset(&(0..n).collect::<Vec<_>>());
+        Batcher::new(&sub).full_weighted(padded)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let features = (0..20).map(|x| x as f32).collect();
+        let labels = vec![0, 1, 0, 1, 1, 0, 1, 0, 1, 1];
+        Dataset::new(features, vec![2], labels, 2)
+    }
+
+    #[test]
+    fn rows_and_shapes() {
+        let d = toy();
+        assert_eq!(d.len(), 10);
+        assert_eq!(d.feat_len(), 2);
+        assert_eq!(d.row(3), &[6.0, 7.0]);
+    }
+
+    #[test]
+    fn subset_copies_rows() {
+        let d = toy();
+        let s = d.subset(&[1, 3]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.row(0), &[2.0, 3.0]);
+        assert_eq!(s.labels, vec![1, 1]);
+    }
+
+    #[test]
+    fn contiguous_split_covers_everything() {
+        let d = toy();
+        let shards = d.split_contiguous(3);
+        assert_eq!(shards.len(), 3);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, d.len());
+        assert_eq!(shards[0].len(), 3);
+        assert_eq!(shards[2].len(), 4); // remainder goes last
+        assert_eq!(shards[0].row(0), d.row(0));
+        assert_eq!(shards[2].row(3), d.row(9));
+    }
+
+    #[test]
+    fn sample_batch_shapes() {
+        let d = toy();
+        let mut rng = Rng::new(0);
+        let (xs, ys) = Batcher::new(&d).sample(7, &mut rng);
+        assert_eq!(xs.len(), 14);
+        assert_eq!(ys.len(), 7);
+        for &y in &ys {
+            assert!(y == 0 || y == 1);
+        }
+    }
+
+    #[test]
+    fn full_weighted_pads_with_zero_weights() {
+        let d = toy();
+        let (xs, ys, sw) = Batcher::new(&d).full_weighted(16);
+        assert_eq!(xs.len(), 32);
+        assert_eq!(ys.len(), 16);
+        assert_eq!(sw.iter().filter(|&&w| w == 1.0).count(), 10);
+        assert_eq!(sw.iter().filter(|&&w| w == 0.0).count(), 6);
+        // labels mapped to ±1
+        assert_eq!(ys[0], -1.0);
+        assert_eq!(ys[1], 1.0);
+        // padding rows are zero features
+        assert_eq!(&xs[20..24], &[0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn full_weighted_rejects_overflow() {
+        let d = toy();
+        let _ = Batcher::new(&d).full_weighted(5);
+    }
+
+    #[test]
+    fn class_counts() {
+        assert_eq!(toy().class_counts(), vec![4, 6]);
+    }
+}

@@ -1,0 +1,155 @@
+//! Dirichlet heterogeneous partitioner (the paper's CIFAR-10 setup, §VII-B).
+//!
+//! "The proportion of samples of each class stored at each local node is
+//! drawn by using the Dirichlet distribution (α = 0.5)" — the same
+//! mechanism FedML uses: for every class, draw p ~ Dir(α·1_n) over the n
+//! clients and split that class's indices by the cumulative proportions.
+//! Small α ⇒ spiky proportions ⇒ highly non-iid shards; α → ∞ ⇒ iid.
+
+use super::dataset::Dataset;
+use crate::util::Rng;
+
+/// Per-class Dirichlet split; returns index lists per client.
+/// Guarantees every client receives ≥ `min_per_client` samples by stealing
+/// from the largest shard (real FL code needs non-empty shards).
+pub fn partition_indices(labels: &[i32], num_classes: usize, n_clients: usize,
+                         alpha: f64, min_per_client: usize, rng: &mut Rng)
+                         -> Vec<Vec<usize>> {
+    assert!(n_clients >= 1);
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); num_classes];
+    for (i, &l) in labels.iter().enumerate() {
+        by_class[l as usize].push(i);
+    }
+    let mut shards: Vec<Vec<usize>> = vec![Vec::new(); n_clients];
+    for idxs in by_class.iter_mut() {
+        rng.shuffle(idxs);
+        let props = rng.dirichlet_sym(alpha, n_clients);
+        // cumulative cut points over this class's samples
+        let m = idxs.len();
+        let mut start = 0usize;
+        let mut acc = 0.0f64;
+        for (c, &p) in props.iter().enumerate() {
+            acc += p;
+            let end = if c == n_clients - 1 { m } else { (acc * m as f64).round() as usize };
+            let end = end.clamp(start, m);
+            shards[c].extend_from_slice(&idxs[start..end]);
+            start = end;
+        }
+    }
+    // repair: ensure min_per_client
+    loop {
+        let (mut min_i, mut min_v) = (0, usize::MAX);
+        let (mut max_i, mut max_v) = (0, 0);
+        for (i, s) in shards.iter().enumerate() {
+            if s.len() < min_v {
+                min_i = i;
+                min_v = s.len();
+            }
+            if s.len() > max_v {
+                max_i = i;
+                max_v = s.len();
+            }
+        }
+        if min_v >= min_per_client || max_v <= min_per_client {
+            break;
+        }
+        let moved = shards[max_i].pop().unwrap();
+        shards[min_i].push(moved);
+    }
+    shards
+}
+
+/// Partition a dataset into client shards (materialized copies).
+pub fn partition(data: &Dataset, n_clients: usize, alpha: f64,
+                 min_per_client: usize, rng: &mut Rng) -> Vec<Dataset> {
+    partition_indices(&data.labels, data.num_classes, n_clients, alpha,
+                      min_per_client, rng)
+        .iter()
+        .map(|idx| data.subset(idx))
+        .collect()
+}
+
+/// Heterogeneity diagnostic: mean total-variation distance between each
+/// shard's class distribution and the global one (0 = iid, →1 = disjoint).
+pub fn heterogeneity_tv(shards: &[Dataset]) -> f64 {
+    let classes = shards[0].num_classes;
+    let mut global = vec![0.0f64; classes];
+    let mut total = 0.0;
+    for s in shards {
+        for (g, &c) in global.iter_mut().zip(&s.class_counts()) {
+            *g += c as f64;
+        }
+        total += s.len() as f64;
+    }
+    for g in &mut global {
+        *g /= total;
+    }
+    let mut tv_sum = 0.0;
+    for s in shards {
+        let n = s.len() as f64;
+        let counts = s.class_counts();
+        let tv: f64 = counts
+            .iter()
+            .zip(&global)
+            .map(|(&c, &g)| (c as f64 / n - g).abs())
+            .sum::<f64>()
+            / 2.0;
+        tv_sum += tv;
+    }
+    tv_sum / shards.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn covers_all_indices_exactly_once() {
+        let labels: Vec<i32> = (0..1000).map(|i| (i % 10) as i32).collect();
+        let mut rng = Rng::new(0);
+        let shards = partition_indices(&labels, 10, 7, 0.5, 1, &mut rng);
+        let mut all: Vec<usize> = shards.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn respects_min_per_client() {
+        let labels: Vec<i32> = (0..500).map(|i| (i % 10) as i32).collect();
+        let mut rng = Rng::new(3);
+        let shards = partition_indices(&labels, 10, 10, 0.1, 5, &mut rng);
+        for s in &shards {
+            assert!(s.len() >= 5, "{:?}", shards.iter().map(|s| s.len()).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn low_alpha_more_heterogeneous_than_high() {
+        let data = synth::images(3000, 10, 4, 1, 1.0, 5);
+        let mut rng1 = Rng::new(1);
+        let mut rng2 = Rng::new(1);
+        let het_low = heterogeneity_tv(&partition(&data, 10, 0.1, 1, &mut rng1));
+        let het_high = heterogeneity_tv(&partition(&data, 10, 100.0, 1, &mut rng2));
+        assert!(het_low > het_high + 0.1,
+                "low-α TV {het_low} should exceed high-α TV {het_high}");
+    }
+
+    #[test]
+    fn paper_setting_alpha_half_is_noniid() {
+        let data = synth::images(5000, 10, 4, 1, 1.0, 9);
+        let mut rng = Rng::new(2);
+        let shards = partition(&data, 10, 0.5, 1, &mut rng);
+        assert_eq!(shards.len(), 10);
+        let het = heterogeneity_tv(&shards);
+        assert!(het > 0.15, "Dirichlet(0.5) should be visibly non-iid: {het}");
+    }
+
+    #[test]
+    fn deterministic_given_rng_seed() {
+        let labels: Vec<i32> = (0..200).map(|i| (i % 5) as i32).collect();
+        let a = partition_indices(&labels, 5, 4, 0.5, 1, &mut Rng::new(7));
+        let b = partition_indices(&labels, 5, 4, 0.5, 1, &mut Rng::new(7));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,132 @@
+//! LIBSVM text-format parser.
+//!
+//! The paper's convex experiments use LIBSVM a1a/a2a. Our default harness
+//! substitutes synthetic data of the same shape (no network access), but a
+//! genuine `a1a` file drops straight in via this parser:
+//! lines are `label idx:val idx:val ...` with 1-based indices; labels are
+//! mapped {−1, +1} → {0, 1} (or arbitrary integer classes kept as-is).
+
+use super::dataset::Dataset;
+
+#[derive(Debug, thiserror::Error)]
+pub enum LibsvmError {
+    #[error("line {line}: {msg}")]
+    Malformed { line: usize, msg: String },
+}
+
+/// Parse LIBSVM text. `dim` fixes the feature dimension (a1a = 123);
+/// indices beyond it are rejected.
+pub fn parse(text: &str, dim: usize) -> Result<Dataset, LibsvmError> {
+    let mut features = Vec::new();
+    let mut labels = Vec::new();
+    let mut max_label = 0i32;
+    let mut has_neg = false;
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let lab_tok = parts.next().ok_or_else(|| LibsvmError::Malformed {
+            line: ln + 1,
+            msg: "empty record".into(),
+        })?;
+        let raw: f64 = lab_tok.parse().map_err(|_| LibsvmError::Malformed {
+            line: ln + 1,
+            msg: format!("bad label `{lab_tok}`"),
+        })?;
+        let mut row = vec![0.0f32; dim];
+        for tok in parts {
+            let (i_str, v_str) = tok.split_once(':').ok_or_else(|| LibsvmError::Malformed {
+                line: ln + 1,
+                msg: format!("bad pair `{tok}`"),
+            })?;
+            let idx: usize = i_str.parse().map_err(|_| LibsvmError::Malformed {
+                line: ln + 1,
+                msg: format!("bad index `{i_str}`"),
+            })?;
+            if idx == 0 || idx > dim {
+                return Err(LibsvmError::Malformed {
+                    line: ln + 1,
+                    msg: format!("index {idx} out of range 1..={dim}"),
+                });
+            }
+            let val: f32 = v_str.parse().map_err(|_| LibsvmError::Malformed {
+                line: ln + 1,
+                msg: format!("bad value `{v_str}`"),
+            })?;
+            row[idx - 1] = val;
+        }
+        features.extend_from_slice(&row);
+        let lab = raw as i32;
+        if lab < 0 {
+            has_neg = true;
+        }
+        max_label = max_label.max(lab);
+        labels.push(lab);
+    }
+    // map {-1,+1} → {0,1}; other labelings kept (must be 0-based already)
+    let (labels, num_classes) = if has_neg {
+        (labels.into_iter().map(|l| if l > 0 { 1 } else { 0 }).collect(), 2)
+    } else {
+        (labels, (max_label + 1).max(2) as usize)
+    };
+    Ok(Dataset::new(features, vec![dim], labels, num_classes))
+}
+
+/// Load from a path if it exists; `None` otherwise (harness falls back to
+/// the synthetic substitute).
+pub fn load_if_present(path: &str, dim: usize) -> Option<Dataset> {
+    let text = std::fs::read_to_string(path).ok()?;
+    parse(&text, dim).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+-1 3:1 11:1 14:1 19:1 39:1 42:1 55:1 64:1 67:1 73:1 75:1 76:1 80:1 83:1
++1 5:1 7:0.5 14:1
+# comment line
+
+-1 1:0.25 123:1
+";
+
+    #[test]
+    fn parses_a1a_like_lines() {
+        let d = parse(SAMPLE, 123).unwrap();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.num_classes, 2);
+        assert_eq!(d.labels, vec![0, 1, 0]);
+        assert_eq!(d.row(0)[2], 1.0); // 3:1 → index 2
+        assert_eq!(d.row(1)[6], 0.5);
+        assert_eq!(d.row(2)[0], 0.25);
+        assert_eq!(d.row(2)[122], 1.0);
+    }
+
+    #[test]
+    fn rejects_out_of_range_index() {
+        assert!(parse("+1 124:1", 123).is_err());
+        assert!(parse("+1 0:1", 123).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("notalabel 1:1", 10).is_err());
+        assert!(parse("+1 1=1", 10).is_err());
+        assert!(parse("+1 x:1", 10).is_err());
+    }
+
+    #[test]
+    fn multiclass_kept_as_is() {
+        let d = parse("0 1:1\n2 2:1\n1 3:1", 5).unwrap();
+        assert_eq!(d.num_classes, 3);
+        assert_eq!(d.labels, vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn load_if_present_missing_is_none() {
+        assert!(load_if_present("/nonexistent/a1a", 123).is_none());
+    }
+}

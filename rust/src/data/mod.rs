@@ -1,0 +1,9 @@
+//! Datasets: synthetic generators, the Dirichlet heterogeneous partitioner,
+//! a LIBSVM parser for real a1a/a2a files, and batching.
+
+pub mod dataset;
+pub mod dirichlet;
+pub mod libsvm;
+pub mod synth;
+
+pub use dataset::{Batcher, Dataset};

@@ -1,0 +1,325 @@
+//! Synthetic workload generators (DESIGN.md §3 substitutions).
+//!
+//! * `logistic` — planted-hyperplane binary data standing in for LIBSVM
+//!   a1a/a2a (d = 123; the paper's shards are 321 and 453 rows per worker).
+//! * `images` — class-conditional Gaussian images standing in for CIFAR-10:
+//!   each class has a smooth random template; samples are template + noise.
+//!   Separation controls achievable accuracy so Table II-style
+//!   bits-to-accuracy thresholds are meaningful.
+//! * `tokens` — sparse-bigram Markov sequences for the transformer driver:
+//!   a learnable next-token structure with tunable determinism.
+
+use super::dataset::Dataset;
+use crate::util::Rng;
+
+/// Planted-hyperplane logistic data: x ~ N(0,1)^d, y = sign(x·w*) with
+/// label flips at rate `noise`.
+pub fn logistic(n: usize, d: usize, noise: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0x10c1);
+    let w_star: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut features = Vec::with_capacity(n * d);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut dot = 0.0f32;
+        let base = features.len();
+        for j in 0..d {
+            let x = rng.normal_f32(0.0, 1.0);
+            features.push(x);
+            dot += x * w_star[j] * scale;
+        }
+        let mut y = if dot >= 0.0 { 1 } else { 0 };
+        if rng.bernoulli(noise) {
+            y = 1 - y;
+        }
+        let _ = base;
+        labels.push(y);
+    }
+    Dataset::new(features, vec![d], labels, 2)
+}
+
+/// Smooth per-class template: outer product of two low-frequency waves with
+/// random phase, per channel — visually "blob-like" class signatures.
+fn class_template(hw: usize, channels: usize, class: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut t = vec![0.0f32; hw * hw * channels];
+    for c in 0..channels {
+        let fx = 1.0 + rng.f32() * 2.0;
+        let fy = 1.0 + rng.f32() * 2.0;
+        let px = rng.f32() * std::f32::consts::TAU;
+        let py = rng.f32() * std::f32::consts::TAU;
+        let amp = 0.8 + 0.4 * rng.f32();
+        for i in 0..hw {
+            for j in 0..hw {
+                let v = amp
+                    * ((fx * i as f32 / hw as f32 * std::f32::consts::TAU + px).sin()
+                        * (fy * j as f32 / hw as f32 * std::f32::consts::TAU + py).cos());
+                t[(i * hw + j) * channels + c] = v;
+            }
+        }
+    }
+    let _ = class;
+    t
+}
+
+/// Class-conditional Gaussian images (NHWC): template·sep + N(0,1) noise.
+pub fn images(n: usize, classes: usize, hw: usize, channels: usize, sep: f32,
+              seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0x1436);
+    let templates: Vec<Vec<f32>> = (0..classes)
+        .map(|c| class_template(hw, channels, c, &mut rng))
+        .collect();
+    let fl = hw * hw * channels;
+    let mut features = Vec::with_capacity(n * fl);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let y = rng.usize_below(classes);
+        let t = &templates[y];
+        for k in 0..fl {
+            features.push(t[k] * sep + rng.normal_f32(0.0, 1.0));
+        }
+        labels.push(y as i32);
+    }
+    Dataset::new(features, vec![hw, hw, channels], labels, classes)
+}
+
+/// Heterogeneous federated logistic data: worker i draws from its own
+/// tilted hyperplane w_i* = normalize(w* + tilt·g_i). `tilt = 0` is the
+/// iid setting; growing tilt makes personalization (λ < ∞) genuinely pay
+/// off — the regime Fig 3 studies. Returns (per-worker shards, pooled
+/// test set with the same per-worker mixture).
+pub fn logistic_hetero(n_workers: usize, rows_per_worker: usize,
+                       test_per_worker: usize, d: usize, noise: f64,
+                       tilt: f32, seed: u64) -> (Vec<Dataset>, Dataset) {
+    let mut rng = Rng::new(seed ^ 0x4e7e);
+    let base: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut shards = Vec::with_capacity(n_workers);
+    let mut test_feats = Vec::new();
+    let mut test_labels = Vec::new();
+    for _ in 0..n_workers {
+        let wi: Vec<f32> = base
+            .iter()
+            .map(|&b| b + tilt * rng.normal_f32(0.0, 1.0))
+            .collect();
+        let norm = (wi.iter().map(|&x| x * x).sum::<f32>()).sqrt().max(1e-6);
+        let gen_row = |rng: &mut Rng, feats: &mut Vec<f32>, labels: &mut Vec<i32>| {
+            let mut dot = 0.0f32;
+            for j in 0..d {
+                let x = rng.normal_f32(0.0, 1.0);
+                feats.push(x);
+                dot += x * wi[j] / norm;
+            }
+            let mut y = if dot >= 0.0 { 1 } else { 0 };
+            if rng.bernoulli(noise) {
+                y = 1 - y;
+            }
+            labels.push(y);
+        };
+        let mut feats = Vec::with_capacity(rows_per_worker * d);
+        let mut labels = Vec::with_capacity(rows_per_worker);
+        for _ in 0..rows_per_worker {
+            gen_row(&mut rng, &mut feats, &mut labels);
+        }
+        shards.push(Dataset::new(feats, vec![d], labels, 2));
+        for _ in 0..test_per_worker {
+            gen_row(&mut rng, &mut test_feats, &mut test_labels);
+        }
+    }
+    let test = Dataset::new(test_feats, vec![d], test_labels, 2);
+    (shards, test)
+}
+
+/// Train/test pair drawn from the *same* planted hyperplane (a test set
+/// generated with a different seed would be a different task entirely).
+pub fn logistic_split(n_train: usize, n_test: usize, d: usize, noise: f64,
+                      seed: u64) -> (Dataset, Dataset) {
+    let all = logistic(n_train + n_test, d, noise, seed);
+    split_train_test(all, n_train)
+}
+
+/// Train/test pair sharing the same class templates.
+pub fn images_split(n_train: usize, n_test: usize, classes: usize, hw: usize,
+                    channels: usize, sep: f32, seed: u64) -> (Dataset, Dataset) {
+    let all = images(n_train + n_test, classes, hw, channels, sep, seed);
+    split_train_test(all, n_train)
+}
+
+/// Train/test pair sharing the same planted bigram table.
+pub fn tokens_split(n_train: usize, n_test: usize, seq: usize, vocab: usize,
+                    determinism: f64, seed: u64) -> (Dataset, Dataset) {
+    let all = tokens(n_train + n_test, seq, vocab, determinism, seed);
+    split_train_test(all, n_train)
+}
+
+fn split_train_test(all: Dataset, n_train: usize) -> (Dataset, Dataset) {
+    let train = all.subset(&(0..n_train).collect::<Vec<_>>());
+    let test = all.subset(&(n_train..all.len()).collect::<Vec<_>>());
+    (train, test)
+}
+
+/// Sparse-bigram Markov token sequences. Each sample is a window of
+/// `seq + 1` tokens (input ∥ next-token targets). `determinism ∈ (0,1]`:
+/// probability of following the planted bigram successor vs. uniform noise.
+pub fn tokens(n_seq: usize, seq: usize, vocab: usize, determinism: f64,
+              seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0x70c5);
+    // planted successor table: tok -> next
+    let succ: Vec<i32> = (0..vocab).map(|_| rng.below(vocab as u64) as i32).collect();
+    let w = seq + 1;
+    let mut features = Vec::with_capacity(n_seq * w);
+    let mut labels = Vec::with_capacity(n_seq);
+    for _ in 0..n_seq {
+        let mut tok = rng.below(vocab as u64) as i32;
+        for _ in 0..w {
+            features.push(tok as f32); // stored as f32, cast to i32 at batch
+            tok = if rng.bernoulli(determinism) {
+                succ[tok as usize]
+            } else {
+                rng.below(vocab as u64) as i32
+            };
+        }
+        labels.push(0); // unused for LM
+    }
+    Dataset::new(features, vec![w], labels, vocab)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logistic_shapes_and_balance() {
+        let d = logistic(1605, 123, 0.05, 0);
+        assert_eq!(d.len(), 1605);
+        assert_eq!(d.feat_len(), 123);
+        let c = d.class_counts();
+        // planted hyperplane through origin ⇒ roughly balanced
+        assert!(c[0] > 600 && c[1] > 600, "{c:?}");
+    }
+
+    #[test]
+    fn logistic_is_learnable() {
+        // a linear model fit by a few GD steps should beat chance easily
+        let d = logistic(400, 20, 0.0, 1);
+        let mut w = vec![0.0f32; 20];
+        for _ in 0..200 {
+            let mut g = vec![0.0f32; 20];
+            for i in 0..d.len() {
+                let x = d.row(i);
+                let y = if d.labels[i] > 0 { 1.0 } else { -1.0 };
+                let z: f32 = x.iter().zip(&w).map(|(a, b)| a * b).sum();
+                let coef = -y / (1.0 + (y * z).exp());
+                for j in 0..20 {
+                    g[j] += coef * x[j] / d.len() as f32;
+                }
+            }
+            for j in 0..20 {
+                w[j] -= 1.0 * g[j];
+            }
+        }
+        let mut correct = 0;
+        for i in 0..d.len() {
+            let z: f32 = d.row(i).iter().zip(&w).map(|(a, b)| a * b).sum();
+            let y = if d.labels[i] > 0 { 1.0 } else { -1.0 };
+            if z * y > 0.0 {
+                correct += 1;
+            }
+        }
+        assert!(correct as f64 / d.len() as f64 > 0.9, "acc={correct}/400");
+    }
+
+    #[test]
+    fn images_shapes_and_classes() {
+        let d = images(500, 10, 16, 3, 2.0, 0);
+        assert_eq!(d.feat_shape, vec![16, 16, 3]);
+        assert_eq!(d.num_classes, 10);
+        let c = d.class_counts();
+        assert_eq!(c.iter().sum::<usize>(), 500);
+        assert!(c.iter().all(|&x| x > 20), "{c:?}");
+    }
+
+    #[test]
+    fn images_separable_by_nearest_template_proxy() {
+        // higher sep ⇒ higher within-class correlation than across-class
+        let d = images(200, 4, 8, 1, 3.0, 7);
+        let fl = d.feat_len();
+        let mut means = vec![vec![0.0f64; fl]; 4];
+        let mut counts = vec![0usize; 4];
+        for i in 0..d.len() {
+            let y = d.labels[i] as usize;
+            counts[y] += 1;
+            for (m, &x) in means[y].iter_mut().zip(d.row(i)) {
+                *m += x as f64;
+            }
+        }
+        for (m, &c) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= c as f64;
+            }
+        }
+        // nearest-mean classification accuracy must beat chance soundly
+        let mut correct = 0;
+        for i in 0..d.len() {
+            let mut best = (f64::INFINITY, 0usize);
+            for (k, m) in means.iter().enumerate() {
+                let dist: f64 = d
+                    .row(i)
+                    .iter()
+                    .zip(m)
+                    .map(|(&x, &mu)| (x as f64 - mu).powi(2))
+                    .sum();
+                if dist < best.0 {
+                    best = (dist, k);
+                }
+            }
+            if best.1 == d.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        assert!(correct > 150, "nearest-mean acc {correct}/200");
+    }
+
+    #[test]
+    fn tokens_follow_planted_bigram() {
+        let d = tokens(100, 16, 32, 0.9, 3);
+        assert_eq!(d.feat_len(), 17);
+        // empirically, consecutive pairs repeat the same successor often
+        let mut follows = std::collections::HashMap::<i32, std::collections::HashMap<i32, usize>>::new();
+        for i in 0..d.len() {
+            let row = d.row(i);
+            for w in row.windows(2) {
+                *follows
+                    .entry(w[0] as i32)
+                    .or_default()
+                    .entry(w[1] as i32)
+                    .or_default() += 1;
+            }
+        }
+        // for tokens with ≥ 20 observations, the modal successor should
+        // dominate (determinism 0.9)
+        let mut dominated = 0;
+        let mut considered = 0;
+        for (_, nexts) in follows {
+            let total: usize = nexts.values().sum();
+            if total < 20 {
+                continue;
+            }
+            considered += 1;
+            let max = *nexts.values().max().unwrap();
+            if max as f64 / total as f64 > 0.6 {
+                dominated += 1;
+            }
+        }
+        assert!(considered > 0 && dominated * 10 >= considered * 8,
+                "{dominated}/{considered}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = logistic(50, 10, 0.1, 9);
+        let b = logistic(50, 10, 0.1, 9);
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.labels, b.labels);
+        let c = logistic(50, 10, 0.1, 10);
+        assert_ne!(a.features, c.features);
+    }
+}

@@ -1,0 +1,61 @@
+//! Fig 2: the communication pattern — FedAvg's fixed schedule vs L2GD's
+//! probabilistic protocol. Renders protocol traces as a step timeline
+//! (`pfl repro fig2`), driven by the real transport event log.
+
+use crate::protocol::{Coin, StepKind};
+
+/// One rendered timeline: `L` = local step, `C` = communicating aggregation,
+/// `c` = cached aggregation (no traffic).
+pub fn l2gd_timeline(p: f64, steps: usize, seed: u64) -> String {
+    let mut coin = Coin::new(p, seed);
+    (0..steps)
+        .map(|_| match coin.draw() {
+            StepKind::Local => 'L',
+            StepKind::AggregateFresh => 'C',
+            StepKind::AggregateCached => 'c',
+        })
+        .collect()
+}
+
+/// FedAvg with T local steps per round: `LLL…C` repeated.
+pub fn fedavg_timeline(local_steps: usize, steps: usize) -> String {
+    let mut s = String::with_capacity(steps);
+    let mut i = 0;
+    while s.len() < steps {
+        if i % (local_steps + 1) == local_steps {
+            s.push('C');
+        } else {
+            s.push('L');
+        }
+        i += 1;
+    }
+    s
+}
+
+pub fn render(p: f64, local_steps: usize, steps: usize, seed: u64) -> String {
+    format!(
+        "FedAvg (T = {local_steps} fixed local steps per round):\n  {}\n\
+         L2GD  (probabilistic, p = {p}):\n  {}\n\
+         L = local gradient step, C = communication + aggregation, \
+         c = cached aggregation (no traffic)\n",
+        fedavg_timeline(local_steps, steps),
+        l2gd_timeline(p, steps, seed)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fedavg_schedule_is_periodic() {
+        assert_eq!(fedavg_timeline(3, 8), "LLLCLLLC");
+    }
+
+    #[test]
+    fn l2gd_timeline_has_no_adjacent_fresh_comms() {
+        let t = l2gd_timeline(0.5, 500, 1);
+        assert!(!t.contains("CC"), "two fresh comms in a row is impossible");
+        assert!(t.contains('L') && t.contains('C'));
+    }
+}

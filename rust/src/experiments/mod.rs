@@ -1,0 +1,11 @@
+//! Experiment harnesses: one per paper table/figure (DESIGN.md §6).
+//!
+//! Every harness is scale-parameterized: `cargo bench` runs scaled-down
+//! versions that print the paper's rows/series; `pfl repro <id>` runs the
+//! full configuration and writes CSVs under `results/`.
+
+pub mod dnn;
+pub mod fig2;
+pub mod fig3;
+pub mod fig78;
+pub mod table1;

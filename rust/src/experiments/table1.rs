@@ -1,0 +1,90 @@
+//! Table I: the compressor inventory with *measured* properties —
+//! bits/coordinate on the wire, Monte-Carlo E‖C(x)−x‖²/‖x‖² against the
+//! theoretical ω, and unbiasedness. `pfl compressors` prints it.
+
+use crate::compress::{self, Compressor};
+use crate::util::stats::{l2_dist_sq, l2_norm};
+use crate::util::Rng;
+
+pub struct Table1Row {
+    pub name: String,
+    pub unbiased: bool,
+    pub omega_theory: Option<f64>,
+    pub omega_measured: f64,
+    pub bits_per_coord: f64,
+    pub compression_x: f64, // 32 / bits_per_coord
+}
+
+pub fn measure(c: &dyn Compressor, dim: usize, trials: usize, seed: u64) -> Table1Row {
+    let mut rng = Rng::new(seed);
+    let x: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let norm_sq = l2_norm(&x).powi(2);
+    let mut var_acc = 0.0;
+    let mut bits_acc = 0u64;
+    for _ in 0..trials {
+        let comp = c.compress(&x, &mut rng);
+        bits_acc += comp.bits;
+        let y = comp.decode();
+        var_acc += l2_dist_sq(&y, &x);
+    }
+    let bits_per_coord = bits_acc as f64 / (trials * dim) as f64;
+    Table1Row {
+        name: c.name(),
+        unbiased: c.unbiased(),
+        omega_theory: c.omega(dim),
+        omega_measured: var_acc / trials as f64 / norm_sq,
+        bits_per_coord,
+        compression_x: 32.0 / bits_per_coord,
+    }
+}
+
+pub fn run(dim: usize, trials: usize) -> Vec<Table1Row> {
+    let specs = ["identity", "natural", "qsgd:15", "terngrad",
+                 "bernoulli:0.1", "randk:51", "topk:51"];
+    specs
+        .iter()
+        .map(|s| measure(compress::from_spec(s).unwrap().as_ref(), dim, trials, 42))
+        .collect()
+}
+
+pub fn format_table(rows: &[Table1Row]) -> String {
+    let mut s = String::from(
+        "compressor      unbiased  ω(theory)   ω(measured)  bits/coord  ×compression\n");
+    for r in rows {
+        s.push_str(&format!(
+            "{:<15} {:<9} {:<11} {:<12.4} {:<11.2} {:.1}\n",
+            r.name,
+            r.unbiased,
+            r.omega_theory.map_or("—".into(), |w| format!("{w:.4}")),
+            r.omega_measured,
+            r.bits_per_coord,
+            r.compression_x
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measured_omega_within_theory_bounds() {
+        for row in run(1024, 30) {
+            if let Some(w) = row.omega_theory {
+                assert!(row.omega_measured <= w * 1.1 + 1e-9,
+                        "{}: measured {} > theory {}", row.name,
+                        row.omega_measured, w);
+            }
+        }
+    }
+
+    #[test]
+    fn natural_is_9_bits_and_terngrad_2() {
+        let rows = run(1024, 5);
+        let get = |n: &str| rows.iter().find(|r| r.name.starts_with(n)).unwrap();
+        assert!((get("natural").bits_per_coord - 9.0).abs() < 0.01);
+        assert!((get("terngrad").bits_per_coord - 2.0).abs() < 0.1);
+        assert!((get("identity").bits_per_coord - 32.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,20 @@
+//! # pfl — Personalized Federated Learning with Communication Compression
+//!
+//! Rust coordinator (L3) for the compressed-L2GD system of Bergou,
+//! Burlachenko, Dutta & Richtárik (2022), executing JAX/Pallas-authored
+//! compute (L2/L1) through AOT-compiled XLA artifacts via PJRT.
+//! See DESIGN.md for the full system inventory and experiment index.
+
+pub mod algorithms;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod protocol;
+pub mod runtime;
+pub mod theory;
+pub mod transport;
+pub mod util;

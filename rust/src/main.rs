@@ -1,0 +1,266 @@
+//! `pfl` — launcher CLI for the compressed-L2GD system.
+//!
+//! Subcommands:
+//!   train        run one configured training job (config file + overrides)
+//!   repro <id>   regenerate a paper table/figure (fig2 fig3 fig4 fig5 fig6
+//!                fig78 fig9 table1 table2) at configurable scale
+//!   tune         Theorems 3–4 calculator: optimal p for rate/communication
+//!   compressors  measured Table I (bits/coord, ω) for every operator
+//!   models       list AOT artifact models
+//!
+//! Examples:
+//!   pfl train --model native_logreg --algo l2gd --p 0.4 --lambda 10 --n 5
+//!   pfl repro fig3 --scale 0.2
+//!   pfl tune --n 10 --lf 2.0 --mu 0.01 --lambda 5 --client-comp natural
+
+use pfl::config::TrainConfig;
+use pfl::coordinator;
+use pfl::experiments::{dnn, fig2, fig3, fig78, table1};
+use pfl::runtime::XlaRuntime;
+use pfl::theory::Consts;
+use pfl::util::cli::Args;
+
+const FLAGS: &[&str] = &["trace", "help", "full"];
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::from_env(FLAGS)?;
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "repro" => cmd_repro(&args),
+        "tune" => cmd_tune(&args),
+        "compressors" => cmd_compressors(&args),
+        "models" => cmd_models(&args),
+        _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+pfl — Personalized Federated Learning with Communication Compression
+
+usage: pfl <command> [options]
+
+commands:
+  train        run one training job
+               --model <name|native_logreg> --algo <l2gd|fedavg|fedopt>
+               --n <clients> --steps <k> --p --lambda --eta --agg
+               --local-lr --local-steps --client-comp --master-comp
+               --config <file.json> --out <dir>
+  repro <id>   regenerate a paper artifact: fig2 fig3 fig4 fig5 fig6
+               fig78 fig9 table1 table2   [--scale 0..1] [--out results]
+  tune         optimal p per Theorems 3-4:
+               --n --lf --mu --lambda --client-comp --master-comp [--dim]
+  compressors  measured Table I
+  models       list AOT models (needs `make artifacts`)
+";
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = TrainConfig::from_args(args)?;
+    let env = if cfg.model == "native_logreg" {
+        coordinator::logreg_env(&coordinator::LogregEnvCfg {
+            n_clients: cfg.n_clients,
+            seed: cfg.seed,
+            ..Default::default()
+        })
+    } else {
+        let rt = XlaRuntime::load_filtered(&cfg.artifacts, Some(&[cfg.model.as_str()]))?;
+        coordinator::env_for_model(&rt, &cfg.model, cfg.n_clients,
+                                   cfg.dirichlet_alpha, cfg.seed)?
+    };
+    let mut algo = coordinator::algo_from_config(&cfg)?;
+    eprintln!("running {} on {} ({} clients, {} steps)",
+              algo.label(), cfg.model, cfg.n_clients, cfg.steps);
+    let t0 = std::time::Instant::now();
+    let series = algo.run(&env, cfg.steps, cfg.eval_every)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let path = format!("{}/train_{}_{}.csv", cfg.out_dir, cfg.model, cfg.algo);
+    series.write_csv(&path)?;
+    let last = series.last().unwrap();
+    println!("done in {dt:.1}s → {path}");
+    println!("final: step {} | bits/n {:.3e} | train loss {:.4} acc {:.3} | \
+              test loss {:.4} acc {:.3} | personal loss {:.4}",
+             last.step, last.bits_per_client, last.train_loss, last.train_acc,
+             last.test_loss, last.test_acc, last.personal_loss);
+    Ok(())
+}
+
+fn scale_of(args: &Args) -> anyhow::Result<f64> {
+    let s: f64 = args.parse_or("scale", if args.flag("full") { 1.0 } else { 0.25 })?;
+    anyhow::ensure!(s > 0.0 && s <= 1.0, "--scale must be in (0,1]");
+    Ok(s)
+}
+
+fn cmd_repro(args: &Args) -> anyhow::Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .ok_or_else(|| anyhow::anyhow!("repro needs an id (fig2 fig3 ... table2)"))?;
+    let out = args.str_or("out", "results");
+    let scale = scale_of(args)?;
+    let artifacts = args.str_or("artifacts", "artifacts");
+    match id {
+        "fig2" => {
+            let text = fig2::render(0.5, 3, 64, 7);
+            std::fs::create_dir_all(&out)?;
+            std::fs::write(format!("{out}/fig2_protocol.txt"), &text)?;
+            print!("{text}");
+        }
+        "fig3" => {
+            for (tag, mut cfg) in [("a1a", fig3::Fig3Cfg::a1a()), ("a2a", fig3::Fig3Cfg::a2a())] {
+                cfg.iters = (100.0 * scale).max(20.0) as u64;
+                let (psweep, lsweep) = fig3::run_and_write(&cfg, tag, &out)?;
+                println!("fig3 {tag}: loss vs p (λ=10):");
+                for (p, l) in &psweep {
+                    println!("  p={p:.2}  f={l:.5}");
+                }
+                println!("fig3 {tag}: loss vs λ (p=0.65):");
+                for (lam, l) in &lsweep {
+                    println!("  λ={lam:<5} f={l:.5}");
+                }
+            }
+        }
+        "fig4" | "fig5" | "fig6" => {
+            let model = match id {
+                "fig4" => "resnet_tiny",
+                "fig5" => "densenet_tiny",
+                _ => "mobilenet_tiny",
+            };
+            let rt = XlaRuntime::load_filtered(&artifacts, Some(&[model]))?;
+            let steps = (1200.0 * scale).max(40.0) as u64;
+            let cfg = dnn::DnnCfg::for_model(model, steps);
+            let series = dnn::run_comparison(&rt, &cfg)?;
+            dnn::write_series(&series, id, &out)?;
+            println!("{id} ({model}, {steps} steps):");
+            for s in &series {
+                let r = s.last().unwrap();
+                println!("  {:<34} bits/n {:>10.3e}  train loss {:.4}  test acc {:.3}",
+                         s.label, r.bits_per_client, r.train_loss, r.test_acc);
+            }
+        }
+        "fig78" => {
+            let rt = XlaRuntime::load_filtered(&artifacts, Some(&["resnet_tiny"]))?;
+            let mut cfg = fig78::Fig78Cfg::default();
+            cfg.steps = (600.0 * scale).max(40.0) as u64;
+            cfg.eval_every = (cfg.steps / 12).max(1);
+            let outp = fig78::run(&rt, &cfg)?;
+            pfl::metrics::write_multi_csv(
+                &[outp.l2gd.clone(), outp.fedavg.clone()],
+                format!("{out}/fig78.csv"),
+            )?;
+            println!("fig7/8: FedAvg ≡ L2GD at ηλ/np = 1 (n={}, {} steps)",
+                     cfg.n_clients, cfg.steps);
+            println!("  max test-acc gap   = {:.4}", outp.max_acc_gap);
+            println!("  max train-loss gap = {:.4}", outp.max_loss_gap);
+        }
+        "fig9" | "fig10" | "fig11" => {
+            let model = match id {
+                "fig9" => "resnet_tiny",
+                "fig10" => "densenet_tiny",
+                _ => "mobilenet_tiny",
+            };
+            let rt = XlaRuntime::load_filtered(&artifacts, Some(&[model]))?;
+            let steps = (1200.0 * scale).max(40.0) as u64;
+            let cfg = dnn::DnnCfg::for_model(model, steps);
+            let series = dnn::run_vs_fedopt(&rt, &cfg)?;
+            dnn::write_series(&series, id, &out)?;
+            for s in &series {
+                let r = s.last().unwrap();
+                println!("  {:<34} bits/n {:>10.3e}  train loss {:.4}  test acc {:.3}",
+                         s.label, r.bits_per_client, r.train_loss, r.test_acc);
+            }
+        }
+        "table1" => cmd_compressors(args)?,
+        "table2" => {
+            let models = ["resnet_tiny", "densenet_tiny", "mobilenet_tiny"];
+            let rt = XlaRuntime::load_filtered(&artifacts, Some(&models))?;
+            let target: f64 = args.parse_or("target", 0.5)?;
+            let steps = (2000.0 * scale).max(60.0) as u64;
+            println!("Table II (target test acc {target}):");
+            println!("{:<16} {:>8} {:>14} {:>14} {:>8}",
+                     "model", "params", "L2GD bits/n", "FedAvg bits/n", "ratio");
+            std::fs::create_dir_all(&out)?;
+            let mut csv = String::from("model,params,l2gd_bits,fedavg_bits,ratio\n");
+            for m in models {
+                let cfg = dnn::DnnCfg::for_model(m, steps);
+                let row = dnn::run_table2(&rt, &cfg, target)?;
+                let fmt = |x: Option<f64>| x.map_or("—".to_string(), |v| format!("{v:.3e}"));
+                println!("{:<16} {:>8} {:>14} {:>14} {:>8}",
+                         row.model, row.params, fmt(row.l2gd_bits),
+                         fmt(row.baseline_bits),
+                         row.ratio().map_or("—".to_string(), |r| format!("{r:.1}x")));
+                csv.push_str(&format!("{},{},{},{},{}\n", row.model, row.params,
+                    fmt(row.l2gd_bits), fmt(row.baseline_bits),
+                    row.ratio().map_or(String::new(), |r| format!("{r:.2}"))));
+            }
+            std::fs::write(format!("{out}/table2.csv"), csv)?;
+        }
+        other => anyhow::bail!("unknown repro id `{other}`"),
+    }
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> anyhow::Result<()> {
+    let n: usize = args.parse_or("n", 10)?;
+    let dim: usize = args.parse_or("dim", 10_000)?;
+    let mu: f64 = args.parse_or("mu", 0.01)?;
+    let lambda: f64 = args.parse_or("lambda", 5.0)?;
+    let client = args.str_or("client-comp", "natural");
+    let master = args.str_or("master-comp", "natural");
+    let cc = pfl::compress::from_spec(&client)?;
+    let cm = pfl::compress::from_spec(&master)?;
+    let omega = cc.omega(dim).ok_or_else(|| {
+        anyhow::anyhow!("`{client}` is biased: Theorems 3-4 need unbiased C_i")
+    })?;
+    let omega_m = cm.omega(dim).ok_or_else(|| {
+        anyhow::anyhow!("`{master}` is biased: Theorems 3-4 need unbiased C_M")
+    })?;
+    // L_f: either given, or estimated from a synthetic logreg instance
+    let lf: f64 = match args.get("lf") {
+        Some(s) => s.parse()?,
+        None => {
+            let data = pfl::data::synth::logistic(512, dim.min(512), 0.05, 0);
+            pfl::theory::logreg_smoothness(&data, 0.01, 30)
+        }
+    };
+    let c = Consts { n, lf, mu, lambda, omega, omega_m };
+    println!("constants: n={n} L_f={lf:.4} μ={mu} λ={lambda} ω={omega:.4} ω_M={omega_m:.4}");
+    println!("α = {:.4}", c.alpha());
+    let pr = c.p_star_rate();
+    let pc = c.p_star_comm();
+    println!("Theorem 3 (rate-optimal):  p* = {pr:.4}   γ(p*) = {:.4}   η_max = {:.6}",
+             c.gamma(pr), c.eta_max(pr));
+    println!("Theorem 4 (comm-optimal):  p* = {pc:.4}   γ(p*) = {:.4}", c.gamma(pc));
+    println!("at p*_rate: iterations to 1e-2 ≈ {:.0}, comm rounds ≈ {:.0}",
+             c.iterations_to_eps(pr, 1e-2), c.comm_rounds_to_eps(pr, 1e-2));
+    Ok(())
+}
+
+fn cmd_compressors(_args: &Args) -> anyhow::Result<()> {
+    let rows = table1::run(4096, 20);
+    print!("{}", table1::format_table(&rows));
+    Ok(())
+}
+
+fn cmd_models(args: &Args) -> anyhow::Result<()> {
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let rt = XlaRuntime::load(&artifacts)?;
+    println!("models in {artifacts}:");
+    for name in rt.model_names() {
+        let be = rt.backend(&name)?;
+        let m = be.meta();
+        println!("  {:<18} P={:<8} kind={:<7} train_batch={} classes={}",
+                 m.name, m.param_count, m.kind, m.train_batch, m.num_classes);
+    }
+    Ok(())
+}

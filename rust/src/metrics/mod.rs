@@ -1,0 +1,205 @@
+//! Per-round training records, CSV emission, and the bits-to-accuracy
+//! extraction behind Table II.
+
+use std::io::Write;
+use std::path::Path;
+
+/// One evaluation snapshot during a run.
+#[derive(Clone, Debug)]
+pub struct Record {
+    /// algorithm step: L2GD iteration k, or FedAvg/FedOpt round
+    pub step: u64,
+    /// communication rounds so far
+    pub comm_rounds: u64,
+    pub bits_per_client: f64,
+    pub bits_up: u64,
+    pub bits_down: u64,
+    /// global model x̄ on the (subsampled) train set
+    pub train_loss: f64,
+    pub train_acc: f64,
+    /// global model x̄ on the test set
+    pub test_loss: f64,
+    pub test_acc: f64,
+    /// personalized objective: (1/n) Σ_i f_i(x_i) on each device's own data
+    pub personal_loss: f64,
+    pub personal_acc: f64,
+    /// projected communication wall-clock under the transport time model
+    pub sim_time_s: f64,
+}
+
+/// A labelled metric series (one algorithm × configuration run).
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    pub records: Vec<Record>,
+}
+
+impl Record {
+    /// False once training has diverged (any headline metric non-finite).
+    pub fn is_finite(&self) -> bool {
+        self.train_loss.is_finite() && self.test_loss.is_finite()
+            && self.personal_loss.is_finite()
+    }
+}
+
+pub const CSV_HEADER: &str = "step,comm_rounds,bits_per_client,bits_up,bits_down,\
+train_loss,train_acc,test_loss,test_acc,personal_loss,personal_acc,sim_time_s";
+
+impl Series {
+    pub fn new(label: impl Into<String>) -> Series {
+        Series { label: label.into(), records: Vec::new() }
+    }
+
+    pub fn last(&self) -> Option<&Record> {
+        self.records.last()
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(CSV_HEADER);
+        s.push('\n');
+        for r in &self.records {
+            s.push_str(&format!(
+                "{},{},{:.1},{},{},{:.6},{:.4},{:.6},{:.4},{:.6},{:.4},{:.3}\n",
+                r.step, r.comm_rounds, r.bits_per_client, r.bits_up, r.bits_down,
+                r.train_loss, r.train_acc, r.test_loss, r.test_acc,
+                r.personal_loss, r.personal_acc, r.sim_time_s
+            ));
+        }
+        s
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(())
+    }
+
+    /// First bits/n at which `test_acc ≥ target` (Table II's measurement).
+    pub fn bits_to_test_accuracy(&self, target: f64) -> Option<f64> {
+        self.records
+            .iter()
+            .find(|r| r.test_acc >= target)
+            .map(|r| r.bits_per_client)
+    }
+
+    /// Best (minimum) train loss seen.
+    pub fn best_train_loss(&self) -> Option<f64> {
+        self.records
+            .iter()
+            .map(|r| r.train_loss)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Best (maximum) test accuracy seen.
+    pub fn best_test_acc(&self) -> Option<f64> {
+        self.records
+            .iter()
+            .map(|r| r.test_acc)
+            .max_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Loss reached by the time bits/n first exceeds `budget` (the paper's
+    /// "same amount of data sent" comparison).
+    pub fn loss_at_bits_budget(&self, budget: f64) -> Option<f64> {
+        let mut best: Option<f64> = None;
+        for r in &self.records {
+            if r.bits_per_client > budget {
+                break;
+            }
+            best = Some(best.map_or(r.train_loss, |b: f64| b.min(r.train_loss)));
+        }
+        best
+    }
+}
+
+/// Write several series side by side as one long-format CSV
+/// (`label` column first), convenient for plotting.
+pub fn write_multi_csv(series: &[Series], path: impl AsRef<Path>) -> anyhow::Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut out = String::from("label,");
+    out.push_str(CSV_HEADER);
+    out.push('\n');
+    for s in series {
+        for line in s.to_csv().lines().skip(1) {
+            out.push_str(&s.label);
+            out.push(',');
+            out.push_str(line);
+            out.push('\n');
+        }
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: u64, bits: f64, acc: f64, loss: f64) -> Record {
+        Record {
+            step,
+            comm_rounds: step / 2,
+            bits_per_client: bits,
+            bits_up: bits as u64,
+            bits_down: 0,
+            train_loss: loss,
+            train_acc: acc,
+            test_loss: loss,
+            test_acc: acc,
+            personal_loss: loss,
+            personal_acc: acc,
+            sim_time_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn bits_to_accuracy_finds_first_crossing() {
+        let mut s = Series::new("x");
+        s.records.push(rec(0, 100.0, 0.2, 2.0));
+        s.records.push(rec(1, 200.0, 0.65, 1.0));
+        s.records.push(rec(2, 300.0, 0.72, 0.8));
+        s.records.push(rec(3, 400.0, 0.71, 0.7));
+        assert_eq!(s.bits_to_test_accuracy(0.7), Some(300.0));
+        assert_eq!(s.bits_to_test_accuracy(0.9), None);
+    }
+
+    #[test]
+    fn loss_at_budget_respects_bit_limit() {
+        let mut s = Series::new("x");
+        s.records.push(rec(0, 100.0, 0.2, 2.0));
+        s.records.push(rec(1, 200.0, 0.5, 1.5));
+        s.records.push(rec(2, 900.0, 0.9, 0.1));
+        assert_eq!(s.loss_at_bits_budget(250.0), Some(1.5));
+        assert_eq!(s.loss_at_bits_budget(50.0), None);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut s = Series::new("alg");
+        s.records.push(rec(5, 10.0, 0.5, 1.25));
+        let csv = s.to_csv();
+        let mut lines = csv.lines();
+        assert_eq!(lines.next().unwrap(), CSV_HEADER);
+        let row = lines.next().unwrap();
+        assert!(row.starts_with("5,2,10.0,10,0,1.25"), "{row}");
+    }
+
+    #[test]
+    fn multi_csv_has_labels() {
+        let mut a = Series::new("a");
+        a.records.push(rec(0, 1.0, 0.1, 3.0));
+        let mut b = Series::new("b");
+        b.records.push(rec(0, 2.0, 0.2, 2.0));
+        let dir = std::env::temp_dir().join("pfl_test_multi.csv");
+        write_multi_csv(&[a, b], &dir).unwrap();
+        let text = std::fs::read_to_string(&dir).unwrap();
+        assert!(text.contains("\na,0,"));
+        assert!(text.contains("\nb,0,"));
+        let _ = std::fs::remove_file(dir);
+    }
+}

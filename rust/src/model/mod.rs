@@ -1,0 +1,101 @@
+//! Flat-parameter model state and vector algebra.
+//!
+//! Mirrors the paper's formulation: device i owns x_i ∈ R^d, stored as a
+//! plain `Vec<f32>`. The L2 zoo (python/compile/model.py) is defined over
+//! the same flat vector, so compressors, the aggregation step, and the HLO
+//! executables all share one representation with zero translation.
+
+/// In-place `x ← x + a·y`.
+pub fn axpy(x: &mut [f32], a: f32, y: &[f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (xi, yi) in x.iter_mut().zip(y) {
+        *xi += a * yi;
+    }
+}
+
+/// In-place aggregation step (Algorithm 1, ξ = 1):
+/// `x ← x − a·(x − anchor)` ≡ `x ← (1−a)·x + a·anchor`.
+pub fn aggregation_step(x: &mut [f32], a: f32, anchor: &[f32]) {
+    debug_assert_eq!(x.len(), anchor.len());
+    for (xi, mi) in x.iter_mut().zip(anchor) {
+        *xi -= a * (*xi - mi);
+    }
+}
+
+/// Mean of n equal-length vectors.
+pub fn mean_of(vectors: &[Vec<f32>]) -> Vec<f32> {
+    assert!(!vectors.is_empty());
+    let d = vectors[0].len();
+    let mut out = vec![0.0f32; d];
+    for v in vectors {
+        debug_assert_eq!(v.len(), d);
+        for (o, x) in out.iter_mut().zip(v) {
+            *o += x;
+        }
+    }
+    let inv = 1.0 / vectors.len() as f32;
+    for o in &mut out {
+        *o *= inv;
+    }
+    out
+}
+
+/// Weighted mean (FedAvg aggregation with |D_i| weights).
+pub fn weighted_mean(vectors: &[Vec<f32>], weights: &[f64]) -> Vec<f32> {
+    assert_eq!(vectors.len(), weights.len());
+    assert!(!vectors.is_empty());
+    let total: f64 = weights.iter().sum();
+    let d = vectors[0].len();
+    let mut out = vec![0.0f32; d];
+    for (v, &w) in vectors.iter().zip(weights) {
+        let s = (w / total) as f32;
+        for (o, x) in out.iter_mut().zip(v) {
+            *o += s * x;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let mut x = vec![1.0, 2.0];
+        axpy(&mut x, 2.0, &[10.0, 20.0]);
+        assert_eq!(x, vec![21.0, 42.0]);
+    }
+
+    #[test]
+    fn aggregation_moves_toward_anchor() {
+        let mut x = vec![0.0f32, 10.0];
+        aggregation_step(&mut x, 0.25, &[4.0, 2.0]);
+        assert_eq!(x, vec![1.0, 8.0]);
+        // a = 1 jumps exactly onto the anchor (the FedAvg-equivalence regime)
+        let mut y = vec![-3.0f32, 7.0];
+        aggregation_step(&mut y, 1.0, &[4.0, 2.0]);
+        assert_eq!(y, vec![4.0, 2.0]);
+    }
+
+    #[test]
+    fn aggregation_preserves_mean_when_anchor_is_mean() {
+        // the uncompressed-L2GD invariant: x̄ is a fixed point
+        let mut xs = vec![vec![1.0f32, 0.0], vec![3.0, 4.0]];
+        let avg = mean_of(&xs);
+        for x in xs.iter_mut() {
+            aggregation_step(x, 0.3, &avg);
+        }
+        let new_avg = mean_of(&xs);
+        for (a, b) in avg.iter().zip(&new_avg) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn means() {
+        let vs = vec![vec![1.0f32, 2.0], vec![3.0, 6.0]];
+        assert_eq!(mean_of(&vs), vec![2.0, 4.0]);
+        assert_eq!(weighted_mean(&vs, &[3.0, 1.0]), vec![1.5, 3.0]);
+    }
+}

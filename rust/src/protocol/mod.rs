@@ -1,0 +1,160 @@
+//! The probabilistic communication protocol (§III–IV).
+//!
+//! Each iteration flips ξ_k ~ Bernoulli(p). ξ = 0 ⇒ all devices take a
+//! local gradient step (no communication). ξ = 1 ⇒ an aggregation step,
+//! and **only the 0→1 transition communicates**: devices uplink compressed
+//! models, the master averages and downlinks a compressed anchor. A 1→1
+//! step reuses the cached anchor (the average of local models does not
+//! change across consecutive aggregation steps — §III).
+//!
+//! Algorithm 1 initializes ξ₋₁ = 1 with x̄⁻¹ = mean of the (identical)
+//! initial models, so a first-step aggregation is a *cached* one.
+
+use crate::util::Rng;
+
+/// What iteration k must do.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepKind {
+    /// ξ_k = 0: local gradient step on every device
+    Local,
+    /// ξ_k = 1, ξ_{k−1} = 0: communicate (uplink C_i(x_i), downlink C_M(ȳ))
+    AggregateFresh,
+    /// ξ_k = 1, ξ_{k−1} = 1: aggregation toward the cached anchor, no comm
+    AggregateCached,
+}
+
+/// The ξ coin with transition tracking.
+#[derive(Clone, Debug)]
+pub struct Coin {
+    p: f64,
+    prev: bool, // ξ_{k-1}; Algorithm 1 starts with ξ_{-1} = 1
+    rng: Rng,
+    pub stats: CoinStats,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct CoinStats {
+    pub locals: u64,
+    pub fresh: u64,
+    pub cached: u64,
+}
+
+impl CoinStats {
+    pub fn total(&self) -> u64 {
+        self.locals + self.fresh + self.cached
+    }
+}
+
+impl Coin {
+    pub fn new(p: f64, seed: u64) -> Coin {
+        assert!((0.0..=1.0).contains(&p), "p must be a probability, got {p}");
+        Coin { p, prev: true, rng: Rng::new(seed), stats: CoinStats::default() }
+    }
+
+    pub fn p(&self) -> f64 {
+        self.p
+    }
+
+    /// Draw ξ_k and classify the step.
+    pub fn draw(&mut self) -> StepKind {
+        let xi = self.rng.bernoulli(self.p);
+        let kind = match (self.prev, xi) {
+            (_, false) => StepKind::Local,
+            (false, true) => StepKind::AggregateFresh,
+            (true, true) => StepKind::AggregateCached,
+        };
+        self.prev = xi;
+        match kind {
+            StepKind::Local => self.stats.locals += 1,
+            StepKind::AggregateFresh => self.stats.fresh += 1,
+            StepKind::AggregateCached => self.stats.cached += 1,
+        }
+        kind
+    }
+
+    /// Expected fraction of communicating steps: P(ξ_k=1, ξ_{k−1}=0) = p(1−p).
+    pub fn expected_comm_rate(&self) -> f64 {
+        self.p * (1.0 - self.p)
+    }
+
+    /// Expected number of local steps between communications: (1−p)/p·…
+    /// — the paper's "random number of local steps" view (e.g. p = 0.5 ⇒
+    /// FedAvg-like with an average of 3 steps per round, §VII-B).
+    pub fn expected_steps_per_comm(&self) -> f64 {
+        1.0 / self.expected_comm_rate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frequencies_match_p() {
+        let mut coin = Coin::new(0.3, 1);
+        let k = 100_000;
+        for _ in 0..k {
+            coin.draw();
+        }
+        let s = &coin.stats;
+        assert_eq!(s.total(), k);
+        let agg = (s.fresh + s.cached) as f64 / k as f64;
+        assert!((agg - 0.3).abs() < 0.01, "agg rate {agg}");
+        // fresh transitions occur at rate p(1−p) = 0.21
+        let fresh = s.fresh as f64 / k as f64;
+        assert!((fresh - 0.21).abs() < 0.01, "fresh rate {fresh}");
+    }
+
+    #[test]
+    fn p_zero_never_communicates() {
+        let mut coin = Coin::new(0.0, 2);
+        for _ in 0..1000 {
+            assert_eq!(coin.draw(), StepKind::Local);
+        }
+    }
+
+    #[test]
+    fn p_one_communicates_once_then_cached() {
+        // ξ₋₁ = 1 and ξ_k ≡ 1 ⇒ every step is a cached aggregate:
+        // the average never changes, no communication at all (§III).
+        let mut coin = Coin::new(1.0, 3);
+        for _ in 0..100 {
+            assert_eq!(coin.draw(), StepKind::AggregateCached);
+        }
+    }
+
+    #[test]
+    fn first_aggregate_after_local_is_fresh() {
+        let mut coin = Coin::new(0.5, 0);
+        let mut prev = StepKind::AggregateCached; // ξ₋₁ = 1 effect
+        let mut seen_fresh = false;
+        for _ in 0..200 {
+            let k = coin.draw();
+            if k == StepKind::AggregateFresh {
+                assert_eq!(prev, StepKind::Local);
+                seen_fresh = true;
+            }
+            if k == StepKind::AggregateCached && prev == StepKind::Local {
+                panic!("0→1 transition must be Fresh");
+            }
+            prev = k;
+        }
+        assert!(seen_fresh);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let mut a = Coin::new(0.4, 7);
+        let mut b = Coin::new(0.4, 7);
+        for _ in 0..500 {
+            assert_eq!(a.draw(), b.draw());
+        }
+    }
+
+    #[test]
+    fn expected_rates() {
+        let coin = Coin::new(0.5, 0);
+        assert!((coin.expected_comm_rate() - 0.25).abs() < 1e-12);
+        assert!((coin.expected_steps_per_comm() - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,242 @@
+//! Compute backends.
+//!
+//! The training algorithms are generic over `Backend`: a gradient/eval
+//! oracle for a model over a flat f32[P] parameter vector.
+//!
+//! * [`xla::XlaRuntime`] — the production path: loads the AOT artifacts
+//!   (`artifacts/manifest.json` + HLO text) produced by `make artifacts`
+//!   and executes them on the PJRT CPU client. Python is never involved.
+//! * [`NativeLogreg`] — a pure-Rust implementation of the same logistic
+//!   gradient the L1 Pallas kernel computes. It exists (a) to cross-check
+//!   the HLO path numerically (integration tests assert XLA ≡ native), and
+//!   (b) to run huge convex sweeps (Fig 3) at native speed.
+
+pub mod xla;
+
+use crate::data::{Batcher, Dataset};
+use crate::util::Rng;
+
+pub use xla::XlaRuntime;
+
+/// One model-consumable batch.
+#[derive(Clone, Debug)]
+pub enum Batch {
+    /// logreg family: features, ±1 labels, sample weights (padding = 0)
+    Weighted { x: Vec<f32>, y: Vec<f32>, sw: Vec<f32> },
+    /// classifier families: features + int class labels
+    Labeled { x: Vec<f32>, y: Vec<i32> },
+    /// LM family: token windows (input ∥ shifted targets)
+    Tokens { t: Vec<i32> },
+}
+
+impl Batch {
+    /// Number of effective prediction events (for accuracy normalization).
+    pub fn count(&self, tokens_per_sample: usize) -> f64 {
+        match self {
+            Batch::Weighted { sw, .. } => sw.iter().map(|&w| w as f64).sum(),
+            Batch::Labeled { y, .. } => y.len() as f64,
+            Batch::Tokens { t } => {
+                let w = tokens_per_sample + 1;
+                (t.len() / w) as f64 * tokens_per_sample as f64
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GradOut {
+    pub grad: Vec<f32>,
+    pub loss: f64,
+    /// raw correct-prediction count on the batch
+    pub correct: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct EvalOut {
+    pub loss: f64,
+    pub accuracy: f64,
+}
+
+/// Gradient/eval oracle over flat parameters.
+pub trait Backend: Send + Sync {
+    fn name(&self) -> String;
+    fn param_count(&self) -> usize;
+    /// Initial parameters (identical on every device, as Algorithm 1 assumes
+    /// a shared x̄^{-1}).
+    fn init_params(&self) -> Vec<f32>;
+
+    fn grad(&self, theta: &[f32], batch: &Batch) -> anyhow::Result<GradOut>;
+    fn eval(&self, theta: &[f32], batch: &Batch) -> anyhow::Result<EvalOut>;
+
+    /// Assemble a training batch from a client shard.
+    fn make_train_batch(&self, shard: &Dataset, rng: &mut Rng) -> Batch;
+    /// Assemble a deterministic evaluation batch.
+    fn make_eval_batch(&self, data: &Dataset) -> Batch;
+}
+
+// ---------------------------------------------------------------------------
+// Native logistic-regression backend
+// ---------------------------------------------------------------------------
+
+/// Pure-Rust weighted L2-regularized logistic regression; numerically
+/// mirrors `python/compile/kernels/fused_logreg.py` / `ref.py`.
+pub struct NativeLogreg {
+    pub dim: usize,
+    pub l2: f32,
+    pub train_pad: usize,
+    pub eval_pad: usize,
+}
+
+impl NativeLogreg {
+    pub fn new(dim: usize, l2: f32, train_pad: usize, eval_pad: usize) -> NativeLogreg {
+        NativeLogreg { dim, l2, train_pad, eval_pad }
+    }
+
+    fn forward(&self, theta: &[f32], x: &[f32], y: &[f32], sw: &[f32],
+               grad: Option<&mut [f32]>) -> (f64, f64) {
+        let d = self.dim;
+        let m = x.len() / d;
+        let total_w: f64 = sw.iter().map(|&w| w as f64).sum();
+        let mut loss = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut g = grad;
+        for j in 0..m {
+            let wj = sw[j];
+            if wj == 0.0 {
+                continue;
+            }
+            let row = &x[j * d..(j + 1) * d];
+            let z: f32 = row.iter().zip(theta).map(|(a, b)| a * b).sum();
+            let yz = (y[j] * z) as f64;
+            // log(1 + e^{-yz}) stably
+            loss += wj as f64 * if yz > 0.0 {
+                (-yz).exp().ln_1p()
+            } else {
+                -yz + yz.exp().ln_1p()
+            };
+            if yz > 0.0 {
+                correct += wj as f64;
+            }
+            if let Some(gbuf) = g.as_deref_mut() {
+                let coef = wj * (-y[j]) / (1.0 + (y[j] * z).exp());
+                for (gi, xi) in gbuf.iter_mut().zip(row) {
+                    *gi += coef * xi;
+                }
+            }
+        }
+        let reg: f64 = theta.iter().map(|&t| 0.5 * self.l2 as f64 * (t as f64) * (t as f64)).sum();
+        loss = loss / total_w + reg;
+        if let Some(gbuf) = g {
+            let inv = 1.0 / total_w as f32;
+            for (gi, ti) in gbuf.iter_mut().zip(theta) {
+                *gi = *gi * inv + self.l2 * ti;
+            }
+        }
+        (loss, correct)
+    }
+}
+
+impl Backend for NativeLogreg {
+    fn name(&self) -> String {
+        format!("native_logreg:{}", self.dim)
+    }
+
+    fn param_count(&self) -> usize {
+        self.dim
+    }
+
+    fn init_params(&self) -> Vec<f32> {
+        vec![0.0; self.dim] // matches model.py ("zeros" init for logreg)
+    }
+
+    fn grad(&self, theta: &[f32], batch: &Batch) -> anyhow::Result<GradOut> {
+        let Batch::Weighted { x, y, sw } = batch else {
+            anyhow::bail!("NativeLogreg expects a Weighted batch");
+        };
+        let mut grad = vec![0.0f32; self.dim];
+        let (loss, correct) = self.forward(theta, x, y, sw, Some(&mut grad));
+        Ok(GradOut { grad, loss, correct })
+    }
+
+    fn eval(&self, theta: &[f32], batch: &Batch) -> anyhow::Result<EvalOut> {
+        let Batch::Weighted { x, y, sw } = batch else {
+            anyhow::bail!("NativeLogreg expects a Weighted batch");
+        };
+        let (loss, correct) = self.forward(theta, x, y, sw, None);
+        Ok(EvalOut { loss, accuracy: correct / batch.count(0) })
+    }
+
+    fn make_train_batch(&self, shard: &Dataset, _rng: &mut Rng) -> Batch {
+        // the paper's convex experiments use the *full* local gradient
+        let (x, y, sw) = Batcher::new(shard).full_weighted(self.train_pad);
+        Batch::Weighted { x, y, sw }
+    }
+
+    fn make_eval_batch(&self, data: &Dataset) -> Batch {
+        let (x, y, sw) = Batcher::new(data).eval_weighted(self.eval_pad, self.eval_pad);
+        Batch::Weighted { x, y, sw }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn setup() -> (NativeLogreg, Dataset) {
+        (NativeLogreg::new(20, 0.01, 64, 64), synth::logistic(60, 20, 0.05, 1))
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let (be, data) = setup();
+        let mut rng = Rng::new(0);
+        let batch = be.make_train_batch(&data, &mut rng);
+        let mut theta: Vec<f32> = (0..20).map(|i| 0.05 * (i as f32 - 10.0)).collect();
+        let g = be.grad(&theta, &batch).unwrap();
+        let eps = 1e-3f32;
+        for i in [0usize, 7, 19] {
+            let orig = theta[i];
+            theta[i] = orig + eps;
+            let lp = be.eval(&theta, &batch).unwrap().loss;
+            theta[i] = orig - eps;
+            let lm = be.eval(&theta, &batch).unwrap().loss;
+            theta[i] = orig;
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            assert!((fd - g.grad[i] as f64).abs() < 5e-3,
+                    "coord {i}: fd {fd} vs grad {}", g.grad[i]);
+        }
+    }
+
+    #[test]
+    fn gd_converges_on_separable_data() {
+        let (be, data) = setup();
+        let mut rng = Rng::new(0);
+        let batch = be.make_train_batch(&data, &mut rng);
+        let mut theta = be.init_params();
+        let l0 = be.eval(&theta, &batch).unwrap().loss;
+        for _ in 0..300 {
+            let g = be.grad(&theta, &batch).unwrap();
+            crate::model::axpy(&mut theta, -1.0, &g.grad);
+        }
+        let out = be.eval(&theta, &batch).unwrap();
+        assert!(out.loss < l0 * 0.5, "loss {l0} -> {}", out.loss);
+        assert!(out.accuracy > 0.9, "acc {}", out.accuracy);
+    }
+
+    #[test]
+    fn zero_weight_padding_is_inert() {
+        let (be, data) = setup();
+        let mut rng = Rng::new(0);
+        let theta: Vec<f32> = (0..20).map(|i| 0.1 * i as f32).collect();
+        let b64 = be.make_train_batch(&data, &mut rng);
+        let be_bigger = NativeLogreg::new(20, 0.01, 128, 64);
+        let b128 = be_bigger.make_train_batch(&data, &mut rng);
+        let g1 = be.grad(&theta, &b64).unwrap();
+        let g2 = be_bigger.grad(&theta, &b128).unwrap();
+        assert!((g1.loss - g2.loss).abs() < 1e-9);
+        for (a, b) in g1.grad.iter().zip(&g2.grad) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,337 @@
+//! PJRT runtime: load the AOT artifact bundle and execute it from Rust.
+//!
+//! `make artifacts` writes `artifacts/manifest.json`, one HLO **text** file
+//! per (model, function), and raw-f32 init binaries (HLO text is the
+//! interchange format — xla_extension 0.5.1 rejects jax ≥ 0.5 serialized
+//! protos; see DESIGN.md). This module compiles every HLO once at load and
+//! serves `Backend` gradient/eval calls on the compiled executables.
+//!
+//! ### Thread-safety
+//! The `xla` crate's `PjRtClient` wraps an `Rc`, so it is not `Send`. The
+//! underlying XLA CPU client (TFRT) *is* thread-safe for execution, but we
+//! stay conservative: executables live behind a `Mutex`, and a single
+//! execute call already fans out across XLA's internal thread pool, so the
+//! coordinator loses little by serializing submissions (measured in
+//! EXPERIMENTS.md §Perf).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::data::{Batcher, Dataset};
+use crate::util::json::{self, Value};
+use crate::util::Rng;
+
+use super::{Backend, Batch, EvalOut, GradOut};
+
+/// Wrapper making the Rc-based xla handles shareable. Safety: we never
+/// clone the inner Rc after construction; all access is via `&self` under
+/// the containing `Mutex` (executables) or immutable (client keep-alive).
+struct SendSync<T>(T);
+unsafe impl<T> Send for SendSync<T> {}
+unsafe impl<T> Sync for SendSync<T> {}
+
+#[derive(Clone, Debug)]
+struct TensorSig {
+    shape: Vec<i64>,
+    dtype: String, // "f32" | "i32"
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub family: String,
+    pub param_count: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub num_classes: usize,
+    pub kind: String, // "logreg" | "image" | "flat" | "lm"
+    pub tokens_per_sample: usize,
+}
+
+struct Executable {
+    exe: Mutex<SendSync<xla::PjRtLoadedExecutable>>,
+    inputs: Vec<TensorSig>,
+    num_outputs: usize,
+}
+
+struct ModelEntry {
+    meta: ModelMeta,
+    grad: Executable,
+    eval: Executable,
+    init: Vec<f32>,
+}
+
+/// Loaded artifact bundle: PJRT client + one compiled entry per model.
+pub struct XlaRuntime {
+    client: Arc<SendSync<xla::PjRtClient>>,
+    models: HashMap<String, Arc<ModelEntry>>,
+    dir: PathBuf,
+}
+
+fn parse_sigs(fn_obj: &Value) -> anyhow::Result<Vec<TensorSig>> {
+    let mut sigs = Vec::new();
+    for s in fn_obj.arr_of("inputs")? {
+        let shape: Vec<i64> = s
+            .arr_of("shape")?
+            .iter()
+            .map(|v| v.as_f64().unwrap_or(0.0) as i64)
+            .collect();
+        sigs.push(TensorSig { shape, dtype: s.str_of("dtype")?.to_string() });
+    }
+    Ok(sigs)
+}
+
+impl XlaRuntime {
+    /// Load and compile every model in `artifacts/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<XlaRuntime> {
+        Self::load_filtered(dir, None)
+    }
+
+    /// Load a subset (compilation is the expensive part; benches load only
+    /// the models they use).
+    pub fn load_filtered(dir: impl AsRef<Path>, only: Option<&[&str]>)
+                         -> anyhow::Result<XlaRuntime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
+
+        let mut models = HashMap::new();
+        for m in manifest.arr_of("models")? {
+            let name = m.str_of("name")?.to_string();
+            if let Some(keep) = only {
+                if !keep.contains(&name.as_str()) {
+                    continue;
+                }
+            }
+            let meta_obj = m.req("meta")?;
+            let meta = ModelMeta {
+                name: name.clone(),
+                family: m.str_of("family")?.to_string(),
+                param_count: m.usize_of("param_count")?,
+                train_batch: meta_obj.usize_of("train_batch")?,
+                eval_batch: meta_obj.usize_of("eval_batch")?,
+                num_classes: meta_obj.usize_of("num_classes")?,
+                kind: meta_obj.str_of("kind")?.to_string(),
+                tokens_per_sample: meta_obj
+                    .get("tokens_per_sample")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(0),
+            };
+            let load_fn = |fn_name: &str| -> anyhow::Result<Executable> {
+                let fn_obj = m.req(fn_name)?;
+                let hlo_path = dir.join(fn_obj.str_of("hlo")?);
+                let proto = xla::HloModuleProto::from_text_file(
+                    hlo_path.to_str().unwrap(),
+                )
+                .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", hlo_path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", hlo_path.display()))?;
+                Ok(Executable {
+                    exe: Mutex::new(SendSync(exe)),
+                    inputs: parse_sigs(fn_obj)?,
+                    num_outputs: fn_obj.usize_of("num_outputs")?,
+                })
+            };
+            let grad = load_fn("grad")?;
+            let eval = load_fn("eval")?;
+            let init_path = dir.join(m.str_of("init")?);
+            let raw = std::fs::read(&init_path)?;
+            anyhow::ensure!(raw.len() == 4 * meta.param_count,
+                            "init size mismatch for {name}");
+            let init: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            models.insert(name, Arc::new(ModelEntry { meta, grad, eval, init }));
+        }
+        anyhow::ensure!(!models.is_empty(), "no models loaded from {}", dir.display());
+        Ok(XlaRuntime { client: Arc::new(SendSync(client)), models, dir })
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.models.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// A `Backend` view of one model. The returned handle shares the
+    /// runtime's compiled executables.
+    pub fn backend(&self, name: &str) -> anyhow::Result<XlaBackend> {
+        let entry = self
+            .models
+            .get(name)
+            .ok_or_else(|| {
+                anyhow::anyhow!("model `{name}` not in manifest (have: {:?})",
+                                self.model_names())
+            })?
+            .clone();
+        Ok(XlaBackend { entry, _client: self.client.clone() })
+    }
+}
+
+/// `Backend` implementation over one compiled model. Holds a keep-alive
+/// reference to the PJRT client so it outlives the `XlaRuntime` it came
+/// from.
+pub struct XlaBackend {
+    entry: Arc<ModelEntry>,
+    _client: Arc<SendSync<xla::PjRtClient>>,
+}
+
+impl XlaBackend {
+    pub fn meta(&self) -> &ModelMeta {
+        &self.entry.meta
+    }
+
+    fn run(&self, exec: &Executable, theta: &[f32], batch: &Batch)
+           -> anyhow::Result<Vec<xla::Literal>> {
+        anyhow::ensure!(theta.len() == self.entry.meta.param_count,
+                        "theta length mismatch");
+        let mut lits: Vec<xla::Literal> = Vec::with_capacity(exec.inputs.len());
+        lits.push(xla::Literal::vec1(theta));
+        match batch {
+            Batch::Weighted { x, y, sw } => {
+                lits.push(reshaped_f32(x, &exec.inputs[1])?);
+                lits.push(reshaped_f32(y, &exec.inputs[2])?);
+                lits.push(reshaped_f32(sw, &exec.inputs[3])?);
+            }
+            Batch::Labeled { x, y } => {
+                lits.push(reshaped_f32(x, &exec.inputs[1])?);
+                lits.push(reshaped_i32(y, &exec.inputs[2])?);
+            }
+            Batch::Tokens { t } => {
+                lits.push(reshaped_i32(t, &exec.inputs[1])?);
+            }
+        }
+        anyhow::ensure!(lits.len() == exec.inputs.len(), "batch arity mismatch");
+        let guard = exec.exe.lock().unwrap();
+        let result = guard.0
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        drop(guard);
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("tuple unwrap: {e:?}"))?;
+        anyhow::ensure!(parts.len() == exec.num_outputs, "output arity mismatch");
+        Ok(parts)
+    }
+}
+
+fn reshaped_f32(data: &[f32], sig: &TensorSig) -> anyhow::Result<xla::Literal> {
+    anyhow::ensure!(sig.dtype == "f32", "expected f32 input, sig is {}", sig.dtype);
+    let expect: i64 = sig.shape.iter().product();
+    anyhow::ensure!(data.len() as i64 == expect,
+                    "input length {} != shape {:?}", data.len(), sig.shape);
+    let lit = xla::Literal::vec1(data);
+    if sig.shape.len() == 1 {
+        Ok(lit)
+    } else {
+        lit.reshape(&sig.shape).map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+    }
+}
+
+fn reshaped_i32(data: &[i32], sig: &TensorSig) -> anyhow::Result<xla::Literal> {
+    anyhow::ensure!(sig.dtype == "i32", "expected i32 input, sig is {}", sig.dtype);
+    let expect: i64 = sig.shape.iter().product();
+    anyhow::ensure!(data.len() as i64 == expect,
+                    "input length {} != shape {:?}", data.len(), sig.shape);
+    let lit = xla::Literal::vec1(data);
+    if sig.shape.len() == 1 {
+        Ok(lit)
+    } else {
+        lit.reshape(&sig.shape).map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+    }
+}
+
+fn scalar_f32(lit: &xla::Literal) -> anyhow::Result<f64> {
+    lit.get_first_element::<f32>()
+        .map(|v| v as f64)
+        .map_err(|e| anyhow::anyhow!("scalar: {e:?}"))
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> String {
+        format!("xla:{}", self.entry.meta.name)
+    }
+
+    fn param_count(&self) -> usize {
+        self.entry.meta.param_count
+    }
+
+    fn init_params(&self) -> Vec<f32> {
+        self.entry.init.clone()
+    }
+
+    fn grad(&self, theta: &[f32], batch: &Batch) -> anyhow::Result<GradOut> {
+        let parts = self.run(&self.entry.grad, theta, batch)?;
+        let grad = parts[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("grad tensor: {e:?}"))?;
+        Ok(GradOut { grad, loss: scalar_f32(&parts[1])?, correct: scalar_f32(&parts[2])? })
+    }
+
+    fn eval(&self, theta: &[f32], batch: &Batch) -> anyhow::Result<EvalOut> {
+        let parts = self.run(&self.entry.eval, theta, batch)?;
+        let loss = scalar_f32(&parts[0])?;
+        let correct = scalar_f32(&parts[1])?;
+        let count = batch.count(self.entry.meta.tokens_per_sample);
+        Ok(EvalOut { loss, accuracy: correct / count })
+    }
+
+    fn make_train_batch(&self, shard: &Dataset, rng: &mut Rng) -> Batch {
+        let m = &self.entry.meta;
+        match m.kind.as_str() {
+            "logreg" => {
+                let (x, y, sw) = Batcher::new(shard).full_weighted(m.train_batch);
+                Batch::Weighted { x, y, sw }
+            }
+            "lm" => {
+                let (x, _) = Batcher::new(shard).sample(m.train_batch, rng);
+                Batch::Tokens { t: x.iter().map(|&v| v as i32).collect() }
+            }
+            _ => {
+                let (x, y) = Batcher::new(shard).sample(m.train_batch, rng);
+                Batch::Labeled { x, y }
+            }
+        }
+    }
+
+    fn make_eval_batch(&self, data: &Dataset) -> Batch {
+        let m = &self.entry.meta;
+        match m.kind.as_str() {
+            "logreg" => {
+                let (x, y, sw) = Batcher::new(data).eval_weighted(m.eval_batch, m.eval_batch);
+                Batch::Weighted { x, y, sw }
+            }
+            "lm" => {
+                let idx: Vec<usize> = (0..m.eval_batch).map(|i| i % data.len()).collect();
+                let sub = data.subset(&idx);
+                Batch::Tokens { t: sub.features.iter().map(|&v| v as i32).collect() }
+            }
+            _ => {
+                let idx: Vec<usize> = (0..m.eval_batch).map(|i| i % data.len()).collect();
+                let sub = data.subset(&idx);
+                Batch::Labeled { x: sub.features.clone(), y: sub.labels.clone() }
+            }
+        }
+    }
+}

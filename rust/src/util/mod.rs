@@ -1,0 +1,13 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! deterministic RNG, bit-level I/O, JSON codec, CLI parsing, statistics,
+//! and a fixed worker pool.
+
+pub mod bitio;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+pub use bitio::{BitReader, BitWriter};
+pub use rng::Rng;

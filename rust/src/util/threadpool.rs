@@ -1,0 +1,170 @@
+//! Fixed-size worker pool (tokio is not in the offline vendor set).
+//!
+//! The coordinator fans one closure per client out to the pool each protocol
+//! step; `scope_map` blocks until all complete and returns results in input
+//! order. Workers are long-lived OS threads fed through an mpsc channel, so
+//! per-round overhead is one enqueue/dequeue per client, not thread spawn.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+pub struct ThreadPool {
+    tx: mpsc::Sender<Msg>,
+    shared_rx: Arc<Mutex<mpsc::Receiver<Msg>>>,
+    handles: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let shared_rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&shared_rx);
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("pfl-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Msg::Run(job)) => job(),
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { tx, shared_rx, handles, size }
+    }
+
+    /// Pool sized to the machine (cores, capped at 16).
+    pub fn default_size() -> usize {
+        thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(16)
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Run `f(i, &items[i])` for every item on the pool; results in order.
+    ///
+    /// `f` must be `Sync` (shared across workers); items are only read.
+    pub fn scope_map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let n = items.len();
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        if n == 0 {
+            return Vec::new();
+        }
+        // Scoped-threads trick without crossbeam: hand out raw slots guarded
+        // by a completion channel. Safety: each index is written exactly once
+        // and the borrow outlives the jobs because we block below.
+        let (done_tx, done_rx) = mpsc::channel::<()>();
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        let f_ref = &f;
+        for i in 0..n {
+            let tx = done_tx.clone();
+            let p = out_ptr;
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let p = p; // capture the whole SendPtr, not its raw field
+                let r = f_ref(i, &items[i]);
+                unsafe {
+                    *p.0.add(i) = Some(r);
+                }
+                let _ = tx.send(());
+            });
+            // lifetime erasure: sound because we block on the completion
+            // channel below before any borrow (f, items, out) can end.
+            let job: Job = unsafe { std::mem::transmute(job) };
+            self.tx.send(Msg::Run(job)).expect("pool alive");
+        }
+        for _ in 0..n {
+            done_rx.recv().expect("worker completed");
+        }
+        out.into_iter().map(|o| o.expect("slot written")).collect()
+    }
+}
+
+struct SendPtr<T>(*mut T);
+// manual impls: derive would require T: Copy/Clone
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.handles {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        let _ = &self.shared_rx; // keep rx alive until workers exit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn maps_in_order() {
+        let pool = ThreadPool::new(4);
+        let items: Vec<u64> = (0..100).collect();
+        let out = pool.scope_map(&items, |i, &x| (i as u64) * 1000 + x * x);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, (i as u64) * 1000 + (i as u64) * (i as u64));
+        }
+    }
+
+    #[test]
+    fn runs_concurrently() {
+        let pool = ThreadPool::new(4);
+        let hits = AtomicUsize::new(0);
+        let items = vec![(); 16];
+        pool.scope_map(&items, |_, _| {
+            hits.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn empty_input() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<u32> = pool.scope_map(&Vec::<u32>::new(), |_, &x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn reusable_across_calls() {
+        let pool = ThreadPool::new(3);
+        for round in 0..10 {
+            let items: Vec<usize> = (0..20).collect();
+            let out = pool.scope_map(&items, |_, &x| x + round);
+            assert_eq!(out[5], 5 + round);
+        }
+    }
+}

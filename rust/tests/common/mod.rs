@@ -1,0 +1,37 @@
+//! Shared helpers for the integration suite.
+//!
+//! The XLA-backed tests need `make artifacts` to have run; they skip with a
+//! loud message (rather than fail) when the bundle is absent so that plain
+//! `cargo test` works on a fresh checkout.
+
+use std::sync::Arc;
+
+use pfl::algorithms::FedEnv;
+use pfl::data::synth;
+use pfl::runtime::{Backend, XlaRuntime};
+use pfl::util::threadpool::ThreadPool;
+
+pub const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+/// Load the runtime or skip the calling test.
+pub fn runtime_or_skip(models: &[&str]) -> Option<XlaRuntime> {
+    if !std::path::Path::new(&format!("{ARTIFACTS}/manifest.json")).exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(XlaRuntime::load_filtered(ARTIFACTS, Some(models)).expect("load artifacts"))
+}
+
+/// Logistic environment shared by the training integration tests.
+pub fn logreg_fed_env(backend: Arc<dyn Backend>, n: usize, seed: u64) -> FedEnv {
+    let (train, test) = synth::logistic_split(80 * n, 200, 123, 0.03, seed);
+    let shards = train.split_contiguous(n);
+    FedEnv {
+        backend,
+        shards,
+        train_eval: train,
+        test,
+        pool: ThreadPool::new(4),
+        seed,
+    }
+}

@@ -1,0 +1,95 @@
+//! Experiment-harness integration: scaled-down versions of the paper's
+//! figures must run end to end and show the qualitative shapes the paper
+//! reports.
+
+mod common;
+
+use common::runtime_or_skip;
+use pfl::experiments::{dnn, fig2, fig3, table1};
+use pfl::theory::Consts;
+
+#[test]
+fn fig3_sweep_runs_and_shows_structure() {
+    let cfg = fig3::Fig3Cfg {
+        rows_per_worker: 64,
+        iters: 50,
+        ..fig3::Fig3Cfg::a1a()
+    };
+    let pts = fig3::sweep_p(&cfg, 10.0, &[0.1, 0.4, 0.8]).unwrap();
+    assert_eq!(pts.len(), 3);
+    assert!(pts.iter().all(|(_, l)| l.is_finite() && *l > 0.0));
+    let ls = fig3::sweep_lambda(&cfg, 0.65, &[0.0, 5.0, 25.0]).unwrap();
+    assert_eq!(ls.len(), 3);
+}
+
+#[test]
+fn fig2_timelines_have_paper_shape() {
+    let t = fig2::render(0.5, 3, 48, 3);
+    assert!(t.contains("FedAvg"));
+    assert!(t.contains("L2GD"));
+    // FedAvg periodic, L2GD aperiodic
+    assert!(t.contains("LLLC"));
+}
+
+#[test]
+fn table1_rows_cover_all_operators() {
+    let rows = table1::run(512, 10);
+    assert_eq!(rows.len(), 7);
+    // identity must be exactly lossless & widest; terngrad the narrowest
+    // dense code; topk the only biased one
+    let biased: Vec<_> = rows.iter().filter(|r| !r.unbiased).collect();
+    assert_eq!(biased.len(), 1);
+    assert!(biased[0].name.starts_with("topk"));
+}
+
+#[test]
+fn tune_numbers_are_consistent() {
+    let c = Consts { n: 10, lf: 2.0, mu: 0.01, lambda: 5.0,
+                     omega: 0.125, omega_m: 0.125 };
+    let pr = c.p_star_rate();
+    let pc = c.p_star_comm();
+    assert!(pr > 0.0 && pr < 1.0);
+    assert!(pc > 0.0 && pc < 1.0);
+    // communication count at comm-optimal p must not exceed that at the
+    // rate-optimal p
+    assert!(c.comm_rounds_to_eps(pc, 1e-2) <= c.comm_rounds_to_eps(pr, 1e-2) * 1.0001);
+}
+
+#[test]
+fn dnn_comparison_smoke_on_mobilenet() {
+    // tiny-scale Figs 4–6 harness over the real artifacts
+    let Some(rt) = runtime_or_skip(&["mobilenet_tiny"]) else { return };
+    let mut cfg = dnn::DnnCfg::for_model("mobilenet_tiny", 24);
+    cfg.eval_every = 12;
+    cfg.env.n_train = 600;
+    cfg.env.n_test = 128;
+    let series = dnn::run_comparison(&rt, &cfg).unwrap();
+    // 5 L2GD compressors + 2 FedAvg + 1 FedOpt
+    assert_eq!(series.len(), 8);
+    for s in &series {
+        let r = s.last().unwrap();
+        assert!(r.train_loss.is_finite(), "{}", s.label);
+        assert!(r.bits_per_client > 0.0, "{}", s.label);
+    }
+    // compressed L2GD must send fewer bits per comm round than FedAvg
+    let l2_nat = series.iter().find(|s| s.label.contains("l2gd-natural")).unwrap();
+    let fa = series.iter().find(|s| s.label.starts_with("fedavg:")).unwrap();
+    let bits_per_round = |s: &pfl::metrics::Series| {
+        let r = s.last().unwrap();
+        (r.bits_up + r.bits_down) as f64 / r.comm_rounds.max(1) as f64
+    };
+    assert!(bits_per_round(l2_nat) < bits_per_round(fa) * 0.5);
+}
+
+#[test]
+fn table2_smoke_row() {
+    let Some(rt) = runtime_or_skip(&["mobilenet_tiny"]) else { return };
+    let mut cfg = dnn::DnnCfg::for_model("mobilenet_tiny", 200);
+    cfg.eval_every = 10;
+    // target low enough to be reliably reachable in 200 steps
+    let row = dnn::run_table2(&rt, &cfg, 0.18).unwrap();
+    assert_eq!(row.model, "mobilenet_tiny");
+    assert!(row.params > 0);
+    // at minimum the L2GD side must have crossed the (low) threshold
+    assert!(row.l2gd_bits.is_some());
+}

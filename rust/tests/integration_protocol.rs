@@ -1,0 +1,152 @@
+//! Protocol-level integration: bit accounting invariants, anchor caching,
+//! and compression interplay across full L2GD runs.
+
+mod common;
+
+use std::sync::Arc;
+
+use common::logreg_fed_env;
+use pfl::algorithms::{FedAlgorithm, L2gd};
+use pfl::runtime::NativeLogreg;
+
+fn native() -> Arc<NativeLogreg> {
+    Arc::new(NativeLogreg::new(123, 0.01, 512, 1024))
+}
+
+/// Identity L2GD: total bits must be exactly
+/// comm_rounds × n × (32·d up + 32·d down).
+#[test]
+fn identity_bit_accounting_is_exact() {
+    let env = logreg_fed_env(native(), 5, 0);
+    let mut alg = L2gd::from_local_and_agg(0.4, 0.3, 0.5, 5,
+                                           "identity", "identity").unwrap();
+    let s = alg.run(&env, 300, 300).unwrap();
+    let r = s.records.last().unwrap();
+    let per_round = 5 * 32 * 123; // n clients × raw f32 vector
+    assert_eq!(r.bits_up, r.comm_rounds * per_round);
+    assert_eq!(r.bits_down, r.comm_rounds * per_round);
+    assert!((r.bits_per_client
+             - (r.bits_up + r.bits_down) as f64 / 5.0).abs() < 1e-9);
+}
+
+/// Natural compression: up bits must be exactly 9/32 of identity's.
+#[test]
+fn natural_bits_are_9_over_32_of_identity() {
+    let env = logreg_fed_env(native(), 4, 1);
+    let mut a = L2gd::from_local_and_agg(0.4, 0.3, 0.5, 4,
+                                         "natural", "identity").unwrap();
+    let s = a.run(&env, 200, 200).unwrap();
+    let r = s.records.last().unwrap();
+    let up_per_round = r.bits_up as f64 / r.comm_rounds as f64;
+    assert_eq!(up_per_round, (4 * 9 * 123) as f64);
+    let down_per_round = r.bits_down as f64 / r.comm_rounds as f64;
+    assert_eq!(down_per_round, (4 * 32 * 123) as f64);
+}
+
+/// p close to 1 ⇒ almost all steps are cached aggregations ⇒ almost no
+/// communication despite constant aggregation (the §III invariant).
+#[test]
+fn cached_aggregations_are_free() {
+    let env = logreg_fed_env(native(), 3, 2);
+    let mut alg = L2gd::from_local_and_agg(0.95, 0.2, 0.5, 3,
+                                           "identity", "identity").unwrap();
+    let steps = 400;
+    let s = alg.run(&env, steps, steps).unwrap();
+    let r = s.records.last().unwrap();
+    // comm rate is p(1−p) ≈ 0.0475 ⇒ ~19 rounds, far below the ~380
+    // aggregation steps
+    assert!(r.comm_rounds < steps / 8,
+            "comm {} of {} steps", r.comm_rounds, steps);
+    assert!(r.comm_rounds > 0);
+}
+
+/// Heavier client compression (fewer bits) must never increase the bits/n
+/// needed per communication round.
+#[test]
+fn bits_ordering_across_compressors() {
+    let specs = ["identity", "natural", "terngrad"];
+    let mut per_round = Vec::new();
+    for spec in specs {
+        let env = logreg_fed_env(native(), 4, 3);
+        let mut alg = L2gd::from_local_and_agg(0.4, 0.3, 0.5, 4,
+                                               spec, "identity").unwrap();
+        let s = alg.run(&env, 150, 150).unwrap();
+        let r = s.records.last().unwrap();
+        per_round.push(r.bits_up as f64 / r.comm_rounds as f64);
+    }
+    assert!(per_round[0] > per_round[1], "identity > natural");
+    assert!(per_round[1] > per_round[2], "natural > terngrad");
+}
+
+/// Replaying the same seed gives a bit-identical series even through the
+/// thread pool (determinism is a core harness requirement).
+#[test]
+fn full_run_is_deterministic_across_pool_sizes() {
+    let run = |pool: usize| {
+        let mut env = logreg_fed_env(native(), 5, 9);
+        env.pool = pfl::util::threadpool::ThreadPool::new(pool);
+        let mut alg = L2gd::from_local_and_agg(0.3, 0.3, 0.4, 5,
+                                               "qsgd:8", "natural").unwrap();
+        alg.run(&env, 120, 40).unwrap()
+    };
+    let a = run(1);
+    let b = run(8);
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.train_loss, rb.train_loss);
+        assert_eq!(ra.personal_loss, rb.personal_loss);
+        assert_eq!(ra.bits_up, rb.bits_up);
+        assert_eq!(ra.comm_rounds, rb.comm_rounds);
+    }
+}
+
+/// Failure injection: a backend that errors after N calls must surface a
+/// clean error from run(), not a panic or a hang.
+struct FlakyBackend {
+    inner: NativeLogreg,
+    budget: std::sync::atomic::AtomicUsize,
+}
+
+impl pfl::runtime::Backend for FlakyBackend {
+    fn name(&self) -> String {
+        "flaky".into()
+    }
+    fn param_count(&self) -> usize {
+        self.inner.param_count()
+    }
+    fn init_params(&self) -> Vec<f32> {
+        self.inner.init_params()
+    }
+    fn grad(&self, theta: &[f32], batch: &pfl::runtime::Batch)
+            -> anyhow::Result<pfl::runtime::GradOut> {
+        use std::sync::atomic::Ordering;
+        if self.budget.fetch_sub(1, Ordering::SeqCst) == 0 {
+            anyhow::bail!("injected device failure");
+        }
+        self.inner.grad(theta, batch)
+    }
+    fn eval(&self, theta: &[f32], batch: &pfl::runtime::Batch)
+            -> anyhow::Result<pfl::runtime::EvalOut> {
+        self.inner.eval(theta, batch)
+    }
+    fn make_train_batch(&self, shard: &pfl::data::Dataset,
+                        rng: &mut pfl::util::Rng) -> pfl::runtime::Batch {
+        self.inner.make_train_batch(shard, rng)
+    }
+    fn make_eval_batch(&self, data: &pfl::data::Dataset) -> pfl::runtime::Batch {
+        self.inner.make_eval_batch(data)
+    }
+}
+
+#[test]
+fn client_failure_surfaces_as_clean_error() {
+    let be = Arc::new(FlakyBackend {
+        inner: NativeLogreg::new(123, 0.01, 512, 1024),
+        budget: std::sync::atomic::AtomicUsize::new(40),
+    });
+    let env = logreg_fed_env(be, 4, 5);
+    let mut alg = L2gd::from_local_and_agg(0.3, 0.3, 0.4, 4,
+                                           "identity", "identity").unwrap();
+    let res = alg.run(&env, 500, 100);
+    let err = res.expect_err("injected failure must propagate");
+    assert!(format!("{err:#}").contains("injected device failure"));
+}

@@ -1,0 +1,147 @@
+//! Runtime integration: the AOT HLO path vs the native oracle, and basic
+//! execution of every artifact in the manifest.
+
+mod common;
+
+use common::{runtime_or_skip, ARTIFACTS};
+use pfl::data::{synth, Batcher};
+use pfl::runtime::{Backend, Batch, NativeLogreg};
+use pfl::util::Rng;
+
+/// The core cross-layer correctness check: the L1 Pallas kernel (lowered
+/// through L2 → HLO → PJRT) must agree with the pure-Rust implementation
+/// of the same math to float tolerance.
+#[test]
+fn xla_logreg_grad_matches_native_oracle() {
+    let Some(rt) = runtime_or_skip(&["logreg123"]) else { return };
+    let xla = rt.backend("logreg123").unwrap();
+    let native = NativeLogreg::new(123, 0.01, 512, 2048);
+
+    let data = synth::logistic(321, 123, 0.05, 7);
+    let (x, y, sw) = Batcher::new(&data).full_weighted(512);
+    let batch = Batch::Weighted { x, y, sw };
+
+    let mut rng = Rng::new(0);
+    let mut theta: Vec<f32> = (0..123).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+
+    for _ in 0..3 {
+        let gx = xla.grad(&theta, &batch).unwrap();
+        let gn = native.grad(&theta, &batch).unwrap();
+        assert!((gx.loss - gn.loss).abs() < 1e-4 * gn.loss.abs().max(1.0),
+                "loss: xla {} vs native {}", gx.loss, gn.loss);
+        assert_eq!(gx.correct, gn.correct, "correct count");
+        let mut max_err = 0.0f32;
+        for (a, b) in gx.grad.iter().zip(&gn.grad) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(max_err < 5e-5, "grad max err {max_err}");
+        // descend a little and compare again at a new point
+        for (t, g) in theta.iter_mut().zip(&gn.grad) {
+            *t -= 0.5 * g;
+        }
+    }
+}
+
+#[test]
+fn xla_eval_matches_native_oracle() {
+    let Some(rt) = runtime_or_skip(&["logreg123"]) else { return };
+    let xla = rt.backend("logreg123").unwrap();
+    let native = NativeLogreg::new(123, 0.01, 512, 2048);
+    let data = synth::logistic(700, 123, 0.05, 9);
+    let bx = xla.make_eval_batch(&data);
+    let bn = native.make_eval_batch(&data);
+    let mut rng = Rng::new(1);
+    let theta: Vec<f32> = (0..123).map(|_| rng.normal_f32(0.0, 0.2)).collect();
+    let ex = xla.eval(&theta, &bx).unwrap();
+    let en = native.eval(&theta, &bn).unwrap();
+    assert!((ex.loss - en.loss).abs() < 1e-4, "{} vs {}", ex.loss, en.loss);
+    assert!((ex.accuracy - en.accuracy).abs() < 1e-6);
+}
+
+/// Every model in the manifest must execute grad + eval with finite output
+/// and a several-GD-step loss decrease on a fixed batch.
+#[test]
+fn all_artifacts_execute_and_learn_on_fixed_batch() {
+    let Some(rt) = runtime_or_skip(
+        &["logreg123", "mlp_synth", "resnet_tiny", "densenet_tiny",
+          "mobilenet_tiny", "transformer_tiny"]) else { return };
+    for name in rt.model_names() {
+        let be = rt.backend(&name).unwrap();
+        let meta = be.meta().clone();
+        let mut rng = Rng::new(42);
+        let shard = match meta.kind.as_str() {
+            "logreg" => synth::logistic(300, 123, 0.05, 1),
+            "lm" => synth::tokens(64, 32, 256, 0.9, 1),
+            "flat" => {
+                // mlp over flattened 64-dim vectors
+                let img = synth::images(128, 10, 8, 1, 2.0, 1);
+                pfl::data::Dataset::new(img.features.clone(), vec![64],
+                                        img.labels.clone(), 10)
+            }
+            _ => synth::images(128, 10, 16, 3, 2.0, 1),
+        };
+        let batch = be.make_train_batch(&shard, &mut rng);
+        let mut theta = be.init_params();
+        let g0 = be.grad(&theta, &batch).unwrap();
+        assert!(g0.loss.is_finite(), "{name}: loss not finite");
+        assert!(g0.grad.iter().all(|v| v.is_finite()), "{name}: grad not finite");
+        assert_eq!(g0.grad.len(), meta.param_count, "{name}");
+        // a few GD steps on the same batch must reduce the loss
+        let lr = 0.05f32;
+        let mut g = g0.clone();
+        for _ in 0..5 {
+            pfl::model::axpy(&mut theta, -lr, &g.grad);
+            g = be.grad(&theta, &batch).unwrap();
+        }
+        assert!(g.loss < g0.loss, "{name}: {} !< {}", g.loss, g0.loss);
+    }
+}
+
+#[test]
+fn runtime_rejects_wrong_shapes_and_unknown_models() {
+    let Some(rt) = runtime_or_skip(&["logreg123"]) else { return };
+    assert!(rt.backend("nope").is_err());
+    let be = rt.backend("logreg123").unwrap();
+    let bad_theta = vec![0.0f32; 7];
+    let batch = Batch::Weighted {
+        x: vec![0.0; 512 * 123],
+        y: vec![1.0; 512],
+        sw: vec![1.0; 512],
+    };
+    assert!(be.grad(&bad_theta, &batch).is_err());
+    let bad_batch = Batch::Weighted { x: vec![0.0; 10], y: vec![1.0; 512], sw: vec![1.0; 512] };
+    assert!(be.grad(&vec![0.0f32; 123], &bad_batch).is_err());
+}
+
+#[test]
+fn init_params_match_manifest_bin() {
+    let Some(rt) = runtime_or_skip(&["resnet_tiny"]) else { return };
+    let be = rt.backend("resnet_tiny").unwrap();
+    let init = be.init_params();
+    assert_eq!(init.len(), be.meta().param_count);
+    let raw = std::fs::read(format!("{ARTIFACTS}/resnet_tiny.init.bin")).unwrap();
+    let expect: Vec<f32> = raw.chunks_exact(4)
+        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    assert_eq!(init, expect);
+}
+
+/// Concurrent grad calls through the pool must be safe and deterministic
+/// (the executable is mutex-guarded; results must not interleave).
+#[test]
+fn concurrent_execution_is_consistent() {
+    let Some(rt) = runtime_or_skip(&["logreg123"]) else { return };
+    let be = std::sync::Arc::new(rt.backend("logreg123").unwrap());
+    let data = synth::logistic(300, 123, 0.05, 3);
+    let (x, y, sw) = Batcher::new(&data).full_weighted(512);
+    let batch = Batch::Weighted { x, y, sw };
+    let theta = vec![0.01f32; 123];
+    let serial = be.grad(&theta, &batch).unwrap();
+    let pool = pfl::util::threadpool::ThreadPool::new(8);
+    let items = vec![(); 16];
+    let outs = pool.scope_map(&items, |_, _| be.grad(&theta, &batch).unwrap());
+    for o in outs {
+        assert_eq!(o.loss, serial.loss);
+        assert_eq!(o.grad, serial.grad);
+    }
+}
