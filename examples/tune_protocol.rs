@@ -5,6 +5,7 @@
 //!     cargo run --release --example tune_protocol
 
 use pfl::algorithms::{FedAlgorithm, L2gd};
+use pfl::compress::Compressor;
 use pfl::coordinator::{logreg_env, LogregEnvCfg};
 use pfl::theory::{logreg_smoothness, Consts};
 

@@ -1,48 +1,116 @@
 //! Perf bench: compressor encode / decode / fused decode-add throughput
 //! (the §Perf L3 hot path — every communication round runs these once per
-//! client over a P-sized vector).
+//! client over a P-sized vector), now covering pipeline chains and the
+//! error-feedback wrapper.
+//!
+//! A counting global allocator additionally *asserts* the zero-alloc claim:
+//! after warmup, `compress_into` into a reused buffer and `decode_add` must
+//! not touch the allocator at all (scratch pools + buffer reuse).
 //!
 //!     cargo bench --bench perf_compressors
 
 #[path = "harness/mod.rs"]
 mod harness;
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use harness::bench;
-use pfl::compress::from_spec;
-use pfl::util::Rng;
+use pfl::compress::{from_spec, Compressed, Compressor, CompressorState};
+
+/// System allocator with a global allocation counter.
+struct Counting;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for Counting {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTING: Counting = Counting;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
 
 fn main() {
     let specs = ["identity", "natural", "qsgd:15", "terngrad",
-                 "bernoulli:0.1", "randk:5000", "topk:5000"];
+                 "bernoulli:0.1", "randk:5000", "topk:5000",
+                 // the chained wire path + the stateful wrapper
+                 "randk:5000>qsgd:8", "bernoulli:0.1>natural",
+                 "topk:5000>natural", "ef(topk:5000)", "ef(randk:5000>qsgd:8)"];
+    let mut zero_alloc_failures = Vec::new();
     for &d in &[10_000usize, 100_000, 1_000_000] {
         harness::header(&format!("compressor throughput, d = {d} (f32 = {} KiB)",
                                  d * 4 / 1024));
-        let mut rng = Rng::new(1);
+        let mut rng = pfl::util::Rng::new(1);
         let x: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
         let bytes = d * 4;
-        println!("  {:<15} {:>22} {:>10} {:>22} {:>10} {:>22}",
-                 "codec", "encode", "GB/s", "decode", "GB/s", "decode_add");
+        println!("  {:<22} {:>22} {:>8} {:>22} {:>22} {:>12}",
+                 "codec", "encode", "GB/s", "decode", "decode_add", "allocs/call");
         for spec in specs {
-            let c = from_spec(spec).unwrap();
+            let comp = from_spec(spec).unwrap();
+            let mut state = comp.instantiate(d, 2);
+            let mut buf = Compressed::empty();
             let iters = if d >= 1_000_000 { 10 } else { 40 };
-            let mut rng2 = Rng::new(2);
             let enc = bench(2, iters, || {
-                std::hint::black_box(c.compress(&x, &mut rng2));
+                state.compress_into(&x, &mut buf).unwrap();
+                std::hint::black_box(&buf);
             });
-            let compressed = c.compress(&x, &mut Rng::new(3));
             let mut out = vec![0.0f32; d];
             let dec = bench(2, iters, || {
-                compressed.decode_into(&mut out);
+                buf.decode_into(&mut out);
                 std::hint::black_box(&out);
             });
             let mut acc = vec![0.0f32; d];
             let dad = bench(2, iters, || {
-                compressed.decode_add(&mut acc, 0.1);
+                buf.decode_add(&mut acc, 0.1);
                 std::hint::black_box(&acc);
             });
-            println!("  {:<15} {:>22} {:>10.2} {:>22} {:>10.2} {:>22}",
-                     c.name(), enc.human(), enc.gbps(bytes), dec.human(),
-                     dec.gbps(bytes), dad.human());
+            // zero-alloc assertion: steady-state compress_into + decode_add
+            // must not touch the allocator (buffer reuse + scratch pools).
+            // Extra warm passes first: payload sizes of the stochastic
+            // codecs jitter a little, so let capacities settle.
+            for _ in 0..32 {
+                state.compress_into(&x, &mut buf).unwrap();
+            }
+            let check_iters = 16u64;
+            let before = allocs();
+            for _ in 0..check_iters {
+                state.compress_into(&x, &mut buf).unwrap();
+                buf.decode_add(&mut acc, 0.1);
+            }
+            let per_call = (allocs() - before) as f64 / check_iters as f64;
+            if per_call > 0.0 {
+                zero_alloc_failures.push(format!("{spec} @ d={d}: {per_call:.1}"));
+            }
+            println!("  {:<22} {:>22} {:>8.2} {:>22} {:>22} {:>12.1}",
+                     comp.name(), enc.human(), enc.gbps(bytes), dec.human(),
+                     dad.human(), per_call);
         }
     }
+    assert!(
+        zero_alloc_failures.is_empty(),
+        "wire hot path allocated per call: {zero_alloc_failures:?}"
+    );
+    println!("\nzero-alloc check: OK (steady-state compress_into + decode_add \
+              perform no heap allocation)");
 }

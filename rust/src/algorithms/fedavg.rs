@@ -10,14 +10,22 @@
 //!   (ii) it uplinks C(g_computed − g^{r−1}_i),
 //!   (iii) both ends update g^r_i = g^{r−1}_i + C(g_computed − g^{r−1}_i).
 //! The master then applies w ← w − Σ_i ω_i g^r_i (ω_i = |D_i| weights).
-//! With the identity compressor this is exact FedAvg.
+//! With the identity compressor this is exact FedAvg. (This difference
+//! schema is itself a form of error feedback; an explicit `ef(...)` uplink
+//! spec stacks a second residual on top — usually redundant here, but the
+//! pipeline grammar allows it.)
+//!
+//! Compression plumbing mirrors L2GD: shared descriptors, one stateful
+//! instance + reusable wire buffer per client, no RNG mutex on the wire
+//! path and no steady-state allocation.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use super::{client_rngs, evaluate, FedAlgorithm, FedEnv};
-use crate::compress::Compressor;
+use crate::compress::{Compressed, Compressor, CompressorState};
 use crate::metrics::Series;
 use crate::model::{axpy, weighted_mean};
+use crate::runtime::Backend as _;
 use crate::transport::Network;
 
 pub struct FedAvg {
@@ -25,10 +33,12 @@ pub struct FedAvg {
     /// SGD steps per round. The paper uses 1 local epoch; our harness maps
     /// epochs to ⌈|D_i|/B⌉ steps via `steps_for_epoch`.
     pub local_steps: usize,
-    /// client → master compressor (difference compression w/ memory)
-    pub up_comp: Box<dyn Compressor>,
-    /// master → clients compressor (the paper's baseline keeps this identity)
-    pub down_comp: Box<dyn Compressor>,
+    /// client → master compression descriptor (difference compression
+    /// w/ memory)
+    pub up_comp: Arc<dyn Compressor>,
+    /// master → clients descriptor (the paper's baseline keeps this
+    /// identity)
+    pub down_comp: Arc<dyn Compressor>,
     pub tag: String,
 }
 
@@ -67,7 +77,17 @@ impl FedAlgorithm for FedAvg {
         let mut net = Network::new(n);
         let rngs: Vec<Mutex<crate::util::Rng>> =
             client_rngs(env.seed ^ 0xFEDA, n).into_iter().map(Mutex::new).collect();
-        let mut master_rng = crate::util::Rng::new(env.seed ^ 0xFEDB);
+
+        // per-client uplink compression state + reusable wire buffer
+        let mut seeder = crate::util::Rng::new(env.seed ^ 0xFEDB);
+        let mut uplinks: Vec<(Box<dyn CompressorState>, Compressed)> = (0..n)
+            .map(|_| (self.up_comp.instantiate(d, seeder.next_u64()),
+                      Compressed::empty()))
+            .collect();
+        let mut down_state = self.down_comp.instantiate(d, env.seed ^ 0xFEDC);
+        let mut down_buf = Compressed::empty();
+        let mut w_received = vec![0.0f32; d];
+        let mut diff = vec![0.0f32; d];
 
         let mut series = Series::new(self.label());
         series.records.push(evaluate(env, &vec![w.clone(); n], 0, &net)?);
@@ -75,15 +95,16 @@ impl FedAlgorithm for FedAvg {
         for r in 1..=rounds {
             net.begin_round();
             // downlink: broadcast the (compressed) global model
-            let cw = self.down_comp.compress(&w, &mut master_rng);
-            net.downlink_broadcast(r, cw.bits);
-            let w_received = cw.decode();
+            down_state.compress_into(&w, &mut down_buf)?;
+            net.downlink_broadcast(r, down_buf.bits);
+            down_buf.decode_into(&mut w_received);
 
             // local training (parallel over clients)
             let local_steps = self.local_steps;
+            let w_recv_ref = &w_received;
             let locals = env.pool.scope_map(&env.shards, |i, shard| {
                 let mut rng = rngs[i].lock().unwrap();
-                let mut wi = w_received.clone();
+                let mut wi = w_recv_ref.clone();
                 for _ in 0..local_steps {
                     let batch = env.backend.make_train_batch(shard, &mut rng);
                     match env.backend.grad(&wi, &batch) {
@@ -98,15 +119,13 @@ impl FedAlgorithm for FedAvg {
             for (i, wi) in locals.into_iter().enumerate() {
                 let wi = wi?;
                 // g_computed = w_received − w_i (descent direction)
-                let mut diff = vec![0.0f32; d];
                 for j in 0..d {
                     diff[j] = (w_received[j] - wi[j]) - g_mem[i][j];
                 }
-                let mut rng = rngs[i].lock().unwrap();
-                let c = self.up_comp.compress(&diff, &mut rng);
-                drop(rng);
-                net.uplink(r, i, c.bits);
-                c.decode_add(&mut g_mem[i], 1.0); // g_i += C(diff), both ends
+                let (state, buf) = &mut uplinks[i];
+                state.compress_into(&diff, buf)?;
+                net.uplink(r, i, buf.bits);
+                buf.decode_add(&mut g_mem[i], 1.0); // g_i += C(diff), both ends
             }
             net.end_round();
 
@@ -193,6 +212,20 @@ mod tests {
         assert_eq!(s.records.len(), 3);
         // sanity: loss finite and decreasing-ish
         assert!(s.records[2].train_loss.is_finite());
+    }
+
+    #[test]
+    fn pipeline_uplink_spec_runs_and_saves_bits() {
+        // top-k survivors quantized by natural: biased, but the difference
+        // schema's memory compensates — and the wire is tiny
+        let e = env(4, 4);
+        let mut alg = FedAvg::new(0.5, 3, "topk:4>natural", "identity").unwrap();
+        let s = alg.run(&e, 60, 20).unwrap();
+        let last = s.records.last().unwrap();
+        assert!(last.test_acc > 0.7, "acc {}", last.test_acc);
+        // 4 indices (4 bits each at d=12) + 4 survivors (9 bits) per client
+        let per_client_round = last.bits_up / (4 * last.comm_rounds);
+        assert_eq!(per_client_round, 4 * 4 + 4 * 9);
     }
 
     #[test]

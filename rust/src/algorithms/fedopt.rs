@@ -8,6 +8,7 @@ use std::sync::Mutex;
 use super::{client_rngs, evaluate, FedAlgorithm, FedEnv};
 use crate::metrics::Series;
 use crate::model::{axpy, weighted_mean};
+use crate::runtime::Backend as _;
 use crate::transport::Network;
 
 pub struct FedOpt {

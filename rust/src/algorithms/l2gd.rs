@@ -18,14 +18,22 @@
 //! `eta_lambda_np = ηλ/(np)` is the aggregation step size; the paper's
 //! sweet spots are (0, 0.17] and ≈ 1 (§VII-B), and exactly 1 recovers
 //! FedAvg with a random number of local steps (Figs 7–8).
+//!
+//! Compression plumbing: `client_comp`/`master_comp` are shareable
+//! descriptors ([`Compressor`]); `run` instantiates one stateful
+//! [`CompressorState`] per client (own RNG stream, error-feedback residual
+//! if the spec asks for one) plus a reusable wire buffer, so the
+//! communication hot path performs no steady-state allocation and needs no
+//! RNG mutexes.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use super::{client_rngs, evaluate, FedAlgorithm, FedEnv};
-use crate::compress::Compressor;
+use crate::compress::{Compressed, Compressor, CompressorState};
 use crate::metrics::Series;
 use crate::model::aggregation_step;
 use crate::protocol::{Coin, StepKind};
+use crate::runtime::Backend as _;
 use crate::transport::Network;
 
 pub struct L2gd {
@@ -35,21 +43,21 @@ pub struct L2gd {
     pub lambda: f64,
     /// stepsize η (Theorem 1 requires η ≤ 1/(2γ))
     pub eta: f64,
-    /// client-side compressors C_i (one per device; usually identical spec)
-    pub client_comp: Vec<Box<dyn Compressor>>,
-    /// master-side compressor C_M
-    pub master_comp: Box<dyn Compressor>,
+    /// client-side compression descriptor C_i (each client gets its own
+    /// stateful instance at run time)
+    pub client_comp: Arc<dyn Compressor>,
+    /// master-side compression descriptor C_M
+    pub master_comp: Arc<dyn Compressor>,
     /// label suffix for the metric series
     pub tag: String,
 }
 
 impl L2gd {
-    /// Uniform client compressor.
-    pub fn new(p: f64, lambda: f64, eta: f64, n: usize,
+    /// Uniform client compressor from spec strings (`n` clients share one
+    /// descriptor; states are instantiated per client inside `run`).
+    pub fn new(p: f64, lambda: f64, eta: f64, _n: usize,
                client_spec: &str, master_spec: &str) -> anyhow::Result<L2gd> {
-        let client_comp = (0..n)
-            .map(|_| crate::compress::from_spec(client_spec))
-            .collect::<anyhow::Result<Vec<_>>>()?;
+        let client_comp = crate::compress::from_spec(client_spec)?;
         let master_comp = crate::compress::from_spec(master_spec)?;
         Ok(L2gd {
             p,
@@ -92,7 +100,6 @@ impl FedAlgorithm for L2gd {
 
     fn run(&mut self, env: &FedEnv, steps: u64, eval_every: u64) -> anyhow::Result<Series> {
         let n = env.n_clients();
-        anyhow::ensure!(self.client_comp.len() == n, "need one C_i per client");
         anyhow::ensure!(self.p > 0.0 || self.lambda == 0.0,
                         "p = 0 only valid for λ = 0 (pure local training)");
         let d = env.backend.param_count();
@@ -111,9 +118,19 @@ impl FedAlgorithm for L2gd {
         let mut anchor = init;
         let mut coin = Coin::new(self.p, env.seed ^ 0xC011); // coin stream
         let mut net = Network::new(n);
+        // batch-sampling streams (shared with the gradient fan-out)
         let rngs: Vec<Mutex<crate::util::Rng>> =
             client_rngs(env.seed, n).into_iter().map(Mutex::new).collect();
-        let mut master_rng = crate::util::Rng::new(env.seed ^ 0x3a57e5);
+        // per-client compression state + reusable wire buffer: own RNG
+        // streams, no mutex, no allocation after the first round
+        let mut seeder = crate::util::Rng::new(env.seed ^ 0xC09B);
+        let mut uplinks: Vec<(Box<dyn CompressorState>, Compressed)> = (0..n)
+            .map(|_| (self.client_comp.instantiate(d, seeder.next_u64()),
+                      Compressed::empty()))
+            .collect();
+        let mut master_state = self.master_comp.instantiate(d, env.seed ^ 0x3a57e5);
+        let mut master_buf = Compressed::empty();
+        let mut ybar = vec![0.0f32; d];
 
         let mut series = Series::new(self.label());
         series.records.push(evaluate(env, &xs, 0, &net)?);
@@ -134,22 +151,26 @@ impl FedAlgorithm for L2gd {
                 }
                 StepKind::AggregateFresh => {
                     net.begin_round();
-                    // uplink: compress each local model (parallel)
-                    let compressed = env.pool.scope_map(&xs, |i, x| {
-                        let mut rng = rngs[i].lock().unwrap();
-                        self.client_comp[i].compress(x, &mut rng)
+                    // uplink: compress each local model into its reusable
+                    // buffer (parallel, per-client mutable state)
+                    let results = env.pool.scope_zip_mut(&mut uplinks, &xs,
+                                                         |_i, (state, buf), x| {
+                        state.compress_into(x, buf)
                     });
+                    for res in results {
+                        res?;
+                    }
                     // master: ȳ = (1/n) Σ C_i(x_i), fused decode-accumulate
-                    let mut ybar = vec![0.0f32; d];
+                    ybar.fill(0.0);
                     let inv_n = 1.0 / n as f32;
-                    for (i, c) in compressed.iter().enumerate() {
+                    for (i, (_, c)) in uplinks.iter().enumerate() {
                         net.uplink(k, i, c.bits);
                         c.decode_add(&mut ybar, inv_n);
                     }
                     // downlink: broadcast C_M(ȳ)
-                    let cm = self.master_comp.compress(&ybar, &mut master_rng);
-                    net.downlink_broadcast(k, cm.bits);
-                    cm.decode_into(&mut anchor);
+                    master_state.compress_into(&ybar, &mut master_buf)?;
+                    net.downlink_broadcast(k, master_buf.bits);
+                    master_buf.decode_into(&mut anchor);
                     net.end_round();
                     for x in xs.iter_mut() {
                         aggregation_step(x, agg_coef, &anchor);
@@ -271,6 +292,36 @@ mod tests {
             assert_eq!(ra.train_loss, rb.train_loss);
             assert_eq!(ra.bits_up, rb.bits_up);
         }
+    }
+
+    #[test]
+    fn pipeline_and_ef_specs_run_end_to_end() {
+        // the ISSUE's flagship spec: error feedback around a
+        // sparsify-then-quantize chain, against a natural master
+        let e = env(4, 6);
+        let mut alg = L2gd::from_local_and_agg(0.4, 0.4, 0.5, 4,
+                                               "ef(randk:10>qsgd:8)", "natural")
+            .unwrap();
+        let s = alg.run(&e, 120, 40).unwrap();
+        let last = s.records.last().unwrap();
+        assert!(last.comm_rounds > 0);
+        assert!(last.bits_up > 0);
+        assert!(last.personal_loss < s.records[0].personal_loss,
+                "loss {} -> {}", s.records[0].personal_loss, last.personal_loss);
+        // uplink is seed + 10 quantized survivors ≪ identity's 32·16 bits
+        let up_per_client_round = last.bits_up as f64 / (4 * last.comm_rounds) as f64;
+        assert!(up_per_client_round < 32.0 * 16.0 * 0.8,
+                "bits/client/round = {up_per_client_round}");
+    }
+
+    #[test]
+    fn oversized_sparsifier_fails_at_compress_time() {
+        // d = 16 here, so randk:500 must surface a clean error from run()
+        let e = env(3, 7);
+        let mut alg = L2gd::from_local_and_agg(0.5, 0.3, 0.5, 3,
+                                               "randk:500", "identity").unwrap();
+        let err = alg.run(&e, 100, 100).expect_err("k > d must error");
+        assert!(format!("{err:#}").contains("exceeds the dimension"), "{err:#}");
     }
 
     #[test]

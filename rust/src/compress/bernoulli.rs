@@ -1,81 +1,135 @@
 //! Bernoulli sparsifier (Khirirat et al. 2018): keep each coordinate with
 //! probability q, rescaled by 1/q. Unbiased with ω = (1 − q)/q.
 //!
-//! Wire format: 64-bit mask seed + 32-bit kept-count + raw f32 values of the
-//! kept coordinates. The receiver regenerates the Bernoulli mask from the
-//! seed (both ends share the RNG), so mask bits cost 64 on the wire instead
-//! of d — expected size 64 + 32 + 32·q·d bits.
+//! Wire format: 64-bit mask seed + 32-bit kept-count + the kept values.
+//! The receiver regenerates the Bernoulli mask from the seed (both ends
+//! share the RNG), so mask bits cost 64 on the wire instead of d. Standalone
+//! the kept values are raw f32 (expected size 64 + 32 + 32·q·d bits); in a
+//! pipeline (`bernoulli:0.2>natural`) the survivor vector is handed to the
+//! inner codec instead.
 
-use super::{Codec, Compressed, Compressor};
+use std::sync::Arc;
+
+use super::registry::Registry;
+use super::{compose_omega, scratch, Codec};
 use crate::util::{BitReader, BitWriter, Rng};
 
 pub struct Bernoulli {
     q: f32,
+    /// survivor codec for pipeline specs; `None` = raw f32 (legacy wire)
+    inner: Option<Arc<dyn Codec>>,
 }
 
 impl Bernoulli {
     pub fn new(q: f32) -> Bernoulli {
+        Self::chained(q, None)
+    }
+
+    pub fn chained(q: f32, inner: Option<Arc<dyn Codec>>) -> Bernoulli {
         assert!(q > 0.0 && q <= 1.0);
-        Bernoulli { q }
+        Bernoulli { q, inner }
     }
 }
 
-impl Compressor for Bernoulli {
+impl Codec for Bernoulli {
     fn name(&self) -> String {
-        format!("bernoulli:{}", self.q)
+        match &self.inner {
+            None => format!("bernoulli:{}", self.q),
+            Some(i) => format!("bernoulli:{}>{}", self.q, i.name()),
+        }
     }
 
-    fn omega(&self, _dim: usize) -> Option<f64> {
-        Some((1.0 - self.q as f64) / self.q as f64)
+    fn omega(&self, dim: usize) -> Option<f64> {
+        let sel = (1.0 - self.q as f64) / self.q as f64;
+        match &self.inner {
+            None => Some(sel),
+            // the survivor count is random (≤ dim); evaluating the inner ω
+            // at dim is a sound upper bound for the dimension-monotone
+            // operators in the registry
+            Some(i) => compose_omega(Some(sel), i.omega(dim)),
+        }
     }
 
-    fn compress(&self, x: &[f32], rng: &mut Rng) -> Compressed {
+    fn encode_into(&self, x: &[f32], w: &mut BitWriter, rng: &mut Rng)
+                   -> anyhow::Result<()> {
         let mask_seed = rng.next_u64();
         let mut mask_rng = Rng::new(mask_seed);
-        let mut w = BitWriter::with_capacity(8 + 4 + (x.len() as f32 * self.q) as usize * 4);
-        w.put(mask_seed & 0x1FF_FFFF_FFFF_FFFF, 57 - 4); // low 53 bits
-        w.put(mask_seed >> 53, 11); // high 11 bits (57-bit put limit)
-        let mut kept_vals = Vec::new();
-        for &v in x {
-            if mask_rng.f32() < self.q {
-                kept_vals.push(v);
+        w.put(mask_seed, 53); // low 53 bits (57-bit put limit)
+        w.put(mask_seed >> 53, 11); // high 11 bits
+        scratch::with_f32(|kept| {
+            // reserve the d-bound up front: the kept count varies per call,
+            // so amortized growth would otherwise allocate sporadically —
+            // this keeps the steady-state wire path allocation-free
+            kept.reserve(x.len());
+            for &v in x {
+                if mask_rng.f32() < self.q {
+                    kept.push(v);
+                }
             }
+            w.put_u32(kept.len() as u32);
+            match &self.inner {
+                None => {
+                    for &v in kept.iter() {
+                        w.put_f32(v);
+                    }
+                    Ok(())
+                }
+                Some(inner) => inner.encode_into(kept, w, rng),
+            }
+        })
+    }
+
+    fn decode_into(&self, r: &mut BitReader, out: &mut [f32]) {
+        out.fill(0.0);
+        self.decode_add(r, out, 1.0);
+    }
+
+    fn decode_add(&self, r: &mut BitReader, acc: &mut [f32], scale: f32) {
+        let seed = r.get(53) | (r.get(11) << 53);
+        let mut mask_rng = Rng::new(seed);
+        let count = r.get_u32() as usize;
+        let inv_q = scale / self.q;
+        match &self.inner {
+            None => {
+                let mut seen = 0usize;
+                for a in acc.iter_mut() {
+                    if mask_rng.f32() < self.q {
+                        debug_assert!(seen < count);
+                        seen += 1;
+                        *a += inv_q * r.get_f32();
+                    }
+                }
+                debug_assert_eq!(seen, count);
+            }
+            Some(inner) => scratch::with_f32(|vals| {
+                vals.reserve(acc.len()); // d-bound, see encode_into
+                vals.resize(count, 0.0);
+                inner.decode_into(r, vals);
+                let mut j = 0usize;
+                for a in acc.iter_mut() {
+                    if mask_rng.f32() < self.q {
+                        *a += inv_q * vals[j];
+                        j += 1;
+                    }
+                }
+                debug_assert_eq!(j, count);
+            }),
         }
-        w.put_u32(kept_vals.len() as u32);
-        for v in kept_vals {
-            w.put_f32(v);
-        }
-        let bits = w.bit_len();
-        Compressed::new(w.finish(), bits, x.len(), Codec::Bernoulli { q: self.q })
     }
 }
 
-fn read_seed(r: &mut BitReader) -> u64 {
-    let low = r.get(53);
-    let high = r.get(11);
-    low | (high << 53)
-}
-
-pub(super) fn decode(payload: &[u8], q: f32, out: &mut [f32]) {
-    out.fill(0.0);
-    decode_add(payload, q, out, 1.0);
-}
-
-pub(super) fn decode_add(payload: &[u8], q: f32, acc: &mut [f32], scale: f32) {
-    let mut r = BitReader::new(payload);
-    let seed = read_seed(&mut r);
-    let mut mask_rng = Rng::new(seed);
-    let count = r.get_u32() as usize;
-    let inv_q = scale / q;
-    let mut seen = 0usize;
-    for a in acc.iter_mut() {
-        if mask_rng.f32() < q {
-            debug_assert!(seen < count);
-            seen += 1;
-            *a += inv_q * r.get_f32();
-        }
-    }
-    debug_assert_eq!(seen, count);
+pub(super) fn register(r: &mut Registry) {
+    r.add("bernoulli", "bernoulli:<prob> (keep w.p. q, rescale 1/q, ω = (1−q)/q)",
+          "bernoulli:0.25",
+          Box::new(|arg, inner| {
+              let arg = arg.ok_or_else(|| {
+                  anyhow::anyhow!("bernoulli requires `:prob` (e.g. bernoulli:0.25)")
+              })?;
+              let q: f32 = arg.parse()
+                  .map_err(|e| anyhow::anyhow!("bernoulli prob `{arg}`: {e}"))?;
+              anyhow::ensure!(q > 0.0 && q <= 1.0, "bernoulli prob must be in (0,1]");
+              Ok(Arc::new(Bernoulli::chained(q, inner)))
+          }));
 }
 
 #[cfg(test)]
@@ -86,8 +140,7 @@ mod tests {
     #[test]
     fn kept_coordinates_are_scaled_by_inv_q() {
         let x = testutil::test_vector(400, 1);
-        let b = Bernoulli::new(0.25);
-        let y = b.apply(&x, &mut Rng::new(2));
+        let y = Bernoulli::new(0.25).apply(&x, &mut Rng::new(2)).unwrap();
         let mut kept = 0;
         for (xi, yi) in x.iter().zip(&y) {
             if *yi != 0.0 {
@@ -102,7 +155,7 @@ mod tests {
     #[test]
     fn wire_size_tracks_kept_count() {
         let x = testutil::test_vector(1000, 3);
-        let c = Bernoulli::new(0.1).compress(&x, &mut Rng::new(4));
+        let c = testutil::compress("bernoulli:0.1", &x, 4);
         let kept = (c.bits - 64 - 32) / 32;
         assert!((40..220).contains(&kept), "kept = {kept}");
         assert!(c.bits < 32 * 1000 / 2, "bits = {}", c.bits);
@@ -117,7 +170,7 @@ mod tests {
     #[test]
     fn q_one_is_identity() {
         let x = testutil::test_vector(100, 7);
-        let y = Bernoulli::new(1.0).apply(&x, &mut Rng::new(8));
+        let y = Bernoulli::new(1.0).apply(&x, &mut Rng::new(8)).unwrap();
         for (a, b) in x.iter().zip(&y) {
             assert!((a - b).abs() < 1e-6);
         }
@@ -132,12 +185,29 @@ mod tests {
     #[test]
     fn decode_add_matches_decode() {
         let x = testutil::test_vector(150, 9);
-        let c = Bernoulli::new(0.5).compress(&x, &mut Rng::new(10));
+        let c = testutil::compress("bernoulli:0.5", &x, 10);
         let y = c.decode();
         let mut acc = vec![2.0f32; 150];
         c.decode_add(&mut acc, 0.25);
         for i in 0..150 {
             assert!((acc[i] - (2.0 + 0.25 * y[i])).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn chained_survivors_use_inner_codec() {
+        // bernoulli:0.2>natural: survivors cost 9 bits instead of 32
+        let x = testutil::test_vector(1000, 11);
+        let raw = testutil::compress("bernoulli:0.2", &x, 12);
+        let chained = testutil::compress("bernoulli:0.2>natural", &x, 12);
+        // same mask seed (same rng stream) ⇒ same kept count
+        let kept = (raw.bits - 64 - 32) / 32;
+        assert_eq!(chained.bits, 64 + 32 + 9 * kept);
+        // every decoded survivor is (1/q)·power-of-two
+        let y = chained.decode();
+        for v in y.iter().filter(|v| **v != 0.0) {
+            let m = (v.abs() * 0.2).log2();
+            assert!((m - m.round()).abs() < 1e-3, "{v}");
         }
     }
 }

@@ -3,12 +3,15 @@
 //! The no-compression baseline every experiment compares against; its
 //! 32·d wire bits are exactly what FedAvg/FedOpt send per vector.
 
-use super::{Codec, Compressed, Compressor};
-use crate::util::Rng;
+use std::sync::Arc;
+
+use super::registry::{dense_chain, Registry};
+use super::Codec;
+use crate::util::{BitReader, BitWriter, Rng};
 
 pub struct Identity;
 
-impl Compressor for Identity {
+impl Codec for Identity {
     fn name(&self) -> String {
         "identity".into()
     }
@@ -17,36 +20,43 @@ impl Compressor for Identity {
         Some(0.0)
     }
 
-    fn compress(&self, x: &[f32], _rng: &mut Rng) -> Compressed {
-        let mut payload = Vec::with_capacity(x.len() * 4);
+    fn encode_into(&self, x: &[f32], w: &mut BitWriter, _rng: &mut Rng)
+                   -> anyhow::Result<()> {
         for &v in x {
-            payload.extend_from_slice(&v.to_le_bytes());
+            w.put_f32(v);
         }
-        Compressed::new(payload, 32 * x.len() as u64, x.len(), Codec::Identity)
+        Ok(())
+    }
+
+    fn decode_into(&self, r: &mut BitReader, out: &mut [f32]) {
+        for o in out.iter_mut() {
+            *o = r.get_f32();
+        }
+    }
+
+    fn decode_add(&self, r: &mut BitReader, acc: &mut [f32], scale: f32) {
+        for a in acc.iter_mut() {
+            *a += scale * r.get_f32();
+        }
     }
 }
 
-pub(super) fn decode(payload: &[u8], out: &mut [f32]) {
-    for (i, o) in out.iter_mut().enumerate() {
-        *o = f32::from_le_bytes(payload[4 * i..4 * i + 4].try_into().unwrap());
-    }
-}
-
-pub(super) fn decode_add(payload: &[u8], acc: &mut [f32], scale: f32) {
-    for (i, a) in acc.iter_mut().enumerate() {
-        *a += scale * f32::from_le_bytes(payload[4 * i..4 * i + 4].try_into().unwrap());
-    }
+pub(super) fn register(r: &mut Registry) {
+    r.add("identity", "identity (raw f32, ω = 0)", "identity",
+          Box::new(|_arg, inner| Ok(dense_chain(Arc::new(Identity), inner))));
+    r.add("none", "none (alias of identity)", "none",
+          Box::new(|_arg, inner| Ok(dense_chain(Arc::new(Identity), inner))));
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::{testutil, Compressor};
 
     #[test]
     fn exact_roundtrip() {
         let x = vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE, 1e30];
-        let mut rng = Rng::new(0);
-        let c = Identity.compress(&x, &mut rng);
+        let c = testutil::compress("identity", &x, 0);
         assert_eq!(c.bits, 160);
         assert_eq!(c.decode(), x);
     }
@@ -54,8 +64,7 @@ mod tests {
     #[test]
     fn decode_add_accumulates() {
         let x = vec![1.0f32, 2.0];
-        let mut rng = Rng::new(0);
-        let c = Identity.compress(&x, &mut rng);
+        let c = testutil::compress("identity", &x, 0);
         let mut acc = vec![10.0f32, 10.0];
         c.decode_add(&mut acc, 0.5);
         assert_eq!(acc, vec![10.5, 11.0]);
@@ -64,6 +73,6 @@ mod tests {
     #[test]
     fn omega_zero() {
         assert_eq!(Identity.omega(100), Some(0.0));
-        assert!(Identity.unbiased());
+        assert!(crate::compress::from_spec("identity").unwrap().unbiased());
     }
 }

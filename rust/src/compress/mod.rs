@@ -1,55 +1,163 @@
-//! Bidirectional communication compression (the paper's §IV).
+//! Bidirectional communication compression (the paper's §IV), organized as
+//! a **composable pipeline API**.
 //!
-//! Every operator from Table I is implemented with a *real bit-packed wire
-//! format* — `compress` produces the bytes that would cross the network and
-//! `Compressed::decode` reconstructs the vector — so the bits/n metric the
-//! paper reports is measured, not estimated.
+//! Three layers:
+//!
+//! * [`Codec`] — a stateless wire operator: `encode_into` writes the exact
+//!   bits that cross the network, `decode_into` / `decode_add` read them
+//!   back. Every operator from Table I implements it, and *pipelines are
+//!   codecs too*: `randk:50>qsgd:8` chains sparsification into quantization
+//!   of the survivors, with the composed variance factor
+//!   ω = (1+ω₁)(1+ω₂) − 1 for unbiased stages ([`compose_omega`]).
+//! * [`Compressor`] — a shareable descriptor produced by [`from_spec`].
+//!   `instantiate(dim, seed)` yields a per-client…
+//! * [`CompressorState`] — …stateful instance owning its RNG stream and any
+//!   cross-round memory. `compress_into` reuses the output buffers, so the
+//!   round-loop wire path performs no steady-state heap allocation.
+//!   Error feedback (`ef(<spec>)`, the paper's §VII-B memory mechanism) is
+//!   a stateful wrapper at this layer.
+//!
+//! Operators live in an **open registry** ([`register_codec`]): spec
+//! parsing, [`paper_suite`] and the Table-I harness are table-driven, so a
+//! new operator plugs in without touching this module.
 //!
 //! Unbiased operators satisfy Assumption 1: `E[C(x)] = x` and
 //! `E‖C(x) − x‖² ≤ ω‖x‖²`; `omega(d)` returns the constant the theory
-//! module (§V–§VI) consumes. Top-k is biased (kept as the paper's
-//! proof-of-concept; `omega` returns `None`).
+//! module (§V–§VI) consumes. Biased operators (Top-k, `ef(...)`) return
+//! `None` and the theory layer refuses them.
 
 pub mod bernoulli;
+pub mod ef;
 pub mod identity;
 pub mod natural;
+pub mod pipeline;
 pub mod qsgd;
 pub mod randk;
+pub mod registry;
+mod scratch;
 pub mod terngrad;
 pub mod topk;
 
-use crate::util::Rng;
+use std::sync::Arc;
+
+use crate::util::{BitReader, BitWriter, Rng};
 
 pub use bernoulli::Bernoulli;
+pub use ef::ErrorFeedback;
 pub use identity::Identity;
 pub use natural::Natural;
+pub use pipeline::{DenseStage, Pipeline};
 pub use qsgd::Qsgd;
 pub use randk::RandK;
+pub use registry::{codec_from_spec, register_codec, registered_names};
 pub use terngrad::TernGrad;
 pub use topk::TopK;
 
-/// A compressed vector: exact wire bits + everything needed to decode.
-#[derive(Clone, Debug)]
+/// A wire operator C : R^d → R^d with a self-describing bit format.
+///
+/// `encode_into`/`decode_into` stream through caller-provided bit I/O so
+/// operators nest: a selector (rand-k, top-k, Bernoulli) writes its
+/// structure and hands the survivor values to an inner codec in the same
+/// bitstream. Implementations must read exactly the bits they wrote.
+pub trait Codec: Send + Sync {
+    /// Canonical spec string (`qsgd:8`, `randk:50>qsgd:8`, …).
+    fn name(&self) -> String;
+
+    /// Variance bound ω at dimension `dim` (Assumption 1);
+    /// `None` for biased operators.
+    fn omega(&self, dim: usize) -> Option<f64>;
+
+    /// Encode `x`, drawing randomness from `rng`. Fails (rather than
+    /// truncating or panicking) on inputs the operator cannot represent,
+    /// e.g. `randk:k` with `k > x.len()`.
+    fn encode_into(&self, x: &[f32], w: &mut BitWriter, rng: &mut Rng)
+                   -> anyhow::Result<()>;
+
+    /// Decode into `out` (overwriting), consuming this codec's bits.
+    fn decode_into(&self, r: &mut BitReader, out: &mut [f32]);
+
+    /// Fused decode + scaled accumulate: `acc += scale · decode()`.
+    fn decode_add(&self, r: &mut BitReader, acc: &mut [f32], scale: f32);
+
+    /// Apply compress→decompress in place (what the receiving end sees),
+    /// without materializing a `Compressed`. Used by dense chaining and
+    /// the Assumption-1 test harness.
+    fn apply_into(&self, x: &[f32], out: &mut [f32], rng: &mut Rng)
+                  -> anyhow::Result<()> {
+        debug_assert_eq!(x.len(), out.len());
+        scratch::with_bytes(|bytes| {
+            let mut w = BitWriter::reuse(std::mem::take(bytes));
+            let res = self.encode_into(x, &mut w, rng);
+            *bytes = w.finish();
+            res?;
+            let mut r = BitReader::new(bytes);
+            self.decode_into(&mut r, out);
+            Ok(())
+        })
+    }
+
+    /// Allocating convenience for tests and one-off analysis.
+    fn apply(&self, x: &[f32], rng: &mut Rng) -> anyhow::Result<Vec<f32>> {
+        let mut out = vec![0.0f32; x.len()];
+        self.apply_into(x, &mut out, rng)?;
+        Ok(out)
+    }
+}
+
+/// ω of a two-stage unbiased chain: (1+ω₁)(1+ω₂) − 1.
+///
+/// For independent unbiased stages, E‖C₂(C₁(x)) − x‖² telescopes:
+/// ω₂·E‖C₁(x)‖² + ω₁‖x‖² ≤ (ω₂(1+ω₁) + ω₁)‖x‖². A biased stage (`None`)
+/// poisons the chain — the composed operator has no Assumption-1 constant.
+pub fn compose_omega(first: Option<f64>, second: Option<f64>) -> Option<f64> {
+    match (first, second) {
+        (Some(a), Some(b)) => Some((1.0 + a) * (1.0 + b) - 1.0),
+        _ => None,
+    }
+}
+
+/// A compressed vector: exact wire bits + the codec that can decode them.
 pub struct Compressed {
     pub payload: Vec<u8>,
     /// exact encoded size in bits (before byte-alignment padding)
     pub bits: u64,
     pub dim: usize,
-    codec: Codec,
+    codec: Arc<dyn Codec>,
 }
 
-#[derive(Clone, Debug)]
-enum Codec {
-    Identity,
-    Natural,
-    Qsgd { s: u32 },
-    TernGrad,
-    Bernoulli { q: f32 },
-    RandK { k: usize },
-    TopK { k: usize },
+impl Clone for Compressed {
+    fn clone(&self) -> Compressed {
+        Compressed {
+            payload: self.payload.clone(),
+            bits: self.bits,
+            dim: self.dim,
+            codec: Arc::clone(&self.codec),
+        }
+    }
+}
+
+impl std::fmt::Debug for Compressed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Compressed")
+            .field("codec", &self.codec.name())
+            .field("bits", &self.bits)
+            .field("dim", &self.dim)
+            .finish()
+    }
 }
 
 impl Compressed {
+    /// An empty buffer to be filled by [`CompressorState::compress_into`];
+    /// reusing one across rounds keeps the wire path allocation-free.
+    pub fn empty() -> Compressed {
+        Compressed { payload: Vec::new(), bits: 0, dim: 0, codec: Arc::new(Identity) }
+    }
+
+    /// Spec string of the codec that produced this payload.
+    pub fn codec_name(&self) -> String {
+        self.codec.name()
+    }
+
     /// Reconstruct the (randomly rounded / sparsified) vector.
     pub fn decode(&self) -> Vec<f32> {
         let mut out = vec![0.0f32; self.dim];
@@ -60,15 +168,8 @@ impl Compressed {
     /// Decode into a caller-provided buffer (hot path: no allocation).
     pub fn decode_into(&self, out: &mut [f32]) {
         assert_eq!(out.len(), self.dim);
-        match &self.codec {
-            Codec::Identity => identity::decode(&self.payload, out),
-            Codec::Natural => natural::decode(&self.payload, out),
-            Codec::Qsgd { s } => qsgd::decode_with_s(&self.payload, *s, out, 1.0, false),
-            Codec::TernGrad => terngrad::decode(&self.payload, out),
-            Codec::Bernoulli { q } => bernoulli::decode(&self.payload, *q, out),
-            Codec::RandK { k } => randk::decode(&self.payload, *k, out),
-            Codec::TopK { k } => topk::decode(&self.payload, *k, out),
-        }
+        let mut r = BitReader::new(&self.payload);
+        self.codec.decode_into(&mut r, out);
     }
 
     /// Fused decode + scaled accumulate: `acc += scale · decode()`.
@@ -76,23 +177,20 @@ impl Compressed {
     /// materializing n temporary vectors (§Perf).
     pub fn decode_add(&self, acc: &mut [f32], scale: f32) {
         assert_eq!(acc.len(), self.dim);
-        match &self.codec {
-            Codec::Identity => identity::decode_add(&self.payload, acc, scale),
-            Codec::Natural => natural::decode_add(&self.payload, acc, scale),
-            Codec::Qsgd { s } => qsgd::decode_with_s(&self.payload, *s, acc, scale, true),
-            Codec::TernGrad => terngrad::decode_add(&self.payload, acc, scale),
-            Codec::Bernoulli { q } => bernoulli::decode_add(&self.payload, *q, acc, scale),
-            Codec::RandK { k } => randk::decode_add(&self.payload, *k, acc, scale),
-            Codec::TopK { k } => topk::decode_add(&self.payload, *k, acc, scale),
-        }
+        let mut r = BitReader::new(&self.payload);
+        self.codec.decode_add(&mut r, acc, scale);
     }
 
-    fn new(payload: Vec<u8>, bits: u64, dim: usize, codec: Codec) -> Compressed {
-        Compressed { payload, bits, dim, codec }
+    pub(crate) fn set_codec(&mut self, codec: Arc<dyn Codec>) {
+        self.codec = codec;
     }
 }
 
-/// A compression operator C : R^d → R^d (Assumption 1 interface).
+/// Shareable compression descriptor (Assumption 1 interface).
+///
+/// One descriptor serves any number of clients; each client gets its own
+/// [`CompressorState`] via `instantiate`, which owns the RNG stream and any
+/// cross-round memory (error-feedback residuals).
 pub trait Compressor: Send + Sync {
     fn name(&self) -> String;
 
@@ -100,72 +198,80 @@ pub trait Compressor: Send + Sync {
     fn omega(&self, dim: usize) -> Option<f64>;
 
     fn unbiased(&self) -> bool {
-        self.omega(1).is_some()
+        self.omega(2).is_some()
     }
 
-    fn compress(&self, x: &[f32], rng: &mut Rng) -> Compressed;
+    /// Build a per-client instance for `dim`-dimensional vectors, seeded
+    /// deterministically (same seed ⇒ bit-identical wire stream).
+    fn instantiate(&self, dim: usize, seed: u64) -> Box<dyn CompressorState>;
+}
 
-    /// Convenience: compress→decode (what the receiving end sees).
-    fn apply(&self, x: &[f32], rng: &mut Rng) -> Vec<f32> {
-        self.compress(x, rng).decode()
+/// Per-client stateful compression instance.
+pub trait CompressorState: Send {
+    /// Encode `x` into `out`, reusing its buffers (the zero-alloc wire
+    /// path: steady state performs no heap allocation). On error `out` is
+    /// left in an unspecified-but-valid state.
+    fn compress_into(&mut self, x: &[f32], out: &mut Compressed) -> anyhow::Result<()>;
+
+    /// Allocating convenience.
+    fn compress(&mut self, x: &[f32]) -> anyhow::Result<Compressed> {
+        let mut out = Compressed::empty();
+        self.compress_into(x, &mut out)?;
+        Ok(out)
     }
 }
 
-/// Parse a compressor spec string:
-/// `identity` | `natural` | `qsgd:<s>` | `terngrad` | `bernoulli:<q>` |
-/// `randk:<k>` | `topk:<k>`.
-pub fn from_spec(spec: &str) -> anyhow::Result<Box<dyn Compressor>> {
-    let (name, arg) = match spec.split_once(':') {
-        Some((n, a)) => (n, Some(a)),
-        None => (spec, None),
-    };
-    let need = |what: &str| {
-        anyhow::anyhow!("compressor `{name}` requires `:{what}` (got `{spec}`)")
-    };
-    Ok(match name {
-        "identity" | "none" => Box::new(Identity),
-        "natural" => Box::new(Natural),
-        "qsgd" => {
-            let s: u32 = arg.ok_or_else(|| need("levels"))?.parse()?;
-            anyhow::ensure!(s >= 1, "qsgd levels must be ≥ 1");
-            Box::new(Qsgd::new(s))
-        }
-        "terngrad" => Box::new(TernGrad),
-        "bernoulli" => {
-            let q: f32 = arg.ok_or_else(|| need("prob"))?.parse()?;
-            anyhow::ensure!(q > 0.0 && q <= 1.0, "bernoulli prob must be in (0,1]");
-            Box::new(Bernoulli::new(q))
-        }
-        "randk" => {
-            let k: usize = arg.ok_or_else(|| need("k"))?.parse()?;
-            anyhow::ensure!(k >= 1, "randk k must be ≥ 1");
-            Box::new(RandK::new(k))
-        }
-        "topk" => {
-            let k: usize = arg.ok_or_else(|| need("k"))?.parse()?;
-            anyhow::ensure!(k >= 1, "topk k must be ≥ 1");
-            Box::new(TopK::new(k))
-        }
-        other => anyhow::bail!("unknown compressor `{other}`"),
-    })
+/// Parse a compressor spec into a shareable descriptor.
+///
+/// Grammar:
+///   spec  := "ef(" spec ")" | chain
+///   chain := atom (">" atom)*
+///   atom  := name [":" arg]
+///
+/// `a>b` feeds a's output into b left-to-right; selector stages (rand-k,
+/// top-k, Bernoulli) hand only their *survivors* to the next stage, so
+/// `randk:50>qsgd:8` quantizes 50 values, not d. `ef(...)` wraps the whole
+/// spec in stateful error feedback (residual carried across rounds).
+/// Registered names: see [`registered_names`] / `pfl compressors`.
+pub fn from_spec(spec: &str) -> anyhow::Result<Arc<dyn Compressor>> {
+    let s = spec.trim();
+    if let Some(body) = s.strip_prefix("ef(") {
+        let inner = body.strip_suffix(')').ok_or_else(|| {
+            anyhow::anyhow!("`ef(...)` must wrap the entire spec (got `{spec}`)")
+        })?;
+        return Ok(Arc::new(ErrorFeedback::new(from_spec(inner)?)));
+    }
+    Ok(Arc::new(Pipeline::new(codec_from_spec(s)?)))
 }
 
-/// The unbiased client-side set used across the paper's DNN experiments.
-pub fn paper_suite(dim: usize) -> Vec<Box<dyn Compressor>> {
+/// The unbiased client-side set used across the paper's DNN experiments —
+/// table-driven off the registry like everything else.
+pub fn paper_suite(dim: usize) -> Vec<Arc<dyn Compressor>> {
     let k = (dim / 20).max(1);
-    vec![
-        Box::new(Natural),
-        Box::new(Qsgd::new(15)),
-        Box::new(TernGrad),
-        Box::new(Bernoulli::new(0.1)),
-        Box::new(TopK::new(k)),
-    ]
+    let specs = [
+        "natural".to_string(),
+        "qsgd:15".to_string(),
+        "terngrad".to_string(),
+        "bernoulli:0.1".to_string(),
+        format!("topk:{k}"),
+    ];
+    specs.iter().map(|s| from_spec(s).expect("builtin spec")).collect()
 }
 
 #[cfg(test)]
 pub(crate) mod testutil {
     use super::*;
     use crate::util::stats::{l2_dist_sq, l2_norm};
+
+    /// Compress `x` through the full spec path with a fresh stream seeded
+    /// at `seed` — consumes randomness exactly like the pre-registry
+    /// implementation's `compress(&x, &mut Rng::new(seed))`, which the
+    /// wire-stability tests rely on.
+    pub fn compress(spec: &str, x: &[f32], seed: u64) -> Compressed {
+        let comp = from_spec(spec).expect("spec parses");
+        let mut st = comp.instantiate(x.len(), seed);
+        st.compress(x).expect("compress succeeds")
+    }
 
     /// Monte-Carlo check of Assumption 1 on a fixed vector.
     ///
@@ -174,14 +280,14 @@ pub(crate) mod testutil {
     /// ω‖x‖²/T`, so `‖mean − x‖ ≤ 6√(ω/T)·‖x‖` is a sound aggregate bound
     /// (robust to rare-event coordinates where per-coordinate empirical
     /// CIs are meaningless).
-    pub fn check_assumption1(c: &dyn Compressor, x: &[f32], trials: usize, seed: u64) {
+    pub fn check_assumption1(c: &dyn Codec, x: &[f32], trials: usize, seed: u64) {
         let d = x.len();
         let omega = c.omega(d).expect("unbiased compressor");
         let mut rng = Rng::new(seed);
         let mut mean = vec![0.0f64; d];
         let mut var_acc = 0.0f64;
         for _ in 0..trials {
-            let y = c.apply(x, &mut rng);
+            let y = c.apply(x, &mut rng).expect("apply succeeds");
             for i in 0..d {
                 mean[i] += y[i] as f64;
             }
@@ -226,6 +332,7 @@ mod tests {
     #[test]
     fn spec_parsing() {
         assert_eq!(from_spec("identity").unwrap().name(), "identity");
+        assert_eq!(from_spec("none").unwrap().name(), "identity");
         assert_eq!(from_spec("natural").unwrap().name(), "natural");
         assert_eq!(from_spec("qsgd:8").unwrap().name(), "qsgd:8");
         assert_eq!(from_spec("terngrad").unwrap().name(), "terngrad");
@@ -235,6 +342,116 @@ mod tests {
         assert!(from_spec("qsgd").is_err());
         assert!(from_spec("bernoulli:1.5").is_err());
         assert!(from_spec("nope").is_err());
+    }
+
+    #[test]
+    fn pipeline_spec_parsing() {
+        assert_eq!(from_spec("randk:50>qsgd:8").unwrap().name(), "randk:50>qsgd:8");
+        assert_eq!(from_spec("bernoulli:0.2>natural").unwrap().name(),
+                   "bernoulli:0.2>natural");
+        assert_eq!(from_spec("topk:10>natural").unwrap().name(), "topk:10>natural");
+        // dense chaining of two quantizers parses too
+        assert_eq!(from_spec("natural>qsgd:4").unwrap().name(), "natural>qsgd:4");
+        // three stages: selector survivors flow through the rest
+        assert_eq!(from_spec("randk:20>qsgd:8>natural").unwrap().name(),
+                   "randk:20>qsgd:8>natural");
+        assert!(from_spec("randk:10>").is_err(), "trailing stage");
+        assert!(from_spec(">qsgd:8").is_err(), "leading stage");
+    }
+
+    #[test]
+    fn ef_spec_parsing() {
+        assert_eq!(from_spec("ef(topk:10)").unwrap().name(), "ef(topk:10)");
+        assert_eq!(from_spec("ef(randk:50>qsgd:8)").unwrap().name(),
+                   "ef(randk:50>qsgd:8)");
+        assert_eq!(from_spec("ef(ef(topk:3))").unwrap().name(), "ef(ef(topk:3))");
+        assert!(from_spec("ef(topk:10").is_err(), "unclosed ef");
+        assert!(from_spec("ef(topk:5)>natural").is_err(),
+                "ef must wrap the whole spec");
+        // ef is always biased: no Assumption-1 constant
+        assert!(from_spec("ef(natural)").unwrap().omega(100).is_none());
+    }
+
+    #[test]
+    fn unknown_codec_error_lists_registered_names() {
+        let err = format!("{:#}", from_spec("zstd").unwrap_err());
+        assert!(err.contains("unknown compressor `zstd`"), "{err}");
+        for name in ["bernoulli", "identity", "natural", "qsgd", "randk",
+                     "terngrad", "topk"] {
+            assert!(err.contains(name), "error should list `{name}`: {err}");
+        }
+    }
+
+    #[test]
+    fn composed_omega_formula() {
+        assert_eq!(compose_omega(Some(1.0), Some(0.125)), Some(1.25));
+        assert_eq!(compose_omega(Some(0.0), Some(0.5)), Some(0.5));
+        assert_eq!(compose_omega(None, Some(0.5)), None);
+        assert_eq!(compose_omega(Some(0.5), None), None);
+        // spec-level: randk:50 over d=1000 (ω=19) into qsgd:8 over 50
+        // survivors (ω = min(50/64, √50/8))
+        let chain = from_spec("randk:50>qsgd:8").unwrap();
+        let w1 = 1000.0 / 50.0 - 1.0;
+        let w2 = (50.0f64 / 64.0).min(50.0f64.sqrt() / 8.0);
+        let expect = (1.0 + w1) * (1.0 + w2) - 1.0;
+        assert!((chain.omega(1000).unwrap() - expect).abs() < 1e-12);
+        // a biased stage poisons the chain
+        assert!(from_spec("topk:10>natural").unwrap().omega(1000).is_none());
+    }
+
+    #[test]
+    fn composed_chain_satisfies_assumption1_randk_qsgd() {
+        let x = testutil::test_vector(100, 3);
+        let c = codec_from_spec("randk:50>qsgd:8").unwrap();
+        testutil::check_assumption1(c.as_ref(), &x, 1200, 7);
+    }
+
+    #[test]
+    fn composed_chain_satisfies_assumption1_bernoulli_natural() {
+        let x = testutil::test_vector(80, 5);
+        let c = codec_from_spec("bernoulli:0.2>natural").unwrap();
+        testutil::check_assumption1(c.as_ref(), &x, 1500, 11);
+    }
+
+    #[test]
+    fn composed_chain_satisfies_assumption1_dense_pair() {
+        // quantizer→quantizer exercises the dense-composition fallback
+        let x = testutil::test_vector(64, 9);
+        let c = codec_from_spec("natural>qsgd:4").unwrap();
+        testutil::check_assumption1(c.as_ref(), &x, 1200, 13);
+    }
+
+    #[test]
+    fn chained_wire_is_smaller_than_raw_survivors() {
+        // randk:50>qsgd:8 sends 50 quantized survivors, far below the
+        // 64 + 32·50 bits of plain randk:50
+        let x = testutil::test_vector(1000, 1);
+        let c = testutil::compress("randk:50>qsgd:8", &x, 2);
+        let raw = testutil::compress("randk:50", &x, 2);
+        assert_eq!(raw.bits, 64 + 32 * 50);
+        assert!(c.bits < raw.bits / 2, "chained bits = {}", c.bits);
+        assert!(c.bits > 64 + 32, "chained bits = {}", c.bits);
+    }
+
+    #[test]
+    fn decode_add_matches_decode_plus_axpy_for_every_registered_codec() {
+        // registry-driven property test: every entry's example spec must
+        // satisfy decode_add(acc, s) == decode() scaled-added into acc
+        for (name, example) in registry::examples() {
+            let x = testutil::test_vector(200, 17);
+            let c = testutil::compress(&example, &x, 23);
+            let y = c.decode();
+            let mut acc = vec![0.75f32; 200];
+            c.decode_add(&mut acc, -1.5);
+            for i in 0..200 {
+                let expect = 0.75 - 1.5 * y[i];
+                assert!(
+                    (acc[i] - expect).abs() <= 1e-4 * (1.0 + y[i].abs()),
+                    "{name} ({example}): acc[{i}] = {} vs {expect}",
+                    acc[i]
+                );
+            }
+        }
     }
 
     #[test]
@@ -248,5 +465,68 @@ mod tests {
         assert!(names.iter().any(|n| n.starts_with("topk")));
         // exactly one biased operator in the suite (Top-k)
         assert_eq!(suite.iter().filter(|c| !c.unbiased()).count(), 1);
+    }
+
+    #[test]
+    fn compress_into_reuses_buffers() {
+        let x = testutil::test_vector(500, 2);
+        let comp = from_spec("natural").unwrap();
+        let mut st = comp.instantiate(500, 4);
+        let mut buf = Compressed::empty();
+        st.compress_into(&x, &mut buf).unwrap();
+        let cap = buf.payload.capacity();
+        let ptr = buf.payload.as_ptr();
+        for _ in 0..10 {
+            st.compress_into(&x, &mut buf).unwrap();
+            assert_eq!(buf.payload.capacity(), cap, "payload capacity changed");
+            assert_eq!(buf.payload.as_ptr(), ptr, "payload storage moved");
+            assert_eq!(buf.bits, 9 * 500);
+        }
+    }
+
+    #[test]
+    fn open_registry_accepts_custom_codec() {
+        use std::sync::Arc;
+
+        /// Toy codec: raw f32 passthrough under a custom name.
+        struct Passthru;
+        impl Codec for Passthru {
+            fn name(&self) -> String {
+                "passthru".into()
+            }
+            fn omega(&self, _dim: usize) -> Option<f64> {
+                Some(0.0)
+            }
+            fn encode_into(&self, x: &[f32], w: &mut BitWriter, _rng: &mut Rng)
+                           -> anyhow::Result<()> {
+                for &v in x {
+                    w.put_f32(v);
+                }
+                Ok(())
+            }
+            fn decode_into(&self, r: &mut BitReader, out: &mut [f32]) {
+                for o in out.iter_mut() {
+                    *o = r.get_f32();
+                }
+            }
+            fn decode_add(&self, r: &mut BitReader, acc: &mut [f32], scale: f32) {
+                for a in acc.iter_mut() {
+                    *a += scale * r.get_f32();
+                }
+            }
+        }
+
+        register_codec("passthru", "passthru", "passthru", Box::new(|_arg, inner| {
+            Ok(registry::dense_chain(Arc::new(Passthru), inner))
+        }));
+        // parses standalone, in chains, and under ef — no core edits needed
+        let x = testutil::test_vector(50, 1);
+        let c = testutil::compress("passthru", &x, 0);
+        assert_eq!(c.bits, 32 * 50);
+        assert_eq!(c.decode(), x);
+        assert_eq!(from_spec("randk:10>passthru").unwrap().name(),
+                   "randk:10>passthru");
+        assert!(from_spec("ef(passthru)").is_ok());
+        assert!(registered_names().contains(&"passthru".to_string()));
     }
 }

@@ -6,14 +6,17 @@
 //! code 0 ⇒ value 0 and code c ∈ [1, 255] ⇒ magnitude 2^(c − 128)
 //! (covers 2^-127 .. 2^127; f32 subnormal results flush to zero).
 
-use super::{Codec, Compressed, Compressor};
+use std::sync::Arc;
+
+use super::registry::{dense_chain, Registry};
+use super::Codec;
 use crate::util::{BitReader, BitWriter, Rng};
 
 pub struct Natural;
 
 const BIAS: i32 = 128;
 
-impl Compressor for Natural {
+impl Codec for Natural {
     fn name(&self) -> String {
         "natural".into()
     }
@@ -22,8 +25,8 @@ impl Compressor for Natural {
         Some(0.125)
     }
 
-    fn compress(&self, x: &[f32], rng: &mut Rng) -> Compressed {
-        let mut w = BitWriter::with_capacity(x.len() * 9 / 8 + 8);
+    fn encode_into(&self, x: &[f32], w: &mut BitWriter, rng: &mut Rng)
+                   -> anyhow::Result<()> {
         // §Perf: one 9-bit put per coordinate (sign in the low bit — wire
         // format identical to the two-put version), and the rounding
         // probability read directly off the mantissa field:
@@ -45,8 +48,21 @@ impl Compressor for Natural {
             let sign = (bits >> 31) as u64;
             w.put(sign | (code << 1), 9);
         }
-        let bits = w.bit_len();
-        Compressed::new(w.finish(), bits, x.len(), Codec::Natural)
+        Ok(())
+    }
+
+    fn decode_into(&self, r: &mut BitReader, out: &mut [f32]) {
+        let t = lut(1.0);
+        for o in out.iter_mut() {
+            *o = t[r.get(9) as usize];
+        }
+    }
+
+    fn decode_add(&self, r: &mut BitReader, acc: &mut [f32], scale: f32) {
+        let t = lut(scale);
+        for a in acc.iter_mut() {
+            *a += t[r.get(9) as usize];
+        }
     }
 }
 
@@ -77,20 +93,10 @@ fn lut(scale: f32) -> [f32; 512] {
     t
 }
 
-pub(super) fn decode(payload: &[u8], out: &mut [f32]) {
-    let t = lut(1.0);
-    let mut r = BitReader::new(payload);
-    for o in out.iter_mut() {
-        *o = t[r.get(9) as usize];
-    }
-}
-
-pub(super) fn decode_add(payload: &[u8], acc: &mut [f32], scale: f32) {
-    let t = lut(scale);
-    let mut r = BitReader::new(payload);
-    for a in acc.iter_mut() {
-        *a += t[r.get(9) as usize];
-    }
+pub(super) fn register(r: &mut Registry) {
+    r.add("natural", "natural (powers-of-two rounding, 9 bits/coord, ω = 1/8)",
+          "natural",
+          Box::new(|_arg, inner| Ok(dense_chain(Arc::new(Natural), inner))));
 }
 
 #[cfg(test)]
@@ -98,18 +104,22 @@ mod tests {
     use super::*;
     use crate::compress::testutil;
 
+    fn apply(x: &[f32], seed: u64) -> Vec<f32> {
+        Natural.apply(x, &mut Rng::new(seed)).unwrap()
+    }
+
     #[test]
     fn wire_is_9_bits_per_coordinate() {
         let x = testutil::test_vector(1000, 1);
-        let c = Natural.compress(&x, &mut Rng::new(0));
+        let c = testutil::compress("natural", &x, 0);
         assert_eq!(c.bits, 9 * 1000);
-        assert_eq!(c.payload.len(), (9 * 1000 + 7) / 8);
+        assert_eq!(c.payload.len(), (9 * 1000_usize).div_ceil(8));
     }
 
     #[test]
     fn outputs_are_signed_powers_of_two() {
         let x = testutil::test_vector(512, 2);
-        let y = Natural.apply(&x, &mut Rng::new(3));
+        let y = apply(&x, 3);
         for (xi, yi) in x.iter().zip(&y) {
             if *xi == 0.0 {
                 assert_eq!(*yi, 0.0);
@@ -127,7 +137,7 @@ mod tests {
     #[test]
     fn powers_of_two_are_fixed_points() {
         let x = vec![1.0f32, -2.0, 0.5, 4096.0, -0.015625];
-        let y = Natural.apply(&x, &mut Rng::new(9));
+        let y = apply(&x, 9);
         assert_eq!(x, y);
     }
 
@@ -140,14 +150,14 @@ mod tests {
     #[test]
     fn zeros_and_nonfinite_map_to_zero() {
         let x = vec![0.0f32, f32::NAN, f32::INFINITY, -0.0];
-        let y = Natural.apply(&x, &mut Rng::new(0));
+        let y = apply(&x, 0);
         assert_eq!(y, vec![0.0, 0.0, 0.0, 0.0]);
     }
 
     #[test]
     fn decode_add_matches_decode() {
         let x = testutil::test_vector(333, 6);
-        let c = Natural.compress(&x, &mut Rng::new(7));
+        let c = testutil::compress("natural", &x, 7);
         let y = c.decode();
         let mut acc = vec![1.0f32; 333];
         c.decode_add(&mut acc, 2.0);

@@ -1,0 +1,169 @@
+//! Pipeline plumbing: the spec-level [`Pipeline`] descriptor, its
+//! per-client [`CodecState`], and the [`DenseStage`] combinator that chains
+//! non-selector codecs.
+//!
+//! Chaining model (`a>b`, data flows left to right):
+//!
+//! * **Selector stages** (rand-k, top-k, Bernoulli) write their structure
+//!   bits and hand only the *survivor values* to the next stage — that is
+//!   how `randk:50>qsgd:8` quantizes 50 values instead of d.
+//! * **Dense stages** (identity, natural, qsgd, terngrad, …) mid-chain are
+//!   wrapped in [`DenseStage`]: the stage is applied locally
+//!   (compress→decompress, same distribution as crossing the wire) and the
+//!   next stage encodes its output, so only the last dense stage's bits hit
+//!   the wire. The composed operator is C₂∘C₁ with
+//!   ω = (1+ω₁)(1+ω₂) − 1 ([`compose_omega`]).
+
+use std::sync::Arc;
+
+use super::{compose_omega, scratch, Codec, Compressed, Compressor, CompressorState};
+use crate::util::{BitReader, BitWriter, Rng};
+
+/// Dense composition C_then ∘ C_first: `first` is applied in full, `then`
+/// encodes its output (and alone determines the wire format).
+pub struct DenseStage {
+    first: Arc<dyn Codec>,
+    then: Arc<dyn Codec>,
+}
+
+impl DenseStage {
+    pub fn new(first: Arc<dyn Codec>, then: Arc<dyn Codec>) -> DenseStage {
+        DenseStage { first, then }
+    }
+}
+
+impl Codec for DenseStage {
+    fn name(&self) -> String {
+        format!("{}>{}", self.first.name(), self.then.name())
+    }
+
+    fn omega(&self, dim: usize) -> Option<f64> {
+        compose_omega(self.first.omega(dim), self.then.omega(dim))
+    }
+
+    fn encode_into(&self, x: &[f32], w: &mut BitWriter, rng: &mut Rng)
+                   -> anyhow::Result<()> {
+        scratch::with_f32(|z| {
+            z.resize(x.len(), 0.0);
+            self.first.apply_into(x, z, rng)?;
+            self.then.encode_into(z, w, rng)
+        })
+    }
+
+    fn decode_into(&self, r: &mut BitReader, out: &mut [f32]) {
+        self.then.decode_into(r, out);
+    }
+
+    fn decode_add(&self, r: &mut BitReader, acc: &mut [f32], scale: f32) {
+        self.then.decode_add(r, acc, scale);
+    }
+}
+
+/// Shareable descriptor wrapping a (possibly chained) codec — what
+/// [`super::from_spec`] returns for everything except `ef(...)`.
+pub struct Pipeline {
+    codec: Arc<dyn Codec>,
+}
+
+impl Pipeline {
+    pub fn new(codec: Arc<dyn Codec>) -> Pipeline {
+        Pipeline { codec }
+    }
+
+    /// The underlying wire codec (e.g. for direct `apply` in analyses).
+    pub fn codec(&self) -> &Arc<dyn Codec> {
+        &self.codec
+    }
+}
+
+impl Compressor for Pipeline {
+    fn name(&self) -> String {
+        self.codec.name()
+    }
+
+    fn omega(&self, dim: usize) -> Option<f64> {
+        self.codec.omega(dim)
+    }
+
+    fn instantiate(&self, _dim: usize, seed: u64) -> Box<dyn CompressorState> {
+        Box::new(CodecState { codec: Arc::clone(&self.codec), rng: Rng::new(seed) })
+    }
+}
+
+/// Stateless-codec instance: the only per-client state is the RNG stream.
+pub struct CodecState {
+    codec: Arc<dyn Codec>,
+    rng: Rng,
+}
+
+impl CompressorState for CodecState {
+    fn compress_into(&mut self, x: &[f32], out: &mut Compressed) -> anyhow::Result<()> {
+        // round-trip the payload Vec through the writer: capacity (and
+        // steady-state storage) is reused, so this path never allocates
+        // after warmup.
+        let mut w = BitWriter::reuse(std::mem::take(&mut out.payload));
+        let res = self.codec.encode_into(x, &mut w, &mut self.rng);
+        out.bits = w.bit_len();
+        out.payload = w.finish();
+        res?;
+        out.dim = x.len();
+        out.set_codec(Arc::clone(&self.codec));
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil;
+    use crate::compress::{codec_from_spec, from_spec};
+
+    #[test]
+    fn dense_stage_wire_is_final_stage_only() {
+        // natural>qsgd:8 puts only qsgd bits on the wire
+        let x = testutil::test_vector(300, 1);
+        let chained = testutil::compress("natural>qsgd:8", &x, 5);
+        assert!(chained.bits < 32 + 300 * 12, "bits = {}", chained.bits);
+        assert_eq!(chained.dim, 300);
+        // decode reproduces a vector on qsgd's grid (norm · level/s)
+        let y = chained.decode();
+        assert_eq!(y.len(), 300);
+    }
+
+    #[test]
+    fn selector_survivor_chaining_preserves_sparsity() {
+        let x = testutil::test_vector(400, 2);
+        let c = testutil::compress("randk:40>qsgd:8", &x, 3);
+        let y = c.decode();
+        let nnz = y.iter().filter(|v| **v != 0.0).count();
+        assert!(nnz <= 40, "nnz = {nnz}");
+    }
+
+    #[test]
+    fn pipeline_descriptor_shares_codec_across_instances() {
+        let p = from_spec("randk:10>natural").unwrap();
+        let mut a = p.instantiate(100, 1);
+        let mut b = p.instantiate(100, 1);
+        let x = testutil::test_vector(100, 4);
+        // same seed ⇒ bit-identical independent streams
+        let ca = a.compress(&x).unwrap();
+        let cb = b.compress(&x).unwrap();
+        assert_eq!(ca.payload, cb.payload);
+        assert_eq!(ca.bits, cb.bits);
+    }
+
+    #[test]
+    fn codec_accessor_matches_spec() {
+        let p = Pipeline::new(codec_from_spec("terngrad").unwrap());
+        assert_eq!(p.codec().name(), "terngrad");
+    }
+
+    #[test]
+    fn instantiations_with_different_seeds_differ() {
+        let p = from_spec("natural").unwrap();
+        let x = testutil::test_vector(128, 6);
+        let ca = p.instantiate(128, 1).compress(&x).unwrap();
+        let cb = p.instantiate(128, 2).compress(&x).unwrap();
+        assert_ne!(ca.payload, cb.payload);
+    }
+}

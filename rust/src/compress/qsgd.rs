@@ -7,7 +7,10 @@
 //! Elias-γ(level + 1). Since E[Σ levels] ≤ s·√d, the γ-code keeps dense
 //! small levels near 1–3 bits — the "encoding" half of QSGD's guarantee.
 
-use super::{Codec, Compressed, Compressor};
+use std::sync::Arc;
+
+use super::registry::{dense_chain, Registry};
+use super::Codec;
 use crate::util::{BitReader, BitWriter, Rng};
 
 pub struct Qsgd {
@@ -21,7 +24,7 @@ impl Qsgd {
     }
 }
 
-impl Compressor for Qsgd {
+impl Codec for Qsgd {
     fn name(&self) -> String {
         format!("qsgd:{}", self.s)
     }
@@ -32,9 +35,9 @@ impl Compressor for Qsgd {
         Some((d / (s * s)).min(d.sqrt() / s))
     }
 
-    fn compress(&self, x: &[f32], rng: &mut Rng) -> Compressed {
+    fn encode_into(&self, x: &[f32], w: &mut BitWriter, rng: &mut Rng)
+                   -> anyhow::Result<()> {
         let norm = crate::util::stats::l2_norm(x) as f32;
-        let mut w = BitWriter::with_capacity(x.len() / 2 + 8);
         w.put_f32(norm);
         if norm > 0.0 {
             // §Perf: hoist the s/norm division and emit sign + Elias-γ as a
@@ -57,37 +60,57 @@ impl Compressor for Qsgd {
                 }
             }
         }
-        let bits = w.bit_len();
-        Compressed::new(w.finish(), bits, x.len(), Codec::Qsgd { s: self.s })
+        Ok(())
     }
-}
 
-/// Decode (`add = false`) or fused decode-accumulate (`add = true`).
-/// `s` rides in the `Codec` enum rather than the payload header, so the
-/// wire carries only the norm + per-coordinate codes.
-pub(super) fn decode_with_s(payload: &[u8], s: u32, out: &mut [f32], scale: f32, add: bool) {
-    let mut r = BitReader::new(payload);
-    let norm = r.get_f32();
-    if norm <= 0.0 {
-        if !add {
+    fn decode_into(&self, r: &mut BitReader, out: &mut [f32]) {
+        let norm = r.get_f32();
+        if norm <= 0.0 {
             out.fill(0.0);
+            return;
         }
-        return;
-    }
-    let step = norm / s as f32;
-    for o in out.iter_mut() {
-        let neg = r.get_bit();
-        let level = (r.get_elias_gamma() - 1) as f32;
-        let mut v = step * level;
-        if neg {
-            v = -v;
-        }
-        if add {
-            *o += scale * v;
-        } else {
+        let step = norm / self.s as f32;
+        for o in out.iter_mut() {
+            let neg = r.get_bit();
+            let level = (r.get_elias_gamma() - 1) as f32;
+            let mut v = step * level;
+            if neg {
+                v = -v;
+            }
             *o = v;
         }
     }
+
+    fn decode_add(&self, r: &mut BitReader, acc: &mut [f32], scale: f32) {
+        let norm = r.get_f32();
+        if norm <= 0.0 {
+            return;
+        }
+        let step = norm / self.s as f32;
+        for a in acc.iter_mut() {
+            let neg = r.get_bit();
+            let level = (r.get_elias_gamma() - 1) as f32;
+            let mut v = step * level;
+            if neg {
+                v = -v;
+            }
+            *a += scale * v;
+        }
+    }
+}
+
+pub(super) fn register(r: &mut Registry) {
+    r.add("qsgd", "qsgd:<levels> (random dithering, ω = min(d/s², √d/s))",
+          "qsgd:8",
+          Box::new(|arg, inner| {
+              let arg = arg.ok_or_else(|| {
+                  anyhow::anyhow!("qsgd requires `:levels` (e.g. qsgd:8)")
+              })?;
+              let s: u32 = arg.parse()
+                  .map_err(|e| anyhow::anyhow!("qsgd levels `{arg}`: {e}"))?;
+              anyhow::ensure!(s >= 1, "qsgd levels must be ≥ 1");
+              Ok(dense_chain(Arc::new(Qsgd::new(s)), inner))
+          }));
 }
 
 #[cfg(test)]
@@ -99,8 +122,7 @@ mod tests {
     #[test]
     fn roundtrip_levels_on_grid() {
         let x = testutil::test_vector(500, 1);
-        let q = Qsgd::new(8);
-        let c = q.compress(&x, &mut Rng::new(2));
+        let c = testutil::compress("qsgd:8", &x, 2);
         let y = c.decode();
         let norm = l2_norm(&x) as f32;
         let step = norm / 8.0;
@@ -128,7 +150,7 @@ mod tests {
     #[test]
     fn zero_vector_compresses_to_header_only() {
         let x = vec![0.0f32; 100];
-        let c = Qsgd::new(8).compress(&x, &mut Rng::new(0));
+        let c = testutil::compress("qsgd:8", &x, 0);
         assert_eq!(c.bits, 32);
         assert_eq!(c.decode(), x);
     }
@@ -138,7 +160,7 @@ mod tests {
         // E[bits/coord] ≈ 1 + E[2⌊log₂(level+1)⌋+1]; for s = 15, d = 10k,
         // levels are mostly 0/1 ⇒ ≈ 2.5 bits ≪ 32.
         let x = testutil::test_vector(10_000, 7);
-        let c = Qsgd::new(15).compress(&x, &mut Rng::new(1));
+        let c = testutil::compress("qsgd:15", &x, 1);
         assert!(c.bits < 8 * 10_000, "bits = {}", c.bits);
         assert!(c.bits > 32 + 2 * 10_000);
     }
@@ -155,7 +177,7 @@ mod tests {
     #[test]
     fn decode_add_matches_decode() {
         let x = testutil::test_vector(200, 9);
-        let c = Qsgd::new(4).compress(&x, &mut Rng::new(4));
+        let c = testutil::compress("qsgd:4", &x, 4);
         let y = c.decode();
         let mut acc = vec![0.5f32; 200];
         c.decode_add(&mut acc, -1.5);

@@ -2,76 +2,137 @@
 //! Unbiased with ω = d/k − 1 — the textbook unbiased sparsifier, included
 //! as the unbiased counterpart to Top-k.
 //!
-//! Wire format: 64-bit selection seed + k raw f32 values; the receiver
+//! Wire format: 64-bit selection seed + the k survivor values; the receiver
 //! regenerates the index set from the seed (shared RNG), so indices cost
-//! 64 bits total instead of k·log₂d.
+//! 64 bits total instead of k·log₂d. Standalone the survivors are raw f32;
+//! in a pipeline (`randk:50>qsgd:8`) they are handed to the inner codec —
+//! quantization of the survivors, at survivor dimension k.
 
-use super::{Codec, Compressed, Compressor};
+use std::sync::Arc;
+
+use super::registry::Registry;
+use super::{compose_omega, scratch, Codec};
 use crate::util::{BitReader, BitWriter, Rng};
 
 pub struct RandK {
     k: usize,
+    /// survivor codec for pipeline specs; `None` = raw f32 (legacy wire)
+    inner: Option<Arc<dyn Codec>>,
 }
 
 impl RandK {
     pub fn new(k: usize) -> RandK {
+        Self::chained(k, None)
+    }
+
+    pub fn chained(k: usize, inner: Option<Arc<dyn Codec>>) -> RandK {
         assert!(k >= 1);
-        RandK { k }
+        RandK { k, inner }
     }
 }
 
-impl Compressor for RandK {
+impl Codec for RandK {
     fn name(&self) -> String {
-        format!("randk:{}", self.k)
+        match &self.inner {
+            None => format!("randk:{}", self.k),
+            Some(i) => format!("randk:{}>{}", self.k, i.name()),
+        }
     }
 
     fn omega(&self, dim: usize) -> Option<f64> {
-        let k = self.k.min(dim) as f64;
-        Some(dim as f64 / k - 1.0)
-    }
-
-    fn compress(&self, x: &[f32], rng: &mut Rng) -> Compressed {
-        let k = self.k.min(x.len());
-        let seed = rng.next_u64();
-        let idx = Rng::new(seed).sample_indices(x.len(), k);
-        let mut w = BitWriter::with_capacity(8 + 4 * k);
-        w.put(seed & ((1 << 53) - 1), 53);
-        w.put(seed >> 53, 11);
-        for &i in &idx {
-            w.put_f32(x[i]);
+        let k = self.k.min(dim);
+        let sel = dim as f64 / k as f64 - 1.0;
+        match &self.inner {
+            None => Some(sel),
+            // the inner codec sees the k-dimensional survivor vector
+            Some(i) => compose_omega(Some(sel), i.omega(k)),
         }
-        let bits = w.bit_len();
-        Compressed::new(w.finish(), bits, x.len(), Codec::RandK { k })
+    }
+
+    fn encode_into(&self, x: &[f32], w: &mut BitWriter, rng: &mut Rng)
+                   -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.k <= x.len(),
+            "randk:{} cannot compress a {}-dim vector: k exceeds the dimension \
+             (use k ≤ d or drop the sparsifier)",
+            self.k,
+            x.len()
+        );
+        let seed = rng.next_u64();
+        w.put(seed, 53); // low 53 bits (57-bit put limit)
+        w.put(seed >> 53, 11); // high 11 bits
+        scratch::with_usize(|idx| {
+            Rng::new(seed).sample_indices_into(x.len(), self.k, idx);
+            match &self.inner {
+                None => {
+                    for &i in idx.iter() {
+                        w.put_f32(x[i]);
+                    }
+                    Ok(())
+                }
+                Some(inner) => scratch::with_f32(|vals| {
+                    vals.extend(idx.iter().map(|&i| x[i]));
+                    inner.encode_into(vals, w, rng)
+                }),
+            }
+        })
+    }
+
+    fn decode_into(&self, r: &mut BitReader, out: &mut [f32]) {
+        out.fill(0.0);
+        self.decode_add(r, out, 1.0);
+    }
+
+    fn decode_add(&self, r: &mut BitReader, acc: &mut [f32], scale: f32) {
+        let seed = r.get(53) | (r.get(11) << 53);
+        let d = acc.len();
+        // the encoder refuses k > d; clamp here so a decoder on foreign
+        // payloads stays in bounds
+        let k = self.k.min(d);
+        let rescale = scale * d as f32 / k as f32;
+        scratch::with_usize(|idx| {
+            Rng::new(seed).sample_indices_into(d, k, idx);
+            match &self.inner {
+                None => {
+                    for &i in idx.iter() {
+                        acc[i] += rescale * r.get_f32();
+                    }
+                }
+                Some(inner) => scratch::with_f32(|vals| {
+                    vals.resize(k, 0.0);
+                    inner.decode_into(r, vals);
+                    for (j, &i) in idx.iter().enumerate() {
+                        acc[i] += rescale * vals[j];
+                    }
+                }),
+            }
+        })
     }
 }
 
-pub(super) fn decode(payload: &[u8], k: usize, out: &mut [f32]) {
-    out.fill(0.0);
-    decode_add(payload, k, out, 1.0);
-}
-
-pub(super) fn decode_add(payload: &[u8], k: usize, acc: &mut [f32], scale: f32) {
-    let mut r = BitReader::new(payload);
-    let seed = r.get(53) | (r.get(11) << 53);
-    let d = acc.len();
-    let k = k.min(d);
-    let idx = Rng::new(seed).sample_indices(d, k);
-    let rescale = scale * d as f32 / k as f32;
-    for &i in &idx {
-        acc[i] += rescale * r.get_f32();
-    }
+pub(super) fn register(r: &mut Registry) {
+    r.add("randk", "randk:<k> (uniform k-sparsification, ω = d/k − 1)",
+          "randk:10",
+          Box::new(|arg, inner| {
+              let arg = arg.ok_or_else(|| {
+                  anyhow::anyhow!("randk requires `:k` (e.g. randk:50)")
+              })?;
+              let k: usize = arg.parse()
+                  .map_err(|e| anyhow::anyhow!("randk k `{arg}`: {e}"))?;
+              anyhow::ensure!(k >= 1, "randk k must be ≥ 1");
+              Ok(Arc::new(RandK::chained(k, inner)))
+          }));
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compress::testutil;
+    use crate::compress::{testutil, Compressor, CompressorState};
 
     #[test]
     fn exactly_k_nonzeros_scaled() {
         let x = testutil::test_vector(200, 1);
-        let rk = RandK::new(20);
-        let y = rk.apply(&x, &mut Rng::new(2));
+        let y = RandK::new(20).apply(&x, &mut Rng::new(2)).unwrap();
         let nz: Vec<usize> = (0..200).filter(|&i| y[i] != 0.0).collect();
         assert!(nz.len() <= 20); // (could collide with a genuine 0 in x)
         for &i in &nz {
@@ -82,7 +143,7 @@ mod tests {
     #[test]
     fn wire_is_seed_plus_k_floats() {
         let x = testutil::test_vector(1000, 3);
-        let c = RandK::new(50).compress(&x, &mut Rng::new(4));
+        let c = testutil::compress("randk:50", &x, 4);
         assert_eq!(c.bits, 64 + 32 * 50);
     }
 
@@ -93,9 +154,20 @@ mod tests {
     }
 
     #[test]
-    fn k_geq_d_is_identity() {
+    fn k_above_dim_is_a_compress_time_error() {
         let x = testutil::test_vector(10, 7);
-        let y = RandK::new(100).apply(&x, &mut Rng::new(8));
+        let err = RandK::new(100).apply(&x, &mut Rng::new(8)).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("randk:100") && msg.contains("10-dim"), "{msg}");
+        // and through the full spec path
+        let comp = crate::compress::from_spec("randk:100").unwrap();
+        assert!(comp.instantiate(10, 0).compress(&x).is_err());
+    }
+
+    #[test]
+    fn k_equal_dim_is_identity() {
+        let x = testutil::test_vector(10, 7);
+        let y = RandK::new(10).apply(&x, &mut Rng::new(8)).unwrap();
         for (a, b) in x.iter().zip(&y) {
             assert!((a - b).abs() < 1e-6);
         }
@@ -105,5 +177,16 @@ mod tests {
     fn omega_formula() {
         assert_eq!(RandK::new(10).omega(100).unwrap(), 9.0);
         assert_eq!(RandK::new(100).omega(100).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn chained_survivors_use_inner_codec() {
+        // randk:50>natural: 50 survivors at 9 bits instead of 32
+        let x = testutil::test_vector(1000, 9);
+        let c = testutil::compress("randk:50>natural", &x, 10);
+        assert_eq!(c.bits, 64 + 9 * 50);
+        let y = c.decode();
+        let nnz = y.iter().filter(|v| **v != 0.0).count();
+        assert!(nnz <= 50);
     }
 }

@@ -1,0 +1,179 @@
+//! Open codec registry: name → builder, consulted by the spec parser.
+//!
+//! Built-in operators self-register on first use; downstream code (or
+//! tests, or embedding applications) adds operators at runtime with
+//! [`register_codec`] — no edits to `compress/mod.rs` required. Spec
+//! parsing, error messages (`registered_names`) and the registry-driven
+//! test harness ([`examples`]) are all table-driven off this map.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use super::pipeline::DenseStage;
+use super::Codec;
+
+/// Builds a codec from its optional `:arg` and the already-built rest of
+/// the chain to its right (`None` when the atom is last). Selector codecs
+/// embed `inner` as their survivor codec; dense operators should pass it
+/// to [`dense_chain`].
+pub type BuildFn = Box<
+    dyn Fn(Option<&str>, Option<Arc<dyn Codec>>) -> anyhow::Result<Arc<dyn Codec>>
+        + Send
+        + Sync,
+>;
+
+pub struct Entry {
+    /// usage string shown in errors/docs, e.g. `qsgd:<levels>`
+    pub help: String,
+    /// a concrete valid spec, e.g. `qsgd:8` — drives registry-wide tests
+    pub example: String,
+    /// Arc so the parser can clone it out and invoke it with the registry
+    /// lock released (a builder may itself consult the registry)
+    build: Arc<BuildFn>,
+}
+
+#[derive(Default)]
+pub struct Registry {
+    map: BTreeMap<String, Entry>,
+}
+
+impl Registry {
+    pub fn add(&mut self, name: &str, help: &str, example: &str, build: BuildFn) {
+        self.map.insert(
+            name.to_string(),
+            Entry {
+                help: help.to_string(),
+                example: example.to_string(),
+                build: Arc::new(build),
+            },
+        );
+    }
+}
+
+static REGISTRY: OnceLock<RwLock<Registry>> = OnceLock::new();
+
+fn global() -> &'static RwLock<Registry> {
+    REGISTRY.get_or_init(|| {
+        let mut r = Registry::default();
+        super::identity::register(&mut r);
+        super::natural::register(&mut r);
+        super::qsgd::register(&mut r);
+        super::terngrad::register(&mut r);
+        super::bernoulli::register(&mut r);
+        super::randk::register(&mut r);
+        super::topk::register(&mut r);
+        RwLock::new(r)
+    })
+}
+
+/// Register (or replace) a codec under `name`. `example` must be a valid
+/// standalone spec for it — the registry-driven property tests exercise it.
+pub fn register_codec(name: &str, help: &str, example: &str, build: BuildFn) {
+    global().write().unwrap().add(name, help, example, build);
+}
+
+/// Sorted names of all registered codecs.
+pub fn registered_names() -> Vec<String> {
+    global().read().unwrap().map.keys().cloned().collect()
+}
+
+/// `(name, example-spec)` for every registered codec.
+pub fn examples() -> Vec<(String, String)> {
+    global()
+        .read()
+        .unwrap()
+        .map
+        .iter()
+        .map(|(n, e)| (n.clone(), e.example.clone()))
+        .collect()
+}
+
+/// `(name, help)` for every registered codec (CLI/doc listings).
+pub fn help_lines() -> Vec<(String, String)> {
+    global()
+        .read()
+        .unwrap()
+        .map
+        .iter()
+        .map(|(n, e)| (n.clone(), e.help.clone()))
+        .collect()
+}
+
+/// Chain a dense (non-selector) codec with the rest of the pipeline: the
+/// codec is applied in full and the next stage encodes its output.
+pub fn dense_chain(codec: Arc<dyn Codec>, inner: Option<Arc<dyn Codec>>) -> Arc<dyn Codec> {
+    match inner {
+        None => codec,
+        Some(next) => Arc::new(DenseStage::new(codec, next)),
+    }
+}
+
+/// Parse a chain spec (`atom (">" atom)*`) into one codec, right-to-left so
+/// each stage receives the already-built remainder as its inner codec.
+pub fn codec_from_spec(spec: &str) -> anyhow::Result<Arc<dyn Codec>> {
+    let spec = spec.trim();
+    anyhow::ensure!(!spec.is_empty(), "empty compressor spec");
+    let mut inner: Option<Arc<dyn Codec>> = None;
+    for atom in spec.split('>').rev() {
+        let atom = atom.trim();
+        anyhow::ensure!(!atom.is_empty(), "empty stage in pipeline spec `{spec}`");
+        anyhow::ensure!(
+            !atom.contains("ef("),
+            "`ef(...)` must wrap the entire spec, not a pipeline stage (got `{spec}`)"
+        );
+        let (name, arg) = match atom.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (atom, None),
+        };
+        // clone the builder out so the lock is released before invoking it —
+        // a builder is then free to consult the registry itself
+        let build = {
+            let guard = global().read().unwrap();
+            let entry = guard.map.get(name).ok_or_else(|| {
+                let names: Vec<&str> = guard.map.keys().map(|s| s.as_str()).collect();
+                anyhow::anyhow!("unknown compressor `{name}` (registered: {})",
+                                names.join(", "))
+            })?;
+            Arc::clone(&entry.build)
+        };
+        let built = (*build)(arg, inner.take())
+            .map_err(|e| anyhow::anyhow!("in stage `{atom}`: {e}"))?;
+        inner = Some(built);
+    }
+    Ok(inner.expect("non-empty spec yields a codec"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_are_registered() {
+        let names = registered_names();
+        for n in ["identity", "none", "natural", "qsgd", "terngrad",
+                  "bernoulli", "randk", "topk"] {
+            assert!(names.contains(&n.to_string()), "missing builtin `{n}`");
+        }
+    }
+
+    #[test]
+    fn every_example_spec_parses() {
+        for (name, example) in examples() {
+            assert!(codec_from_spec(&example).is_ok(),
+                    "example `{example}` for `{name}` must parse");
+        }
+    }
+
+    #[test]
+    fn stage_errors_name_the_stage() {
+        let err = format!("{:#}", codec_from_spec("natural>qsgd:zero").unwrap_err());
+        assert!(err.contains("qsgd:zero"), "{err}");
+    }
+
+    #[test]
+    fn help_lines_nonempty() {
+        for (name, help) in help_lines() {
+            assert!(!help.is_empty(), "`{name}` has no help text");
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Thread-local scratch pools for the compression hot path.
+//!
+//! Selector codecs need short-lived buffers (survivor values, index sets,
+//! dense-stage intermediates). Allocating them per call would put a malloc
+//! on every wire operation, so each worker thread keeps small pools of
+//! reusable vectors: steady state, `compress_into`/`decode_add` touch the
+//! allocator zero times (asserted in `benches/perf_compressors.rs`).
+//!
+//! Nested acquisitions (a chain inside a chain) pop distinct vectors, so
+//! re-entrancy is safe; a panic inside a closure merely drops the buffer.
+
+use std::cell::RefCell;
+
+thread_local! {
+    static F32S: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+    static USIZES: RefCell<Vec<Vec<usize>>> = const { RefCell::new(Vec::new()) };
+    static BYTES: RefCell<Vec<Vec<u8>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Run `f` with a cleared pooled `Vec<f32>` (capacity persists per thread).
+pub(crate) fn with_f32<R>(f: impl FnOnce(&mut Vec<f32>) -> R) -> R {
+    let mut v = F32S.with(|p| p.borrow_mut().pop()).unwrap_or_default();
+    v.clear();
+    let r = f(&mut v);
+    F32S.with(|p| p.borrow_mut().push(v));
+    r
+}
+
+/// Run `f` with a cleared pooled `Vec<usize>`.
+pub(crate) fn with_usize<R>(f: impl FnOnce(&mut Vec<usize>) -> R) -> R {
+    let mut v = USIZES.with(|p| p.borrow_mut().pop()).unwrap_or_default();
+    v.clear();
+    let r = f(&mut v);
+    USIZES.with(|p| p.borrow_mut().push(v));
+    r
+}
+
+/// Run `f` with a cleared pooled `Vec<u8>` (dense-stage bitstreams).
+pub(crate) fn with_bytes<R>(f: impl FnOnce(&mut Vec<u8>) -> R) -> R {
+    let mut v = BYTES.with(|p| p.borrow_mut().pop()).unwrap_or_default();
+    v.clear();
+    let r = f(&mut v);
+    BYTES.with(|p| p.borrow_mut().push(v));
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_persists_across_acquisitions() {
+        with_f32(|v| v.resize(1000, 1.0));
+        let cap = with_f32(|v| {
+            assert!(v.is_empty(), "pooled buffer must come back cleared");
+            v.capacity()
+        });
+        assert!(cap >= 1000);
+    }
+
+    #[test]
+    fn nested_acquisitions_get_distinct_buffers() {
+        with_f32(|a| {
+            a.push(1.0);
+            with_f32(|b| {
+                b.push(2.0);
+                assert_eq!(a.len(), 1);
+                assert_eq!(b.len(), 1);
+            });
+            assert_eq!(a[0], 1.0);
+        });
+    }
+}

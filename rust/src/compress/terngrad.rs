@@ -8,12 +8,15 @@
 //! Wire format: 32-bit scale header + 2 bits/coordinate
 //! (00 = 0, 01 = +m, 10 = −m).
 
-use super::{Codec, Compressed, Compressor};
+use std::sync::Arc;
+
+use super::registry::{dense_chain, Registry};
+use super::Codec;
 use crate::util::{BitReader, BitWriter, Rng};
 
 pub struct TernGrad;
 
-impl Compressor for TernGrad {
+impl Codec for TernGrad {
     fn name(&self) -> String {
         "terngrad".into()
     }
@@ -22,9 +25,9 @@ impl Compressor for TernGrad {
         Some(((dim as f64).sqrt() - 1.0).max(0.0))
     }
 
-    fn compress(&self, x: &[f32], rng: &mut Rng) -> Compressed {
+    fn encode_into(&self, x: &[f32], w: &mut BitWriter, rng: &mut Rng)
+                   -> anyhow::Result<()> {
         let m = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
-        let mut w = BitWriter::with_capacity(x.len() / 4 + 8);
         w.put_f32(m);
         if m > 0.0 {
             for &v in x {
@@ -39,41 +42,44 @@ impl Compressor for TernGrad {
                 w.put(code, 2);
             }
         }
-        let bits = w.bit_len();
-        Compressed::new(w.finish(), bits, x.len(), Codec::TernGrad)
+        Ok(())
     }
-}
 
-pub(super) fn decode(payload: &[u8], out: &mut [f32]) {
-    let mut r = BitReader::new(payload);
-    let m = r.get_f32();
-    if m <= 0.0 {
-        out.fill(0.0);
-        return;
-    }
-    for o in out.iter_mut() {
-        *o = match r.get(2) {
-            1 => m,
-            2 => -m,
-            _ => 0.0,
-        };
-    }
-}
-
-pub(super) fn decode_add(payload: &[u8], acc: &mut [f32], scale: f32) {
-    let mut r = BitReader::new(payload);
-    let m = r.get_f32();
-    if m <= 0.0 {
-        return;
-    }
-    let pm = scale * m;
-    for a in acc.iter_mut() {
-        match r.get(2) {
-            1 => *a += pm,
-            2 => *a -= pm,
-            _ => {}
+    fn decode_into(&self, r: &mut BitReader, out: &mut [f32]) {
+        let m = r.get_f32();
+        if m <= 0.0 {
+            out.fill(0.0);
+            return;
+        }
+        for o in out.iter_mut() {
+            *o = match r.get(2) {
+                1 => m,
+                2 => -m,
+                _ => 0.0,
+            };
         }
     }
+
+    fn decode_add(&self, r: &mut BitReader, acc: &mut [f32], scale: f32) {
+        let m = r.get_f32();
+        if m <= 0.0 {
+            return;
+        }
+        let pm = scale * m;
+        for a in acc.iter_mut() {
+            match r.get(2) {
+                1 => *a += pm,
+                2 => *a -= pm,
+                _ => {}
+            }
+        }
+    }
+}
+
+pub(super) fn register(r: &mut Registry) {
+    r.add("terngrad", "terngrad (ternary vs ℓ∞, 2 bits/coord, ω = √d − 1)",
+          "terngrad",
+          Box::new(|_arg, inner| Ok(dense_chain(Arc::new(TernGrad), inner))));
 }
 
 #[cfg(test)]
@@ -84,7 +90,7 @@ mod tests {
     #[test]
     fn wire_is_2_bits_per_coordinate_plus_header() {
         let x = testutil::test_vector(1000, 1);
-        let c = TernGrad.compress(&x, &mut Rng::new(0));
+        let c = testutil::compress("terngrad", &x, 0);
         assert_eq!(c.bits, 32 + 2 * 1000);
     }
 
@@ -92,7 +98,7 @@ mod tests {
     fn outputs_are_ternary() {
         let x = testutil::test_vector(500, 2);
         let m = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
-        let y = TernGrad.apply(&x, &mut Rng::new(1));
+        let y = TernGrad.apply(&x, &mut Rng::new(1)).unwrap();
         for v in &y {
             assert!(*v == 0.0 || (v.abs() - m).abs() < 1e-6, "{v} vs m={m}");
         }
@@ -103,7 +109,7 @@ mod tests {
         // |x_i| = m ⇒ keep-probability 1
         let x = vec![0.1f32, -5.0, 0.2];
         for seed in 0..20 {
-            let y = TernGrad.apply(&x, &mut Rng::new(seed));
+            let y = TernGrad.apply(&x, &mut Rng::new(seed)).unwrap();
             assert_eq!(y[1], -5.0);
         }
     }
@@ -117,7 +123,7 @@ mod tests {
     #[test]
     fn zero_vector() {
         let x = vec![0.0f32; 10];
-        let c = TernGrad.compress(&x, &mut Rng::new(0));
+        let c = testutil::compress("terngrad", &x, 0);
         assert_eq!(c.bits, 32);
         assert_eq!(c.decode(), x);
     }
@@ -125,7 +131,7 @@ mod tests {
     #[test]
     fn decode_add_matches_decode() {
         let x = testutil::test_vector(100, 4);
-        let c = TernGrad.compress(&x, &mut Rng::new(5));
+        let c = testutil::compress("terngrad", &x, 5);
         let y = c.decode();
         let mut acc = vec![1.0f32; 100];
         c.decode_add(&mut acc, 3.0);

@@ -2,21 +2,34 @@
 //! coordinates. **Biased** — the paper includes it "out of scientific
 //! curiosity" (§VII-B); extending the theory to biased operators is listed
 //! as future work, so `omega` returns `None` and the theory module refuses
-//! it. It is a δ-contraction with δ = k/d (`contraction_delta`).
+//! it (wrap it in `ef(topk:k)` to compensate the bias with a residual). It
+//! is a δ-contraction with δ = k/d (`contraction_delta`).
 //!
-//! Wire format: per kept coordinate ⌈log₂ d⌉ index bits + 32 value bits.
+//! Wire format, standalone: per kept coordinate ⌈log₂ d⌉ index bits + 32
+//! value bits, interleaved (the legacy layout, kept bit-compatible). In a
+//! pipeline (`topk:100>natural`): all k indices first, then the survivor
+//! vector through the inner codec.
 
-use super::{Codec, Compressed, Compressor};
+use std::sync::Arc;
+
+use super::registry::Registry;
+use super::{scratch, Codec};
 use crate::util::{BitReader, BitWriter, Rng};
 
 pub struct TopK {
     k: usize,
+    /// survivor codec for pipeline specs; `None` = interleaved legacy wire
+    inner: Option<Arc<dyn Codec>>,
 }
 
 impl TopK {
     pub fn new(k: usize) -> TopK {
+        Self::chained(k, None)
+    }
+
+    pub fn chained(k: usize, inner: Option<Arc<dyn Codec>>) -> TopK {
         assert!(k >= 1);
-        TopK { k }
+        TopK { k, inner }
     }
 
     /// δ such that E‖C(x) − x‖² ≤ (1 − δ)‖x‖² (contractive-compressor
@@ -30,62 +43,114 @@ fn index_bits(d: usize) -> u32 {
     (usize::BITS - (d - 1).leading_zeros()).max(1)
 }
 
-impl Compressor for TopK {
+impl Codec for TopK {
     fn name(&self) -> String {
-        format!("topk:{}", self.k)
+        match &self.inner {
+            None => format!("topk:{}", self.k),
+            Some(i) => format!("topk:{}>{}", self.k, i.name()),
+        }
     }
 
     fn omega(&self, _dim: usize) -> Option<f64> {
-        None // biased: Assumption 1 does not hold
+        None // biased: Assumption 1 does not hold (chains inherit this)
     }
 
-    fn compress(&self, x: &[f32], _rng: &mut Rng) -> Compressed {
+    fn encode_into(&self, x: &[f32], w: &mut BitWriter, rng: &mut Rng)
+                   -> anyhow::Result<()> {
         let d = x.len();
-        let k = self.k.min(d);
-        // partial selection of the k largest |x_i|
-        let mut idx: Vec<usize> = (0..d).collect();
-        idx.select_nth_unstable_by(k - 1, |&a, &b| {
-            x[b].abs().partial_cmp(&x[a].abs()).unwrap_or(std::cmp::Ordering::Equal)
-        });
-        let mut top: Vec<usize> = idx[..k].to_vec();
-        top.sort_unstable(); // ascending indices compress better + cache-friendly decode
+        anyhow::ensure!(
+            self.k <= d,
+            "topk:{} cannot compress a {d}-dim vector: k exceeds the dimension \
+             (use k ≤ d or drop the sparsifier)",
+            self.k
+        );
+        let k = self.k;
+        scratch::with_usize(|idx| {
+            // partial selection of the k largest |x_i|
+            idx.extend(0..d);
+            idx.select_nth_unstable_by(k - 1, |&a, &b| {
+                x[b].abs().partial_cmp(&x[a].abs()).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            // ascending indices compress better + cache-friendly decode
+            idx[..k].sort_unstable();
+            let ib = index_bits(d);
+            match &self.inner {
+                None => {
+                    for &i in idx[..k].iter() {
+                        w.put(i as u64, ib);
+                        w.put_f32(x[i]);
+                    }
+                    Ok(())
+                }
+                Some(inner) => {
+                    for &i in idx[..k].iter() {
+                        w.put(i as u64, ib);
+                    }
+                    scratch::with_f32(|vals| {
+                        vals.extend(idx[..k].iter().map(|&i| x[i]));
+                        inner.encode_into(vals, w, rng)
+                    })
+                }
+            }
+        })
+    }
+
+    fn decode_into(&self, r: &mut BitReader, out: &mut [f32]) {
+        out.fill(0.0);
+        self.decode_add(r, out, 1.0);
+    }
+
+    fn decode_add(&self, r: &mut BitReader, acc: &mut [f32], scale: f32) {
+        let d = acc.len();
+        let k = self.k.min(d); // encoder refuses k > d; stay in bounds
         let ib = index_bits(d);
-        let mut w = BitWriter::with_capacity((k * (ib as usize + 32)) / 8 + 8);
-        for &i in &top {
-            w.put(i as u64, ib);
-            w.put_f32(x[i]);
+        match &self.inner {
+            None => {
+                for _ in 0..k {
+                    let i = r.get(ib) as usize;
+                    let v = r.get_f32();
+                    acc[i] += scale * v;
+                }
+            }
+            Some(inner) => scratch::with_usize(|idx| {
+                for _ in 0..k {
+                    idx.push(r.get(ib) as usize);
+                }
+                scratch::with_f32(|vals| {
+                    vals.resize(k, 0.0);
+                    inner.decode_into(r, vals);
+                    for (j, &i) in idx.iter().enumerate() {
+                        acc[i] += scale * vals[j];
+                    }
+                })
+            }),
         }
-        let bits = w.bit_len();
-        Compressed::new(w.finish(), bits, d, Codec::TopK { k })
     }
 }
 
-pub(super) fn decode(payload: &[u8], k: usize, out: &mut [f32]) {
-    out.fill(0.0);
-    decode_add(payload, k, out, 1.0);
-}
-
-pub(super) fn decode_add(payload: &[u8], k: usize, acc: &mut [f32], scale: f32) {
-    let d = acc.len();
-    let k = k.min(d);
-    let ib = index_bits(d);
-    let mut r = BitReader::new(payload);
-    for _ in 0..k {
-        let i = r.get(ib) as usize;
-        let v = r.get_f32();
-        acc[i] += scale * v;
-    }
+pub(super) fn register(r: &mut Registry) {
+    r.add("topk", "topk:<k> (largest-magnitude k, biased — pair with ef(...))",
+          "topk:5",
+          Box::new(|arg, inner| {
+              let arg = arg.ok_or_else(|| {
+                  anyhow::anyhow!("topk requires `:k` (e.g. topk:100)")
+              })?;
+              let k: usize = arg.parse()
+                  .map_err(|e| anyhow::anyhow!("topk k `{arg}`: {e}"))?;
+              anyhow::ensure!(k >= 1, "topk k must be ≥ 1");
+              Ok(Arc::new(TopK::chained(k, inner)))
+          }));
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compress::testutil;
+    use crate::compress::{testutil, Compressor};
 
     #[test]
     fn keeps_largest_magnitudes_exactly() {
         let x = vec![0.1f32, -9.0, 0.5, 3.0, -0.2, 7.0];
-        let y = TopK::new(3).apply(&x, &mut Rng::new(0));
+        let y = TopK::new(3).apply(&x, &mut Rng::new(0)).unwrap();
         assert_eq!(y, vec![0.0, -9.0, 0.0, 3.0, 0.0, 7.0]);
     }
 
@@ -94,7 +159,7 @@ mod tests {
         // E‖C(x) − x‖² ≤ (1 − k/d)‖x‖² — deterministic here
         let x = testutil::test_vector(500, 1);
         let tk = TopK::new(50);
-        let y = tk.apply(&x, &mut Rng::new(0));
+        let y = tk.apply(&x, &mut Rng::new(0)).unwrap();
         let err: f64 = x.iter().zip(&y).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
         let norm: f64 = x.iter().map(|&a| (a as f64).powi(2)).sum();
         assert!(err <= (1.0 - tk.contraction_delta(500)) * norm + 1e-9);
@@ -103,21 +168,29 @@ mod tests {
     #[test]
     fn is_biased_and_refuses_omega() {
         assert!(TopK::new(5).omega(100).is_none());
-        assert!(!TopK::new(5).unbiased());
+        assert!(!crate::compress::from_spec("topk:5").unwrap().unbiased());
     }
 
     #[test]
     fn wire_size_formula() {
         let x = testutil::test_vector(1000, 2);
-        let c = TopK::new(100).compress(&x, &mut Rng::new(0));
+        let c = testutil::compress("topk:100", &x, 0);
         // ⌈log₂ 1000⌉ = 10 index bits + 32 value bits per coordinate
         assert_eq!(c.bits, 100 * (10 + 32));
     }
 
     #[test]
-    fn k_geq_d_keeps_everything() {
+    fn k_above_dim_is_a_compress_time_error() {
         let x = testutil::test_vector(10, 3);
-        let y = TopK::new(64).apply(&x, &mut Rng::new(0));
+        let err = TopK::new(64).apply(&x, &mut Rng::new(0)).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("topk:64") && msg.contains("10-dim"), "{msg}");
+    }
+
+    #[test]
+    fn k_equal_dim_keeps_everything() {
+        let x = testutil::test_vector(10, 3);
+        let y = TopK::new(10).apply(&x, &mut Rng::new(0)).unwrap();
         for (a, b) in x.iter().zip(&y) {
             assert!((a - b).abs() < 1e-6);
         }
@@ -126,12 +199,26 @@ mod tests {
     #[test]
     fn decode_add_matches_decode() {
         let x = testutil::test_vector(300, 4);
-        let c = TopK::new(30).compress(&x, &mut Rng::new(0));
+        let c = testutil::compress("topk:30", &x, 0);
         let y = c.decode();
         let mut acc = vec![1.0f32; 300];
         c.decode_add(&mut acc, 2.0);
         for i in 0..300 {
             assert!((acc[i] - (1.0 + 2.0 * y[i])).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn chained_survivors_use_inner_codec() {
+        // topk:50>natural: indices block + 9-bit survivors
+        let x = testutil::test_vector(1000, 5);
+        let c = testutil::compress("topk:50>natural", &x, 6);
+        assert_eq!(c.bits, 50 * 10 + 9 * 50);
+        // the support is still the top-50 coordinates
+        let plain = testutil::compress("topk:50", &x, 6).decode();
+        let chained = c.decode();
+        for i in 0..1000 {
+            assert_eq!(plain[i] == 0.0, chained[i] == 0.0, "support differs at {i}");
         }
     }
 }

@@ -188,6 +188,29 @@ mod tests {
     }
 
     #[test]
+    fn accepts_pipeline_and_ef_specs() {
+        let mut c = TrainConfig {
+            client_comp: "ef(randk:50>qsgd:8)".into(),
+            master_comp: "bernoulli:0.2>natural".into(),
+            ..Default::default()
+        };
+        c.validate().unwrap();
+        // malformed pipelines are caught at config time, not mid-run
+        c.master_comp = "randk:50>".into();
+        assert!(c.validate().is_err());
+        c.master_comp = "ef(natural".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn spec_error_names_registered_codecs() {
+        let c = TrainConfig { client_comp: "gzip".into(), ..Default::default() };
+        let err = format!("{:#}", c.validate().unwrap_err());
+        assert!(err.contains("unknown compressor `gzip`"), "{err}");
+        assert!(err.contains("natural") && err.contains("qsgd"), "{err}");
+    }
+
+    #[test]
     fn rejects_bad_configs() {
         let mut c = TrainConfig { algo: "sgd".into(), ..Default::default() };
         assert!(c.validate().is_err());

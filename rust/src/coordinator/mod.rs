@@ -191,6 +191,11 @@ pub fn env_for_model(rt: &crate::runtime::XlaRuntime, model: &str,
 }
 
 /// Instantiate the algorithm a `TrainConfig` describes.
+///
+/// Compression plumbing is descriptor-based: the algorithm constructors
+/// parse the (pipeline) specs once into shared `Arc<dyn Compressor>`
+/// descriptors; per-client stateful instances (RNG streams, error-feedback
+/// residuals) are created inside `run`, so nothing here is per-client.
 pub fn algo_from_config(cfg: &crate::config::TrainConfig)
                         -> anyhow::Result<Box<dyn crate::algorithms::FedAlgorithm>> {
     use crate::algorithms::{FedAvg, FedOpt, L2gd};
@@ -241,6 +246,19 @@ mod tests {
         for s in &env.shards {
             assert!(s.len() >= 8);
         }
+    }
+
+    #[test]
+    fn algo_from_config_builds_pipeline_specs() {
+        use crate::algorithms::FedAlgorithm;
+        let cfg = crate::config::TrainConfig {
+            algo: "l2gd".into(),
+            client_comp: "ef(randk:10>qsgd:8)".into(),
+            master_comp: "natural".into(),
+            ..Default::default()
+        };
+        let algo = algo_from_config(&cfg).unwrap();
+        assert!(algo.label().contains("ef(randk:10>qsgd:8)"), "{}", algo.label());
     }
 
     #[test]

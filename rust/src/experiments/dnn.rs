@@ -7,7 +7,7 @@ use std::sync::Arc;
 use crate::algorithms::{FedAlgorithm, FedAvg, FedEnv, FedOpt, L2gd};
 use crate::coordinator::{image_env, ImageEnvCfg};
 use crate::metrics::{write_multi_csv, Series};
-use crate::runtime::XlaRuntime;
+use crate::runtime::{Backend as _, XlaRuntime};
 
 #[derive(Clone, Debug)]
 pub struct DnnCfg {

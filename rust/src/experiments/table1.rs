@@ -1,8 +1,12 @@
 //! Table I: the compressor inventory with *measured* properties —
 //! bits/coordinate on the wire, Monte-Carlo E‖C(x)−x‖²/‖x‖² against the
 //! theoretical ω, and unbiasedness. `pfl compressors` prints it.
+//!
+//! Registry-driven: the row list is spec strings, so pipeline chains
+//! (`randk:51>qsgd:4`) and the error-feedback wrapper measure through the
+//! exact same harness as the primitive operators.
 
-use crate::compress::{self, Compressor};
+use crate::compress::{self, Compressor, CompressorState};
 use crate::util::stats::{l2_dist_sq, l2_norm};
 use crate::util::Rng;
 
@@ -19,12 +23,14 @@ pub fn measure(c: &dyn Compressor, dim: usize, trials: usize, seed: u64) -> Tabl
     let mut rng = Rng::new(seed);
     let x: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
     let norm_sq = l2_norm(&x).powi(2);
+    let mut state = c.instantiate(dim, seed ^ 0x7AB1E);
     let mut var_acc = 0.0;
     let mut bits_acc = 0u64;
+    let mut buf = compress::Compressed::empty();
     for _ in 0..trials {
-        let comp = c.compress(&x, &mut rng);
-        bits_acc += comp.bits;
-        let y = comp.decode();
+        state.compress_into(&x, &mut buf).expect("table-1 specs compress");
+        bits_acc += buf.bits;
+        let y = buf.decode();
         var_acc += l2_dist_sq(&y, &x);
     }
     let bits_per_coord = bits_acc as f64 / (trials * dim) as f64;
@@ -40,7 +46,9 @@ pub fn measure(c: &dyn Compressor, dim: usize, trials: usize, seed: u64) -> Tabl
 
 pub fn run(dim: usize, trials: usize) -> Vec<Table1Row> {
     let specs = ["identity", "natural", "qsgd:15", "terngrad",
-                 "bernoulli:0.1", "randk:51", "topk:51"];
+                 "bernoulli:0.1", "randk:51", "topk:51",
+                 // pipeline rows: quantized survivors + error feedback
+                 "randk:51>qsgd:4", "bernoulli:0.1>natural", "ef(topk:51)"];
     specs
         .iter()
         .map(|s| measure(compress::from_spec(s).unwrap().as_ref(), dim, trials, 42))
@@ -49,10 +57,10 @@ pub fn run(dim: usize, trials: usize) -> Vec<Table1Row> {
 
 pub fn format_table(rows: &[Table1Row]) -> String {
     let mut s = String::from(
-        "compressor      unbiased  ω(theory)   ω(measured)  bits/coord  ×compression\n");
+        "compressor            unbiased  ω(theory)   ω(measured)  bits/coord  ×compression\n");
     for r in rows {
         s.push_str(&format!(
-            "{:<15} {:<9} {:<11} {:<12.4} {:<11.2} {:.1}\n",
+            "{:<21} {:<9} {:<11} {:<12.4} {:<11.2} {:.1}\n",
             r.name,
             r.unbiased,
             r.omega_theory.map_or("—".into(), |w| format!("{w:.4}")),
@@ -86,5 +94,18 @@ mod tests {
         assert!((get("natural").bits_per_coord - 9.0).abs() < 0.01);
         assert!((get("terngrad").bits_per_coord - 2.0).abs() < 0.1);
         assert!((get("identity").bits_per_coord - 32.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chained_rows_measure_through_same_harness() {
+        let rows = run(1024, 5);
+        let chain = rows.iter().find(|r| r.name == "randk:51>qsgd:4").unwrap();
+        assert!(chain.unbiased);
+        // survivors quantized: well under plain randk's 64 + 32·51 bits
+        assert!(chain.bits_per_coord < (64.0 + 32.0 * 51.0) / 1024.0,
+                "bits/coord = {}", chain.bits_per_coord);
+        let ef = rows.iter().find(|r| r.name == "ef(topk:51)").unwrap();
+        assert!(!ef.unbiased);
+        assert!(ef.omega_theory.is_none());
     }
 }

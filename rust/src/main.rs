@@ -4,15 +4,24 @@
 //!   train        run one configured training job (config file + overrides)
 //!   repro <id>   regenerate a paper table/figure (fig2 fig3 fig4 fig5 fig6
 //!                fig78 fig9 table1 table2) at configurable scale
-//!   tune         Theorems 3–4 calculator: optimal p for rate/communication
-//!   compressors  measured Table I (bits/coord, ω) for every operator
+//!   theory       Theorems 3–4 calculator: composed ω of the compression
+//!                specs + optimal p for rate/communication (`tune` = alias)
+//!   compressors  measured Table I (bits/coord, ω) for every registered
+//!                operator, pipelines included
 //!   models       list AOT artifact models
+//!
+//! Compressor specs accept pipelines: `randk:50>qsgd:8` sparsifies then
+//! quantizes the survivors, `ef(<spec>)` adds error feedback. See
+//! `pfl train --help`.
 //!
 //! Examples:
 //!   pfl train --model native_logreg --algo l2gd --p 0.4 --lambda 10 --n 5
+//!   pfl train --algo l2gd --client-comp "ef(randk:50>qsgd:8)" --master-comp natural
 //!   pfl repro fig3 --scale 0.2
-//!   pfl tune --n 10 --lf 2.0 --mu 0.01 --lambda 5 --client-comp natural
+//!   pfl theory --n 10 --lf 2.0 --mu 0.01 --lambda 5 --client-comp "randk:50>qsgd:8"
+//!   (quote pipeline specs: an unquoted `>` is shell redirection)
 
+use pfl::algorithms::FedAlgorithm as _;
 use pfl::config::TrainConfig;
 use pfl::coordinator;
 use pfl::experiments::{dnn, fig2, fig3, fig78, table1};
@@ -35,7 +44,7 @@ fn run() -> anyhow::Result<()> {
     match cmd {
         "train" => cmd_train(&args),
         "repro" => cmd_repro(&args),
-        "tune" => cmd_tune(&args),
+        "theory" | "tune" => cmd_theory(&args),
         "compressors" => cmd_compressors(&args),
         "models" => cmd_models(&args),
         _ => {
@@ -51,20 +60,60 @@ pfl — Personalized Federated Learning with Communication Compression
 usage: pfl <command> [options]
 
 commands:
-  train        run one training job
+  train        run one training job (`pfl train --help` for the full
+               compressor-spec grammar)
                --model <name|native_logreg> --algo <l2gd|fedavg|fedopt>
                --n <clients> --steps <k> --p --lambda --eta --agg
                --local-lr --local-steps --client-comp --master-comp
                --config <file.json> --out <dir>
   repro <id>   regenerate a paper artifact: fig2 fig3 fig4 fig5 fig6
                fig78 fig9 table1 table2   [--scale 0..1] [--out results]
-  tune         optimal p per Theorems 3-4:
+  theory       composed ω of the given specs + optimal p per Theorems 3-4
+               (alias: tune):
                --n --lf --mu --lambda --client-comp --master-comp [--dim]
-  compressors  measured Table I
+  compressors  measured Table I for every registered operator
   models       list AOT models (needs `make artifacts`)
 ";
 
+const TRAIN_HELP: &str = "\
+pfl train — run one training job
+
+  --model <name>        native_logreg, or an AOT artifact model
+  --algo <a>            l2gd | fedavg | fedopt
+  --n --steps --eval-every --seed
+  --p --lambda --eta --agg            (L2GD; eta 0 derives from local-lr/agg)
+  --local-lr --local-steps --server-lr
+  --client-comp <spec>  client→master compression (default natural)
+  --master-comp <spec>  master→clients compression (default natural)
+  --config <file.json> --out <dir> --artifacts <dir>
+
+compressor spec grammar:
+  spec  := \"ef(\" spec \")\" | chain        ef(...) = error feedback: the
+                                          residual x+e−C(x+e) carries over
+                                          rounds (stateful, biased)
+  chain := atom (\">\" atom)*              a>b pipes a's output into b;
+                                          selector stages hand only their
+                                          survivors on: randk:50>qsgd:8
+                                          quantizes 50 values, not d
+  atom  := name [\":\" arg]
+
+registered operators (pfl compressors measures them):
+";
+
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    if args.flag("help") {
+        print!("{}", TRAIN_HELP);
+        for (name, help) in pfl::compress::registry::help_lines() {
+            println!("  {name:<12} {help}");
+        }
+        println!("\nexamples (quote pipeline specs — an unquoted `>` is shell \
+                  redirection):");
+        println!("  pfl train --algo l2gd --client-comp natural --master-comp natural");
+        println!("  pfl train --algo l2gd --client-comp \"ef(randk:50>qsgd:8)\" \
+                  --master-comp natural");
+        println!("  pfl train --algo fedavg --client-comp \"topk:100>natural\"");
+        return Ok(());
+    }
     let cfg = TrainConfig::from_args(args)?;
     let env = if cfg.model == "native_logreg" {
         coordinator::logreg_env(&coordinator::LogregEnvCfg {
@@ -210,21 +259,13 @@ fn cmd_repro(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_tune(args: &Args) -> anyhow::Result<()> {
+fn cmd_theory(args: &Args) -> anyhow::Result<()> {
     let n: usize = args.parse_or("n", 10)?;
     let dim: usize = args.parse_or("dim", 10_000)?;
     let mu: f64 = args.parse_or("mu", 0.01)?;
     let lambda: f64 = args.parse_or("lambda", 5.0)?;
     let client = args.str_or("client-comp", "natural");
     let master = args.str_or("master-comp", "natural");
-    let cc = pfl::compress::from_spec(&client)?;
-    let cm = pfl::compress::from_spec(&master)?;
-    let omega = cc.omega(dim).ok_or_else(|| {
-        anyhow::anyhow!("`{client}` is biased: Theorems 3-4 need unbiased C_i")
-    })?;
-    let omega_m = cm.omega(dim).ok_or_else(|| {
-        anyhow::anyhow!("`{master}` is biased: Theorems 3-4 need unbiased C_M")
-    })?;
     // L_f: either given, or estimated from a synthetic logreg instance
     let lf: f64 = match args.get("lf") {
         Some(s) => s.parse()?,
@@ -233,8 +274,12 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
             pfl::theory::logreg_smoothness(&data, 0.01, 30)
         }
     };
-    let c = Consts { n, lf, mu, lambda, omega, omega_m };
-    println!("constants: n={n} L_f={lf:.4} μ={mu} λ={lambda} ω={omega:.4} ω_M={omega_m:.4}");
+    // composed ω of the (possibly chained) specs — biased specs refused
+    let c = Consts::for_specs(n, lf, mu, lambda, dim, &client, &master)?;
+    let (omega, omega_m) = (c.omega, c.omega_m);
+    println!("constants: n={n} L_f={lf:.4} μ={mu} λ={lambda}");
+    println!("composed ω  (client `{client}`): {omega:.4}");
+    println!("composed ω_M (master `{master}`): {omega_m:.4}");
     println!("α = {:.4}", c.alpha());
     let pr = c.p_star_rate();
     let pc = c.p_star_comm();

@@ -7,11 +7,20 @@
 //! settings. Every closed form is cross-checked against brute-force grid
 //! minimization in the tests.
 
+use crate::compress::Compressor;
 use crate::data::Dataset;
 
 /// Joint compression factor of C = (C_1, …, C_n): ω = max_i ω_i (Lemma 1).
 pub fn omega_joint(omegas: &[f64]) -> f64 {
     omegas.iter().cloned().fold(0.0, f64::max)
+}
+
+/// ω of a pipeline C_m ∘ … ∘ C_1 of unbiased stages: Π(1+ωᵢ) − 1.
+///
+/// The scalar form of [`crate::compress::compose_omega`]; the spec parser
+/// applies it stage-by-stage, this helper serves hand-computed chains.
+pub fn omega_chain(omegas: &[f64]) -> f64 {
+    omegas.iter().fold(1.0, |acc, w| acc * (1.0 + w)) - 1.0
 }
 
 /// α := 4(4ω + 4ω_M(1+ω))/μ (Lemma 5).
@@ -35,6 +44,26 @@ pub struct Consts {
 }
 
 impl Consts {
+    /// Build constants from compressor specs: ω/ω_M are the (possibly
+    /// pipeline-composed) factors of the parsed specs at dimension `dim`.
+    /// Fails with a readable message for biased specs (`topk:k`, `ef(...)`)
+    /// — Theorems 3–4 require Assumption 1.
+    pub fn for_specs(n: usize, lf: f64, mu: f64, lambda: f64, dim: usize,
+                     client_spec: &str, master_spec: &str) -> anyhow::Result<Consts> {
+        let biased = |spec: &str| {
+            anyhow::anyhow!(
+                "`{spec}` is biased (no Assumption-1 ω): Theorems 3-4 need \
+                 unbiased compression — wrap biased stages differently or \
+                 use an unbiased chain"
+            )
+        };
+        let cc = crate::compress::from_spec(client_spec)?;
+        let cm = crate::compress::from_spec(master_spec)?;
+        let omega = cc.omega(dim).ok_or_else(|| biased(client_spec))?;
+        let omega_m = cm.omega(dim).ok_or_else(|| biased(master_spec))?;
+        Ok(Consts { n, lf, mu, lambda, omega, omega_m })
+    }
+
     pub fn big_l(&self) -> f64 {
         self.n as f64 * self.lf
     }
@@ -282,6 +311,36 @@ mod tests {
     fn omega_joint_is_max() {
         assert_eq!(omega_joint(&[0.1, 0.5, 0.3]), 0.5);
         assert_eq!(omega_joint(&[]), 0.0);
+    }
+
+    #[test]
+    fn omega_chain_composes_multiplicatively() {
+        assert_eq!(omega_chain(&[]), 0.0);
+        assert!((omega_chain(&[0.125]) - 0.125).abs() < 1e-15);
+        assert!((omega_chain(&[1.0, 0.125]) - 1.25).abs() < 1e-12);
+        // matches the spec parser's stage-by-stage composition
+        let spec = crate::compress::from_spec("randk:50>qsgd:8").unwrap();
+        let by_hand = omega_chain(&[
+            1000.0 / 50.0 - 1.0,
+            (50.0f64 / 64.0).min(50.0f64.sqrt() / 8.0),
+        ]);
+        assert!((spec.omega(1000).unwrap() - by_hand).abs() < 1e-12);
+    }
+
+    #[test]
+    fn consts_for_specs_composes_and_refuses_biased() {
+        let c = Consts::for_specs(10, 2.0, 0.01, 5.0, 1000,
+                                  "randk:50>qsgd:8", "natural").unwrap();
+        assert!((c.omega_m - 0.125).abs() < 1e-15);
+        let w1 = 1000.0 / 50.0 - 1.0;
+        let w2 = (50.0f64 / 64.0).min(50.0f64.sqrt() / 8.0);
+        assert!((c.omega - ((1.0 + w1) * (1.0 + w2) - 1.0)).abs() < 1e-12);
+        // biased client or master spec is refused with a readable message
+        for (cl, ms) in [("topk:10", "natural"), ("natural", "ef(randk:5)")] {
+            let err = Consts::for_specs(10, 2.0, 0.01, 5.0, 1000, cl, ms)
+                .expect_err("biased spec must be refused");
+            assert!(format!("{err}").contains("biased"), "{err}");
+        }
     }
 
     #[test]

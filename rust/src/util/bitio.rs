@@ -24,6 +24,14 @@ impl BitWriter {
         BitWriter { buf: Vec::with_capacity(bytes), acc: 0, fill: 0 }
     }
 
+    /// Reuse an existing byte buffer (cleared, capacity kept) — the
+    /// zero-alloc wire path: `compress_into` round-trips the payload `Vec`
+    /// through here so steady-state encoding never touches the allocator.
+    pub fn reuse(mut buf: Vec<u8>) -> Self {
+        buf.clear();
+        BitWriter { buf, acc: 0, fill: 0 }
+    }
+
     /// Append the low `n` bits of `v` (n ≤ 57 to keep the accumulator safe).
     ///
     /// §Perf: spills 32 bits at a time (one `extend_from_slice` per ~4

@@ -181,14 +181,22 @@ impl Rng {
 
     /// Sample `k` distinct indices from [0, n) (partial Fisher–Yates).
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx = Vec::new();
+        self.sample_indices_into(n, k, &mut idx);
+        idx
+    }
+
+    /// `sample_indices` into a caller-owned buffer (same draws, same
+    /// result) — lets the rand-k wire path reuse its scratch across rounds.
+    pub fn sample_indices_into(&mut self, n: usize, k: usize, idx: &mut Vec<usize>) {
         assert!(k <= n);
-        let mut idx: Vec<usize> = (0..n).collect();
+        idx.clear();
+        idx.extend(0..n);
         for i in 0..k {
             let j = i + self.usize_below(n - i);
             idx.swap(i, j);
         }
         idx.truncate(k);
-        idx
     }
 
     /// Fill a slice with uniform [0,1) f32s.

@@ -68,30 +68,51 @@ impl ThreadPool {
         R: Send,
         F: Fn(usize, &T) -> R + Sync,
     {
+        let mut units = vec![(); items.len()];
+        self.scope_zip_mut(&mut units, items, |i, _unit, item| f(i, item))
+    }
+
+    /// Run `f(i, &mut states[i], &items[i])` for every index on the pool;
+    /// results in input order. The per-index `&mut` access is what the
+    /// stateful compressor fan-out needs (each client owns its
+    /// `CompressorState` + wire buffer) — no `Mutex` wrapping required.
+    pub fn scope_zip_mut<S, T, R, F>(&self, states: &mut [S], items: &[T], f: F) -> Vec<R>
+    where
+        S: Send,
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &mut S, &T) -> R + Sync,
+    {
         let n = items.len();
+        assert_eq!(states.len(), n, "states/items length mismatch");
         let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
         if n == 0 {
             return Vec::new();
         }
         // Scoped-threads trick without crossbeam: hand out raw slots guarded
         // by a completion channel. Safety: each index is written exactly once
-        // and the borrow outlives the jobs because we block below.
+        // (so the &mut derived per index is unique) and the borrows outlive
+        // the jobs because we block below.
         let (done_tx, done_rx) = mpsc::channel::<()>();
         let out_ptr = SendPtr(out.as_mut_ptr());
+        let state_ptr = SendPtr(states.as_mut_ptr());
         let f_ref = &f;
         for i in 0..n {
             let tx = done_tx.clone();
-            let p = out_ptr;
+            let po = out_ptr;
+            let ps = state_ptr;
             let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
-                let p = p; // capture the whole SendPtr, not its raw field
-                let r = f_ref(i, &items[i]);
+                // capture the whole SendPtrs, not their raw fields
+                let po = po;
+                let ps = ps;
+                let r = unsafe { f_ref(i, &mut *ps.0.add(i), &items[i]) };
                 unsafe {
-                    *p.0.add(i) = Some(r);
+                    *po.0.add(i) = Some(r);
                 }
                 let _ = tx.send(());
             });
             // lifetime erasure: sound because we block on the completion
-            // channel below before any borrow (f, items, out) can end.
+            // channel below before any borrow (f, items, states, out) ends.
             let job: Job = unsafe { std::mem::transmute(job) };
             self.tx.send(Msg::Run(job)).expect("pool alive");
         }
@@ -155,6 +176,28 @@ mod tests {
     fn empty_input() {
         let pool = ThreadPool::new(2);
         let out: Vec<u32> = pool.scope_map(&Vec::<u32>::new(), |_, &x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn zip_mut_mutates_each_state_once() {
+        let pool = ThreadPool::new(4);
+        let mut states: Vec<u64> = vec![100; 32];
+        let items: Vec<u64> = (0..32).collect();
+        let out = pool.scope_zip_mut(&mut states, &items, |i, s, &x| {
+            *s += x;
+            *s + i as u64
+        });
+        for i in 0..32 {
+            assert_eq!(states[i], 100 + i as u64);
+            assert_eq!(out[i], 100 + 2 * i as u64);
+        }
+    }
+
+    #[test]
+    fn zip_mut_empty_input() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<()> = pool.scope_zip_mut(&mut Vec::<u8>::new(), &[], |_, _, _: &u8| ());
         assert!(out.is_empty());
     }
 

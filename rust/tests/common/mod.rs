@@ -3,6 +3,7 @@
 //! The XLA-backed tests need `make artifacts` to have run; they skip with a
 //! loud message (rather than fail) when the bundle is absent so that plain
 //! `cargo test` works on a fresh checkout.
+#![allow(dead_code)] // each test binary uses a subset of these helpers
 
 use std::sync::Arc;
 

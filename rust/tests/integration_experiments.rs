@@ -34,12 +34,17 @@ fn fig2_timelines_have_paper_shape() {
 #[test]
 fn table1_rows_cover_all_operators() {
     let rows = table1::run(512, 10);
-    assert_eq!(rows.len(), 7);
-    // identity must be exactly lossless & widest; terngrad the narrowest
-    // dense code; topk the only biased one
+    // 7 primitives + 2 pipeline chains + the ef(...) wrapper
+    assert_eq!(rows.len(), 10);
+    // biased rows: topk and anything wrapping it (chains inherit bias)
     let biased: Vec<_> = rows.iter().filter(|r| !r.unbiased).collect();
-    assert_eq!(biased.len(), 1);
-    assert!(biased[0].name.starts_with("topk"));
+    assert_eq!(biased.len(), 2);
+    for b in &biased {
+        assert!(b.name.contains("topk"), "{}", b.name);
+    }
+    // the chained rows are present and measured
+    assert!(rows.iter().any(|r| r.name == "randk:51>qsgd:4"));
+    assert!(rows.iter().any(|r| r.name == "ef(topk:51)"));
 }
 
 #[test]

@@ -1,0 +1,115 @@
+//! Pipeline/EF integration: the composable compression API driven through
+//! full L2GD/FedAvg runs with exact bit accounting — the acceptance flow of
+//! `pfl train --algo l2gd --client-comp "ef(randk:50>qsgd:8)"
+//! --master-comp natural`.
+
+mod common;
+
+use std::sync::Arc;
+
+use common::logreg_fed_env;
+use pfl::algorithms::{FedAlgorithm, FedAvg, L2gd};
+use pfl::runtime::NativeLogreg;
+
+fn native() -> Arc<NativeLogreg> {
+    Arc::new(NativeLogreg::new(123, 0.01, 512, 1024))
+}
+
+/// The flagship spec end-to-end: error feedback around sparsify-then-
+/// quantize uplink, natural downlink. Bits are exactly accounted: uplink =
+/// 64-bit seed + qsgd stream over 50 survivors, downlink = 9·123.
+#[test]
+fn ef_chain_l2gd_runs_with_exact_bit_accounting() {
+    let env = logreg_fed_env(native(), 5, 0);
+    let mut alg = L2gd::from_local_and_agg(0.4, 0.3, 0.5, 5,
+                                           "ef(randk:50>qsgd:8)", "natural")
+        .unwrap();
+    let s = alg.run(&env, 300, 100).unwrap();
+    let r = s.records.last().unwrap();
+    assert!(r.comm_rounds > 0);
+    // downlink: natural is exactly 9 bits/coordinate
+    assert_eq!(r.bits_down, r.comm_rounds * 9 * 123);
+    // uplink: seed (64) + norm (32) + per-survivor sign+γ ∈ [2, 2⌈log₂9⌉+…]
+    // — bounded per round, and strictly below raw randk:50's 64 + 32·50
+    let up_per_client_round = r.bits_up as f64 / (5 * r.comm_rounds) as f64;
+    assert!(up_per_client_round >= (64 + 32 + 2 * 50) as f64,
+            "up/client/round = {up_per_client_round}");
+    assert!(up_per_client_round < (64 + 32 * 50) as f64,
+            "up/client/round = {up_per_client_round}");
+    // training still progresses under the biased-but-compensated uplink
+    assert!(r.personal_loss < s.records[0].personal_loss,
+            "personal loss {} -> {}", s.records[0].personal_loss, r.personal_loss);
+}
+
+/// Pipelines are deterministic through the thread pool, like everything
+/// else in the harness.
+#[test]
+fn pipeline_runs_are_deterministic_across_pool_sizes() {
+    let run = |pool: usize| {
+        let mut env = logreg_fed_env(native(), 4, 7);
+        env.pool = pfl::util::threadpool::ThreadPool::new(pool);
+        let mut alg = L2gd::from_local_and_agg(0.3, 0.3, 0.4, 4,
+                                               "ef(randk:30>qsgd:8)",
+                                               "bernoulli:0.5>natural")
+            .unwrap();
+        alg.run(&env, 120, 40).unwrap()
+    };
+    let a = run(1);
+    let b = run(8);
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.train_loss, rb.train_loss);
+        assert_eq!(ra.personal_loss, rb.personal_loss);
+        assert_eq!(ra.bits_up, rb.bits_up);
+        assert_eq!(ra.bits_down, rb.bits_down);
+    }
+}
+
+/// Chained uplink on FedAvg's difference schema: top-k survivors quantized
+/// by natural, with exact per-round bit accounting.
+#[test]
+fn fedavg_chained_uplink_bit_accounting() {
+    let env = logreg_fed_env(native(), 4, 3);
+    let mut alg = FedAvg::new(0.5, 2, "topk:20>natural", "identity").unwrap();
+    let s = alg.run(&env, 30, 10).unwrap();
+    let r = s.records.last().unwrap();
+    assert_eq!(r.comm_rounds, 30);
+    // d = 123 ⇒ 7 index bits; 20·(7 + 9) per client per round
+    assert_eq!(r.bits_up, 30 * 4 * 20 * (7 + 9));
+    assert_eq!(r.bits_down, 30 * 4 * 32 * 123);
+    assert!(r.train_loss.is_finite());
+}
+
+/// Legacy specs still parse to the exact legacy wire sizes through the
+/// registry path (back-compat guard for every pre-pipeline spec string).
+#[test]
+fn legacy_spec_wire_sizes_unchanged() {
+    let env = logreg_fed_env(native(), 3, 5);
+    for (spec, up_bits_per_client) in [
+        ("identity", 32 * 123),
+        ("natural", 9 * 123),
+        ("terngrad", 32 + 2 * 123),
+        ("randk:40", 64 + 32 * 40),
+        ("topk:40", 40 * (7 + 32)),
+    ] {
+        let mut alg = L2gd::from_local_and_agg(0.4, 0.3, 0.5, 3,
+                                               spec, "identity").unwrap();
+        let s = alg.run(&env, 80, 80).unwrap();
+        let r = s.records.last().unwrap();
+        assert_eq!(r.bits_up, r.comm_rounds * 3 * up_bits_per_client,
+                   "spec `{spec}`");
+    }
+}
+
+/// An oversized sparsifier stage must fail the run with a clear
+/// compress-time error (not a panic, not silent truncation).
+#[test]
+fn oversized_pipeline_stage_errors_cleanly() {
+    let env = logreg_fed_env(native(), 3, 9);
+    let mut alg = L2gd::from_local_and_agg(0.5, 0.3, 0.5, 3,
+                                           "randk:500>qsgd:8", "identity")
+        .unwrap();
+    let err = alg.run(&env, 60, 60).expect_err("randk:500 over d=123");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("randk:500") && msg.contains("exceeds the dimension"),
+            "{msg}");
+}

@@ -7,7 +7,7 @@ use std::sync::Arc;
 
 use common::logreg_fed_env;
 use pfl::algorithms::{FedAlgorithm, L2gd};
-use pfl::runtime::NativeLogreg;
+use pfl::runtime::{Backend as _, NativeLogreg};
 
 fn native() -> Arc<NativeLogreg> {
     Arc::new(NativeLogreg::new(123, 0.01, 512, 1024))

@@ -1,0 +1,210 @@
+//! Minimal offline shim of the `anyhow` error-handling API.
+//!
+//! The build environment has no crates.io access, so this path crate
+//! provides the slice of `anyhow` the codebase uses: [`Error`],
+//! [`Result`], and the `anyhow!` / `bail!` / `ensure!` macros, with the
+//! same `{e}` / `{e:#}` / `{e:?}` formatting behavior (alternate display
+//! walks the source chain as `a: b: c`).
+//!
+//! As in real `anyhow`, `Error` deliberately does NOT implement
+//! `std::error::Error`; that is what makes the blanket
+//! `From<E: std::error::Error>` conversion (and thus `?` on any std error)
+//! coherent alongside the reflexive `From<Error> for Error`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Type-erased error: a boxed error trait object plus chain formatting.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Construct from a displayable message (what `anyhow!` produces).
+    pub fn msg<M>(message: M) -> Error
+    where
+        M: fmt::Display,
+    {
+        Error { inner: Box::new(MessageError(message.to_string())) }
+    }
+
+    /// Construct from any concrete error type.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Error { inner: Box::new(error) }
+    }
+
+    /// The root message (no chain).
+    pub fn to_string_root(&self) -> String {
+        self.inner.to_string()
+    }
+
+    /// Iterate the error chain starting at this error.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: Some(self.inner.as_ref()) }
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        if f.alternate() {
+            for cause in self.chain().skip(1) {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut causes = self.chain().skip(1).peekable();
+        if causes.peek().is_some() {
+            write!(f, "\n\nCaused by:")?;
+            for cause in causes {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Iterator over an error's `source()` chain.
+pub struct Chain<'a> {
+    next: Option<&'a (dyn StdError + 'static)>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a (dyn StdError + 'static);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let current = self.next?;
+        self.next = current.source();
+        Some(current)
+    }
+}
+
+/// Plain-message error backing `anyhow!("...")`.
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+/// `anyhow::Result<T>` — `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Create an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with an error built like `anyhow!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(
+                ::std::concat!("condition failed: `", ::std::stringify!($cond), "`")
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"))?;
+        Ok(())
+    }
+
+    fn guarded(x: i32) -> Result<i32> {
+        ensure!(x > 0, "x must be positive (got {x})");
+        if x > 100 {
+            bail!("x too large: {x}");
+        }
+        Ok(x)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = fails_io().unwrap_err();
+        assert!(format!("{e}").contains("disk on fire"));
+        assert!(format!("{e:#}").contains("disk on fire"));
+        assert!(format!("{e:?}").contains("disk on fire"));
+    }
+
+    #[test]
+    fn macros_format_and_return() {
+        assert_eq!(guarded(5).unwrap(), 5);
+        let e = guarded(-1).unwrap_err();
+        assert_eq!(format!("{e}"), "x must be positive (got -1)");
+        let e = guarded(200).unwrap_err();
+        assert_eq!(format!("{e}"), "x too large: 200");
+    }
+
+    #[test]
+    fn error_propagates_through_question_mark() {
+        fn outer() -> Result<()> {
+            guarded(-3)?;
+            Ok(())
+        }
+        assert!(outer().is_err());
+    }
+
+    #[test]
+    fn bare_ensure_names_the_condition() {
+        fn f() -> Result<()> {
+            ensure!(1 + 1 == 3);
+            Ok(())
+        }
+        assert!(format!("{}", f().unwrap_err()).contains("1 + 1 == 3"));
+    }
+}
