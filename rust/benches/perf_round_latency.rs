@@ -1,6 +1,12 @@
-//! Perf bench: end-to-end L2GD step latency — local gradient steps and
-//! fresh aggregation rounds — on the native backend (protocol overhead)
-//! and the XLA backend (full PJRT path), across n × P.
+//! Perf bench: the L2GD round engine — end-to-end step throughput across
+//! n × d, engine vs the seed-semantics reference loop, plus a
+//! counting-allocator **assertion** that a warmed engine performs zero
+//! heap allocations per steady-state step (local, fresh-aggregate and
+//! cached-aggregate alike), for the identity, natural and chained/EF wire
+//! paths.
+//!
+//! The XLA/PJRT section still runs when artifacts are present (the
+//! allocating `Backend::grad` default path keeps that backend working).
 //!
 //!     cargo bench --bench perf_round_latency
 
@@ -10,54 +16,119 @@ mod harness;
 use std::sync::Arc;
 
 use harness::bench;
-use pfl::algorithms::{FedAlgorithm, L2gd};
+use pfl::algorithms::{reference, FedAlgorithm, FedEnv, L2gd};
 use pfl::data::synth;
 use pfl::runtime::{NativeLogreg, XlaRuntime};
+use pfl::util::alloc_count::{self, CountingAlloc};
 use pfl::util::threadpool::ThreadPool;
 
+#[global_allocator]
+static COUNTING: CountingAlloc = CountingAlloc;
+
 fn env(backend: Arc<dyn pfl::runtime::Backend>, n: usize, d: usize,
-       rows: usize) -> pfl::algorithms::FedEnv {
+       rows: usize) -> FedEnv {
     let (train, test) = synth::logistic_split(rows * n, 128, d, 0.03, 0);
     let shards = train.split_contiguous(n);
-    pfl::algorithms::FedEnv {
-        backend,
-        shards,
-        train_eval: train,
-        test,
-        pool: ThreadPool::new(ThreadPool::default_size()),
-        seed: 0,
-    }
+    FedEnv::new(backend, shards, train, test,
+                ThreadPool::new(ThreadPool::default_size()), 0)
 }
 
-fn time_run(label: &str, mut alg: L2gd, e: &pfl::algorithms::FedEnv, steps: u64) {
-    let st = bench(1, 3, || {
-        std::hint::black_box(alg.run(e, steps, steps).unwrap());
+fn time_engine(label: &str, alg: &L2gd, e: &FedEnv, steps: u64) -> f64 {
+    let mut eng = alg.engine(e).unwrap();
+    eng.run_steps(0, steps).unwrap(); // warmup
+    let mut k = steps;
+    let st = bench(0, 3, || {
+        eng.run_steps(k, steps).unwrap();
+        k += steps;
+        std::hint::black_box(eng.xs());
     });
-    println!("  {:<40} {:>20}  ({:.1} steps/ms)",
-             label, st.human(), steps as f64 / (st.mean_ns / 1e6));
+    let sps = steps as f64 / (st.mean_ns / 1e9);
+    println!("  {:<44} {:>20}  ({:.0} steps/s)", label, st.human(), sps);
+    sps
+}
+
+fn time_reference(label: &str, alg: &L2gd, e: &FedEnv, steps: u64) -> f64 {
+    let st = bench(1, 3, || {
+        std::hint::black_box(reference::run_l2gd(alg, e, steps, steps).unwrap());
+    });
+    let sps = steps as f64 / (st.mean_ns / 1e9);
+    println!("  {:<44} {:>20}  ({:.0} steps/s)", label, st.human(), sps);
+    sps
+}
+
+fn assert_zero_alloc_steady_state(spec: &str, e: &FedEnv, n: usize,
+                                  failures: &mut Vec<String>) {
+    let alg = L2gd::from_local_and_agg(0.4, 0.3, 0.5, n, spec, spec).unwrap();
+    let mut eng = alg.engine(e).unwrap();
+    // warm: several hundred steps guarantee fresh aggregation rounds have
+    // run and every buffer capacity has settled
+    eng.run_steps(0, 400).unwrap();
+    assert!(eng.net().comm_rounds() > 0, "warmup never communicated");
+    let check_steps = 300u64;
+    let before = alloc_count::allocations();
+    eng.run_steps(400, check_steps).unwrap();
+    let allocs = alloc_count::allocations() - before;
+    let per_step = allocs as f64 / check_steps as f64;
+    println!("  {:<28} {:>8.2} allocs/step over {} steps",
+             spec, per_step, check_steps);
+    if allocs > 0 {
+        failures.push(format!("{spec}: {per_step:.2}/step"));
+    }
 }
 
 fn main() {
-    harness::header("L2GD end-to-end step latency (native logreg backend)");
-    for (n, d) in [(5usize, 123usize), (10, 123), (10, 2048), (50, 123)] {
-        let be = Arc::new(NativeLogreg::new(d, 0.01, 512, 512));
-        let e = env(be, n, d, 300);
+    harness::header("L2GD end-to-end step throughput (native logreg backend)");
+    println!("  (engine = SoA ParamMatrix + cached batches + grad_into; \
+              reference = seed Vec<Vec<f32>> loop)");
+    let mut fig3_engine = 0.0;
+    let mut fig3_reference = 0.0;
+    for (n, d, rows) in [(5usize, 123usize, 321usize), (10, 123, 300),
+                         (10, 2048, 300), (50, 123, 300)] {
+        let be = Arc::new(NativeLogreg::new(d, 0.01, rows.next_power_of_two().max(64), 512));
+        let e = env(be, n, d, rows);
         let alg = L2gd::from_local_and_agg(0.4, 0.3, 0.5, n,
                                            "natural", "natural").unwrap();
-        time_run(&format!("n={n} d={d} natural/natural 100 steps"), alg, &e, 100);
+        time_engine(&format!("engine    n={n} d={d} natural/natural"), &alg, &e, 200);
         let alg = L2gd::from_local_and_agg(0.4, 0.3, 0.5, n,
                                            "identity", "identity").unwrap();
-        time_run(&format!("n={n} d={d} identity 100 steps"), alg, &e, 100);
+        let sps = time_engine(&format!("engine    n={n} d={d} identity"), &alg, &e, 200);
+        let ref_sps = time_reference(&format!("reference n={n} d={d} identity"),
+                                     &alg, &e, 100);
+        if (n, d) == (5, 123) {
+            fig3_engine = sps;
+            fig3_reference = ref_sps;
+        }
+        println!("  {:<44} {:>20}  ({:.2}x)", "speedup engine/reference", "",
+                 sps / ref_sps);
     }
+
+    harness::header("zero-allocation steady state (counting global allocator)");
+    let be = Arc::new(NativeLogreg::new(123, 0.01, 512, 512));
+    let e = env(be, 5, 123, 321);
+    let mut failures = Vec::new();
+    for spec in ["identity", "natural", "qsgd:8", "randk:30>qsgd:8", "ef(topk:30)"] {
+        assert_zero_alloc_steady_state(spec, &e, 5, &mut failures);
+    }
+    assert!(failures.is_empty(),
+            "steady-state L2GD steps allocated: {failures:?}");
+    println!("  zero-alloc check: OK (local + aggregation steps touch the \
+              allocator 0 times)");
+
+    println!("\nfig-3 config engine/reference speedup: {:.2}x \
+              (acceptance floor: 2x; `pfl bench` records the tracked number)",
+             fig3_engine / fig3_reference);
 
     if let Ok(rt) = XlaRuntime::load_filtered("artifacts", Some(&["logreg123"])) {
         harness::header("L2GD end-to-end step latency (XLA PJRT backend, logreg123)");
         let be = Arc::new(rt.backend("logreg123").unwrap());
         for n in [5usize, 10] {
             let e = env(be.clone(), n, 123, 300);
-            let alg = L2gd::from_local_and_agg(0.4, 0.3, 0.5, n,
-                                               "natural", "natural").unwrap();
-            time_run(&format!("n={n} d=123 natural 100 steps"), alg, &e, 100);
+            let mut alg = L2gd::from_local_and_agg(0.4, 0.3, 0.5, n,
+                                                   "natural", "natural").unwrap();
+            let st = bench(1, 3, || {
+                std::hint::black_box(alg.run(&e, 100, 100).unwrap());
+            });
+            println!("  n={n} d=123 natural 100 steps: {}", st.human());
         }
     } else {
         println!("\n[skipping XLA section: run `make artifacts`]");

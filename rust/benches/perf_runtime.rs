@@ -23,7 +23,7 @@ fn main() {
     harness::header("logreg123 grad: XLA/PJRT vs native oracle (B=512, d=123)");
     let data = synth::logistic(321, 123, 0.05, 7);
     let (x, y, sw) = Batcher::new(&data).full_weighted(512);
-    let batch = Batch::Weighted { x, y, sw };
+    let batch = Batch::weighted(x, y, sw);
     let theta = vec![0.02f32; 123];
 
     let xla = rt.backend("logreg123").unwrap();

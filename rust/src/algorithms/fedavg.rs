@@ -15,18 +15,35 @@
 //! spec stacks a second residual on top — usually redundant here, but the
 //! pipeline grammar allows it.)
 //!
-//! Compression plumbing mirrors L2GD: shared descriptors, one stateful
-//! instance + reusable wire buffer per client, no RNG mutex on the wire
-//! path and no steady-state allocation.
+//! Engine layout mirrors L2GD: the compression memories g_i live in one
+//! contiguous [`ParamMatrix`] row per client; each client's working model,
+//! RNG stream, gradient buffer, diff buffer, compressor state and wire
+//! buffer sit in its slot. The whole client round — local SGD, difference
+//! compression, memory update — runs as one pooled sweep with zero
+//! steady-state allocation (the cached-batch convex path), against the
+//! environment's cached batches.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
-use super::{client_rngs, evaluate, FedAlgorithm, FedEnv};
+use super::{client_rngs, drain_slot_errors, evaluate, FedAlgorithm, FedEnv, ModelView};
 use crate::compress::{Compressed, Compressor, CompressorState};
 use crate::metrics::Series;
-use crate::model::{axpy, weighted_mean};
-use crate::runtime::Backend as _;
+use crate::model::{kernels, ParamMatrix};
+use crate::runtime::{Backend as _, GradBuf};
 use crate::transport::Network;
+use crate::util::Rng;
+
+struct ClientSlot {
+    rng: Rng,
+    /// client working model w_i for the current round
+    wi: Vec<f32>,
+    /// g_computed − g^{r−1}_i staging buffer
+    diff: Vec<f32>,
+    grad: GradBuf,
+    comp: Box<dyn CompressorState>,
+    wire: Compressed,
+    err: Option<anyhow::Error>,
+}
 
 pub struct FedAvg {
     pub local_lr: f64,
@@ -73,24 +90,31 @@ impl FedAlgorithm for FedAvg {
 
         let mut w = env.backend.init_params();
         // shared compression memories g_i (client and master copies agree)
-        let mut g_mem: Vec<Vec<f32>> = vec![vec![0.0f32; d]; n];
+        let mut g_mem = ParamMatrix::zeros(n, d);
         let mut net = Network::new(n);
-        let rngs: Vec<Mutex<crate::util::Rng>> =
-            client_rngs(env.seed ^ 0xFEDA, n).into_iter().map(Mutex::new).collect();
 
-        // per-client uplink compression state + reusable wire buffer
-        let mut seeder = crate::util::Rng::new(env.seed ^ 0xFEDB);
-        let mut uplinks: Vec<(Box<dyn CompressorState>, Compressed)> = (0..n)
-            .map(|_| (self.up_comp.instantiate(d, seeder.next_u64()),
-                      Compressed::empty()))
+        // per-client slots: RNG stream, working model, staging + wire
+        // buffers, stateful uplink compressor — all allocated once here
+        let mut seeder = Rng::new(env.seed ^ 0xFEDB);
+        let mut slots: Vec<ClientSlot> = client_rngs(env.seed ^ 0xFEDA, n)
+            .into_iter()
+            .map(|rng| ClientSlot {
+                rng,
+                wi: vec![0.0f32; d],
+                diff: vec![0.0f32; d],
+                grad: GradBuf::with_dim(d),
+                comp: self.up_comp.instantiate(d, seeder.next_u64()),
+                wire: Compressed::empty(),
+                err: None,
+            })
             .collect();
         let mut down_state = self.down_comp.instantiate(d, env.seed ^ 0xFEDC);
         let mut down_buf = Compressed::empty();
         let mut w_received = vec![0.0f32; d];
-        let mut diff = vec![0.0f32; d];
+        let mut g_bar = vec![0.0f32; d];
 
         let mut series = Series::new(self.label());
-        series.records.push(evaluate(env, &vec![w.clone(); n], 0, &net)?);
+        series.records.push(evaluate(env, ModelView::Shared { model: &w, n }, 0, &net)?);
 
         for r in 1..=rounds {
             net.begin_round();
@@ -99,42 +123,52 @@ impl FedAlgorithm for FedAvg {
             net.downlink_broadcast(r, down_buf.bits);
             down_buf.decode_into(&mut w_received);
 
-            // local training (parallel over clients)
+            // one pooled sweep per round: local SGD from w_received,
+            // difference compression, shared-memory update g_i += C(diff)
             let local_steps = self.local_steps;
-            let w_recv_ref = &w_received;
-            let locals = env.pool.scope_map(&env.shards, |i, shard| {
-                let mut rng = rngs[i].lock().unwrap();
-                let mut wi = w_recv_ref.clone();
+            let w_recv = &w_received;
+            env.pool.scope_chunks_zip_mut(g_mem.as_mut_slice(), d, &mut slots,
+                                          |i, gm, slot| {
+                slot.wi.copy_from_slice(w_recv);
                 for _ in 0..local_steps {
-                    let batch = env.backend.make_train_batch(shard, &mut rng);
-                    match env.backend.grad(&wi, &batch) {
-                        Ok(g) => axpy(&mut wi, -lr, &g.grad),
-                        Err(e) => return Err(e),
+                    let res = match env.train_batch_cached(i) {
+                        Some(b) => env.backend.grad_into(&slot.wi, b, &mut slot.grad),
+                        None => {
+                            let b = env.backend.make_train_batch(&env.shards[i],
+                                                                 &mut slot.rng);
+                            env.backend.grad_into(&slot.wi, &b, &mut slot.grad)
+                        }
+                    };
+                    match res {
+                        Ok(()) => kernels::axpy(&mut slot.wi, -lr, &slot.grad.grad),
+                        Err(e) => {
+                            slot.err = Some(e);
+                            return;
+                        }
                     }
                 }
-                Ok(wi)
-            });
-
-            // uplink: difference compression with memory
-            for (i, wi) in locals.into_iter().enumerate() {
-                let wi = wi?;
                 // g_computed = w_received − w_i (descent direction)
-                for j in 0..d {
-                    diff[j] = (w_received[j] - wi[j]) - g_mem[i][j];
+                for j in 0..gm.len() {
+                    slot.diff[j] = (w_recv[j] - slot.wi[j]) - gm[j];
                 }
-                let (state, buf) = &mut uplinks[i];
-                state.compress_into(&diff, buf)?;
-                net.uplink(r, i, buf.bits);
-                buf.decode_add(&mut g_mem[i], 1.0); // g_i += C(diff), both ends
+                match slot.comp.compress_into(&slot.diff, &mut slot.wire) {
+                    Ok(()) => slot.wire.decode_add(gm, 1.0), // both ends
+                    Err(e) => slot.err = Some(e),
+                }
+            });
+            drain_slot_errors(slots.iter_mut().map(|s| &mut s.err))?;
+            for (i, slot) in slots.iter().enumerate() {
+                net.uplink(r, i, slot.wire.bits);
             }
             net.end_round();
 
             // server: w ← w − Σ ω_i g_i
-            let g_bar = weighted_mean(&g_mem, &weights);
-            axpy(&mut w, -1.0, &g_bar);
+            g_mem.weighted_mean_into(&weights, &mut g_bar);
+            kernels::axpy(&mut w, -1.0, &g_bar);
 
             if r % eval_every == 0 || r == rounds {
-                series.records.push(evaluate(env, &vec![w.clone(); n], r, &net)?);
+                series.records.push(
+                    evaluate(env, ModelView::Shared { model: &w, n }, r, &net)?);
                 if !series.records.last().unwrap().is_finite() {
                     break; // diverged: record it and stop (paper §B)
                 }
@@ -155,14 +189,8 @@ mod tests {
     fn env(n: usize, seed: u64) -> FedEnv {
         let (data, test) = synth::logistic_split(40 * n, 80, 12, 0.02, seed);
         let shards = data.split_contiguous(n);
-        FedEnv {
-            backend: Arc::new(NativeLogreg::new(12, 0.01, 64, 128)),
-            shards,
-            train_eval: data,
-            test,
-            pool: ThreadPool::new(4),
-            seed,
-        }
+        FedEnv::new(Arc::new(NativeLogreg::new(12, 0.01, 64, 128)),
+                    shards, data, test, ThreadPool::new(4), seed)
     }
 
     #[test]
@@ -226,6 +254,20 @@ mod tests {
         // 4 indices (4 bits each at d=12) + 4 survivors (9 bits) per client
         let per_client_round = last.bits_up / (4 * last.comm_rounds);
         assert_eq!(per_client_round, 4 * 4 + 4 * 9);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let e = env(3, 5);
+        let mut a = FedAvg::new(0.4, 2, "qsgd:8", "natural").unwrap();
+        let mut b = FedAvg::new(0.4, 2, "qsgd:8", "natural").unwrap();
+        let sa = a.run(&e, 30, 10).unwrap();
+        let sb = b.run(&e, 30, 10).unwrap();
+        for (ra, rb) in sa.records.iter().zip(&sb.records) {
+            assert_eq!(ra.train_loss, rb.train_loss);
+            assert_eq!(ra.test_loss, rb.test_loss);
+            assert_eq!(ra.bits_up, rb.bits_up);
+        }
     }
 
     #[test]

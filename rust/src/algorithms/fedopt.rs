@@ -2,14 +2,26 @@
 //! adaptive server optimizer over the aggregated pseudo-gradient. The paper
 //! uses it as its strongest no-compression baseline ("the only comparable
 //! baseline for L2GD", §VII-B).
+//!
+//! Engine layout mirrors the other algorithms: per-client deltas live in a
+//! contiguous [`ParamMatrix`], each client's working model / RNG / gradient
+//! buffer in its slot, and the whole client round runs as one pooled sweep
+//! against the environment's cached batches with zero steady-state
+//! allocation on the convex path.
 
-use std::sync::Mutex;
-
-use super::{client_rngs, evaluate, FedAlgorithm, FedEnv};
+use super::{client_rngs, drain_slot_errors, evaluate, FedAlgorithm, FedEnv, ModelView};
 use crate::metrics::Series;
-use crate::model::{axpy, weighted_mean};
-use crate::runtime::Backend as _;
+use crate::model::{kernels, ParamMatrix};
+use crate::runtime::{Backend as _, GradBuf};
 use crate::transport::Network;
+use crate::util::Rng;
+
+struct ClientSlot {
+    rng: Rng,
+    wi: Vec<f32>,
+    grad: GradBuf,
+    err: Option<anyhow::Error>,
+}
 
 pub struct FedOpt {
     pub local_lr: f64,
@@ -42,11 +54,20 @@ impl FedAlgorithm for FedOpt {
         let mut m = vec![0.0f64; d];
         let mut v = vec![0.0f64; d];
         let mut net = Network::new(n);
-        let rngs: Vec<Mutex<crate::util::Rng>> =
-            client_rngs(env.seed ^ 0x0b7, n).into_iter().map(Mutex::new).collect();
+        let mut deltas = ParamMatrix::zeros(n, d);
+        let mut dbar = vec![0.0f32; d];
+        let mut slots: Vec<ClientSlot> = client_rngs(env.seed ^ 0x0b7, n)
+            .into_iter()
+            .map(|rng| ClientSlot {
+                rng,
+                wi: vec![0.0f32; d],
+                grad: GradBuf::with_dim(d),
+                err: None,
+            })
+            .collect();
 
         let mut series = Series::new(self.label());
-        series.records.push(evaluate(env, &vec![w.clone(); n], 0, &net)?);
+        series.records.push(evaluate(env, ModelView::Shared { model: &w, n }, 0, &net)?);
 
         let bits_model = 32 * d as u64; // uncompressed f32 wire
 
@@ -56,29 +77,39 @@ impl FedAlgorithm for FedOpt {
 
             let local_steps = self.local_steps;
             let w_ref = &w;
-            let locals = env.pool.scope_map(&env.shards, |i, shard| {
-                let mut rng = rngs[i].lock().unwrap();
-                let mut wi = w_ref.clone();
+            env.pool.scope_chunks_zip_mut(deltas.as_mut_slice(), d, &mut slots,
+                                          |i, delta, slot| {
+                slot.wi.copy_from_slice(w_ref);
                 for _ in 0..local_steps {
-                    let batch = env.backend.make_train_batch(shard, &mut rng);
-                    match env.backend.grad(&wi, &batch) {
-                        Ok(g) => axpy(&mut wi, -lr, &g.grad),
-                        Err(e) => return Err(e),
+                    let res = match env.train_batch_cached(i) {
+                        Some(b) => env.backend.grad_into(&slot.wi, b, &mut slot.grad),
+                        None => {
+                            let b = env.backend.make_train_batch(&env.shards[i],
+                                                                 &mut slot.rng);
+                            env.backend.grad_into(&slot.wi, &b, &mut slot.grad)
+                        }
+                    };
+                    match res {
+                        Ok(()) => kernels::axpy(&mut slot.wi, -lr, &slot.grad.grad),
+                        Err(e) => {
+                            slot.err = Some(e);
+                            return;
+                        }
                     }
                 }
-                Ok(wi)
+                // pseudo-gradient Δ_i = w − w_i
+                for j in 0..delta.len() {
+                    delta[j] = w_ref[j] - slot.wi[j];
+                }
             });
-            let mut deltas: Vec<Vec<f32>> = Vec::with_capacity(n);
-            for (i, wi) in locals.into_iter().enumerate() {
-                let wi = wi?;
+            drain_slot_errors(slots.iter_mut().map(|s| &mut s.err))?;
+            for i in 0..n {
                 net.uplink(r, i, bits_model);
-                let delta: Vec<f32> = w.iter().zip(&wi).map(|(a, b)| a - b).collect();
-                deltas.push(delta);
             }
             net.end_round();
 
             // server Adam on the pseudo-gradient Δ̄
-            let dbar = weighted_mean(&deltas, &weights);
+            deltas.weighted_mean_into(&weights, &mut dbar);
             for j in 0..d {
                 let g = dbar[j] as f64;
                 m[j] = self.beta1 * m[j] + (1.0 - self.beta1) * g;
@@ -87,7 +118,8 @@ impl FedAlgorithm for FedOpt {
             }
 
             if r % eval_every == 0 || r == rounds {
-                series.records.push(evaluate(env, &vec![w.clone(); n], r, &net)?);
+                series.records.push(
+                    evaluate(env, ModelView::Shared { model: &w, n }, r, &net)?);
                 if !series.records.last().unwrap().is_finite() {
                     break; // diverged: record it and stop (paper §B)
                 }
@@ -108,14 +140,8 @@ mod tests {
     fn env(n: usize, seed: u64) -> FedEnv {
         let (data, test) = synth::logistic_split(40 * n, 80, 12, 0.02, seed);
         let shards = data.split_contiguous(n);
-        FedEnv {
-            backend: Arc::new(NativeLogreg::new(12, 0.01, 64, 128)),
-            shards,
-            train_eval: data,
-            test,
-            pool: ThreadPool::new(4),
-            seed,
-        }
+        FedEnv::new(Arc::new(NativeLogreg::new(12, 0.01, 64, 128)),
+                    shards, data, test, ThreadPool::new(4), seed)
     }
 
     #[test]
@@ -144,5 +170,18 @@ mod tests {
         let mut alg = FedOpt::new(1.0, 4, 0.5); // aggressive rates
         let s = alg.run(&e, 30, 30).unwrap();
         assert!(s.records.last().unwrap().train_loss.is_finite());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let e = env(3, 3);
+        let mut a = FedOpt::new(0.4, 2, 0.05);
+        let mut b = FedOpt::new(0.4, 2, 0.05);
+        let sa = a.run(&e, 20, 5).unwrap();
+        let sb = b.run(&e, 20, 5).unwrap();
+        for (ra, rb) in sa.records.iter().zip(&sb.records) {
+            assert_eq!(ra.train_loss, rb.train_loss);
+            assert_eq!(ra.test_loss, rb.test_loss);
+        }
     }
 }

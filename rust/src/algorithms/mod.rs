@@ -2,25 +2,30 @@
 //!
 //! * [`l2gd::L2gd`] — **the paper's contribution**: compressed L2GD
 //!   (Algorithm 1) with bidirectional compression over the probabilistic
-//!   protocol.
+//!   protocol, executed by the zero-allocation round engine
+//!   ([`l2gd::L2gdEngine`]).
 //! * [`fedavg::FedAvg`] — the FedAvg baseline, plus the paper's
 //!   error-feedback-style difference compression (§VII-B).
 //! * [`fedopt::FedOpt`] — server-Adam baseline (Reddi et al.), the paper's
 //!   strongest no-compression comparator.
+//! * [`reference`] — the seed-semantics `Vec<Vec<f32>>` oracle the engine
+//!   is tested (bit-for-bit) and benchmarked against.
 //!
-//! All algorithms run against a [`FedEnv`] (backend + shards + test data)
-//! and emit a [`Series`] of per-evaluation [`Record`]s with exact bit
-//! accounting from the transport layer.
+//! All algorithms run against a [`FedEnv`] (backend + shards + test data +
+//! cached batches) and emit a [`Series`] of per-evaluation [`Record`]s
+//! with exact bit accounting from the transport layer.
 
 pub mod fedavg;
 pub mod fedopt;
 pub mod l2gd;
+pub mod reference;
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use crate::data::Dataset;
 use crate::metrics::{Record, Series};
-use crate::runtime::Backend;
+use crate::model::ParamMatrix;
+use crate::runtime::{Backend, Batch};
 use crate::transport::Network;
 use crate::util::threadpool::ThreadPool;
 use crate::util::Rng;
@@ -29,7 +34,37 @@ pub use fedavg::FedAvg;
 pub use fedopt::FedOpt;
 pub use l2gd::L2gd;
 
+/// Batches assembled once at environment construction. Evaluation batches
+/// are deterministic by the `Backend` contract; per-shard **training**
+/// batches are cached only when the backend advertises
+/// `static_train_batch` (the full-gradient convex regimes, where the seed
+/// re-assembled — allocated, zero-filled and copied — an identical padded
+/// batch every local step of every client).
+struct BatchCache {
+    /// one training batch per shard, built on first use and only when
+    /// `backend.static_train_batch()` (lazy: constructing an environment
+    /// must stay cheap and must not assume the backend can batch every
+    /// shard — several tests pair a tiny native backend with image/token
+    /// data purely to inspect partitioning)
+    shard_train: OnceLock<Vec<Batch>>,
+    /// one eval batch per shard (personalized metrics)
+    shard_eval: Vec<Batch>,
+    /// global-train eval batch
+    train_eval: Batch,
+    /// test eval batch
+    test: Batch,
+}
+
 /// Shared training environment.
+///
+/// Construct with [`FedEnv::new`] — it pre-assembles the evaluation
+/// batches (and, for static-batch backends, the per-shard training
+/// batches) that the round engine and [`evaluate`] reuse every step.
+///
+/// The data fields stay `pub` for inspection and `pool` may be swapped
+/// freely, but **do not mutate `shards` / `train_eval` / `test` after
+/// construction**: the cached batches are built from them once and would
+/// go stale (build a fresh `FedEnv` instead).
 pub struct FedEnv {
     pub backend: Arc<dyn Backend>,
     /// per-client training shards (heterogeneous)
@@ -39,9 +74,32 @@ pub struct FedEnv {
     pub test: Dataset,
     pub pool: ThreadPool,
     pub seed: u64,
+    cache: BatchCache,
 }
 
 impl FedEnv {
+    pub fn new(backend: Arc<dyn Backend>, shards: Vec<Dataset>, train_eval: Dataset,
+               test: Dataset, pool: ThreadPool, seed: u64) -> FedEnv {
+        let shard_eval: Vec<Batch> =
+            shards.iter().map(|s| backend.make_eval_batch(s)).collect();
+        let train_eval_b = backend.make_eval_batch(&train_eval);
+        let test_b = backend.make_eval_batch(&test);
+        FedEnv {
+            backend,
+            shards,
+            train_eval,
+            test,
+            pool,
+            seed,
+            cache: BatchCache {
+                shard_train: OnceLock::new(),
+                shard_eval,
+                train_eval: train_eval_b,
+                test: test_b,
+            },
+        }
+    }
+
     pub fn n_clients(&self) -> usize {
         self.shards.len()
     }
@@ -49,6 +107,41 @@ impl FedEnv {
     /// |D_i| weights for weighted aggregation (the paper's w_i).
     pub fn shard_weights(&self) -> Vec<f64> {
         self.shards.iter().map(|s| s.len() as f64).collect()
+    }
+
+    /// Cached training batch for shard `i`, when the backend's training
+    /// batches are static. `None` means the caller must assemble one via
+    /// `make_train_batch` (stochastic regimes). First call builds every
+    /// shard's batch (thread-safe; steady state is an atomic load).
+    pub fn train_batch_cached(&self, i: usize) -> Option<&Batch> {
+        if !self.backend.static_train_batch() {
+            return None;
+        }
+        let batches = self.cache.shard_train.get_or_init(|| {
+            // the backend ignores the RNG by contract when batches are
+            // static, so a throwaway stream is fine here
+            let mut rng = Rng::new(self.seed ^ 0xBA7C4);
+            self.shards
+                .iter()
+                .map(|s| self.backend.make_train_batch(s, &mut rng))
+                .collect()
+        });
+        Some(&batches[i])
+    }
+
+    /// Cached evaluation batch for shard `i` (personalized metrics).
+    pub fn shard_eval_batch(&self, i: usize) -> &Batch {
+        &self.cache.shard_eval[i]
+    }
+
+    /// Cached global-train evaluation batch.
+    pub fn train_eval_batch(&self) -> &Batch {
+        &self.cache.train_eval
+    }
+
+    /// Cached test evaluation batch.
+    pub fn test_batch(&self) -> &Batch {
+        &self.cache.test
     }
 }
 
@@ -58,25 +151,66 @@ pub trait FedAlgorithm {
     fn run(&mut self, env: &FedEnv, steps: u64, eval_every: u64) -> anyhow::Result<Series>;
 }
 
+/// Per-client model state as seen by [`evaluate`]: either truly
+/// personalized (a [`ParamMatrix`] row per client) or one shared global
+/// model (the FedAvg/FedOpt case — the seed materialized `n` clones of `w`
+/// per evaluation to express this).
+#[derive(Clone, Copy)]
+pub enum ModelView<'a> {
+    PerClient(&'a ParamMatrix),
+    Shared { model: &'a [f32], n: usize },
+}
+
+impl<'a> ModelView<'a> {
+    pub fn n(&self) -> usize {
+        match self {
+            ModelView::PerClient(m) => m.n_rows(),
+            ModelView::Shared { n, .. } => *n,
+        }
+    }
+
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        match self {
+            ModelView::PerClient(m) => m.row(i),
+            ModelView::Shared { model, .. } => model,
+        }
+    }
+
+    /// Global model = mean of the client models, accumulated in client
+    /// order — bit-compatible with the seed's `mean_of` (including the
+    /// `Shared` case, where the seed averaged n identical clones).
+    pub fn mean_into(&self, out: &mut [f32]) {
+        match self {
+            ModelView::PerClient(m) => m.mean_into(out),
+            ModelView::Shared { model, n } => {
+                out.fill(0.0);
+                for _ in 0..*n {
+                    crate::model::kernels::add_assign(out, model);
+                }
+                crate::model::kernels::scale(out, 1.0 / *n as f32);
+            }
+        }
+    }
+}
+
 /// Evaluate global + personalized metrics into a `Record`.
 ///
-/// `xs` are the per-client models (identical copies for the global-model
-/// algorithms). The global model is the plain mean — the paper's evaluation
-/// object for Top-1 accuracy; the personalized objective (1/n)Σ f_i(x_i)
-/// is what Fig 3 plots.
-pub fn evaluate(env: &FedEnv, xs: &[Vec<f32>], step: u64, net: &Network)
+/// The global model is the plain mean — the paper's evaluation object for
+/// Top-1 accuracy; the personalized objective (1/n)Σ f_i(x_i) is what
+/// Fig 3 plots. All evaluation batches come from the [`FedEnv`] cache —
+/// the seed re-assembled the global-train and test batches from scratch on
+/// every evaluation record.
+pub fn evaluate(env: &FedEnv, view: ModelView<'_>, step: u64, net: &Network)
                 -> anyhow::Result<Record> {
-    let global = crate::model::mean_of(xs);
     let be = &env.backend;
-    let train_b = be.make_eval_batch(&env.train_eval);
-    let test_b = be.make_eval_batch(&env.test);
-    let train = be.eval(&global, &train_b)?;
-    let test = be.eval(&global, &test_b)?;
+    let mut global = vec![0.0f32; be.param_count()];
+    view.mean_into(&mut global);
+    let train = be.eval(&global, env.train_eval_batch())?;
+    let test = be.eval(&global, env.test_batch())?;
 
     // personalized: each client's model on its own shard (pooled)
-    let per: Vec<(f64, f64)> = env.pool.scope_map(xs, |i, x| {
-        let b = be.make_eval_batch(&env.shards[i]);
-        match be.eval(x, &b) {
+    let per: Vec<(f64, f64)> = env.pool.scope_map_n(view.n(), |i| {
+        match be.eval(view.row(i), env.shard_eval_batch(i)) {
             Ok(e) => (e.loss, e.accuracy),
             Err(_) => (f64::NAN, f64::NAN),
         }
@@ -108,4 +242,20 @@ pub fn evaluate(env: &FedEnv, xs: &[Vec<f32>], step: u64, net: &Network)
 pub fn client_rngs(seed: u64, n: usize) -> Vec<Rng> {
     let mut root = Rng::new(seed);
     (0..n).map(|i| root.fork(i as u64 + 1)).collect()
+}
+
+/// Surface the first error parked by a pooled sweep (clearing it), in
+/// client order. The park-then-drain protocol: worker closures can't
+/// return `Result` through the allocation-free chunk sweeps, so they
+/// stash the error in their slot and every sweep is followed by exactly
+/// one `drain_slot_errors` before any result of the sweep is consumed.
+pub(crate) fn drain_slot_errors<'a>(
+    errs: impl Iterator<Item = &'a mut Option<anyhow::Error>>,
+) -> anyhow::Result<()> {
+    for e in errs {
+        if let Some(e) = e.take() {
+            return Err(e);
+        }
+    }
+    Ok(())
 }

@@ -1,0 +1,382 @@
+//! Seed-semantics reference implementations — the oracle the round engine
+//! is tested and benchmarked against.
+//!
+//! These reproduce the pre-engine training loops exactly: per-client
+//! models as `Vec<Vec<f32>>`, a freshly assembled training batch and a
+//! freshly allocated gradient for every client every step, serial
+//! decode-accumulate on the master, and per-evaluation batch assembly.
+//! They share the `Backend` oracle, the RNG fork constants and the
+//! compressor instantiation seeds with the engine, so for a fixed seed the
+//! engine must reproduce these series **bit for bit** (for L2GD up to
+//! n ≤ 8 clients, where the master reduction is sequential in both paths;
+//! the pooled tree reduction over 8-client leaves reassociates the
+//! floating-point sum beyond that).
+//!
+//! Scope of the guarantee: it pins the **engine refactor** (layout,
+//! caching, buffer reuse, parallel sweeps) against the shared oracle. It
+//! is deliberately *not* a cross-commit guarantee against the
+//! pre-refactor seed: `NativeLogreg::forward` itself changed numerically
+//! (8-accumulator `kernels::dot` reassociates the row product; the
+//! sigmoid coefficient is now derived in f64 from the single `e^{−|yz|}`),
+//! and both paths here share that new forward.
+//!
+//! Used by the module tests below and by the `pfl bench` /
+//! `perf_round_latency` harnesses as the pre-refactor throughput baseline
+//! ("measured by the same harness").
+
+use std::sync::Mutex;
+
+use super::{client_rngs, FedAlgorithm as _, FedEnv};
+use crate::compress::{Compressed, Compressor as _, CompressorState};
+use crate::metrics::{Record, Series};
+use crate::model::{aggregation_step, axpy, mean_of, weighted_mean};
+use crate::protocol::{Coin, StepKind};
+use crate::runtime::Backend as _;
+use crate::transport::Network;
+use crate::util::Rng;
+
+/// The seed's `evaluate`: nested rows, per-call eval batch assembly.
+fn evaluate_nested(env: &FedEnv, xs: &[Vec<f32>], step: u64, net: &Network)
+                   -> anyhow::Result<Record> {
+    let global = mean_of(xs);
+    let be = &env.backend;
+    let train_b = be.make_eval_batch(&env.train_eval);
+    let test_b = be.make_eval_batch(&env.test);
+    let train = be.eval(&global, &train_b)?;
+    let test = be.eval(&global, &test_b)?;
+
+    let mut personal_loss = 0.0f64;
+    let mut personal_acc = 0.0f64;
+    for (i, x) in xs.iter().enumerate() {
+        let b = be.make_eval_batch(&env.shards[i]);
+        match be.eval(x, &b) {
+            Ok(e) => {
+                personal_loss += e.loss;
+                personal_acc += e.accuracy;
+            }
+            Err(_) => {
+                personal_loss += f64::NAN;
+                personal_acc += f64::NAN;
+            }
+        }
+    }
+    let n = xs.len() as f64;
+    Ok(Record {
+        step,
+        comm_rounds: net.comm_rounds(),
+        bits_per_client: net.bits_per_client(),
+        bits_up: net.total_bits_up(),
+        bits_down: net.total_bits_down(),
+        train_loss: train.loss,
+        train_acc: train.accuracy,
+        test_loss: test.loss,
+        test_acc: test.accuracy,
+        personal_loss: personal_loss / n,
+        personal_acc: personal_acc / n,
+        sim_time_s: net.simulated_comm_time_s(),
+    })
+}
+
+/// Seed-layout compressed L2GD (Algorithm 1).
+pub fn run_l2gd(alg: &super::L2gd, env: &FedEnv, steps: u64, eval_every: u64)
+                -> anyhow::Result<Series> {
+    let n = env.n_clients();
+    anyhow::ensure!(alg.p > 0.0 || alg.lambda == 0.0,
+                    "p = 0 only valid for λ = 0 (pure local training)");
+    let d = env.backend.param_count();
+    let local_coef = alg.local_coef(n) as f32;
+    let agg_coef = alg.agg_coef(n) as f32;
+    anyhow::ensure!(agg_coef.is_finite() && (0.0..2.0).contains(&agg_coef),
+                    "ηλ/np = {agg_coef} outside [0,2): aggregation diverges");
+
+    let init = env.backend.init_params();
+    let mut xs: Vec<Vec<f32>> = vec![init.clone(); n];
+    let mut anchor = init;
+    let mut coin = Coin::new(alg.p, env.seed ^ 0xC011);
+    let mut net = Network::new(n);
+    // mutex-wrapped streams, exactly as the seed shared them with the
+    // pooled gradient fan-out
+    let rngs: Vec<Mutex<Rng>> =
+        client_rngs(env.seed, n).into_iter().map(Mutex::new).collect();
+    let mut seeder = Rng::new(env.seed ^ 0xC09B);
+    let mut uplinks: Vec<(Box<dyn CompressorState>, Compressed)> = (0..n)
+        .map(|_| (alg.client_comp.instantiate(d, seeder.next_u64()),
+                  Compressed::empty()))
+        .collect();
+    let mut master_state = alg.master_comp.instantiate(d, env.seed ^ 0x3a57e5);
+    let mut master_buf = Compressed::empty();
+    let mut ybar = vec![0.0f32; d];
+
+    let mut series = Series::new(alg.label());
+    series.records.push(evaluate_nested(env, &xs, 0, &net)?);
+
+    for k in 1..=steps {
+        match coin.draw() {
+            StepKind::Local => {
+                // all devices: one local gradient step (pooled, as the seed
+                // ran it — per-call batch assembly, allocating grad)
+                let outs = env.pool.scope_map(&xs, |i, x| {
+                    let mut rng = rngs[i].lock().unwrap();
+                    let batch = env.backend.make_train_batch(&env.shards[i], &mut rng);
+                    env.backend.grad(x, &batch)
+                });
+                for (x, out) in xs.iter_mut().zip(outs) {
+                    let g = out?;
+                    axpy(x, -local_coef, &g.grad);
+                }
+            }
+            StepKind::AggregateFresh => {
+                net.begin_round();
+                for (i, x) in xs.iter().enumerate() {
+                    let (state, buf) = &mut uplinks[i];
+                    state.compress_into(x, buf)?;
+                }
+                ybar.fill(0.0);
+                let inv_n = 1.0 / n as f32;
+                for (i, (_, c)) in uplinks.iter().enumerate() {
+                    net.uplink(k, i, c.bits);
+                    c.decode_add(&mut ybar, inv_n);
+                }
+                master_state.compress_into(&ybar, &mut master_buf)?;
+                net.downlink_broadcast(k, master_buf.bits);
+                master_buf.decode_into(&mut anchor);
+                net.end_round();
+                for x in xs.iter_mut() {
+                    aggregation_step(x, agg_coef, &anchor);
+                }
+            }
+            StepKind::AggregateCached => {
+                for x in xs.iter_mut() {
+                    aggregation_step(x, agg_coef, &anchor);
+                }
+            }
+        }
+        if k % eval_every == 0 || k == steps {
+            series.records.push(evaluate_nested(env, &xs, k, &net)?);
+            if !series.records.last().unwrap().is_finite() {
+                break;
+            }
+        }
+    }
+    Ok(series)
+}
+
+/// Seed-layout FedAvg with difference compression.
+pub fn run_fedavg(alg: &super::FedAvg, env: &FedEnv, rounds: u64, eval_every: u64)
+                  -> anyhow::Result<Series> {
+    let n = env.n_clients();
+    let d = env.backend.param_count();
+    let weights = env.shard_weights();
+    let lr = alg.local_lr as f32;
+
+    let mut w = env.backend.init_params();
+    let mut g_mem: Vec<Vec<f32>> = vec![vec![0.0f32; d]; n];
+    let mut net = Network::new(n);
+    let rngs: Vec<Mutex<Rng>> =
+        client_rngs(env.seed ^ 0xFEDA, n).into_iter().map(Mutex::new).collect();
+    let mut seeder = Rng::new(env.seed ^ 0xFEDB);
+    let mut uplinks: Vec<(Box<dyn CompressorState>, Compressed)> = (0..n)
+        .map(|_| (alg.up_comp.instantiate(d, seeder.next_u64()),
+                  Compressed::empty()))
+        .collect();
+    let mut down_state = alg.down_comp.instantiate(d, env.seed ^ 0xFEDC);
+    let mut down_buf = Compressed::empty();
+    let mut w_received = vec![0.0f32; d];
+    let mut diff = vec![0.0f32; d];
+
+    let mut series = Series::new(alg.label());
+    series.records.push(evaluate_nested(env, &vec![w.clone(); n], 0, &net)?);
+
+    for r in 1..=rounds {
+        net.begin_round();
+        down_state.compress_into(&w, &mut down_buf)?;
+        net.downlink_broadcast(r, down_buf.bits);
+        down_buf.decode_into(&mut w_received);
+
+        // local training (pooled, as the seed ran it)
+        let local_steps = alg.local_steps;
+        let w_recv_ref = &w_received;
+        let locals = env.pool.scope_map(&env.shards, |i, shard| {
+            let mut rng = rngs[i].lock().unwrap();
+            let mut wi = w_recv_ref.clone();
+            for _ in 0..local_steps {
+                let batch = env.backend.make_train_batch(shard, &mut rng);
+                match env.backend.grad(&wi, &batch) {
+                    Ok(g) => axpy(&mut wi, -lr, &g.grad),
+                    Err(e) => return Err(e),
+                }
+            }
+            Ok(wi)
+        });
+        for (i, wi) in locals.into_iter().enumerate() {
+            let wi = wi?;
+            for j in 0..d {
+                diff[j] = (w_received[j] - wi[j]) - g_mem[i][j];
+            }
+            let (state, buf) = &mut uplinks[i];
+            state.compress_into(&diff, buf)?;
+            net.uplink(r, i, buf.bits);
+            buf.decode_add(&mut g_mem[i], 1.0);
+        }
+        net.end_round();
+
+        let g_bar = weighted_mean(&g_mem, &weights);
+        axpy(&mut w, -1.0, &g_bar);
+
+        if r % eval_every == 0 || r == rounds {
+            series.records.push(evaluate_nested(env, &vec![w.clone(); n], r, &net)?);
+            if !series.records.last().unwrap().is_finite() {
+                break;
+            }
+        }
+    }
+    Ok(series)
+}
+
+/// Seed-layout FedOpt (server Adam).
+pub fn run_fedopt(alg: &super::FedOpt, env: &FedEnv, rounds: u64, eval_every: u64)
+                  -> anyhow::Result<Series> {
+    let n = env.n_clients();
+    let d = env.backend.param_count();
+    let weights = env.shard_weights();
+    let lr = alg.local_lr as f32;
+
+    let mut w = env.backend.init_params();
+    let mut m = vec![0.0f64; d];
+    let mut v = vec![0.0f64; d];
+    let mut net = Network::new(n);
+    let rngs: Vec<Mutex<Rng>> =
+        client_rngs(env.seed ^ 0x0b7, n).into_iter().map(Mutex::new).collect();
+
+    let mut series = Series::new(alg.label());
+    series.records.push(evaluate_nested(env, &vec![w.clone(); n], 0, &net)?);
+
+    let bits_model = 32 * d as u64;
+
+    for r in 1..=rounds {
+        net.begin_round();
+        net.downlink_broadcast(r, bits_model);
+
+        let local_steps = alg.local_steps;
+        let w_ref = &w;
+        let locals = env.pool.scope_map(&env.shards, |i, shard| {
+            let mut rng = rngs[i].lock().unwrap();
+            let mut wi = w_ref.clone();
+            for _ in 0..local_steps {
+                let batch = env.backend.make_train_batch(shard, &mut rng);
+                match env.backend.grad(&wi, &batch) {
+                    Ok(g) => axpy(&mut wi, -lr, &g.grad),
+                    Err(e) => return Err(e),
+                }
+            }
+            Ok(wi)
+        });
+        let mut deltas: Vec<Vec<f32>> = Vec::with_capacity(n);
+        for (i, wi) in locals.into_iter().enumerate() {
+            let wi = wi?;
+            net.uplink(r, i, bits_model);
+            let delta: Vec<f32> = w.iter().zip(&wi).map(|(a, b)| a - b).collect();
+            deltas.push(delta);
+        }
+        net.end_round();
+
+        let dbar = weighted_mean(&deltas, &weights);
+        for j in 0..d {
+            let g = dbar[j] as f64;
+            m[j] = alg.beta1 * m[j] + (1.0 - alg.beta1) * g;
+            v[j] = alg.beta2 * v[j] + (1.0 - alg.beta2) * g * g;
+            w[j] -= (alg.server_lr * m[j] / (v[j].sqrt() + alg.tau)) as f32;
+        }
+
+        if r % eval_every == 0 || r == rounds {
+            series.records.push(evaluate_nested(env, &vec![w.clone(); n], r, &net)?);
+            if !series.records.last().unwrap().is_finite() {
+                break;
+            }
+        }
+    }
+    Ok(series)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{FedAlgorithm, FedAvg, FedOpt, L2gd};
+    use crate::data::synth;
+    use crate::runtime::NativeLogreg;
+    use crate::util::threadpool::ThreadPool;
+    use std::sync::Arc;
+
+    fn env(n: usize, d: usize, seed: u64) -> FedEnv {
+        let (data, test) = synth::logistic_split(40 * n, 80, d, 0.02, seed);
+        let shards = data.split_contiguous(n);
+        FedEnv::new(Arc::new(NativeLogreg::new(d, 0.01, 64, 128)),
+                    shards, data, test, ThreadPool::new(4), seed)
+    }
+
+    fn assert_series_identical(a: &Series, b: &Series) {
+        assert_eq!(a.records.len(), b.records.len(), "record counts differ");
+        for (ra, rb) in a.records.iter().zip(&b.records) {
+            assert_eq!(ra.step, rb.step);
+            assert_eq!(ra.train_loss, rb.train_loss, "step {}", ra.step);
+            assert_eq!(ra.train_acc, rb.train_acc, "step {}", ra.step);
+            assert_eq!(ra.test_loss, rb.test_loss, "step {}", ra.step);
+            assert_eq!(ra.test_acc, rb.test_acc, "step {}", ra.step);
+            assert_eq!(ra.personal_loss, rb.personal_loss, "step {}", ra.step);
+            assert_eq!(ra.personal_acc, rb.personal_acc, "step {}", ra.step);
+            assert_eq!(ra.bits_up, rb.bits_up, "step {}", ra.step);
+            assert_eq!(ra.bits_down, rb.bits_down, "step {}", ra.step);
+            assert_eq!(ra.comm_rounds, rb.comm_rounds, "step {}", ra.step);
+        }
+    }
+
+    #[test]
+    fn l2gd_engine_reproduces_seed_series_bitwise_identity() {
+        let e = env(5, 16, 21);
+        let mut alg = L2gd::from_local_and_agg(0.4, 0.3, 0.5, 5,
+                                               "identity", "identity").unwrap();
+        let engine = alg.run(&e, 100, 25).unwrap();
+        let oracle = run_l2gd(&alg, &e, 100, 25).unwrap();
+        assert_series_identical(&engine, &oracle);
+    }
+
+    #[test]
+    fn l2gd_engine_reproduces_seed_series_bitwise_compressed() {
+        // stochastic wire path: qsgd client / natural master exercises the
+        // per-client RNG streams and the fused decode-accumulate
+        let e = env(4, 24, 22);
+        let mut alg = L2gd::from_local_and_agg(0.35, 0.3, 0.4, 4,
+                                               "qsgd:8", "natural").unwrap();
+        let engine = alg.run(&e, 120, 30).unwrap();
+        let oracle = run_l2gd(&alg, &e, 120, 30).unwrap();
+        assert_series_identical(&engine, &oracle);
+    }
+
+    #[test]
+    fn l2gd_engine_reproduces_seed_series_bitwise_ef_pipeline() {
+        let e = env(3, 32, 23);
+        let mut alg = L2gd::from_local_and_agg(0.4, 0.3, 0.5, 3,
+                                               "ef(randk:8>qsgd:8)", "natural").unwrap();
+        let engine = alg.run(&e, 90, 30).unwrap();
+        let oracle = run_l2gd(&alg, &e, 90, 30).unwrap();
+        assert_series_identical(&engine, &oracle);
+    }
+
+    #[test]
+    fn fedavg_engine_reproduces_seed_series_bitwise() {
+        let e = env(4, 12, 24);
+        let mut alg = FedAvg::new(0.4, 3, "natural", "identity").unwrap();
+        let engine = alg.run(&e, 40, 10).unwrap();
+        let oracle = run_fedavg(&alg, &e, 40, 10).unwrap();
+        assert_series_identical(&engine, &oracle);
+    }
+
+    #[test]
+    fn fedopt_engine_reproduces_seed_series_bitwise() {
+        let e = env(4, 12, 25);
+        let mut alg = FedOpt::new(0.4, 2, 0.05);
+        let engine = alg.run(&e, 30, 10).unwrap();
+        let oracle = run_fedopt(&alg, &e, 30, 10).unwrap();
+        assert_series_identical(&engine, &oracle);
+    }
+}

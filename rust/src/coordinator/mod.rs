@@ -68,14 +68,8 @@ pub fn logreg_env_with(cfg: &LogregEnvCfg, backend: Arc<dyn Backend>) -> FedEnv 
         None => synth::logistic_split(total, total / 3, cfg.dim, cfg.noise, cfg.seed),
     };
     let shards = train.split_contiguous(cfg.n_clients);
-    FedEnv {
-        backend,
-        shards,
-        train_eval: train,
-        test,
-        pool: ThreadPool::new(ThreadPool::default_size()),
-        seed: cfg.seed,
-    }
+    FedEnv::new(backend, shards, train, test,
+                ThreadPool::new(ThreadPool::default_size()), cfg.seed)
 }
 
 fn padded(rows: usize) -> usize {
@@ -120,14 +114,8 @@ pub fn image_env(cfg: &ImageEnvCfg, backend: Arc<dyn Backend>) -> FedEnv {
     let mut rng = Rng::new(cfg.seed ^ 0xD121);
     let shards = dirichlet::partition(&train, cfg.n_clients, cfg.dirichlet_alpha,
                                       8, &mut rng);
-    FedEnv {
-        backend,
-        shards,
-        train_eval: train,
-        test,
-        pool: ThreadPool::new(ThreadPool::default_size()),
-        seed: cfg.seed,
-    }
+    FedEnv::new(backend, shards, train, test,
+                ThreadPool::new(ThreadPool::default_size()), cfg.seed)
 }
 
 /// Token-sequence environment for the transformer end-to-end driver.
@@ -161,14 +149,8 @@ pub fn token_env(cfg: &TokenEnvCfg, backend: Arc<dyn Backend>) -> FedEnv {
                                             cfg.seq, cfg.vocab,
                                             cfg.determinism, cfg.seed);
     let shards = train.split_contiguous(cfg.n_clients);
-    FedEnv {
-        backend,
-        shards,
-        train_eval: train,
-        test,
-        pool: ThreadPool::new(ThreadPool::default_size()),
-        seed: cfg.seed,
-    }
+    FedEnv::new(backend, shards, train, test,
+                ThreadPool::new(ThreadPool::default_size()), cfg.seed)
 }
 
 /// Build the environment matching a manifest model's `kind` (used by the

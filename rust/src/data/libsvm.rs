@@ -8,11 +8,19 @@
 
 use super::dataset::Dataset;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum LibsvmError {
-    #[error("line {line}: {msg}")]
     Malformed { line: usize, msg: String },
 }
+
+impl std::fmt::Display for LibsvmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let LibsvmError::Malformed { line, msg } = self;
+        write!(f, "line {line}: {msg}")
+    }
+}
+
+impl std::error::Error for LibsvmError {}
 
 /// Parse LIBSVM text. `dim` fixes the feature dimension (a1a = 123);
 /// indices beyond it are rejected.

@@ -1,0 +1,298 @@
+//! `pfl bench` — the tracked round-engine throughput harness.
+//!
+//! Measures steady-state L2GD steps/sec on the Fig-3 convex configuration
+//! (n = 5 workers, d = 123, a1a-sized shards, uncompressed wire) for:
+//!
+//! * the zero-allocation round engine ([`crate::algorithms::l2gd`]),
+//! * the engine on a compressed wire (`natural`/`natural`), and
+//! * the seed-semantics reference loop
+//!   ([`crate::algorithms::reference::run_l2gd`]) — the pre-refactor
+//!   baseline, measured by the *same* harness on the same environment.
+//!
+//! When the binary installs the counting global allocator
+//! (`pfl` and `benches/perf_round_latency.rs` both do), the harness also
+//! counts heap allocations across the measured engine window and — by
+//! default — **asserts zero**: the warmed engine must not touch the
+//! allocator, whatever mix of local / fresh-aggregate / cached-aggregate
+//! steps the coin deals.
+//!
+//! Results are emitted as `BENCH_round.json` so successive PRs record a
+//! comparable throughput trajectory (CI runs `pfl bench --smoke` and
+//! uploads the file as an artifact).
+
+use std::time::Instant;
+
+use super::fig3;
+use crate::algorithms::l2gd::L2gdEngine;
+use crate::algorithms::{reference, FedAlgorithm as _, FedEnv, L2gd};
+use crate::util::alloc_count;
+use crate::util::json::Value;
+
+#[derive(Clone, Debug)]
+pub struct BenchCfg {
+    pub n_clients: usize,
+    /// recorded for the JSON config echo; the environment comes from
+    /// `fig3::build_env`, which fixes d = 123
+    pub dim: usize,
+    pub rows_per_worker: usize,
+    /// measured engine steps
+    pub steps: u64,
+    /// engine warmup steps (lets buffer capacities settle and guarantees
+    /// at least one fresh aggregation round has run)
+    pub warmup: u64,
+    /// measured reference-loop steps (the baseline is slow; keep modest)
+    pub ref_steps: u64,
+    pub p: f64,
+    pub lambda: f64,
+    pub eta: f64,
+    pub seed: u64,
+    /// fail (Err) if the measured engine window allocates while the
+    /// counting allocator is installed
+    pub assert_zero_alloc: bool,
+}
+
+impl BenchCfg {
+    /// The Fig-3 convex configuration (§VII-A): n = 5, d = 123, a1a-sized
+    /// shards, λ = 10 at p = 0.65 with the stability clamp of
+    /// `experiments::fig3::loss_at`.
+    pub fn fig3() -> BenchCfg {
+        BenchCfg {
+            n_clients: 5,
+            dim: 123,
+            rows_per_worker: 321,
+            steps: 3000,
+            warmup: 300,
+            ref_steps: 600,
+            p: 0.65,
+            lambda: 10.0,
+            eta: 1.0,
+            seed: 0,
+            assert_zero_alloc: true,
+        }
+    }
+
+    /// CI-sized run: same shapes, two orders of magnitude fewer steps —
+    /// still enough to warm the engine and exercise the zero-alloc
+    /// assertion and the JSON emitter.
+    pub fn smoke() -> BenchCfg {
+        BenchCfg { steps: 300, warmup: 120, ref_steps: 60, ..BenchCfg::fig3() }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub cfg: BenchCfg,
+    /// engine steps/sec on the raw step loop (no evaluations), identity
+    /// wire — the headline ns/step number
+    pub engine_steps_per_sec: f64,
+    /// engine steps/sec, natural/natural wire (raw step loop)
+    pub engine_natural_steps_per_sec: f64,
+    /// engine steps/sec measured through `FedAlgorithm::run` over
+    /// `ref_steps` with the same evaluation schedule as the reference —
+    /// the symmetric side of the speedup ratio
+    pub engine_paired_steps_per_sec: f64,
+    /// seed-semantics reference steps/sec (same `run` shape: `ref_steps`
+    /// steps, evaluations at 0 and the end)
+    pub reference_steps_per_sec: f64,
+    /// allocations per measured engine step; `None` when the counting
+    /// allocator is not installed
+    pub engine_allocs_per_step: Option<f64>,
+    pub final_personal_loss: f64,
+}
+
+impl BenchResult {
+    /// Engine/reference ratio from the two symmetric `run` measurements
+    /// (identical step counts and evaluation schedules on both sides).
+    pub fn speedup(&self) -> f64 {
+        self.engine_paired_steps_per_sec / self.reference_steps_per_sec
+    }
+
+    pub fn to_json(&self) -> Value {
+        let c = &self.cfg;
+        let opt = |v: Option<f64>| v.map_or(Value::Null, Value::Num);
+        Value::obj(vec![
+            ("bench".into(), Value::Str("round_engine".into())),
+            ("config".into(), Value::obj(vec![
+                ("n_clients".into(), Value::Num(c.n_clients as f64)),
+                ("dim".into(), Value::Num(c.dim as f64)),
+                ("rows_per_worker".into(), Value::Num(c.rows_per_worker as f64)),
+                ("steps".into(), Value::Num(c.steps as f64)),
+                ("warmup".into(), Value::Num(c.warmup as f64)),
+                ("ref_steps".into(), Value::Num(c.ref_steps as f64)),
+                ("p".into(), Value::Num(c.p)),
+                ("lambda".into(), Value::Num(c.lambda)),
+                ("eta".into(), Value::Num(c.eta)),
+                ("seed".into(), Value::Num(c.seed as f64)),
+                ("backend".into(), Value::Str("native_logreg".into())),
+            ])),
+            ("engine".into(), Value::obj(vec![
+                ("wire".into(), Value::Str("identity|identity".into())),
+                ("steps_per_sec".into(), Value::Num(self.engine_steps_per_sec)),
+                ("ns_per_step".into(),
+                 Value::Num(1e9 / self.engine_steps_per_sec)),
+                ("allocs_per_step".into(), opt(self.engine_allocs_per_step)),
+                ("alloc_counting".into(),
+                 Value::Bool(self.engine_allocs_per_step.is_some())),
+            ])),
+            ("engine_natural".into(), Value::obj(vec![
+                ("wire".into(), Value::Str("natural|natural".into())),
+                ("steps_per_sec".into(),
+                 Value::Num(self.engine_natural_steps_per_sec)),
+            ])),
+            ("engine_paired".into(), Value::obj(vec![
+                ("wire".into(), Value::Str("identity|identity".into())),
+                ("steps_per_sec".into(),
+                 Value::Num(self.engine_paired_steps_per_sec)),
+                ("shape".into(), Value::Str("FedAlgorithm::run, ref_steps \
+                    steps, evals at 0 and end — symmetric to reference".into())),
+            ])),
+            ("reference".into(), Value::obj(vec![
+                ("wire".into(), Value::Str("identity|identity".into())),
+                ("steps_per_sec".into(), Value::Num(self.reference_steps_per_sec)),
+                ("layout".into(), Value::Str("seed Vec<Vec<f32>>, per-call \
+                    batch assembly, allocating grad".into())),
+            ])),
+            ("speedup_vs_reference".into(), Value::Num(self.speedup())),
+            ("final_personal_loss".into(), Value::Num(self.final_personal_loss)),
+        ])
+    }
+}
+
+/// The Fig-3 environment itself — built by `fig3::build_env` so the bench
+/// can never drift from the configuration it claims to track (d is fixed
+/// at 123 by that builder).
+fn build_env(cfg: &BenchCfg) -> FedEnv {
+    fig3::build_env(&fig3::Fig3Cfg {
+        rows_per_worker: cfg.rows_per_worker,
+        n_clients: cfg.n_clients,
+        eta: cfg.eta,
+        seed: cfg.seed,
+        ..fig3::Fig3Cfg::a1a()
+    })
+}
+
+/// λ clamped into the stable aggregation regime by the same helper the
+/// Fig-3 sweeps use.
+fn alg(cfg: &BenchCfg, client: &str, master: &str) -> anyhow::Result<L2gd> {
+    let mut alg = L2gd::new(cfg.p, cfg.lambda, cfg.eta, cfg.n_clients, client, master)?;
+    fig3::clamp_agg_stability(&mut alg, cfg.n_clients);
+    Ok(alg)
+}
+
+/// Warm an engine, then time (and allocation-count) `steps` steady-state
+/// steps. Returns (steps/sec, allocs/step if counting, the engine).
+fn time_engine<'e>(alg: &L2gd, env: &'e FedEnv, warmup: u64, steps: u64)
+                   -> anyhow::Result<(f64, Option<f64>, L2gdEngine<'e>)> {
+    let mut eng = alg.engine(env)?;
+    eng.run_steps(0, warmup)?;
+    let counting = alloc_count::counting_enabled();
+    let before = alloc_count::allocations();
+    let t0 = Instant::now();
+    eng.run_steps(warmup, steps)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let allocs = alloc_count::allocations() - before;
+    let per_step = counting.then(|| allocs as f64 / steps as f64);
+    // sanity: the engine actually communicated during the window
+    anyhow::ensure!(eng.net().comm_rounds() > 0, "no communication rounds ran");
+    Ok((steps as f64 / dt, per_step, eng))
+}
+
+pub fn run(cfg: &BenchCfg) -> anyhow::Result<BenchResult> {
+    let env = build_env(cfg);
+
+    // engine, identity wire (the Fig-3 configuration)
+    let a_id = alg(cfg, "identity", "identity")?;
+    let (engine_sps, allocs_per_step, eng) =
+        time_engine(&a_id, &env, cfg.warmup, cfg.steps)?;
+    if cfg.assert_zero_alloc {
+        if let Some(per_step) = allocs_per_step {
+            anyhow::ensure!(
+                per_step == 0.0,
+                "steady-state engine step allocated ({per_step:.2} allocs/step \
+                 over {} steps)", cfg.steps
+            );
+        }
+    }
+    // the loss the measured run reached (regression canary: a "fast"
+    // engine that stopped learning is a broken engine)
+    let final_personal_loss = eng.evaluate(cfg.warmup + cfg.steps)?.personal_loss;
+
+    // engine, natural/natural wire
+    let a_nat = alg(cfg, "natural", "natural")?;
+    let (natural_sps, _, _) = time_engine(&a_nat, &env, cfg.warmup, cfg.steps)?;
+
+    // symmetric comparison: engine and reference both measured through the
+    // identical `run` shape — ref_steps steps, evaluations at step 0 and
+    // the end — so per-step evaluation cost amortizes equally on both
+    // sides of the ratio
+    let mut a_paired = alg(cfg, "identity", "identity")?;
+    let t0 = Instant::now();
+    let _ = a_paired.run(&env, cfg.ref_steps, cfg.ref_steps)?;
+    let engine_paired_sps = cfg.ref_steps as f64 / t0.elapsed().as_secs_f64();
+
+    let a_ref = alg(cfg, "identity", "identity")?;
+    let t0 = Instant::now();
+    let _ = reference::run_l2gd(&a_ref, &env, cfg.ref_steps, cfg.ref_steps)?;
+    let reference_sps = cfg.ref_steps as f64 / t0.elapsed().as_secs_f64();
+
+    Ok(BenchResult {
+        cfg: cfg.clone(),
+        engine_steps_per_sec: engine_sps,
+        engine_natural_steps_per_sec: natural_sps,
+        engine_paired_steps_per_sec: engine_paired_sps,
+        reference_steps_per_sec: reference_sps,
+        engine_allocs_per_step: allocs_per_step,
+        final_personal_loss,
+    })
+}
+
+/// Run and write `BENCH_round.json`; returns the result for display.
+pub fn run_and_write(cfg: &BenchCfg, out_path: &str) -> anyhow::Result<BenchResult> {
+    let res = run(cfg)?;
+    let mut text = res.to_json().to_string_pretty();
+    text.push('\n');
+    std::fs::write(out_path, text)
+        .map_err(|e| anyhow::anyhow!("write {out_path}: {e}"))?;
+    Ok(res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_bench_runs_and_reports() {
+        let mut cfg = BenchCfg::smoke();
+        // keep the unit test fast: tiny shards, few steps
+        cfg.rows_per_worker = 40;
+        cfg.steps = 60;
+        cfg.warmup = 30;
+        cfg.ref_steps = 20;
+        let res = run(&cfg).unwrap();
+        assert!(res.engine_steps_per_sec > 0.0);
+        assert!(res.engine_paired_steps_per_sec > 0.0);
+        assert!(res.reference_steps_per_sec > 0.0);
+        assert!(res.final_personal_loss.is_finite());
+        // the counting allocator is not installed in the test binary
+        assert!(res.engine_allocs_per_step.is_none());
+        let v = res.to_json();
+        assert_eq!(v.get("bench").unwrap().as_str(), Some("round_engine"));
+        assert!(v.get("speedup_vs_reference").unwrap().as_f64().unwrap() > 0.0);
+        let c = v.get("config").unwrap();
+        assert_eq!(c.get("n_clients").unwrap().as_usize(), Some(5));
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let mut cfg = BenchCfg::smoke();
+        cfg.rows_per_worker = 40;
+        cfg.steps = 40;
+        cfg.warmup = 20;
+        cfg.ref_steps = 10;
+        let res = run(&cfg).unwrap();
+        let text = res.to_json().to_string_pretty();
+        let v = crate::util::json::parse(&text).unwrap();
+        assert!(v.get("engine").unwrap().get("steps_per_sec").unwrap()
+                 .as_f64().unwrap() > 0.0);
+    }
+}

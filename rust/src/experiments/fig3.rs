@@ -49,8 +49,10 @@ impl Fig3Cfg {
     }
 }
 
-/// Build the heterogeneous 5-worker environment once per point.
-fn build_env(cfg: &Fig3Cfg) -> FedEnv {
+/// Build the heterogeneous Fig-3 environment (d = 123, a1a-style noise
+/// and tilt). Public: `pfl bench` measures the round engine on exactly
+/// this configuration, so the two must never drift apart.
+pub fn build_env(cfg: &Fig3Cfg) -> FedEnv {
     let (shards, test) = synth::logistic_hetero(
         cfg.n_clients, cfg.rows_per_worker, 64, 123, 0.05, cfg.hetero, cfg.seed);
     let mut train_eval = shards[0].clone();
@@ -58,14 +60,24 @@ fn build_env(cfg: &Fig3Cfg) -> FedEnv {
         train_eval.features.extend_from_slice(&s.features);
         train_eval.labels.extend_from_slice(&s.labels);
     }
-    FedEnv {
-        backend: Arc::new(NativeLogreg::new(
+    FedEnv::new(
+        Arc::new(NativeLogreg::new(
             123, 0.01, cfg.rows_per_worker.next_power_of_two().max(64), 2048)),
         shards,
         train_eval,
         test,
-        pool: ThreadPool::new(ThreadPool::default_size()),
-        seed: cfg.seed,
+        ThreadPool::new(ThreadPool::default_size()),
+        cfg.seed,
+    )
+}
+
+/// λ such that ηλ/np ≥ 2 would make the aggregation step diverge; the
+/// practitioner regime (paper §VII-B) clamps the effective step at the
+/// stability edge. Keeps every grid (and bench) point well-defined.
+pub fn clamp_agg_stability(alg: &mut L2gd, n: usize) {
+    let agg = alg.agg_coef(n);
+    if agg >= 1.9 {
+        alg.lambda = alg.lambda * 1.9 / agg;
     }
 }
 
@@ -74,13 +86,7 @@ pub fn loss_at(cfg: &Fig3Cfg, p: f64, lambda: f64) -> anyhow::Result<f64> {
     let env = build_env(cfg);
     let mut alg = L2gd::new(p, lambda, cfg.eta, cfg.n_clients,
                             &cfg.client_comp, &cfg.master_comp)?;
-    // λ such that ηλ/np ≥ 2 would make the aggregation step diverge; the
-    // practitioner regime (paper §VII-B) clamps the effective step at the
-    // stability edge. Keeps every grid point well-defined.
-    let agg = alg.agg_coef(cfg.n_clients);
-    if agg >= 1.9 {
-        alg.lambda = lambda * 1.9 / agg;
-    }
+    clamp_agg_stability(&mut alg, cfg.n_clients);
     let series = alg.run(&env, cfg.iters, cfg.iters)?;
     Ok(series.records.last().unwrap().personal_loss)
 }

@@ -4,6 +4,7 @@
 //! versions that print the paper's rows/series; `pfl repro <id>` runs the
 //! full configuration and writes CSVs under `results/`.
 
+pub mod bench_round;
 pub mod dnn;
 pub mod fig2;
 pub mod fig3;

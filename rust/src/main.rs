@@ -24,12 +24,19 @@
 use pfl::algorithms::FedAlgorithm as _;
 use pfl::config::TrainConfig;
 use pfl::coordinator;
-use pfl::experiments::{dnn, fig2, fig3, fig78, table1};
+use pfl::experiments::{bench_round, dnn, fig2, fig3, fig78, table1};
 use pfl::runtime::XlaRuntime;
 use pfl::theory::Consts;
 use pfl::util::cli::Args;
 
-const FLAGS: &[&str] = &["trace", "help", "full"];
+/// Counting global allocator: lets `pfl bench` assert the round engine's
+/// zero-allocation steady state (one relaxed atomic add per allocation —
+/// unmeasurable against real work).
+#[global_allocator]
+static ALLOC: pfl::util::alloc_count::CountingAlloc =
+    pfl::util::alloc_count::CountingAlloc;
+
+const FLAGS: &[&str] = &["trace", "help", "full", "smoke"];
 
 fn main() {
     if let Err(e) = run() {
@@ -46,6 +53,7 @@ fn run() -> anyhow::Result<()> {
         "repro" => cmd_repro(&args),
         "theory" | "tune" => cmd_theory(&args),
         "compressors" => cmd_compressors(&args),
+        "bench" => cmd_bench(&args),
         "models" => cmd_models(&args),
         _ => {
             print!("{}", HELP);
@@ -72,6 +80,9 @@ commands:
                (alias: tune):
                --n --lf --mu --lambda --client-comp --master-comp [--dim]
   compressors  measured Table I for every registered operator
+  bench        round-engine throughput on the Fig-3 convex config: engine
+               vs seed-semantics baseline, zero-alloc assertion, emits
+               BENCH_round.json   [--smoke] [--steps N] [--out file]
   models       list AOT models (needs `make artifacts`)
 ";
 
@@ -294,6 +305,35 @@ fn cmd_theory(args: &Args) -> anyhow::Result<()> {
 fn cmd_compressors(_args: &Args) -> anyhow::Result<()> {
     let rows = table1::run(4096, 20);
     print!("{}", table1::format_table(&rows));
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = if args.flag("smoke") {
+        bench_round::BenchCfg::smoke()
+    } else {
+        bench_round::BenchCfg::fig3()
+    };
+    cfg.steps = args.parse_or("steps", cfg.steps)?;
+    cfg.seed = args.parse_or("seed", cfg.seed)?;
+    let out = args.str_or("out", "BENCH_round.json");
+    eprintln!("round-engine bench: n={} d={} rows/worker={} ({} steps + {} warmup)",
+              cfg.n_clients, cfg.dim, cfg.rows_per_worker, cfg.steps, cfg.warmup);
+    let res = bench_round::run_and_write(&cfg, &out)?;
+    println!("engine    (identity wire): {:>10.0} steps/s  (raw step loop)",
+             res.engine_steps_per_sec);
+    println!("engine    (natural wire):  {:>10.0} steps/s  (raw step loop)",
+             res.engine_natural_steps_per_sec);
+    println!("engine    (paired run):    {:>10.0} steps/s", res.engine_paired_steps_per_sec);
+    println!("reference (seed layout):   {:>10.0} steps/s", res.reference_steps_per_sec);
+    println!("speedup vs reference:      {:>10.2}x  (paired run shapes)", res.speedup());
+    match res.engine_allocs_per_step {
+        Some(a) => println!("steady-state allocations:  {a:>10.2} per step (asserted 0)"),
+        None => println!("steady-state allocations:  not measured (counting \
+                          allocator absent)"),
+    }
+    println!("final personal loss:       {:>10.4}", res.final_personal_loss);
+    println!("wrote {out}");
     Ok(())
 }
 

@@ -1,0 +1,159 @@
+//! Contiguous structure-of-arrays model state: one flat `n × d` buffer,
+//! row per client.
+//!
+//! The seed stored per-client models as `Vec<Vec<f32>>` — n separately
+//! allocated, pointer-chased heap blocks. The round engine sweeps every
+//! client every step (local gradients, aggregation), so the layout is the
+//! hot-path data structure: a single flat buffer keeps the sweep
+//! prefetcher-friendly, lets the thread pool hand out disjoint `&mut` row
+//! chunks with no per-row allocation, and makes the whole state one
+//! `memcpy` to snapshot.
+
+use super::kernels;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamMatrix {
+    data: Vec<f32>,
+    n: usize,
+    d: usize,
+}
+
+impl ParamMatrix {
+    pub fn zeros(n: usize, d: usize) -> ParamMatrix {
+        ParamMatrix { data: vec![0.0; n * d], n, d }
+    }
+
+    /// n copies of one row (Algorithm 1's shared x̄^{-1} init).
+    pub fn replicate(n: usize, row: &[f32]) -> ParamMatrix {
+        let d = row.len();
+        let mut data = Vec::with_capacity(n * d);
+        for _ in 0..n {
+            data.extend_from_slice(row);
+        }
+        ParamMatrix { data, n, d }
+    }
+
+    /// Build from nested rows (interop with the seed layout).
+    pub fn from_nested(rows: &[Vec<f32>]) -> ParamMatrix {
+        assert!(!rows.is_empty());
+        let d = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * d);
+        for r in rows {
+            assert_eq!(r.len(), d, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        ParamMatrix { data, n: rows.len(), d }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// All rows, in order (a `chunks_exact` view over the flat buffer).
+    pub fn rows(&self) -> std::slice::ChunksExact<'_, f32> {
+        self.data.chunks_exact(self.d)
+    }
+
+    pub fn rows_mut(&mut self) -> std::slice::ChunksExactMut<'_, f32> {
+        self.data.chunks_exact_mut(self.d)
+    }
+
+    /// The flat buffer (row-major): what the pool's chunk sweeps take.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Row mean into a caller buffer. Accumulates rows in index order —
+    /// the same association as the seed's `mean_of`, so results are
+    /// bit-identical to the nested-layout path.
+    pub fn mean_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.d);
+        out.fill(0.0);
+        for row in self.rows() {
+            kernels::add_assign(out, row);
+        }
+        kernels::scale(out, 1.0 / self.n as f32);
+    }
+
+    /// Weighted row mean (FedAvg aggregation with |D_i| weights), same
+    /// operation order as the seed's `weighted_mean`.
+    pub fn weighted_mean_into(&self, weights: &[f64], out: &mut [f32]) {
+        assert_eq!(weights.len(), self.n);
+        assert_eq!(out.len(), self.d);
+        let total: f64 = weights.iter().sum();
+        out.fill(0.0);
+        for (row, &w) in self.rows().zip(weights) {
+            kernels::axpy(out, (w / total) as f32, row);
+        }
+    }
+
+    /// Materialize the seed's nested layout (tests / interop).
+    pub fn to_nested(&self) -> Vec<Vec<f32>> {
+        self.rows().map(|r| r.to_vec()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replicate_and_rows() {
+        let m = ParamMatrix::replicate(3, &[1.0, 2.0]);
+        assert_eq!(m.n_rows(), 3);
+        assert_eq!(m.dim(), 2);
+        assert_eq!(m.row(2), &[1.0, 2.0]);
+        assert_eq!(m.rows().count(), 3);
+    }
+
+    #[test]
+    fn row_mut_is_disjoint_storage() {
+        let mut m = ParamMatrix::zeros(2, 3);
+        m.row_mut(1).copy_from_slice(&[1.0, 2.0, 3.0]);
+        assert_eq!(m.row(0), &[0.0, 0.0, 0.0]);
+        assert_eq!(m.row(1), &[1.0, 2.0, 3.0]);
+        assert_eq!(m.as_slice(), &[0.0, 0.0, 0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn mean_matches_seed_mean_of_bitwise() {
+        let nested = vec![vec![1.0f32, 0.25, -3.0], vec![0.5, 4.0, 9.5],
+                          vec![-2.25, 1.125, 0.75]];
+        let m = ParamMatrix::from_nested(&nested);
+        let mut out = vec![0.0f32; 3];
+        m.mean_into(&mut out);
+        assert_eq!(out, super::super::mean_of(&nested));
+    }
+
+    #[test]
+    fn weighted_mean_matches_seed_bitwise() {
+        let nested = vec![vec![1.0f32, 2.0], vec![3.0, 6.0], vec![-1.0, 0.5]];
+        let w = [3.0, 1.0, 2.0];
+        let m = ParamMatrix::from_nested(&nested);
+        let mut out = vec![0.0f32; 2];
+        m.weighted_mean_into(&w, &mut out);
+        assert_eq!(out, super::super::weighted_mean(&nested, &w));
+    }
+
+    #[test]
+    fn nested_roundtrip() {
+        let nested = vec![vec![1.0f32, 2.0], vec![3.0, 4.0]];
+        assert_eq!(ParamMatrix::from_nested(&nested).to_nested(), nested);
+    }
+}

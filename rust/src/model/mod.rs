@@ -1,25 +1,30 @@
 //! Flat-parameter model state and vector algebra.
 //!
-//! Mirrors the paper's formulation: device i owns x_i ∈ R^d, stored as a
-//! plain `Vec<f32>`. The L2 zoo (python/compile/model.py) is defined over
-//! the same flat vector, so compressors, the aggregation step, and the HLO
-//! executables all share one representation with zero translation.
+//! Mirrors the paper's formulation: device i owns x_i ∈ R^d, stored flat.
+//! The L2 zoo (python/compile/model.py) is defined over the same flat
+//! vector, so compressors, the aggregation step, and the HLO executables
+//! all share one representation with zero translation.
+//!
+//! Layout: the round engine keeps the n per-client models in one
+//! contiguous [`ParamMatrix`] (row per client) and runs the 8-lane
+//! [`kernels`] over row views; the free functions below are thin wrappers
+//! kept for the nested-`Vec` call sites (tests, reference oracle,
+//! examples) and are bit-compatible with the kernel path.
+
+pub mod kernels;
+pub mod matrix;
+
+pub use matrix::ParamMatrix;
 
 /// In-place `x ← x + a·y`.
 pub fn axpy(x: &mut [f32], a: f32, y: &[f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (xi, yi) in x.iter_mut().zip(y) {
-        *xi += a * yi;
-    }
+    kernels::axpy(x, a, y);
 }
 
 /// In-place aggregation step (Algorithm 1, ξ = 1):
 /// `x ← x − a·(x − anchor)` ≡ `x ← (1−a)·x + a·anchor`.
 pub fn aggregation_step(x: &mut [f32], a: f32, anchor: &[f32]) {
-    debug_assert_eq!(x.len(), anchor.len());
-    for (xi, mi) in x.iter_mut().zip(anchor) {
-        *xi -= a * (*xi - mi);
-    }
+    kernels::aggregation_step(x, a, anchor);
 }
 
 /// Mean of n equal-length vectors.

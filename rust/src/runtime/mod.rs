@@ -10,6 +10,16 @@
 //!   gradient the L1 Pallas kernel computes. It exists (a) to cross-check
 //!   the HLO path numerically (integration tests assert XLA ≡ native), and
 //!   (b) to run huge convex sweeps (Fig 3) at native speed.
+//!
+//! ### The buffer-reusing hot path
+//! [`Backend::grad_into`] writes the gradient into a caller-owned
+//! [`GradBuf`], so steady-state training performs no per-step heap
+//! allocation; the allocating [`Backend::grad`] remains as the convenience
+//! entry (and the default `grad_into` wraps it, so backends like
+//! [`xla::XlaBackend`] that marshal through PJRT literals keep working
+//! unchanged). Backends whose training batch is a deterministic function
+//! of the shard advertise [`Backend::static_train_batch`], which lets
+//! `FedEnv` assemble each shard's batch once instead of per call.
 
 pub mod xla;
 
@@ -21,8 +31,10 @@ pub use xla::XlaRuntime;
 /// One model-consumable batch.
 #[derive(Clone, Debug)]
 pub enum Batch {
-    /// logreg family: features, ±1 labels, sample weights (padding = 0)
-    Weighted { x: Vec<f32>, y: Vec<f32>, sw: Vec<f32> },
+    /// logreg family: features, ±1 labels, sample weights (padding = 0),
+    /// and the weight sum precomputed once at assembly (the effective
+    /// sample count — the forward pass normalizes by it every call).
+    Weighted { x: Vec<f32>, y: Vec<f32>, sw: Vec<f32>, wsum: f64 },
     /// classifier families: features + int class labels
     Labeled { x: Vec<f32>, y: Vec<i32> },
     /// LM family: token windows (input ∥ shifted targets)
@@ -30,10 +42,17 @@ pub enum Batch {
 }
 
 impl Batch {
+    /// Weighted logreg batch; sums the sample weights once here so the
+    /// per-call forward never re-reduces them.
+    pub fn weighted(x: Vec<f32>, y: Vec<f32>, sw: Vec<f32>) -> Batch {
+        let wsum: f64 = sw.iter().map(|&w| w as f64).sum();
+        Batch::Weighted { x, y, sw, wsum }
+    }
+
     /// Number of effective prediction events (for accuracy normalization).
     pub fn count(&self, tokens_per_sample: usize) -> f64 {
         match self {
-            Batch::Weighted { sw, .. } => sw.iter().map(|&w| w as f64).sum(),
+            Batch::Weighted { wsum, .. } => *wsum,
             Batch::Labeled { y, .. } => y.len() as f64,
             Batch::Tokens { t } => {
                 let w = tokens_per_sample + 1;
@@ -49,6 +68,32 @@ pub struct GradOut {
     pub loss: f64,
     /// raw correct-prediction count on the batch
     pub correct: f64,
+}
+
+/// Reusable gradient output buffer for [`Backend::grad_into`]. The `grad`
+/// vector keeps its capacity across calls, so a per-client `GradBuf` makes
+/// the local-step fan-out allocation-free in steady state.
+#[derive(Clone, Debug, Default)]
+pub struct GradBuf {
+    pub grad: Vec<f32>,
+    pub loss: f64,
+    /// raw correct-prediction count on the batch
+    pub correct: f64,
+}
+
+impl GradBuf {
+    pub fn new() -> GradBuf {
+        GradBuf::default()
+    }
+
+    /// Pre-sized buffer (avoids the one growth on first use).
+    pub fn with_dim(d: usize) -> GradBuf {
+        GradBuf { grad: vec![0.0; d], loss: 0.0, correct: 0.0 }
+    }
+
+    pub fn into_out(self) -> GradOut {
+        GradOut { grad: self.grad, loss: self.loss, correct: self.correct }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -67,6 +112,28 @@ pub trait Backend: Send + Sync {
 
     fn grad(&self, theta: &[f32], batch: &Batch) -> anyhow::Result<GradOut>;
     fn eval(&self, theta: &[f32], batch: &Batch) -> anyhow::Result<EvalOut>;
+
+    /// Buffer-reusing gradient: fill `out` (resizing `out.grad` to
+    /// `param_count` without reallocating once warm). The default wraps
+    /// the allocating [`Backend::grad`] so existing backends keep working;
+    /// hot-path backends override it.
+    fn grad_into(&self, theta: &[f32], batch: &Batch, out: &mut GradBuf)
+                 -> anyhow::Result<()> {
+        let g = self.grad(theta, batch)?;
+        out.grad.clear();
+        out.grad.extend_from_slice(&g.grad);
+        out.loss = g.loss;
+        out.correct = g.correct;
+        Ok(())
+    }
+
+    /// True when `make_train_batch` is a deterministic, RNG-free function
+    /// of the shard (the full-gradient convex regimes). Lets the
+    /// environment cache one batch per shard instead of assembling
+    /// per call — the single largest saving in the round hot path.
+    fn static_train_batch(&self) -> bool {
+        false
+    }
 
     /// Assemble a training batch from a client shard.
     fn make_train_batch(&self, shard: &Dataset, rng: &mut Rng) -> Batch;
@@ -92,11 +159,15 @@ impl NativeLogreg {
         NativeLogreg { dim, l2, train_pad, eval_pad }
     }
 
-    fn forward(&self, theta: &[f32], x: &[f32], y: &[f32], sw: &[f32],
+    /// Fused loss/accuracy/gradient pass. One transcendental per active
+    /// sample: `t = e^{−|y·z|}` feeds both the stable softplus loss
+    /// (`log(1+e^{−yz})`) and the sigmoid gradient coefficient
+    /// (`σ(−yz) = t/(1+t)` or `1/(1+t)` by sign). `total_w` arrives
+    /// precomputed from the batch (`Batch::weighted`).
+    fn forward(&self, theta: &[f32], x: &[f32], y: &[f32], sw: &[f32], total_w: f64,
                grad: Option<&mut [f32]>) -> (f64, f64) {
         let d = self.dim;
         let m = x.len() / d;
-        let total_w: f64 = sw.iter().map(|&w| w as f64).sum();
         let mut loss = 0.0f64;
         let mut correct = 0.0f64;
         let mut g = grad;
@@ -106,22 +177,19 @@ impl NativeLogreg {
                 continue;
             }
             let row = &x[j * d..(j + 1) * d];
-            let z: f32 = row.iter().zip(theta).map(|(a, b)| a * b).sum();
+            let z = crate::model::kernels::dot(row, theta);
             let yz = (y[j] * z) as f64;
-            // log(1 + e^{-yz}) stably
-            loss += wj as f64 * if yz > 0.0 {
-                (-yz).exp().ln_1p()
-            } else {
-                -yz + yz.exp().ln_1p()
-            };
+            // t = e^{−|yz|}: log(1 + e^{−yz}) stably, in both branches
+            let t = (-yz.abs()).exp();
+            loss += wj as f64 * if yz > 0.0 { t.ln_1p() } else { -yz + t.ln_1p() };
             if yz > 0.0 {
                 correct += wj as f64;
             }
             if let Some(gbuf) = g.as_deref_mut() {
-                let coef = wj * (-y[j]) / (1.0 + (y[j] * z).exp());
-                for (gi, xi) in gbuf.iter_mut().zip(row) {
-                    *gi += coef * xi;
-                }
+                // σ(−yz), reusing t instead of a second exp
+                let sig = if yz > 0.0 { t / (1.0 + t) } else { 1.0 / (1.0 + t) };
+                let coef = wj * (-y[j]) * sig as f32;
+                crate::model::kernels::axpy(gbuf, coef, row);
             }
         }
         let reg: f64 = theta.iter().map(|&t| 0.5 * self.l2 as f64 * (t as f64) * (t as f64)).sum();
@@ -150,31 +218,46 @@ impl Backend for NativeLogreg {
     }
 
     fn grad(&self, theta: &[f32], batch: &Batch) -> anyhow::Result<GradOut> {
-        let Batch::Weighted { x, y, sw } = batch else {
+        let mut buf = GradBuf::new();
+        self.grad_into(theta, batch, &mut buf)?;
+        Ok(buf.into_out())
+    }
+
+    fn grad_into(&self, theta: &[f32], batch: &Batch, out: &mut GradBuf)
+                 -> anyhow::Result<()> {
+        let Batch::Weighted { x, y, sw, wsum } = batch else {
             anyhow::bail!("NativeLogreg expects a Weighted batch");
         };
-        let mut grad = vec![0.0f32; self.dim];
-        let (loss, correct) = self.forward(theta, x, y, sw, Some(&mut grad));
-        Ok(GradOut { grad, loss, correct })
+        out.grad.clear();
+        out.grad.resize(self.dim, 0.0);
+        let (loss, correct) = self.forward(theta, x, y, sw, *wsum, Some(&mut out.grad));
+        out.loss = loss;
+        out.correct = correct;
+        Ok(())
     }
 
     fn eval(&self, theta: &[f32], batch: &Batch) -> anyhow::Result<EvalOut> {
-        let Batch::Weighted { x, y, sw } = batch else {
+        let Batch::Weighted { x, y, sw, wsum } = batch else {
             anyhow::bail!("NativeLogreg expects a Weighted batch");
         };
-        let (loss, correct) = self.forward(theta, x, y, sw, None);
+        let (loss, correct) = self.forward(theta, x, y, sw, *wsum, None);
         Ok(EvalOut { loss, accuracy: correct / batch.count(0) })
     }
 
+    fn static_train_batch(&self) -> bool {
+        // the paper's convex experiments use the *full* local gradient:
+        // the batch is a pure function of the shard
+        true
+    }
+
     fn make_train_batch(&self, shard: &Dataset, _rng: &mut Rng) -> Batch {
-        // the paper's convex experiments use the *full* local gradient
         let (x, y, sw) = Batcher::new(shard).full_weighted(self.train_pad);
-        Batch::Weighted { x, y, sw }
+        Batch::weighted(x, y, sw)
     }
 
     fn make_eval_batch(&self, data: &Dataset) -> Batch {
         let (x, y, sw) = Batcher::new(data).eval_weighted(self.eval_pad, self.eval_pad);
-        Batch::Weighted { x, y, sw }
+        Batch::weighted(x, y, sw)
     }
 }
 
@@ -238,5 +321,64 @@ mod tests {
         for (a, b) in g1.grad.iter().zip(&g2.grad) {
             assert!((a - b).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn grad_into_equals_grad_bitwise() {
+        // the engine's buffer-reusing entry must be the *same computation*
+        // as the allocating one: bit-for-bit, across reuses of the buffer
+        let (be, data) = setup();
+        let mut rng = Rng::new(3);
+        let batch = be.make_train_batch(&data, &mut rng);
+        let mut buf = GradBuf::new();
+        for trial in 0..5u64 {
+            let theta: Vec<f32> =
+                (0..20).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+            let g = be.grad(&theta, &batch).unwrap();
+            be.grad_into(&theta, &batch, &mut buf).unwrap();
+            assert_eq!(buf.grad, g.grad, "trial {trial}");
+            assert_eq!(buf.loss, g.loss, "trial {trial}");
+            assert_eq!(buf.correct, g.correct, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn grad_into_reuses_buffer_storage() {
+        let (be, data) = setup();
+        let mut rng = Rng::new(4);
+        let batch = be.make_train_batch(&data, &mut rng);
+        let theta = vec![0.1f32; 20];
+        let mut buf = GradBuf::new();
+        be.grad_into(&theta, &batch, &mut buf).unwrap();
+        let ptr = buf.grad.as_ptr();
+        let cap = buf.grad.capacity();
+        for _ in 0..8 {
+            be.grad_into(&theta, &batch, &mut buf).unwrap();
+            assert_eq!(buf.grad.as_ptr(), ptr, "gradient storage moved");
+            assert_eq!(buf.grad.capacity(), cap, "gradient capacity changed");
+        }
+    }
+
+    #[test]
+    fn batch_weighted_precomputes_weight_sum() {
+        let b = Batch::weighted(vec![0.0; 8], vec![1.0, -1.0, 1.0, 1.0],
+                                vec![1.0, 1.0, 0.5, 0.0]);
+        let Batch::Weighted { wsum, .. } = &b else { panic!() };
+        assert_eq!(*wsum, 2.5);
+        assert_eq!(b.count(0), 2.5);
+    }
+
+    #[test]
+    fn native_train_batches_are_static() {
+        let (be, data) = setup();
+        assert!(be.static_train_batch());
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(999);
+        let a = be.make_train_batch(&data, &mut r1);
+        let b = be.make_train_batch(&data, &mut r2);
+        let (Batch::Weighted { x: xa, wsum: wa, .. },
+             Batch::Weighted { x: xb, wsum: wb, .. }) = (&a, &b) else { panic!() };
+        assert_eq!(xa, xb);
+        assert_eq!(wa, wb);
     }
 }

@@ -206,7 +206,7 @@ impl XlaBackend {
         let mut lits: Vec<xla::Literal> = Vec::with_capacity(exec.inputs.len());
         lits.push(xla::Literal::vec1(theta));
         match batch {
-            Batch::Weighted { x, y, sw } => {
+            Batch::Weighted { x, y, sw, .. } => {
                 lits.push(reshaped_f32(x, &exec.inputs[1])?);
                 lits.push(reshaped_f32(y, &exec.inputs[2])?);
                 lits.push(reshaped_f32(sw, &exec.inputs[3])?);
@@ -297,12 +297,19 @@ impl Backend for XlaBackend {
         Ok(EvalOut { loss, accuracy: correct / count })
     }
 
+    fn static_train_batch(&self) -> bool {
+        // the logreg artifacts run the full-gradient convex regime: the
+        // batch is a deterministic function of the shard, so the
+        // environment may cache it
+        self.entry.meta.kind == "logreg"
+    }
+
     fn make_train_batch(&self, shard: &Dataset, rng: &mut Rng) -> Batch {
         let m = &self.entry.meta;
         match m.kind.as_str() {
             "logreg" => {
                 let (x, y, sw) = Batcher::new(shard).full_weighted(m.train_batch);
-                Batch::Weighted { x, y, sw }
+                Batch::weighted(x, y, sw)
             }
             "lm" => {
                 let (x, _) = Batcher::new(shard).sample(m.train_batch, rng);
@@ -320,7 +327,7 @@ impl Backend for XlaBackend {
         match m.kind.as_str() {
             "logreg" => {
                 let (x, y, sw) = Batcher::new(data).eval_weighted(m.eval_batch, m.eval_batch);
-                Batch::Weighted { x, y, sw }
+                Batch::weighted(x, y, sw)
             }
             "lm" => {
                 let idx: Vec<usize> = (0..m.eval_batch).map(|i| i % data.len()).collect();

@@ -1,0 +1,89 @@
+//! Counting global allocator shared by the perf harnesses.
+//!
+//! Binaries that want allocation accounting install [`CountingAlloc`]:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: pfl::util::alloc_count::CountingAlloc =
+//!     pfl::util::alloc_count::CountingAlloc;
+//! ```
+//!
+//! The `pfl` launcher and `benches/perf_round_latency.rs` both do, which
+//! is what lets `pfl bench` and the bench assert the round engine's
+//! zero-allocation steady state. The counter is a relaxed atomic
+//! increment per `alloc`/`realloc` — negligible against any real
+//! allocation — and deallocations are not counted (the claim under test
+//! is "no allocations", not "balanced allocations"). When the allocator
+//! is *not* installed (library tests, downstream users), the counter
+//! simply never moves; [`counting_enabled`] probes for that so harness
+//! code can report "not measured" instead of a vacuous zero.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// System allocator with a global allocation counter.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Total allocations observed so far (0 forever if the counting allocator
+/// is not installed as the global allocator).
+pub fn allocations() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// True when [`CountingAlloc`] is actually installed: performs one heap
+/// allocation and checks that the counter moved.
+pub fn counting_enabled() -> bool {
+    let before = allocations();
+    std::hint::black_box(Box::new(0u8));
+    allocations() != before
+}
+
+/// Allocations performed while running `f`.
+pub fn allocations_during<R>(f: impl FnOnce() -> R) -> (R, u64) {
+    let before = allocations();
+    let r = f();
+    (r, allocations() - before)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_is_monotone_and_probe_is_consistent() {
+        // in the test binary the counting allocator is NOT installed, so
+        // the probe must report disabled and the counter must not move
+        let a = allocations();
+        let (_, n) = allocations_during(|| std::hint::black_box(vec![1u8; 64]));
+        let b = allocations();
+        if counting_enabled() {
+            assert!(n > 0);
+        } else {
+            assert_eq!(a, b);
+            assert_eq!(n, 0);
+        }
+    }
+}

@@ -2,6 +2,7 @@
 //! deterministic RNG, bit-level I/O, JSON codec, CLI parsing, statistics,
 //! and a fixed worker pool.
 
+pub mod alloc_count;
 pub mod bitio;
 pub mod cli;
 pub mod json;

@@ -1,50 +1,138 @@
-//! Fixed-size worker pool (tokio is not in the offline vendor set).
+//! Fixed-size worker pool (tokio is not in the offline vendor set), built
+//! around a **zero-allocation broadcast scope**.
 //!
-//! The coordinator fans one closure per client out to the pool each protocol
-//! step; `scope_map` blocks until all complete and returns results in input
-//! order. Workers are long-lived OS threads fed through an mpsc channel, so
-//! per-round overhead is one enqueue/dequeue per client, not thread spawn.
+//! The round engine fans one closure per client out to the pool every
+//! protocol step, thousands of times per run. The seed implementation
+//! boxed one job per client per call and pushed it through an mpsc channel
+//! (one heap node per send); at L2GD rates that is the dominant steady-
+//! state allocation source. This version posts a single type-erased
+//! `&dyn Fn(usize)` task under a mutex; workers pull indices from a shared
+//! cursor and signal completion over a condvar. Dispatch performs **no
+//! heap allocation at all**, which is what lets
+//! `benches/perf_round_latency.rs` assert a zero-alloc steady state for
+//! the whole training step.
+//!
+//! Layers:
+//! * [`ThreadPool::scope_for`] — the allocation-free core: run `f(i)` for
+//!   `i in 0..n` across the workers, blocking until all complete.
+//! * [`ThreadPool::scope_chunks_mut`] / [`ThreadPool::scope_chunks_zip_mut`]
+//!   — disjoint `&mut` row/state access over contiguous storage (the
+//!   ParamMatrix sweeps), also allocation-free.
+//! * [`ThreadPool::scope_map`] / [`ThreadPool::scope_map_n`] /
+//!   [`ThreadPool::scope_zip_mut`] — ordered-result conveniences (allocate
+//!   only their output vector).
 
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::cell::Cell;
+use std::panic::AssertUnwindSafe;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+thread_local! {
+    /// True while this thread is executing a posted scope closure. Lets
+    /// `scope_for` reject reentrant submission with a clean panic (which
+    /// the worker's catch_unwind routes back to the outer submitter)
+    /// instead of deadlocking or poisoning the pool mutex.
+    static IN_SCOPE_WORKER: Cell<bool> = const { Cell::new(false) };
+}
 
-enum Msg {
-    Run(Job),
-    Shutdown,
+/// Lifetime-erased reference to the posted closure. Soundness: the
+/// submitter blocks inside `scope_for` until every index has completed and
+/// clears the slot before returning, so the pointee outlives all uses.
+type TaskFn = *const (dyn Fn(usize) + Sync);
+
+struct State {
+    /// currently posted broadcast task (`None` = idle)
+    task: Option<TaskFn>,
+    /// total indices of the current task
+    n: usize,
+    /// next index to hand out
+    next: usize,
+    /// indices handed out but not yet completed
+    active: usize,
+    /// first panic payload observed while running the current task
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    shutdown: bool,
+}
+
+// `TaskFn` is a raw pointer; the dispatch protocol above is what makes
+// sharing it across workers sound.
+unsafe impl Send for State {}
+
+struct Inner {
+    state: Mutex<State>,
+    /// workers wait here for a task (or shutdown)
+    work: Condvar,
+    /// the submitter waits here for task completion
+    done: Condvar,
 }
 
 pub struct ThreadPool {
-    tx: mpsc::Sender<Msg>,
-    shared_rx: Arc<Mutex<mpsc::Receiver<Msg>>>,
+    inner: Arc<Inner>,
     handles: Vec<thread::JoinHandle<()>>,
     size: usize,
+}
+
+fn worker(inner: Arc<Inner>) {
+    let mut st = inner.state.lock().unwrap();
+    loop {
+        if st.shutdown {
+            return;
+        }
+        if let Some(ptr) = st.task {
+            if st.next < st.n {
+                let i = st.next;
+                st.next += 1;
+                st.active += 1;
+                drop(st);
+                // Safety: the submitter keeps the closure alive until the
+                // task completes (it is blocked in scope_for).
+                let f = unsafe { &*ptr };
+                IN_SCOPE_WORKER.with(|w| w.set(true));
+                let res = std::panic::catch_unwind(AssertUnwindSafe(|| f(i)));
+                IN_SCOPE_WORKER.with(|w| w.set(false));
+                st = inner.state.lock().unwrap();
+                st.active -= 1;
+                if let Err(p) = res {
+                    if st.panic.is_none() {
+                        st.panic = Some(p);
+                    }
+                }
+                if st.next >= st.n && st.active == 0 {
+                    inner.done.notify_all();
+                }
+                continue;
+            }
+        }
+        st = inner.work.wait(st).unwrap();
+    }
 }
 
 impl ThreadPool {
     pub fn new(size: usize) -> ThreadPool {
         let size = size.max(1);
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let shared_rx = Arc::new(Mutex::new(rx));
+        let inner = Arc::new(Inner {
+            state: Mutex::new(State {
+                task: None,
+                n: 0,
+                next: 0,
+                active: 0,
+                panic: None,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
         let mut handles = Vec::with_capacity(size);
         for i in 0..size {
-            let rx = Arc::clone(&shared_rx);
+            let inner = Arc::clone(&inner);
             handles.push(
                 thread::Builder::new()
                     .name(format!("pfl-worker-{i}"))
-                    .spawn(move || loop {
-                        let msg = { rx.lock().unwrap().recv() };
-                        match msg {
-                            Ok(Msg::Run(job)) => job(),
-                            Ok(Msg::Shutdown) | Err(_) => break,
-                        }
-                    })
+                    .spawn(move || worker(inner))
                     .expect("spawn worker"),
             );
         }
-        ThreadPool { tx, shared_rx, handles, size }
+        ThreadPool { inner, handles, size }
     }
 
     /// Pool sized to the machine (cores, capped at 16).
@@ -59,6 +147,76 @@ impl ThreadPool {
         self.size
     }
 
+    /// Run `f(i)` for every `i in 0..n` on the pool and block until all
+    /// complete. **Allocation-free**: the closure is posted by reference,
+    /// indices are handed out from a shared cursor, completion is a
+    /// condvar — no boxing, no channels.
+    ///
+    /// Not reentrant: calling any `scope_*` from inside a posted closure
+    /// panics cleanly (the panic is checked *before* the pool mutex is
+    /// touched, so it propagates to the outer submitter instead of
+    /// poisoning the pool). Concurrent submitters from distinct threads
+    /// serialize: later scopes wait for the active one to finish.
+    ///
+    /// A panic inside `f` is caught per index, the scope drains, and the
+    /// first payload is re-raised on the calling thread.
+    pub fn scope_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        assert!(!IN_SCOPE_WORKER.with(|w| w.get()),
+                "ThreadPool scopes are not reentrant from posted closures");
+        let f_obj: &(dyn Fn(usize) + Sync) = &f;
+        // Lifetime erasure (the same trick the seed pool used for its
+        // boxed jobs): sound because we block below until every index has
+        // completed, so the closure outlives all worker-side uses.
+        let ptr: TaskFn = unsafe { std::mem::transmute(f_obj) };
+        let mut st = self.inner.state.lock().unwrap();
+        // another thread's scope may be in flight: wait for the slot
+        while st.task.is_some() {
+            st = self.inner.done.wait(st).unwrap();
+        }
+        st.task = Some(ptr);
+        st.n = n;
+        st.next = 0;
+        st.active = 0;
+        self.inner.work.notify_all();
+        while !(st.next >= st.n && st.active == 0) {
+            st = self.inner.done.wait(st).unwrap();
+        }
+        st.task = None;
+        let panic = st.panic.take();
+        // wake any submitter queued on the task slot
+        self.inner.done.notify_all();
+        drop(st);
+        if let Some(p) = panic {
+            std::panic::resume_unwind(p);
+        }
+    }
+
+    /// Run `f(i)` for `i in 0..n`; results in index order.
+    pub fn scope_map_n<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        self.scope_for(n, |i| {
+            let po = out_ptr;
+            let r = f(i);
+            // Safety: each index writes exactly its own slot, and `out`
+            // outlives the scope (we block until completion).
+            unsafe {
+                *po.0.add(i) = Some(r);
+            }
+        });
+        out.into_iter().map(|o| o.expect("slot written")).collect()
+    }
+
     /// Run `f(i, &items[i])` for every item on the pool; results in order.
     ///
     /// `f` must be `Sync` (shared across workers); items are only read.
@@ -68,8 +226,7 @@ impl ThreadPool {
         R: Send,
         F: Fn(usize, &T) -> R + Sync,
     {
-        let mut units = vec![(); items.len()];
-        self.scope_zip_mut(&mut units, items, |i, _unit, item| f(i, item))
+        self.scope_map_n(items.len(), |i| f(i, &items[i]))
     }
 
     /// Run `f(i, &mut states[i], &items[i])` for every index on the pool;
@@ -85,41 +242,87 @@ impl ThreadPool {
     {
         let n = items.len();
         assert_eq!(states.len(), n, "states/items length mismatch");
-        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-        if n == 0 {
-            return Vec::new();
-        }
-        // Scoped-threads trick without crossbeam: hand out raw slots guarded
-        // by a completion channel. Safety: each index is written exactly once
-        // (so the &mut derived per index is unique) and the borrows outlive
-        // the jobs because we block below.
-        let (done_tx, done_rx) = mpsc::channel::<()>();
-        let out_ptr = SendPtr(out.as_mut_ptr());
-        let state_ptr = SendPtr(states.as_mut_ptr());
-        let f_ref = &f;
-        for i in 0..n {
-            let tx = done_tx.clone();
-            let po = out_ptr;
-            let ps = state_ptr;
-            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
-                // capture the whole SendPtrs, not their raw fields
-                let po = po;
-                let ps = ps;
-                let r = unsafe { f_ref(i, &mut *ps.0.add(i), &items[i]) };
-                unsafe {
-                    *po.0.add(i) = Some(r);
-                }
-                let _ = tx.send(());
-            });
-            // lifetime erasure: sound because we block on the completion
-            // channel below before any borrow (f, items, states, out) ends.
-            let job: Job = unsafe { std::mem::transmute(job) };
-            self.tx.send(Msg::Run(job)).expect("pool alive");
-        }
-        for _ in 0..n {
-            done_rx.recv().expect("worker completed");
-        }
-        out.into_iter().map(|o| o.expect("slot written")).collect()
+        let sp = SendPtr(states.as_mut_ptr());
+        self.scope_map_n(n, |i| {
+            let sp = sp;
+            // Safety: index-disjoint &mut, borrow outlives the scope.
+            let s = unsafe { &mut *sp.0.add(i) };
+            f(i, s, &items[i])
+        })
+    }
+
+    /// Parallel sweep over disjoint contiguous chunks:
+    /// `f(i, &mut data[i*chunk .. (i+1)*chunk])` for `i in 0..len/chunk`.
+    /// Allocation-free (no result vector) — the ParamMatrix row sweep of
+    /// the round engine.
+    pub fn scope_chunks_mut<T, F>(&self, data: &mut [T], chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(chunk > 0, "chunk must be positive");
+        assert_eq!(data.len() % chunk, 0, "data length not a chunk multiple");
+        let n = data.len() / chunk;
+        let dp = SendPtr(data.as_mut_ptr());
+        self.scope_for(n, |i| {
+            let dp = dp;
+            // Safety: chunks are disjoint by construction; the borrow of
+            // `data` outlives the scope.
+            let row = unsafe { std::slice::from_raw_parts_mut(dp.0.add(i * chunk), chunk) };
+            f(i, row);
+        });
+    }
+
+    /// Run `f` exactly once **on every worker thread** (a barrier inside
+    /// the task keeps a worker from grabbing a second index). Used to warm
+    /// per-thread resources — e.g. the compression scratch pools — so that
+    /// dynamic index assignment can never surface a first-use allocation
+    /// on a cold worker in the middle of a measured steady state.
+    pub fn on_each_worker<F>(&self, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let arrived = AtomicUsize::new(0);
+        let size = self.size;
+        self.scope_for(size, |i| {
+            arrived.fetch_add(1, Ordering::SeqCst);
+            // wait until every worker holds an index: each of the `size`
+            // indices then necessarily sits on a distinct worker. Yield
+            // while waiting — with more workers than cores, a pure spin
+            // would burn whole scheduler quanta before the last worker
+            // gets a core to arrive on.
+            while arrived.load(Ordering::SeqCst) < size {
+                std::thread::yield_now();
+            }
+            f(i);
+        });
+    }
+
+    /// [`Self::scope_chunks_mut`] zipped with one `&mut` state per chunk:
+    /// `f(i, row_i, &mut states[i])`. Allocation-free. This is the round
+    /// engine's local-step shape: row i of the model matrix plus client
+    /// i's slot (RNG stream, gradient buffer, compressor state).
+    pub fn scope_chunks_zip_mut<T, S, F>(&self, data: &mut [T], chunk: usize,
+                                         states: &mut [S], f: F)
+    where
+        T: Send,
+        S: Send,
+        F: Fn(usize, &mut [T], &mut S) + Sync,
+    {
+        assert!(chunk > 0, "chunk must be positive");
+        assert_eq!(data.len(), states.len() * chunk, "data/states length mismatch");
+        let dp = SendPtr(data.as_mut_ptr());
+        let sp = SendPtr(states.as_mut_ptr());
+        self.scope_for(states.len(), |i| {
+            let dp = dp;
+            let sp = sp;
+            // Safety: chunk- and index-disjoint &mut, borrows outlive the
+            // scope.
+            let row = unsafe { std::slice::from_raw_parts_mut(dp.0.add(i * chunk), chunk) };
+            let s = unsafe { &mut *sp.0.add(i) };
+            f(i, row, s);
+        });
     }
 }
 
@@ -132,16 +335,18 @@ impl<T> Clone for SendPtr<T> {
 }
 impl<T> Copy for SendPtr<T> {}
 unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        for _ in &self.handles {
-            let _ = self.tx.send(Msg::Shutdown);
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+            self.inner.work.notify_all();
         }
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
-        let _ = &self.shared_rx; // keep rx alive until workers exit
     }
 }
 
@@ -209,5 +414,116 @@ mod tests {
             let out = pool.scope_map(&items, |_, &x| x + round);
             assert_eq!(out[5], 5 + round);
         }
+    }
+
+    #[test]
+    fn scope_for_covers_every_index_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        pool.scope_for(64, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn chunks_mut_touches_disjoint_rows() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0.0f32; 12 * 8];
+        pool.scope_chunks_mut(&mut data, 8, |i, row| {
+            assert_eq!(row.len(), 8);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = (i * 100 + j) as f32;
+            }
+        });
+        for i in 0..12 {
+            for j in 0..8 {
+                assert_eq!(data[i * 8 + j], (i * 100 + j) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn chunks_zip_mut_pairs_row_and_state() {
+        let pool = ThreadPool::new(3);
+        let mut data = vec![1.0f32; 10 * 4];
+        let mut sums = vec![0.0f32; 10];
+        pool.scope_chunks_zip_mut(&mut data, 4, &mut sums, |i, row, s| {
+            for v in row.iter_mut() {
+                *v += i as f32;
+            }
+            *s = row.iter().sum();
+        });
+        for i in 0..10 {
+            assert_eq!(sums[i], 4.0 * (1.0 + i as f32));
+        }
+    }
+
+    #[test]
+    fn on_each_worker_hits_every_thread_once() {
+        let pool = ThreadPool::new(4);
+        let hits = AtomicUsize::new(0);
+        let distinct = std::sync::Mutex::new(std::collections::BTreeSet::new());
+        pool.on_each_worker(|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+            distinct.lock().unwrap().insert(std::thread::current().name()
+                .unwrap_or("?").to_string());
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
+        assert_eq!(distinct.lock().unwrap().len(), 4, "must run on 4 distinct workers");
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scope_for(8, |i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must reach the submitter");
+        // the pool must still be fully functional afterwards
+        let out = pool.scope_map_n(5, |i| i * 2);
+        assert_eq!(out, vec![0, 2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn reentrant_scope_panics_cleanly_instead_of_hanging() {
+        let pool = ThreadPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scope_for(2, |_| {
+                pool.scope_map_n(2, |i| i); // illegal: scope inside scope
+            });
+        }));
+        assert!(r.is_err(), "reentrant scope must panic, not deadlock");
+        // pool (and its mutex) must survive un-poisoned
+        let out = pool.scope_map_n(3, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn concurrent_submitters_serialize() {
+        let pool = std::sync::Arc::new(ThreadPool::new(2));
+        let total = std::sync::Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let pool = std::sync::Arc::clone(&pool);
+            let total = std::sync::Arc::clone(&total);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..25 {
+                    pool.scope_for(8, |_| {
+                        total.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 4 * 25 * 8);
     }
 }

@@ -27,12 +27,5 @@ pub fn runtime_or_skip(models: &[&str]) -> Option<XlaRuntime> {
 pub fn logreg_fed_env(backend: Arc<dyn Backend>, n: usize, seed: u64) -> FedEnv {
     let (train, test) = synth::logistic_split(80 * n, 200, 123, 0.03, seed);
     let shards = train.split_contiguous(n);
-    FedEnv {
-        backend,
-        shards,
-        train_eval: train,
-        test,
-        pool: ThreadPool::new(4),
-        seed,
-    }
+    FedEnv::new(backend, shards, train, test, ThreadPool::new(4), seed)
 }

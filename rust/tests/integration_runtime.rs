@@ -19,7 +19,7 @@ fn xla_logreg_grad_matches_native_oracle() {
 
     let data = synth::logistic(321, 123, 0.05, 7);
     let (x, y, sw) = Batcher::new(&data).full_weighted(512);
-    let batch = Batch::Weighted { x, y, sw };
+    let batch = Batch::weighted(x, y, sw);
 
     let mut rng = Rng::new(0);
     let mut theta: Vec<f32> = (0..123).map(|_| rng.normal_f32(0.0, 0.3)).collect();
@@ -103,13 +103,9 @@ fn runtime_rejects_wrong_shapes_and_unknown_models() {
     assert!(rt.backend("nope").is_err());
     let be = rt.backend("logreg123").unwrap();
     let bad_theta = vec![0.0f32; 7];
-    let batch = Batch::Weighted {
-        x: vec![0.0; 512 * 123],
-        y: vec![1.0; 512],
-        sw: vec![1.0; 512],
-    };
+    let batch = Batch::weighted(vec![0.0; 512 * 123], vec![1.0; 512], vec![1.0; 512]);
     assert!(be.grad(&bad_theta, &batch).is_err());
-    let bad_batch = Batch::Weighted { x: vec![0.0; 10], y: vec![1.0; 512], sw: vec![1.0; 512] };
+    let bad_batch = Batch::weighted(vec![0.0; 10], vec![1.0; 512], vec![1.0; 512]);
     assert!(be.grad(&vec![0.0f32; 123], &bad_batch).is_err());
 }
 
@@ -134,7 +130,7 @@ fn concurrent_execution_is_consistent() {
     let be = std::sync::Arc::new(rt.backend("logreg123").unwrap());
     let data = synth::logistic(300, 123, 0.05, 3);
     let (x, y, sw) = Batcher::new(&data).full_weighted(512);
-    let batch = Batch::Weighted { x, y, sw };
+    let batch = Batch::weighted(x, y, sw);
     let theta = vec![0.01f32; 123];
     let serial = be.grad(&theta, &batch).unwrap();
     let pool = pfl::util::threadpool::ThreadPool::new(8);

@@ -61,14 +61,8 @@ fn xla_mlp_trains_federated() {
     };
     let (train, test) = (flat(img.0), flat(img.1));
     let shards = train.split_contiguous(4);
-    let env = pfl::algorithms::FedEnv {
-        backend: be,
-        shards,
-        train_eval: train,
-        test,
-        pool: pfl::util::threadpool::ThreadPool::new(4),
-        seed: 3,
-    };
+    let env = pfl::algorithms::FedEnv::new(
+        be, shards, train, test, pfl::util::threadpool::ThreadPool::new(4), 3);
     let mut alg = L2gd::from_local_and_agg(0.5, 0.1, 1.0, 4,
                                            "natural", "natural").unwrap();
     let s = alg.run(&env, 120, 60).unwrap();
