@@ -33,6 +33,19 @@
 //! After the first communication round, a steady-state step touches the
 //! allocator **zero** times — asserted under a counting global allocator
 //! in `benches/perf_round_latency.rs` and `pfl bench`.
+//!
+//! ### Partial participation (the fleet simulator's entry points)
+//! Every phase also exists in a masked form — [`L2gdEngine::step_local`],
+//! [`L2gdEngine::compress_uplinks`] / [`L2gdEngine::complete_fresh`],
+//! [`L2gdEngine::step_aggregate_cached`] — driven by the discrete-event
+//! simulator in [`crate::sim`]: only available devices take local steps,
+//! only the sampled-and-arrived cohort uplinks and receives the anchor.
+//! The masked sweeps run the *same* arithmetic in the same order, so an
+//! all-true mask reproduces the lockstep series bit for bit.
+//! [`L2gdEngine::enable_wire_framing`] switches the metering (not the
+//! math) to byte-accurate wire frames: each payload is framed with a
+//! [`crate::transport::frame`] header, decode-roundtripped, and `LinkStats`
+//! is fed the serialized frame size instead of the theoretical bit count.
 
 use std::sync::Arc;
 
@@ -42,6 +55,7 @@ use crate::metrics::Series;
 use crate::model::{kernels, ParamMatrix};
 use crate::protocol::{Coin, StepKind};
 use crate::runtime::{Backend as _, GradBuf};
+use crate::transport::frame::{self, FrameHeader, SpecTable};
 use crate::transport::Network;
 use crate::util::Rng;
 
@@ -50,6 +64,46 @@ use crate::util::Rng;
 /// training series — is machine-independent; n ≤ LEAF degenerates to the
 /// seed's exact sequential accumulation.
 const REDUCE_LEAF: usize = 8;
+
+/// Participation mask test: `None` is the lockstep full-participation
+/// path (no branch on the seed-equivalence path beyond this inlined
+/// `map_or`), `Some(mask)` restricts a sweep to the marked clients.
+#[inline]
+fn on(mask: Option<&[bool]>, i: usize) -> bool {
+    mask.map_or(true, |m| m[i])
+}
+
+/// Byte-accurate wire mode (see the module docs): spec-id table plus a
+/// reusable frame buffer. Metering-only — the training math never touches
+/// this.
+struct Framing {
+    table: SpecTable,
+    client_id: u16,
+    master_id: u16,
+    buf: Vec<u8>,
+}
+
+impl Framing {
+    /// Encode, decode back, verify, and return the serialized size in bits.
+    fn roundtrip(&mut self, h: FrameHeader, payload: &[u8]) -> anyhow::Result<u64> {
+        frame::encode_frame(&h, payload, &mut self.buf);
+        let (h2, p2) = frame::decode_frame(&self.buf)?;
+        anyhow::ensure!(h2 == h && p2 == payload,
+                        "wire frame roundtrip mismatch at step {}", h.round);
+        Ok((self.buf.len() * 8) as u64)
+    }
+
+    fn uplink_bits(&mut self, k: u64, client: usize, wire: &Compressed)
+                   -> anyhow::Result<u64> {
+        let h = FrameHeader::uplink(k, client, self.client_id, wire)?;
+        self.roundtrip(h, &wire.payload)
+    }
+
+    fn broadcast_bits(&mut self, k: u64, wire: &Compressed) -> anyhow::Result<u64> {
+        let h = FrameHeader::broadcast(k, self.master_id, wire)?;
+        self.roundtrip(h, &wire.payload)
+    }
+}
 
 /// Per-client engine state: everything a worker touches for client i,
 /// packed together so the pooled sweeps need no locks and no allocation.
@@ -150,6 +204,11 @@ pub struct L2gdEngine<'e> {
     master_buf: Compressed,
     coin: Coin,
     net: Network,
+    /// canonical spec strings (frame header spec-id interning)
+    client_spec: String,
+    master_spec: String,
+    /// byte-accurate wire metering, enabled by the fleet simulator
+    framing: Option<Framing>,
 }
 
 impl<'e> L2gdEngine<'e> {
@@ -211,6 +270,9 @@ impl<'e> L2gdEngine<'e> {
             master_buf: Compressed::empty(),
             coin: Coin::new(alg.p, env.seed ^ 0xC011), // coin stream
             net: Network::new(n),
+            client_spec: alg.client_comp.name(),
+            master_spec: alg.master_comp.name(),
+            framing: None,
         })
     }
 
@@ -223,14 +285,120 @@ impl<'e> L2gdEngine<'e> {
         &self.net
     }
 
+    /// Switch the wire metering to byte-accurate frames: `LinkStats` is fed
+    /// the serialized frame size (header + byte-aligned payload), and every
+    /// frame is encode/decode roundtrip-checked. The training math — and
+    /// therefore the loss series — is unchanged.
+    pub fn enable_wire_framing(&mut self) {
+        let mut table = SpecTable::new();
+        let client_id = table.intern(&self.client_spec);
+        let master_id = table.intern(&self.master_spec);
+        self.framing = Some(Framing { table, client_id, master_id, buf: Vec::new() });
+    }
+
+    /// The frame spec-id table (present once framing is enabled).
+    pub fn spec_table(&self) -> Option<&SpecTable> {
+        self.framing.as_ref().map(|f| &f.table)
+    }
+
     /// Advance one protocol iteration (step index `k` is used for bit
     /// accounting only). Steady state performs zero heap allocations.
     pub fn step(&mut self, k: u64) -> anyhow::Result<()> {
         match self.coin.draw() {
-            StepKind::Local => self.local_step()?,
+            StepKind::Local => self.local_step(None)?,
             StepKind::AggregateFresh => self.aggregate_fresh(k)?,
-            StepKind::AggregateCached => self.apply_aggregation(),
+            StepKind::AggregateCached => self.apply_aggregation(None),
         }
+        Ok(())
+    }
+
+    /// Draw the ξ coin for the next iteration — the simulator's dispatch
+    /// point (lockstep [`Self::step`] draws from the same stream, so a
+    /// simulator that executes every drawn kind reproduces it exactly).
+    pub fn draw(&mut self) -> StepKind {
+        self.coin.draw()
+    }
+
+    /// Protocol coin statistics (locals / fresh / cached counts).
+    pub fn coin_stats(&self) -> &crate::protocol::CoinStats {
+        &self.coin.stats
+    }
+
+    /// Local gradient step restricted to `active` devices (an offline
+    /// device keeps its model and draws nothing from its streams). With an
+    /// all-true mask this is bit-identical to the lockstep local step.
+    pub fn step_local(&mut self, active: &[bool]) -> anyhow::Result<()> {
+        debug_assert_eq!(active.len(), self.slots.len());
+        self.local_step(Some(active))
+    }
+
+    /// Cached-anchor aggregation applied to `active` devices only.
+    pub fn step_aggregate_cached(&mut self, active: &[bool]) {
+        debug_assert_eq!(active.len(), self.slots.len());
+        self.apply_aggregation(Some(active));
+    }
+
+    /// Phase 1 of a fresh aggregation under partial participation:
+    /// compress the local models of the `sampled` devices into their wire
+    /// buffers (each drawing from its own compression stream). The
+    /// simulator then reads payload sizes via [`Self::uplink_frame_bytes`]
+    /// to schedule arrivals, and commits the round with
+    /// [`Self::complete_fresh`] over the subset that made the deadline.
+    pub fn compress_uplinks(&mut self, sampled: &[bool]) -> anyhow::Result<()> {
+        debug_assert_eq!(sampled.len(), self.slots.len());
+        self.compress_step(Some(sampled))
+    }
+
+    /// Serialized uplink frame size (bytes) client `i`'s pending wire
+    /// buffer occupies — valid after [`Self::compress_uplinks`] marked `i`.
+    pub fn uplink_frame_bytes(&self, i: usize) -> u64 {
+        (frame::HEADER_BYTES + self.slots[i].wire.payload.len()) as u64
+    }
+
+    /// Serialized downlink (anchor broadcast) frame size in bytes — valid
+    /// after a fresh aggregation round.
+    pub fn downlink_frame_bytes(&self) -> u64 {
+        (frame::HEADER_BYTES + self.master_buf.payload.len()) as u64
+    }
+
+    /// Phase 2: meter the round's uplinks — `arrived` devices as
+    /// participants, `sampled`-but-late devices as transmitted-but-
+    /// discarded straggler traffic — average the arrived cohort's
+    /// compressed models into ȳ, broadcast C_M(ȳ) to the cohort, and
+    /// apply the aggregation step to the cohort. Errors on an empty
+    /// cohort (the simulator skips the round instead). With all-true
+    /// masks the model update is bit-identical to the lockstep fresh
+    /// aggregation.
+    pub fn complete_fresh(&mut self, k: u64, arrived: &[bool], sampled: &[bool])
+                          -> anyhow::Result<()> {
+        anyhow::ensure!(arrived.len() == self.slots.len()
+                            && sampled.len() == self.slots.len(),
+                        "participation mask length != n {}", self.slots.len());
+        debug_assert!(arrived.iter().zip(sampled).all(|(&a, &s)| s || !a),
+                      "arrived must be a subset of sampled");
+        self.finish_fresh(k, Some(arrived), Some(sampled))
+    }
+
+    /// A fresh-aggregation attempt where *no* sampled device made the
+    /// deadline: every cohort member still transmitted its frame, so the
+    /// bytes meter as discarded traffic — but nothing aggregates, the
+    /// anchor does not move, and the round records zero participants.
+    pub fn abort_fresh(&mut self, k: u64, sampled: &[bool]) -> anyhow::Result<()> {
+        anyhow::ensure!(sampled.len() == self.slots.len(),
+                        "participation mask length {} != n {}",
+                        sampled.len(), self.slots.len());
+        self.net.begin_round();
+        for (i, slot) in self.slots.iter().enumerate() {
+            if !sampled[i] {
+                continue;
+            }
+            let bits = match &mut self.framing {
+                Some(f) => f.uplink_bits(k, i, &slot.wire)?,
+                None => slot.wire.bits,
+            };
+            self.net.uplink_wasted(k, i, bits);
+        }
+        self.net.end_round();
         Ok(())
     }
 
@@ -253,14 +421,18 @@ impl<'e> L2gdEngine<'e> {
         drain_slot_errors(self.slots.iter_mut().map(|s| &mut s.err))
     }
 
-    /// All devices: one local gradient step, fused compute+update in a
-    /// single pooled sweep over disjoint matrix rows.
-    fn local_step(&mut self) -> anyhow::Result<()> {
+    /// One local gradient step (all devices, or the `mask`ed subset),
+    /// fused compute+update in a single pooled sweep over disjoint matrix
+    /// rows.
+    fn local_step(&mut self, mask: Option<&[bool]>) -> anyhow::Result<()> {
         let env = self.env;
         let coef = self.local_coef;
         let d = self.xs.dim();
         env.pool.scope_chunks_zip_mut(self.xs.as_mut_slice(), d, &mut self.slots,
                                       |i, x, slot| {
+            if !on(mask, i) {
+                return;
+            }
             let res = match env.train_batch_cached(i) {
                 Some(b) => env.backend.grad_into(x, b, &mut slot.grad),
                 None => {
@@ -276,34 +448,72 @@ impl<'e> L2gdEngine<'e> {
         self.take_err()
     }
 
-    /// The only communicating step: uplink C_i(x_i), fused
-    /// decode-accumulate into ȳ, broadcast C_M(ȳ), aggregate.
+    /// The lockstep communicating step: compress everyone, then finish.
     fn aggregate_fresh(&mut self, k: u64) -> anyhow::Result<()> {
+        self.compress_step(None)?;
+        self.finish_fresh(k, None, None)
+    }
+
+    /// Compress local models into the per-client wire buffers (parallel,
+    /// per-client mutable state; masked devices draw nothing).
+    fn compress_step(&mut self, mask: Option<&[bool]>) -> anyhow::Result<()> {
         let env = self.env;
-        let n = self.slots.len();
         let d = self.xs.dim();
-        // uplink: compress each local model into its reusable buffer
-        // (parallel, per-client mutable state)
         env.pool.scope_chunks_zip_mut(self.xs.as_mut_slice(), d, &mut self.slots,
-                                      |_i, x, slot| {
+                                      |i, x, slot| {
+            if !on(mask, i) {
+                return;
+            }
             if let Err(e) = slot.comp.compress_into(x, &mut slot.wire) {
                 slot.err = Some(e);
             }
         });
-        self.take_err()?;
+        self.take_err()
+    }
+
+    /// Meter uplinks, decode-accumulate ȳ, broadcast C_M(ȳ), aggregate —
+    /// over the full fleet (`None` masks, the seed-equivalent path) or a
+    /// cohort. `sampled` devices outside the cohort transmitted too:
+    /// their frames meter as discarded traffic, not participation.
+    fn finish_fresh(&mut self, k: u64, mask: Option<&[bool]>,
+                    sampled: Option<&[bool]>) -> anyhow::Result<()> {
+        let env = self.env;
+        let n = self.slots.len();
+        let d = self.xs.dim();
+        let count = match mask {
+            None => n,
+            Some(m) => m.iter().filter(|&&b| b).count(),
+        };
+        anyhow::ensure!(count > 0, "fresh aggregation with an empty cohort");
         self.net.begin_round();
         for (i, slot) in self.slots.iter().enumerate() {
-            self.net.uplink(k, i, slot.wire.bits);
+            let arrived = on(mask, i);
+            let transmitted = arrived || sampled.is_some_and(|s| s[i]);
+            if !transmitted {
+                continue;
+            }
+            let bits = match &mut self.framing {
+                Some(f) => f.uplink_bits(k, i, &slot.wire)?,
+                None => slot.wire.bits,
+            };
+            if arrived {
+                self.net.uplink(k, i, bits);
+            } else {
+                self.net.uplink_wasted(k, i, bits);
+            }
         }
-        // master: ȳ = (1/n) Σ C_i(x_i), fused decode-accumulate. Small n
-        // accumulates sequentially (bit-identical to the seed); large n
-        // reduces over fixed 8-client leaves on the pool, combined in leaf
-        // order (deterministic, pool-size independent).
-        let inv_n = 1.0 / n as f32;
+        // master: ȳ = (1/count) Σ_cohort C_i(x_i), fused decode-accumulate.
+        // Small n accumulates sequentially (bit-identical to the seed);
+        // large n reduces over fixed 8-client leaves on the pool, combined
+        // in leaf order (deterministic, pool-size independent).
+        let inv = 1.0 / count as f32;
         if self.reduce.n_rows() == 0 {
             self.ybar.fill(0.0);
-            for slot in &self.slots {
-                slot.wire.decode_add(&mut self.ybar, inv_n);
+            for (i, slot) in self.slots.iter().enumerate() {
+                if !on(mask, i) {
+                    continue;
+                }
+                slot.wire.decode_add(&mut self.ybar, inv);
             }
         } else {
             let slots = &self.slots;
@@ -311,8 +521,11 @@ impl<'e> L2gdEngine<'e> {
                 row.fill(0.0);
                 let lo = leaf * REDUCE_LEAF;
                 let hi = (lo + REDUCE_LEAF).min(n);
-                for slot in &slots[lo..hi] {
-                    slot.wire.decode_add(row, inv_n);
+                for (j, slot) in slots[lo..hi].iter().enumerate() {
+                    if !on(mask, lo + j) {
+                        continue;
+                    }
+                    slot.wire.decode_add(row, inv);
                 }
             });
             self.ybar.fill(0.0);
@@ -320,30 +533,48 @@ impl<'e> L2gdEngine<'e> {
                 kernels::add_assign(&mut self.ybar, leaf);
             }
         }
-        // downlink: broadcast C_M(ȳ)
+        // downlink: C_M(ȳ) to everyone (lockstep broadcast) or per cohort
+        // member (an offline device receives nothing)
         self.master_state.compress_into(&self.ybar, &mut self.master_buf)?;
-        self.net.downlink_broadcast(k, self.master_buf.bits);
+        let down_bits = match &mut self.framing {
+            Some(f) => f.broadcast_bits(k, &self.master_buf)?,
+            None => self.master_buf.bits,
+        };
+        match mask {
+            None => self.net.downlink_broadcast(k, down_bits),
+            Some(m) => {
+                for (i, &a) in m.iter().enumerate() {
+                    if a {
+                        self.net.downlink(k, i, down_bits);
+                    }
+                }
+            }
+        }
         self.master_buf.decode_into(&mut self.anchor);
         self.net.end_round();
-        self.apply_aggregation();
+        self.apply_aggregation(mask);
         Ok(())
     }
 
-    /// `x_i ← x_i − a(x_i − anchor)` for every client: one pass over the
-    /// matrix, pooled when the sweep is large enough to amortize dispatch.
-    /// Elementwise, so serial and pooled orders are bit-identical.
-    fn apply_aggregation(&mut self) {
+    /// `x_i ← x_i − a(x_i − anchor)` for every (unmasked) client: one pass
+    /// over the matrix, pooled when the sweep is large enough to amortize
+    /// dispatch. Elementwise, so serial and pooled orders are bit-identical.
+    fn apply_aggregation(&mut self, mask: Option<&[bool]>) {
         let a = self.agg_coef;
         let d = self.xs.dim();
         let n = self.xs.n_rows();
         if n * d < 1 << 15 {
-            for x in self.xs.rows_mut() {
-                kernels::aggregation_step(x, a, &self.anchor);
+            for (i, x) in self.xs.rows_mut().enumerate() {
+                if on(mask, i) {
+                    kernels::aggregation_step(x, a, &self.anchor);
+                }
             }
         } else {
             let anchor = &self.anchor;
-            self.env.pool.scope_chunks_mut(self.xs.as_mut_slice(), d, |_i, x| {
-                kernels::aggregation_step(x, a, anchor);
+            self.env.pool.scope_chunks_mut(self.xs.as_mut_slice(), d, |i, x| {
+                if on(mask, i) {
+                    kernels::aggregation_step(x, a, anchor);
+                }
             });
         }
     }

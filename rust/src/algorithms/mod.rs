@@ -235,6 +235,7 @@ pub fn evaluate(env: &FedEnv, view: ModelView<'_>, step: u64, net: &Network)
         personal_loss,
         personal_acc,
         sim_time_s: net.simulated_comm_time_s(),
+        participants: net.last_round_participants(),
     })
 }
 

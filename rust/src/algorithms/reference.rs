@@ -74,6 +74,7 @@ fn evaluate_nested(env: &FedEnv, xs: &[Vec<f32>], step: u64, net: &Network)
         personal_loss: personal_loss / n,
         personal_acc: personal_acc / n,
         sim_time_s: net.simulated_comm_time_s(),
+        participants: net.last_round_participants(),
     })
 }
 

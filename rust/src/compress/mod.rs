@@ -207,7 +207,13 @@ pub trait Compressor: Send + Sync {
 }
 
 /// Per-client stateful compression instance.
-pub trait CompressorState: Send {
+///
+/// `Sync` is a supertrait so shared slices of slot structs embedding a
+/// `Box<dyn CompressorState>` can cross into the pool's `Fn + Sync`
+/// closures (the master's tree reduction reads `&[ClientSlot]`); all
+/// mutation goes through `&mut self`, so the bound costs implementations
+/// nothing beyond Sync-able fields.
+pub trait CompressorState: Send + Sync {
     /// Encode `x` into `out`, reusing its buffers (the zero-alloc wire
     /// path: steady state performs no heap allocation). On error `out` is
     /// left in an unspecified-but-valid state.

@@ -25,8 +25,16 @@ use std::time::Instant;
 use super::fig3;
 use crate::algorithms::l2gd::L2gdEngine;
 use crate::algorithms::{reference, FedAlgorithm as _, FedEnv, L2gd};
+use crate::sim::{self, FleetSim};
 use crate::util::alloc_count;
 use crate::util::json::Value;
+
+/// Allocation ceiling for the fleet-sim scheduler's hot loop, per
+/// processed event (steps + arrival pushes/pops). The loop's scratch —
+/// cohort buffers, the event heap, frame buffers — is reused, so warmed
+/// steady state should sit at 0; the bound leaves slack for rare buffer
+/// regrowth without letting per-event allocation creep back in.
+pub const SIM_ALLOCS_PER_EVENT_BOUND: f64 = 8.0;
 
 #[derive(Clone, Debug)]
 pub struct BenchCfg {
@@ -97,6 +105,12 @@ pub struct BenchResult {
     /// allocations per measured engine step; `None` when the counting
     /// allocator is not installed
     pub engine_allocs_per_step: Option<f64>,
+    /// fleet-sim scheduler throughput (events/sec) on the straggler-heavy
+    /// scenario over the same convex config
+    pub sim_events_per_sec: f64,
+    /// allocations per processed scheduler event; `None` without the
+    /// counting allocator. Asserted `< SIM_ALLOCS_PER_EVENT_BOUND`.
+    pub sim_allocs_per_event: Option<f64>,
     pub final_personal_loss: f64,
 }
 
@@ -151,6 +165,13 @@ impl BenchResult {
                 ("steps_per_sec".into(), Value::Num(self.reference_steps_per_sec)),
                 ("layout".into(), Value::Str("seed Vec<Vec<f32>>, per-call \
                     batch assembly, allocating grad".into())),
+            ])),
+            ("sim_scheduler".into(), Value::obj(vec![
+                ("scenario".into(), Value::Str("straggler-heavy".into())),
+                ("events_per_sec".into(), Value::Num(self.sim_events_per_sec)),
+                ("allocs_per_event".into(), opt(self.sim_allocs_per_event)),
+                ("allocs_per_event_bound".into(),
+                 Value::Num(SIM_ALLOCS_PER_EVENT_BOUND)),
             ])),
             ("speedup_vs_reference".into(), Value::Num(self.speedup())),
             ("final_personal_loss".into(), Value::Num(self.final_personal_loss)),
@@ -235,6 +256,41 @@ pub fn run(cfg: &BenchCfg) -> anyhow::Result<BenchResult> {
     let _ = reference::run_l2gd(&a_ref, &env, cfg.ref_steps, cfg.ref_steps)?;
     let reference_sps = cfg.ref_steps as f64 / t0.elapsed().as_secs_f64();
 
+    // fleet-sim scheduler: throughput + allocation discipline of the
+    // discrete-event hot loop (straggler-heavy = queue, quorum, deadline
+    // drops all exercised) on the same convex config
+    let scenario = sim::scenario::from_spec("straggler-heavy:quorum=0.6,deadline=1")?;
+    let mut sim_cfg = sim::SimCfg::fig3(scenario);
+    sim_cfg.n_clients = cfg.n_clients;
+    sim_cfg.rows_per_worker = cfg.rows_per_worker;
+    sim_cfg.seed = cfg.seed;
+    sim_cfg.p = cfg.p;
+    sim_cfg.lambda = cfg.lambda;
+    sim_cfg.eta = cfg.eta;
+    let sim_env = sim::runner::build_env(&sim_cfg);
+    let mut fsim = FleetSim::new(&sim_cfg, &sim_env)?;
+    fsim.run_steps(0, cfg.warmup)?;
+    let counting = alloc_count::counting_enabled();
+    let ev0 = fsim.stats().events;
+    let before = alloc_count::allocations();
+    let t0 = Instant::now();
+    fsim.run_steps(cfg.warmup, cfg.steps)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let allocs = alloc_count::allocations() - before;
+    let events = (fsim.stats().events - ev0).max(1);
+    let sim_events_per_sec = events as f64 / dt;
+    let sim_allocs_per_event = counting.then(|| allocs as f64 / events as f64);
+    anyhow::ensure!(fsim.stats().comm_events > 0, "sim ran no communication rounds");
+    if cfg.assert_zero_alloc {
+        if let Some(per_event) = sim_allocs_per_event {
+            anyhow::ensure!(
+                per_event < SIM_ALLOCS_PER_EVENT_BOUND,
+                "fleet-sim scheduler allocated {per_event:.2}/event over \
+                 {events} events (bound {SIM_ALLOCS_PER_EVENT_BOUND})"
+            );
+        }
+    }
+
     Ok(BenchResult {
         cfg: cfg.clone(),
         engine_steps_per_sec: engine_sps,
@@ -242,6 +298,8 @@ pub fn run(cfg: &BenchCfg) -> anyhow::Result<BenchResult> {
         engine_paired_steps_per_sec: engine_paired_sps,
         reference_steps_per_sec: reference_sps,
         engine_allocs_per_step: allocs_per_step,
+        sim_events_per_sec,
+        sim_allocs_per_event,
         final_personal_loss,
     })
 }
@@ -273,11 +331,16 @@ mod tests {
         assert!(res.engine_paired_steps_per_sec > 0.0);
         assert!(res.reference_steps_per_sec > 0.0);
         assert!(res.final_personal_loss.is_finite());
+        assert!(res.sim_events_per_sec > 0.0);
         // the counting allocator is not installed in the test binary
         assert!(res.engine_allocs_per_step.is_none());
+        assert!(res.sim_allocs_per_event.is_none());
         let v = res.to_json();
         assert_eq!(v.get("bench").unwrap().as_str(), Some("round_engine"));
         assert!(v.get("speedup_vs_reference").unwrap().as_f64().unwrap() > 0.0);
+        let s = v.get("sim_scheduler").unwrap();
+        assert_eq!(s.get("scenario").unwrap().as_str(), Some("straggler-heavy"));
+        assert!(s.get("events_per_sec").unwrap().as_f64().unwrap() > 0.0);
         let c = v.get("config").unwrap();
         assert_eq!(c.get("n_clients").unwrap().as_usize(), Some(5));
     }

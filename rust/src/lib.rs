@@ -15,6 +15,7 @@ pub mod metrics;
 pub mod model;
 pub mod protocol;
 pub mod runtime;
+pub mod sim;
 pub mod theory;
 pub mod transport;
 pub mod util;

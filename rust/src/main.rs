@@ -26,8 +26,10 @@ use pfl::config::TrainConfig;
 use pfl::coordinator;
 use pfl::experiments::{bench_round, dnn, fig2, fig3, fig78, table1};
 use pfl::runtime::XlaRuntime;
+use pfl::sim;
 use pfl::theory::Consts;
 use pfl::util::cli::Args;
+use pfl::util::json::Value;
 
 /// Counting global allocator: lets `pfl bench` assert the round engine's
 /// zero-allocation steady state (one relaxed atomic add per allocation —
@@ -54,6 +56,7 @@ fn run() -> anyhow::Result<()> {
         "theory" | "tune" => cmd_theory(&args),
         "compressors" => cmd_compressors(&args),
         "bench" => cmd_bench(&args),
+        "sim" => cmd_sim(&args),
         "models" => cmd_models(&args),
         _ => {
             print!("{}", HELP);
@@ -83,6 +86,10 @@ commands:
   bench        round-engine throughput on the Fig-3 convex config: engine
                vs seed-semantics baseline, zero-alloc assertion, emits
                BENCH_round.json   [--smoke] [--steps N] [--out file]
+  sim          discrete-event fleet simulation of the Fig-3 config under
+               scenario presets (partial participation, churn, stragglers,
+               byte-accurate wire frames); `pfl sim --help` documents the
+               scenario grammar   [--scenarios a;b] [--smoke] [--out dir]
   models       list AOT models (needs `make artifacts`)
 ";
 
@@ -160,12 +167,18 @@ fn scale_of(args: &Args) -> anyhow::Result<f64> {
     Ok(s)
 }
 
+/// Every artifact `pfl repro` can regenerate — the unknown-id error lists
+/// these, same UX as the codec registry's unknown-codec error.
+const REPRO_IDS: &[&str] = &["fig2", "fig3", "fig4", "fig5", "fig6", "fig78",
+                             "fig9", "fig10", "fig11", "table1", "table2"];
+
 fn cmd_repro(args: &Args) -> anyhow::Result<()> {
     let id = args
         .positional
         .get(1)
         .map(String::as_str)
-        .ok_or_else(|| anyhow::anyhow!("repro needs an id (fig2 fig3 ... table2)"))?;
+        .ok_or_else(|| anyhow::anyhow!("repro needs an id (known: {})",
+                                       REPRO_IDS.join(", ")))?;
     let out = args.str_or("out", "results");
     let scale = scale_of(args)?;
     let artifacts = args.str_or("artifacts", "artifacts");
@@ -265,7 +278,8 @@ fn cmd_repro(args: &Args) -> anyhow::Result<()> {
             }
             std::fs::write(format!("{out}/table2.csv"), csv)?;
         }
-        other => anyhow::bail!("unknown repro id `{other}`"),
+        other => anyhow::bail!("unknown repro id `{other}` (known: {})",
+                               REPRO_IDS.join(", ")),
     }
     Ok(())
 }
@@ -332,8 +346,127 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         None => println!("steady-state allocations:  not measured (counting \
                           allocator absent)"),
     }
+    println!("sim scheduler:             {:>10.0} events/s  (straggler-heavy)",
+             res.sim_events_per_sec);
+    match res.sim_allocs_per_event {
+        Some(a) => println!("sim allocations:           {a:>10.2} per event \
+                             (asserted < {})",
+                            pfl::experiments::bench_round::SIM_ALLOCS_PER_EVENT_BOUND),
+        None => println!("sim allocations:           not measured (counting \
+                          allocator absent)"),
+    }
     println!("final personal loss:       {:>10.4}", res.final_personal_loss);
     println!("wrote {out}");
+    Ok(())
+}
+
+const SIM_HELP: &str = "\
+pfl sim — discrete-event fleet simulation of compressed L2GD
+
+Runs the Fig-3 convex configuration over a modeled device fleet: per-client
+compute speed and link quality drawn from distributions, seeded churn
+traces, cohort sampling per communication event with first-k-of-m quorum
+under a straggler deadline, and byte-accurate wire frames (header +
+byte-aligned payload) feeding the link accounting instead of theoretical
+bit formulas. Emits one loss-vs-simulated-seconds CSV per scenario plus a
+JSON summary.
+
+  --scenarios <s;s;..>  scenario specs, `;`-separated (default: all presets)
+  --scenario <spec>     single scenario (overrides --scenarios)
+  --smoke               CI-sized: two presets, small shards, few steps
+  --steps N --eval-every N --seed S
+  --n N                 fleet size when the scenario doesn't pin one
+  --p --lambda --eta    L2GD meta-parameters (Fig-3 defaults)
+  --client-comp --master-comp   compressor specs (default natural)
+  --out <dir>           output directory (default results)
+
+scenario spec grammar (like the codec registry):
+  scenario := name [\":\" key \"=\" value (\",\" key \"=\" value)*]
+  keys     := clients | sample | quorum | deadline
+  sample   = fraction of available devices sampled per comm event, (0,1]
+  quorum   = fraction of the sampled cohort to wait for, (0,1]
+  deadline = straggler deadline in seconds (inf = wait for quorum)
+
+presets:
+";
+
+fn cmd_sim(args: &Args) -> anyhow::Result<()> {
+    if args.flag("help") {
+        print!("{}", SIM_HELP);
+        for &(name, help) in sim::scenario::PRESETS {
+            println!("  {name:<16} {help}");
+        }
+        println!("\nexamples:");
+        println!("  pfl sim --scenario straggler-heavy:clients=20,quorum=0.6,deadline=2");
+        println!("  pfl sim --scenarios \"uniform;diurnal-churn:clients=16\" --steps 800");
+        return Ok(());
+    }
+    let smoke = args.flag("smoke");
+    let default_scenarios = if smoke {
+        "uniform;straggler-heavy".to_string()
+    } else {
+        sim::scenario::preset_names().join(";")
+    };
+    let spec_list = match args.get("scenario") {
+        Some(one) => one.to_string(),
+        None => args.str_or("scenarios", &default_scenarios),
+    };
+    let out = args.str_or("out", "results");
+    std::fs::create_dir_all(&out)?;
+    let mut summaries: Vec<Value> = Vec::new();
+    for spec in spec_list.split(';').filter(|s| !s.trim().is_empty()) {
+        let scenario = sim::scenario::from_spec(spec)?;
+        let mut cfg = if smoke {
+            sim::SimCfg::smoke(scenario)
+        } else {
+            sim::SimCfg::fig3(scenario)
+        };
+        cfg.steps = args.parse_or("steps", cfg.steps)?;
+        cfg.eval_every = args.parse_or("eval-every", cfg.eval_every)?;
+        cfg.seed = args.parse_or("seed", cfg.seed)?;
+        cfg.n_clients = args.parse_or("n", cfg.n_clients)?;
+        cfg.p = args.parse_or("p", cfg.p)?;
+        cfg.lambda = args.parse_or("lambda", cfg.lambda)?;
+        cfg.eta = args.parse_or("eta", cfg.eta)?;
+        if let Some(v) = args.get("client-comp") { cfg.client_comp = v.to_string(); }
+        if let Some(v) = args.get("master-comp") { cfg.master_comp = v.to_string(); }
+        eprintln!("sim {}: n={} steps={} wire {}|{}",
+                  cfg.scenario.name, cfg.effective_clients(), cfg.steps,
+                  cfg.client_comp, cfg.master_comp);
+        let res = sim::runner::run(&cfg)?;
+        // filename from the full spec (two variants of one preset must not
+        // clobber each other), with shell/FS-hostile characters mapped away
+        let slug: String = res.scenario.chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' {
+                c
+            } else {
+                '-'
+            })
+            .collect();
+        let csv_path = format!("{out}/sim_{slug}.csv");
+        res.series.write_csv(&csv_path)?;
+        let last = res.series.last().unwrap();
+        println!("{:<18} t={:>9.2}s  comm {:>4} (skip {}, drop {})  \
+                  mean cohort {:>5.1}  bytes/n ↑{:.3e} ↓{:.3e}  \
+                  personal loss {:.5}  → {csv_path}",
+                 res.scenario, last.sim_time_s, res.stats.comm_events,
+                 res.stats.skipped_rounds, res.stats.dropped_stragglers,
+                 res.stats.mean_participants(),
+                 last.bits_up as f64 / 8.0 / cfg.effective_clients() as f64,
+                 last.bits_down as f64 / 8.0 / cfg.effective_clients() as f64,
+                 last.personal_loss);
+        summaries.push(res.to_json());
+    }
+    anyhow::ensure!(!summaries.is_empty(), "no scenarios given");
+    let summary = Value::obj(vec![
+        ("bench".into(), Value::Str("fleet_sim".into())),
+        ("scenarios".into(), Value::Arr(summaries)),
+    ]);
+    let path = format!("{out}/sim_summary.json");
+    let mut text = summary.to_string_pretty();
+    text.push('\n');
+    std::fs::write(&path, text)?;
+    println!("wrote {path}");
     Ok(())
 }
 

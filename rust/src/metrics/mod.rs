@@ -24,7 +24,11 @@ pub struct Record {
     pub personal_loss: f64,
     pub personal_acc: f64,
     /// projected communication wall-clock under the transport time model
+    /// (replaced by the fleet simulator's event-driven clock in sim runs)
     pub sim_time_s: f64,
+    /// clients that uplinked in the last completed communication round
+    /// (n under full participation; the arrived cohort size in sim runs)
+    pub participants: u64,
 }
 
 /// A labelled metric series (one algorithm × configuration run).
@@ -43,7 +47,8 @@ impl Record {
 }
 
 pub const CSV_HEADER: &str = "step,comm_rounds,bits_per_client,bits_up,bits_down,\
-train_loss,train_acc,test_loss,test_acc,personal_loss,personal_acc,sim_time_s";
+train_loss,train_acc,test_loss,test_acc,personal_loss,personal_acc,sim_time_s,\
+participants";
 
 impl Series {
     pub fn new(label: impl Into<String>) -> Series {
@@ -59,10 +64,10 @@ impl Series {
         s.push('\n');
         for r in &self.records {
             s.push_str(&format!(
-                "{},{},{:.1},{},{},{:.6},{:.4},{:.6},{:.4},{:.6},{:.4},{:.3}\n",
+                "{},{},{:.1},{},{},{:.6},{:.4},{:.6},{:.4},{:.6},{:.4},{:.3},{}\n",
                 r.step, r.comm_rounds, r.bits_per_client, r.bits_up, r.bits_down,
                 r.train_loss, r.train_acc, r.test_loss, r.test_acc,
-                r.personal_loss, r.personal_acc, r.sim_time_s
+                r.personal_loss, r.personal_acc, r.sim_time_s, r.participants
             ));
         }
         s
@@ -154,6 +159,7 @@ mod tests {
             personal_loss: loss,
             personal_acc: acc,
             sim_time_s: 0.0,
+            participants: 0,
         }
     }
 

@@ -157,4 +157,34 @@ mod tests {
         assert!((coin.expected_comm_rate() - 0.25).abs() < 1e-12);
         assert!((coin.expected_steps_per_comm() - 4.0).abs() < 1e-12);
     }
+
+    /// Statistical check across a p grid: the empirical fraction of
+    /// communicating (fresh) steps over many draws must match
+    /// `expected_comm_rate()` = p(1−p), and the stats must account for
+    /// every draw. Fresh transitions form a Markov chain, not an iid
+    /// sequence, so the tolerance is a generous multiple of the iid
+    /// binomial σ (deterministic seeds keep the test reproducible).
+    #[test]
+    fn empirical_comm_rate_matches_expected() {
+        let draws: u64 = 200_000;
+        for (i, &p) in [0.1, 0.3, 0.5, 0.65, 0.9].iter().enumerate() {
+            let mut coin = Coin::new(p, 1_000 + i as u64);
+            for _ in 0..draws {
+                coin.draw();
+            }
+            assert_eq!(coin.stats.total(), draws,
+                       "p={p}: stats must count every draw");
+            let expected = coin.expected_comm_rate();
+            let empirical = coin.stats.fresh as f64 / draws as f64;
+            let sigma = (expected * (1.0 - expected) / draws as f64).sqrt();
+            let tol = (8.0 * sigma).max(2e-3);
+            assert!((empirical - expected).abs() < tol,
+                    "p={p}: comm rate {empirical:.5} vs expected \
+                     {expected:.5} (tol {tol:.5})");
+            // aggregate rate (fresh + cached) matches p too
+            let agg = (coin.stats.fresh + coin.stats.cached) as f64 / draws as f64;
+            assert!((agg - p).abs() < tol.max(3e-3),
+                    "p={p}: aggregate rate {agg:.5}");
+        }
+    }
 }

@@ -1,0 +1,283 @@
+//! Device fleet models: per-client compute speed and link quality drawn
+//! from configurable distributions, plus deterministic seeded
+//! availability (churn) traces.
+//!
+//! A [`Fleet`] is sampled once per run from a [`FleetSpec`] — every device
+//! gets its own forked RNG stream, so profiles are stable under reordering
+//! and independent of how many draws another device consumed. Availability
+//! is a pure function of `(churn seed, device, time)` via splitmix64
+//! hashing: the trace needs no storage, replays bit-exactly, and can be
+//! queried at any time point in any order.
+
+use crate::util::rng::splitmix64;
+use crate::util::Rng;
+
+/// A scalar distribution for fleet parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Dist {
+    Fixed(f64),
+    Uniform { lo: f64, hi: f64 },
+    /// log-normal: `exp(N(mu, sigma²))` — `mu`/`sigma` act on the log scale
+    LogNormal { mu: f64, sigma: f64 },
+    /// two-point mixture (the "phone vs laptop" fleet): value `slow` with
+    /// probability `p_slow`, else `fast`
+    Bimodal { p_slow: f64, fast: f64, slow: f64 },
+}
+
+impl Dist {
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            Dist::Fixed(v) => v,
+            Dist::Uniform { lo, hi } => lo + (hi - lo) * rng.f64(),
+            Dist::LogNormal { mu, sigma } => (mu + sigma * rng.normal()).exp(),
+            Dist::Bimodal { p_slow, fast, slow } => {
+                if rng.bernoulli(p_slow) {
+                    slow
+                } else {
+                    fast
+                }
+            }
+        }
+    }
+}
+
+/// One device's static characteristics.
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    /// seconds of local compute per protocol iteration
+    pub step_time_s: f64,
+    /// uplink bandwidth, bits/second
+    pub up_bps: f64,
+    /// downlink bandwidth, bits/second
+    pub down_bps: f64,
+    /// one-way link latency, seconds
+    pub latency_s: f64,
+}
+
+/// Distributions the fleet is drawn from.
+#[derive(Clone, Debug)]
+pub struct FleetSpec {
+    pub step_time: Dist,
+    pub up_bw: Dist,
+    pub down_bw: Dist,
+    pub latency: Dist,
+}
+
+#[derive(Clone, Debug)]
+pub struct Fleet {
+    pub devices: Vec<DeviceProfile>,
+}
+
+impl Fleet {
+    /// Sample `n` device profiles (device i draws from its own forked
+    /// stream — stable under fleet-size changes for the shared prefix).
+    pub fn build(spec: &FleetSpec, n: usize, seed: u64) -> Fleet {
+        let mut root = Rng::new(seed);
+        let devices = (0..n)
+            .map(|i| {
+                let mut rng = root.fork(i as u64 + 1);
+                DeviceProfile {
+                    step_time_s: spec.step_time.sample(&mut rng).max(1e-6),
+                    up_bps: spec.up_bw.sample(&mut rng).max(1.0),
+                    down_bps: spec.down_bw.sample(&mut rng).max(1.0),
+                    latency_s: spec.latency.sample(&mut rng).max(0.0),
+                }
+            })
+            .collect();
+        Fleet { devices }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Slowest per-iteration compute time among `active` devices (`None`
+    /// if nobody is active).
+    pub fn max_step_time(&self, active: &[bool]) -> Option<f64> {
+        self.devices
+            .iter()
+            .zip(active)
+            .filter(|(_, &a)| a)
+            .map(|(d, _)| d.step_time_s)
+            .fold(None, |m, t| Some(m.map_or(t, |m: f64| m.max(t))))
+    }
+
+    /// Mean per-iteration compute time over the whole fleet (the idle-tick
+    /// advance when no device is available).
+    pub fn mean_step_time(&self) -> f64 {
+        self.devices.iter().map(|d| d.step_time_s).sum::<f64>()
+            / self.devices.len().max(1) as f64
+    }
+}
+
+/// Availability (churn) model — a deterministic seeded trace.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Churn {
+    AlwaysOn,
+    /// iid per window: device i is online in window ⌊t/period⌋ with
+    /// probability `up_frac`
+    Windowed { up_frac: f64, period_s: f64 },
+    /// day/night cycle: availability probability
+    /// `base + amplitude·sin(2π(t/period + phase_i))`, evaluated per
+    /// 1/24-period slot. The cycle is fleet-synchronized (one "region"):
+    /// each device adds only a small deterministic phase jitter, so the
+    /// population availability genuinely troughs at night instead of
+    /// averaging out across random phases.
+    Diurnal { base: f64, amplitude: f64, period_s: f64 },
+}
+
+/// Deterministic hash of `(seed, a, b)` to a uniform in [0, 1).
+fn unit_hash(seed: u64, a: u64, b: u64) -> f64 {
+    let mut s = seed
+        ^ a.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ b.wrapping_mul(0xC2B2_AE3D_27D4_EB4F);
+    let h = splitmix64(&mut s);
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+impl Churn {
+    /// Is `device` online at time `t` (seconds)? Pure in
+    /// `(seed, device, t)`; piecewise-constant in `t` over trace windows.
+    pub fn available(&self, seed: u64, device: usize, t: f64) -> bool {
+        debug_assert!(t >= 0.0);
+        match *self {
+            Churn::AlwaysOn => true,
+            Churn::Windowed { up_frac, period_s } => {
+                let w = (t / period_s).floor() as u64;
+                unit_hash(seed, device as u64, w) < up_frac
+            }
+            Churn::Diurnal { base, amplitude, period_s } => {
+                let slot_len = period_s / 24.0;
+                let slot = (t / slot_len).floor() as u64;
+                // probability evaluated at the slot start so availability
+                // is constant within a slot; per-device jitter ≤ 8% of a
+                // cycle keeps the fleet roughly in one timezone
+                let ts = slot as f64 * slot_len;
+                let phase = 0.08 * unit_hash(seed, device as u64, u64::MAX);
+                let prob = base
+                    + amplitude
+                        * (2.0 * std::f64::consts::PI * (ts / period_s + phase)).sin();
+                unit_hash(seed, device as u64, slot) < prob.clamp(0.0, 1.0)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dist_samples_in_support() {
+        let mut rng = Rng::new(0);
+        for _ in 0..200 {
+            let u = Dist::Uniform { lo: 2.0, hi: 5.0 }.sample(&mut rng);
+            assert!((2.0..5.0).contains(&u));
+            let ln = Dist::LogNormal { mu: 0.0, sigma: 0.5 }.sample(&mut rng);
+            assert!(ln > 0.0);
+            let b = Dist::Bimodal { p_slow: 0.3, fast: 1.0, slow: 10.0 }
+                .sample(&mut rng);
+            assert!(b == 1.0 || b == 10.0);
+            assert_eq!(Dist::Fixed(7.5).sample(&mut rng), 7.5);
+        }
+    }
+
+    #[test]
+    fn lognormal_median_tracks_mu() {
+        let mut rng = Rng::new(3);
+        let mut vals: Vec<f64> = (0..4001)
+            .map(|_| Dist::LogNormal { mu: (0.01f64).ln(), sigma: 0.5 }
+                .sample(&mut rng))
+            .collect();
+        vals.sort_by(f64::total_cmp);
+        let median = vals[vals.len() / 2];
+        assert!((median / 0.01 - 1.0).abs() < 0.15, "median {median}");
+    }
+
+    #[test]
+    fn fleet_is_deterministic_and_prefix_stable() {
+        let spec = FleetSpec {
+            step_time: Dist::LogNormal { mu: (0.01f64).ln(), sigma: 0.5 },
+            up_bw: Dist::Uniform { lo: 1e6, hi: 1e7 },
+            down_bw: Dist::Fixed(2e7),
+            latency: Dist::Uniform { lo: 0.01, hi: 0.05 },
+        };
+        let a = Fleet::build(&spec, 8, 42);
+        let b = Fleet::build(&spec, 8, 42);
+        let c = Fleet::build(&spec, 16, 42);
+        for i in 0..8 {
+            assert_eq!(a.devices[i].step_time_s, b.devices[i].step_time_s);
+            // the first 8 devices of the larger fleet are the same devices
+            assert_eq!(a.devices[i].up_bps, c.devices[i].up_bps);
+        }
+        assert!(a.devices.iter().any(|d| d.step_time_s
+                                     != a.devices[0].step_time_s));
+    }
+
+    #[test]
+    fn max_and_mean_step_time() {
+        let fleet = Fleet {
+            devices: [0.1, 0.3, 0.2]
+                .iter()
+                .map(|&t| DeviceProfile {
+                    step_time_s: t,
+                    up_bps: 1.0,
+                    down_bps: 1.0,
+                    latency_s: 0.0,
+                })
+                .collect(),
+        };
+        assert_eq!(fleet.max_step_time(&[true, true, true]), Some(0.3));
+        assert_eq!(fleet.max_step_time(&[true, false, true]), Some(0.2));
+        assert_eq!(fleet.max_step_time(&[false, false, false]), None);
+        assert!((fleet.mean_step_time() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn windowed_churn_rate_and_stability() {
+        let churn = Churn::Windowed { up_frac: 0.7, period_s: 10.0 };
+        // piecewise constant within a window
+        assert_eq!(churn.available(1, 3, 20.1), churn.available(1, 3, 29.9));
+        // empirical availability across many (device, window) pairs ≈ 0.7
+        let mut up = 0usize;
+        let total = 5000;
+        for dev in 0..50 {
+            for w in 0..100 {
+                if churn.available(9, dev, w as f64 * 10.0 + 0.5) {
+                    up += 1;
+                }
+            }
+        }
+        let rate = up as f64 / total as f64;
+        assert!((rate - 0.7).abs() < 0.03, "rate {rate}");
+    }
+
+    #[test]
+    fn diurnal_churn_oscillates() {
+        let churn = Churn::Diurnal { base: 0.5, amplitude: 0.45, period_s: 240.0 };
+        // availability averaged over devices must differ between two
+        // opposite phases of the cycle for at least one time pair
+        let avail_frac = |t: f64| -> f64 {
+            (0..200).filter(|&d| churn.available(5, d, t)).count() as f64 / 200.0
+        };
+        let series: Vec<f64> = (0..24).map(|i| avail_frac(i as f64 * 10.0)).collect();
+        let max = series.iter().cloned().fold(f64::MIN, f64::max);
+        let min = series.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max - min > 0.3, "flat diurnal cycle: {series:?}");
+    }
+
+    #[test]
+    fn churn_is_deterministic() {
+        let churn = Churn::Diurnal { base: 0.6, amplitude: 0.3, period_s: 100.0 };
+        for d in 0..10 {
+            for i in 0..50 {
+                let t = i as f64 * 3.3;
+                assert_eq!(churn.available(7, d, t), churn.available(7, d, t));
+            }
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! Discrete-event fleet simulator: partial participation, heterogeneous
+//! devices, and byte-accurate wire framing.
+//!
+//! The lockstep harness answers "what does the algorithm do"; this module
+//! answers "what does it do on a *fleet*" — phones next to laptops, WAN
+//! links, day/night churn, stragglers — with communication measured in
+//! serialized bytes ([`crate::transport::frame`]) and progress measured in
+//! simulated seconds, not just theoretical bits.
+//!
+//! * [`queue`] — deterministic timestamped event queue (binary heap, FIFO
+//!   ties).
+//! * [`fleet`] — device profiles drawn from configurable distributions
+//!   (uniform / log-normal / bimodal "phone vs laptop") and seeded
+//!   availability traces (windowed dropout, diurnal cycles).
+//! * [`scenario`] — presets (`uniform`, `lognormal-wan`, `diurnal-churn`,
+//!   `straggler-heavy`) behind a `name[:key=val,...]` spec grammar.
+//! * [`runner`] — drives the participation-aware
+//!   [`crate::algorithms::l2gd::L2gdEngine`] entry points: cohort
+//!   selection per communication event, first-k-of-m quorum under a
+//!   straggler deadline, and a fleet clock advanced by the event queue.
+//!
+//! `pfl sim` is the CLI front end; with the `uniform` preset the simulated
+//! series is bit-identical to the lockstep engine (the equivalence is
+//! pinned by `rust/tests/integration_sim.rs`).
+
+pub mod fleet;
+pub mod queue;
+pub mod runner;
+pub mod scenario;
+
+pub use fleet::{Churn, DeviceProfile, Dist, Fleet, FleetSpec};
+pub use queue::EventQueue;
+pub use runner::{FleetSim, SimCfg, SimResult, SimStats};
+pub use scenario::Scenario;

@@ -1,0 +1,151 @@
+//! Deterministic discrete-event queue: a binary min-heap of timestamped
+//! events with FIFO tie-breaking.
+//!
+//! `f64` timestamps are ordered by `total_cmp`; equal timestamps pop in
+//! insertion order via a monotone sequence number, so a simulation replays
+//! identically regardless of heap internals. The heap's backing storage is
+//! retained across [`EventQueue::clear`], which is what keeps the
+//! simulator's per-round arrival scheduling allocation-free once warm.
+
+use std::collections::BinaryHeap;
+
+struct Entry<T> {
+    time: f64,
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time.total_cmp(&other.time).is_eq() && self.seq == other.seq
+    }
+}
+
+impl<T> Eq for Entry<T> {}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Entry<T> {
+    /// Reversed: `BinaryHeap` is a max-heap, so "greater" = earlier time
+    /// (and, among equals, earlier sequence number).
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> EventQueue<T> {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn with_capacity(cap: usize) -> EventQueue<T> {
+        EventQueue { heap: BinaryHeap::with_capacity(cap), seq: 0 }
+    }
+
+    /// Schedule `item` at absolute time `time` (NaN is rejected).
+    pub fn push(&mut self, time: f64, item: T) {
+        debug_assert!(!time.is_nan(), "NaN event time");
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { time, seq, item });
+    }
+
+    /// Pop the earliest event.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        self.heap.pop().map(|e| (e.time, e.item))
+    }
+
+    /// Time of the earliest pending event.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Drop all pending events, keeping the backing capacity.
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        assert_eq!(q.peek_time(), Some(1.0));
+        assert_eq!(q.pop(), Some((1.0, "a")));
+        assert_eq!(q.pop(), Some((2.0, "b")));
+        assert_eq!(q.pop(), Some((3.0, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn ties_break_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..20 {
+            q.push(5.0, i);
+        }
+        for i in 0..20 {
+            assert_eq!(q.pop(), Some((5.0, i)));
+        }
+    }
+
+    #[test]
+    fn interleaved_push_pop_stays_ordered() {
+        let mut q = EventQueue::new();
+        q.push(10.0, 'x');
+        q.push(4.0, 'y');
+        assert_eq!(q.pop(), Some((4.0, 'y')));
+        q.push(7.0, 'z');
+        q.push(7.0, 'w');
+        assert_eq!(q.pop(), Some((7.0, 'z')));
+        assert_eq!(q.pop(), Some((7.0, 'w')));
+        assert_eq!(q.pop(), Some((10.0, 'x')));
+    }
+
+    #[test]
+    fn clear_keeps_capacity() {
+        let mut q = EventQueue::with_capacity(64);
+        for i in 0..50 {
+            q.push(i as f64, i);
+        }
+        q.clear();
+        assert!(q.is_empty());
+        assert_eq!(q.len(), 0);
+        // refill within capacity must not reallocate; behavioral check:
+        // still pops correctly after clear
+        q.push(2.0, 1);
+        q.push(1.0, 2);
+        assert_eq!(q.pop(), Some((1.0, 2)));
+    }
+}

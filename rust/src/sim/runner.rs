@@ -1,0 +1,496 @@
+//! The fleet simulator: drives the [`L2gdEngine`] over a modeled device
+//! fleet with partial participation, churn, straggler deadlines, and
+//! byte-accurate wire framing.
+//!
+//! ### Time model
+//! Protocol iterations are synchronous (the paper's Algorithm 1): a local
+//! or cached-aggregation step advances the clock by the slowest *active*
+//! device's compute time. A fresh aggregation opens a communication round:
+//! every sampled device's upload-arrival event (`compute + latency +
+//! framed-bytes / uplink-bandwidth`) is pushed into the discrete-event
+//! queue; arrivals pop in time order until the quorum is met or the
+//! straggler deadline passes, and the round closes after the slowest
+//! arrived device's downlink completes. Devices that miss the cut are
+//! dropped stragglers — their model update is skipped for the round,
+//! though their uplink frames are still metered as transmitted-but-
+//! discarded traffic (the bytes crossed the network either way).
+//!
+//! ### Anchor possession
+//! Only the cohort of a committed fresh round receives (and pays the
+//! downlink for) the new anchor C_M(ȳ). The simulator tracks who holds
+//! the *current* anchor: on later cached-aggregation steps, devices that
+//! missed the latest broadcast skip the aggregation instead of silently
+//! using bytes they never downloaded. (Everyone starts with the shared
+//! init anchor — Algorithm 1's ξ₋₁ = 1 convention.)
+//!
+//! ### Determinism
+//! Fleet profiles, churn traces, cohort sampling, and every engine stream
+//! fork deterministically from the run seed, so a scenario replays
+//! bit-exactly. With the `uniform` preset (always on, full cohort, no
+//! deadline) the executed update sequence is *identical* to the lockstep
+//! engine's, so the loss series matches it bit for bit — only the wire
+//! accounting differs (serialized frames instead of theoretical bits).
+
+use crate::algorithms::l2gd::L2gdEngine;
+use crate::algorithms::{FedEnv, L2gd};
+use crate::experiments::fig3;
+use crate::metrics::{Record, Series};
+use crate::protocol::StepKind;
+use crate::util::json::Value;
+use crate::util::Rng;
+
+use super::fleet::{Churn, Fleet};
+use super::queue::EventQueue;
+use super::scenario::Scenario;
+
+/// One simulated training job: the Fig-3 convex configuration under a
+/// fleet [`Scenario`].
+#[derive(Clone, Debug)]
+pub struct SimCfg {
+    pub scenario: Scenario,
+    pub steps: u64,
+    pub eval_every: u64,
+    pub seed: u64,
+    /// fleet size when the scenario does not pin one (`clients=0`)
+    pub n_clients: usize,
+    pub rows_per_worker: usize,
+    pub p: f64,
+    pub lambda: f64,
+    pub eta: f64,
+    pub client_comp: String,
+    pub master_comp: String,
+}
+
+impl SimCfg {
+    /// The Fig-3 convex configuration (§VII-A) under `scenario`.
+    pub fn fig3(scenario: Scenario) -> SimCfg {
+        SimCfg {
+            scenario,
+            steps: 400,
+            eval_every: 50,
+            seed: 0,
+            n_clients: 5,
+            rows_per_worker: 321,
+            p: 0.65,
+            lambda: 10.0,
+            eta: 1.0,
+            client_comp: "natural".into(),
+            master_comp: "natural".into(),
+        }
+    }
+
+    /// CI-sized run: same shapes, small shards and few steps.
+    pub fn smoke(scenario: Scenario) -> SimCfg {
+        SimCfg { steps: 200, eval_every: 100, rows_per_worker: 40,
+                 ..SimCfg::fig3(scenario) }
+    }
+
+    /// Fleet size: the scenario override, else the run default.
+    pub fn effective_clients(&self) -> usize {
+        if self.scenario.clients > 0 {
+            self.scenario.clients
+        } else {
+            self.n_clients
+        }
+    }
+}
+
+/// The Fig-3 heterogeneous convex environment at the configured fleet
+/// size — built by `fig3::build_env` so the simulator can never drift
+/// from the configuration the paper figures use.
+pub fn build_env(cfg: &SimCfg) -> FedEnv {
+    fig3::build_env(&fig3::Fig3Cfg {
+        rows_per_worker: cfg.rows_per_worker,
+        n_clients: cfg.effective_clients(),
+        eta: cfg.eta,
+        seed: cfg.seed,
+        ..fig3::Fig3Cfg::a1a()
+    })
+}
+
+/// Counters accumulated over a simulated run.
+#[derive(Clone, Debug, Default)]
+pub struct SimStats {
+    /// fresh-aggregation rounds that actually committed
+    pub comm_events: u64,
+    /// fresh draws with nobody available / nobody arrived in time
+    pub skipped_rounds: u64,
+    /// sampled devices that missed the quorum or the deadline
+    pub dropped_stragglers: u64,
+    /// Σ cohort size over committed rounds
+    pub total_participants: u64,
+    /// iterations where no device was available (clock still advances)
+    pub idle_steps: u64,
+    /// scheduler events processed (steps + arrival pushes + pops) — the
+    /// denominator of the allocation-discipline bench
+    pub events: u64,
+}
+
+impl SimStats {
+    pub fn mean_participants(&self) -> f64 {
+        self.total_participants as f64 / self.comm_events.max(1) as f64
+    }
+}
+
+/// A stepping fleet simulation over a borrowed environment.
+pub struct FleetSim<'e> {
+    eng: L2gdEngine<'e>,
+    fleet: Fleet,
+    churn: Churn,
+    churn_seed: u64,
+    sample_frac: f64,
+    quorum_frac: f64,
+    deadline_s: f64,
+    sampler: Rng,
+    clock: f64,
+    stats: SimStats,
+    /// devices holding the current anchor (see the module docs)
+    has_anchor: Vec<bool>,
+    // reusable per-step scratch (the hot loop is allocation-bounded)
+    active: Vec<bool>,
+    sampled: Vec<bool>,
+    arrived: Vec<bool>,
+    agg_mask: Vec<bool>,
+    avail: Vec<usize>,
+    pick: Vec<usize>,
+    queue: EventQueue<usize>,
+}
+
+impl<'e> FleetSim<'e> {
+    pub fn new(cfg: &SimCfg, env: &'e FedEnv) -> anyhow::Result<FleetSim<'e>> {
+        let n = env.n_clients();
+        anyhow::ensure!(n == cfg.effective_clients(),
+                        "environment has {n} clients, config wants {}",
+                        cfg.effective_clients());
+        let mut alg = L2gd::new(cfg.p, cfg.lambda, cfg.eta, n,
+                                &cfg.client_comp, &cfg.master_comp)?;
+        fig3::clamp_agg_stability(&mut alg, n);
+        let mut eng = alg.engine(env)?;
+        eng.enable_wire_framing();
+        let fleet = Fleet::build(&cfg.scenario.fleet, n, cfg.seed ^ 0xF1EE7);
+        Ok(FleetSim {
+            eng,
+            fleet,
+            churn: cfg.scenario.churn.clone(),
+            churn_seed: cfg.seed ^ 0xC4A9,
+            sample_frac: cfg.scenario.sample_frac,
+            quorum_frac: cfg.scenario.quorum_frac,
+            deadline_s: cfg.scenario.deadline_s,
+            sampler: Rng::new(cfg.seed ^ 0x5A3E),
+            clock: 0.0,
+            stats: SimStats::default(),
+            // the identical inits double as the shared ξ₋₁ = 1 anchor
+            has_anchor: vec![true; n],
+            active: vec![false; n],
+            sampled: vec![false; n],
+            arrived: vec![false; n],
+            agg_mask: vec![false; n],
+            avail: Vec::with_capacity(n),
+            pick: Vec::with_capacity(n),
+            queue: EventQueue::with_capacity(n),
+        })
+    }
+
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    pub fn stats(&self) -> &SimStats {
+        &self.stats
+    }
+
+    pub fn engine(&self) -> &L2gdEngine<'e> {
+        &self.eng
+    }
+
+    /// Advance one protocol iteration at the current simulated time.
+    pub fn step(&mut self, k: u64) -> anyhow::Result<()> {
+        let (churn, seed, clock) = (&self.churn, self.churn_seed, self.clock);
+        for (i, a) in self.active.iter_mut().enumerate() {
+            *a = churn.available(seed, i, clock);
+        }
+        self.stats.events += 1;
+        match self.eng.draw() {
+            StepKind::Local => match self.fleet.max_step_time(&self.active) {
+                Some(dt) => {
+                    self.eng.step_local(&self.active)?;
+                    self.clock += dt;
+                }
+                None => self.idle_tick(),
+            },
+            StepKind::AggregateCached => match self.fleet.max_step_time(&self.active) {
+                Some(dt) => {
+                    // only devices holding the current anchor can aggregate
+                    // toward it; the rest idle through the iteration
+                    let mut any = false;
+                    for ((m, &a), &h) in self.agg_mask.iter_mut()
+                        .zip(&self.active)
+                        .zip(&self.has_anchor)
+                    {
+                        *m = a && h;
+                        any |= *m;
+                    }
+                    if any {
+                        self.eng.step_aggregate_cached(&self.agg_mask);
+                    }
+                    self.clock += dt;
+                }
+                None => self.idle_tick(),
+            },
+            StepKind::AggregateFresh => self.fresh_round(k)?,
+        }
+        Ok(())
+    }
+
+    pub fn run_steps(&mut self, from: u64, count: u64) -> anyhow::Result<()> {
+        for k in from + 1..=from + count {
+            self.step(k)?;
+        }
+        Ok(())
+    }
+
+    /// Evaluate into a `Record`, with the fleet clock as the sim-time
+    /// column (replacing the engine's homogeneous TimeModel projection).
+    pub fn evaluate(&self, step: u64) -> anyhow::Result<Record> {
+        let mut rec = self.eng.evaluate(step)?;
+        rec.sim_time_s = self.clock;
+        Ok(rec)
+    }
+
+    /// Nobody is online: the iteration is a fleet-wide no-op, but the
+    /// clock still moves.
+    fn idle_tick(&mut self) {
+        self.stats.idle_steps += 1;
+        self.clock += self.fleet.mean_step_time();
+    }
+
+    /// A fresh-aggregation round: sample a cohort from the available
+    /// devices, schedule their upload arrivals through the event queue,
+    /// close at quorum or deadline, and commit the round over whoever made
+    /// it.
+    fn fresh_round(&mut self, k: u64) -> anyhow::Result<()> {
+        let n = self.fleet.len();
+        self.avail.clear();
+        self.avail.extend((0..n).filter(|&i| self.active[i]));
+        if self.avail.is_empty() {
+            self.stats.skipped_rounds += 1;
+            self.idle_tick();
+            return Ok(());
+        }
+        // over-selection: sample m available devices, wait for the first
+        // quorum of them
+        let m = ((self.sample_frac * self.avail.len() as f64).ceil() as usize)
+            .clamp(1, self.avail.len());
+        self.sampler.sample_indices_into(self.avail.len(), m, &mut self.pick);
+        self.sampled.fill(false);
+        for &j in &self.pick {
+            self.sampled[self.avail[j]] = true;
+        }
+        self.eng.compress_uplinks(&self.sampled)?;
+        // schedule arrivals: compute + latency + serialized frame transfer
+        self.queue.clear();
+        for &j in &self.pick {
+            let i = self.avail[j];
+            let dev = &self.fleet.devices[i];
+            let bits = self.eng.uplink_frame_bytes(i) as f64 * 8.0;
+            let t = self.clock + dev.step_time_s + dev.latency_s + bits / dev.up_bps;
+            self.queue.push(t, i);
+            self.stats.events += 1;
+        }
+        let quorum = ((self.quorum_frac * m as f64).ceil() as usize).clamp(1, m);
+        let deadline = self.clock + self.deadline_s;
+        self.arrived.fill(false);
+        let mut arrived_n = 0usize;
+        let mut round_end = self.clock;
+        while let Some((t, i)) = self.queue.pop() {
+            self.stats.events += 1;
+            if t > deadline {
+                // this device and everything still queued missed the round
+                self.stats.dropped_stragglers += 1 + self.queue.len() as u64;
+                round_end = deadline;
+                break;
+            }
+            self.arrived[i] = true;
+            arrived_n += 1;
+            round_end = t;
+            if arrived_n >= quorum {
+                self.stats.dropped_stragglers += self.queue.len() as u64;
+                break;
+            }
+        }
+        if arrived_n == 0 {
+            // everyone blew the deadline: the anchor does not move, but
+            // the cohort's frames were transmitted — meter them as
+            // discarded traffic
+            self.eng.abort_fresh(k, &self.sampled)?;
+            self.stats.skipped_rounds += 1;
+            self.clock = round_end.max(self.clock + self.fleet.mean_step_time());
+            return Ok(());
+        }
+        self.eng.complete_fresh(k, &self.arrived, &self.sampled)?;
+        // the broadcast reached only the cohort: they alone hold the new
+        // anchor for subsequent cached-aggregation steps
+        self.has_anchor.copy_from_slice(&self.arrived);
+        self.stats.comm_events += 1;
+        self.stats.total_participants += arrived_n as u64;
+        // the round closes once the slowest cohort member has the anchor
+        let dbits = self.eng.downlink_frame_bytes() as f64 * 8.0;
+        let mut down_t = 0.0f64;
+        for (i, dev) in self.fleet.devices.iter().enumerate() {
+            if self.arrived[i] {
+                down_t = down_t.max(dev.latency_s + dbits / dev.down_bps);
+            }
+        }
+        self.clock = round_end + down_t;
+        Ok(())
+    }
+}
+
+/// A completed scenario run.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// the full scenario spec (overrides included) — the output key
+    pub scenario: String,
+    pub series: Series,
+    pub stats: SimStats,
+}
+
+impl SimResult {
+    pub fn to_json(&self) -> Value {
+        let last = self.series.last().expect("series has records");
+        Value::obj(vec![
+            ("scenario".into(), Value::Str(self.scenario.clone())),
+            ("label".into(), Value::Str(self.series.label.clone())),
+            ("steps".into(), Value::Num(last.step as f64)),
+            ("comm_events".into(), Value::Num(self.stats.comm_events as f64)),
+            ("skipped_rounds".into(), Value::Num(self.stats.skipped_rounds as f64)),
+            ("dropped_stragglers".into(),
+             Value::Num(self.stats.dropped_stragglers as f64)),
+            ("mean_participants".into(),
+             Value::Num(self.stats.mean_participants())),
+            ("idle_steps".into(), Value::Num(self.stats.idle_steps as f64)),
+            ("sim_time_s".into(), Value::Num(last.sim_time_s)),
+            ("bytes_up".into(), Value::Num((last.bits_up / 8) as f64)),
+            ("bytes_down".into(), Value::Num((last.bits_down / 8) as f64)),
+            ("final_train_loss".into(), Value::Num(last.train_loss)),
+            ("final_personal_loss".into(), Value::Num(last.personal_loss)),
+            ("final_test_acc".into(), Value::Num(last.test_acc)),
+        ])
+    }
+}
+
+/// Run one scenario end to end (environment build + simulation + eval
+/// cadence) and return the sim-time series plus counters.
+pub fn run(cfg: &SimCfg) -> anyhow::Result<SimResult> {
+    let env = build_env(cfg);
+    let mut sim = FleetSim::new(cfg, &env)?;
+    let mut series = Series::new(format!(
+        "sim[{}] l2gd[{}|{}]:p={},λ={}",
+        cfg.scenario.spec, cfg.client_comp, cfg.master_comp, cfg.p, cfg.lambda));
+    series.records.push(sim.evaluate(0)?);
+    for k in 1..=cfg.steps {
+        sim.step(k)?;
+        if k % cfg.eval_every == 0 || k == cfg.steps {
+            series.records.push(sim.evaluate(k)?);
+            if !series.records.last().unwrap().is_finite() {
+                break; // diverged: record it and stop
+            }
+        }
+    }
+    Ok(SimResult {
+        scenario: cfg.scenario.spec.clone(),
+        series,
+        stats: sim.stats().clone(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::scenario;
+
+    fn smoke(spec: &str, seed: u64) -> SimCfg {
+        let mut cfg = SimCfg::smoke(scenario::from_spec(spec).unwrap());
+        cfg.seed = seed;
+        cfg
+    }
+
+    #[test]
+    fn uniform_scenario_learns_and_frames_bytes() {
+        let res = run(&smoke("uniform", 0)).unwrap();
+        let first = res.series.records.first().unwrap();
+        let last = res.series.last().unwrap();
+        assert!(last.personal_loss < first.personal_loss,
+                "loss {} -> {}", first.personal_loss, last.personal_loss);
+        assert!(res.stats.comm_events > 0);
+        assert_eq!(res.stats.skipped_rounds, 0);
+        assert_eq!(res.stats.dropped_stragglers, 0);
+        // full participation every committed round
+        assert_eq!(res.stats.total_participants, res.stats.comm_events * 5);
+        assert_eq!(last.participants, 5);
+        // frame metering: whole bytes on the wire, header overhead included
+        assert_eq!(last.bits_up % 8, 0);
+        assert!(last.sim_time_s > 0.0);
+    }
+
+    #[test]
+    fn deterministic_across_reruns() {
+        let a = run(&smoke("straggler-heavy", 3)).unwrap();
+        let b = run(&smoke("straggler-heavy", 3)).unwrap();
+        assert_eq!(a.series.records.len(), b.series.records.len());
+        for (ra, rb) in a.series.records.iter().zip(&b.series.records) {
+            assert_eq!(ra.train_loss, rb.train_loss);
+            assert_eq!(ra.personal_loss, rb.personal_loss);
+            assert_eq!(ra.bits_up, rb.bits_up);
+            assert_eq!(ra.sim_time_s, rb.sim_time_s);
+            assert_eq!(ra.participants, rb.participants);
+        }
+        assert_eq!(a.stats.dropped_stragglers, b.stats.dropped_stragglers);
+    }
+
+    #[test]
+    fn straggler_scenario_drops_and_still_learns() {
+        let mut cfg = smoke("straggler-heavy:clients=12,quorum=0.5,deadline=0.5", 1);
+        cfg.steps = 300;
+        let res = run(&cfg).unwrap();
+        let last = res.series.last().unwrap();
+        assert!(res.stats.dropped_stragglers > 0, "{:?}", res.stats);
+        assert!(res.stats.mean_participants() < 12.0);
+        assert!(res.stats.mean_participants() >= 1.0);
+        assert!(last.personal_loss.is_finite());
+        assert!(last.personal_loss < res.series.records[0].personal_loss);
+        // every sampled device transmitted — arrived or dropped, its frame
+        // bytes meter. Natural wire at d=123: 9·123 bits → 139 B payload +
+        // 22 B header per frame. (Arrivals here are far inside the 0.5 s
+        // deadline, so no round skips and the identity is exact.)
+        assert_eq!(res.stats.skipped_rounds, 0, "{:?}", res.stats);
+        let frame_bits = (22 + 139) * 8;
+        assert_eq!(last.bits_up,
+                   (res.stats.total_participants + res.stats.dropped_stragglers)
+                       * frame_bits);
+    }
+
+    #[test]
+    fn diurnal_churn_varies_participation() {
+        let mut cfg = smoke("diurnal-churn:clients=16", 2);
+        cfg.steps = 400;
+        let res = run(&cfg).unwrap();
+        assert!(res.stats.comm_events > 0);
+        // churn must bite: some committed round ran below full fleet, or
+        // rounds were skipped outright
+        assert!(res.stats.total_participants < res.stats.comm_events * 16
+                    || res.stats.skipped_rounds > 0,
+                "{:?}", res.stats);
+        assert!(res.series.last().unwrap().train_loss.is_finite());
+    }
+
+    #[test]
+    fn summary_json_roundtrips() {
+        let res = run(&smoke("uniform", 4)).unwrap();
+        let text = res.to_json().to_string_pretty();
+        let v = crate::util::json::parse(&text).unwrap();
+        assert_eq!(v.get("scenario").unwrap().as_str(), Some("uniform"));
+        assert!(v.get("sim_time_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(v.get("bytes_up").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

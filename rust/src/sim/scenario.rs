@@ -1,0 +1,245 @@
+//! Scenario presets behind a small spec grammar (mirroring the codec
+//! registry's UX: unknown names list what exists).
+//!
+//! Grammar:
+//!
+//! ```text
+//! scenario := name [":" kv ("," kv)*]
+//! kv       := key "=" value
+//! ```
+//!
+//! Presets: `uniform`, `lognormal-wan`, `diurnal-churn`,
+//! `straggler-heavy`. Override keys:
+//!
+//! * `clients=N`   — fleet size (0 = inherit the run default)
+//! * `sample=F`    — fraction of *available* devices sampled per
+//!   communication event, (0, 1]
+//! * `quorum=F`    — fraction of the sampled cohort to wait for, (0, 1]
+//!   (the "first k of m" over-selection policy)
+//! * `deadline=S`  — straggler deadline in seconds (`inf` = wait for the
+//!   quorum however long it takes)
+//!
+//! Example: `straggler-heavy:clients=20,sample=0.5,quorum=0.8,deadline=2`.
+
+use super::fleet::{Churn, Dist, FleetSpec};
+
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// preset name (`uniform`, `straggler-heavy`, …)
+    pub name: String,
+    /// the full spec this scenario was parsed from, overrides included —
+    /// the key for output files and summaries, so two variants of one
+    /// preset stay distinguishable
+    pub spec: String,
+    /// 0 = inherit the caller's default fleet size
+    pub clients: usize,
+    pub fleet: FleetSpec,
+    pub churn: Churn,
+    /// fraction of available devices sampled per communication event
+    pub sample_frac: f64,
+    /// fraction of the sampled cohort whose arrival completes the round
+    pub quorum_frac: f64,
+    /// straggler deadline per round, seconds (INFINITY = no deadline)
+    pub deadline_s: f64,
+}
+
+pub const PRESETS: &[(&str, &str)] = &[
+    ("uniform",
+     "homogeneous fleet, zero latency, always on, full participation — \
+      reproduces the lockstep engine series bit for bit"),
+    ("lognormal-wan",
+     "log-normal compute and WAN link distributions, always on, full \
+      cohort (heavy-tailed round times)"),
+    ("diurnal-churn",
+     "day/night availability cycle over a uniform fleet; whoever is \
+      online participates"),
+    ("straggler-heavy",
+     "bimodal phone-vs-laptop fleet; over-selects and closes each round \
+      at a 60% quorum under a 2 s deadline"),
+];
+
+/// Sorted preset names (error messages, docs, CLI listings).
+pub fn preset_names() -> Vec<&'static str> {
+    PRESETS.iter().map(|(n, _)| *n).collect()
+}
+
+fn preset(name: &str) -> Option<Scenario> {
+    let uniform_fleet = FleetSpec {
+        step_time: Dist::Fixed(0.01),
+        up_bw: Dist::Fixed(10e6),
+        down_bw: Dist::Fixed(10e6),
+        latency: Dist::Fixed(0.0),
+    };
+    Some(match name {
+        "uniform" => Scenario {
+            name: name.into(),
+            spec: name.into(),
+            clients: 0,
+            fleet: uniform_fleet,
+            churn: Churn::AlwaysOn,
+            sample_frac: 1.0,
+            quorum_frac: 1.0,
+            deadline_s: f64::INFINITY,
+        },
+        "lognormal-wan" => Scenario {
+            name: name.into(),
+            spec: name.into(),
+            clients: 0,
+            fleet: FleetSpec {
+                step_time: Dist::LogNormal { mu: (0.01f64).ln(), sigma: 0.6 },
+                up_bw: Dist::LogNormal { mu: (5e6f64).ln(), sigma: 0.8 },
+                down_bw: Dist::LogNormal { mu: (20e6f64).ln(), sigma: 0.8 },
+                latency: Dist::LogNormal { mu: (0.04f64).ln(), sigma: 0.5 },
+            },
+            churn: Churn::AlwaysOn,
+            sample_frac: 1.0,
+            quorum_frac: 1.0,
+            deadline_s: f64::INFINITY,
+        },
+        "diurnal-churn" => Scenario {
+            name: name.into(),
+            spec: name.into(),
+            clients: 0,
+            fleet: FleetSpec {
+                step_time: Dist::Uniform { lo: 0.005, hi: 0.02 },
+                up_bw: Dist::Uniform { lo: 2e6, hi: 20e6 },
+                down_bw: Dist::Uniform { lo: 10e6, hi: 50e6 },
+                latency: Dist::Uniform { lo: 0.01, hi: 0.05 },
+            },
+            // a "day" compressed to one simulated minute: shipped runs
+            // total tens of simulated seconds (local steps are 5–20 ms),
+            // so the cycle must fit inside that or the preset degenerates
+            // to static dropout (availability is re-drawn per 1/24-period
+            // slot = 2.5 s here)
+            churn: Churn::Diurnal { base: 0.55, amplitude: 0.4, period_s: 60.0 },
+            sample_frac: 1.0,
+            quorum_frac: 1.0,
+            deadline_s: f64::INFINITY,
+        },
+        "straggler-heavy" => Scenario {
+            name: name.into(),
+            spec: name.into(),
+            clients: 0,
+            fleet: FleetSpec {
+                // 30% phones: 16× slower compute, 20× thinner uplink
+                step_time: Dist::Bimodal { p_slow: 0.3, fast: 0.005, slow: 0.08 },
+                up_bw: Dist::Bimodal { p_slow: 0.3, fast: 20e6, slow: 1e6 },
+                down_bw: Dist::Bimodal { p_slow: 0.3, fast: 50e6, slow: 4e6 },
+                latency: Dist::Uniform { lo: 0.01, hi: 0.1 },
+            },
+            churn: Churn::AlwaysOn,
+            sample_frac: 1.0,
+            quorum_frac: 0.6,
+            deadline_s: 2.0,
+        },
+        _ => return None,
+    })
+}
+
+/// Parse a scenario spec (`name[:key=val,...]`, see the module docs).
+pub fn from_spec(spec: &str) -> anyhow::Result<Scenario> {
+    let spec = spec.trim();
+    anyhow::ensure!(!spec.is_empty(), "empty scenario spec");
+    let (name, args) = match spec.split_once(':') {
+        Some((n, a)) => (n.trim(), Some(a)),
+        None => (spec, None),
+    };
+    let mut sc = preset(name).ok_or_else(|| {
+        anyhow::anyhow!("unknown scenario `{name}` (known: {})",
+                        preset_names().join(", "))
+    })?;
+    if let Some(args) = args {
+        for kv in args.split(',') {
+            let kv = kv.trim();
+            let (key, val) = kv.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("scenario option `{kv}` is not key=value")
+            })?;
+            let val = val.trim();
+            let fval = || -> anyhow::Result<f64> {
+                val.parse::<f64>()
+                    .map_err(|e| anyhow::anyhow!("{key}={val}: {e}"))
+            };
+            match key.trim() {
+                "clients" => {
+                    sc.clients = val
+                        .parse::<usize>()
+                        .map_err(|e| anyhow::anyhow!("clients={val}: {e}"))?;
+                }
+                "sample" => sc.sample_frac = fval()?,
+                "quorum" => sc.quorum_frac = fval()?,
+                "deadline" => sc.deadline_s = fval()?,
+                other => anyhow::bail!(
+                    "unknown scenario option `{other}` (known: clients, \
+                     sample, quorum, deadline)"),
+            }
+        }
+    }
+    anyhow::ensure!(sc.sample_frac > 0.0 && sc.sample_frac <= 1.0,
+                    "sample={} outside (0, 1]", sc.sample_frac);
+    anyhow::ensure!(sc.quorum_frac > 0.0 && sc.quorum_frac <= 1.0,
+                    "quorum={} outside (0, 1]", sc.quorum_frac);
+    anyhow::ensure!(sc.deadline_s > 0.0, "deadline={} must be positive",
+                    sc.deadline_s);
+    sc.spec = spec.to_string();
+    Ok(sc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_preset_parses() {
+        for &(name, _) in PRESETS {
+            let sc = from_spec(name).unwrap();
+            assert_eq!(sc.name, name);
+        }
+    }
+
+    #[test]
+    fn unknown_scenario_lists_presets() {
+        let err = format!("{:#}", from_spec("5g-dreams").unwrap_err());
+        assert!(err.contains("unknown scenario `5g-dreams`"), "{err}");
+        for &(name, _) in PRESETS {
+            assert!(err.contains(name), "error should list `{name}`: {err}");
+        }
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let sc = from_spec("straggler-heavy:clients=20,sample=0.5,\
+                            quorum=0.8,deadline=3.5")
+            .unwrap();
+        assert_eq!(sc.name, "straggler-heavy");
+        // the full spec survives as the output key, so two variants of
+        // one preset stay distinguishable
+        assert!(sc.spec.contains("deadline=3.5"), "{}", sc.spec);
+        assert_eq!(sc.clients, 20);
+        assert_eq!(sc.sample_frac, 0.5);
+        assert_eq!(sc.quorum_frac, 0.8);
+        assert_eq!(sc.deadline_s, 3.5);
+        // untouched preset fields survive
+        assert_eq!(sc.churn, Churn::AlwaysOn);
+    }
+
+    #[test]
+    fn bad_overrides_are_rejected() {
+        assert!(from_spec("uniform:sample=0").is_err());
+        assert!(from_spec("uniform:sample=1.5").is_err());
+        assert!(from_spec("uniform:quorum=-1").is_err());
+        assert!(from_spec("uniform:deadline=0").is_err());
+        assert!(from_spec("uniform:sample").is_err(), "missing =value");
+        assert!(from_spec("uniform:warp=9").is_err(), "unknown key");
+        assert!(from_spec("").is_err());
+    }
+
+    #[test]
+    fn uniform_preset_is_the_lockstep_configuration() {
+        let sc = from_spec("uniform").unwrap();
+        assert_eq!(sc.sample_frac, 1.0);
+        assert_eq!(sc.quorum_frac, 1.0);
+        assert_eq!(sc.churn, Churn::AlwaysOn);
+        assert!(sc.deadline_s.is_infinite());
+        assert_eq!(sc.fleet.latency, Dist::Fixed(0.0));
+    }
+}

@@ -8,6 +8,8 @@
 //! "constant speed network" hypothesis the paper cites for why fewer bits
 //! mean faster training.
 
+pub mod frame;
+
 /// One communication event (for protocol traces / Fig 2).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Event {
@@ -48,6 +50,10 @@ pub struct Network {
     comm_rounds: u64,
     round_max_bits: u64,
     in_round: bool,
+    /// uplinks seen in the round currently open
+    round_uplinks: u64,
+    /// uplink count of the last completed round (the round's cohort size)
+    last_round_participants: u64,
 }
 
 impl Network {
@@ -60,6 +66,8 @@ impl Network {
             comm_rounds: 0,
             round_max_bits: 0,
             in_round: false,
+            round_uplinks: 0,
+            last_round_participants: 0,
         }
     }
 
@@ -83,39 +91,66 @@ impl Network {
         self.in_round = true;
         self.comm_rounds += 1;
         self.round_max_bits = 0;
+        self.round_uplinks = 0;
     }
 
     /// Finish the round: advance simulated time by latency + slowest link.
     pub fn end_round(&mut self) {
         assert!(self.in_round, "end_round without begin_round");
         self.in_round = false;
+        self.last_round_participants = self.round_uplinks;
         self.sim_time_s += self.time_model.latency_s
             + self.round_max_bits as f64 / self.time_model.bandwidth_bps;
     }
 
-    /// Record a client → master payload of exactly `bits`.
-    pub fn uplink(&mut self, step: u64, client: usize, bits: u64) {
+    /// Shared uplink metering; `participant` controls whether the sender
+    /// counts toward the round's cohort.
+    fn record_uplink(&mut self, step: u64, client: usize, bits: u64,
+                     participant: bool) {
         debug_assert!(self.in_round, "uplink outside a round");
         let l = &mut self.links[client];
         l.bits_up += bits;
         l.msgs_up += 1;
         self.round_max_bits = self.round_max_bits.max(bits);
+        if participant {
+            self.round_uplinks += 1;
+        }
         if let Some(t) = &mut self.trace {
             t.push(Event::Up { step, client, bits });
         }
     }
 
+    /// Record a client → master payload of exactly `bits`.
+    pub fn uplink(&mut self, step: u64, client: usize, bits: u64) {
+        self.record_uplink(step, client, bits, true);
+    }
+
+    /// Record a client → master payload the master *discarded* (a
+    /// straggler that missed the quorum or deadline). The bytes crossed
+    /// the network, so they meter like any uplink — but the sender does
+    /// not count toward the round's participants.
+    pub fn uplink_wasted(&mut self, step: u64, client: usize, bits: u64) {
+        self.record_uplink(step, client, bits, false);
+    }
+
+    /// Record a master → one-client payload of exactly `bits` (the fleet
+    /// simulator's cohort downlink: offline clients receive nothing).
+    pub fn downlink(&mut self, step: u64, client: usize, bits: u64) {
+        debug_assert!(self.in_round, "downlink outside a round");
+        let l = &mut self.links[client];
+        l.bits_down += bits;
+        l.msgs_down += 1;
+        self.round_max_bits = self.round_max_bits.max(bits);
+        if let Some(t) = &mut self.trace {
+            t.push(Event::Down { step, client, bits });
+        }
+    }
+
     /// Record a master → all-clients broadcast; each link pays `bits`.
     pub fn downlink_broadcast(&mut self, step: u64, bits: u64) {
-        debug_assert!(self.in_round, "downlink outside a round");
-        for (client, l) in self.links.iter_mut().enumerate() {
-            l.bits_down += bits;
-            l.msgs_down += 1;
-            if let Some(t) = &mut self.trace {
-                t.push(Event::Down { step, client, bits });
-            }
+        for client in 0..self.links.len() {
+            self.downlink(step, client, bits);
         }
-        self.round_max_bits = self.round_max_bits.max(bits);
     }
 
     pub fn link(&self, client: usize) -> &LinkStats {
@@ -141,6 +176,12 @@ impl Network {
 
     pub fn comm_rounds(&self) -> u64 {
         self.comm_rounds
+    }
+
+    /// Uplink count of the last completed round — the cohort size under
+    /// partial participation (0 before any round completes).
+    pub fn last_round_participants(&self) -> u64 {
+        self.last_round_participants
     }
 
     /// Projected wall-clock spent communicating under the time model.
@@ -199,5 +240,88 @@ mod tests {
         let mut net = Network::new(1);
         net.begin_round();
         net.begin_round();
+    }
+
+    /// Satellite coverage: uplink/downlink totals and per-client
+    /// attribution over several rounds, mixing the broadcast and
+    /// per-client downlink paths.
+    #[test]
+    fn per_direction_totals_and_attribution() {
+        let mut net = Network::new(3);
+        net.begin_round();
+        net.uplink(1, 0, 100);
+        net.uplink(1, 2, 300);
+        net.downlink(1, 0, 40);
+        net.downlink(1, 2, 40);
+        net.end_round();
+        assert_eq!(net.last_round_participants(), 2);
+        net.begin_round();
+        net.uplink(5, 1, 700);
+        net.downlink_broadcast(5, 60);
+        net.end_round();
+        assert_eq!(net.last_round_participants(), 1);
+
+        assert_eq!(net.total_bits_up(), 100 + 300 + 700);
+        assert_eq!(net.total_bits_down(), 40 + 40 + 3 * 60);
+        assert_eq!(net.total_bits(), net.total_bits_up() + net.total_bits_down());
+        // per-client attribution
+        assert_eq!(net.link(0).bits_up, 100);
+        assert_eq!(net.link(0).bits_down, 40 + 60);
+        assert_eq!(net.link(0).msgs_up, 1);
+        assert_eq!(net.link(0).msgs_down, 2);
+        assert_eq!(net.link(1).bits_up, 700);
+        assert_eq!(net.link(1).bits_down, 60);
+        assert_eq!(net.link(1).msgs_up, 1);
+        assert_eq!(net.link(2).bits_up, 300);
+        assert_eq!(net.link(2).bits_down, 40 + 60);
+        assert_eq!(net.comm_rounds(), 2);
+        assert!((net.bits_per_client() - (1100.0 + 260.0) / 3.0).abs() < 1e-9);
+    }
+
+    /// Satellite coverage: `simulated_comm_time_s` under a non-default
+    /// `TimeModel` — each round pays one latency plus its slowest link
+    /// (uplink or downlink, whichever is largest).
+    #[test]
+    fn sim_time_under_custom_time_model_multi_round() {
+        let mut net = Network::new(2)
+            .with_time_model(TimeModel { latency_s: 0.5, bandwidth_bps: 100.0 });
+        net.begin_round();
+        net.uplink(0, 0, 50); // 0.5 s
+        net.downlink(0, 1, 200); // 2.0 s — the round's slowest link
+        net.end_round();
+        net.begin_round();
+        net.downlink_broadcast(1, 10); // 0.1 s
+        net.end_round();
+        // (0.5 + 2.0) + (0.5 + 0.1)
+        assert!((net.simulated_comm_time_s() - 3.1).abs() < 1e-9,
+                "t = {}", net.simulated_comm_time_s());
+    }
+
+    #[test]
+    fn wasted_uplinks_meter_bits_but_not_participants() {
+        let mut net = Network::new(3);
+        net.begin_round();
+        net.uplink(1, 0, 100);
+        net.uplink_wasted(1, 1, 70);
+        net.end_round();
+        // the straggler's bytes count...
+        assert_eq!(net.total_bits_up(), 170);
+        assert_eq!(net.link(1).bits_up, 70);
+        assert_eq!(net.link(1).msgs_up, 1);
+        // ...but it did not take part in the round
+        assert_eq!(net.last_round_participants(), 1);
+    }
+
+    #[test]
+    fn per_client_downlink_traces_and_meters() {
+        let mut net = Network::new(2).with_trace();
+        net.begin_round();
+        net.uplink(3, 0, 8);
+        net.downlink(3, 1, 16);
+        net.end_round();
+        let t = net.trace.as_ref().unwrap();
+        assert_eq!(t[1], Event::Down { step: 3, client: 1, bits: 16 });
+        assert_eq!(net.link(1).bits_down, 16);
+        assert_eq!(net.link(0).bits_down, 0);
     }
 }

@@ -1,0 +1,166 @@
+//! Fleet-simulator integration: the lockstep-equivalence oracle, frame
+//! byte accounting, and seed-stability of the scenario presets — the
+//! ISSUE's acceptance criteria, pinned.
+
+use pfl::algorithms::L2gd;
+use pfl::experiments::fig3;
+use pfl::metrics::Record;
+use pfl::sim::{self, runner, scenario, SimCfg};
+use pfl::transport::frame::HEADER_BYTES;
+
+/// CI-sized Fig-3 configuration under `spec`.
+fn cfg(spec: &str, steps: u64, seed: u64) -> SimCfg {
+    let mut c = SimCfg::smoke(scenario::from_spec(spec).unwrap());
+    c.steps = steps;
+    c.eval_every = 50;
+    c.seed = seed;
+    c
+}
+
+/// Drive the lockstep engine over the same environment/config with the
+/// same evaluation cadence as `runner::run` (theoretical-bit metering, no
+/// framing, no simulator in the loop).
+fn lockstep_records(c: &SimCfg) -> Vec<Record> {
+    let env = runner::build_env(c);
+    let n = env.n_clients();
+    let mut alg = L2gd::new(c.p, c.lambda, c.eta, n,
+                            &c.client_comp, &c.master_comp).unwrap();
+    fig3::clamp_agg_stability(&mut alg, n);
+    let mut eng = alg.engine(&env).unwrap();
+    let mut recs = vec![eng.evaluate(0).unwrap()];
+    for k in 1..=c.steps {
+        eng.step(k).unwrap();
+        if k % c.eval_every == 0 || k == c.steps {
+            recs.push(eng.evaluate(k).unwrap());
+        }
+    }
+    recs
+}
+
+/// Acceptance: with the `uniform` preset (full participation, zero
+/// latency) the simulated training series is bit-identical to the
+/// existing lockstep engine path — same coin stream, same compression
+/// streams, same accumulation order. Only the wire accounting differs:
+/// the simulator meters serialized frames, the lockstep path meters
+/// theoretical bits.
+#[test]
+fn uniform_preset_is_bit_identical_to_lockstep_engine() {
+    for wire in ["natural", "identity"] {
+        let mut c = cfg("uniform", 250, 7);
+        c.client_comp = wire.into();
+        c.master_comp = wire.into();
+        let sim_res = runner::run(&c).unwrap();
+        let lock = lockstep_records(&c);
+        assert_eq!(sim_res.series.records.len(), lock.len());
+        for (s, l) in sim_res.series.records.iter().zip(&lock) {
+            assert_eq!(s.step, l.step);
+            // the training series: bit-for-bit
+            assert_eq!(s.train_loss, l.train_loss, "{wire} step {}", s.step);
+            assert_eq!(s.train_acc, l.train_acc);
+            assert_eq!(s.test_loss, l.test_loss);
+            assert_eq!(s.test_acc, l.test_acc);
+            assert_eq!(s.personal_loss, l.personal_loss);
+            assert_eq!(s.personal_acc, l.personal_acc);
+            // same protocol trajectory
+            assert_eq!(s.comm_rounds, l.comm_rounds);
+        }
+        let (s, l) = (sim_res.series.last().unwrap(), lock.last().unwrap());
+        // frame metering: byte-aligned and strictly above theoretical bits
+        assert!(s.bits_up > l.bits_up, "{wire}: frames must cost more");
+        assert_eq!(s.bits_up % 8, 0);
+        assert_eq!(s.participants, 5);
+    }
+}
+
+/// Acceptance: wire-frame byte counts — not theoretical bit formulas —
+/// feed `LinkStats`. With the identity wire every payload is exactly
+/// 32·d bits, so the framed sizes are exact: ⌈32·123/8⌉ + header bytes
+/// per message, up and down, per cohort member per round.
+#[test]
+fn identity_wire_frame_bytes_are_exact() {
+    let mut c = cfg("uniform", 200, 11);
+    c.client_comp = "identity".into();
+    c.master_comp = "identity".into();
+    let res = runner::run(&c).unwrap();
+    let last = res.series.last().unwrap();
+    assert!(last.comm_rounds > 0);
+    let payload_bytes = (32 * 123u64).div_ceil(8); // 492
+    let frame_bits = (HEADER_BYTES as u64 + payload_bytes) * 8; // 514 B
+    assert_eq!(last.bits_up, last.comm_rounds * 5 * frame_bits);
+    assert_eq!(last.bits_down, last.comm_rounds * 5 * frame_bits);
+}
+
+/// Acceptance: the Fig-3 convex config runs under ≥ 3 scenario presets
+/// with partial participation and churn, producing deterministic
+/// (seed-stable) loss-vs-simulated-time series.
+#[test]
+fn three_presets_run_seed_stable_with_partial_participation() {
+    let specs = ["uniform",
+                 "straggler-heavy:clients=10,quorum=0.5,deadline=0.5",
+                 "diurnal-churn:clients=10"];
+    let mut partial = 0;
+    for spec in specs {
+        let c = cfg(spec, 300, 5);
+        let a = runner::run(&c).unwrap();
+        let b = runner::run(&c).unwrap();
+        assert_eq!(a.series.records.len(), b.series.records.len(), "{spec}");
+        for (ra, rb) in a.series.records.iter().zip(&b.series.records) {
+            assert_eq!(ra.train_loss, rb.train_loss, "{spec}");
+            assert_eq!(ra.personal_loss, rb.personal_loss, "{spec}");
+            assert_eq!(ra.sim_time_s, rb.sim_time_s, "{spec}");
+            assert_eq!(ra.bits_up, rb.bits_up, "{spec}");
+            assert_eq!(ra.participants, rb.participants, "{spec}");
+        }
+        // loss-vs-simulated-time: the clock advances monotonically and the
+        // run learns
+        let times: Vec<f64> = a.series.records.iter().map(|r| r.sim_time_s).collect();
+        assert!(times.windows(2).all(|w| w[1] >= w[0]), "{spec}: {times:?}");
+        assert!(a.series.last().unwrap().sim_time_s > 0.0, "{spec}");
+        assert!(a.series.last().unwrap().personal_loss
+                    < a.series.records[0].personal_loss,
+                "{spec}: no learning");
+        if a.stats.mean_participants() < runner::build_env(&c).n_clients() as f64
+            || a.stats.skipped_rounds > 0
+        {
+            partial += 1;
+        }
+    }
+    assert!(partial >= 2,
+            "stragglers/churn must produce partial participation in ≥ 2 \
+             of the non-uniform presets");
+}
+
+/// The simulator surfaces engine errors instead of swallowing them
+/// (oversized sparsifier at compress time, same UX as the lockstep path).
+#[test]
+fn sim_surfaces_compress_errors() {
+    let mut c = cfg("uniform", 100, 0);
+    c.client_comp = "randk:500".into(); // d = 123
+    let err = runner::run(&c).expect_err("k > d must error");
+    assert!(format!("{err:#}").contains("exceeds the dimension"), "{err:#}");
+}
+
+/// Scenario grammar UX: unknown names list the presets (codec-registry
+/// style), bad keys and values are rejected with the key named.
+#[test]
+fn scenario_spec_errors_are_actionable() {
+    let err = format!("{:#}", scenario::from_spec("mars-rover").unwrap_err());
+    assert!(err.contains("unknown scenario"), "{err}");
+    for name in scenario::preset_names() {
+        assert!(err.contains(name), "{err}");
+    }
+    let err = format!("{:#}",
+                      scenario::from_spec("uniform:budget=3").unwrap_err());
+    assert!(err.contains("budget"), "{err}");
+}
+
+/// The spec-id table round-trips through the engine's framing mode.
+#[test]
+fn spec_table_matches_run_config() {
+    let c = cfg("uniform", 60, 3);
+    let env = runner::build_env(&c);
+    let sim = sim::FleetSim::new(&c, &env).unwrap();
+    let table = sim.engine().spec_table().expect("framing enabled");
+    assert_eq!(table.spec(0), Some("natural"));
+    assert_eq!(table.len(), 1, "client and master share one interned spec");
+}
