@@ -49,7 +49,7 @@
 
 use std::sync::Arc;
 
-use super::{client_rngs, drain_slot_errors, evaluate, FedAlgorithm, FedEnv, ModelView};
+use super::{drain_slot_errors, evaluate, FedAlgorithm, FedEnv, ModelView};
 use crate::compress::{Compressed, Compressor, CompressorState};
 use crate::metrics::Series;
 use crate::model::{kernels, ParamMatrix};
@@ -57,13 +57,31 @@ use crate::protocol::{Coin, StepKind};
 use crate::runtime::{Backend as _, GradBuf};
 use crate::transport::frame::{self, FrameHeader, SpecTable};
 use crate::transport::Network;
+use crate::util::rng::stream_seed;
 use crate::util::Rng;
 
 /// Clients per leaf of the master's decode-accumulate tree reduction.
 /// Constant (not pool-derived) so the reduction order — and therefore the
 /// training series — is machine-independent; n ≤ LEAF degenerates to the
-/// seed's exact sequential accumulation.
-const REDUCE_LEAF: usize = 8;
+/// seed's exact sequential accumulation. Shared with the sharded cohort
+/// engine, whose shard boundaries are multiples of it (a leaf never
+/// straddles a shard, so the per-shard partials compose bit-exactly into
+/// this flat reduction).
+pub(crate) const REDUCE_LEAF: usize = 8;
+
+/// Salt for per-client compression-stream seeds: client i's compressor
+/// state is seeded `stream_seed(env.seed ^ COMP_STREAM_SALT, i)` — O(1)
+/// random access, so the sharded cohort engine can instantiate the
+/// *identical* stream lazily on a client's first touch. The reference
+/// oracle derives its seeds the same way.
+pub(crate) const COMP_STREAM_SALT: u64 = 0xC09B;
+
+/// Per-client batch-sampling stream for client `i` — the random-access
+/// counterpart of the old sequential fork walk, shared by the dense
+/// engine, the reference oracle, and the sharded cohort engine.
+pub(crate) fn client_stream(seed: u64, i: usize) -> Rng {
+    Rng::stream(seed, i as u64 + 1)
+}
 
 /// Participation mask test: `None` is the lockstep full-participation
 /// path (no branch on the seed-equivalence path beyond this inlined
@@ -75,15 +93,23 @@ fn on(mask: Option<&[bool]>, i: usize) -> bool {
 
 /// Byte-accurate wire mode (see the module docs): spec-id table plus a
 /// reusable frame buffer. Metering-only — the training math never touches
-/// this.
-struct Framing {
-    table: SpecTable,
-    client_id: u16,
-    master_id: u16,
-    buf: Vec<u8>,
+/// this. Shared with the sharded cohort engine.
+pub(crate) struct Framing {
+    pub(crate) table: SpecTable,
+    pub(crate) client_id: u16,
+    pub(crate) master_id: u16,
+    pub(crate) buf: Vec<u8>,
 }
 
 impl Framing {
+    /// Intern the two wire specs and start with an empty frame buffer.
+    pub(crate) fn new(client_spec: &str, master_spec: &str) -> Framing {
+        let mut table = SpecTable::new();
+        let client_id = table.intern(client_spec);
+        let master_id = table.intern(master_spec);
+        Framing { table, client_id, master_id, buf: Vec::new() }
+    }
+
     /// Encode, decode back, verify, and return the serialized size in bits.
     fn roundtrip(&mut self, h: FrameHeader, payload: &[u8]) -> anyhow::Result<u64> {
         frame::encode_frame(&h, payload, &mut self.buf);
@@ -93,13 +119,14 @@ impl Framing {
         Ok((self.buf.len() * 8) as u64)
     }
 
-    fn uplink_bits(&mut self, k: u64, client: usize, wire: &Compressed)
-                   -> anyhow::Result<u64> {
+    pub(crate) fn uplink_bits(&mut self, k: u64, client: usize, wire: &Compressed)
+                              -> anyhow::Result<u64> {
         let h = FrameHeader::uplink(k, client, self.client_id, wire)?;
         self.roundtrip(h, &wire.payload)
     }
 
-    fn broadcast_bits(&mut self, k: u64, wire: &Compressed) -> anyhow::Result<u64> {
+    pub(crate) fn broadcast_bits(&mut self, k: u64, wire: &Compressed)
+                                 -> anyhow::Result<u64> {
         let h = FrameHeader::broadcast(k, self.master_id, wire)?;
         self.roundtrip(h, &wire.payload)
     }
@@ -230,15 +257,18 @@ impl<'e> L2gdEngine<'e> {
         // ξ_{-1} = 1 with x̄^{-1} = mean of identical inits = init
         let xs = ParamMatrix::replicate(n, &init);
         let anchor = init;
-        // per-client batch-sampling streams + compression states: the same
-        // fork constants as the seed, so wire streams are bit-identical
-        let mut seeder = Rng::new(env.seed ^ 0xC09B);
-        let slots: Vec<ClientSlot> = client_rngs(env.seed, n)
-            .into_iter()
-            .map(|rng| ClientSlot {
-                rng,
+        // per-client batch-sampling streams + compression states, derived
+        // by *random-access* stream index (`stream_seed`) rather than a
+        // sequential seeder walk: client i's streams are a pure function
+        // of (run seed, i), so the sharded cohort engine can lazily
+        // instantiate bit-identical state for exactly the clients a cohort
+        // touches. The reference oracle derives its seeds the same way.
+        let slots: Vec<ClientSlot> = (0..n)
+            .map(|i| ClientSlot {
+                rng: client_stream(env.seed, i),
                 grad: GradBuf::with_dim(d),
-                comp: alg.client_comp.instantiate(d, seeder.next_u64()),
+                comp: alg.client_comp
+                    .instantiate(d, stream_seed(env.seed ^ COMP_STREAM_SALT, i as u64)),
                 wire: Compressed::empty(),
                 err: None,
             })
@@ -290,10 +320,7 @@ impl<'e> L2gdEngine<'e> {
     /// frame is encode/decode roundtrip-checked. The training math — and
     /// therefore the loss series — is unchanged.
     pub fn enable_wire_framing(&mut self) {
-        let mut table = SpecTable::new();
-        let client_id = table.intern(&self.client_spec);
-        let master_id = table.intern(&self.master_spec);
-        self.framing = Some(Framing { table, client_id, master_id, buf: Vec::new() });
+        self.framing = Some(Framing::new(&self.client_spec, &self.master_spec));
     }
 
     /// The frame spec-id table (present once framing is enabled).

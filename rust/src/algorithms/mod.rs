@@ -19,6 +19,7 @@ pub mod fedavg;
 pub mod fedopt;
 pub mod l2gd;
 pub mod reference;
+pub mod sharded;
 
 use std::sync::{Arc, OnceLock};
 
@@ -33,6 +34,7 @@ use crate::util::Rng;
 pub use fedavg::FedAvg;
 pub use fedopt::FedOpt;
 pub use l2gd::L2gd;
+pub use sharded::ShardedL2gdEngine;
 
 /// Batches assembled once at environment construction. Evaluation batches
 /// are deterministic by the `Backend` contract; per-shard **training**
@@ -151,14 +153,17 @@ pub trait FedAlgorithm {
     fn run(&mut self, env: &FedEnv, steps: u64, eval_every: u64) -> anyhow::Result<Series>;
 }
 
-/// Per-client model state as seen by [`evaluate`]: either truly
-/// personalized (a [`ParamMatrix`] row per client) or one shared global
-/// model (the FedAvg/FedOpt case — the seed materialized `n` clones of `w`
-/// per evaluation to express this).
+/// Per-client model state as seen by [`evaluate`]: truly personalized (a
+/// [`ParamMatrix`] row per client), one shared global model (the
+/// FedAvg/FedOpt case — the seed materialized `n` clones of `w` per
+/// evaluation to express this), or copy-on-write sharded state (a
+/// [`ShardedStore`] where an unmaterialized client implicitly equals the
+/// `base` vector).
 #[derive(Clone, Copy)]
 pub enum ModelView<'a> {
     PerClient(&'a ParamMatrix),
     Shared { model: &'a [f32], n: usize },
+    Cow { store: &'a crate::model::ShardedStore, base: &'a [f32] },
 }
 
 impl<'a> ModelView<'a> {
@@ -166,6 +171,7 @@ impl<'a> ModelView<'a> {
         match self {
             ModelView::PerClient(m) => m.n_rows(),
             ModelView::Shared { n, .. } => *n,
+            ModelView::Cow { store, .. } => store.len(),
         }
     }
 
@@ -173,12 +179,15 @@ impl<'a> ModelView<'a> {
         match self {
             ModelView::PerClient(m) => m.row(i),
             ModelView::Shared { model, .. } => model,
+            ModelView::Cow { store, base } => store.row(i).unwrap_or(base),
         }
     }
 
     /// Global model = mean of the client models, accumulated in client
     /// order — bit-compatible with the seed's `mean_of` (including the
-    /// `Shared` case, where the seed averaged n identical clones).
+    /// `Shared` case, where the seed averaged n identical clones, and the
+    /// `Cow` case, which walks every client's effective row in index
+    /// order exactly as the dense matrix does).
     pub fn mean_into(&self, out: &mut [f32]) {
         match self {
             ModelView::PerClient(m) => m.mean_into(out),
@@ -188,6 +197,14 @@ impl<'a> ModelView<'a> {
                     crate::model::kernels::add_assign(out, model);
                 }
                 crate::model::kernels::scale(out, 1.0 / *n as f32);
+            }
+            ModelView::Cow { store, base } => {
+                out.fill(0.0);
+                for i in 0..store.len() {
+                    crate::model::kernels::add_assign(
+                        out, store.row(i).unwrap_or(base));
+                }
+                crate::model::kernels::scale(out, 1.0 / store.len() as f32);
             }
         }
     }

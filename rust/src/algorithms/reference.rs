@@ -95,14 +95,20 @@ pub fn run_l2gd(alg: &super::L2gd, env: &FedEnv, steps: u64, eval_every: u64)
     let mut anchor = init;
     let mut coin = Coin::new(alg.p, env.seed ^ 0xC011);
     let mut net = Network::new(n);
-    // mutex-wrapped streams, exactly as the seed shared them with the
-    // pooled gradient fan-out
-    let rngs: Vec<Mutex<Rng>> =
-        client_rngs(env.seed, n).into_iter().map(Mutex::new).collect();
-    let mut seeder = Rng::new(env.seed ^ 0xC09B);
+    // mutex-wrapped streams, as the seed shared them with the pooled
+    // gradient fan-out — but derived by random-access stream index
+    // (`l2gd::client_stream` / `stream_seed`), matching the engine and the
+    // sharded cohort engine so all three share one per-client stream
+    // contract
+    let rngs: Vec<Mutex<Rng>> = (0..n)
+        .map(|i| Mutex::new(super::l2gd::client_stream(env.seed, i)))
+        .collect();
     let mut uplinks: Vec<(Box<dyn CompressorState>, Compressed)> = (0..n)
-        .map(|_| (alg.client_comp.instantiate(d, seeder.next_u64()),
-                  Compressed::empty()))
+        .map(|i| {
+            let seed = crate::util::rng::stream_seed(
+                env.seed ^ super::l2gd::COMP_STREAM_SALT, i as u64);
+            (alg.client_comp.instantiate(d, seed), Compressed::empty())
+        })
         .collect();
     let mut master_state = alg.master_comp.instantiate(d, env.seed ^ 0x3a57e5);
     let mut master_buf = Compressed::empty();

@@ -1,0 +1,779 @@
+//! Sharded cohort engine: compressed L2GD over a copy-on-write
+//! [`ShardedStore`] — the fleet-scale counterpart of the dense
+//! [`super::l2gd::L2gdEngine`].
+//!
+//! ### Why a second engine
+//! The dense engine materializes every client's model in one n×d matrix
+//! and sweeps the whole fleet per step, so memory and wall-clock scale
+//! with the *fleet*. The paper's probabilistic protocol only ever touches
+//! a sampled cohort per event; at a million devices the state that
+//! actually diverges from the shared anchor is a tiny sliver of the fleet.
+//! This engine stores exactly that sliver:
+//!
+//! * **State** — a [`ShardedStore`] of divergent rows plus one `base`
+//!   vector (the shared init, re-based on fleet-wide resets). A device
+//!   that never took a divergent step stores no row and implicitly equals
+//!   `base`; a row materializes on the device's first divergent step.
+//!   Per-client wire state (batch RNG, compressor stream, EF residual,
+//!   wire buffer) materializes lazily too, seeded by *random-access*
+//!   stream derivation ([`crate::util::rng::stream_seed`]) — the identical
+//!   streams the dense engine builds eagerly, so the two engines are
+//!   bit-interchangeable.
+//! * **Cohorts, not masks** — every entry point takes a sorted list of
+//!   client ids and does O(cohort · d) work. The dense engine's `&[bool]`
+//!   masks are O(fleet) to even scan.
+//! * **Hierarchical aggregation** — the master's ȳ decode-accumulate
+//!   runs as per-shard partials over the same fixed
+//!   [`REDUCE_LEAF`]-client leaves as the dense tree reduction (shard
+//!   boundaries are leaf multiples, so no leaf straddles a shard), and the
+//!   final combine walks shard partials in shard order — leaf order
+//!   globally. Untouched leaves contribute exactly `+0.0` in the dense
+//!   path, so skipping them is bit-exact, and the whole pipeline
+//!   reproduces the flat reduction **bit for bit**.
+//! * **Data mapping** — fleet device i trains and evaluates on data shard
+//!   `i mod env.n_clients()`, decoupling the modeled fleet size from the
+//!   number of distinct data shards the environment carries.
+//!
+//! With cohort = the full fleet and equal seeds, every sweep here runs the
+//! same arithmetic in the same order as the dense engine, so the training
+//! series matches it bit for bit (pinned in `tests/integration_sim.rs` and
+//! the module tests below). Under partial participation it matches the
+//! dense engine's masked entry points the same way.
+//!
+//! ### Evaluation
+//! When the fleet size equals the environment's shard count the engine
+//! evaluates through the shared [`evaluate`] path (bit-identical records).
+//! At fleet scale it switches to O(occupancy) evaluation: the global mean
+//! is computed exactly as `((n−m)·base + Σ materialized rows)/n`, and the
+//! personalized objective averages over the divergent clients only.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+use super::l2gd::{client_stream, Framing, COMP_STREAM_SALT, REDUCE_LEAF};
+use super::{evaluate, FedEnv, L2gd, ModelView};
+use crate::compress::{Compressed, Compressor, CompressorState};
+use crate::metrics::Record;
+use crate::model::{kernels, ShardedStore};
+use crate::protocol::{Coin, CoinStats, StepKind};
+use crate::runtime::{Backend as _, GradBuf};
+use crate::transport::frame;
+use crate::transport::Network;
+use crate::util::rng::stream_seed;
+use crate::util::Rng;
+
+/// Lazily materialized per-client wire state: the sharded analogue of the
+/// dense engine's `ClientSlot`, created on the client's first cohort
+/// membership with the same stream seeds.
+struct CohortSlot {
+    /// batch-sampling stream (drawn only for non-static backends)
+    rng: Rng,
+    /// stateful compressor instance (own RNG stream, EF residual)
+    comp: Box<dyn CompressorState>,
+    /// reusable wire buffer
+    wire: Compressed,
+}
+
+fn new_slot(seed: u64, d: usize, comp: &Arc<dyn Compressor>, i: u32) -> CohortSlot {
+    CohortSlot {
+        rng: client_stream(seed, i as usize),
+        comp: comp.instantiate(d, stream_seed(seed ^ COMP_STREAM_SALT, i as u64)),
+        wire: Compressed::empty(),
+    }
+}
+
+pub struct ShardedL2gdEngine<'e> {
+    env: &'e FedEnv,
+    /// fleet size (may vastly exceed `env.n_clients()` data shards)
+    n: usize,
+    d: usize,
+    local_coef: f32,
+    agg_coef: f32,
+    /// divergent rows only (copy-on-write against `base`)
+    store: ShardedStore,
+    /// implicit value of every unmaterialized row (shared init; re-based
+    /// only by an explicit fleet-wide reset)
+    base: Vec<f32>,
+    /// last broadcast C_M(ȳ)
+    anchor: Vec<f32>,
+    /// true until the first fresh round: the anchor still *is* the base,
+    /// so cached aggregation on an unmaterialized row is a bitwise no-op
+    /// and must not materialize it
+    anchor_is_base: bool,
+    ybar: Vec<f32>,
+    slots: HashMap<u32, CohortSlot>,
+    /// every client that has ever been in a cohort
+    touched: HashSet<u32>,
+    client_comp: Arc<dyn Compressor>,
+    master_state: Box<dyn CompressorState>,
+    master_buf: Compressed,
+    grad: GradBuf,
+    coin: Coin,
+    net: Network,
+    seed: u64,
+    client_spec: String,
+    master_spec: String,
+    framing: Option<Framing>,
+    /// exact (dense-compatible) evaluation when the fleet == data shards
+    exact_eval: bool,
+    // reusable fresh-round scratch
+    leaf_rows: Vec<f32>,
+    leaf_spans: Vec<(u32, u32)>,
+    release_scratch: Vec<u32>,
+    /// lazily built full-fleet cohort for the lockstep [`Self::step`]
+    full: Vec<u32>,
+}
+
+impl<'e> ShardedL2gdEngine<'e> {
+    /// Build the engine for a `fleet_n`-device fleet over `env`'s data
+    /// shards. `fleet_n == env.n_clients()` is the dense-equivalent
+    /// configuration (exact evaluation, identity data mapping).
+    pub fn new(alg: &L2gd, env: &'e FedEnv, fleet_n: usize)
+               -> anyhow::Result<ShardedL2gdEngine<'e>> {
+        anyhow::ensure!(fleet_n > 0, "empty fleet");
+        anyhow::ensure!(env.n_clients() > 0, "environment has no data shards");
+        anyhow::ensure!(alg.p > 0.0 || alg.lambda == 0.0,
+                        "p = 0 only valid for λ = 0 (pure local training)");
+        let d = env.backend.param_count();
+        let local_coef = alg.local_coef(fleet_n) as f32;
+        let agg_coef = alg.agg_coef(fleet_n) as f32;
+        anyhow::ensure!(agg_coef.is_finite() && (0.0..2.0).contains(&agg_coef),
+                        "ηλ/np = {agg_coef} outside [0,2): aggregation diverges");
+        let init = env.backend.init_params();
+        let shard_size = ShardedStore::auto_shard_size(fleet_n, REDUCE_LEAF);
+        // force the lazy per-shard train-batch cache off the hot path
+        let _ = env.train_batch_cached(0);
+        Ok(ShardedL2gdEngine {
+            env,
+            n: fleet_n,
+            d,
+            local_coef,
+            agg_coef,
+            store: ShardedStore::new(fleet_n, d, shard_size),
+            base: init.clone(),
+            anchor: init,
+            anchor_is_base: true,
+            ybar: vec![0.0f32; d],
+            slots: HashMap::new(),
+            touched: HashSet::new(),
+            client_comp: Arc::clone(&alg.client_comp),
+            master_state: alg.master_comp.instantiate(d, env.seed ^ 0x3a57e5),
+            master_buf: Compressed::empty(),
+            grad: GradBuf::with_dim(d),
+            coin: Coin::new(alg.p, env.seed ^ 0xC011), // same coin stream
+            net: Network::sharded(fleet_n, shard_size),
+            seed: env.seed,
+            client_spec: alg.client_comp.name(),
+            master_spec: alg.master_comp.name(),
+            framing: None,
+            exact_eval: fleet_n == env.n_clients(),
+            leaf_rows: Vec::new(),
+            leaf_spans: Vec::new(),
+            release_scratch: Vec::new(),
+            full: Vec::new(),
+        })
+    }
+
+    /// Fleet size.
+    pub fn n_fleet(&self) -> usize {
+        self.n
+    }
+
+    /// The copy-on-write store (occupancy / resident-bytes assertions).
+    pub fn store(&self) -> &ShardedStore {
+        &self.store
+    }
+
+    /// Distinct clients that have ever appeared in a cohort.
+    pub fn touched_clients(&self) -> usize {
+        self.touched.len()
+    }
+
+    pub fn net(&self) -> &Network {
+        &self.net
+    }
+
+    /// Client `i`'s effective model row (the base when undiverged).
+    pub fn row_or_base(&self, i: usize) -> &[f32] {
+        self.store.row(i).unwrap_or(&self.base)
+    }
+
+    /// The shared base vector missing rows implicitly equal.
+    pub fn base(&self) -> &[f32] {
+        &self.base
+    }
+
+    /// Data shard fleet device `i` trains/evaluates on.
+    pub fn data_shard(&self, i: usize) -> usize {
+        i % self.env.n_clients()
+    }
+
+    /// Byte-accurate wire metering (see the dense engine) — metering only.
+    pub fn enable_wire_framing(&mut self) {
+        self.framing = Some(Framing::new(&self.client_spec, &self.master_spec));
+    }
+
+    /// The frame spec-id table (present once framing is enabled).
+    pub fn spec_table(&self) -> Option<&crate::transport::frame::SpecTable> {
+        self.framing.as_ref().map(|f| &f.table)
+    }
+
+    /// Draw the ξ coin (same stream as the dense engine's).
+    pub fn draw(&mut self) -> StepKind {
+        self.coin.draw()
+    }
+
+    pub fn coin_stats(&self) -> &CoinStats {
+        &self.coin.stats
+    }
+
+    /// Lockstep full-participation iteration — the dense-equivalence path.
+    pub fn step(&mut self, k: u64) -> anyhow::Result<()> {
+        if self.full.len() != self.n {
+            self.full = (0..self.n as u32).collect();
+        }
+        let full = std::mem::take(&mut self.full);
+        let res = match self.coin.draw() {
+            StepKind::Local => self.step_local(&full),
+            StepKind::AggregateFresh => self
+                .compress_uplinks(&full)
+                .and_then(|()| self.complete_fresh(k, &full, &full)),
+            StepKind::AggregateCached => {
+                self.step_aggregate_cached(&full);
+                Ok(())
+            }
+        };
+        self.full = full;
+        res
+    }
+
+    pub fn run_steps(&mut self, from: u64, count: u64) -> anyhow::Result<()> {
+        for k in from + 1..=from + count {
+            self.step(k)?;
+        }
+        Ok(())
+    }
+
+    #[inline]
+    fn debug_check_cohort(cohort: &[u32], n: usize) {
+        debug_assert!(cohort.windows(2).all(|w| w[0] < w[1]),
+                      "cohort must be sorted and distinct");
+        debug_assert!(cohort.last().map_or(true, |&i| (i as usize) < n),
+                      "cohort id out of range");
+    }
+
+    /// Local gradient step for the cohort — each member materializes its
+    /// row on this first divergent step and updates it in place. Same
+    /// per-client arithmetic and order as the dense engine's masked sweep.
+    pub fn step_local(&mut self, cohort: &[u32]) -> anyhow::Result<()> {
+        Self::debug_check_cohort(cohort, self.n);
+        let env = self.env;
+        let coef = self.local_coef;
+        let nd = env.n_clients();
+        let (seed, d) = (self.seed, self.d);
+        let comp = &self.client_comp;
+        let store = &mut self.store;
+        let base = &self.base;
+        let slots = &mut self.slots;
+        let grad = &mut self.grad;
+        for &i in cohort {
+            self.touched.insert(i);
+            let ds = i as usize % nd;
+            let x = store.materialize(i as usize, base);
+            match env.train_batch_cached(ds) {
+                Some(b) => env.backend.grad_into(x, b, grad)?,
+                None => {
+                    let slot = slots
+                        .entry(i)
+                        .or_insert_with(|| new_slot(seed, d, comp, i));
+                    let b = env.backend.make_train_batch(&env.shards[ds], &mut slot.rng);
+                    env.backend.grad_into(x, &b, grad)?;
+                }
+            }
+            kernels::axpy(x, -coef, &grad.grad);
+        }
+        Ok(())
+    }
+
+    /// Cached-anchor aggregation for the cohort.
+    pub fn step_aggregate_cached(&mut self, cohort: &[u32]) {
+        Self::debug_check_cohort(cohort, self.n);
+        for &i in cohort {
+            self.touched.insert(i);
+        }
+        self.apply_aggregation(cohort);
+    }
+
+    /// Phase 1 of a fresh round: compress the cohort's effective models
+    /// into their (lazily created) wire buffers. Read-only on the store —
+    /// an undiverged member compresses the base without materializing.
+    pub fn compress_uplinks(&mut self, cohort: &[u32]) -> anyhow::Result<()> {
+        Self::debug_check_cohort(cohort, self.n);
+        let (seed, d) = (self.seed, self.d);
+        let comp = &self.client_comp;
+        let store = &self.store;
+        let base = &self.base;
+        let slots = &mut self.slots;
+        for &i in cohort {
+            self.touched.insert(i);
+            let x = store.row(i as usize).unwrap_or(base);
+            let slot = slots.entry(i).or_insert_with(|| new_slot(seed, d, comp, i));
+            slot.comp.compress_into(x, &mut slot.wire)?;
+        }
+        Ok(())
+    }
+
+    /// Serialized uplink frame size (bytes) for client `i`'s pending wire
+    /// buffer — valid after [`Self::compress_uplinks`] included `i`.
+    pub fn uplink_frame_bytes(&self, i: usize) -> u64 {
+        let slot = self.slots.get(&(i as u32)).expect("client has no wire buffer");
+        (frame::HEADER_BYTES + slot.wire.payload.len()) as u64
+    }
+
+    /// Serialized downlink (anchor broadcast) frame size in bytes.
+    pub fn downlink_frame_bytes(&self) -> u64 {
+        (frame::HEADER_BYTES + self.master_buf.payload.len()) as u64
+    }
+
+    /// Phase 2: meter uplinks (`sampled` − `arrived` as discarded
+    /// straggler traffic), decode-accumulate ȳ over the arrived cohort via
+    /// per-shard leaf partials, broadcast C_M(ȳ) to the cohort, aggregate.
+    /// Bit-identical to the dense engine's `complete_fresh` for equal
+    /// cohorts.
+    pub fn complete_fresh(&mut self, k: u64, arrived: &[u32], sampled: &[u32])
+                          -> anyhow::Result<()> {
+        Self::debug_check_cohort(arrived, self.n);
+        Self::debug_check_cohort(sampled, self.n);
+        anyhow::ensure!(!arrived.is_empty(), "fresh aggregation with an empty cohort");
+        let count = arrived.len();
+        self.net.begin_round();
+        // meter every transmitted frame; only arrived devices participate
+        {
+            let slots = &self.slots;
+            let framing = &mut self.framing;
+            let net = &mut self.net;
+            let mut ai = 0usize;
+            for &i in sampled {
+                let is_arrived = ai < arrived.len() && arrived[ai] == i;
+                if is_arrived {
+                    ai += 1;
+                }
+                let slot = slots.get(&i).expect("sampled client has no wire buffer");
+                let bits = match framing {
+                    Some(f) => f.uplink_bits(k, i as usize, &slot.wire)?,
+                    None => slot.wire.bits,
+                };
+                if is_arrived {
+                    net.uplink(k, i as usize, bits);
+                } else {
+                    net.uplink_wasted(k, i as usize, bits);
+                }
+            }
+            debug_assert_eq!(ai, arrived.len(), "arrived must be a subset of sampled");
+        }
+        // master: ȳ = (1/count) Σ_arrived C_i(x_i). Small fleets accumulate
+        // sequentially (the dense engine's n ≤ REDUCE_LEAF path); larger
+        // fleets reduce per-shard leaf partials over the pool and combine
+        // them in shard (= global leaf) order — bit-equal to the dense
+        // flat reduction because untouched leaves only ever contribute
+        // +0.0 there.
+        let inv = 1.0 / count as f32;
+        if self.n <= REDUCE_LEAF {
+            self.ybar.fill(0.0);
+            for &i in arrived {
+                self.slots[&i].wire.decode_add(&mut self.ybar, inv);
+            }
+        } else {
+            let d = self.d;
+            self.leaf_spans.clear();
+            let mut start = 0usize;
+            while start < arrived.len() {
+                let leaf = arrived[start] as usize / REDUCE_LEAF;
+                let mut end = start + 1;
+                while end < arrived.len()
+                    && arrived[end] as usize / REDUCE_LEAF == leaf
+                {
+                    end += 1;
+                }
+                self.leaf_spans.push((start as u32, end as u32));
+                start = end;
+            }
+            self.leaf_rows.clear();
+            self.leaf_rows.resize(self.leaf_spans.len() * d, 0.0);
+            let spans = &self.leaf_spans;
+            let slots = &self.slots;
+            self.env.pool.scope_chunks_mut(&mut self.leaf_rows, d, |j, row| {
+                row.fill(0.0);
+                let (lo, hi) = spans[j];
+                for &i in &arrived[lo as usize..hi as usize] {
+                    slots[&i].wire.decode_add(row, inv);
+                }
+            });
+            self.ybar.fill(0.0);
+            for row in self.leaf_rows.chunks_exact(d) {
+                kernels::add_assign(&mut self.ybar, row);
+            }
+        }
+        // downlink C_M(ȳ) to the arrived cohort only
+        self.master_state.compress_into(&self.ybar, &mut self.master_buf)?;
+        let down_bits = match &mut self.framing {
+            Some(f) => f.broadcast_bits(k, &self.master_buf)?,
+            None => self.master_buf.bits,
+        };
+        for &i in arrived {
+            self.net.downlink(k, i as usize, down_bits);
+        }
+        self.master_buf.decode_into(&mut self.anchor);
+        self.anchor_is_base = false;
+        self.net.end_round();
+        self.apply_aggregation(arrived);
+        Ok(())
+    }
+
+    /// A fresh attempt where nobody made the deadline: the cohort's frames
+    /// still metered as discarded traffic, nothing aggregates.
+    pub fn abort_fresh(&mut self, k: u64, sampled: &[u32]) -> anyhow::Result<()> {
+        Self::debug_check_cohort(sampled, self.n);
+        self.net.begin_round();
+        for &i in sampled {
+            let slot = self.slots.get(&i).expect("sampled client has no wire buffer");
+            let bits = match &mut self.framing {
+                Some(f) => f.uplink_bits(k, i as usize, &slot.wire)?,
+                None => slot.wire.bits,
+            };
+            self.net.uplink_wasted(k, i as usize, bits);
+        }
+        self.net.end_round();
+        Ok(())
+    }
+
+    /// `x_i ← x_i − a(x_i − anchor)` for the cohort. While the anchor is
+    /// still the base (no fresh round yet), the step is a bitwise no-op on
+    /// undiverged rows — they stay unmaterialized. A *full-fleet* exact
+    /// reset (a = 1, every client in the cohort — the FedAvg-equivalence
+    /// regime) re-bases the implicit value onto the anchor and releases
+    /// every row that landed exactly on it: "fully reset by a broadcast it
+    /// equals, stores no row". (Re-basing is only sound when no client is
+    /// left holding the old implicit value, hence the full-cohort guard;
+    /// rows whose reset rounded off the anchor stay resident, preserving
+    /// bit-equality with the dense engine.)
+    fn apply_aggregation(&mut self, cohort: &[u32]) {
+        let a = self.agg_coef;
+        for &i in cohort {
+            if self.anchor_is_base && self.store.row(i as usize).is_none() {
+                // x = base, anchor = base ⇒ x − a·(x − x) ≡ x bitwise
+                continue;
+            }
+            let x = self.store.materialize(i as usize, &self.base);
+            kernels::aggregation_step(x, a, &self.anchor);
+        }
+        if a == 1.0 && cohort.len() == self.n && !self.anchor_is_base {
+            self.base.copy_from_slice(&self.anchor);
+            self.anchor_is_base = true; // anchor ≡ base again
+            {
+                let scratch = &mut self.release_scratch;
+                scratch.clear();
+                let base = &self.base;
+                self.store.for_each_row(|id, row| {
+                    if row == &base[..] {
+                        scratch.push(id as u32);
+                    }
+                });
+            }
+            let scratch = std::mem::take(&mut self.release_scratch);
+            for &i in &scratch {
+                self.store.release(i as usize);
+            }
+            self.release_scratch = scratch;
+        }
+    }
+
+    /// Evaluate into a `Record`. Exact (dense-bit-identical) when the
+    /// fleet equals the data-shard count; O(occupancy) at fleet scale.
+    pub fn evaluate(&self, step: u64) -> anyhow::Result<Record> {
+        if self.exact_eval {
+            return evaluate(self.env,
+                            ModelView::Cow { store: &self.store, base: &self.base },
+                            step, &self.net);
+        }
+        self.evaluate_touched(step)
+    }
+
+    /// Personalized metrics in touched-mode evaluation cover at most this
+    /// many divergent rows (deterministic materialization order): keeps a
+    /// record's cost bounded however many clients a long run touches. The
+    /// global-model metrics are always exact over the whole fleet.
+    pub const PERSONAL_EVAL_CAP: usize = 2048;
+
+    /// Fleet-scale evaluation in O(occupancy): exact global mean via the
+    /// base identity `x̄ = ((n−m)·base + Σ materialized)/n`, personalized
+    /// metrics averaged over (a capped sample of) the divergent clients
+    /// (the base on data shard 0 when nothing has diverged yet).
+    fn evaluate_touched(&self, step: u64) -> anyhow::Result<Record> {
+        let be = &self.env.backend;
+        let m = self.store.materialized_rows();
+        let mut global = vec![0.0f32; self.d];
+        self.store.for_each_row(|_, row| kernels::add_assign(&mut global, row));
+        let n_f = self.n as f32;
+        kernels::scale(&mut global, 1.0 / n_f);
+        kernels::axpy(&mut global, (self.n - m) as f32 / n_f, &self.base);
+        let train = be.eval(&global, self.env.train_eval_batch())?;
+        let test = be.eval(&global, self.env.test_batch())?;
+
+        let nd = self.env.n_clients();
+        let (mut pl, mut pa, mut cnt) = (0.0f64, 0.0f64, 0usize);
+        self.store.for_each_row(|i, row| {
+            if cnt >= Self::PERSONAL_EVAL_CAP {
+                return;
+            }
+            match be.eval(row, self.env.shard_eval_batch(i % nd)) {
+                Ok(e) => {
+                    pl += e.loss;
+                    pa += e.accuracy;
+                }
+                Err(_) => {
+                    pl += f64::NAN;
+                    pa += f64::NAN;
+                }
+            }
+            cnt += 1;
+        });
+        let (personal_loss, personal_acc) = if cnt == 0 {
+            let e = be.eval(&self.base, self.env.shard_eval_batch(0))?;
+            (e.loss, e.accuracy)
+        } else {
+            (pl / cnt as f64, pa / cnt as f64)
+        };
+        Ok(Record {
+            step,
+            comm_rounds: self.net.comm_rounds(),
+            bits_per_client: self.net.bits_per_client(),
+            bits_up: self.net.total_bits_up(),
+            bits_down: self.net.total_bits_down(),
+            train_loss: train.loss,
+            train_acc: train.accuracy,
+            test_loss: test.loss,
+            test_acc: test.accuracy,
+            personal_loss,
+            personal_acc,
+            sim_time_s: self.net.simulated_comm_time_s(),
+            participants: self.net.last_round_participants(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::l2gd::L2gdEngine;
+    use crate::data::synth;
+    use crate::runtime::NativeLogreg;
+    use crate::util::threadpool::ThreadPool;
+    use std::sync::Arc;
+
+    fn env(n: usize, seed: u64) -> FedEnv {
+        let (data, test) = synth::logistic_split(50 * n, 100, 16, 0.02, seed);
+        let shards = data.split_contiguous(n);
+        FedEnv::new(Arc::new(NativeLogreg::new(16, 0.01, 64, 128)),
+                    shards, data, test, ThreadPool::new(4), seed)
+    }
+
+    fn assert_rows_equal(dense: &L2gdEngine, cow: &ShardedL2gdEngine, tag: &str) {
+        for i in 0..dense.xs().n_rows() {
+            assert_eq!(dense.xs().row(i), cow.row_or_base(i), "{tag}: row {i}");
+        }
+    }
+
+    fn assert_records_equal(a: &Record, b: &Record, tag: &str) {
+        assert_eq!(a.train_loss, b.train_loss, "{tag}");
+        assert_eq!(a.test_loss, b.test_loss, "{tag}");
+        assert_eq!(a.personal_loss, b.personal_loss, "{tag}");
+        assert_eq!(a.personal_acc, b.personal_acc, "{tag}");
+        assert_eq!(a.bits_up, b.bits_up, "{tag}");
+        assert_eq!(a.bits_down, b.bits_down, "{tag}");
+        assert_eq!(a.comm_rounds, b.comm_rounds, "{tag}");
+    }
+
+    /// Lockstep full participation ≡ dense engine, bit for bit — small
+    /// fleet (sequential master accumulate) and stochastic wire.
+    #[test]
+    fn lockstep_matches_dense_engine_small_fleet() {
+        for wire in ["identity", "natural", "qsgd:8"] {
+            let e = env(5, 31);
+            let alg = L2gd::from_local_and_agg(0.35, 0.4, 0.5, 5, wire, wire).unwrap();
+            let mut dense = alg.engine(&e).unwrap();
+            let mut cow = ShardedL2gdEngine::new(&alg, &e, 5).unwrap();
+            for k in 1..=120 {
+                dense.step(k).unwrap();
+                cow.step(k).unwrap();
+            }
+            assert_rows_equal(&dense, &cow, wire);
+            let rd = dense.evaluate(120).unwrap();
+            let rc = cow.evaluate(120).unwrap();
+            assert_records_equal(&rd, &rc, wire);
+        }
+    }
+
+    /// n > REDUCE_LEAF exercises the hierarchical per-shard/leaf
+    /// aggregation against the dense flat tree reduction.
+    #[test]
+    fn lockstep_matches_dense_engine_tree_path() {
+        let e = env(12, 32);
+        let alg = L2gd::from_local_and_agg(0.4, 0.3, 0.5, 12,
+                                           "natural", "natural").unwrap();
+        let mut dense = alg.engine(&e).unwrap();
+        let mut cow = ShardedL2gdEngine::new(&alg, &e, 12).unwrap();
+        for k in 1..=100 {
+            dense.step(k).unwrap();
+            cow.step(k).unwrap();
+        }
+        assert_rows_equal(&dense, &cow, "tree");
+        assert_records_equal(&dense.evaluate(100).unwrap(),
+                             &cow.evaluate(100).unwrap(), "tree");
+    }
+
+    /// Partial participation: the cohort entry points reproduce the dense
+    /// engine's masked entry points, including straggler metering.
+    #[test]
+    fn partial_participation_matches_dense_masked_path() {
+        let e = env(12, 33);
+        let alg = L2gd::from_local_and_agg(0.4, 0.3, 0.5, 12,
+                                           "natural", "natural").unwrap();
+        let mut dense = alg.engine(&e).unwrap();
+        let mut cow = ShardedL2gdEngine::new(&alg, &e, 12).unwrap();
+        let to_mask = |ids: &[u32]| {
+            let mut m = vec![false; 12];
+            for &i in ids {
+                m[i as usize] = true;
+            }
+            m
+        };
+        let all: Vec<u32> = (0..12).collect();
+        let act: Vec<u32> = vec![0, 2, 3, 5, 8, 9, 11];
+        let sampled: Vec<u32> = vec![0, 2, 5, 8, 11];
+        let arrived: Vec<u32> = vec![2, 5, 11];
+
+        dense.step_local(&to_mask(&all)).unwrap();
+        cow.step_local(&all).unwrap();
+        dense.step_local(&to_mask(&act)).unwrap();
+        cow.step_local(&act).unwrap();
+
+        dense.compress_uplinks(&to_mask(&sampled)).unwrap();
+        cow.compress_uplinks(&sampled).unwrap();
+        dense.complete_fresh(1, &to_mask(&arrived), &to_mask(&sampled)).unwrap();
+        cow.complete_fresh(1, &arrived, &sampled).unwrap();
+        assert_rows_equal(&dense, &cow, "after fresh");
+
+        dense.step_aggregate_cached(&to_mask(&act));
+        cow.step_aggregate_cached(&act);
+        dense.step_local(&to_mask(&sampled)).unwrap();
+        cow.step_local(&sampled).unwrap();
+        assert_rows_equal(&dense, &cow, "after cached+local");
+
+        // wasted straggler traffic meters identically
+        assert_eq!(dense.net().total_bits_up(), cow.net().total_bits_up());
+        assert_eq!(dense.net().total_bits_down(), cow.net().total_bits_down());
+        assert_eq!(dense.net().last_round_participants(),
+                   cow.net().last_round_participants());
+    }
+
+    /// The copy-on-write contract at fleet scale: untouched devices store
+    /// nothing, cohort compression does not materialize, local steps do.
+    #[test]
+    fn occupancy_scales_with_touched_not_fleet() {
+        let e = env(5, 34);
+        let alg = L2gd::from_local_and_agg(0.4, 0.3, 0.5, 100_000,
+                                           "natural", "natural").unwrap();
+        let mut cow = ShardedL2gdEngine::new(&alg, &e, 100_000).unwrap();
+        assert_eq!(cow.store().materialized_rows(), 0);
+        assert!(cow.store().n_shards() > 1);
+
+        // a cohort that only compresses (fresh phase 1) stays row-free
+        let sampled: Vec<u32> = (0..64u32).map(|j| j * 997).collect();
+        cow.compress_uplinks(&sampled).unwrap();
+        assert_eq!(cow.store().materialized_rows(), 0,
+                   "uplink compression must not materialize rows");
+        assert_eq!(cow.touched_clients(), 64);
+        cow.complete_fresh(1, &sampled, &sampled).unwrap();
+        // the aggregation step materializes only the cohort
+        assert!(cow.store().materialized_rows() <= 64);
+
+        // local steps materialize their cohort
+        let workers: Vec<u32> = (0..40u32).map(|j| 1000 + j * 131).collect();
+        cow.step_local(&workers).unwrap();
+        assert!(cow.store().materialized_rows() <= 64 + 40);
+        assert_eq!(cow.touched_clients(), 104);
+        assert!(cow.row_or_base(99_999) == cow.base(), "untouched ⇒ base");
+        assert!(cow.store().row(99_999).is_none());
+
+        // resident bytes track occupancy, not the 100k fleet
+        let rows = cow.store().materialized_rows();
+        let per_row = 16 * 4 + 64;
+        assert!(cow.store().resident_bytes() <= 4 * rows * per_row + 64 * 1024,
+                "resident {} B for {rows} rows", cow.store().resident_bytes());
+
+        // fleet-scale evaluation is finite and O(occupancy)
+        let rec = cow.evaluate(2).unwrap();
+        assert!(rec.train_loss.is_finite());
+        assert!(rec.personal_loss.is_finite());
+    }
+
+    /// The FedAvg-equivalence regime (ηλ/np = 1, full cohort): a fresh
+    /// broadcast resets every client onto the anchor, the engine re-bases
+    /// the implicit value, releases the rows the reset landed exactly on
+    /// that value — and stays bit-identical to the dense engine throughout.
+    #[test]
+    fn full_fleet_exact_reset_rebases_and_releases() {
+        let e = env(4, 36);
+        // p=0.5, n=4, η=1, λ=2 ⇒ ηλ/np = 1.0 exactly
+        let alg = L2gd::new(0.5, 2.0, 1.0, 4, "identity", "identity").unwrap();
+        assert_eq!(alg.agg_coef(4) as f32, 1.0);
+        let mut dense = alg.engine(&e).unwrap();
+        let mut cow = ShardedL2gdEngine::new(&alg, &e, 4).unwrap();
+        let init: Vec<f32> = cow.base().to_vec();
+        let all: Vec<u32> = (0..4).collect();
+        let mask = [true; 4];
+        // diverge, then commit a full-fleet fresh round at a = 1
+        dense.step_local(&mask).unwrap();
+        cow.step_local(&all).unwrap();
+        assert_eq!(cow.store().materialized_rows(), 4);
+        dense.compress_uplinks(&mask).unwrap();
+        cow.compress_uplinks(&all).unwrap();
+        dense.complete_fresh(1, &mask, &mask).unwrap();
+        cow.complete_fresh(1, &all, &all).unwrap();
+        // bit-identical state regardless of what was released...
+        assert_rows_equal(&dense, &cow, "post-reset");
+        // ...and the re-base happened: the implicit value moved off the
+        // init; rows whose reset rounded may stay resident
+        assert_ne!(cow.base(), &init[..]);
+        assert!(cow.store().materialized_rows() <= 4);
+        // a second consecutive reset lands every row exactly on the
+        // anchor (all rows are within ulps of ȳ, so x − (x − ȳ) is exact
+        // by Sterbenz) — the store must be fully reclaimed
+        dense.compress_uplinks(&mask).unwrap();
+        cow.compress_uplinks(&all).unwrap();
+        dense.complete_fresh(2, &mask, &mask).unwrap();
+        cow.complete_fresh(2, &all, &all).unwrap();
+        assert_rows_equal(&dense, &cow, "second reset");
+        assert_eq!(cow.store().materialized_rows(), 0,
+                   "back-to-back a = 1 full-fleet resets must release every row");
+        // training continues identically after the reclaim
+        dense.step_local(&mask).unwrap();
+        cow.step_local(&all).unwrap();
+        assert_rows_equal(&dense, &cow, "post-reset local");
+    }
+
+    /// Pre-communication cached aggregation is a bitwise no-op on
+    /// undiverged rows and must not materialize them.
+    #[test]
+    fn cached_aggregation_before_first_broadcast_stays_implicit() {
+        let e = env(5, 35);
+        let alg = L2gd::from_local_and_agg(0.5, 0.3, 0.5, 1000,
+                                           "identity", "identity").unwrap();
+        let mut cow = ShardedL2gdEngine::new(&alg, &e, 1000).unwrap();
+        let cohort: Vec<u32> = (0..200).collect();
+        cow.step_aggregate_cached(&cohort);
+        assert_eq!(cow.store().materialized_rows(), 0);
+        assert_eq!(cow.touched_clients(), 200);
+    }
+}

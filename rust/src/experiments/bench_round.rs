@@ -314,6 +314,168 @@ pub fn run_and_write(cfg: &BenchCfg, out_path: &str) -> anyhow::Result<BenchResu
     Ok(res)
 }
 
+// ---------------------------------------------------------------------------
+// Scale section: the sharded cohort engine at a million devices
+// ---------------------------------------------------------------------------
+
+/// Allocation ceiling per *newly touched* client in the sharded engine's
+/// steady state. A client's first cohort membership legitimately allocates
+/// (row materialization, lazy slot: compressor state + wire buffers, map
+/// growth); after that, events must stay inside the reusable-scratch
+/// budget of [`SIM_ALLOCS_PER_EVENT_BOUND`]. The scale bench asserts
+/// `allocs ≤ touches·this + events·SIM_ALLOCS_PER_EVENT_BOUND`.
+pub const SHARD_ALLOCS_PER_TOUCH_BOUND: f64 = 48.0;
+
+/// Configuration of the `pfl bench` scale section (`BENCH_shard.json`).
+#[derive(Clone, Debug)]
+pub struct ShardBenchCfg {
+    /// scenario spec — defaults to the 10⁶-device `megafleet` preset
+    pub scenario: String,
+    pub steps: u64,
+    pub warmup: u64,
+    pub rows_per_worker: usize,
+    pub seed: u64,
+    /// fail (Err) if the measured window exceeds the allocation bound
+    /// while the counting allocator is installed
+    pub assert_alloc_bounded: bool,
+}
+
+impl ShardBenchCfg {
+    pub fn megafleet() -> ShardBenchCfg {
+        ShardBenchCfg {
+            scenario: "megafleet".into(),
+            steps: 120,
+            warmup: 40,
+            rows_per_worker: 40,
+            seed: 0,
+            assert_alloc_bounded: true,
+        }
+    }
+
+    /// CI-sized: fewer events, same 10⁶-device fleet (the fleet itself is
+    /// lazy, so its size costs nothing).
+    pub fn smoke() -> ShardBenchCfg {
+        ShardBenchCfg { steps: 60, warmup: 20, ..ShardBenchCfg::megafleet() }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ShardBenchResult {
+    pub cfg: ShardBenchCfg,
+    pub fleet_size: u64,
+    /// scheduler events/sec over the measured window
+    pub events_per_sec: f64,
+    /// allocations per event; `None` without the counting allocator
+    pub allocs_per_event: Option<f64>,
+    /// allocations per newly touched client over the window
+    pub allocs_per_touch: Option<f64>,
+    pub touched_clients: u64,
+    pub resident_rows: u64,
+    pub resident_bytes: u64,
+    /// the headline scale number: resident client-state bytes over the
+    /// whole fleet (copy-on-write ⇒ ≪ a dense row per device)
+    pub resident_bytes_per_device: f64,
+    pub mean_cohort: f64,
+    pub link_shards: u64,
+}
+
+impl ShardBenchResult {
+    pub fn to_json(&self) -> Value {
+        let opt = |v: Option<f64>| v.map_or(Value::Null, Value::Num);
+        Value::obj(vec![
+            ("bench".into(), Value::Str("sharded_cohort_engine".into())),
+            ("config".into(), Value::obj(vec![
+                ("scenario".into(), Value::Str(self.cfg.scenario.clone())),
+                ("steps".into(), Value::Num(self.cfg.steps as f64)),
+                ("warmup".into(), Value::Num(self.cfg.warmup as f64)),
+                ("rows_per_worker".into(),
+                 Value::Num(self.cfg.rows_per_worker as f64)),
+                ("seed".into(), Value::Num(self.cfg.seed as f64)),
+            ])),
+            ("fleet_size".into(), Value::Num(self.fleet_size as f64)),
+            ("events_per_sec".into(), Value::Num(self.events_per_sec)),
+            ("allocs_per_event".into(), opt(self.allocs_per_event)),
+            ("allocs_per_touch".into(), opt(self.allocs_per_touch)),
+            ("allocs_per_touch_bound".into(),
+             Value::Num(SHARD_ALLOCS_PER_TOUCH_BOUND)),
+            ("alloc_counting".into(),
+             Value::Bool(self.allocs_per_event.is_some())),
+            ("touched_clients".into(), Value::Num(self.touched_clients as f64)),
+            ("resident_rows".into(), Value::Num(self.resident_rows as f64)),
+            ("resident_bytes".into(), Value::Num(self.resident_bytes as f64)),
+            ("resident_bytes_per_device".into(),
+             Value::Num(self.resident_bytes_per_device)),
+            ("mean_cohort".into(), Value::Num(self.mean_cohort)),
+            ("link_shards".into(), Value::Num(self.link_shards as f64)),
+        ])
+    }
+}
+
+/// Measure the sharded cohort engine under the mega-fleet scenario:
+/// events/sec, resident-bytes/device, and the allocation discipline of
+/// the O(cohort) hot loop (allocations bounded by new-client touches plus
+/// the per-event scratch budget).
+pub fn run_shard(cfg: &ShardBenchCfg) -> anyhow::Result<ShardBenchResult> {
+    let scenario = sim::scenario::from_spec(&cfg.scenario)?;
+    anyhow::ensure!(scenario.mega,
+                    "the scale bench wants a mega scenario, got `{}`",
+                    cfg.scenario);
+    let mut sim_cfg = sim::SimCfg::fig3(scenario);
+    sim_cfg.rows_per_worker = cfg.rows_per_worker;
+    sim_cfg.seed = cfg.seed;
+    let env = sim::runner::build_env(&sim_cfg);
+    let mut fsim = FleetSim::new(&sim_cfg, &env)?;
+    fsim.run_steps(0, cfg.warmup)?;
+    let counting = alloc_count::counting_enabled();
+    let ev0 = fsim.stats().events;
+    let touched0 = fsim.engine().touched_clients();
+    let before = alloc_count::allocations();
+    let t0 = Instant::now();
+    fsim.run_steps(cfg.warmup, cfg.steps)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let allocs = alloc_count::allocations() - before;
+    let events = (fsim.stats().events - ev0).max(1);
+    let touches = fsim.engine().touched_clients() - touched0;
+    if cfg.assert_alloc_bounded && counting {
+        let bound = touches as f64 * SHARD_ALLOCS_PER_TOUCH_BOUND
+            + events as f64 * SIM_ALLOCS_PER_EVENT_BOUND;
+        anyhow::ensure!(
+            (allocs as f64) <= bound,
+            "sharded engine allocated {allocs} times over {events} events / \
+             {touches} new touches (bound {bound:.0})");
+    }
+    let store = fsim.engine().store();
+    let fleet_size = store.len() as u64;
+    let touched = fsim.engine().touched_clients();
+    anyhow::ensure!(store.materialized_rows() <= touched,
+                    "occupancy exceeds touched clients");
+    Ok(ShardBenchResult {
+        cfg: cfg.clone(),
+        fleet_size,
+        events_per_sec: events as f64 / dt,
+        allocs_per_event: counting.then(|| allocs as f64 / events as f64),
+        allocs_per_touch: counting.then(|| allocs as f64 / touches.max(1) as f64),
+        touched_clients: touched as u64,
+        resident_rows: store.materialized_rows() as u64,
+        resident_bytes: store.resident_bytes() as u64,
+        resident_bytes_per_device: store.resident_bytes() as f64
+            / fleet_size.max(1) as f64,
+        mean_cohort: fsim.stats().mean_participants(),
+        link_shards: fsim.engine().net().n_shards() as u64,
+    })
+}
+
+/// Run the scale section and write `BENCH_shard.json`.
+pub fn run_and_write_shard(cfg: &ShardBenchCfg, out_path: &str)
+                           -> anyhow::Result<ShardBenchResult> {
+    let res = run_shard(cfg)?;
+    let mut text = res.to_json().to_string_pretty();
+    text.push('\n');
+    std::fs::write(out_path, text)
+        .map_err(|e| anyhow::anyhow!("write {out_path}: {e}"))?;
+    Ok(res)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -343,6 +505,33 @@ mod tests {
         assert!(s.get("events_per_sec").unwrap().as_f64().unwrap() > 0.0);
         let c = v.get("config").unwrap();
         assert_eq!(c.get("n_clients").unwrap().as_usize(), Some(5));
+    }
+
+    /// Scale section: the 10⁶-device sharded engine bench completes in
+    /// CI-test time, reports a sparse store, and its JSON roundtrips.
+    #[test]
+    fn shard_smoke_bench_runs_and_reports() {
+        let mut cfg = ShardBenchCfg::smoke();
+        cfg.steps = 30;
+        cfg.warmup = 10;
+        let res = run_shard(&cfg).unwrap();
+        assert_eq!(res.fleet_size, 1_000_000);
+        assert!(res.events_per_sec > 0.0);
+        assert!(res.touched_clients > 0);
+        assert!(res.resident_rows <= res.touched_clients);
+        // copy-on-write: a dense row would be 123·4 ≈ 492 B/device; the
+        // sparse store must sit far below one row per fleet device
+        assert!(res.resident_bytes_per_device < 50.0,
+                "resident {} B/device", res.resident_bytes_per_device);
+        // the counting allocator is not installed in the test binary
+        assert!(res.allocs_per_event.is_none());
+        let v = res.to_json();
+        assert_eq!(v.get("bench").unwrap().as_str(),
+                   Some("sharded_cohort_engine"));
+        let text = v.to_string_pretty();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert!(parsed.get("events_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(parsed.get("link_shards").unwrap().as_f64().unwrap() > 1.0);
     }
 
     #[test]

@@ -85,11 +85,15 @@ commands:
   compressors  measured Table I for every registered operator
   bench        round-engine throughput on the Fig-3 convex config: engine
                vs seed-semantics baseline, zero-alloc assertion, emits
-               BENCH_round.json   [--smoke] [--steps N] [--out file]
+               BENCH_round.json — plus the million-device sharded-engine
+               scale section (events/sec, resident-bytes/device, emits
+               BENCH_shard.json)   [--smoke] [--steps N] [--out file]
+               [--shard-out file]
   sim          discrete-event fleet simulation of the Fig-3 config under
                scenario presets (partial participation, churn, stragglers,
-               byte-accurate wire frames); `pfl sim --help` documents the
-               scenario grammar   [--scenarios a;b] [--smoke] [--out dir]
+               byte-accurate wire frames, million-device megafleet presets
+               on copy-on-write sharded state); `pfl sim --help` documents
+               the scenario grammar  [--scenarios a;b] [--smoke] [--out dir]
   models       list AOT models (needs `make artifacts`)
 ";
 
@@ -331,6 +335,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     cfg.steps = args.parse_or("steps", cfg.steps)?;
     cfg.seed = args.parse_or("seed", cfg.seed)?;
     let out = args.str_or("out", "BENCH_round.json");
+    let shard_out = args.str_or("shard-out", "BENCH_shard.json");
     eprintln!("round-engine bench: n={} d={} rows/worker={} ({} steps + {} warmup)",
               cfg.n_clients, cfg.dim, cfg.rows_per_worker, cfg.steps, cfg.warmup);
     let res = bench_round::run_and_write(&cfg, &out)?;
@@ -357,6 +362,30 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     }
     println!("final personal loss:       {:>10.4}", res.final_personal_loss);
     println!("wrote {out}");
+
+    // scale section: the sharded cohort engine at one million devices
+    let mut scfg = if args.flag("smoke") {
+        bench_round::ShardBenchCfg::smoke()
+    } else {
+        bench_round::ShardBenchCfg::megafleet()
+    };
+    scfg.seed = cfg.seed;
+    eprintln!("scale bench: {} ({} steps + {} warmup)",
+              scfg.scenario, scfg.steps, scfg.warmup);
+    let sres = bench_round::run_and_write_shard(&scfg, &shard_out)?;
+    println!("sharded engine:            {:>10.0} events/s  ({} devices)",
+             sres.events_per_sec, sres.fleet_size);
+    println!("touched clients:           {:>10}  (rows resident: {})",
+             sres.touched_clients, sres.resident_rows);
+    println!("resident bytes/device:     {:>10.2}  (dense row would be {} B)",
+             sres.resident_bytes_per_device, 4 * cfg.dim);
+    match sres.allocs_per_touch {
+        Some(a) => println!("allocations/new client:    {a:>10.2}  (bound {})",
+                            bench_round::SHARD_ALLOCS_PER_TOUCH_BOUND),
+        None => println!("allocations:               not measured (counting \
+                          allocator absent)"),
+    }
+    println!("wrote {shard_out}");
     Ok(())
 }
 
@@ -370,6 +399,11 @@ under a straggler deadline, and byte-accurate wire frames (header +
 byte-aligned payload) feeding the link accounting instead of theoretical
 bit formulas. Emits one loss-vs-simulated-seconds CSV per scenario plus a
 JSON summary.
+
+Mega scenarios (`megafleet`, `megafleet-churn`, or ≥65536 clients) run on
+the sharded cohort engine: lazy per-device profiles, O(cohort) sampling,
+and copy-on-write client state whose resident bytes scale with the
+clients actually touched — a million-device fleet fits in a laptop run.
 
   --scenarios <s;s;..>  scenario specs, `;`-separated (default: all presets)
   --scenario <spec>     single scenario (overrides --scenarios)
@@ -455,6 +489,13 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
                  last.bits_up as f64 / 8.0 / cfg.effective_clients() as f64,
                  last.bits_down as f64 / 8.0 / cfg.effective_clients() as f64,
                  last.personal_loss);
+        if cfg.scenario.mega {
+            println!("{:<18} fleet {}  touched {}  resident rows {}  \
+                      {:.2} B/device (copy-on-write)",
+                     "", res.fleet_size, res.touched_clients,
+                     res.resident_rows,
+                     res.resident_bytes as f64 / res.fleet_size.max(1) as f64);
+        }
         summaries.push(res.to_json());
     }
     anyhow::ensure!(!summaries.is_empty(), "no scenarios given");

@@ -5,16 +5,21 @@
 //! vector, so compressors, the aggregation step, and the HLO executables
 //! all share one representation with zero translation.
 //!
-//! Layout: the round engine keeps the n per-client models in one
+//! Layout: the lockstep round engine keeps the n per-client models in one
 //! contiguous [`ParamMatrix`] (row per client) and runs the 8-lane
-//! [`kernels`] over row views; the free functions below are thin wrappers
-//! kept for the nested-`Vec` call sites (tests, reference oracle,
-//! examples) and are bit-compatible with the kernel path.
+//! [`kernels`] over row views; at fleet scale the sharded cohort engine
+//! keeps only the *divergent* rows in a copy-on-write [`ShardedStore`]
+//! (resident memory ∝ touched clients, not fleet size). The free functions
+//! below are thin wrappers kept for the nested-`Vec` call sites (tests,
+//! reference oracle, examples) and are bit-compatible with the kernel
+//! path.
 
 pub mod kernels;
 pub mod matrix;
+pub mod sharded;
 
 pub use matrix::ParamMatrix;
+pub use sharded::ShardedStore;
 
 /// In-place `x ← x + a·y`.
 pub fn axpy(x: &mut [f32], a: f32, y: &[f32]) {

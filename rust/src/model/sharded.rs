@@ -1,0 +1,319 @@
+//! Sharded, copy-on-write client-state store — the million-device
+//! counterpart of [`super::ParamMatrix`].
+//!
+//! The dense matrix materializes every client's personalized model, so
+//! memory (and every sweep) scales with the *fleet* size. The paper's
+//! probabilistic protocol only ever touches a sampled cohort per event, so
+//! at fleet scale almost every device still equals the shared state it was
+//! initialized (or last fully reset) to. `ShardedStore` stores **only the
+//! divergent rows**:
+//!
+//! * Clients are partitioned into `S = ⌈n / shard_size⌉` contiguous
+//!   shards. Each shard owns a compact row arena plus an id → slot map for
+//!   its materialized clients.
+//! * A client with no materialized row implicitly equals the engine's
+//!   *base* vector (the shared init, or the last fleet-wide reset anchor —
+//!   the engine owns that vector and passes it in; the store never copies
+//!   it per client).
+//! * A row **materializes on the first divergent step** (local gradient
+//!   step, or an aggregation step with coefficient ≠ 1): the base is
+//!   copied in, then mutated in place. Until then the device costs zero
+//!   resident row bytes.
+//! * A fleet-wide reset (`clear`) releases every row at once — the
+//!   "fully reset by a broadcast it equals" transition where the engine
+//!   re-bases the implicit value onto the new anchor.
+//!
+//! Resident memory therefore scales with |ever-touched clients|, not the
+//! fleet size — asserted via [`ShardedStore::materialized_rows`] /
+//! [`ShardedStore::resident_bytes`] (occupancy, not RSS) in the
+//! integration suite and the `pfl bench` scale section.
+//!
+//! Shard boundaries are multiples of the aggregation tree's leaf size (the
+//! engine picks `shard_size` via [`ShardedStore::auto_shard_size`]), so
+//! every reduction leaf lives inside exactly one shard and the
+//! per-shard partial accumulation composes bit-exactly into the dense
+//! engine's flat leaf reduction.
+
+use std::collections::HashMap;
+
+/// One contiguous client-range shard: a compact arena of materialized rows.
+#[derive(Clone, Debug, Default)]
+struct Shard {
+    /// global client id per materialized row, in materialization order
+    ids: Vec<u32>,
+    /// client id → row slot in `rows`
+    slot_of: HashMap<u32, u32>,
+    /// row-major arena, `ids.len() × d`
+    rows: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ShardedStore {
+    n: usize,
+    d: usize,
+    shard_size: usize,
+    shards: Vec<Shard>,
+}
+
+impl ShardedStore {
+    pub fn new(n: usize, d: usize, shard_size: usize) -> ShardedStore {
+        assert!(shard_size > 0, "shard_size must be positive");
+        assert!(n > 0, "empty fleet");
+        let s = n.div_ceil(shard_size);
+        ShardedStore { n, d, shard_size, shards: vec![Shard::default(); s] }
+    }
+
+    /// Shard size for an `n`-client fleet with reduction leaves of `leaf`
+    /// clients: ~256 shards for large fleets, one shard for small ones,
+    /// always a multiple of `leaf` so no reduction leaf straddles a shard
+    /// boundary.
+    pub fn auto_shard_size(n: usize, leaf: usize) -> usize {
+        let leaf = leaf.max(1);
+        if n <= leaf * 256 {
+            return n.next_multiple_of(leaf);
+        }
+        n.div_ceil(256).next_multiple_of(leaf)
+    }
+
+    /// Fleet size (materialized or not).
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn shard_size(&self) -> usize {
+        self.shard_size
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard client `i` belongs to.
+    pub fn shard_of(&self, i: usize) -> usize {
+        debug_assert!(i < self.n);
+        i / self.shard_size
+    }
+
+    /// The materialized row of client `i`, if it has diverged from the
+    /// base (`None` ⇒ the client implicitly equals the base vector).
+    pub fn row(&self, i: usize) -> Option<&[f32]> {
+        let sh = &self.shards[self.shard_of(i)];
+        sh.slot_of.get(&(i as u32)).map(|&slot| {
+            let at = slot as usize * self.d;
+            &sh.rows[at..at + self.d]
+        })
+    }
+
+    /// Mutable access to an already-materialized row.
+    pub fn row_mut(&mut self, i: usize) -> Option<&mut [f32]> {
+        let d = self.d;
+        let s = self.shard_of(i);
+        let sh = &mut self.shards[s];
+        sh.slot_of.get(&(i as u32)).copied().map(move |slot| {
+            let at = slot as usize * d;
+            &mut sh.rows[at..at + d]
+        })
+    }
+
+    /// Copy-on-write materialization: return client `i`'s row, copying
+    /// `base` in first if the client had not diverged yet. The divergent
+    /// step's mutation happens in place on the returned slice.
+    pub fn materialize(&mut self, i: usize, base: &[f32]) -> &mut [f32] {
+        debug_assert_eq!(base.len(), self.d);
+        let d = self.d;
+        let s = self.shard_of(i);
+        let sh = &mut self.shards[s];
+        let slot = match sh.slot_of.get(&(i as u32)) {
+            Some(&slot) => slot as usize,
+            None => {
+                let slot = sh.ids.len();
+                sh.ids.push(i as u32);
+                sh.slot_of.insert(i as u32, slot as u32);
+                sh.rows.extend_from_slice(base);
+                slot
+            }
+        };
+        let at = slot * d;
+        &mut sh.rows[at..at + d]
+    }
+
+    /// Release one row (its client snaps back to the implicit base).
+    /// Swap-remove: the shard's last row fills the hole.
+    pub fn release(&mut self, i: usize) {
+        let d = self.d;
+        let s = self.shard_of(i);
+        let sh = &mut self.shards[s];
+        let Some(slot) = sh.slot_of.remove(&(i as u32)) else {
+            return;
+        };
+        let slot = slot as usize;
+        let last = sh.ids.len() - 1;
+        if slot != last {
+            let moved = sh.ids[last];
+            sh.ids[slot] = moved;
+            sh.slot_of.insert(moved, slot as u32);
+            let (head, tail) = sh.rows.split_at_mut(last * d);
+            head[slot * d..slot * d + d].copy_from_slice(&tail[..d]);
+        }
+        sh.ids.truncate(last);
+        sh.rows.truncate(last * d);
+    }
+
+    /// Fleet-wide reset: every client equals the (new) base again. Keeps
+    /// the arenas' capacity.
+    pub fn clear(&mut self) {
+        for sh in &mut self.shards {
+            sh.ids.clear();
+            sh.slot_of.clear();
+            sh.rows.clear();
+        }
+    }
+
+    /// Occupancy: number of materialized (divergent) rows.
+    pub fn materialized_rows(&self) -> usize {
+        self.shards.iter().map(|s| s.ids.len()).sum()
+    }
+
+    /// Materialized rows in shard `s`.
+    pub fn shard_rows(&self, s: usize) -> usize {
+        self.shards[s].ids.len()
+    }
+
+    /// Estimated resident client-state bytes: row arenas plus per-row
+    /// bookkeeping (ids + map entries), by capacity. This is the quantity
+    /// the scale tests bound against |touched clients| — deliberately the
+    /// store's own accounting, not process RSS.
+    pub fn resident_bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| {
+                s.rows.capacity() * std::mem::size_of::<f32>()
+                    + s.ids.capacity() * std::mem::size_of::<u32>()
+                    // HashMap entry ≈ key + value + control byte, over
+                    // capacity
+                    + s.slot_of.capacity() * (std::mem::size_of::<(u32, u32)>() + 1)
+            })
+            .sum()
+    }
+
+    /// Visit every materialized row (shards in order, rows in
+    /// materialization order — deterministic because materialization is).
+    pub fn for_each_row(&self, mut f: impl FnMut(usize, &[f32])) {
+        for sh in &self.shards {
+            for (j, &id) in sh.ids.iter().enumerate() {
+                let at = j * self.d;
+                f(id as usize, &sh.rows[at..at + self.d]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_shard_size_is_leaf_aligned() {
+        for n in [1, 5, 8, 9, 4096, 100_000, 1_000_000] {
+            let s = ShardedStore::auto_shard_size(n, 8);
+            assert_eq!(s % 8, 0, "n={n} shard_size={s}");
+            assert!(s > 0);
+            let store = ShardedStore::new(n, 4, s);
+            assert!(store.n_shards() >= 1);
+            assert!(store.n_shards() <= 260, "n={n}: {} shards", store.n_shards());
+        }
+        // small fleets collapse to one shard
+        assert_eq!(ShardedStore::new(5, 4, ShardedStore::auto_shard_size(5, 8))
+                       .n_shards(),
+                   1);
+    }
+
+    #[test]
+    fn materialize_copies_base_then_diverges() {
+        let mut st = ShardedStore::new(10, 3, 8);
+        let base = [1.0f32, 2.0, 3.0];
+        assert!(st.row(4).is_none());
+        assert_eq!(st.materialized_rows(), 0);
+        {
+            let r = st.materialize(4, &base);
+            assert_eq!(r, &base);
+            r[0] = -9.0;
+        }
+        assert_eq!(st.row(4).unwrap(), &[-9.0, 2.0, 3.0]);
+        assert_eq!(st.materialized_rows(), 1);
+        // re-materialize returns the existing (divergent) row, not base
+        assert_eq!(st.materialize(4, &base), &[-9.0, 2.0, 3.0]);
+        assert_eq!(st.materialized_rows(), 1);
+        // untouched neighbours stay implicit
+        assert!(st.row(3).is_none());
+        assert!(st.row_mut(3).is_none());
+    }
+
+    #[test]
+    fn release_swap_removes_and_clear_resets() {
+        let mut st = ShardedStore::new(20, 2, 8);
+        let base = [0.0f32, 0.0];
+        for i in [1usize, 2, 3] {
+            let r = st.materialize(i, &base);
+            r[0] = i as f32;
+        }
+        assert_eq!(st.materialized_rows(), 3);
+        st.release(1); // row 3 swaps into row 1's slot
+        assert!(st.row(1).is_none());
+        assert_eq!(st.row(2).unwrap()[0], 2.0);
+        assert_eq!(st.row(3).unwrap()[0], 3.0);
+        assert_eq!(st.materialized_rows(), 2);
+        st.release(1); // double release is a no-op
+        assert_eq!(st.materialized_rows(), 2);
+        st.clear();
+        assert_eq!(st.materialized_rows(), 0);
+        assert!(st.row(2).is_none());
+        assert!(st.row(3).is_none());
+    }
+
+    #[test]
+    fn rows_land_in_their_shard() {
+        let mut st = ShardedStore::new(32, 1, 8);
+        assert_eq!(st.n_shards(), 4);
+        assert_eq!(st.shard_of(7), 0);
+        assert_eq!(st.shard_of(8), 1);
+        assert_eq!(st.shard_of(31), 3);
+        st.materialize(9, &[1.0]);
+        st.materialize(30, &[2.0]);
+        assert_eq!(st.shard_rows(0), 0);
+        assert_eq!(st.shard_rows(1), 1);
+        assert_eq!(st.shard_rows(3), 1);
+        let mut seen = Vec::new();
+        st.for_each_row(|id, row| seen.push((id, row[0])));
+        assert_eq!(seen, vec![(9, 1.0), (30, 2.0)]);
+    }
+
+    #[test]
+    fn resident_bytes_track_occupancy_not_fleet() {
+        let d = 64;
+        let mut st = ShardedStore::new(1_000_000, d,
+                                       ShardedStore::auto_shard_size(1_000_000, 8));
+        let base = vec![0.5f32; d];
+        let empty = st.resident_bytes();
+        // an untouched million-device store costs (near) nothing
+        assert!(empty < 64 * 1024, "empty store resident {empty} B");
+        for i in (0..1000).map(|k| k * 997) {
+            st.materialize(i, &base);
+        }
+        let occupied = st.resident_bytes();
+        assert_eq!(st.materialized_rows(), 1000);
+        // proportional to touched rows (×4 slack for Vec/HashMap growth
+        // doubling), never to the 10⁶ fleet
+        let per_row = d * 4 + 32;
+        assert!(occupied <= empty + 4 * 1000 * per_row,
+                "resident {occupied} B for 1000 rows");
+    }
+}

@@ -2,12 +2,16 @@
 //! from configurable distributions, plus deterministic seeded
 //! availability (churn) traces.
 //!
-//! A [`Fleet`] is sampled once per run from a [`FleetSpec`] — every device
-//! gets its own forked RNG stream, so profiles are stable under reordering
-//! and independent of how many draws another device consumed. Availability
-//! is a pure function of `(churn seed, device, time)` via splitmix64
-//! hashing: the trace needs no storage, replays bit-exactly, and can be
-//! queried at any time point in any order.
+//! Device i's profile is a pure function of `(fleet seed, i)`: each device
+//! draws from its own random-access stream ([`Rng::stream`]), so profiles
+//! are stable under reordering, independent of how many draws another
+//! device consumed, prefix-stable in the fleet size, and — crucially for
+//! million-device fleets — derivable **lazily on first touch** at O(1)
+//! ([`FleetSpec::device`]) without materializing the fleet. Small fleets
+//! still materialize a [`Fleet`] once per run for cheap repeated access.
+//! Availability is a pure function of `(churn seed, device, time)` via
+//! splitmix64 hashing: the trace needs no storage, replays bit-exactly,
+//! and can be queried at any time point in any order.
 
 use crate::util::rng::splitmix64;
 use crate::util::Rng;
@@ -39,10 +43,24 @@ impl Dist {
             }
         }
     }
+
+    /// Analytic expectation — the lazy mega-fleet path uses this for idle
+    /// pacing instead of an O(n) empirical mean over a million profiles.
+    /// (Ignores the profile clamps, which only bite on degenerate specs.)
+    pub fn mean(&self) -> f64 {
+        match *self {
+            Dist::Fixed(v) => v,
+            Dist::Uniform { lo, hi } => 0.5 * (lo + hi),
+            Dist::LogNormal { mu, sigma } => (mu + 0.5 * sigma * sigma).exp(),
+            Dist::Bimodal { p_slow, fast, slow } => {
+                p_slow * slow + (1.0 - p_slow) * fast
+            }
+        }
+    }
 }
 
 /// One device's static characteristics.
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 pub struct DeviceProfile {
     /// seconds of local compute per protocol iteration
     pub step_time_s: f64,
@@ -63,27 +81,40 @@ pub struct FleetSpec {
     pub latency: Dist,
 }
 
+impl FleetSpec {
+    /// Device `i`'s profile — a pure O(1) function of `(seed, i)`, the
+    /// contract that lets the mega-fleet simulator look profiles up
+    /// lazily per cohort member instead of materializing the fleet.
+    /// [`Fleet::build`] draws through this, so lazy and materialized
+    /// fleets are bit-identical device for device (prefix-stable in n by
+    /// construction — pinned by the statistical suite).
+    pub fn device(&self, seed: u64, i: u64) -> DeviceProfile {
+        let mut rng = Rng::stream(seed, i + 1);
+        DeviceProfile {
+            step_time_s: self.step_time.sample(&mut rng).max(1e-6),
+            up_bps: self.up_bw.sample(&mut rng).max(1.0),
+            down_bps: self.down_bw.sample(&mut rng).max(1.0),
+            latency_s: self.latency.sample(&mut rng).max(0.0),
+        }
+    }
+
+    /// Analytic mean per-iteration compute time (lazy-fleet idle pacing).
+    pub fn mean_step_time(&self) -> f64 {
+        self.step_time.mean().max(1e-6)
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct Fleet {
     pub devices: Vec<DeviceProfile>,
 }
 
 impl Fleet {
-    /// Sample `n` device profiles (device i draws from its own forked
-    /// stream — stable under fleet-size changes for the shared prefix).
+    /// Materialize `n` device profiles (device i drawn from its own
+    /// random-access stream — stable under fleet-size changes for the
+    /// shared prefix, and identical to lazy [`FleetSpec::device`] draws).
     pub fn build(spec: &FleetSpec, n: usize, seed: u64) -> Fleet {
-        let mut root = Rng::new(seed);
-        let devices = (0..n)
-            .map(|i| {
-                let mut rng = root.fork(i as u64 + 1);
-                DeviceProfile {
-                    step_time_s: spec.step_time.sample(&mut rng).max(1e-6),
-                    up_bps: spec.up_bw.sample(&mut rng).max(1.0),
-                    down_bps: spec.down_bw.sample(&mut rng).max(1.0),
-                    latency_s: spec.latency.sample(&mut rng).max(0.0),
-                }
-            })
-            .collect();
+        let devices = (0..n).map(|i| spec.device(seed, i as u64)).collect();
         Fleet { devices }
     }
 
@@ -216,6 +247,41 @@ mod tests {
         }
         assert!(a.devices.iter().any(|d| d.step_time_s
                                      != a.devices[0].step_time_s));
+    }
+
+    #[test]
+    fn lazy_profiles_match_built_fleet_bitwise() {
+        let spec = FleetSpec {
+            step_time: Dist::Bimodal { p_slow: 0.3, fast: 0.005, slow: 0.08 },
+            up_bw: Dist::LogNormal { mu: (5e6f64).ln(), sigma: 0.8 },
+            down_bw: Dist::Uniform { lo: 1e7, hi: 5e7 },
+            latency: Dist::Fixed(0.02),
+        };
+        let fleet = Fleet::build(&spec, 64, 7);
+        for i in [0usize, 1, 13, 63] {
+            let lazy = spec.device(7, i as u64);
+            assert_eq!(lazy.step_time_s, fleet.devices[i].step_time_s, "dev {i}");
+            assert_eq!(lazy.up_bps, fleet.devices[i].up_bps, "dev {i}");
+            assert_eq!(lazy.down_bps, fleet.devices[i].down_bps, "dev {i}");
+            assert_eq!(lazy.latency_s, fleet.devices[i].latency_s, "dev {i}");
+        }
+        // O(1) random access far beyond any materialized prefix
+        let far = spec.device(7, 999_999_999);
+        assert!(far.step_time_s > 0.0 && far.up_bps >= 1.0);
+    }
+
+    #[test]
+    fn dist_means_are_analytic() {
+        assert_eq!(Dist::Fixed(3.0).mean(), 3.0);
+        assert_eq!(Dist::Uniform { lo: 2.0, hi: 6.0 }.mean(), 4.0);
+        let b = Dist::Bimodal { p_slow: 0.25, fast: 1.0, slow: 9.0 };
+        assert!((b.mean() - 3.0).abs() < 1e-12);
+        // log-normal mean e^{μ+σ²/2} against an empirical check
+        let ln = Dist::LogNormal { mu: 0.0, sigma: 0.5 };
+        let mut rng = Rng::new(11);
+        let emp: f64 = (0..40_000).map(|_| ln.sample(&mut rng)).sum::<f64>() / 40_000.0;
+        assert!((ln.mean() - emp).abs() < 0.05 * ln.mean(),
+                "analytic {} vs empirical {emp}", ln.mean());
     }
 
     #[test]

@@ -10,18 +10,23 @@
 //! * [`queue`] — deterministic timestamped event queue (binary heap, FIFO
 //!   ties).
 //! * [`fleet`] — device profiles drawn from configurable distributions
-//!   (uniform / log-normal / bimodal "phone vs laptop") and seeded
+//!   (uniform / log-normal / bimodal "phone vs laptop") via O(1)
+//!   random-access streams (lazy at mega-fleet sizes) and seeded
 //!   availability traces (windowed dropout, diurnal cycles).
 //! * [`scenario`] — presets (`uniform`, `lognormal-wan`, `diurnal-churn`,
-//!   `straggler-heavy`) behind a `name[:key=val,...]` spec grammar.
-//! * [`runner`] — drives the participation-aware
-//!   [`crate::algorithms::l2gd::L2gdEngine`] entry points: cohort
-//!   selection per communication event, first-k-of-m quorum under a
-//!   straggler deadline, and a fleet clock advanced by the event queue.
+//!   `straggler-heavy`, `megafleet`, `megafleet-churn`) behind a
+//!   `name[:key=val,...]` spec grammar.
+//! * [`runner`] — drives the sharded cohort engine
+//!   ([`crate::algorithms::ShardedL2gdEngine`], copy-on-write client
+//!   state): cohort selection per event in O(cohort) — lazy id-space
+//!   sampling at mega-fleet sizes — first-k-of-m quorum under a straggler
+//!   deadline, and a fleet clock advanced by the event queue.
 //!
 //! `pfl sim` is the CLI front end; with the `uniform` preset the simulated
-//! series is bit-identical to the lockstep engine (the equivalence is
-//! pinned by `rust/tests/integration_sim.rs`).
+//! series is bit-identical to the dense lockstep engine (the equivalence
+//! is pinned by `rust/tests/integration_sim.rs`), and the `megafleet`
+//! presets run a million devices with resident state proportional to the
+//! clients actually touched.
 
 pub mod fleet;
 pub mod queue;
@@ -30,5 +35,5 @@ pub mod scenario;
 
 pub use fleet::{Churn, DeviceProfile, Dist, Fleet, FleetSpec};
 pub use queue::EventQueue;
-pub use runner::{FleetSim, SimCfg, SimResult, SimStats};
+pub use runner::{sample_device_ids, FleetSim, SimCfg, SimResult, SimStats};
 pub use scenario::Scenario;

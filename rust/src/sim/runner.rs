@@ -1,10 +1,11 @@
-//! The fleet simulator: drives the [`L2gdEngine`] over a modeled device
-//! fleet with partial participation, churn, straggler deadlines, and
-//! byte-accurate wire framing.
+//! The fleet simulator: drives the sharded cohort engine
+//! ([`ShardedL2gdEngine`]) over a modeled device fleet with partial
+//! participation, churn, straggler deadlines, and byte-accurate wire
+//! framing — at up to million-device fleet sizes.
 //!
 //! ### Time model
 //! Protocol iterations are synchronous (the paper's Algorithm 1): a local
-//! or cached-aggregation step advances the clock by the slowest *active*
+//! or cached-aggregation step advances the clock by the slowest *cohort*
 //! device's compute time. A fresh aggregation opens a communication round:
 //! every sampled device's upload-arrival event (`compute + latency +
 //! framed-bytes / uplink-bandwidth`) is pushed into the discrete-event
@@ -15,31 +16,48 @@
 //! though their uplink frames are still metered as transmitted-but-
 //! discarded traffic (the bytes crossed the network either way).
 //!
+//! ### Cohorts, not fleets
+//! Every event touches a *cohort*, never the fleet: availability checks,
+//! profile lookups, arrival scheduling, the engine sweeps — all O(cohort).
+//! Small scenarios enumerate the available set and sample a fraction of
+//! it (the original semantics); **mega** scenarios
+//! ([`super::scenario::Scenario::mega`]) instead draw cohort ids directly
+//! from device-id space in O(cohort) ([`sample_device_ids`]), filter them
+//! by the churn hash, and look device profiles up lazily
+//! ([`FleetSpec::device`]) — a million-device fleet is never materialized.
+//! Client model state lives in the engine's copy-on-write sharded store,
+//! so resident bytes scale with |ever-touched clients| (bounded for mega
+//! runs by [`resident_bound_bytes`], enforced at the end of every mega
+//! `run`).
+//!
 //! ### Anchor possession
 //! Only the cohort of a committed fresh round receives (and pays the
 //! downlink for) the new anchor C_M(ȳ). The simulator tracks who holds
-//! the *current* anchor: on later cached-aggregation steps, devices that
-//! missed the latest broadcast skip the aggregation instead of silently
-//! using bytes they never downloaded. (Everyone starts with the shared
-//! init anchor — Algorithm 1's ξ₋₁ = 1 convention.)
+//! the *current* anchor (a sorted holder list, `None` = everyone at init —
+//! Algorithm 1's ξ₋₁ = 1 convention): on later cached-aggregation steps,
+//! devices that missed the latest broadcast skip the aggregation instead
+//! of silently using bytes they never downloaded.
 //!
 //! ### Determinism
 //! Fleet profiles, churn traces, cohort sampling, and every engine stream
 //! fork deterministically from the run seed, so a scenario replays
 //! bit-exactly. With the `uniform` preset (always on, full cohort, no
-//! deadline) the executed update sequence is *identical* to the lockstep
-//! engine's, so the loss series matches it bit for bit — only the wire
-//! accounting differs (serialized frames instead of theoretical bits).
+//! deadline) the executed update sequence is *identical* to the dense
+//! lockstep engine's, so the loss series matches it bit for bit — only
+//! the wire accounting differs (serialized frames instead of theoretical
+//! bits).
 
-use crate::algorithms::l2gd::L2gdEngine;
-use crate::algorithms::{FedEnv, L2gd};
+use std::cmp::Ordering;
+use std::collections::HashSet;
+
+use crate::algorithms::{FedEnv, L2gd, ShardedL2gdEngine};
 use crate::experiments::fig3;
 use crate::metrics::{Record, Series};
 use crate::protocol::StepKind;
 use crate::util::json::Value;
 use crate::util::Rng;
 
-use super::fleet::{Churn, Fleet};
+use super::fleet::{Churn, DeviceProfile, Fleet, FleetSpec};
 use super::queue::EventQueue;
 use super::scenario::Scenario;
 
@@ -51,7 +69,9 @@ pub struct SimCfg {
     pub steps: u64,
     pub eval_every: u64,
     pub seed: u64,
-    /// fleet size when the scenario does not pin one (`clients=0`)
+    /// fleet size when the scenario does not pin one (`clients=0`); for
+    /// mega scenarios this is instead the number of *data shards* the
+    /// fleet maps onto (device i trains on shard i mod data shards)
     pub n_clients: usize,
     pub rows_per_worker: usize,
     pub p: f64,
@@ -93,19 +113,57 @@ impl SimCfg {
             self.n_clients
         }
     }
+
+    /// Data shards the environment carries: the fleet size for ordinary
+    /// scenarios (identity device → shard mapping), the run default for
+    /// mega scenarios (a million devices share a few heterogeneous
+    /// shards via i mod shards).
+    pub fn data_clients(&self) -> usize {
+        if self.scenario.mega {
+            self.n_clients
+        } else {
+            self.effective_clients()
+        }
+    }
 }
 
-/// The Fig-3 heterogeneous convex environment at the configured fleet
-/// size — built by `fig3::build_env` so the simulator can never drift
-/// from the configuration the paper figures use.
+/// The Fig-3 heterogeneous convex environment at the configured
+/// *data-shard* count — built by `fig3::build_env` so the simulator can
+/// never drift from the configuration the paper figures use.
 pub fn build_env(cfg: &SimCfg) -> FedEnv {
     fig3::build_env(&fig3::Fig3Cfg {
         rows_per_worker: cfg.rows_per_worker,
-        n_clients: cfg.effective_clients(),
+        n_clients: cfg.data_clients(),
         eta: cfg.eta,
         seed: cfg.seed,
         ..fig3::Fig3Cfg::a1a()
     })
+}
+
+/// Documented resident-bytes ceiling for a mega run that has touched
+/// `touched` clients at dimension `d`: one f32 row plus bookkeeping per
+/// touched client, with 4× slack for Vec/HashMap growth doubling, plus a
+/// fixed 64 KiB floor. Mega `run`s fail if the store exceeds this — the
+/// bound the `scale-smoke` CI job enforces.
+pub fn resident_bound_bytes(d: usize, touched: usize) -> u64 {
+    (4 * (4 * d + 64) * touched + 64 * 1024) as u64
+}
+
+/// Draw `m` distinct device ids uniformly from `[0, n)` in O(m) expected
+/// time — the mega-fleet cohort sampler (rejection via the reusable
+/// `seen` set; with m ≪ n collisions are rare). Ids land in `out` in draw
+/// order; callers sort when they need index order.
+pub fn sample_device_ids(rng: &mut Rng, n: usize, m: usize,
+                         seen: &mut HashSet<u32>, out: &mut Vec<u32>) {
+    assert!(m <= n, "cannot draw {m} distinct ids from a fleet of {n}");
+    seen.clear();
+    out.clear();
+    while out.len() < m {
+        let i = rng.usize_below(n) as u32;
+        if seen.insert(i) {
+            out.push(i);
+        }
+    }
 }
 
 /// Counters accumulated over a simulated run.
@@ -127,67 +185,119 @@ pub struct SimStats {
 }
 
 impl SimStats {
+    /// Mean committed-round cohort size — **well-defined (0.0, never NaN)
+    /// for zero-communication runs** (e.g. a deadline so tight every
+    /// round aborts), so summary JSON stays parseable.
     pub fn mean_participants(&self) -> f64 {
-        self.total_participants as f64 / self.comm_events.max(1) as f64
+        if self.comm_events == 0 {
+            return 0.0;
+        }
+        self.total_participants as f64 / self.comm_events as f64
+    }
+}
+
+/// Device profiles: materialized for small fleets, lazy O(1) lookups for
+/// mega fleets (bit-identical draws either way — `Fleet::build` goes
+/// through `FleetSpec::device`).
+enum FleetHandle {
+    Dense(Fleet),
+    Lazy { spec: FleetSpec, seed: u64, n: usize },
+}
+
+impl FleetHandle {
+    fn len(&self) -> usize {
+        match self {
+            FleetHandle::Dense(f) => f.len(),
+            FleetHandle::Lazy { n, .. } => *n,
+        }
+    }
+
+    fn profile(&self, i: usize) -> DeviceProfile {
+        match self {
+            FleetHandle::Dense(f) => f.devices[i],
+            FleetHandle::Lazy { spec, seed, .. } => spec.device(*seed, i as u64),
+        }
+    }
+
+    fn mean_step_time(&self) -> f64 {
+        match self {
+            FleetHandle::Dense(f) => f.mean_step_time(),
+            FleetHandle::Lazy { spec, .. } => spec.mean_step_time(),
+        }
     }
 }
 
 /// A stepping fleet simulation over a borrowed environment.
 pub struct FleetSim<'e> {
-    eng: L2gdEngine<'e>,
-    fleet: Fleet,
+    eng: ShardedL2gdEngine<'e>,
+    fleet: FleetHandle,
     churn: Churn,
     churn_seed: u64,
+    mega: bool,
     sample_frac: f64,
     quorum_frac: f64,
     deadline_s: f64,
     sampler: Rng,
     clock: f64,
+    mean_step_s: f64,
     stats: SimStats,
-    /// devices holding the current anchor (see the module docs)
-    has_anchor: Vec<bool>,
+    /// sorted clients holding the current anchor; `None` = everyone (the
+    /// identical inits double as the shared ξ₋₁ = 1 anchor)
+    anchor_holders: Option<Vec<u32>>,
     // reusable per-step scratch (the hot loop is allocation-bounded)
-    active: Vec<bool>,
-    sampled: Vec<bool>,
-    arrived: Vec<bool>,
-    agg_mask: Vec<bool>,
-    avail: Vec<usize>,
+    cohort: Vec<u32>,
+    agg_cohort: Vec<u32>,
+    arrived: Vec<u32>,
+    avail: Vec<u32>,
     pick: Vec<usize>,
-    queue: EventQueue<usize>,
+    seen: HashSet<u32>,
+    queue: EventQueue<u32>,
 }
 
 impl<'e> FleetSim<'e> {
     pub fn new(cfg: &SimCfg, env: &'e FedEnv) -> anyhow::Result<FleetSim<'e>> {
-        let n = env.n_clients();
-        anyhow::ensure!(n == cfg.effective_clients(),
-                        "environment has {n} clients, config wants {}",
-                        cfg.effective_clients());
-        let mut alg = L2gd::new(cfg.p, cfg.lambda, cfg.eta, n,
+        let data_n = env.n_clients();
+        anyhow::ensure!(data_n == cfg.data_clients(),
+                        "environment has {data_n} data shards, config wants {}",
+                        cfg.data_clients());
+        let fleet_n = cfg.effective_clients();
+        let mut alg = L2gd::new(cfg.p, cfg.lambda, cfg.eta, fleet_n,
                                 &cfg.client_comp, &cfg.master_comp)?;
-        fig3::clamp_agg_stability(&mut alg, n);
-        let mut eng = alg.engine(env)?;
+        fig3::clamp_agg_stability(&mut alg, fleet_n);
+        let mut eng = ShardedL2gdEngine::new(&alg, env, fleet_n)?;
         eng.enable_wire_framing();
-        let fleet = Fleet::build(&cfg.scenario.fleet, n, cfg.seed ^ 0xF1EE7);
+        let fleet_seed = cfg.seed ^ 0xF1EE7;
+        let fleet = if cfg.scenario.mega {
+            FleetHandle::Lazy {
+                spec: cfg.scenario.fleet.clone(),
+                seed: fleet_seed,
+                n: fleet_n,
+            }
+        } else {
+            FleetHandle::Dense(Fleet::build(&cfg.scenario.fleet, fleet_n, fleet_seed))
+        };
+        let mean_step_s = fleet.mean_step_time();
         Ok(FleetSim {
             eng,
             fleet,
             churn: cfg.scenario.churn.clone(),
             churn_seed: cfg.seed ^ 0xC4A9,
+            mega: cfg.scenario.mega,
             sample_frac: cfg.scenario.sample_frac,
             quorum_frac: cfg.scenario.quorum_frac,
             deadline_s: cfg.scenario.deadline_s,
             sampler: Rng::new(cfg.seed ^ 0x5A3E),
             clock: 0.0,
+            mean_step_s,
             stats: SimStats::default(),
-            // the identical inits double as the shared ξ₋₁ = 1 anchor
-            has_anchor: vec![true; n],
-            active: vec![false; n],
-            sampled: vec![false; n],
-            arrived: vec![false; n],
-            agg_mask: vec![false; n],
-            avail: Vec::with_capacity(n),
-            pick: Vec::with_capacity(n),
-            queue: EventQueue::with_capacity(n),
+            anchor_holders: None,
+            cohort: Vec::new(),
+            agg_cohort: Vec::new(),
+            arrived: Vec::new(),
+            avail: Vec::new(),
+            pick: Vec::new(),
+            seen: HashSet::new(),
+            queue: EventQueue::new(),
         })
     }
 
@@ -199,44 +309,36 @@ impl<'e> FleetSim<'e> {
         &self.stats
     }
 
-    pub fn engine(&self) -> &L2gdEngine<'e> {
+    pub fn engine(&self) -> &ShardedL2gdEngine<'e> {
         &self.eng
     }
 
     /// Advance one protocol iteration at the current simulated time.
     pub fn step(&mut self, k: u64) -> anyhow::Result<()> {
-        let (churn, seed, clock) = (&self.churn, self.churn_seed, self.clock);
-        for (i, a) in self.active.iter_mut().enumerate() {
-            *a = churn.available(seed, i, clock);
-        }
         self.stats.events += 1;
-        match self.eng.draw() {
-            StepKind::Local => match self.fleet.max_step_time(&self.active) {
-                Some(dt) => {
-                    self.eng.step_local(&self.active)?;
-                    self.clock += dt;
+        let kind = self.eng.draw();
+        self.select_cohort();
+        if self.cohort.is_empty() {
+            if matches!(kind, StepKind::AggregateFresh) {
+                self.stats.skipped_rounds += 1;
+            }
+            self.idle_tick();
+            return Ok(());
+        }
+        match kind {
+            StepKind::Local => {
+                self.eng.step_local(&self.cohort)?;
+                self.clock += self.max_cohort_step_time();
+            }
+            StepKind::AggregateCached => {
+                // only devices holding the current anchor can aggregate
+                // toward it; the rest idle through the iteration
+                self.intersect_anchor_holders();
+                if !self.agg_cohort.is_empty() {
+                    self.eng.step_aggregate_cached(&self.agg_cohort);
                 }
-                None => self.idle_tick(),
-            },
-            StepKind::AggregateCached => match self.fleet.max_step_time(&self.active) {
-                Some(dt) => {
-                    // only devices holding the current anchor can aggregate
-                    // toward it; the rest idle through the iteration
-                    let mut any = false;
-                    for ((m, &a), &h) in self.agg_mask.iter_mut()
-                        .zip(&self.active)
-                        .zip(&self.has_anchor)
-                    {
-                        *m = a && h;
-                        any |= *m;
-                    }
-                    if any {
-                        self.eng.step_aggregate_cached(&self.agg_mask);
-                    }
-                    self.clock += dt;
-                }
-                None => self.idle_tick(),
-            },
+                self.clock += self.max_cohort_step_time();
+            }
             StepKind::AggregateFresh => self.fresh_round(k)?,
         }
         Ok(())
@@ -250,57 +352,114 @@ impl<'e> FleetSim<'e> {
     }
 
     /// Evaluate into a `Record`, with the fleet clock as the sim-time
-    /// column (replacing the engine's homogeneous TimeModel projection).
+    /// column (replacing the engine's transport-model projection).
     pub fn evaluate(&self, step: u64) -> anyhow::Result<Record> {
         let mut rec = self.eng.evaluate(step)?;
         rec.sim_time_s = self.clock;
         Ok(rec)
     }
 
+    /// The event's cohort: available devices (small fleets: sampled from
+    /// the enumerated available set; mega fleets: drawn from id space in
+    /// O(cohort) and churn-filtered), sorted ascending.
+    fn select_cohort(&mut self) {
+        let n = self.fleet.len();
+        let (churn, seed, clock) = (&self.churn, self.churn_seed, self.clock);
+        self.cohort.clear();
+        if !self.mega {
+            self.avail.clear();
+            for i in 0..n as u32 {
+                if churn.available(seed, i as usize, clock) {
+                    self.avail.push(i);
+                }
+            }
+            if self.avail.is_empty() {
+                return;
+            }
+            if self.sample_frac >= 1.0 {
+                self.cohort.extend_from_slice(&self.avail);
+                return;
+            }
+            let m = ((self.sample_frac * self.avail.len() as f64).ceil() as usize)
+                .clamp(1, self.avail.len());
+            self.sampler.sample_indices_into(self.avail.len(), m, &mut self.pick);
+            for &j in &self.pick {
+                self.cohort.push(self.avail[j]);
+            }
+            self.cohort.sort_unstable();
+            return;
+        }
+        let m = ((self.sample_frac * n as f64).ceil() as usize).clamp(1, n);
+        if m >= n {
+            // full-fleet cohort (a mega-promoted scenario with sample=1):
+            // enumerate directly instead of coupon-collecting n from n
+            self.cohort.extend(0..n as u32);
+        } else {
+            sample_device_ids(&mut self.sampler, n, m,
+                              &mut self.seen, &mut self.cohort);
+            self.cohort.sort_unstable();
+        }
+        self.cohort
+            .retain(|&i| churn.available(seed, i as usize, clock));
+    }
+
+    /// Slowest per-iteration compute time in the current cohort.
+    fn max_cohort_step_time(&self) -> f64 {
+        let mut t = 0.0f64;
+        for &i in &self.cohort {
+            t = t.max(self.fleet.profile(i as usize).step_time_s);
+        }
+        t
+    }
+
+    /// `agg_cohort ← cohort ∩ anchor_holders` (both sorted).
+    fn intersect_anchor_holders(&mut self) {
+        self.agg_cohort.clear();
+        let cohort = &self.cohort;
+        match &self.anchor_holders {
+            None => self.agg_cohort.extend_from_slice(cohort),
+            Some(h) => {
+                let (mut a, mut b) = (0usize, 0usize);
+                while a < cohort.len() && b < h.len() {
+                    match cohort[a].cmp(&h[b]) {
+                        Ordering::Less => a += 1,
+                        Ordering::Greater => b += 1,
+                        Ordering::Equal => {
+                            self.agg_cohort.push(cohort[a]);
+                            a += 1;
+                            b += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
     /// Nobody is online: the iteration is a fleet-wide no-op, but the
     /// clock still moves.
     fn idle_tick(&mut self) {
         self.stats.idle_steps += 1;
-        self.clock += self.fleet.mean_step_time();
+        self.clock += self.mean_step_s;
     }
 
-    /// A fresh-aggregation round: sample a cohort from the available
-    /// devices, schedule their upload arrivals through the event queue,
-    /// close at quorum or deadline, and commit the round over whoever made
-    /// it.
+    /// A fresh-aggregation round over the already-selected cohort:
+    /// schedule upload arrivals through the event queue, close at quorum
+    /// or deadline, and commit the round over whoever made it.
     fn fresh_round(&mut self, k: u64) -> anyhow::Result<()> {
-        let n = self.fleet.len();
-        self.avail.clear();
-        self.avail.extend((0..n).filter(|&i| self.active[i]));
-        if self.avail.is_empty() {
-            self.stats.skipped_rounds += 1;
-            self.idle_tick();
-            return Ok(());
-        }
-        // over-selection: sample m available devices, wait for the first
-        // quorum of them
-        let m = ((self.sample_frac * self.avail.len() as f64).ceil() as usize)
-            .clamp(1, self.avail.len());
-        self.sampler.sample_indices_into(self.avail.len(), m, &mut self.pick);
-        self.sampled.fill(false);
-        for &j in &self.pick {
-            self.sampled[self.avail[j]] = true;
-        }
-        self.eng.compress_uplinks(&self.sampled)?;
+        self.eng.compress_uplinks(&self.cohort)?;
         // schedule arrivals: compute + latency + serialized frame transfer
         self.queue.clear();
-        for &j in &self.pick {
-            let i = self.avail[j];
-            let dev = &self.fleet.devices[i];
-            let bits = self.eng.uplink_frame_bytes(i) as f64 * 8.0;
+        for &i in &self.cohort {
+            let dev = self.fleet.profile(i as usize);
+            let bits = self.eng.uplink_frame_bytes(i as usize) as f64 * 8.0;
             let t = self.clock + dev.step_time_s + dev.latency_s + bits / dev.up_bps;
             self.queue.push(t, i);
             self.stats.events += 1;
         }
+        let m = self.cohort.len();
         let quorum = ((self.quorum_frac * m as f64).ceil() as usize).clamp(1, m);
         let deadline = self.clock + self.deadline_s;
-        self.arrived.fill(false);
-        let mut arrived_n = 0usize;
+        self.arrived.clear();
         let mut round_end = self.clock;
         while let Some((t, i)) = self.queue.pop() {
             self.stats.events += 1;
@@ -310,36 +469,41 @@ impl<'e> FleetSim<'e> {
                 round_end = deadline;
                 break;
             }
-            self.arrived[i] = true;
-            arrived_n += 1;
+            self.arrived.push(i);
             round_end = t;
-            if arrived_n >= quorum {
+            if self.arrived.len() >= quorum {
                 self.stats.dropped_stragglers += self.queue.len() as u64;
                 break;
             }
         }
-        if arrived_n == 0 {
+        if self.arrived.is_empty() {
             // everyone blew the deadline: the anchor does not move, but
             // the cohort's frames were transmitted — meter them as
             // discarded traffic
-            self.eng.abort_fresh(k, &self.sampled)?;
+            self.eng.abort_fresh(k, &self.cohort)?;
             self.stats.skipped_rounds += 1;
-            self.clock = round_end.max(self.clock + self.fleet.mean_step_time());
+            self.clock = round_end.max(self.clock + self.mean_step_s);
             return Ok(());
         }
-        self.eng.complete_fresh(k, &self.arrived, &self.sampled)?;
+        self.arrived.sort_unstable();
+        self.eng.complete_fresh(k, &self.arrived, &self.cohort)?;
         // the broadcast reached only the cohort: they alone hold the new
         // anchor for subsequent cached-aggregation steps
-        self.has_anchor.copy_from_slice(&self.arrived);
+        match &mut self.anchor_holders {
+            Some(h) => {
+                h.clear();
+                h.extend_from_slice(&self.arrived);
+            }
+            None => self.anchor_holders = Some(self.arrived.clone()),
+        }
         self.stats.comm_events += 1;
-        self.stats.total_participants += arrived_n as u64;
+        self.stats.total_participants += self.arrived.len() as u64;
         // the round closes once the slowest cohort member has the anchor
         let dbits = self.eng.downlink_frame_bytes() as f64 * 8.0;
         let mut down_t = 0.0f64;
-        for (i, dev) in self.fleet.devices.iter().enumerate() {
-            if self.arrived[i] {
-                down_t = down_t.max(dev.latency_s + dbits / dev.down_bps);
-            }
+        for &i in &self.arrived {
+            let dev = self.fleet.profile(i as usize);
+            down_t = down_t.max(dev.latency_s + dbits / dev.down_bps);
         }
         self.clock = round_end + down_t;
         Ok(())
@@ -353,15 +517,23 @@ pub struct SimResult {
     pub scenario: String,
     pub series: Series,
     pub stats: SimStats,
+    pub fleet_size: u64,
+    /// distinct clients that ever entered a cohort
+    pub touched_clients: u64,
+    /// copy-on-write store occupancy at the end of the run
+    pub resident_rows: u64,
+    pub resident_bytes: u64,
 }
 
 impl SimResult {
     pub fn to_json(&self) -> Value {
         let last = self.series.last().expect("series has records");
+        let per_device = self.resident_bytes as f64 / self.fleet_size.max(1) as f64;
         Value::obj(vec![
             ("scenario".into(), Value::Str(self.scenario.clone())),
             ("label".into(), Value::Str(self.series.label.clone())),
             ("steps".into(), Value::Num(last.step as f64)),
+            ("fleet_size".into(), Value::Num(self.fleet_size as f64)),
             ("comm_events".into(), Value::Num(self.stats.comm_events as f64)),
             ("skipped_rounds".into(), Value::Num(self.stats.skipped_rounds as f64)),
             ("dropped_stragglers".into(),
@@ -369,6 +541,10 @@ impl SimResult {
             ("mean_participants".into(),
              Value::Num(self.stats.mean_participants())),
             ("idle_steps".into(), Value::Num(self.stats.idle_steps as f64)),
+            ("touched_clients".into(), Value::Num(self.touched_clients as f64)),
+            ("resident_rows".into(), Value::Num(self.resident_rows as f64)),
+            ("resident_bytes".into(), Value::Num(self.resident_bytes as f64)),
+            ("resident_bytes_per_device".into(), Value::Num(per_device)),
             ("sim_time_s".into(), Value::Num(last.sim_time_s)),
             ("bytes_up".into(), Value::Num((last.bits_up / 8) as f64)),
             ("bytes_down".into(), Value::Num((last.bits_down / 8) as f64)),
@@ -380,7 +556,10 @@ impl SimResult {
 }
 
 /// Run one scenario end to end (environment build + simulation + eval
-/// cadence) and return the sim-time series plus counters.
+/// cadence) and return the sim-time series plus counters. Mega runs are
+/// additionally checked against the documented copy-on-write resident
+/// bound — a sharded store that silently densified fails the run (and the
+/// `scale-smoke` CI job with it).
 pub fn run(cfg: &SimCfg) -> anyhow::Result<SimResult> {
     let env = build_env(cfg);
     let mut sim = FleetSim::new(cfg, &env)?;
@@ -397,10 +576,27 @@ pub fn run(cfg: &SimCfg) -> anyhow::Result<SimResult> {
             }
         }
     }
+    let store = sim.engine().store();
+    let touched = sim.engine().touched_clients();
+    anyhow::ensure!(store.materialized_rows() <= touched,
+                    "store holds {} rows for {touched} touched clients",
+                    store.materialized_rows());
+    if cfg.scenario.mega {
+        let bound = resident_bound_bytes(store.dim(), touched);
+        anyhow::ensure!(
+            (store.resident_bytes() as u64) <= bound,
+            "mega run resident bytes {} exceed the documented bound {bound} \
+             ({touched} touched clients of {})",
+            store.resident_bytes(), store.len());
+    }
     Ok(SimResult {
         scenario: cfg.scenario.spec.clone(),
         series,
         stats: sim.stats().clone(),
+        fleet_size: store.len() as u64,
+        touched_clients: touched as u64,
+        resident_rows: store.materialized_rows() as u64,
+        resident_bytes: store.resident_bytes() as u64,
     })
 }
 
@@ -431,6 +627,9 @@ mod tests {
         // frame metering: whole bytes on the wire, header overhead included
         assert_eq!(last.bits_up % 8, 0);
         assert!(last.sim_time_s > 0.0);
+        // every client of a 5-device uniform fleet diverges immediately
+        assert_eq!(res.fleet_size, 5);
+        assert_eq!(res.touched_clients, 5);
     }
 
     #[test]
@@ -484,6 +683,45 @@ mod tests {
         assert!(res.series.last().unwrap().train_loss.is_finite());
     }
 
+    /// Satellite: a deadline so tight every round aborts produces a
+    /// zero-communication run whose summary is still fully defined —
+    /// mean_participants is 0 (not NaN) and the JSON parses.
+    #[test]
+    fn zero_comm_event_run_has_well_defined_summary() {
+        let mut cfg = smoke("straggler-heavy:clients=8,deadline=0.000001", 6);
+        cfg.steps = 150;
+        let res = run(&cfg).unwrap();
+        assert_eq!(res.stats.comm_events, 0, "{:?}", res.stats);
+        assert!(res.stats.skipped_rounds > 0);
+        assert_eq!(res.stats.total_participants, 0);
+        assert_eq!(res.stats.mean_participants(), 0.0);
+        // the wasted frames still metered
+        assert!(res.series.last().unwrap().bits_up > 0);
+        let text = res.to_json().to_string_pretty();
+        assert!(!text.contains("NaN"), "summary contains NaN: {text}");
+        let v = crate::util::json::parse(&text).unwrap();
+        assert_eq!(v.get("comm_events").unwrap().as_f64(), Some(0.0));
+        assert_eq!(v.get("mean_participants").unwrap().as_f64(), Some(0.0));
+    }
+
+    /// The mega path at a reduced (but still mega-mode) fleet: O(cohort)
+    /// sampling, lazy profiles, sparse store.
+    #[test]
+    fn megafleet_path_runs_sparse_at_reduced_scale() {
+        let mut cfg = smoke("megafleet:clients=100000,sample=0.001", 4);
+        cfg.steps = 40;
+        cfg.eval_every = 20;
+        let res = run(&cfg).unwrap();
+        assert_eq!(res.fleet_size, 100_000);
+        assert!(res.touched_clients > 0);
+        // ~100-device cohorts over 40 events: a sliver of the fleet
+        assert!(res.touched_clients < 8_000, "{} touched", res.touched_clients);
+        assert!(res.resident_rows <= res.touched_clients);
+        let last = res.series.last().unwrap();
+        assert!(last.train_loss.is_finite());
+        assert!(last.personal_loss.is_finite());
+    }
+
     #[test]
     fn summary_json_roundtrips() {
         let res = run(&smoke("uniform", 4)).unwrap();
@@ -492,5 +730,24 @@ mod tests {
         assert_eq!(v.get("scenario").unwrap().as_str(), Some("uniform"));
         assert!(v.get("sim_time_s").unwrap().as_f64().unwrap() > 0.0);
         assert!(v.get("bytes_up").unwrap().as_f64().unwrap() > 0.0);
+        assert!(v.get("fleet_size").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn sample_device_ids_draws_distinct_in_range() {
+        let mut rng = Rng::new(9);
+        let mut seen = HashSet::new();
+        let mut out = Vec::new();
+        sample_device_ids(&mut rng, 1_000_000, 500, &mut seen, &mut out);
+        assert_eq!(out.len(), 500);
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 500, "ids must be distinct");
+        assert!(sorted.iter().all(|&i| (i as usize) < 1_000_000));
+        // reuse draws a fresh, different cohort
+        let prev = out.clone();
+        sample_device_ids(&mut rng, 1_000_000, 500, &mut seen, &mut out);
+        assert_ne!(prev, out);
     }
 }

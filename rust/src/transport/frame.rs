@@ -253,6 +253,116 @@ mod tests {
         assert!(decode_frame(&buf).is_ok(), "pristine frame still parses");
     }
 
+    /// Satellite: every truncation of a valid frame — header cut short,
+    /// payload cut short, even the empty buffer — is a clean `Err`, and
+    /// any *extension* is rejected too (the length identity is exact), so
+    /// a decoder can never read past what the header promised.
+    #[test]
+    fn decode_rejects_every_truncation_and_extension() {
+        let h = FrameHeader {
+            dir: Direction::Up,
+            round: 77,
+            client: 12,
+            spec_id: 2,
+            payload_bits: 130,
+        };
+        let payload: Vec<u8> = (0..17).collect();
+        let mut buf = Vec::new();
+        encode_frame(&h, &payload, &mut buf);
+        assert!(decode_frame(&buf).is_ok());
+        for len in 0..buf.len() {
+            assert!(decode_frame(&buf[..len]).is_err(),
+                    "truncation to {len} bytes must fail cleanly");
+        }
+        let mut extended = buf.clone();
+        extended.push(0);
+        assert!(decode_frame(&extended).is_err(), "trailing garbage must fail");
+    }
+
+    /// Satellite: decode survives *every single-bit mutation* of a valid
+    /// frame without panicking or reading out of bounds — each flip either
+    /// fails cleanly or decodes to a frame whose header round-trips. Flips
+    /// in the validated fields (magic, version, direction, the
+    /// length/bit-count pair) must all be rejected.
+    #[test]
+    fn decode_survives_every_single_bit_flip() {
+        let h = FrameHeader {
+            dir: Direction::Down,
+            round: 123_456,
+            client: BROADCAST,
+            spec_id: 9,
+            payload_bits: 100,
+        };
+        let payload: Vec<u8> = (0..13).map(|b| b * 7).collect();
+        let mut buf = Vec::new();
+        encode_frame(&h, &payload, &mut buf);
+        for byte in 0..buf.len() {
+            for bit in 0..8 {
+                let mut bad = buf.clone();
+                bad[byte] ^= 1 << bit;
+                // must never panic; if it parses, the mutation hit a
+                // non-validated field and re-encoding reproduces the bytes
+                if let Ok((h2, p2)) = decode_frame(&bad) {
+                    let mut re = Vec::new();
+                    encode_frame(&h2, p2, &mut re);
+                    assert_eq!(re, bad, "byte {byte} bit {bit}: lossy reparse");
+                }
+                // fields with a single valid value reject every flip:
+                // magic (0..2), version (2), and payload_len (18..22 —
+                // any change breaks the exact length identity). The
+                // direction byte and the low bits of payload_bits can
+                // mutate into other *valid* frames, which the roundtrip
+                // check above already pins.
+                let always_rejected = byte < 3 || (18..22).contains(&byte);
+                if always_rejected {
+                    assert!(decode_frame(&bad).is_err(),
+                            "flip in validated byte {byte} (bit {bit}) parsed");
+                }
+            }
+        }
+        // the pristine frame still parses after all that cloning
+        let (h2, p2) = decode_frame(&buf).unwrap();
+        assert_eq!(h2, h);
+        assert_eq!(p2, &payload[..]);
+    }
+
+    /// Satellite: the payload-length and bit-count header fields are
+    /// cross-checked — a frame whose `payload_len` disagrees with the
+    /// buffer, or whose `payload_bits` cannot occupy `payload_len` bytes,
+    /// is rejected with a clean error naming the mismatch.
+    #[test]
+    fn decode_rejects_length_and_bitcount_disagreement() {
+        let h = FrameHeader {
+            dir: Direction::Up,
+            round: 5,
+            client: 3,
+            spec_id: 0,
+            payload_bits: 24,
+        };
+        let mut buf = Vec::new();
+        encode_frame(&h, &[1, 2, 3], &mut buf);
+
+        // payload_len claims one byte more than the buffer carries
+        let mut bad = buf.clone();
+        bad[18..22].copy_from_slice(&4u32.to_le_bytes());
+        let err = format!("{:#}", decode_frame(&bad).unwrap_err());
+        assert!(err.contains("length"), "{err}");
+
+        // payload_bits says 9 bits (→ 2 bytes) but 3 bytes follow
+        let mut bad = buf.clone();
+        bad[14..18].copy_from_slice(&9u32.to_le_bytes());
+        let err = format!("{:#}", decode_frame(&bad).unwrap_err());
+        assert!(err.contains("bits"), "{err}");
+
+        // zero-length payload with nonzero bit count
+        let mut empty = Vec::new();
+        encode_frame(&FrameHeader { payload_bits: 0, ..h }, &[], &mut empty);
+        assert!(decode_frame(&empty).is_ok());
+        let mut bad = empty.clone();
+        bad[14] = 1;
+        assert!(decode_frame(&bad).is_err());
+    }
+
     #[test]
     fn spec_table_interns_stably() {
         let mut t = SpecTable::new();

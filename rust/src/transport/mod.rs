@@ -43,7 +43,14 @@ impl Default for TimeModel {
 }
 
 pub struct Network {
+    /// one attribution bucket per client (`shard_size == 1`, the dense
+    /// engines) or per client *shard* (the sharded cohort engine at fleet
+    /// scale, where a million per-client buckets would reintroduce O(n)
+    /// memory into a path that is otherwise O(cohort))
     links: Vec<LinkStats>,
+    n_clients: usize,
+    /// clients per attribution bucket
+    shard_size: usize,
     pub trace: Option<Vec<Event>>,
     time_model: TimeModel,
     sim_time_s: f64,
@@ -58,8 +65,19 @@ pub struct Network {
 
 impl Network {
     pub fn new(n_clients: usize) -> Network {
+        Network::sharded(n_clients, 1)
+    }
+
+    /// A network whose `LinkStats` are attributed per contiguous
+    /// `shard_size`-client shard instead of per client. Totals, round
+    /// accounting and the time model are identical to the per-client
+    /// layout; only the attribution granularity coarsens.
+    pub fn sharded(n_clients: usize, shard_size: usize) -> Network {
+        assert!(shard_size > 0, "shard_size must be positive");
         Network {
-            links: vec![LinkStats::default(); n_clients],
+            links: vec![LinkStats::default(); n_clients.div_ceil(shard_size)],
+            n_clients,
+            shard_size,
             trace: None,
             time_model: TimeModel::default(),
             sim_time_s: 0.0,
@@ -69,6 +87,12 @@ impl Network {
             round_uplinks: 0,
             last_round_participants: 0,
         }
+    }
+
+    /// The attribution bucket for `client`.
+    #[inline]
+    fn bucket(&self, client: usize) -> usize {
+        client / self.shard_size
     }
 
     pub fn with_trace(mut self) -> Network {
@@ -82,7 +106,17 @@ impl Network {
     }
 
     pub fn n_clients(&self) -> usize {
+        self.n_clients
+    }
+
+    /// Number of attribution buckets (`n_clients` when `shard_size` is 1).
+    pub fn n_shards(&self) -> usize {
         self.links.len()
+    }
+
+    /// Clients per attribution bucket.
+    pub fn shard_size(&self) -> usize {
+        self.shard_size
     }
 
     /// Begin a synchronous communication round (latency accounting).
@@ -108,7 +142,8 @@ impl Network {
     fn record_uplink(&mut self, step: u64, client: usize, bits: u64,
                      participant: bool) {
         debug_assert!(self.in_round, "uplink outside a round");
-        let l = &mut self.links[client];
+        let b = self.bucket(client);
+        let l = &mut self.links[b];
         l.bits_up += bits;
         l.msgs_up += 1;
         self.round_max_bits = self.round_max_bits.max(bits);
@@ -137,7 +172,8 @@ impl Network {
     /// simulator's cohort downlink: offline clients receive nothing).
     pub fn downlink(&mut self, step: u64, client: usize, bits: u64) {
         debug_assert!(self.in_round, "downlink outside a round");
-        let l = &mut self.links[client];
+        let b = self.bucket(client);
+        let l = &mut self.links[b];
         l.bits_down += bits;
         l.msgs_down += 1;
         self.round_max_bits = self.round_max_bits.max(bits);
@@ -148,13 +184,20 @@ impl Network {
 
     /// Record a master → all-clients broadcast; each link pays `bits`.
     pub fn downlink_broadcast(&mut self, step: u64, bits: u64) {
-        for client in 0..self.links.len() {
+        for client in 0..self.n_clients {
             self.downlink(step, client, bits);
         }
     }
 
+    /// Attribution stats for `client`'s bucket (exactly this client when
+    /// `shard_size` is 1; its shard otherwise).
     pub fn link(&self, client: usize) -> &LinkStats {
-        &self.links[client]
+        &self.links[self.bucket(client)]
+    }
+
+    /// Attribution stats of shard `s` directly.
+    pub fn shard_link(&self, s: usize) -> &LinkStats {
+        &self.links[s]
     }
 
     pub fn total_bits(&self) -> u64 {
@@ -171,7 +214,7 @@ impl Network {
 
     /// The paper's metric: total communicated bits normalized by n.
     pub fn bits_per_client(&self) -> f64 {
-        self.total_bits() as f64 / self.links.len() as f64
+        self.total_bits() as f64 / self.n_clients as f64
     }
 
     pub fn comm_rounds(&self) -> u64 {
@@ -310,6 +353,41 @@ mod tests {
         assert_eq!(net.link(1).msgs_up, 1);
         // ...but it did not take part in the round
         assert_eq!(net.last_round_participants(), 1);
+    }
+
+    /// Tentpole coverage: per-shard attribution — clients map onto
+    /// `⌈n/shard_size⌉` buckets, totals and per-client normalization stay
+    /// identical to the dense layout.
+    #[test]
+    fn sharded_attribution_buckets_by_client_shard() {
+        let mut net = Network::sharded(10, 4); // shards {0..3} {4..7} {8,9}
+        assert_eq!(net.n_clients(), 10);
+        assert_eq!(net.n_shards(), 3);
+        assert_eq!(net.shard_size(), 4);
+        net.begin_round();
+        net.uplink(0, 1, 100);
+        net.uplink(0, 3, 50); // same shard as client 1
+        net.uplink(0, 9, 70);
+        net.downlink(0, 5, 40);
+        net.end_round();
+        assert_eq!(net.shard_link(0).bits_up, 150);
+        assert_eq!(net.shard_link(0).msgs_up, 2);
+        assert_eq!(net.shard_link(1).bits_up, 0);
+        assert_eq!(net.shard_link(1).bits_down, 40);
+        assert_eq!(net.shard_link(2).bits_up, 70);
+        // `link(client)` resolves to the client's shard bucket
+        assert_eq!(net.link(2).bits_up, 150);
+        assert_eq!(net.link(8).bits_up, 70);
+        // totals and the per-client normalizer use the true fleet size
+        assert_eq!(net.total_bits_up(), 220);
+        assert_eq!(net.last_round_participants(), 3);
+        assert!((net.bits_per_client() - 260.0 / 10.0).abs() < 1e-12);
+        // broadcast pays once per *client*, not per bucket
+        net.begin_round();
+        net.downlink_broadcast(1, 8);
+        net.end_round();
+        assert_eq!(net.total_bits_down(), 40 + 10 * 8);
+        assert_eq!(net.shard_link(2).msgs_down, 2);
     }
 
     #[test]

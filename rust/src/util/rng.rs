@@ -16,6 +16,24 @@ pub fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// The `stream`-th child seed of `base`, as a pure function — O(1) random
+/// access, no parent generator to advance.
+///
+/// [`Rng::fork`] derives child streams by *drawing* from the parent, so
+/// stream i costs i sequential draws and every consumer must walk the
+/// prefix. Million-device fleets need the opposite: device i's streams
+/// (profile draw, batch sampling, compression randomness) must be
+/// derivable on first touch, in any order, at O(1) — that is what makes
+/// lazy cohort materialization possible. By construction the derivation is
+/// prefix-stable: the seed for stream i is independent of how many streams
+/// exist, so a fleet of n devices is a prefix of the fleet of 2n (pinned
+/// by the statistical suite).
+#[inline]
+pub fn stream_seed(base: u64, stream: u64) -> u64 {
+    let mut s = base ^ stream.wrapping_mul(0xA24B_AED4_963E_E407);
+    splitmix64(&mut s)
+}
+
 /// xoshiro256++ generator.
 #[derive(Clone, Debug)]
 pub struct Rng {
@@ -42,6 +60,14 @@ impl Rng {
     pub fn fork(&mut self, stream: u64) -> Rng {
         let base = self.next_u64();
         Rng::new(base ^ stream.wrapping_mul(0xA24B_AED4_963E_E407))
+    }
+
+    /// Independent child stream by index without a parent generator —
+    /// the random-access counterpart of [`Rng::fork`] (see [`stream_seed`]).
+    /// Device/client state that must materialize lazily (sharded cohort
+    /// engine, lazy fleet profiles) is seeded through this.
+    pub fn stream(base: u64, stream: u64) -> Rng {
+        Rng::new(stream_seed(base, stream))
     }
 
     #[inline]
@@ -327,6 +353,26 @@ mod tests {
         u.sort_unstable();
         u.dedup();
         assert_eq!(u.len(), 20);
+    }
+
+    #[test]
+    fn stream_is_random_access_and_order_free() {
+        // the i-th stream is a pure function of (base, i): the same seed
+        // regardless of which other streams were derived first
+        let a = stream_seed(99, 5);
+        let _ = stream_seed(99, 123_456_789);
+        assert_eq!(stream_seed(99, 5), a);
+        let mut r1 = Rng::stream(7, 3);
+        let mut r2 = Rng::stream(7, 3);
+        for _ in 0..16 {
+            assert_eq!(r1.next_u64(), r2.next_u64());
+        }
+        // neighbouring streams decorrelate
+        let mut r3 = Rng::stream(7, 3);
+        let mut r4 = Rng::stream(7, 4);
+        let x: Vec<u64> = (0..8).map(|_| r3.next_u64()).collect();
+        let y: Vec<u64> = (0..8).map(|_| r4.next_u64()).collect();
+        assert_ne!(x, y);
     }
 
     #[test]

@@ -64,6 +64,35 @@ impl Summary {
     }
 }
 
+/// Pearson χ² statistic of observed counts against a uniform expectation
+/// (the cohort-sampling uniformity tests). 0.0 when the total is zero.
+pub fn chi_square_uniform(counts: &[u64]) -> f64 {
+    if counts.is_empty() {
+        return 0.0;
+    }
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let expected = total as f64 / counts.len() as f64;
+    counts
+        .iter()
+        .map(|&c| {
+            let d = c as f64 - expected;
+            d * d / expected
+        })
+        .sum()
+}
+
+/// A generous upper critical value for χ² with `dof` degrees of freedom:
+/// mean + 4σ of the χ² distribution (≈ p < 1e-4 by the normal
+/// approximation). Loose on purpose — the statistical suite wants to catch
+/// gross non-uniformity, not flake on tail mass.
+pub fn chi_square_loose_critical(dof: usize) -> f64 {
+    let k = dof as f64;
+    k + 4.0 * (2.0 * k).sqrt()
+}
+
 /// ℓ2 norm of an f32 slice (f64 accumulation).
 pub fn l2_norm(xs: &[f32]) -> f64 {
     xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
@@ -108,6 +137,20 @@ mod tests {
         assert_eq!(s.p50, 2.0);
         assert_eq!(s.max, 3.0);
         assert_eq!(s.n, 3);
+    }
+
+    #[test]
+    fn chi_square_uniform_basics() {
+        // perfectly uniform counts score 0
+        assert_eq!(chi_square_uniform(&[10, 10, 10, 10]), 0.0);
+        assert_eq!(chi_square_uniform(&[]), 0.0);
+        assert_eq!(chi_square_uniform(&[0, 0]), 0.0);
+        // a gross skew blows past the loose critical value
+        let skew = chi_square_uniform(&[400, 0, 0, 0]);
+        assert!(skew > chi_square_loose_critical(3), "χ² = {skew}");
+        // a mild, in-noise deviation stays under it
+        let mild = chi_square_uniform(&[98, 104, 99, 99]);
+        assert!(mild < chi_square_loose_critical(3), "χ² = {mild}");
     }
 
     #[test]

@@ -1,0 +1,112 @@
+//! Expect-style golden pinning for training series.
+//!
+//! The engine≡reference cross-checks catch refactors that break *relative*
+//! equivalence, but a change that shifts both sides together (a kernel
+//! reassociation, an RNG-derivation change) sails through them silently.
+//! These goldens pin the *absolute* bits of the lockstep series to files
+//! under `rust/tests/golden/`, so any change to training arithmetic fails
+//! loudly and must be consciously re-blessed.
+//!
+//! Protocol: if the golden file exists, the fingerprint must match it
+//! exactly; if it is missing (fresh pin) or `PFL_BLESS=1` is set, the file
+//! is (re)written and the test passes with a loud BLESSED note — commit
+//! the written file to lock the series in.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use pfl::metrics::Series;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden")
+}
+
+/// FNV-1a over a byte stream (seeded with the standard offset basis).
+struct Fnv64(u64);
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+impl Fnv64 {
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.update(&v.to_le_bytes());
+    }
+}
+
+/// A bit-exact, human-auditable fingerprint of a series: an FNV-64 over
+/// every record's exact float bit patterns and bit counters, plus the
+/// first/last headline values at full precision (hex bits + decimal) so a
+/// mismatch shows *what* moved, not just that something did.
+pub fn series_fingerprint(series: &Series) -> String {
+    let mut h = Fnv64(FNV_OFFSET);
+    for r in &series.records {
+        h.u64(r.step);
+        h.u64(r.comm_rounds);
+        h.u64(r.bits_up);
+        h.u64(r.bits_down);
+        h.u64(r.train_loss.to_bits());
+        h.u64(r.train_acc.to_bits());
+        h.u64(r.test_loss.to_bits());
+        h.u64(r.test_acc.to_bits());
+        h.u64(r.personal_loss.to_bits());
+        h.u64(r.personal_acc.to_bits());
+    }
+    let first = series.records.first().expect("series has records");
+    let last = series.records.last().unwrap();
+    let mut out = String::new();
+    let _ = writeln!(out, "records: {}", series.records.len());
+    let _ = writeln!(out, "fnv64: {:#018x}", h.0);
+    let _ = writeln!(out, "first.train_loss: {:#018x} ({:?})",
+                     first.train_loss.to_bits(), first.train_loss);
+    let _ = writeln!(out, "first.personal_loss: {:#018x} ({:?})",
+                     first.personal_loss.to_bits(), first.personal_loss);
+    let _ = writeln!(out, "last.train_loss: {:#018x} ({:?})",
+                     last.train_loss.to_bits(), last.train_loss);
+    let _ = writeln!(out, "last.personal_loss: {:#018x} ({:?})",
+                     last.personal_loss.to_bits(), last.personal_loss);
+    let _ = writeln!(out, "last.bits_up: {}", last.bits_up);
+    let _ = writeln!(out, "last.bits_down: {}", last.bits_down);
+    let _ = writeln!(out, "last.comm_rounds: {}", last.comm_rounds);
+    out
+}
+
+/// Compare `actual` against `rust/tests/golden/<name>.txt`, blessing the
+/// file when it is absent or `PFL_BLESS=1` is set.
+///
+/// Self-blessing means a checkout without committed goldens (e.g. a fresh
+/// CI clone before they land) passes vacuously — set
+/// `PFL_REQUIRE_GOLDEN=1` to turn a missing golden into a hard failure
+/// once the files are committed.
+pub fn assert_or_bless(name: &str, actual: &str) {
+    let dir = golden_dir();
+    let path = dir.join(format!("{name}.txt"));
+    let bless = std::env::var_os("PFL_BLESS").is_some();
+    if !path.exists() && !bless && std::env::var_os("PFL_REQUIRE_GOLDEN").is_some() {
+        panic!("golden `{name}` missing at {} and PFL_REQUIRE_GOLDEN is set — \
+                generate it with PFL_BLESS=1 and commit it", path.display());
+    }
+    match std::fs::read_to_string(&path) {
+        Ok(expected) if !bless => {
+            assert!(
+                expected.trim_end() == actual.trim_end(),
+                "golden `{name}` diverged — training bits changed.\n\
+                 --- pinned ({}):\n{expected}\n--- actual:\n{actual}\n\
+                 If the change is intentional, re-bless with PFL_BLESS=1 \
+                 and commit the updated file.",
+                path.display()
+            );
+        }
+        _ => {
+            std::fs::create_dir_all(&dir).expect("create golden dir");
+            std::fs::write(&path, actual).expect("write golden");
+            eprintln!("BLESSED golden `{name}` → {} (commit this file to pin \
+                       the series)", path.display());
+        }
+    }
+}

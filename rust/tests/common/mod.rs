@@ -5,6 +5,8 @@
 //! `cargo test` works on a fresh checkout.
 #![allow(dead_code)] // each test binary uses a subset of these helpers
 
+pub mod golden;
+
 use std::sync::Arc;
 
 use pfl::algorithms::FedEnv;

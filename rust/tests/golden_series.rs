@@ -1,0 +1,62 @@
+//! Golden-series regression pins (satellite): the lockstep Fig-3 engine
+//! series for the identity, qsgd:4, and ef(randk:50>qsgd:8) wires,
+//! fingerprinted bit-exactly into `rust/tests/golden/`. A refactor that
+//! silently changes training bits now fails *here*, not only via the
+//! engine≡reference cross-check (which moves in lockstep with the engine
+//! and therefore cannot see shared drift).
+//!
+//! On a fresh pin (missing golden file) the fingerprint is written and
+//! the test passes with a BLESSED note — commit the file. Intentional
+//! numeric changes are re-blessed with `PFL_BLESS=1`.
+
+mod common;
+
+use common::golden;
+use pfl::algorithms::{FedAlgorithm as _, L2gd};
+use pfl::experiments::fig3;
+
+/// A scaled-down Fig-3 lockstep run (n = 5, d = 123, CI-sized shards) —
+/// the same builder the paper figures and `pfl bench` use, so the pin
+/// covers the production configuration's arithmetic.
+fn fig3_series(client: &str, master: &str) -> pfl::metrics::Series {
+    let cfg = fig3::Fig3Cfg {
+        rows_per_worker: 60,
+        iters: 120,
+        ..fig3::Fig3Cfg::a1a()
+    };
+    let env = fig3::build_env(&cfg);
+    let mut alg = L2gd::new(0.65, 10.0, cfg.eta, cfg.n_clients, client, master)
+        .expect("spec parses");
+    fig3::clamp_agg_stability(&mut alg, cfg.n_clients);
+    alg.run(&env, cfg.iters, 30).expect("run succeeds")
+}
+
+#[test]
+fn golden_fig3_identity_wire() {
+    let s = fig3_series("identity", "identity");
+    golden::assert_or_bless("fig3_identity", &golden::series_fingerprint(&s));
+}
+
+#[test]
+fn golden_fig3_qsgd4_wire() {
+    let s = fig3_series("qsgd:4", "qsgd:4");
+    golden::assert_or_bless("fig3_qsgd4", &golden::series_fingerprint(&s));
+}
+
+#[test]
+fn golden_fig3_ef_randk_qsgd_wire() {
+    let s = fig3_series("ef(randk:50>qsgd:8)", "natural");
+    golden::assert_or_bless("fig3_ef_randk50_qsgd8",
+                            &golden::series_fingerprint(&s));
+}
+
+/// The fingerprint itself is deterministic: two identical runs produce
+/// byte-identical text (guards the pinning mechanism against accidental
+/// nondeterminism — a golden that never matches itself pins nothing).
+#[test]
+fn fingerprint_is_deterministic_across_runs() {
+    let a = golden::series_fingerprint(&fig3_series("identity", "identity"));
+    let b = golden::series_fingerprint(&fig3_series("identity", "identity"));
+    assert_eq!(a, b);
+    assert!(a.contains("fnv64: 0x"), "{a}");
+}

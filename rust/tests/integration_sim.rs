@@ -1,8 +1,9 @@
-//! Fleet-simulator integration: the lockstep-equivalence oracle, frame
-//! byte accounting, and seed-stability of the scenario presets — the
-//! ISSUE's acceptance criteria, pinned.
+//! Fleet-simulator integration: the lockstep-equivalence oracle (dense
+//! engine ≡ sharded cohort engine ≡ simulator on the uniform preset),
+//! frame byte accounting, seed-stability of the scenario presets, and the
+//! million-device copy-on-write acceptance — the ISSUE's criteria, pinned.
 
-use pfl::algorithms::L2gd;
+use pfl::algorithms::{L2gd, ShardedL2gdEngine};
 use pfl::experiments::fig3;
 use pfl::metrics::Record;
 use pfl::sim::{self, runner, scenario, SimCfg};
@@ -70,6 +71,79 @@ fn uniform_preset_is_bit_identical_to_lockstep_engine() {
         assert_eq!(s.bits_up % 8, 0);
         assert_eq!(s.participants, 5);
     }
+}
+
+/// Acceptance (tentpole): the sharded copy-on-write engine reproduces the
+/// dense lockstep engine series **bit for bit** when every client
+/// participates — on the Fig-3 environment, across the sequential
+/// (n ≤ 8) and hierarchical (n > 8, per-shard leaf partials) master
+/// aggregation paths, on a stochastic wire.
+#[test]
+fn sharded_engine_reproduces_dense_lockstep_bit_for_bit() {
+    for (n, steps) in [(5usize, 200u64), (12, 150)] {
+        let mut c = cfg(&format!("uniform:clients={n}"), steps, 13);
+        c.client_comp = "natural".into();
+        c.master_comp = "natural".into();
+        let env = runner::build_env(&c);
+        let mut alg = L2gd::new(c.p, c.lambda, c.eta, n,
+                                &c.client_comp, &c.master_comp).unwrap();
+        fig3::clamp_agg_stability(&mut alg, n);
+        let mut dense = alg.engine(&env).unwrap();
+        let mut cow = ShardedL2gdEngine::new(&alg, &env, n).unwrap();
+        for k in 1..=steps {
+            dense.step(k).unwrap();
+            cow.step(k).unwrap();
+            if k % 50 == 0 || k == steps {
+                let rd = dense.evaluate(k).unwrap();
+                let rc = cow.evaluate(k).unwrap();
+                assert_eq!(rd.train_loss, rc.train_loss, "n={n} step {k}");
+                assert_eq!(rd.test_loss, rc.test_loss, "n={n} step {k}");
+                assert_eq!(rd.personal_loss, rc.personal_loss, "n={n} step {k}");
+                assert_eq!(rd.personal_acc, rc.personal_acc, "n={n} step {k}");
+                assert_eq!(rd.bits_up, rc.bits_up, "n={n} step {k}");
+                assert_eq!(rd.bits_down, rc.bits_down, "n={n} step {k}");
+                assert_eq!(rd.comm_rounds, rc.comm_rounds, "n={n} step {k}");
+            }
+        }
+        for i in 0..n {
+            assert_eq!(dense.xs().row(i), cow.row_or_base(i), "n={n} row {i}");
+        }
+    }
+}
+
+/// Acceptance: the megafleet preset — one million devices, ≤1% sampling —
+/// completes a smoke run with resident client-state bytes proportional to
+/// the clients actually touched (asserted via store occupancy, never RSS),
+/// and the summary carries the scale fields the `scale-smoke` CI job
+/// reads.
+#[test]
+fn megafleet_smoke_runs_sparse_at_one_million_devices() {
+    let mut c = cfg("megafleet", 60, 1);
+    c.eval_every = 30;
+    let res = runner::run(&c).unwrap();
+    assert_eq!(res.fleet_size, 1_000_000);
+    assert!(res.touched_clients > 0);
+    // ≈200-device cohorts over 60 events: a sliver of the fleet
+    assert!(res.touched_clients < 50_000, "{} touched", res.touched_clients);
+    assert!(res.stats.comm_events > 0, "{:?}", res.stats);
+    // occupancy, not RSS: rows only for touched clients, bytes bounded by
+    // the documented per-touched budget (the same bound `runner::run`
+    // enforces for every mega scenario)
+    assert!(res.resident_rows <= res.touched_clients);
+    assert!(res.resident_bytes
+                <= runner::resident_bound_bytes(123, res.touched_clients as usize),
+            "resident {} B for {} touched", res.resident_bytes,
+            res.touched_clients);
+    let last = res.series.last().unwrap();
+    assert!(last.train_loss.is_finite());
+    assert!(last.personal_loss.is_finite());
+    assert!(last.sim_time_s > 0.0);
+    let v = pfl::util::json::parse(&res.to_json().to_string_pretty()).unwrap();
+    assert_eq!(v.get("fleet_size").unwrap().as_f64(), Some(1_000_000.0));
+    assert!(v.get("resident_bytes_per_device").unwrap().as_f64().unwrap()
+                < 4.0 * 123.0,
+            "resident bytes/device must sit far below one dense row");
+    assert!(v.get("touched_clients").unwrap().as_f64().unwrap() > 0.0);
 }
 
 /// Acceptance: wire-frame byte counts — not theoretical bit formulas —

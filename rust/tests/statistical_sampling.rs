@@ -1,0 +1,152 @@
+//! Statistical suite (satellite) — gated behind `PFL_STATS_TESTS=1` so
+//! the tier-1 run stays deterministic and flake-free; CI runs this file
+//! in its own retryable matrix job.
+//!
+//! Pins two contracts of the mega-fleet layer:
+//!
+//! * **Shard uniformity** — cohort sampling hits the sharded store's
+//!   client shards uniformly (χ² over shard hit counts, multiple seeds,
+//!   majority vote against a deliberately loose critical value).
+//! * **Prefix stability** — device profiles drawn at fleet size n are a
+//!   prefix of those at 2n, and lazy per-index lookups equal materialized
+//!   builds (the random-access forked-stream contract everything lazy
+//!   rests on).
+
+use std::collections::HashSet;
+
+use pfl::model::ShardedStore;
+use pfl::sim::runner::sample_device_ids;
+use pfl::sim::{scenario, Dist, Fleet, FleetSpec, SimCfg};
+use pfl::util::stats::{chi_square_loose_critical, chi_square_uniform};
+use pfl::util::Rng;
+
+fn gated() -> bool {
+    if std::env::var_os("PFL_STATS_TESTS").is_some() {
+        return true;
+    }
+    eprintln!("SKIP: statistical test (set PFL_STATS_TESTS=1 to run)");
+    false
+}
+
+/// χ² statistic against expectations proportional to each shard's actual
+/// client count (the last shard of a non-divisible fleet is partial, so a
+/// flat-uniform null would be false by construction and eat the flake
+/// margin as a built-in noncentrality).
+fn chi_square_proportional(counts: &[u64], shard_size: usize, n: usize) -> f64 {
+    let total: u64 = counts.iter().sum();
+    counts
+        .iter()
+        .enumerate()
+        .map(|(s, &c)| {
+            let clients = shard_size.min(n - s * shard_size);
+            let expected = total as f64 * clients as f64 / n as f64;
+            let d = c as f64 - expected;
+            d * d / expected
+        })
+        .sum()
+}
+
+/// χ² uniformity of the O(cohort) id sampler over the megafleet's shard
+/// geometry: 1M devices, the store's auto shard size, ~80k draws per
+/// seed. Majority vote over seeds keeps the tail from flaking.
+#[test]
+fn cohort_sampler_is_uniform_across_shards() {
+    if !gated() {
+        return;
+    }
+    let n = 1_000_000usize;
+    let shard_size = ShardedStore::auto_shard_size(n, 8);
+    let s = n.div_ceil(shard_size);
+    assert!(s > 100, "geometry degenerated: {s} shards");
+    let mut passes = 0;
+    for seed in [11u64, 22, 33] {
+        let mut rng = Rng::new(seed);
+        let mut seen = HashSet::new();
+        let mut out = Vec::new();
+        let mut counts = vec![0u64; s];
+        for _ in 0..400 {
+            sample_device_ids(&mut rng, n, 200, &mut seen, &mut out);
+            for &i in &out {
+                counts[i as usize / shard_size] += 1;
+            }
+        }
+        let chi = chi_square_proportional(&counts, shard_size, n);
+        let crit = chi_square_loose_critical(s - 1);
+        eprintln!("seed {seed}: χ² = {chi:.1} (critical {crit:.1})");
+        if chi < crit {
+            passes += 1;
+        }
+    }
+    assert!(passes >= 2, "shard sampling non-uniform in {}/3 seeds", 3 - passes);
+}
+
+/// End-to-end: after a mega simulation, the copy-on-write store's
+/// *occupancy* is spread uniformly across shards — the sampled cohorts,
+/// the churn filter, and materialization compose without skew.
+#[test]
+fn mega_sim_occupancy_is_uniform_across_shards() {
+    if !gated() {
+        return;
+    }
+    let mut passes = 0;
+    for seed in [5u64, 6, 7] {
+        let mut cfg = SimCfg::smoke(
+            scenario::from_spec("megafleet:clients=131072,sample=0.002").unwrap());
+        cfg.steps = 100;
+        cfg.eval_every = 100;
+        cfg.seed = seed;
+        let env = pfl::sim::runner::build_env(&cfg);
+        let mut sim = pfl::sim::FleetSim::new(&cfg, &env).unwrap();
+        sim.run_steps(0, cfg.steps).unwrap();
+        let store = sim.engine().store();
+        let counts: Vec<u64> =
+            (0..store.n_shards()).map(|s| store.shard_rows(s) as u64).collect();
+        let total: u64 = counts.iter().sum();
+        assert!(total > 5 * counts.len() as u64,
+                "seed {seed}: too few rows ({total}) for a χ² over {} shards",
+                counts.len());
+        let chi = chi_square_uniform(&counts);
+        let crit = chi_square_loose_critical(counts.len() - 1);
+        eprintln!("seed {seed}: occupancy χ² = {chi:.1} (critical {crit:.1}, \
+                   {total} rows / {} shards)", counts.len());
+        if chi < crit {
+            passes += 1;
+        }
+    }
+    assert!(passes >= 2, "occupancy skewed in {}/3 seeds", 3 - passes);
+}
+
+/// The forked-RNG-stream contract: profiles at fleet size n are a prefix
+/// of those at 2n, and the lazy per-index path is bit-identical to the
+/// materialized build — at small and mega indices alike.
+#[test]
+fn fleet_profiles_are_prefix_stable_and_lazy_consistent() {
+    if !gated() {
+        return;
+    }
+    let spec = FleetSpec {
+        step_time: Dist::LogNormal { mu: (0.01f64).ln(), sigma: 0.6 },
+        up_bw: Dist::Bimodal { p_slow: 0.3, fast: 20e6, slow: 1e6 },
+        down_bw: Dist::Uniform { lo: 1e7, hi: 5e7 },
+        latency: Dist::Uniform { lo: 0.01, hi: 0.1 },
+    };
+    for seed in [1u64, 99] {
+        let small = Fleet::build(&spec, 2048, seed);
+        let big = Fleet::build(&spec, 4096, seed);
+        for i in 0..2048 {
+            assert_eq!(small.devices[i].step_time_s, big.devices[i].step_time_s,
+                       "seed {seed} device {i}: prefix broke");
+            assert_eq!(small.devices[i].up_bps, big.devices[i].up_bps);
+            assert_eq!(small.devices[i].latency_s, big.devices[i].latency_s);
+        }
+        // lazy lookups are the same pure function, including far past any
+        // materialized prefix (the megafleet path never materializes)
+        for i in [0u64, 1, 2047, 131_071, 999_999] {
+            let lazy = spec.device(seed, i);
+            if (i as usize) < 2048 {
+                assert_eq!(lazy.step_time_s, small.devices[i as usize].step_time_s);
+            }
+            assert!(lazy.step_time_s > 0.0 && lazy.up_bps >= 1.0);
+        }
+    }
+}
