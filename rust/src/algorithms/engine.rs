@@ -1,0 +1,1273 @@
+//! The generic round engine: **one** protocol implementation, pluggable
+//! along the two axes the unified formulation (Hanzely & Richtárik 2020;
+//! Hanzely, Zhao, Kolar 2021) identifies:
+//!
+//! * **State storage** — [`Engine`] is generic over
+//!   [`crate::model::ClientStore`]: [`DenseStore`] (every row eagerly in
+//!   one [`ParamMatrix`]; the lockstep configuration, alias
+//!   [`L2gdEngine`]) or [`ShardedStore`] (copy-on-write divergent rows
+//!   only; the million-device configuration, alias
+//!   [`ShardedL2gdEngine`]). Full-participation series are **bit
+//!   identical** across the two stores — pinned by
+//!   `tests/integration_sim.rs` and `tests/golden_series.rs`.
+//! * **Communication schedule** — a [`CommSchedule`] deals each
+//!   iteration's [`StepKind`]: the paper's Bernoulli ξ [`Coin`] (L2GD) or
+//!   the baselines' [`FixedCadence`] (T local steps, then communicate).
+//!   A [`ServerOpt`] hook transforms the aggregated ȳ into the broadcast
+//!   anchor: plain averaging (L2GD, FedAvg) or server Adam on the
+//!   pseudo-gradient w − ȳ (FedOpt). [`AlgSpec`] bundles one point in
+//!   this family; [`FLEET_ALGS`] lists the registered names.
+//!
+//! ### The protocol surface (sorted cohort-id lists)
+//! Every phase takes a **sorted list of distinct client ids** and does
+//! O(cohort · d) work — the fleet simulator's contract:
+//!
+//! * [`Engine::step_local`] — fused gradient+update for the cohort (a CoW
+//!   row materializes on this first divergent step).
+//! * [`Engine::step_aggregate_cached`] — aggregation toward the cached
+//!   anchor, no communication.
+//! * [`Engine::compress_uplinks`] / [`Engine::complete_fresh`] /
+//!   [`Engine::abort_fresh`] — the two-phase communicating round:
+//!   compress the cohort's models into their wire buffers (read-only on
+//!   the store), then meter arrivals (stragglers as discarded traffic),
+//!   decode-accumulate ȳ over fixed [`REDUCE_LEAF`]-client leaves,
+//!   broadcast the anchor to the arrived cohort, and aggregate.
+//!
+//! The historical `&[bool]` participation masks survive only as thin
+//! `*_masked` adapters for the lockstep tests — they translate to sorted
+//! cohorts and are bit-identical to the id-list entry points (pinned by
+//! the adapter-equivalence tests).
+//!
+//! Lockstep [`Engine::step`] drives the same phases with the full-fleet
+//! cohort, so a simulator that executes every drawn kind with everyone
+//! participating reproduces it exactly. Dense stores additionally take
+//! pooled full-fleet sweeps over the flat matrix (bit-equal to the
+//! sequential cohort loop — rows are disjoint and the arithmetic is
+//! per-row); after warmup a dense lockstep step touches the allocator
+//! zero times (asserted in `pfl bench` / `benches/perf_round_latency.rs`).
+//! The pooled local sweep requires cached static batches (the convex
+//! hot path `pfl bench` tracks); non-static backends and the uplink
+//! compression phase run the sequential cohort loop — per-client state
+//! lives in a lazy map, and compressing n small models is noise next to
+//! the gradient work. If a dense non-static workload ever becomes hot
+//! (it needs a real PJRT runtime, absent offline), give it a pooled
+//! slot-vector sweep like the pre-unification engine's.
+//!
+//! ### Per-client wire state
+//! Every client's batch-RNG stream, compressor state (own RNG stream, EF
+//! residual) and wire buffer live in a lazily materialized [`CohortSlot`],
+//! seeded by *random-access* stream derivation
+//! ([`crate::util::rng::stream_seed`]): client i's streams are a pure
+//! function of (run seed, i), so dense and sharded engines — and the
+//! reference oracle — instantiate bit-identical state no matter when (or
+//! whether) a client is first touched.
+//!
+//! ### Wire framing
+//! [`Engine::enable_wire_framing`] switches the metering (not the math)
+//! to byte-accurate [`crate::transport::frame`] frames: each payload is
+//! framed, decode-roundtripped, and `LinkStats` is fed the serialized
+//! size. Transport attribution is per client for dense stores and per
+//! client-shard for sharded ones ([`crate::transport::Network::sharded`]).
+
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+
+use super::{evaluate, FedEnv, L2gd};
+use crate::compress::{Compressed, Compressor, CompressorState};
+use crate::metrics::Record;
+use crate::model::{kernels, ClientStore, DenseStore, ParamMatrix, ShardedStore,
+                   REDUCE_LEAF};
+use crate::protocol::{Coin, CoinStats, CommSchedule, FixedCadence, StepKind};
+use crate::runtime::{Backend as _, GradBuf};
+use crate::transport::frame::{self, FrameHeader, SpecTable};
+use crate::transport::Network;
+use crate::util::rng::stream_seed;
+use crate::util::Rng;
+
+/// Salt for per-client compression-stream seeds: client i's compressor
+/// state is seeded `stream_seed(env.seed ^ COMP_STREAM_SALT, i)` — O(1)
+/// random access, so any engine (or the reference oracle) instantiates
+/// the *identical* stream lazily on a client's first touch.
+pub const COMP_STREAM_SALT: u64 = 0xC09B;
+
+/// Per-client batch-sampling stream for client `i` — the random-access
+/// counterpart of the old sequential fork walk, shared by both stores'
+/// engines and the reference oracle.
+pub fn client_stream(seed: u64, i: usize) -> Rng {
+    Rng::stream(seed, i as u64 + 1)
+}
+
+/// Registered fleet-algorithm names — what `alg=` accepts in the scenario
+/// grammar and `pfl sim` lists in its errors and `--help`.
+pub const FLEET_ALGS: &[&str] = &["l2gd", "fedavg", "fedopt"];
+
+/// Byte-accurate wire mode (see the module docs): spec-id table plus a
+/// reusable frame buffer. Metering-only — the training math never touches
+/// this.
+pub(crate) struct Framing {
+    pub(crate) table: SpecTable,
+    pub(crate) client_id: u16,
+    pub(crate) master_id: u16,
+    pub(crate) buf: Vec<u8>,
+}
+
+impl Framing {
+    /// Intern the two wire specs and start with an empty frame buffer.
+    pub(crate) fn new(client_spec: &str, master_spec: &str) -> Framing {
+        let mut table = SpecTable::new();
+        let client_id = table.intern(client_spec);
+        let master_id = table.intern(master_spec);
+        Framing { table, client_id, master_id, buf: Vec::new() }
+    }
+
+    /// Encode, decode back, verify, and return the serialized size in bits.
+    fn roundtrip(&mut self, h: FrameHeader, payload: &[u8]) -> anyhow::Result<u64> {
+        frame::encode_frame(&h, payload, &mut self.buf);
+        let (h2, p2) = frame::decode_frame(&self.buf)?;
+        anyhow::ensure!(h2 == h && p2 == payload,
+                        "wire frame roundtrip mismatch at step {}", h.round);
+        Ok((self.buf.len() * 8) as u64)
+    }
+
+    pub(crate) fn uplink_bits(&mut self, k: u64, client: usize, wire: &Compressed)
+                              -> anyhow::Result<u64> {
+        let h = FrameHeader::uplink(k, client, self.client_id, wire)?;
+        self.roundtrip(h, &wire.payload)
+    }
+
+    pub(crate) fn broadcast_bits(&mut self, k: u64, wire: &Compressed)
+                                 -> anyhow::Result<u64> {
+        let h = FrameHeader::broadcast(k, self.master_id, wire)?;
+        self.roundtrip(h, &wire.payload)
+    }
+}
+
+/// Lazily materialized per-client wire state, created on the client's
+/// first touch with random-access stream seeds (see the module docs).
+struct CohortSlot {
+    /// batch-sampling stream (drawn only for non-static backends)
+    rng: Rng,
+    /// stateful compressor instance (own RNG stream, EF residual)
+    comp: Box<dyn CompressorState>,
+    /// reusable wire buffer
+    wire: Compressed,
+}
+
+fn new_slot(seed: u64, d: usize, comp: &Arc<dyn Compressor>, i: u32) -> CohortSlot {
+    CohortSlot {
+        rng: client_stream(seed, i as usize),
+        comp: comp.instantiate(d, stream_seed(seed ^ COMP_STREAM_SALT, i as u64)),
+        wire: Compressed::empty(),
+    }
+}
+
+thread_local! {
+    /// Per-worker gradient buffer for the pooled dense local sweep (the
+    /// sequential cohort path uses the engine's own buffer instead).
+    /// Warmed by `on_each_worker` at engine build so dynamic client →
+    /// worker assignment can't surface a first-use allocation inside a
+    /// measured steady state.
+    static POOL_GRAD: RefCell<GradBuf> = RefCell::new(GradBuf::new());
+}
+
+/// How the engine schedules communication — see [`CommSchedule`].
+#[derive(Clone, Copy, Debug)]
+pub enum ScheduleSpec {
+    /// Bernoulli ξ coin at probability `p` (L2GD).
+    Coin { p: f64 },
+    /// `local_steps` local iterations, then one communicating aggregation
+    /// (FedAvg / FedOpt).
+    Every { local_steps: u64 },
+}
+
+/// How the master turns the aggregated ȳ into the broadcast anchor.
+#[derive(Clone, Copy, Debug)]
+pub enum ServerSpec {
+    /// Broadcast C_M(ȳ) itself (L2GD, FedAvg).
+    Average,
+    /// Server Adam (Reddi et al. 2020) on the pseudo-gradient w − ȳ;
+    /// broadcast C_M(w) (FedOpt).
+    Adam { lr: f64, beta1: f64, beta2: f64, tau: f64 },
+}
+
+/// One member of the unified algorithm family: coefficients, schedule,
+/// server transform, and the two compression descriptors. Build with the
+/// per-algorithm constructors; [`Engine::from_spec`] runs it over either
+/// store.
+pub struct AlgSpec {
+    /// registered name (one of [`FLEET_ALGS`])
+    pub name: String,
+    /// local gradient-step coefficient (η/(n(1−p)) for L2GD, the local
+    /// learning rate for the baselines)
+    pub local_coef: f64,
+    /// aggregation-step coefficient x ← x − a·(x − anchor); exactly 1 for
+    /// the reset-onto-the-broadcast baselines
+    pub agg_coef: f64,
+    pub schedule: ScheduleSpec,
+    pub server: ServerSpec,
+    /// client → master compression descriptor C_i
+    pub client_comp: Arc<dyn Compressor>,
+    /// master → clients compression descriptor C_M
+    pub master_comp: Arc<dyn Compressor>,
+}
+
+impl AlgSpec {
+    /// The paper's compressed L2GD (Algorithm 1) at fleet size `fleet_n`.
+    pub fn l2gd(alg: &L2gd, fleet_n: usize) -> anyhow::Result<AlgSpec> {
+        anyhow::ensure!(alg.p > 0.0 || alg.lambda == 0.0,
+                        "p = 0 only valid for λ = 0 (pure local training)");
+        Ok(AlgSpec {
+            name: "l2gd".into(),
+            local_coef: alg.local_coef(fleet_n),
+            agg_coef: alg.agg_coef(fleet_n),
+            schedule: ScheduleSpec::Coin { p: alg.p },
+            server: ServerSpec::Average,
+            client_comp: Arc::clone(&alg.client_comp),
+            master_comp: Arc::clone(&alg.master_comp),
+        })
+    }
+
+    /// FedAvg as the unified family's fixed-cadence, reset-to-anchor
+    /// member (Figs 7–8: FedAvg ≡ L2GD at ηλ/np = 1): `local_steps` local
+    /// iterations per round, uplink C(x_i), anchor = C_M(ȳ), aggregation
+    /// coefficient 1 (every arrived client resets onto the broadcast —
+    /// under full participation with identity wires this *is* FedAvg with
+    /// a uniform client average).
+    pub fn fedavg(local_lr: f64, local_steps: u64, client_spec: &str,
+                  master_spec: &str) -> anyhow::Result<AlgSpec> {
+        anyhow::ensure!(local_lr > 0.0, "fedavg local_lr must be positive");
+        anyhow::ensure!(local_steps > 0, "fedavg needs ≥ 1 local step per round");
+        Ok(AlgSpec {
+            name: "fedavg".into(),
+            local_coef: local_lr,
+            agg_coef: 1.0,
+            schedule: ScheduleSpec::Every { local_steps },
+            server: ServerSpec::Average,
+            client_comp: crate::compress::from_spec(client_spec)?,
+            master_comp: crate::compress::from_spec(master_spec)?,
+        })
+    }
+
+    /// FedOpt / FedAdam (Reddi et al. 2020): the FedAvg cadence with a
+    /// server Adam over the pseudo-gradient w − ȳ; the broadcast anchor
+    /// is the updated server model w.
+    pub fn fedopt(local_lr: f64, local_steps: u64, server_lr: f64,
+                  client_spec: &str, master_spec: &str) -> anyhow::Result<AlgSpec> {
+        anyhow::ensure!(local_lr > 0.0, "fedopt local_lr must be positive");
+        anyhow::ensure!(local_steps > 0, "fedopt needs ≥ 1 local step per round");
+        anyhow::ensure!(server_lr > 0.0, "fedopt server_lr must be positive");
+        Ok(AlgSpec {
+            name: "fedopt".into(),
+            local_coef: local_lr,
+            agg_coef: 1.0,
+            schedule: ScheduleSpec::Every { local_steps },
+            server: ServerSpec::Adam { lr: server_lr, beta1: 0.9, beta2: 0.99,
+                                       tau: 1e-3 },
+            client_comp: crate::compress::from_spec(client_spec)?,
+            master_comp: crate::compress::from_spec(master_spec)?,
+        })
+    }
+}
+
+/// Server-side anchor transform state (see [`ServerSpec`]).
+enum ServerOpt {
+    Average,
+    Adam {
+        /// the server model w (initialized to the shared init)
+        w: Vec<f32>,
+        m: Vec<f64>,
+        v: Vec<f64>,
+        lr: f64,
+        beta1: f64,
+        beta2: f64,
+        tau: f64,
+    },
+}
+
+/// The unified round engine — see the module docs. `S` picks the state
+/// storage; the [`AlgSpec`] picks the algorithm.
+pub struct Engine<'e, S: ClientStore> {
+    env: &'e FedEnv,
+    /// fleet size (may vastly exceed `env.n_clients()` data shards)
+    n: usize,
+    d: usize,
+    local_coef: f32,
+    agg_coef: f32,
+    store: S,
+    /// implicit value of every unmaterialized row (shared init; re-based
+    /// only by a full-fleet exact reset on CoW stores)
+    base: Vec<f32>,
+    /// last broadcast anchor
+    anchor: Vec<f32>,
+    /// true until the first fresh round: the anchor still *is* the base,
+    /// so cached aggregation on an unmaterialized row is a bitwise no-op
+    /// and must not materialize it
+    anchor_is_base: bool,
+    /// master accumulator ȳ = (1/|cohort|) Σ C_i(x_i)
+    ybar: Vec<f32>,
+    slots: HashMap<u32, CohortSlot>,
+    /// every client that has ever been in a cohort
+    touched: HashSet<u32>,
+    client_comp: Arc<dyn Compressor>,
+    master_state: Box<dyn CompressorState>,
+    master_buf: Compressed,
+    /// gradient buffer for the sequential cohort sweep (the pooled dense
+    /// sweep uses per-worker thread-local buffers)
+    grad: GradBuf,
+    schedule: Box<dyn CommSchedule>,
+    server: ServerOpt,
+    net: Network,
+    seed: u64,
+    /// canonical spec strings (frame header spec-id interning)
+    client_spec: String,
+    master_spec: String,
+    /// byte-accurate wire metering, enabled by the fleet simulator
+    framing: Option<Framing>,
+    /// exact (dense-compatible) evaluation when the fleet == data shards
+    exact_eval: bool,
+    // reusable scratch (the hot loops are allocation-bounded)
+    leaf_rows: Vec<f32>,
+    leaf_spans: Vec<(u32, u32)>,
+    release_scratch: Vec<u32>,
+    /// lazily built full-fleet cohort for the lockstep [`Engine::step`]
+    full: Vec<u32>,
+    /// bool-mask adapter scratch
+    mask_a: Vec<u32>,
+    mask_b: Vec<u32>,
+    /// error parked by a pooled sweep worker (allocates only on failure)
+    sweep_err: Mutex<Option<anyhow::Error>>,
+}
+
+/// The lockstep dense configuration (the historical `L2gdEngine`).
+pub type L2gdEngine<'e> = Engine<'e, DenseStore>;
+
+/// The copy-on-write fleet-scale configuration (the historical
+/// `ShardedL2gdEngine` — now just the generic engine over a
+/// [`ShardedStore`]).
+pub type ShardedL2gdEngine<'e> = Engine<'e, ShardedStore>;
+
+impl<'e, S: ClientStore> Engine<'e, S> {
+    /// L2GD (Algorithm 1) over a `fleet_n`-device fleet on `env`'s data
+    /// shards. `fleet_n == env.n_clients()` is the lockstep-equivalent
+    /// configuration (exact evaluation, identity data mapping).
+    pub fn new(alg: &L2gd, env: &'e FedEnv, fleet_n: usize)
+               -> anyhow::Result<Engine<'e, S>> {
+        Self::from_spec(&AlgSpec::l2gd(alg, fleet_n)?, env, fleet_n)
+    }
+
+    /// Build the engine for any member of the unified family.
+    pub fn from_spec(spec: &AlgSpec, env: &'e FedEnv, fleet_n: usize)
+                     -> anyhow::Result<Engine<'e, S>> {
+        anyhow::ensure!(fleet_n > 0, "empty fleet");
+        anyhow::ensure!(env.n_clients() > 0, "environment has no data shards");
+        let d = env.backend.param_count();
+        let local_coef = spec.local_coef as f32;
+        let agg_coef = spec.agg_coef as f32;
+        // x ← (1−a)x + a·anchor is a contraction toward the anchor only
+        // for a ∈ (0, 2); beyond 2 the aggregation step diverges. (The
+        // paper's stable regimes are a ∈ (0, 0.17] and a ≈ 1 — §VII-B;
+        // the fixed-cadence baselines sit at exactly 1.)
+        anyhow::ensure!(agg_coef.is_finite() && (0.0..2.0).contains(&agg_coef),
+                        "aggregation coefficient {agg_coef} outside [0,2): \
+                         aggregation diverges");
+        let init = env.backend.init_params();
+        let store = S::new_fleet(fleet_n, d, &init);
+        let schedule: Box<dyn CommSchedule> = match spec.schedule {
+            // the same coin stream whatever the store, so dense and
+            // sharded runs share one protocol trajectory
+            ScheduleSpec::Coin { p } => Box::new(Coin::new(p, env.seed ^ 0xC011)),
+            ScheduleSpec::Every { local_steps } => {
+                Box::new(FixedCadence::new(local_steps))
+            }
+        };
+        let server = match spec.server {
+            ServerSpec::Average => ServerOpt::Average,
+            ServerSpec::Adam { lr, beta1, beta2, tau } => ServerOpt::Adam {
+                w: init.clone(),
+                m: vec![0.0f64; d],
+                v: vec![0.0f64; d],
+                lr,
+                beta1,
+                beta2,
+                tau,
+            },
+        };
+        // Warm every worker's thread-local compression scratch and
+        // gradient buffer with throwaway state of the same shapes:
+        // client → worker assignment is dynamic, so without this a cold
+        // worker could take its first-use allocation in the middle of a
+        // measured steady state.
+        let comp = &spec.client_comp;
+        env.pool.on_each_worker(|w| {
+            let mut st = comp.instantiate(d, 0x3CA7F ^ w as u64);
+            let mut buf = Compressed::empty();
+            let probe = vec![0.0f32; d];
+            let _ = st.compress_into(&probe, &mut buf);
+            POOL_GRAD.with(|g| g.borrow_mut().grad.resize(d, 0.0));
+        });
+        // force the lazy per-shard train-batch cache off the hot path
+        let _ = env.train_batch_cached(0);
+        let net = Network::sharded(fleet_n, store.link_shard_size());
+        Ok(Engine {
+            env,
+            n: fleet_n,
+            d,
+            local_coef,
+            agg_coef,
+            store,
+            base: init.clone(),
+            anchor: init,
+            anchor_is_base: true,
+            ybar: vec![0.0f32; d],
+            slots: HashMap::new(),
+            touched: HashSet::new(),
+            client_comp: Arc::clone(&spec.client_comp),
+            master_state: spec.master_comp.instantiate(d, env.seed ^ 0x3a57e5),
+            master_buf: Compressed::empty(),
+            grad: GradBuf::with_dim(d),
+            schedule,
+            server,
+            net,
+            seed: env.seed,
+            client_spec: spec.client_comp.name(),
+            master_spec: spec.master_comp.name(),
+            framing: None,
+            exact_eval: fleet_n == env.n_clients(),
+            leaf_rows: Vec::new(),
+            leaf_spans: Vec::new(),
+            release_scratch: Vec::new(),
+            full: Vec::new(),
+            mask_a: Vec::new(),
+            mask_b: Vec::new(),
+            sweep_err: Mutex::new(None),
+        })
+    }
+
+    /// Fleet size.
+    pub fn n_fleet(&self) -> usize {
+        self.n
+    }
+
+    /// The client-state store (occupancy / resident-bytes assertions).
+    pub fn store(&self) -> &S {
+        &self.store
+    }
+
+    /// Distinct clients that have ever appeared in a cohort.
+    pub fn touched_clients(&self) -> usize {
+        self.touched.len()
+    }
+
+    pub fn net(&self) -> &Network {
+        &self.net
+    }
+
+    /// Client `i`'s effective model row (the base when undiverged).
+    pub fn row_or_base(&self, i: usize) -> &[f32] {
+        self.store.row(i).unwrap_or(&self.base)
+    }
+
+    /// The shared base vector missing rows implicitly equal.
+    pub fn base(&self) -> &[f32] {
+        &self.base
+    }
+
+    /// Data shard fleet device `i` trains/evaluates on — the canonical
+    /// `i mod data shards` mapping (documented in [`crate::sim`]).
+    pub fn data_shard(&self, i: usize) -> usize {
+        i % self.env.n_clients()
+    }
+
+    /// Switch the wire metering to byte-accurate frames: `LinkStats` is
+    /// fed the serialized frame size (header + byte-aligned payload), and
+    /// every frame is encode/decode roundtrip-checked. The training math —
+    /// and therefore the loss series — is unchanged.
+    pub fn enable_wire_framing(&mut self) {
+        self.framing = Some(Framing::new(&self.client_spec, &self.master_spec));
+    }
+
+    /// The frame spec-id table (present once framing is enabled).
+    pub fn spec_table(&self) -> Option<&SpecTable> {
+        self.framing.as_ref().map(|f| &f.table)
+    }
+
+    /// Deal the next iteration's step kind — the simulator's dispatch
+    /// point (lockstep [`Engine::step`] draws from the same schedule, so
+    /// a simulator that executes every drawn kind reproduces it exactly).
+    pub fn draw(&mut self) -> StepKind {
+        self.schedule.draw()
+    }
+
+    /// Schedule statistics (locals / fresh / cached counts).
+    pub fn coin_stats(&self) -> &CoinStats {
+        self.schedule.stats()
+    }
+
+    /// Lockstep full-participation iteration (step index `k` is used for
+    /// bit accounting only). On a warmed dense engine this performs zero
+    /// heap allocations.
+    pub fn step(&mut self, k: u64) -> anyhow::Result<()> {
+        if self.full.len() != self.n {
+            self.full = (0..self.n as u32).collect();
+        }
+        let full = std::mem::take(&mut self.full);
+        let res = match self.schedule.draw() {
+            StepKind::Local => self.step_local(&full),
+            StepKind::AggregateFresh => self
+                .compress_uplinks(&full)
+                .and_then(|()| self.complete_fresh(k, &full, &full)),
+            StepKind::AggregateCached => {
+                self.step_aggregate_cached(&full);
+                Ok(())
+            }
+        };
+        self.full = full;
+        res
+    }
+
+    /// Run `count` iterations starting after step `from` (so the last
+    /// step index is `from + count`).
+    pub fn run_steps(&mut self, from: u64, count: u64) -> anyhow::Result<()> {
+        for k in from + 1..=from + count {
+            self.step(k)?;
+        }
+        Ok(())
+    }
+
+    #[inline]
+    fn debug_check_cohort(cohort: &[u32], n: usize) {
+        debug_assert!(cohort.windows(2).all(|w| w[0] < w[1]),
+                      "cohort must be sorted and distinct");
+        debug_assert!(cohort.last().map_or(true, |&i| (i as usize) < n),
+                      "cohort id out of range");
+    }
+
+    /// Surface the first worker-parked pooled-sweep error.
+    fn take_sweep_err(&mut self) -> anyhow::Result<()> {
+        match self.sweep_err.get_mut().unwrap().take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Local gradient step for the cohort — each member materializes its
+    /// row on this first divergent step and updates it in place.
+    pub fn step_local(&mut self, cohort: &[u32]) -> anyhow::Result<()> {
+        Self::debug_check_cohort(cohort, self.n);
+        for &i in cohort {
+            self.touched.insert(i);
+        }
+        let env = self.env;
+        let coef = self.local_coef;
+        let nd = env.n_clients();
+        let d = self.d;
+        // Pooled full-fleet sweep over the flat matrix: dense store,
+        // cached static batches (no per-client RNG draws). Rows are
+        // disjoint and the arithmetic is per-row, so this is bit-identical
+        // to the sequential cohort loop below.
+        if cohort.len() == self.n && env.train_batch_cached(0).is_some() {
+            if let Some(m) = self.store.as_dense_mut() {
+                let err = &self.sweep_err;
+                env.pool.scope_chunks_mut(m.as_mut_slice(), d, |i, x| {
+                    let b = env.train_batch_cached(i % nd).expect("static batch");
+                    POOL_GRAD.with(|g| {
+                        let g = &mut *g.borrow_mut();
+                        match env.backend.grad_into(x, b, g) {
+                            Ok(()) => kernels::axpy(x, -coef, &g.grad),
+                            Err(e) => *err.lock().unwrap() = Some(e),
+                        }
+                    });
+                });
+                return self.take_sweep_err();
+            }
+        }
+        let seed = self.seed;
+        let comp = &self.client_comp;
+        let store = &mut self.store;
+        let base = &self.base;
+        let slots = &mut self.slots;
+        let grad = &mut self.grad;
+        for &i in cohort {
+            let ds = i as usize % nd;
+            let x = store.materialize(i as usize, base);
+            match env.train_batch_cached(ds) {
+                Some(b) => env.backend.grad_into(x, b, grad)?,
+                None => {
+                    let slot = slots
+                        .entry(i)
+                        .or_insert_with(|| new_slot(seed, d, comp, i));
+                    let b = env.backend.make_train_batch(&env.shards[ds], &mut slot.rng);
+                    env.backend.grad_into(x, &b, grad)?;
+                }
+            }
+            kernels::axpy(x, -coef, &grad.grad);
+        }
+        Ok(())
+    }
+
+    /// Cached-anchor aggregation for the cohort.
+    pub fn step_aggregate_cached(&mut self, cohort: &[u32]) {
+        Self::debug_check_cohort(cohort, self.n);
+        for &i in cohort {
+            self.touched.insert(i);
+        }
+        self.apply_aggregation(cohort);
+    }
+
+    /// Phase 1 of a fresh round: compress the cohort's effective models
+    /// into their (lazily created) wire buffers. Read-only on the store —
+    /// an undiverged member compresses the base without materializing.
+    pub fn compress_uplinks(&mut self, cohort: &[u32]) -> anyhow::Result<()> {
+        Self::debug_check_cohort(cohort, self.n);
+        let (seed, d) = (self.seed, self.d);
+        let comp = &self.client_comp;
+        let store = &self.store;
+        let base = &self.base;
+        let slots = &mut self.slots;
+        for &i in cohort {
+            self.touched.insert(i);
+            let x = store.row(i as usize).unwrap_or(base);
+            let slot = slots.entry(i).or_insert_with(|| new_slot(seed, d, comp, i));
+            slot.comp.compress_into(x, &mut slot.wire)?;
+        }
+        Ok(())
+    }
+
+    /// Serialized uplink frame size (bytes) for client `i`'s pending wire
+    /// buffer — valid after [`Engine::compress_uplinks`] included `i`.
+    pub fn uplink_frame_bytes(&self, i: usize) -> u64 {
+        let slot = self.slots.get(&(i as u32)).expect("client has no wire buffer");
+        (frame::HEADER_BYTES + slot.wire.payload.len()) as u64
+    }
+
+    /// Serialized downlink (anchor broadcast) frame size in bytes — valid
+    /// after a fresh aggregation round.
+    pub fn downlink_frame_bytes(&self) -> u64 {
+        (frame::HEADER_BYTES + self.master_buf.payload.len()) as u64
+    }
+
+    /// Phase 2: meter uplinks (`sampled` − `arrived` as discarded
+    /// straggler traffic), decode-accumulate ȳ over the arrived cohort
+    /// via fixed-leaf partials, run the server transform, broadcast the
+    /// anchor to the arrived cohort, and aggregate. Errors on an empty
+    /// cohort (the simulator skips the round instead).
+    pub fn complete_fresh(&mut self, k: u64, arrived: &[u32], sampled: &[u32])
+                          -> anyhow::Result<()> {
+        Self::debug_check_cohort(arrived, self.n);
+        Self::debug_check_cohort(sampled, self.n);
+        anyhow::ensure!(!arrived.is_empty(), "fresh aggregation with an empty cohort");
+        let count = arrived.len();
+        self.net.begin_round();
+        // meter every transmitted frame; only arrived devices participate
+        {
+            let slots = &self.slots;
+            let framing = &mut self.framing;
+            let net = &mut self.net;
+            let mut ai = 0usize;
+            for &i in sampled {
+                let is_arrived = ai < arrived.len() && arrived[ai] == i;
+                if is_arrived {
+                    ai += 1;
+                }
+                let slot = slots.get(&i).expect("sampled client has no wire buffer");
+                let bits = match framing {
+                    Some(f) => f.uplink_bits(k, i as usize, &slot.wire)?,
+                    None => slot.wire.bits,
+                };
+                if is_arrived {
+                    net.uplink(k, i as usize, bits);
+                } else {
+                    net.uplink_wasted(k, i as usize, bits);
+                }
+            }
+            debug_assert_eq!(ai, arrived.len(), "arrived must be a subset of sampled");
+        }
+        // master: ȳ = (1/count) Σ_arrived C_i(x_i). Small fleets
+        // accumulate sequentially (bit-identical to the seed); larger
+        // fleets reduce per-leaf partials over the pool and combine them
+        // in leaf order — deterministic, pool-size independent, and
+        // bit-equal to a flat reduction because absent leaves would only
+        // ever contribute +0.0.
+        let inv = 1.0 / count as f32;
+        if self.n <= REDUCE_LEAF {
+            self.ybar.fill(0.0);
+            for &i in arrived {
+                self.slots[&i].wire.decode_add(&mut self.ybar, inv);
+            }
+        } else {
+            let d = self.d;
+            self.leaf_spans.clear();
+            let mut start = 0usize;
+            while start < arrived.len() {
+                let leaf = arrived[start] as usize / REDUCE_LEAF;
+                let mut end = start + 1;
+                while end < arrived.len()
+                    && arrived[end] as usize / REDUCE_LEAF == leaf
+                {
+                    end += 1;
+                }
+                self.leaf_spans.push((start as u32, end as u32));
+                start = end;
+            }
+            self.leaf_rows.clear();
+            self.leaf_rows.resize(self.leaf_spans.len() * d, 0.0);
+            let spans = &self.leaf_spans;
+            let slots = &self.slots;
+            self.env.pool.scope_chunks_mut(&mut self.leaf_rows, d, |j, row| {
+                row.fill(0.0);
+                let (lo, hi) = spans[j];
+                for &i in &arrived[lo as usize..hi as usize] {
+                    slots[&i].wire.decode_add(row, inv);
+                }
+            });
+            self.ybar.fill(0.0);
+            for row in self.leaf_rows.chunks_exact(d) {
+                kernels::add_assign(&mut self.ybar, row);
+            }
+        }
+        // server transform: plain averaging broadcasts C_M(ȳ); server
+        // Adam treats Δ = w − ȳ as a pseudo-gradient, updates w, and
+        // broadcasts C_M(w)
+        let d = self.d;
+        let src: &[f32] = match &mut self.server {
+            ServerOpt::Average => &self.ybar,
+            ServerOpt::Adam { w, m, v, lr, beta1, beta2, tau } => {
+                for j in 0..d {
+                    let g = (w[j] - self.ybar[j]) as f64;
+                    m[j] = *beta1 * m[j] + (1.0 - *beta1) * g;
+                    v[j] = *beta2 * v[j] + (1.0 - *beta2) * g * g;
+                    w[j] -= (*lr * m[j] / (v[j].sqrt() + *tau)) as f32;
+                }
+                w.as_slice()
+            }
+        };
+        self.master_state.compress_into(src, &mut self.master_buf)?;
+        // downlink the anchor to the arrived cohort only
+        let down_bits = match &mut self.framing {
+            Some(f) => f.broadcast_bits(k, &self.master_buf)?,
+            None => self.master_buf.bits,
+        };
+        for &i in arrived {
+            self.net.downlink(k, i as usize, down_bits);
+        }
+        self.master_buf.decode_into(&mut self.anchor);
+        self.anchor_is_base = false;
+        self.net.end_round();
+        self.apply_aggregation(arrived);
+        Ok(())
+    }
+
+    /// A fresh attempt where nobody made the deadline: the cohort's
+    /// frames still metered as discarded traffic, nothing aggregates, the
+    /// anchor does not move, and the round records zero participants.
+    pub fn abort_fresh(&mut self, k: u64, sampled: &[u32]) -> anyhow::Result<()> {
+        Self::debug_check_cohort(sampled, self.n);
+        self.net.begin_round();
+        for &i in sampled {
+            let slot = self.slots.get(&i).expect("sampled client has no wire buffer");
+            let bits = match &mut self.framing {
+                Some(f) => f.uplink_bits(k, i as usize, &slot.wire)?,
+                None => slot.wire.bits,
+            };
+            self.net.uplink_wasted(k, i as usize, bits);
+        }
+        self.net.end_round();
+        Ok(())
+    }
+
+    /// `x_i ← x_i − a(x_i − anchor)` for the cohort. While the anchor is
+    /// still the base (no fresh round yet), the step is a bitwise no-op
+    /// on undiverged rows — they stay unmaterialized. On CoW stores a
+    /// *full-fleet* exact reset (a = 1, every client in the cohort — the
+    /// FedAvg regime) re-bases the implicit value onto the anchor and
+    /// releases every row that landed exactly on it: "fully reset by a
+    /// broadcast it equals, stores no row". (Re-basing is only sound when
+    /// no client is left holding the old implicit value, hence the
+    /// full-cohort guard; rows whose reset rounded off the anchor stay
+    /// resident, preserving bit-equality with the dense store.)
+    fn apply_aggregation(&mut self, cohort: &[u32]) {
+        let a = self.agg_coef;
+        // pooled full-fleet elementwise pass for dense stores when the
+        // sweep is large enough to amortize dispatch (serial and pooled
+        // orders are bit-identical — the kernel is elementwise)
+        if !S::COW && cohort.len() == self.n {
+            let d = self.d;
+            let nd_total = self.n * d;
+            let anchor = &self.anchor;
+            if let Some(m) = self.store.as_dense_mut() {
+                if nd_total < 1 << 15 {
+                    for x in m.rows_mut() {
+                        kernels::aggregation_step(x, a, anchor);
+                    }
+                } else {
+                    self.env.pool.scope_chunks_mut(m.as_mut_slice(), d, |_i, x| {
+                        kernels::aggregation_step(x, a, anchor);
+                    });
+                }
+                return;
+            }
+        }
+        for &i in cohort {
+            if self.anchor_is_base && self.store.row(i as usize).is_none() {
+                // x = base, anchor = base ⇒ x − a·(x − x) ≡ x bitwise
+                continue;
+            }
+            let x = self.store.materialize(i as usize, &self.base);
+            kernels::aggregation_step(x, a, &self.anchor);
+        }
+        if S::COW && a == 1.0 && cohort.len() == self.n && !self.anchor_is_base {
+            self.base.copy_from_slice(&self.anchor);
+            self.anchor_is_base = true; // anchor ≡ base again
+            {
+                let scratch = &mut self.release_scratch;
+                scratch.clear();
+                let base = &self.base;
+                self.store.for_each_row(|id, row| {
+                    if row == &base[..] {
+                        scratch.push(id as u32);
+                    }
+                });
+            }
+            let scratch = std::mem::take(&mut self.release_scratch);
+            for &i in &scratch {
+                self.store.release(i as usize);
+            }
+            self.release_scratch = scratch;
+        }
+    }
+
+    // --- bool-mask adapters -------------------------------------------------
+    //
+    // The historical `&[bool]` participation surface, kept only for the
+    // lockstep/equivalence tests: each adapter translates its mask to a
+    // sorted cohort (reusable scratch) and calls the id-list entry point,
+    // so the two surfaces are bit-identical by construction — pinned by
+    // the adapter-equivalence tests in `tests/integration_fleet_algs.rs`.
+
+    fn mask_to(mask: &[bool], out: &mut Vec<u32>) {
+        out.clear();
+        for (i, &b) in mask.iter().enumerate() {
+            if b {
+                out.push(i as u32);
+            }
+        }
+    }
+
+    /// [`Engine::step_local`] over a participation mask.
+    pub fn step_local_masked(&mut self, active: &[bool]) -> anyhow::Result<()> {
+        anyhow::ensure!(active.len() == self.n,
+                        "participation mask length {} != n {}", active.len(), self.n);
+        let mut c = std::mem::take(&mut self.mask_a);
+        Self::mask_to(active, &mut c);
+        let res = self.step_local(&c);
+        self.mask_a = c;
+        res
+    }
+
+    /// [`Engine::step_aggregate_cached`] over a participation mask.
+    pub fn step_aggregate_cached_masked(&mut self, active: &[bool]) {
+        assert_eq!(active.len(), self.n, "participation mask length != n");
+        let mut c = std::mem::take(&mut self.mask_a);
+        Self::mask_to(active, &mut c);
+        self.step_aggregate_cached(&c);
+        self.mask_a = c;
+    }
+
+    /// [`Engine::compress_uplinks`] over a participation mask.
+    pub fn compress_uplinks_masked(&mut self, sampled: &[bool]) -> anyhow::Result<()> {
+        anyhow::ensure!(sampled.len() == self.n,
+                        "participation mask length {} != n {}", sampled.len(), self.n);
+        let mut c = std::mem::take(&mut self.mask_a);
+        Self::mask_to(sampled, &mut c);
+        let res = self.compress_uplinks(&c);
+        self.mask_a = c;
+        res
+    }
+
+    /// [`Engine::complete_fresh`] over participation masks.
+    pub fn complete_fresh_masked(&mut self, k: u64, arrived: &[bool],
+                                 sampled: &[bool]) -> anyhow::Result<()> {
+        anyhow::ensure!(arrived.len() == self.n && sampled.len() == self.n,
+                        "participation mask length != n {}", self.n);
+        let mut a = std::mem::take(&mut self.mask_a);
+        let mut s = std::mem::take(&mut self.mask_b);
+        Self::mask_to(arrived, &mut a);
+        Self::mask_to(sampled, &mut s);
+        let res = self.complete_fresh(k, &a, &s);
+        self.mask_a = a;
+        self.mask_b = s;
+        res
+    }
+
+    /// [`Engine::abort_fresh`] over a participation mask.
+    pub fn abort_fresh_masked(&mut self, k: u64, sampled: &[bool])
+                              -> anyhow::Result<()> {
+        anyhow::ensure!(sampled.len() == self.n,
+                        "participation mask length {} != n {}", sampled.len(), self.n);
+        let mut c = std::mem::take(&mut self.mask_a);
+        Self::mask_to(sampled, &mut c);
+        let res = self.abort_fresh(k, &c);
+        self.mask_a = c;
+        res
+    }
+
+    // --- evaluation ---------------------------------------------------------
+
+    /// Evaluate into a `Record`. Exact (store-view) evaluation when the
+    /// fleet equals the data-shard count; O(occupancy) at fleet scale.
+    pub fn evaluate(&self, step: u64) -> anyhow::Result<Record> {
+        if self.exact_eval {
+            return evaluate(self.env, self.store.view(&self.base), step, &self.net);
+        }
+        self.evaluate_touched(step)
+    }
+
+    /// Personalized metrics in touched-mode evaluation cover at most this
+    /// many divergent rows (deterministic materialization order): keeps a
+    /// record's cost bounded however many clients a long run touches. The
+    /// global-model metrics are always exact over the whole fleet.
+    pub const PERSONAL_EVAL_CAP: usize = 2048;
+
+    /// Fleet-scale evaluation in O(occupancy): exact global mean via the
+    /// base identity `x̄ = ((n−m)·base + Σ materialized)/n`, personalized
+    /// metrics averaged over (a capped sample of) the divergent clients
+    /// (the base on data shard 0 when nothing has diverged yet).
+    fn evaluate_touched(&self, step: u64) -> anyhow::Result<Record> {
+        let be = &self.env.backend;
+        let m = self.store.materialized_rows();
+        let mut global = vec![0.0f32; self.d];
+        self.store.for_each_row(|_, row| kernels::add_assign(&mut global, row));
+        let n_f = self.n as f32;
+        kernels::scale(&mut global, 1.0 / n_f);
+        kernels::axpy(&mut global, (self.n - m) as f32 / n_f, &self.base);
+        let train = be.eval(&global, self.env.train_eval_batch())?;
+        let test = be.eval(&global, self.env.test_batch())?;
+
+        let nd = self.env.n_clients();
+        let (mut pl, mut pa, mut cnt) = (0.0f64, 0.0f64, 0usize);
+        self.store.for_each_row(|i, row| {
+            if cnt >= Self::PERSONAL_EVAL_CAP {
+                return;
+            }
+            match be.eval(row, self.env.shard_eval_batch(i % nd)) {
+                Ok(e) => {
+                    pl += e.loss;
+                    pa += e.accuracy;
+                }
+                Err(_) => {
+                    pl += f64::NAN;
+                    pa += f64::NAN;
+                }
+            }
+            cnt += 1;
+        });
+        let (personal_loss, personal_acc) = if cnt == 0 {
+            let e = be.eval(&self.base, self.env.shard_eval_batch(0))?;
+            (e.loss, e.accuracy)
+        } else {
+            (pl / cnt as f64, pa / cnt as f64)
+        };
+        Ok(Record {
+            step,
+            comm_rounds: self.net.comm_rounds(),
+            bits_per_client: self.net.bits_per_client(),
+            bits_up: self.net.total_bits_up(),
+            bits_down: self.net.total_bits_down(),
+            train_loss: train.loss,
+            train_acc: train.accuracy,
+            test_loss: test.loss,
+            test_acc: test.accuracy,
+            personal_loss,
+            personal_acc,
+            sim_time_s: self.net.simulated_comm_time_s(),
+            participants: self.net.last_round_participants(),
+        })
+    }
+}
+
+impl<'e> Engine<'e, DenseStore> {
+    /// The per-client models (row i = client i) — the lockstep tests' and
+    /// benches' view of the dense store.
+    pub fn xs(&self) -> &ParamMatrix {
+        self.store.matrix()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::runtime::NativeLogreg;
+    use crate::util::threadpool::ThreadPool;
+    use std::sync::Arc;
+
+    fn env(n: usize, seed: u64) -> FedEnv {
+        let (data, test) = synth::logistic_split(50 * n, 100, 16, 0.02, seed);
+        let shards = data.split_contiguous(n);
+        FedEnv::new(Arc::new(NativeLogreg::new(16, 0.01, 64, 128)),
+                    shards, data, test, ThreadPool::new(4), seed)
+    }
+
+    fn assert_rows_equal(dense: &L2gdEngine, cow: &ShardedL2gdEngine, tag: &str) {
+        for i in 0..dense.xs().n_rows() {
+            assert_eq!(dense.xs().row(i), cow.row_or_base(i), "{tag}: row {i}");
+        }
+    }
+
+    fn assert_records_equal(a: &Record, b: &Record, tag: &str) {
+        assert_eq!(a.train_loss, b.train_loss, "{tag}");
+        assert_eq!(a.test_loss, b.test_loss, "{tag}");
+        assert_eq!(a.personal_loss, b.personal_loss, "{tag}");
+        assert_eq!(a.personal_acc, b.personal_acc, "{tag}");
+        assert_eq!(a.bits_up, b.bits_up, "{tag}");
+        assert_eq!(a.bits_down, b.bits_down, "{tag}");
+        assert_eq!(a.comm_rounds, b.comm_rounds, "{tag}");
+    }
+
+    /// Tentpole: one generic engine, two stores, bit-identical lockstep
+    /// series — small fleet (sequential master accumulate) on stochastic
+    /// wires.
+    #[test]
+    fn lockstep_matches_across_stores_small_fleet() {
+        for wire in ["identity", "natural", "qsgd:8"] {
+            let e = env(5, 31);
+            let alg = L2gd::from_local_and_agg(0.35, 0.4, 0.5, 5, wire, wire).unwrap();
+            let mut dense = alg.engine(&e).unwrap();
+            let mut cow = ShardedL2gdEngine::new(&alg, &e, 5).unwrap();
+            for k in 1..=120 {
+                dense.step(k).unwrap();
+                cow.step(k).unwrap();
+            }
+            assert_rows_equal(&dense, &cow, wire);
+            let rd = dense.evaluate(120).unwrap();
+            let rc = cow.evaluate(120).unwrap();
+            assert_records_equal(&rd, &rc, wire);
+        }
+    }
+
+    /// n > REDUCE_LEAF exercises the pooled leaf-partial aggregation on
+    /// both stores.
+    #[test]
+    fn lockstep_matches_across_stores_tree_path() {
+        let e = env(12, 32);
+        let alg = L2gd::from_local_and_agg(0.4, 0.3, 0.5, 12,
+                                           "natural", "natural").unwrap();
+        let mut dense = alg.engine(&e).unwrap();
+        let mut cow = ShardedL2gdEngine::new(&alg, &e, 12).unwrap();
+        for k in 1..=100 {
+            dense.step(k).unwrap();
+            cow.step(k).unwrap();
+        }
+        assert_rows_equal(&dense, &cow, "tree");
+        assert_records_equal(&dense.evaluate(100).unwrap(),
+                             &cow.evaluate(100).unwrap(), "tree");
+    }
+
+    /// Partial participation: the cohort entry points agree across stores,
+    /// including straggler metering.
+    #[test]
+    fn partial_participation_matches_across_stores() {
+        let e = env(12, 33);
+        let alg = L2gd::from_local_and_agg(0.4, 0.3, 0.5, 12,
+                                           "natural", "natural").unwrap();
+        let mut dense = alg.engine(&e).unwrap();
+        let mut cow = ShardedL2gdEngine::new(&alg, &e, 12).unwrap();
+        let all: Vec<u32> = (0..12).collect();
+        let act: Vec<u32> = vec![0, 2, 3, 5, 8, 9, 11];
+        let sampled: Vec<u32> = vec![0, 2, 5, 8, 11];
+        let arrived: Vec<u32> = vec![2, 5, 11];
+
+        dense.step_local(&all).unwrap();
+        cow.step_local(&all).unwrap();
+        dense.step_local(&act).unwrap();
+        cow.step_local(&act).unwrap();
+
+        dense.compress_uplinks(&sampled).unwrap();
+        cow.compress_uplinks(&sampled).unwrap();
+        dense.complete_fresh(1, &arrived, &sampled).unwrap();
+        cow.complete_fresh(1, &arrived, &sampled).unwrap();
+        assert_rows_equal(&dense, &cow, "after fresh");
+
+        dense.step_aggregate_cached(&act);
+        cow.step_aggregate_cached(&act);
+        dense.step_local(&sampled).unwrap();
+        cow.step_local(&sampled).unwrap();
+        assert_rows_equal(&dense, &cow, "after cached+local");
+
+        // wasted straggler traffic meters identically
+        assert_eq!(dense.net().total_bits_up(), cow.net().total_bits_up());
+        assert_eq!(dense.net().total_bits_down(), cow.net().total_bits_down());
+        assert_eq!(dense.net().last_round_participants(),
+                   cow.net().last_round_participants());
+    }
+
+    /// The copy-on-write contract at fleet scale: untouched devices store
+    /// nothing, cohort compression does not materialize, local steps do.
+    #[test]
+    fn occupancy_scales_with_touched_not_fleet() {
+        let e = env(5, 34);
+        let alg = L2gd::from_local_and_agg(0.4, 0.3, 0.5, 100_000,
+                                           "natural", "natural").unwrap();
+        let mut cow = ShardedL2gdEngine::new(&alg, &e, 100_000).unwrap();
+        assert_eq!(cow.store().materialized_rows(), 0);
+        assert!(cow.store().n_shards() > 1);
+
+        // a cohort that only compresses (fresh phase 1) stays row-free
+        let sampled: Vec<u32> = (0..64u32).map(|j| j * 997).collect();
+        cow.compress_uplinks(&sampled).unwrap();
+        assert_eq!(cow.store().materialized_rows(), 0,
+                   "uplink compression must not materialize rows");
+        assert_eq!(cow.touched_clients(), 64);
+        cow.complete_fresh(1, &sampled, &sampled).unwrap();
+        // the aggregation step materializes only the cohort
+        assert!(cow.store().materialized_rows() <= 64);
+
+        // local steps materialize their cohort
+        let workers: Vec<u32> = (0..40u32).map(|j| 1000 + j * 131).collect();
+        cow.step_local(&workers).unwrap();
+        assert!(cow.store().materialized_rows() <= 64 + 40);
+        assert_eq!(cow.touched_clients(), 104);
+        assert!(cow.row_or_base(99_999) == cow.base(), "untouched ⇒ base");
+        assert!(cow.store().row(99_999).is_none());
+
+        // resident bytes track occupancy, not the 100k fleet
+        let rows = cow.store().materialized_rows();
+        let per_row = 16 * 4 + 64;
+        assert!(cow.store().resident_bytes() <= 4 * rows * per_row + 64 * 1024,
+                "resident {} B for {rows} rows", cow.store().resident_bytes());
+
+        // fleet-scale evaluation is finite and O(occupancy)
+        let rec = cow.evaluate(2).unwrap();
+        assert!(rec.train_loss.is_finite());
+        assert!(rec.personal_loss.is_finite());
+    }
+
+    /// The FedAvg-equivalence regime (ηλ/np = 1, full cohort): a fresh
+    /// broadcast resets every client onto the anchor, the CoW engine
+    /// re-bases the implicit value, releases the rows the reset landed
+    /// exactly on that value — and stays bit-identical to the dense
+    /// engine throughout.
+    #[test]
+    fn full_fleet_exact_reset_rebases_and_releases() {
+        let e = env(4, 36);
+        // p=0.5, n=4, η=1, λ=2 ⇒ ηλ/np = 1.0 exactly
+        let alg = L2gd::new(0.5, 2.0, 1.0, 4, "identity", "identity").unwrap();
+        assert_eq!(alg.agg_coef(4) as f32, 1.0);
+        let mut dense = alg.engine(&e).unwrap();
+        let mut cow = ShardedL2gdEngine::new(&alg, &e, 4).unwrap();
+        let init: Vec<f32> = cow.base().to_vec();
+        let all: Vec<u32> = (0..4).collect();
+        // diverge, then commit a full-fleet fresh round at a = 1
+        dense.step_local(&all).unwrap();
+        cow.step_local(&all).unwrap();
+        assert_eq!(cow.store().materialized_rows(), 4);
+        dense.compress_uplinks(&all).unwrap();
+        cow.compress_uplinks(&all).unwrap();
+        dense.complete_fresh(1, &all, &all).unwrap();
+        cow.complete_fresh(1, &all, &all).unwrap();
+        // bit-identical state regardless of what was released...
+        assert_rows_equal(&dense, &cow, "post-reset");
+        // ...and the re-base happened: the implicit value moved off the
+        // init; rows whose reset rounded may stay resident
+        assert_ne!(cow.base(), &init[..]);
+        assert!(cow.store().materialized_rows() <= 4);
+        // a second consecutive reset lands every row exactly on the
+        // anchor (all rows are within ulps of ȳ, so x − (x − ȳ) is exact
+        // by Sterbenz) — the store must be fully reclaimed
+        dense.compress_uplinks(&all).unwrap();
+        cow.compress_uplinks(&all).unwrap();
+        dense.complete_fresh(2, &all, &all).unwrap();
+        cow.complete_fresh(2, &all, &all).unwrap();
+        assert_rows_equal(&dense, &cow, "second reset");
+        assert_eq!(cow.store().materialized_rows(), 0,
+                   "back-to-back a = 1 full-fleet resets must release every row");
+        // training continues identically after the reclaim
+        dense.step_local(&all).unwrap();
+        cow.step_local(&all).unwrap();
+        assert_rows_equal(&dense, &cow, "post-reset local");
+    }
+
+    /// Pre-communication cached aggregation is a bitwise no-op on
+    /// undiverged rows and must not materialize them.
+    #[test]
+    fn cached_aggregation_before_first_broadcast_stays_implicit() {
+        let e = env(5, 35);
+        let alg = L2gd::from_local_and_agg(0.5, 0.3, 0.5, 1000,
+                                           "identity", "identity").unwrap();
+        let mut cow = ShardedL2gdEngine::new(&alg, &e, 1000).unwrap();
+        let cohort: Vec<u32> = (0..200).collect();
+        cow.step_aggregate_cached(&cohort);
+        assert_eq!(cow.store().materialized_rows(), 0);
+        assert_eq!(cow.touched_clients(), 200);
+    }
+
+    /// FedAvg on the unified engine: fixed cadence, reset-to-anchor.
+    /// Under lockstep full participation the fleet learns and every
+    /// (T+1)-th iteration communicates.
+    #[test]
+    fn fedavg_spec_learns_on_both_stores() {
+        let spec = AlgSpec::fedavg(0.5, 3, "identity", "identity").unwrap();
+        let e = env(4, 40);
+        let mut dense = Engine::<DenseStore>::from_spec(&spec, &e, 4).unwrap();
+        let mut cow = Engine::<ShardedStore>::from_spec(&spec, &e, 4).unwrap();
+        let init: Vec<f32> = cow.base().to_vec();
+        let first_d = dense.evaluate(0).unwrap();
+        for k in 1..=120 {
+            dense.step(k).unwrap();
+            cow.step(k).unwrap();
+        }
+        assert_rows_equal(&dense, &cow, "fedavg");
+        let rd = dense.evaluate(120).unwrap();
+        let rc = cow.evaluate(120).unwrap();
+        assert_records_equal(&rd, &rc, "fedavg");
+        // 120 iterations at T = 3 ⇒ 30 communicating rounds exactly
+        assert_eq!(rd.comm_rounds, 30);
+        assert_eq!(dense.coin_stats().fresh, 30);
+        assert_eq!(dense.coin_stats().cached, 0);
+        assert!(rd.train_loss < first_d.train_loss,
+                "fedavg must learn: {} -> {}", first_d.train_loss, rd.train_loss);
+        // reset-to-anchor at full participation: iteration 120 is a fresh
+        // round, so every client just reset onto the broadcast and the
+        // full-fleet re-base released every row whose reset landed
+        // exactly on the anchor — occupancy can only be the rounded few
+        assert!(cow.store().materialized_rows() <= 4,
+                "a=1 full-fleet reset must re-base (rows: {})",
+                cow.store().materialized_rows());
+        assert_ne!(cow.base(), &init[..],
+                   "the implicit base must track the broadcast");
+    }
+
+    /// FedOpt on the unified engine: server Adam moves the anchor, the
+    /// run learns, and dense ≡ sharded bit for bit.
+    #[test]
+    fn fedopt_spec_learns_and_matches_across_stores() {
+        let spec = AlgSpec::fedopt(0.5, 2, 0.05, "identity", "identity").unwrap();
+        let e = env(4, 41);
+        let mut dense = Engine::<DenseStore>::from_spec(&spec, &e, 4).unwrap();
+        let mut cow = Engine::<ShardedStore>::from_spec(&spec, &e, 4).unwrap();
+        let first = dense.evaluate(0).unwrap();
+        for k in 1..=90 {
+            dense.step(k).unwrap();
+            cow.step(k).unwrap();
+        }
+        assert_rows_equal(&dense, &cow, "fedopt");
+        let rd = dense.evaluate(90).unwrap();
+        assert_records_equal(&rd, &cow.evaluate(90).unwrap(), "fedopt");
+        assert_eq!(rd.comm_rounds, 30); // every 3rd iteration at T = 2
+        assert!(rd.train_loss < first.train_loss,
+                "fedopt must learn: {} -> {}", first.train_loss, rd.train_loss);
+        assert!(rd.train_loss.is_finite());
+    }
+
+    /// Invalid baseline parameters are rejected at spec construction.
+    #[test]
+    fn alg_spec_validates_parameters() {
+        assert!(AlgSpec::fedavg(0.0, 3, "identity", "identity").is_err());
+        assert!(AlgSpec::fedavg(0.5, 0, "identity", "identity").is_err());
+        assert!(AlgSpec::fedopt(0.5, 2, 0.0, "identity", "identity").is_err());
+        assert!(AlgSpec::fedavg(0.5, 3, "warp-drive", "identity").is_err());
+        let l2gd = L2gd::new(0.0, 1.0, 1.0, 4, "identity", "identity").unwrap();
+        assert!(AlgSpec::l2gd(&l2gd, 4).is_err(), "p = 0 with λ > 0");
+    }
+}

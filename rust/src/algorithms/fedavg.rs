@@ -22,6 +22,15 @@
 //! compression, memory update — runs as one pooled sweep with zero
 //! steady-state allocation (the cached-batch convex path), against the
 //! environment's cached batches.
+//!
+//! This is the **lockstep** FedAvg (full participation, |D_i|-weighted
+//! aggregation, difference compression) pinned bit-for-bit against the
+//! seed-semantics oracle in [`super::reference`]. At *fleet* scale —
+//! cohort sampling, churn, stragglers, a million devices — FedAvg runs
+//! as [`super::engine::AlgSpec::fedavg`] on the generic cohort engine
+//! instead: the unified-formulation member with a fixed local-step
+//! cadence and aggregation coefficient 1 (Figs 7–8), driven by
+//! [`crate::sim::FleetSim`] under `alg=fedavg` scenarios.
 
 use std::sync::Arc;
 

@@ -8,6 +8,13 @@
 //! buffer in its slot, and the whole client round runs as one pooled sweep
 //! against the environment's cached batches with zero steady-state
 //! allocation on the convex path.
+//!
+//! This is the **lockstep** FedOpt (full participation, |D_i|-weighted
+//! pseudo-gradient), pinned against the [`super::reference`] oracle. At
+//! fleet scale FedOpt runs as [`super::engine::AlgSpec::fedopt`] on the
+//! generic cohort engine: the fixed-cadence family member whose server
+//! transform is Adam on w − ȳ, driven by [`crate::sim::FleetSim`] under
+//! `alg=fedopt` scenarios.
 
 use super::{client_rngs, drain_slot_errors, evaluate, FedAlgorithm, FedEnv, ModelView};
 use crate::metrics::Series;

@@ -1,5 +1,4 @@
-//! Compressed L2GD — Algorithm 1 of the paper — executed by a
-//! **zero-steady-state-allocation round engine**.
+//! Compressed L2GD — Algorithm 1 of the paper.
 //!
 //! State: personalized models x_1..x_n, a cached aggregation anchor, and
 //! the ξ coin. Per iteration k:
@@ -20,133 +19,21 @@
 //! sweet spots are (0, 0.17] and ≈ 1 (§VII-B), and exactly 1 recovers
 //! FedAvg with a random number of local steps (Figs 7–8).
 //!
-//! ### Engine layout ([`L2gdEngine`])
-//! The n models live in one contiguous [`ParamMatrix`] (row per client);
-//! every per-client resource — batch-sampling RNG stream, gradient buffer,
-//! compressor state, wire buffer — lives in that client's [`ClientSlot`].
-//! Local steps run `Backend::grad_into` against the environment's cached
-//! batch and apply the update in the same pooled sweep over disjoint
-//! matrix rows; aggregation is a single parallel pass over the matrix; the
-//! master's decode-accumulate runs as a pooled tree reduction over fixed
-//! 8-client leaves (fixed leaf size ⇒ results are independent of the pool
-//! size, and for n ≤ 8 bit-identical to the seed's sequential loop).
-//! After the first communication round, a steady-state step touches the
-//! allocator **zero** times — asserted under a counting global allocator
-//! in `benches/perf_round_latency.rs` and `pfl bench`.
-//!
-//! ### Partial participation (the fleet simulator's entry points)
-//! Every phase also exists in a masked form — [`L2gdEngine::step_local`],
-//! [`L2gdEngine::compress_uplinks`] / [`L2gdEngine::complete_fresh`],
-//! [`L2gdEngine::step_aggregate_cached`] — driven by the discrete-event
-//! simulator in [`crate::sim`]: only available devices take local steps,
-//! only the sampled-and-arrived cohort uplinks and receives the anchor.
-//! The masked sweeps run the *same* arithmetic in the same order, so an
-//! all-true mask reproduces the lockstep series bit for bit.
-//! [`L2gdEngine::enable_wire_framing`] switches the metering (not the
-//! math) to byte-accurate wire frames: each payload is framed with a
-//! [`crate::transport::frame`] header, decode-roundtripped, and `LinkStats`
-//! is fed the serialized frame size instead of the theoretical bit count.
+//! This module holds the **configuration** ([`L2gd`]): the execution
+//! lives in the generic round engine ([`super::engine::Engine`]), which
+//! runs the same protocol over a dense [`crate::model::ParamMatrix`]
+//! ([`L2gdEngine`] — the lockstep path, zero steady-state allocation) or
+//! a copy-on-write [`crate::model::ShardedStore`]
+//! ([`super::ShardedL2gdEngine`] — the million-device fleet path), with
+//! the schedule and server transform pluggable for the FedAvg/FedOpt
+//! baselines ([`super::engine::AlgSpec`]).
 
 use std::sync::Arc;
 
-use super::{drain_slot_errors, evaluate, FedAlgorithm, FedEnv, ModelView};
-use crate::compress::{Compressed, Compressor, CompressorState};
+pub use super::engine::{client_stream, L2gdEngine, COMP_STREAM_SALT};
+use super::{FedAlgorithm, FedEnv};
+use crate::compress::Compressor;
 use crate::metrics::Series;
-use crate::model::{kernels, ParamMatrix};
-use crate::protocol::{Coin, StepKind};
-use crate::runtime::{Backend as _, GradBuf};
-use crate::transport::frame::{self, FrameHeader, SpecTable};
-use crate::transport::Network;
-use crate::util::rng::stream_seed;
-use crate::util::Rng;
-
-/// Clients per leaf of the master's decode-accumulate tree reduction.
-/// Constant (not pool-derived) so the reduction order — and therefore the
-/// training series — is machine-independent; n ≤ LEAF degenerates to the
-/// seed's exact sequential accumulation. Shared with the sharded cohort
-/// engine, whose shard boundaries are multiples of it (a leaf never
-/// straddles a shard, so the per-shard partials compose bit-exactly into
-/// this flat reduction).
-pub(crate) const REDUCE_LEAF: usize = 8;
-
-/// Salt for per-client compression-stream seeds: client i's compressor
-/// state is seeded `stream_seed(env.seed ^ COMP_STREAM_SALT, i)` — O(1)
-/// random access, so the sharded cohort engine can instantiate the
-/// *identical* stream lazily on a client's first touch. The reference
-/// oracle derives its seeds the same way.
-pub(crate) const COMP_STREAM_SALT: u64 = 0xC09B;
-
-/// Per-client batch-sampling stream for client `i` — the random-access
-/// counterpart of the old sequential fork walk, shared by the dense
-/// engine, the reference oracle, and the sharded cohort engine.
-pub(crate) fn client_stream(seed: u64, i: usize) -> Rng {
-    Rng::stream(seed, i as u64 + 1)
-}
-
-/// Participation mask test: `None` is the lockstep full-participation
-/// path (no branch on the seed-equivalence path beyond this inlined
-/// `map_or`), `Some(mask)` restricts a sweep to the marked clients.
-#[inline]
-fn on(mask: Option<&[bool]>, i: usize) -> bool {
-    mask.map_or(true, |m| m[i])
-}
-
-/// Byte-accurate wire mode (see the module docs): spec-id table plus a
-/// reusable frame buffer. Metering-only — the training math never touches
-/// this. Shared with the sharded cohort engine.
-pub(crate) struct Framing {
-    pub(crate) table: SpecTable,
-    pub(crate) client_id: u16,
-    pub(crate) master_id: u16,
-    pub(crate) buf: Vec<u8>,
-}
-
-impl Framing {
-    /// Intern the two wire specs and start with an empty frame buffer.
-    pub(crate) fn new(client_spec: &str, master_spec: &str) -> Framing {
-        let mut table = SpecTable::new();
-        let client_id = table.intern(client_spec);
-        let master_id = table.intern(master_spec);
-        Framing { table, client_id, master_id, buf: Vec::new() }
-    }
-
-    /// Encode, decode back, verify, and return the serialized size in bits.
-    fn roundtrip(&mut self, h: FrameHeader, payload: &[u8]) -> anyhow::Result<u64> {
-        frame::encode_frame(&h, payload, &mut self.buf);
-        let (h2, p2) = frame::decode_frame(&self.buf)?;
-        anyhow::ensure!(h2 == h && p2 == payload,
-                        "wire frame roundtrip mismatch at step {}", h.round);
-        Ok((self.buf.len() * 8) as u64)
-    }
-
-    pub(crate) fn uplink_bits(&mut self, k: u64, client: usize, wire: &Compressed)
-                              -> anyhow::Result<u64> {
-        let h = FrameHeader::uplink(k, client, self.client_id, wire)?;
-        self.roundtrip(h, &wire.payload)
-    }
-
-    pub(crate) fn broadcast_bits(&mut self, k: u64, wire: &Compressed)
-                                 -> anyhow::Result<u64> {
-        let h = FrameHeader::broadcast(k, self.master_id, wire)?;
-        self.roundtrip(h, &wire.payload)
-    }
-}
-
-/// Per-client engine state: everything a worker touches for client i,
-/// packed together so the pooled sweeps need no locks and no allocation.
-struct ClientSlot {
-    /// batch-sampling stream (only drawn from for non-static backends)
-    rng: Rng,
-    /// reusable gradient output buffer
-    grad: GradBuf,
-    /// stateful compressor instance (own RNG stream, EF residual)
-    comp: Box<dyn CompressorState>,
-    /// reusable wire buffer
-    wire: Compressed,
-    /// error parked by a worker, surfaced after the sweep (allocates only
-    /// on the failure path)
-    err: Option<anyhow::Error>,
-}
 
 pub struct L2gd {
     /// aggregation probability p ∈ (0, 1)
@@ -204,406 +91,11 @@ impl L2gd {
         self.eta * self.lambda / (n as f64 * self.p)
     }
 
-    /// Build the stepping engine (validates the configuration against the
-    /// environment). The engine borrows `env`; [`L2gdEngine::step`] then
+    /// Build the lockstep (dense-store) engine over `env` (validates the
+    /// configuration). The engine borrows `env`; [`L2gdEngine::step`] then
     /// advances one protocol iteration with zero steady-state allocation.
     pub fn engine<'e>(&self, env: &'e FedEnv) -> anyhow::Result<L2gdEngine<'e>> {
-        L2gdEngine::new(self, env)
-    }
-}
-
-/// The stepping round engine. See the module docs for the layout.
-pub struct L2gdEngine<'e> {
-    env: &'e FedEnv,
-    local_coef: f32,
-    agg_coef: f32,
-    /// n × d personalized models, row per client
-    xs: ParamMatrix,
-    /// last broadcast C_M(ȳ) (Algorithm 1's cached anchor)
-    anchor: Vec<f32>,
-    /// master accumulator ȳ = (1/n) Σ C_i(x_i)
-    ybar: Vec<f32>,
-    /// per-leaf partial sums of the pooled tree reduction (0 rows when the
-    /// serial path is used, i.e. n ≤ REDUCE_LEAF)
-    reduce: ParamMatrix,
-    slots: Vec<ClientSlot>,
-    master_state: Box<dyn CompressorState>,
-    master_buf: Compressed,
-    coin: Coin,
-    net: Network,
-    /// canonical spec strings (frame header spec-id interning)
-    client_spec: String,
-    master_spec: String,
-    /// byte-accurate wire metering, enabled by the fleet simulator
-    framing: Option<Framing>,
-}
-
-impl<'e> L2gdEngine<'e> {
-    fn new(alg: &L2gd, env: &'e FedEnv) -> anyhow::Result<L2gdEngine<'e>> {
-        let n = env.n_clients();
-        anyhow::ensure!(alg.p > 0.0 || alg.lambda == 0.0,
-                        "p = 0 only valid for λ = 0 (pure local training)");
-        let d = env.backend.param_count();
-        let local_coef = alg.local_coef(n) as f32;
-        let agg_coef = alg.agg_coef(n) as f32;
-        // x ← (1−a)x + a·anchor is a contraction toward the anchor only for
-        // a ∈ (0, 2); beyond 2 the aggregation step diverges. (The paper's
-        // stable regimes are a ∈ (0, 0.17] and a ≈ 1; a ∈ [0.5, 0.95) shows
-        // high variance — §VII-B.)
-        anyhow::ensure!(agg_coef.is_finite() && (0.0..2.0).contains(&agg_coef),
-                        "ηλ/np = {agg_coef} outside [0,2): aggregation diverges");
-
-        let init = env.backend.init_params();
-        // ξ_{-1} = 1 with x̄^{-1} = mean of identical inits = init
-        let xs = ParamMatrix::replicate(n, &init);
-        let anchor = init;
-        // per-client batch-sampling streams + compression states, derived
-        // by *random-access* stream index (`stream_seed`) rather than a
-        // sequential seeder walk: client i's streams are a pure function
-        // of (run seed, i), so the sharded cohort engine can lazily
-        // instantiate bit-identical state for exactly the clients a cohort
-        // touches. The reference oracle derives its seeds the same way.
-        let slots: Vec<ClientSlot> = (0..n)
-            .map(|i| ClientSlot {
-                rng: client_stream(env.seed, i),
-                grad: GradBuf::with_dim(d),
-                comp: alg.client_comp
-                    .instantiate(d, stream_seed(env.seed ^ COMP_STREAM_SALT, i as u64)),
-                wire: Compressed::empty(),
-                err: None,
-            })
-            .collect();
-        let leaves = if n > REDUCE_LEAF { n.div_ceil(REDUCE_LEAF) } else { 0 };
-        // Warm every worker's thread-local compression scratch with a
-        // throwaway state of the same spec: client→worker assignment is
-        // dynamic, so without this a cold worker could take its first-use
-        // scratch allocation in the middle of a measured steady state.
-        let comp = &alg.client_comp;
-        env.pool.on_each_worker(|w| {
-            let mut st = comp.instantiate(d, 0x3CA7F ^ w as u64);
-            let mut buf = Compressed::empty();
-            let probe = vec![0.0f32; d];
-            let _ = st.compress_into(&probe, &mut buf);
-        });
-        // force the lazy per-shard train-batch cache off the hot path
-        let _ = env.train_batch_cached(0);
-        Ok(L2gdEngine {
-            env,
-            local_coef,
-            agg_coef,
-            xs,
-            anchor,
-            ybar: vec![0.0f32; d],
-            reduce: ParamMatrix::zeros(leaves, d),
-            slots,
-            master_state: alg.master_comp.instantiate(d, env.seed ^ 0x3a57e5),
-            master_buf: Compressed::empty(),
-            coin: Coin::new(alg.p, env.seed ^ 0xC011), // coin stream
-            net: Network::new(n),
-            client_spec: alg.client_comp.name(),
-            master_spec: alg.master_comp.name(),
-            framing: None,
-        })
-    }
-
-    /// The per-client models (row i = client i).
-    pub fn xs(&self) -> &ParamMatrix {
-        &self.xs
-    }
-
-    pub fn net(&self) -> &Network {
-        &self.net
-    }
-
-    /// Switch the wire metering to byte-accurate frames: `LinkStats` is fed
-    /// the serialized frame size (header + byte-aligned payload), and every
-    /// frame is encode/decode roundtrip-checked. The training math — and
-    /// therefore the loss series — is unchanged.
-    pub fn enable_wire_framing(&mut self) {
-        self.framing = Some(Framing::new(&self.client_spec, &self.master_spec));
-    }
-
-    /// The frame spec-id table (present once framing is enabled).
-    pub fn spec_table(&self) -> Option<&SpecTable> {
-        self.framing.as_ref().map(|f| &f.table)
-    }
-
-    /// Advance one protocol iteration (step index `k` is used for bit
-    /// accounting only). Steady state performs zero heap allocations.
-    pub fn step(&mut self, k: u64) -> anyhow::Result<()> {
-        match self.coin.draw() {
-            StepKind::Local => self.local_step(None)?,
-            StepKind::AggregateFresh => self.aggregate_fresh(k)?,
-            StepKind::AggregateCached => self.apply_aggregation(None),
-        }
-        Ok(())
-    }
-
-    /// Draw the ξ coin for the next iteration — the simulator's dispatch
-    /// point (lockstep [`Self::step`] draws from the same stream, so a
-    /// simulator that executes every drawn kind reproduces it exactly).
-    pub fn draw(&mut self) -> StepKind {
-        self.coin.draw()
-    }
-
-    /// Protocol coin statistics (locals / fresh / cached counts).
-    pub fn coin_stats(&self) -> &crate::protocol::CoinStats {
-        &self.coin.stats
-    }
-
-    /// Local gradient step restricted to `active` devices (an offline
-    /// device keeps its model and draws nothing from its streams). With an
-    /// all-true mask this is bit-identical to the lockstep local step.
-    pub fn step_local(&mut self, active: &[bool]) -> anyhow::Result<()> {
-        debug_assert_eq!(active.len(), self.slots.len());
-        self.local_step(Some(active))
-    }
-
-    /// Cached-anchor aggregation applied to `active` devices only.
-    pub fn step_aggregate_cached(&mut self, active: &[bool]) {
-        debug_assert_eq!(active.len(), self.slots.len());
-        self.apply_aggregation(Some(active));
-    }
-
-    /// Phase 1 of a fresh aggregation under partial participation:
-    /// compress the local models of the `sampled` devices into their wire
-    /// buffers (each drawing from its own compression stream). The
-    /// simulator then reads payload sizes via [`Self::uplink_frame_bytes`]
-    /// to schedule arrivals, and commits the round with
-    /// [`Self::complete_fresh`] over the subset that made the deadline.
-    pub fn compress_uplinks(&mut self, sampled: &[bool]) -> anyhow::Result<()> {
-        debug_assert_eq!(sampled.len(), self.slots.len());
-        self.compress_step(Some(sampled))
-    }
-
-    /// Serialized uplink frame size (bytes) client `i`'s pending wire
-    /// buffer occupies — valid after [`Self::compress_uplinks`] marked `i`.
-    pub fn uplink_frame_bytes(&self, i: usize) -> u64 {
-        (frame::HEADER_BYTES + self.slots[i].wire.payload.len()) as u64
-    }
-
-    /// Serialized downlink (anchor broadcast) frame size in bytes — valid
-    /// after a fresh aggregation round.
-    pub fn downlink_frame_bytes(&self) -> u64 {
-        (frame::HEADER_BYTES + self.master_buf.payload.len()) as u64
-    }
-
-    /// Phase 2: meter the round's uplinks — `arrived` devices as
-    /// participants, `sampled`-but-late devices as transmitted-but-
-    /// discarded straggler traffic — average the arrived cohort's
-    /// compressed models into ȳ, broadcast C_M(ȳ) to the cohort, and
-    /// apply the aggregation step to the cohort. Errors on an empty
-    /// cohort (the simulator skips the round instead). With all-true
-    /// masks the model update is bit-identical to the lockstep fresh
-    /// aggregation.
-    pub fn complete_fresh(&mut self, k: u64, arrived: &[bool], sampled: &[bool])
-                          -> anyhow::Result<()> {
-        anyhow::ensure!(arrived.len() == self.slots.len()
-                            && sampled.len() == self.slots.len(),
-                        "participation mask length != n {}", self.slots.len());
-        debug_assert!(arrived.iter().zip(sampled).all(|(&a, &s)| s || !a),
-                      "arrived must be a subset of sampled");
-        self.finish_fresh(k, Some(arrived), Some(sampled))
-    }
-
-    /// A fresh-aggregation attempt where *no* sampled device made the
-    /// deadline: every cohort member still transmitted its frame, so the
-    /// bytes meter as discarded traffic — but nothing aggregates, the
-    /// anchor does not move, and the round records zero participants.
-    pub fn abort_fresh(&mut self, k: u64, sampled: &[bool]) -> anyhow::Result<()> {
-        anyhow::ensure!(sampled.len() == self.slots.len(),
-                        "participation mask length {} != n {}",
-                        sampled.len(), self.slots.len());
-        self.net.begin_round();
-        for (i, slot) in self.slots.iter().enumerate() {
-            if !sampled[i] {
-                continue;
-            }
-            let bits = match &mut self.framing {
-                Some(f) => f.uplink_bits(k, i, &slot.wire)?,
-                None => slot.wire.bits,
-            };
-            self.net.uplink_wasted(k, i, bits);
-        }
-        self.net.end_round();
-        Ok(())
-    }
-
-    /// Run `count` iterations starting after step `from` (so the last step
-    /// index is `from + count`).
-    pub fn run_steps(&mut self, from: u64, count: u64) -> anyhow::Result<()> {
-        for k in from + 1..=from + count {
-            self.step(k)?;
-        }
-        Ok(())
-    }
-
-    /// Evaluate the current state into a `Record`.
-    pub fn evaluate(&self, step: u64) -> anyhow::Result<crate::metrics::Record> {
-        evaluate(self.env, ModelView::PerClient(&self.xs), step, &self.net)
-    }
-
-    /// Surface the first worker-parked error.
-    fn take_err(&mut self) -> anyhow::Result<()> {
-        drain_slot_errors(self.slots.iter_mut().map(|s| &mut s.err))
-    }
-
-    /// One local gradient step (all devices, or the `mask`ed subset),
-    /// fused compute+update in a single pooled sweep over disjoint matrix
-    /// rows.
-    fn local_step(&mut self, mask: Option<&[bool]>) -> anyhow::Result<()> {
-        let env = self.env;
-        let coef = self.local_coef;
-        let d = self.xs.dim();
-        env.pool.scope_chunks_zip_mut(self.xs.as_mut_slice(), d, &mut self.slots,
-                                      |i, x, slot| {
-            if !on(mask, i) {
-                return;
-            }
-            let res = match env.train_batch_cached(i) {
-                Some(b) => env.backend.grad_into(x, b, &mut slot.grad),
-                None => {
-                    let b = env.backend.make_train_batch(&env.shards[i], &mut slot.rng);
-                    env.backend.grad_into(x, &b, &mut slot.grad)
-                }
-            };
-            match res {
-                Ok(()) => kernels::axpy(x, -coef, &slot.grad.grad),
-                Err(e) => slot.err = Some(e),
-            }
-        });
-        self.take_err()
-    }
-
-    /// The lockstep communicating step: compress everyone, then finish.
-    fn aggregate_fresh(&mut self, k: u64) -> anyhow::Result<()> {
-        self.compress_step(None)?;
-        self.finish_fresh(k, None, None)
-    }
-
-    /// Compress local models into the per-client wire buffers (parallel,
-    /// per-client mutable state; masked devices draw nothing).
-    fn compress_step(&mut self, mask: Option<&[bool]>) -> anyhow::Result<()> {
-        let env = self.env;
-        let d = self.xs.dim();
-        env.pool.scope_chunks_zip_mut(self.xs.as_mut_slice(), d, &mut self.slots,
-                                      |i, x, slot| {
-            if !on(mask, i) {
-                return;
-            }
-            if let Err(e) = slot.comp.compress_into(x, &mut slot.wire) {
-                slot.err = Some(e);
-            }
-        });
-        self.take_err()
-    }
-
-    /// Meter uplinks, decode-accumulate ȳ, broadcast C_M(ȳ), aggregate —
-    /// over the full fleet (`None` masks, the seed-equivalent path) or a
-    /// cohort. `sampled` devices outside the cohort transmitted too:
-    /// their frames meter as discarded traffic, not participation.
-    fn finish_fresh(&mut self, k: u64, mask: Option<&[bool]>,
-                    sampled: Option<&[bool]>) -> anyhow::Result<()> {
-        let env = self.env;
-        let n = self.slots.len();
-        let d = self.xs.dim();
-        let count = match mask {
-            None => n,
-            Some(m) => m.iter().filter(|&&b| b).count(),
-        };
-        anyhow::ensure!(count > 0, "fresh aggregation with an empty cohort");
-        self.net.begin_round();
-        for (i, slot) in self.slots.iter().enumerate() {
-            let arrived = on(mask, i);
-            let transmitted = arrived || sampled.is_some_and(|s| s[i]);
-            if !transmitted {
-                continue;
-            }
-            let bits = match &mut self.framing {
-                Some(f) => f.uplink_bits(k, i, &slot.wire)?,
-                None => slot.wire.bits,
-            };
-            if arrived {
-                self.net.uplink(k, i, bits);
-            } else {
-                self.net.uplink_wasted(k, i, bits);
-            }
-        }
-        // master: ȳ = (1/count) Σ_cohort C_i(x_i), fused decode-accumulate.
-        // Small n accumulates sequentially (bit-identical to the seed);
-        // large n reduces over fixed 8-client leaves on the pool, combined
-        // in leaf order (deterministic, pool-size independent).
-        let inv = 1.0 / count as f32;
-        if self.reduce.n_rows() == 0 {
-            self.ybar.fill(0.0);
-            for (i, slot) in self.slots.iter().enumerate() {
-                if !on(mask, i) {
-                    continue;
-                }
-                slot.wire.decode_add(&mut self.ybar, inv);
-            }
-        } else {
-            let slots = &self.slots;
-            env.pool.scope_chunks_mut(self.reduce.as_mut_slice(), d, |leaf, row| {
-                row.fill(0.0);
-                let lo = leaf * REDUCE_LEAF;
-                let hi = (lo + REDUCE_LEAF).min(n);
-                for (j, slot) in slots[lo..hi].iter().enumerate() {
-                    if !on(mask, lo + j) {
-                        continue;
-                    }
-                    slot.wire.decode_add(row, inv);
-                }
-            });
-            self.ybar.fill(0.0);
-            for leaf in self.reduce.rows() {
-                kernels::add_assign(&mut self.ybar, leaf);
-            }
-        }
-        // downlink: C_M(ȳ) to everyone (lockstep broadcast) or per cohort
-        // member (an offline device receives nothing)
-        self.master_state.compress_into(&self.ybar, &mut self.master_buf)?;
-        let down_bits = match &mut self.framing {
-            Some(f) => f.broadcast_bits(k, &self.master_buf)?,
-            None => self.master_buf.bits,
-        };
-        match mask {
-            None => self.net.downlink_broadcast(k, down_bits),
-            Some(m) => {
-                for (i, &a) in m.iter().enumerate() {
-                    if a {
-                        self.net.downlink(k, i, down_bits);
-                    }
-                }
-            }
-        }
-        self.master_buf.decode_into(&mut self.anchor);
-        self.net.end_round();
-        self.apply_aggregation(mask);
-        Ok(())
-    }
-
-    /// `x_i ← x_i − a(x_i − anchor)` for every (unmasked) client: one pass
-    /// over the matrix, pooled when the sweep is large enough to amortize
-    /// dispatch. Elementwise, so serial and pooled orders are bit-identical.
-    fn apply_aggregation(&mut self, mask: Option<&[bool]>) {
-        let a = self.agg_coef;
-        let d = self.xs.dim();
-        let n = self.xs.n_rows();
-        if n * d < 1 << 15 {
-            for (i, x) in self.xs.rows_mut().enumerate() {
-                if on(mask, i) {
-                    kernels::aggregation_step(x, a, &self.anchor);
-                }
-            }
-        } else {
-            let anchor = &self.anchor;
-            self.env.pool.scope_chunks_mut(self.xs.as_mut_slice(), d, |i, x| {
-                if on(mask, i) {
-                    kernels::aggregation_step(x, a, anchor);
-                }
-            });
-        }
+        L2gdEngine::new(self, env, env.n_clients())
     }
 }
 
@@ -801,5 +293,40 @@ mod tests {
         }
         assert!(a.records.last().unwrap().personal_loss
                 < a.records[0].personal_loss);
+    }
+
+    /// The bool-mask adapters are thin translations onto the sorted-cohort
+    /// entry points: an all-true mask reproduces the lockstep series.
+    #[test]
+    fn all_true_mask_adapters_match_lockstep() {
+        let e = env(5, 10);
+        let alg = L2gd::from_local_and_agg(0.4, 0.3, 0.5, 5, "natural", "natural").unwrap();
+        let mut lock = alg.engine(&e).unwrap();
+        let mut masked = alg.engine(&e).unwrap();
+        let mask = [true; 5];
+        for k in 1..=60 {
+            // replay the lockstep coin through the masked surface
+            match masked.draw() {
+                crate::protocol::StepKind::Local => {
+                    masked.step_local_masked(&mask).unwrap();
+                }
+                crate::protocol::StepKind::AggregateFresh => {
+                    masked.compress_uplinks_masked(&mask).unwrap();
+                    masked.complete_fresh_masked(k, &mask, &mask).unwrap();
+                }
+                crate::protocol::StepKind::AggregateCached => {
+                    masked.step_aggregate_cached_masked(&mask);
+                }
+            }
+            lock.step(k).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(lock.xs().row(i), masked.xs().row(i), "row {i}");
+        }
+        let rl = lock.evaluate(60).unwrap();
+        let rm = masked.evaluate(60).unwrap();
+        assert_eq!(rl.train_loss, rm.train_loss);
+        assert_eq!(rl.bits_up, rm.bits_up);
+        assert_eq!(rl.bits_down, rm.bits_down);
     }
 }

@@ -1,13 +1,21 @@
-//! Federated training algorithms.
+//! Federated training algorithms — one engine skeleton, pluggable state
+//! storage, pluggable communication schedule (the unified-formulation
+//! view of Hanzely & Richtárik 2020 / Hanzely, Zhao, Kolar 2021).
 //!
-//! * [`l2gd::L2gd`] — **the paper's contribution**: compressed L2GD
-//!   (Algorithm 1) with bidirectional compression over the probabilistic
-//!   protocol, executed by the zero-allocation round engine
-//!   ([`l2gd::L2gdEngine`]).
-//! * [`fedavg::FedAvg`] — the FedAvg baseline, plus the paper's
-//!   error-feedback-style difference compression (§VII-B).
-//! * [`fedopt::FedOpt`] — server-Adam baseline (Reddi et al.), the paper's
-//!   strongest no-compression comparator.
+//! * [`engine::Engine`] — **the** round engine, generic over
+//!   [`crate::model::ClientStore`] (dense lockstep matrix, alias
+//!   [`L2gdEngine`]; copy-on-write million-device store, alias
+//!   [`ShardedL2gdEngine`]) and parameterized by an [`engine::AlgSpec`]
+//!   (schedule + server transform + wire specs): L2GD's Bernoulli coin,
+//!   or the FedAvg/FedOpt fixed cadence ([`engine::FLEET_ALGS`]).
+//! * [`l2gd::L2gd`] — **the paper's contribution**: the compressed-L2GD
+//!   (Algorithm 1) configuration front-end for the engine.
+//! * [`fedavg::FedAvg`] — the lockstep FedAvg baseline, plus the paper's
+//!   error-feedback-style difference compression (§VII-B). Its
+//!   fleet-scale counterpart is `AlgSpec::fedavg` on the cohort engine.
+//! * [`fedopt::FedOpt`] — lockstep server-Adam baseline (Reddi et al.),
+//!   the paper's strongest no-compression comparator; fleet-scale via
+//!   `AlgSpec::fedopt`.
 //! * [`reference`] — the seed-semantics `Vec<Vec<f32>>` oracle the engine
 //!   is tested (bit-for-bit) and benchmarked against.
 //!
@@ -15,26 +23,29 @@
 //! cached batches) and emit a [`Series`] of per-evaluation [`Record`]s
 //! with exact bit accounting from the transport layer.
 
+pub mod engine;
 pub mod fedavg;
 pub mod fedopt;
 pub mod l2gd;
 pub mod reference;
-pub mod sharded;
 
 use std::sync::{Arc, OnceLock};
 
 use crate::data::Dataset;
 use crate::metrics::{Record, Series};
-use crate::model::ParamMatrix;
 use crate::runtime::{Backend, Batch};
 use crate::transport::Network;
 use crate::util::threadpool::ThreadPool;
 use crate::util::Rng;
 
+pub use engine::{AlgSpec, Engine, L2gdEngine, ShardedL2gdEngine, FLEET_ALGS};
 pub use fedavg::FedAvg;
 pub use fedopt::FedOpt;
 pub use l2gd::L2gd;
-pub use sharded::ShardedL2gdEngine;
+
+/// Per-client model state as seen by [`evaluate`] — re-exported from the
+/// model layer, where the stores live.
+pub use crate::model::ModelView;
 
 /// Batches assembled once at environment construction. Evaluation batches
 /// are deterministic by the `Backend` contract; per-shard **training**
@@ -151,63 +162,6 @@ impl FedEnv {
 pub trait FedAlgorithm {
     fn label(&self) -> String;
     fn run(&mut self, env: &FedEnv, steps: u64, eval_every: u64) -> anyhow::Result<Series>;
-}
-
-/// Per-client model state as seen by [`evaluate`]: truly personalized (a
-/// [`ParamMatrix`] row per client), one shared global model (the
-/// FedAvg/FedOpt case — the seed materialized `n` clones of `w` per
-/// evaluation to express this), or copy-on-write sharded state (a
-/// [`ShardedStore`] where an unmaterialized client implicitly equals the
-/// `base` vector).
-#[derive(Clone, Copy)]
-pub enum ModelView<'a> {
-    PerClient(&'a ParamMatrix),
-    Shared { model: &'a [f32], n: usize },
-    Cow { store: &'a crate::model::ShardedStore, base: &'a [f32] },
-}
-
-impl<'a> ModelView<'a> {
-    pub fn n(&self) -> usize {
-        match self {
-            ModelView::PerClient(m) => m.n_rows(),
-            ModelView::Shared { n, .. } => *n,
-            ModelView::Cow { store, .. } => store.len(),
-        }
-    }
-
-    pub fn row(&self, i: usize) -> &'a [f32] {
-        match self {
-            ModelView::PerClient(m) => m.row(i),
-            ModelView::Shared { model, .. } => model,
-            ModelView::Cow { store, base } => store.row(i).unwrap_or(base),
-        }
-    }
-
-    /// Global model = mean of the client models, accumulated in client
-    /// order — bit-compatible with the seed's `mean_of` (including the
-    /// `Shared` case, where the seed averaged n identical clones, and the
-    /// `Cow` case, which walks every client's effective row in index
-    /// order exactly as the dense matrix does).
-    pub fn mean_into(&self, out: &mut [f32]) {
-        match self {
-            ModelView::PerClient(m) => m.mean_into(out),
-            ModelView::Shared { model, n } => {
-                out.fill(0.0);
-                for _ in 0..*n {
-                    crate::model::kernels::add_assign(out, model);
-                }
-                crate::model::kernels::scale(out, 1.0 / *n as f32);
-            }
-            ModelView::Cow { store, base } => {
-                out.fill(0.0);
-                for i in 0..store.len() {
-                    crate::model::kernels::add_assign(
-                        out, store.row(i).unwrap_or(base));
-                }
-                crate::model::kernels::scale(out, 1.0 / store.len() as f32);
-            }
-        }
-    }
 }
 
 /// Evaluate global + personalized metrics into a `Record`.

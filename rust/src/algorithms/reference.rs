@@ -13,7 +13,9 @@
 //! floating-point sum beyond that).
 //!
 //! Scope of the guarantee: it pins the **engine refactor** (layout,
-//! caching, buffer reuse, parallel sweeps) against the shared oracle. It
+//! caching, buffer reuse, parallel sweeps — and, since the store
+//! unification, the generic [`super::engine::Engine`] over either
+//! [`crate::model::ClientStore`] impl) against the shared oracle. It
 //! is deliberately *not* a cross-commit guarantee against the
 //! pre-refactor seed: `NativeLogreg::forward` itself changed numerically
 //! (8-accumulator `kernels::dot` reassociates the row product; the

@@ -197,7 +197,9 @@ pub fn algo_from_config(cfg: &crate::config::TrainConfig)
                                          &cfg.client_comp, &cfg.master_comp)?),
         "fedopt" => Box::new(FedOpt::new(cfg.local_lr, cfg.local_steps,
                                          cfg.server_lr)),
-        other => anyhow::bail!("unknown algo `{other}`"),
+        other => anyhow::bail!(
+            "unknown algo `{other}` (registered: {})",
+            crate::algorithms::FLEET_ALGS.join(", ")),
     })
 }
 

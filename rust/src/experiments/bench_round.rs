@@ -18,7 +18,10 @@
 //!
 //! Results are emitted as `BENCH_round.json` so successive PRs record a
 //! comparable throughput trajectory (CI runs `pfl bench --smoke` and
-//! uploads the file as an artifact).
+//! uploads the file as an artifact). The `sim_algorithms` section adds
+//! the engine-vs-engine comparison: fleet-scheduler events/sec for every
+//! registered algorithm (`l2gd`, `fedavg`, `fedopt`) on the same
+//! straggler-heavy scenario.
 
 use std::time::Instant;
 
@@ -106,11 +109,16 @@ pub struct BenchResult {
     /// allocator is not installed
     pub engine_allocs_per_step: Option<f64>,
     /// fleet-sim scheduler throughput (events/sec) on the straggler-heavy
-    /// scenario over the same convex config
+    /// scenario over the same convex config (the `l2gd` engine — the
+    /// allocation-disciplined measurement)
     pub sim_events_per_sec: f64,
     /// allocations per processed scheduler event; `None` without the
     /// counting allocator. Asserted `< SIM_ALLOCS_PER_EVENT_BOUND`.
     pub sim_allocs_per_event: Option<f64>,
+    /// engine-vs-engine: events/sec per registered fleet algorithm on the
+    /// same straggler-heavy scenario (`l2gd` repeats the measurement
+    /// above; `fedavg`/`fedopt` run the fixed-cadence schedules)
+    pub sim_alg_events_per_sec: Vec<(String, f64)>,
     pub final_personal_loss: f64,
 }
 
@@ -173,6 +181,13 @@ impl BenchResult {
                 ("allocs_per_event_bound".into(),
                  Value::Num(SIM_ALLOCS_PER_EVENT_BOUND)),
             ])),
+            // engine-vs-engine: one events/sec entry per registered fleet
+            // algorithm, same scenario, same environment
+            ("sim_algorithms".into(), Value::obj(
+                self.sim_alg_events_per_sec
+                    .iter()
+                    .map(|(alg, eps)| (alg.clone(), Value::Num(*eps)))
+                    .collect())),
             ("speedup_vs_reference".into(), Value::Num(self.speedup())),
             ("final_personal_loss".into(), Value::Num(self.final_personal_loss)),
         ])
@@ -291,6 +306,31 @@ pub fn run(cfg: &BenchCfg) -> anyhow::Result<BenchResult> {
         }
     }
 
+    // engine-vs-engine: the same straggler-heavy scenario under every
+    // registered fleet algorithm (l2gd repeats the measured number above
+    // so the section is self-contained; fedavg/fedopt swap in the fixed
+    // cadence via the scenario grammar's alg= key)
+    let mut sim_alg_events = vec![("l2gd".to_string(), sim_events_per_sec)];
+    for alg_name in ["fedavg", "fedopt"] {
+        let scenario = sim::scenario::from_spec(
+            &format!("straggler-heavy:quorum=0.6,deadline=1,alg={alg_name}"))?;
+        let mut c = sim::SimCfg::fig3(scenario);
+        c.n_clients = cfg.n_clients;
+        c.rows_per_worker = cfg.rows_per_worker;
+        c.seed = cfg.seed;
+        let e = sim::runner::build_env(&c);
+        let mut fs = FleetSim::new(&c, &e)?;
+        fs.run_steps(0, cfg.warmup)?;
+        let ev0 = fs.stats().events;
+        let t0 = Instant::now();
+        fs.run_steps(cfg.warmup, cfg.steps)?;
+        let dt = t0.elapsed().as_secs_f64();
+        let alg_events = (fs.stats().events - ev0).max(1);
+        anyhow::ensure!(fs.stats().comm_events > 0,
+                        "{alg_name} sim ran no communication rounds");
+        sim_alg_events.push((alg_name.to_string(), alg_events as f64 / dt));
+    }
+
     Ok(BenchResult {
         cfg: cfg.clone(),
         engine_steps_per_sec: engine_sps,
@@ -300,6 +340,7 @@ pub fn run(cfg: &BenchCfg) -> anyhow::Result<BenchResult> {
         engine_allocs_per_step: allocs_per_step,
         sim_events_per_sec,
         sim_allocs_per_event,
+        sim_alg_events_per_sec: sim_alg_events,
         final_personal_loss,
     })
 }
@@ -503,6 +544,13 @@ mod tests {
         let s = v.get("sim_scheduler").unwrap();
         assert_eq!(s.get("scenario").unwrap().as_str(), Some("straggler-heavy"));
         assert!(s.get("events_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        // the multi-algorithm section carries one events/sec entry per
+        // registered fleet algorithm
+        let algs = v.get("sim_algorithms").unwrap();
+        for &name in crate::algorithms::FLEET_ALGS {
+            assert!(algs.get(name).unwrap().as_f64().unwrap() > 0.0,
+                    "sim_algorithms must report `{name}`");
+        }
         let c = v.get("config").unwrap();
         assert_eq!(c.get("n_clients").unwrap().as_usize(), Some(5));
     }

@@ -92,7 +92,8 @@ commands:
   sim          discrete-event fleet simulation of the Fig-3 config under
                scenario presets (partial participation, churn, stragglers,
                byte-accurate wire frames, million-device megafleet presets
-               on copy-on-write sharded state); `pfl sim --help` documents
+               on copy-on-write sharded state) for any registered fleet
+               algorithm (alg=l2gd|fedavg|fedopt); `pfl sim --help` documents
                the scenario grammar  [--scenarios a;b] [--smoke] [--out dir]
   models       list AOT models (needs `make artifacts`)
 ";
@@ -353,6 +354,10 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     }
     println!("sim scheduler:             {:>10.0} events/s  (straggler-heavy)",
              res.sim_events_per_sec);
+    for (alg, eps) in &res.sim_alg_events_per_sec {
+        println!("sim engine [{alg:<6}]:       {eps:>10.0} events/s  \
+                  (engine-vs-engine)");
+    }
     match res.sim_allocs_per_event {
         Some(a) => println!("sim allocations:           {a:>10.2} per event \
                              (asserted < {})",
@@ -390,7 +395,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
 }
 
 const SIM_HELP: &str = "\
-pfl sim — discrete-event fleet simulation of compressed L2GD
+pfl sim — discrete-event fleet simulation of the unified algorithm family
 
 Runs the Fig-3 convex configuration over a modeled device fleet: per-client
 compute speed and link quality drawn from distributions, seeded churn
@@ -400,10 +405,16 @@ byte-aligned payload) feeding the link accounting instead of theoretical
 bit formulas. Emits one loss-vs-simulated-seconds CSV per scenario plus a
 JSON summary.
 
-Mega scenarios (`megafleet`, `megafleet-churn`, or ≥65536 clients) run on
-the sharded cohort engine: lazy per-device profiles, O(cohort) sampling,
-and copy-on-write client state whose resident bytes scale with the
-clients actually touched — a million-device fleet fits in a laptop run.
+One generic cohort engine drives every registered algorithm (`alg=` in
+the scenario grammar): compressed L2GD's probabilistic protocol, or the
+FedAvg/FedOpt fixed-cadence baselines — so the paper's bits-per-accuracy
+comparison runs under identical fleets, churn, and framing.
+
+Mega scenarios (`megafleet*`, or ≥65536 clients) run with lazy per-device
+profiles, O(cohort) id-space sampling, and copy-on-write client state
+whose resident bytes scale with the clients actually touched — a
+million-device fleet fits in a laptop run, for l2gd and the baselines
+alike.
 
   --scenarios <s;s;..>  scenario specs, `;`-separated (default: all presets)
   --scenario <spec>     single scenario (overrides --scenarios)
@@ -411,28 +422,37 @@ clients actually touched — a million-device fleet fits in a laptop run.
   --steps N --eval-every N --seed S
   --n N                 fleet size when the scenario doesn't pin one
   --p --lambda --eta    L2GD meta-parameters (Fig-3 defaults)
+  --local-lr --local-steps --server-lr   FedAvg/FedOpt parameters
   --client-comp --master-comp   compressor specs (default natural)
   --out <dir>           output directory (default results)
 
 scenario spec grammar (like the codec registry):
   scenario := name [\":\" key \"=\" value (\",\" key \"=\" value)*]
-  keys     := clients | sample | quorum | deadline
-  sample   = fraction of available devices sampled per comm event, (0,1]
+  keys     := clients | sample | quorum | deadline | alg
+  sample   = fraction of the fleet drawn per comm event, (0,1]
+             (drawn devices that churn has offline drop out of the cohort)
   quorum   = fraction of the sampled cohort to wait for, (0,1]
   deadline = straggler deadline in seconds (inf = wait for quorum)
+  alg      = fleet algorithm (unknown names list what is registered)
 
-presets:
+registered algorithms:
 ";
 
 fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     if args.flag("help") {
         print!("{}", SIM_HELP);
+        for &alg in pfl::algorithms::FLEET_ALGS {
+            println!("  {alg}");
+        }
+        println!("\npresets:");
         for &(name, help) in sim::scenario::PRESETS {
             println!("  {name:<16} {help}");
         }
         println!("\nexamples:");
         println!("  pfl sim --scenario straggler-heavy:clients=20,quorum=0.6,deadline=2");
         println!("  pfl sim --scenarios \"uniform;diurnal-churn:clients=16\" --steps 800");
+        println!("  pfl sim --scenario \"megafleet-fedavg\" --smoke");
+        println!("  pfl sim --scenario \"uniform:alg=fedopt\" --local-steps 5");
         return Ok(());
     }
     let smoke = args.flag("smoke");
@@ -462,11 +482,14 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
         cfg.p = args.parse_or("p", cfg.p)?;
         cfg.lambda = args.parse_or("lambda", cfg.lambda)?;
         cfg.eta = args.parse_or("eta", cfg.eta)?;
+        cfg.local_lr = args.parse_or("local-lr", cfg.local_lr)?;
+        cfg.local_steps = args.parse_or("local-steps", cfg.local_steps)?;
+        cfg.server_lr = args.parse_or("server-lr", cfg.server_lr)?;
         if let Some(v) = args.get("client-comp") { cfg.client_comp = v.to_string(); }
         if let Some(v) = args.get("master-comp") { cfg.master_comp = v.to_string(); }
-        eprintln!("sim {}: n={} steps={} wire {}|{}",
-                  cfg.scenario.name, cfg.effective_clients(), cfg.steps,
-                  cfg.client_comp, cfg.master_comp);
+        eprintln!("sim {} [{}]: n={} steps={} wire {}|{}",
+                  cfg.scenario.name, cfg.scenario.alg, cfg.effective_clients(),
+                  cfg.steps, cfg.client_comp, cfg.master_comp);
         let res = sim::runner::run(&cfg)?;
         // filename from the full spec (two variants of one preset must not
         // clobber each other), with shell/FS-hostile characters mapped away

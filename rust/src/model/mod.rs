@@ -5,21 +5,25 @@
 //! vector, so compressors, the aggregation step, and the HLO executables
 //! all share one representation with zero translation.
 //!
-//! Layout: the lockstep round engine keeps the n per-client models in one
-//! contiguous [`ParamMatrix`] (row per client) and runs the 8-lane
-//! [`kernels`] over row views; at fleet scale the sharded cohort engine
-//! keeps only the *divergent* rows in a copy-on-write [`ShardedStore`]
-//! (resident memory ∝ touched clients, not fleet size). The free functions
-//! below are thin wrappers kept for the nested-`Vec` call sites (tests,
-//! reference oracle, examples) and are bit-compatible with the kernel
-//! path.
+//! Layout: client state lives behind the pluggable [`ClientStore`] trait
+//! ([`store`]): the lockstep configuration keeps the n per-client models
+//! eagerly in one contiguous [`ParamMatrix`] ([`DenseStore`], row per
+//! client) and runs the 8-lane [`kernels`] over row views; at fleet scale
+//! the copy-on-write [`ShardedStore`] keeps only the *divergent* rows
+//! (resident memory ∝ touched clients, not fleet size). One generic round
+//! engine ([`crate::algorithms::engine`]) drives either. The free
+//! functions below are thin wrappers kept for the nested-`Vec` call sites
+//! (tests, reference oracle, examples) and are bit-compatible with the
+//! kernel path.
 
 pub mod kernels;
 pub mod matrix;
 pub mod sharded;
+pub mod store;
 
 pub use matrix::ParamMatrix;
 pub use sharded::ShardedStore;
+pub use store::{ClientStore, DenseStore, ModelView, REDUCE_LEAF};
 
 /// In-place `x ← x + a·y`.
 pub fn axpy(x: &mut [f32], a: f32, y: &[f32]) {

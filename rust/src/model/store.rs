@@ -1,0 +1,333 @@
+//! Pluggable client-state storage: the [`ClientStore`] trait behind the
+//! generic round engine ([`crate::algorithms::engine::Engine`]).
+//!
+//! The paper's formulation gives every device a personalized model
+//! x_i ∈ R^d. *How* the fleet's { x_i } are stored is an implementation
+//! axis orthogonal to the protocol itself, so the engine is generic over
+//! it:
+//!
+//! * [`DenseStore`] — every row eagerly materialized in one contiguous
+//!   [`ParamMatrix`]. O(fleet) memory, O(1) row access, and the engine
+//!   can run pooled full-fleet sweeps straight over the flat buffer. The
+//!   lockstep configuration ([`crate::algorithms::L2gdEngine`]).
+//! * [`crate::model::ShardedStore`] — copy-on-write: only rows that have
+//!   *diverged* from the shared `base` vector are resident, in ~256
+//!   leaf-aligned shards. Resident memory ∝ |ever-touched clients|, the
+//!   million-device configuration
+//!   ([`crate::algorithms::ShardedL2gdEngine`]).
+//!
+//! The contract both impls share:
+//!
+//! * `row(i)` returns the client's materialized row, or `None` when the
+//!   client implicitly equals the engine-owned `base` vector (never for a
+//!   dense store).
+//! * `materialize(i, base)` is copy-on-write: the first divergent step
+//!   copies `base` in, later calls return the existing row.
+//! * Occupancy (`materialized_rows`, `resident_bytes`) is the store's own
+//!   accounting — what the mega-fleet resident-bytes bounds assert
+//!   against, deliberately not process RSS.
+//! * **Leaf alignment**: stores promise that the fixed [`REDUCE_LEAF`]
+//!   aggregation leaves of the master's ȳ decode-accumulate never
+//!   straddle an internal storage boundary, so per-leaf partial sums
+//!   compose bit-exactly into one flat reduction whichever store runs
+//!   under the engine ([`ShardedStore::auto_shard_size`] picks shard
+//!   sizes as leaf multiples; the dense matrix is trivially aligned).
+
+use super::matrix::ParamMatrix;
+use super::sharded::ShardedStore;
+
+/// Clients per leaf of the master's decode-accumulate tree reduction.
+/// Constant (not pool-derived) so the reduction order — and therefore the
+/// training series — is machine-independent; n ≤ LEAF degenerates to the
+/// seed's exact sequential accumulation. Sharded stores keep shard
+/// boundaries at multiples of it so no leaf straddles a shard.
+pub const REDUCE_LEAF: usize = 8;
+
+/// Per-client model state as seen by [`crate::algorithms::evaluate`]:
+/// truly personalized (a [`ParamMatrix`] row per client), one shared
+/// global model (the lockstep FedAvg/FedOpt case — the seed materialized
+/// `n` clones of `w` per evaluation to express this), or copy-on-write
+/// sharded state (a [`ShardedStore`] where an unmaterialized client
+/// implicitly equals the `base` vector).
+#[derive(Clone, Copy)]
+pub enum ModelView<'a> {
+    PerClient(&'a ParamMatrix),
+    Shared { model: &'a [f32], n: usize },
+    Cow { store: &'a ShardedStore, base: &'a [f32] },
+}
+
+impl<'a> ModelView<'a> {
+    pub fn n(&self) -> usize {
+        match self {
+            ModelView::PerClient(m) => m.n_rows(),
+            ModelView::Shared { n, .. } => *n,
+            ModelView::Cow { store, .. } => store.len(),
+        }
+    }
+
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        match self {
+            ModelView::PerClient(m) => m.row(i),
+            ModelView::Shared { model, .. } => model,
+            ModelView::Cow { store, base } => store.row(i).unwrap_or(base),
+        }
+    }
+
+    /// Global model = mean of the client models, accumulated in client
+    /// order — bit-compatible with the seed's `mean_of` (including the
+    /// `Shared` case, where the seed averaged n identical clones, and the
+    /// `Cow` case, which walks every client's effective row in index
+    /// order exactly as the dense matrix does).
+    pub fn mean_into(&self, out: &mut [f32]) {
+        match self {
+            ModelView::PerClient(m) => m.mean_into(out),
+            ModelView::Shared { model, n } => {
+                out.fill(0.0);
+                for _ in 0..*n {
+                    super::kernels::add_assign(out, model);
+                }
+                super::kernels::scale(out, 1.0 / *n as f32);
+            }
+            ModelView::Cow { store, base } => {
+                out.fill(0.0);
+                for i in 0..store.len() {
+                    super::kernels::add_assign(out, store.row(i).unwrap_or(base));
+                }
+                super::kernels::scale(out, 1.0 / store.len() as f32);
+            }
+        }
+    }
+}
+
+/// Pluggable per-client model storage for the generic round engine. See
+/// the module docs for the contract.
+pub trait ClientStore {
+    /// `true` when rows are copy-on-write against the engine's base
+    /// vector (undiverged clients cost nothing and full-fleet exact
+    /// resets re-base + release). `false` when every row is eagerly
+    /// resident and release is meaningless.
+    const COW: bool;
+
+    /// Build the store for an `n`-client fleet at dimension `d` with the
+    /// shared initial model `init` (dense stores replicate it; sparse
+    /// stores remember nothing — the engine keeps `init` as its base).
+    fn new_fleet(n: usize, d: usize, init: &[f32]) -> Self
+    where
+        Self: Sized;
+
+    /// Fleet size (materialized or not).
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn dim(&self) -> usize;
+
+    /// Client `i`'s materialized row; `None` ⇒ implicitly the base.
+    fn row(&self, i: usize) -> Option<&[f32]>;
+
+    /// Copy-on-write materialization (see [`ShardedStore::materialize`]).
+    fn materialize(&mut self, i: usize, base: &[f32]) -> &mut [f32];
+
+    /// Release one row back to the implicit base (no-op on dense stores).
+    fn release(&mut self, i: usize);
+
+    /// Occupancy: resident (divergent) rows.
+    fn materialized_rows(&self) -> usize;
+
+    /// Resident client-state bytes by the store's own accounting.
+    fn resident_bytes(&self) -> usize;
+
+    /// Visit every materialized row in the store's deterministic order.
+    fn for_each_row<F: FnMut(usize, &[f32])>(&self, f: F);
+
+    /// Clients per transport attribution bucket
+    /// ([`crate::transport::Network::sharded`]): 1 for per-client
+    /// attribution, the shard size for fleet-scale stores.
+    fn link_shard_size(&self) -> usize;
+
+    /// Evaluation view over the fleet given the engine's base vector.
+    fn view<'a>(&'a self, base: &'a [f32]) -> ModelView<'a>;
+
+    /// The flat matrix, when this store is dense — the engine's pooled
+    /// full-fleet sweeps go straight over it. `None` for sparse stores.
+    fn as_dense_mut(&mut self) -> Option<&mut ParamMatrix> {
+        None
+    }
+}
+
+/// Eager dense storage: one [`ParamMatrix`] row per client.
+#[derive(Clone, Debug)]
+pub struct DenseStore {
+    m: ParamMatrix,
+}
+
+impl DenseStore {
+    /// The underlying matrix (row i = client i).
+    pub fn matrix(&self) -> &ParamMatrix {
+        &self.m
+    }
+}
+
+impl ClientStore for DenseStore {
+    const COW: bool = false;
+
+    fn new_fleet(n: usize, _d: usize, init: &[f32]) -> DenseStore {
+        DenseStore { m: ParamMatrix::replicate(n, init) }
+    }
+
+    fn len(&self) -> usize {
+        self.m.n_rows()
+    }
+
+    fn dim(&self) -> usize {
+        self.m.dim()
+    }
+
+    fn row(&self, i: usize) -> Option<&[f32]> {
+        Some(self.m.row(i))
+    }
+
+    fn materialize(&mut self, i: usize, _base: &[f32]) -> &mut [f32] {
+        self.m.row_mut(i)
+    }
+
+    fn release(&mut self, _i: usize) {}
+
+    fn materialized_rows(&self) -> usize {
+        self.m.n_rows()
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.m.as_slice().len() * std::mem::size_of::<f32>()
+    }
+
+    fn for_each_row<F: FnMut(usize, &[f32])>(&self, mut f: F) {
+        for (i, row) in self.m.rows().enumerate() {
+            f(i, row);
+        }
+    }
+
+    fn link_shard_size(&self) -> usize {
+        1
+    }
+
+    fn view<'a>(&'a self, _base: &'a [f32]) -> ModelView<'a> {
+        ModelView::PerClient(&self.m)
+    }
+
+    fn as_dense_mut(&mut self) -> Option<&mut ParamMatrix> {
+        Some(&mut self.m)
+    }
+}
+
+impl ClientStore for ShardedStore {
+    const COW: bool = true;
+
+    fn new_fleet(n: usize, d: usize, _init: &[f32]) -> ShardedStore {
+        ShardedStore::new(n, d, ShardedStore::auto_shard_size(n, REDUCE_LEAF))
+    }
+
+    fn len(&self) -> usize {
+        ShardedStore::len(self)
+    }
+
+    fn dim(&self) -> usize {
+        ShardedStore::dim(self)
+    }
+
+    fn row(&self, i: usize) -> Option<&[f32]> {
+        ShardedStore::row(self, i)
+    }
+
+    fn materialize(&mut self, i: usize, base: &[f32]) -> &mut [f32] {
+        ShardedStore::materialize(self, i, base)
+    }
+
+    fn release(&mut self, i: usize) {
+        ShardedStore::release(self, i)
+    }
+
+    fn materialized_rows(&self) -> usize {
+        ShardedStore::materialized_rows(self)
+    }
+
+    fn resident_bytes(&self) -> usize {
+        ShardedStore::resident_bytes(self)
+    }
+
+    fn for_each_row<F: FnMut(usize, &[f32])>(&self, f: F) {
+        ShardedStore::for_each_row(self, f)
+    }
+
+    fn link_shard_size(&self) -> usize {
+        self.shard_size()
+    }
+
+    fn view<'a>(&'a self, base: &'a [f32]) -> ModelView<'a> {
+        ModelView::Cow { store: self, base }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exercise<S: ClientStore>(mut st: S, n: usize) {
+        let base = vec![1.0f32; st.dim()];
+        assert_eq!(st.len(), n);
+        // materialize copies base in, then diverges in place
+        {
+            let r = st.materialize(2, &base);
+            assert_eq!(r, &base[..]);
+            r[0] = 7.0;
+        }
+        assert_eq!(st.row(2).unwrap()[0], 7.0);
+        assert!(st.materialized_rows() >= 1);
+        assert!(st.resident_bytes() > 0);
+        let mut seen = false;
+        st.for_each_row(|i, row| {
+            if i == 2 {
+                assert_eq!(row[0], 7.0);
+                seen = true;
+            }
+        });
+        assert!(seen, "for_each_row must visit the divergent row");
+        assert!(st.link_shard_size() >= 1);
+    }
+
+    #[test]
+    fn dense_store_contract() {
+        let init = vec![1.0f32; 4];
+        let st = DenseStore::new_fleet(6, 4, &init);
+        assert!(!DenseStore::COW);
+        assert_eq!(st.materialized_rows(), 6, "dense rows are always resident");
+        assert!(matches!(st.view(&init), ModelView::PerClient(_)));
+        exercise(st, 6);
+    }
+
+    #[test]
+    fn sharded_store_contract() {
+        let init = vec![1.0f32; 4];
+        let st = <ShardedStore as ClientStore>::new_fleet(100, 4, &init);
+        assert!(<ShardedStore as ClientStore>::COW);
+        assert_eq!(ClientStore::materialized_rows(&st), 0, "CoW starts empty");
+        assert_eq!(st.shard_size() % REDUCE_LEAF, 0, "leaf-aligned shards");
+        assert!(matches!(st.view(&init), ModelView::Cow { .. }));
+        exercise(st, 100);
+    }
+
+    #[test]
+    fn release_is_noop_on_dense_and_reclaims_on_sharded() {
+        let init = vec![0.5f32; 3];
+        let mut d = DenseStore::new_fleet(3, 3, &init);
+        d.materialize(1, &init)[0] = 9.0;
+        d.release(1);
+        assert_eq!(d.row(1).unwrap()[0], 9.0, "dense release keeps the row");
+        let mut s = <ShardedStore as ClientStore>::new_fleet(16, 3, &init);
+        s.materialize(1, &init)[0] = 9.0;
+        ClientStore::release(&mut s, 1);
+        assert!(ClientStore::row(&s, 1).is_none(), "sharded release reclaims");
+    }
+}

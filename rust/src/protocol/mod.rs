@@ -1,14 +1,27 @@
-//! The probabilistic communication protocol (§III–IV).
+//! Communication schedules: *when* the protocol communicates.
 //!
-//! Each iteration flips ξ_k ~ Bernoulli(p). ξ = 0 ⇒ all devices take a
-//! local gradient step (no communication). ξ = 1 ⇒ an aggregation step,
-//! and **only the 0→1 transition communicates**: devices uplink compressed
-//! models, the master averages and downlinks a compressed anchor. A 1→1
-//! step reuses the cached anchor (the average of local models does not
-//! change across consecutive aggregation steps — §III).
+//! The unified-formulation view (Hanzely & Richtárik 2020; Hanzely, Zhao,
+//! Kolar 2021) treats L2GD and the fixed-cadence baselines as one
+//! algorithm skeleton whose iterations differ only in the step kind dealt
+//! per iteration. That dealer is the [`CommSchedule`] trait; the generic
+//! round engine ([`crate::algorithms::engine::Engine`]) holds one and
+//! asks it what iteration k must do:
 //!
-//! Algorithm 1 initializes ξ₋₁ = 1 with x̄⁻¹ = mean of the (identical)
-//! initial models, so a first-step aggregation is a *cached* one.
+//! * [`Coin`] — **the paper's probabilistic protocol** (§III–IV). Each
+//!   iteration flips ξ_k ~ Bernoulli(p). ξ = 0 ⇒ all devices take a local
+//!   gradient step (no communication). ξ = 1 ⇒ an aggregation step, and
+//!   **only the 0→1 transition communicates**: devices uplink compressed
+//!   models, the master averages and downlinks a compressed anchor. A 1→1
+//!   step reuses the cached anchor (the average of local models does not
+//!   change across consecutive aggregation steps — §III). Algorithm 1
+//!   initializes ξ₋₁ = 1 with x̄⁻¹ = mean of the (identical) initial
+//!   models, so a first-step aggregation is a *cached* one.
+//! * [`FixedCadence`] — the FedAvg/FedOpt baseline schedule: exactly `T`
+//!   local steps, then one communicating aggregation, repeating forever.
+//!   Never deals a cached aggregation (at aggregation coefficient 1 every
+//!   fresh round resets clients onto the broadcast, so there is no cached
+//!   anchor left to reuse — Figs 7–8's "FedAvg = L2GD at ηλ/np = 1 with a
+//!   deterministic number of local steps").
 
 use crate::util::Rng;
 
@@ -21,6 +34,18 @@ pub enum StepKind {
     AggregateFresh,
     /// ξ_k = 1, ξ_{k−1} = 1: aggregation toward the cached anchor, no comm
     AggregateCached,
+}
+
+/// A pluggable per-iteration step dealer — the "communication schedule"
+/// axis of the unified algorithm family. Implementations must be
+/// deterministic given their construction seed (the simulator replays
+/// runs bit-exactly) and must account every draw in their [`CoinStats`].
+pub trait CommSchedule: Send {
+    /// Deal the kind of iteration k (advances internal state).
+    fn draw(&mut self) -> StepKind;
+
+    /// Running step-kind counts (every draw accounted).
+    fn stats(&self) -> &CoinStats;
 }
 
 /// The ξ coin with transition tracking.
@@ -82,6 +107,65 @@ impl Coin {
     /// FedAvg-like with an average of 3 steps per round, §VII-B).
     pub fn expected_steps_per_comm(&self) -> f64 {
         1.0 / self.expected_comm_rate()
+    }
+}
+
+impl CommSchedule for Coin {
+    fn draw(&mut self) -> StepKind {
+        Coin::draw(self)
+    }
+
+    fn stats(&self) -> &CoinStats {
+        &self.stats
+    }
+}
+
+/// The fixed local-epoch cadence of the FedAvg/FedOpt baselines: `T`
+/// local steps, then one communicating aggregation, repeating. One
+/// "round" therefore spans `T + 1` engine iterations. Deterministic —
+/// no seed, no RNG draws.
+#[derive(Clone, Debug)]
+pub struct FixedCadence {
+    local_steps: u64,
+    /// iterations dealt so far
+    pos: u64,
+    pub stats: CoinStats,
+}
+
+impl FixedCadence {
+    pub fn new(local_steps: u64) -> FixedCadence {
+        assert!(local_steps > 0, "a round needs at least one local step");
+        FixedCadence { local_steps, pos: 0, stats: CoinStats::default() }
+    }
+
+    pub fn local_steps(&self) -> u64 {
+        self.local_steps
+    }
+
+    /// Engine iterations per communication round (`T + 1`).
+    pub fn round_len(&self) -> u64 {
+        self.local_steps + 1
+    }
+}
+
+impl CommSchedule for FixedCadence {
+    fn draw(&mut self) -> StepKind {
+        self.pos += 1;
+        let kind = if self.pos % (self.local_steps + 1) == 0 {
+            StepKind::AggregateFresh
+        } else {
+            StepKind::Local
+        };
+        match kind {
+            StepKind::Local => self.stats.locals += 1,
+            StepKind::AggregateFresh => self.stats.fresh += 1,
+            StepKind::AggregateCached => unreachable!(),
+        }
+        kind
+    }
+
+    fn stats(&self) -> &CoinStats {
+        &self.stats
     }
 }
 
@@ -156,6 +240,36 @@ mod tests {
         let coin = Coin::new(0.5, 0);
         assert!((coin.expected_comm_rate() - 0.25).abs() < 1e-12);
         assert!((coin.expected_steps_per_comm() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fixed_cadence_deals_t_locals_then_fresh() {
+        let mut s = FixedCadence::new(3);
+        for round in 0..5 {
+            for j in 0..3 {
+                assert_eq!(CommSchedule::draw(&mut s), StepKind::Local,
+                           "round {round} draw {j}");
+            }
+            assert_eq!(CommSchedule::draw(&mut s), StepKind::AggregateFresh,
+                       "round {round}");
+        }
+        assert_eq!(s.stats.locals, 15);
+        assert_eq!(s.stats.fresh, 5);
+        assert_eq!(s.stats.cached, 0);
+        assert_eq!(s.stats().total(), 20, "every draw accounted");
+        assert_eq!(s.round_len(), 4);
+    }
+
+    #[test]
+    fn coin_implements_comm_schedule() {
+        // the trait surface deals the same stream as the inherent methods
+        let mut a = Coin::new(0.4, 7);
+        let mut b = Coin::new(0.4, 7);
+        for _ in 0..200 {
+            let dyn_b: &mut dyn CommSchedule = &mut b;
+            assert_eq!(a.draw(), dyn_b.draw());
+        }
+        assert_eq!(CommSchedule::stats(&a).total(), 200);
     }
 
     /// Statistical check across a p grid: the empirical fraction of

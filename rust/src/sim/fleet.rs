@@ -113,6 +113,11 @@ impl Fleet {
     /// Materialize `n` device profiles (device i drawn from its own
     /// random-access stream — stable under fleet-size changes for the
     /// shared prefix, and identical to lazy [`FleetSpec::device`] draws).
+    ///
+    /// The simulator itself only ever uses the lazy per-device lookups;
+    /// a materialized `Fleet` survives as the *equivalence oracle* the
+    /// statistical suite checks those lookups against (lazy ≡ built,
+    /// prefix-stable in n) and for offline fleet inspection.
     pub fn build(spec: &FleetSpec, n: usize, seed: u64) -> Fleet {
         let devices = (0..n).map(|i| spec.device(seed, i as u64)).collect();
         Fleet { devices }

@@ -1,32 +1,49 @@
 //! Discrete-event fleet simulator: partial participation, heterogeneous
-//! devices, and byte-accurate wire framing.
+//! devices, and byte-accurate wire framing — for every registered fleet
+//! algorithm ([`crate::algorithms::FLEET_ALGS`]).
 //!
 //! The lockstep harness answers "what does the algorithm do"; this module
 //! answers "what does it do on a *fleet*" — phones next to laptops, WAN
 //! links, day/night churn, stragglers — with communication measured in
 //! serialized bytes ([`crate::transport::frame`]) and progress measured in
-//! simulated seconds, not just theoretical bits.
+//! simulated seconds, not just theoretical bits. L2GD's probabilistic
+//! protocol and the FedAvg/FedOpt fixed-cadence baselines all run on the
+//! same generic cohort engine (`alg=` in the scenario grammar), so the
+//! paper's bits-per-accuracy comparison holds up under realistic cohort
+//! sampling, churn, and million-device scale.
 //!
 //! * [`queue`] — deterministic timestamped event queue (binary heap, FIFO
 //!   ties).
 //! * [`fleet`] — device profiles drawn from configurable distributions
 //!   (uniform / log-normal / bimodal "phone vs laptop") via O(1)
-//!   random-access streams (lazy at mega-fleet sizes) and seeded
+//!   random-access streams (never materialized fleet-wide) and seeded
 //!   availability traces (windowed dropout, diurnal cycles).
 //! * [`scenario`] — presets (`uniform`, `lognormal-wan`, `diurnal-churn`,
-//!   `straggler-heavy`, `megafleet`, `megafleet-churn`) behind a
-//!   `name[:key=val,...]` spec grammar.
-//! * [`runner`] — drives the sharded cohort engine
+//!   `straggler-heavy`, `megafleet`, `megafleet-churn`,
+//!   `megafleet-fedavg`) behind a `name[:key=val,...]` spec grammar with
+//!   an `alg=l2gd|fedavg|fedopt` key.
+//! * [`runner`] — drives the generic cohort engine
 //!   ([`crate::algorithms::ShardedL2gdEngine`], copy-on-write client
-//!   state): cohort selection per event in O(cohort) — lazy id-space
-//!   sampling at mega-fleet sizes — first-k-of-m quorum under a straggler
-//!   deadline, and a fleet clock advanced by the event queue.
+//!   state): one O(cohort) id-space cohort draw at every fleet size,
+//!   first-k-of-m quorum under a straggler deadline, and a fleet clock
+//!   advanced by the event queue.
+//!
+//! ### Device → data-shard mapping (the canonical definition)
+//! A simulated fleet can be far larger than the number of distinct data
+//! shards the environment carries: fleet device `i` trains and evaluates
+//! on data shard **`i mod n_clients`**, where `n_clients` is
+//! `FedEnv::n_clients()` (= [`SimCfg::data_clients`] at environment build
+//! time). Ordinary scenarios keep fleet == shards, making the mapping the
+//! identity; mega scenarios map a million devices onto the run default's
+//! few heterogeneous shards. This paragraph is the single source of truth
+//! for the mapping — other docs (README "Architecture", the engine's
+//! `data_shard` accessor, `SimCfg`) link here instead of restating it.
 //!
 //! `pfl sim` is the CLI front end; with the `uniform` preset the simulated
 //! series is bit-identical to the dense lockstep engine (the equivalence
 //! is pinned by `rust/tests/integration_sim.rs`), and the `megafleet`
-//! presets run a million devices with resident state proportional to the
-//! clients actually touched.
+//! presets run a million devices — under L2GD *or* the baselines — with
+//! resident state proportional to the clients actually touched.
 
 pub mod fleet;
 pub mod queue;

@@ -1,7 +1,14 @@
-//! The fleet simulator: drives the sharded cohort engine
-//! ([`ShardedL2gdEngine`]) over a modeled device fleet with partial
-//! participation, churn, straggler deadlines, and byte-accurate wire
-//! framing — at up to million-device fleet sizes.
+//! The fleet simulator: drives the generic cohort engine
+//! ([`ShardedL2gdEngine`] — the copy-on-write instantiation of
+//! [`crate::algorithms::engine::Engine`]) over a modeled device fleet
+//! with partial participation, churn, straggler deadlines, and
+//! byte-accurate wire framing — at up to million-device fleet sizes, for
+//! **any registered fleet algorithm** ([`crate::algorithms::FLEET_ALGS`]:
+//! L2GD's probabilistic protocol, or the FedAvg/FedOpt fixed-cadence
+//! baselines via the scenario grammar's `alg=` key). That makes the
+//! paper's headline comparison — compressed L2GD vs fixed-schedule
+//! baselines on communicated bits — runnable under realistic cohort
+//! sampling, churn, and fleet scale.
 //!
 //! ### Time model
 //! Protocol iterations are synchronous (the paper's Algorithm 1): a local
@@ -17,26 +24,25 @@
 //! discarded traffic (the bytes crossed the network either way).
 //!
 //! ### Cohorts, not fleets
-//! Every event touches a *cohort*, never the fleet: availability checks,
-//! profile lookups, arrival scheduling, the engine sweeps — all O(cohort).
-//! Small scenarios enumerate the available set and sample a fraction of
-//! it (the original semantics); **mega** scenarios
-//! ([`super::scenario::Scenario::mega`]) instead draw cohort ids directly
-//! from device-id space in O(cohort) ([`sample_device_ids`]), filter them
-//! by the churn hash, and look device profiles up lazily
-//! ([`FleetSpec::device`]) — a million-device fleet is never materialized.
-//! Client model state lives in the engine's copy-on-write sharded store,
-//! so resident bytes scale with |ever-touched clients| (bounded for mega
-//! runs by [`resident_bound_bytes`], enforced at the end of every mega
-//! `run`).
+//! Every event touches a *cohort*, never the fleet — one id-space path at
+//! every fleet size: cohort ids are drawn directly from `[0, n)` in
+//! O(cohort) ([`sample_device_ids`]; a full-sample draw enumerates), then
+//! filtered by the churn hash, and device profiles are lazy O(1) lookups
+//! ([`FleetSpec::device`]) — a fleet is never materialized. Client model
+//! state lives in the engine's copy-on-write sharded store, so resident
+//! bytes scale with |ever-touched clients| (bounded for mega runs by
+//! [`resident_bound_bytes`], enforced at the end of every mega `run` —
+//! whichever algorithm ran).
 //!
 //! ### Anchor possession
 //! Only the cohort of a committed fresh round receives (and pays the
-//! downlink for) the new anchor C_M(ȳ). The simulator tracks who holds
-//! the *current* anchor (a sorted holder list, `None` = everyone at init —
+//! downlink for) the new anchor. The simulator tracks who holds the
+//! *current* anchor (a sorted holder list, `None` = everyone at init —
 //! Algorithm 1's ξ₋₁ = 1 convention): on later cached-aggregation steps,
 //! devices that missed the latest broadcast skip the aggregation instead
-//! of silently using bytes they never downloaded.
+//! of silently using bytes they never downloaded. (Fixed-cadence
+//! schedules never deal cached aggregations, so the mechanism is inert
+//! for the baselines.)
 //!
 //! ### Determinism
 //! Fleet profiles, churn traces, cohort sampling, and every engine stream
@@ -50,14 +56,14 @@
 use std::cmp::Ordering;
 use std::collections::HashSet;
 
-use crate::algorithms::{FedEnv, L2gd, ShardedL2gdEngine};
+use crate::algorithms::{AlgSpec, FedEnv, L2gd, ShardedL2gdEngine, FLEET_ALGS};
 use crate::experiments::fig3;
 use crate::metrics::{Record, Series};
 use crate::protocol::StepKind;
 use crate::util::json::Value;
 use crate::util::Rng;
 
-use super::fleet::{Churn, DeviceProfile, Fleet, FleetSpec};
+use super::fleet::{Churn, DeviceProfile, FleetSpec};
 use super::queue::EventQueue;
 use super::scenario::Scenario;
 
@@ -71,12 +77,17 @@ pub struct SimCfg {
     pub seed: u64,
     /// fleet size when the scenario does not pin one (`clients=0`); for
     /// mega scenarios this is instead the number of *data shards* the
-    /// fleet maps onto (device i trains on shard i mod data shards)
+    /// fleet maps onto (see the device → shard mapping in [`crate::sim`])
     pub n_clients: usize,
     pub rows_per_worker: usize,
+    /// L2GD meta-parameters (`alg=l2gd`)
     pub p: f64,
     pub lambda: f64,
     pub eta: f64,
+    /// baseline parameters (`alg=fedavg` / `alg=fedopt`)
+    pub local_lr: f64,
+    pub local_steps: u64,
+    pub server_lr: f64,
     pub client_comp: String,
     pub master_comp: String,
 }
@@ -94,6 +105,9 @@ impl SimCfg {
             p: 0.65,
             lambda: 10.0,
             eta: 1.0,
+            local_lr: 0.5,
+            local_steps: 5,
+            server_lr: 0.05,
             client_comp: "natural".into(),
             master_comp: "natural".into(),
         }
@@ -115,14 +129,49 @@ impl SimCfg {
     }
 
     /// Data shards the environment carries: the fleet size for ordinary
-    /// scenarios (identity device → shard mapping), the run default for
-    /// mega scenarios (a million devices share a few heterogeneous
-    /// shards via i mod shards).
+    /// scenarios, the run default for mega scenarios. The device → shard
+    /// mapping itself is documented once, in [`crate::sim`].
     pub fn data_clients(&self) -> usize {
         if self.scenario.mega {
             self.n_clients
         } else {
             self.effective_clients()
+        }
+    }
+
+    /// The engine spec for this run's `alg=` choice ([`FLEET_ALGS`]) at
+    /// fleet size `fleet_n`. L2GD gets the same λ stability clamp the
+    /// Fig-3 sweeps use.
+    pub fn alg_spec(&self, fleet_n: usize) -> anyhow::Result<AlgSpec> {
+        match self.scenario.alg.as_str() {
+            "l2gd" => {
+                let mut alg = L2gd::new(self.p, self.lambda, self.eta, fleet_n,
+                                        &self.client_comp, &self.master_comp)?;
+                fig3::clamp_agg_stability(&mut alg, fleet_n);
+                AlgSpec::l2gd(&alg, fleet_n)
+            }
+            "fedavg" => AlgSpec::fedavg(self.local_lr, self.local_steps,
+                                        &self.client_comp, &self.master_comp),
+            "fedopt" => AlgSpec::fedopt(self.local_lr, self.local_steps,
+                                        self.server_lr, &self.client_comp,
+                                        &self.master_comp),
+            other => anyhow::bail!(
+                "unknown fleet algorithm `{other}` (registered: {})",
+                FLEET_ALGS.join(", ")),
+        }
+    }
+
+    /// Series label for this run (algorithm-specific parameter echo).
+    pub fn label(&self) -> String {
+        let sc = &self.scenario.spec;
+        match self.scenario.alg.as_str() {
+            "fedavg" => format!("sim[{sc}] fedavg[{}|{}]:lr={},T={}",
+                                self.client_comp, self.master_comp,
+                                self.local_lr, self.local_steps),
+            "fedopt" => format!("sim[{sc}] fedopt:lr={},T={},slr={}",
+                                self.local_lr, self.local_steps, self.server_lr),
+            _ => format!("sim[{sc}] l2gd[{}|{}]:p={},λ={}",
+                         self.client_comp, self.master_comp, self.p, self.lambda),
         }
     }
 }
@@ -196,44 +245,15 @@ impl SimStats {
     }
 }
 
-/// Device profiles: materialized for small fleets, lazy O(1) lookups for
-/// mega fleets (bit-identical draws either way — `Fleet::build` goes
-/// through `FleetSpec::device`).
-enum FleetHandle {
-    Dense(Fleet),
-    Lazy { spec: FleetSpec, seed: u64, n: usize },
-}
-
-impl FleetHandle {
-    fn len(&self) -> usize {
-        match self {
-            FleetHandle::Dense(f) => f.len(),
-            FleetHandle::Lazy { n, .. } => *n,
-        }
-    }
-
-    fn profile(&self, i: usize) -> DeviceProfile {
-        match self {
-            FleetHandle::Dense(f) => f.devices[i],
-            FleetHandle::Lazy { spec, seed, .. } => spec.device(*seed, i as u64),
-        }
-    }
-
-    fn mean_step_time(&self) -> f64 {
-        match self {
-            FleetHandle::Dense(f) => f.mean_step_time(),
-            FleetHandle::Lazy { spec, .. } => spec.mean_step_time(),
-        }
-    }
-}
-
-/// A stepping fleet simulation over a borrowed environment.
+/// A stepping fleet simulation over a borrowed environment, driving any
+/// registered fleet algorithm on the copy-on-write cohort engine.
 pub struct FleetSim<'e> {
     eng: ShardedL2gdEngine<'e>,
-    fleet: FleetHandle,
+    /// lazy O(1) per-device profiles — a fleet is never materialized
+    fleet: FleetSpec,
+    fleet_seed: u64,
     churn: Churn,
     churn_seed: u64,
-    mega: bool,
     sample_frac: f64,
     quorum_frac: f64,
     deadline_s: f64,
@@ -248,8 +268,6 @@ pub struct FleetSim<'e> {
     cohort: Vec<u32>,
     agg_cohort: Vec<u32>,
     arrived: Vec<u32>,
-    avail: Vec<u32>,
-    pick: Vec<usize>,
     seen: HashSet<u32>,
     queue: EventQueue<u32>,
 }
@@ -261,28 +279,17 @@ impl<'e> FleetSim<'e> {
                         "environment has {data_n} data shards, config wants {}",
                         cfg.data_clients());
         let fleet_n = cfg.effective_clients();
-        let mut alg = L2gd::new(cfg.p, cfg.lambda, cfg.eta, fleet_n,
-                                &cfg.client_comp, &cfg.master_comp)?;
-        fig3::clamp_agg_stability(&mut alg, fleet_n);
-        let mut eng = ShardedL2gdEngine::new(&alg, env, fleet_n)?;
+        let spec = cfg.alg_spec(fleet_n)?;
+        let mut eng = ShardedL2gdEngine::from_spec(&spec, env, fleet_n)?;
         eng.enable_wire_framing();
-        let fleet_seed = cfg.seed ^ 0xF1EE7;
-        let fleet = if cfg.scenario.mega {
-            FleetHandle::Lazy {
-                spec: cfg.scenario.fleet.clone(),
-                seed: fleet_seed,
-                n: fleet_n,
-            }
-        } else {
-            FleetHandle::Dense(Fleet::build(&cfg.scenario.fleet, fleet_n, fleet_seed))
-        };
+        let fleet = cfg.scenario.fleet.clone();
         let mean_step_s = fleet.mean_step_time();
         Ok(FleetSim {
             eng,
             fleet,
+            fleet_seed: cfg.seed ^ 0xF1EE7,
             churn: cfg.scenario.churn.clone(),
             churn_seed: cfg.seed ^ 0xC4A9,
-            mega: cfg.scenario.mega,
             sample_frac: cfg.scenario.sample_frac,
             quorum_frac: cfg.scenario.quorum_frac,
             deadline_s: cfg.scenario.deadline_s,
@@ -294,11 +301,14 @@ impl<'e> FleetSim<'e> {
             cohort: Vec::new(),
             agg_cohort: Vec::new(),
             arrived: Vec::new(),
-            avail: Vec::new(),
-            pick: Vec::new(),
             seen: HashSet::new(),
             queue: EventQueue::new(),
         })
+    }
+
+    /// Device `i`'s profile — a pure O(1) function of the fleet seed.
+    fn profile(&self, i: usize) -> DeviceProfile {
+        self.fleet.device(self.fleet_seed, i as u64)
     }
 
     pub fn clock(&self) -> f64 {
@@ -359,40 +369,19 @@ impl<'e> FleetSim<'e> {
         Ok(rec)
     }
 
-    /// The event's cohort: available devices (small fleets: sampled from
-    /// the enumerated available set; mega fleets: drawn from id space in
-    /// O(cohort) and churn-filtered), sorted ascending.
+    /// The event's cohort — **one id-space path at every fleet size**:
+    /// draw `⌈sample · n⌉` distinct device ids in O(cohort)
+    /// ([`sample_device_ids`]; a full-sample draw enumerates instead of
+    /// coupon-collecting n from n), sort ascending, then drop whoever the
+    /// churn hash has offline. The mega flag plays no part in selection —
+    /// enumerated-fleet and mega runs draw identical cohorts for the same
+    /// seed (pinned by the sampling property test).
     fn select_cohort(&mut self) {
-        let n = self.fleet.len();
+        let n = self.eng.n_fleet();
         let (churn, seed, clock) = (&self.churn, self.churn_seed, self.clock);
         self.cohort.clear();
-        if !self.mega {
-            self.avail.clear();
-            for i in 0..n as u32 {
-                if churn.available(seed, i as usize, clock) {
-                    self.avail.push(i);
-                }
-            }
-            if self.avail.is_empty() {
-                return;
-            }
-            if self.sample_frac >= 1.0 {
-                self.cohort.extend_from_slice(&self.avail);
-                return;
-            }
-            let m = ((self.sample_frac * self.avail.len() as f64).ceil() as usize)
-                .clamp(1, self.avail.len());
-            self.sampler.sample_indices_into(self.avail.len(), m, &mut self.pick);
-            for &j in &self.pick {
-                self.cohort.push(self.avail[j]);
-            }
-            self.cohort.sort_unstable();
-            return;
-        }
         let m = ((self.sample_frac * n as f64).ceil() as usize).clamp(1, n);
         if m >= n {
-            // full-fleet cohort (a mega-promoted scenario with sample=1):
-            // enumerate directly instead of coupon-collecting n from n
             self.cohort.extend(0..n as u32);
         } else {
             sample_device_ids(&mut self.sampler, n, m,
@@ -407,7 +396,7 @@ impl<'e> FleetSim<'e> {
     fn max_cohort_step_time(&self) -> f64 {
         let mut t = 0.0f64;
         for &i in &self.cohort {
-            t = t.max(self.fleet.profile(i as usize).step_time_s);
+            t = t.max(self.profile(i as usize).step_time_s);
         }
         t
     }
@@ -450,7 +439,7 @@ impl<'e> FleetSim<'e> {
         // schedule arrivals: compute + latency + serialized frame transfer
         self.queue.clear();
         for &i in &self.cohort {
-            let dev = self.fleet.profile(i as usize);
+            let dev = self.profile(i as usize);
             let bits = self.eng.uplink_frame_bytes(i as usize) as f64 * 8.0;
             let t = self.clock + dev.step_time_s + dev.latency_s + bits / dev.up_bps;
             self.queue.push(t, i);
@@ -502,7 +491,7 @@ impl<'e> FleetSim<'e> {
         let dbits = self.eng.downlink_frame_bytes() as f64 * 8.0;
         let mut down_t = 0.0f64;
         for &i in &self.arrived {
-            let dev = self.fleet.profile(i as usize);
+            let dev = self.profile(i as usize);
             down_t = down_t.max(dev.latency_s + dbits / dev.down_bps);
         }
         self.clock = round_end + down_t;
@@ -515,6 +504,8 @@ impl<'e> FleetSim<'e> {
 pub struct SimResult {
     /// the full scenario spec (overrides included) — the output key
     pub scenario: String,
+    /// the fleet algorithm that ran (`l2gd` | `fedavg` | `fedopt`)
+    pub alg: String,
     pub series: Series,
     pub stats: SimStats,
     pub fleet_size: u64,
@@ -531,6 +522,7 @@ impl SimResult {
         let per_device = self.resident_bytes as f64 / self.fleet_size.max(1) as f64;
         Value::obj(vec![
             ("scenario".into(), Value::Str(self.scenario.clone())),
+            ("alg".into(), Value::Str(self.alg.clone())),
             ("label".into(), Value::Str(self.series.label.clone())),
             ("steps".into(), Value::Num(last.step as f64)),
             ("fleet_size".into(), Value::Num(self.fleet_size as f64)),
@@ -563,9 +555,7 @@ impl SimResult {
 pub fn run(cfg: &SimCfg) -> anyhow::Result<SimResult> {
     let env = build_env(cfg);
     let mut sim = FleetSim::new(cfg, &env)?;
-    let mut series = Series::new(format!(
-        "sim[{}] l2gd[{}|{}]:p={},λ={}",
-        cfg.scenario.spec, cfg.client_comp, cfg.master_comp, cfg.p, cfg.lambda));
+    let mut series = Series::new(cfg.label());
     series.records.push(sim.evaluate(0)?);
     for k in 1..=cfg.steps {
         sim.step(k)?;
@@ -591,6 +581,7 @@ pub fn run(cfg: &SimCfg) -> anyhow::Result<SimResult> {
     }
     Ok(SimResult {
         scenario: cfg.scenario.spec.clone(),
+        alg: cfg.scenario.alg.clone(),
         series,
         stats: sim.stats().clone(),
         fleet_size: store.len() as u64,
@@ -720,6 +711,40 @@ mod tests {
         let last = res.series.last().unwrap();
         assert!(last.train_loss.is_finite());
         assert!(last.personal_loss.is_finite());
+    }
+
+    /// The scenario grammar's `alg=` key swaps the engine's schedule: the
+    /// FedAvg cadence commits exactly one round per T+1 iterations under
+    /// full participation, and the run still learns and frames bytes.
+    #[test]
+    fn fedavg_scenario_runs_and_communicates_on_cadence() {
+        let mut cfg = smoke("uniform:alg=fedavg", 8);
+        cfg.steps = 120;
+        let res = run(&cfg).unwrap();
+        assert_eq!(res.alg, "fedavg");
+        // T = 5 local iterations then one fresh round ⇒ 120 / 6 = 20
+        assert_eq!(res.stats.comm_events, 20, "{:?}", res.stats);
+        assert_eq!(res.stats.skipped_rounds, 0);
+        let last = res.series.last().unwrap();
+        assert!(last.train_loss < res.series.records[0].train_loss,
+                "fedavg fleet run must learn");
+        assert_eq!(last.bits_up % 8, 0, "framed bytes on the wire");
+        assert_eq!(last.participants, 5);
+        let v = crate::util::json::parse(&res.to_json().to_string_pretty()).unwrap();
+        assert_eq!(v.get("alg").unwrap().as_str(), Some("fedavg"));
+    }
+
+    #[test]
+    fn fedopt_scenario_runs_and_learns() {
+        let mut cfg = smoke("uniform:alg=fedopt", 9);
+        cfg.steps = 120;
+        let res = run(&cfg).unwrap();
+        assert_eq!(res.alg, "fedopt");
+        assert_eq!(res.stats.comm_events, 20);
+        let last = res.series.last().unwrap();
+        assert!(last.train_loss.is_finite());
+        assert!(last.train_loss < res.series.records[0].train_loss,
+                "fedopt fleet run must learn");
     }
 
     #[test]

@@ -9,29 +9,34 @@
 //! ```
 //!
 //! Presets: `uniform`, `lognormal-wan`, `diurnal-churn`,
-//! `straggler-heavy`, `megafleet`, `megafleet-churn`. Override keys:
+//! `straggler-heavy`, `megafleet`, `megafleet-churn`, `megafleet-fedavg`.
+//! Override keys:
 //!
 //! * `clients=N`   — fleet size (0 = inherit the run default)
-//! * `sample=F`    — fraction of devices sampled per event, (0, 1]
+//! * `sample=F`    — fraction of the fleet drawn per event, (0, 1]
+//!   (drawn devices that churn has offline simply drop out of the
+//!   cohort — one id-space sampling path at every fleet size)
 //! * `quorum=F`    — fraction of the sampled cohort to wait for, (0, 1]
 //!   (the "first k of m" over-selection policy)
 //! * `deadline=S`  — straggler deadline in seconds (`inf` = wait for the
 //!   quorum however long it takes)
+//! * `alg=A`       — fleet algorithm: one of
+//!   [`crate::algorithms::FLEET_ALGS`] (`l2gd` | `fedavg` | `fedopt`);
+//!   unknown names list what is registered
 //!
 //! Example: `straggler-heavy:clients=20,sample=0.5,quorum=0.8,deadline=2`.
 //!
 //! ### Mega fleets
 //! The `megafleet*` presets (and any scenario whose fleet reaches
-//! [`MEGA_THRESHOLD`] devices) run in **mega mode**: device profiles are
-//! looked up lazily (never materialized fleet-wide), the per-event cohort
-//! is drawn in O(cohort) directly from device-id space and then filtered
-//! by churn (instead of enumerating the available set, which is O(fleet)),
-//! and client state lives in the copy-on-write sharded store. In mega
-//! mode `sample` is therefore the fraction of the *fleet* drawn per
-//! event, of which the available members form the cohort; small-fleet
-//! scenarios keep the original "fraction of available devices" reading.
+//! [`MEGA_THRESHOLD`] devices) run in **mega mode**. Cohort selection is
+//! the same O(cohort) id-space draw at every fleet size; the flag only
+//! switches on the fleet-scale bookkeeping: touched-mode evaluation in
+//! the engine and the resident-bytes bound `runner::run` enforces over
+//! the copy-on-write store. (Device profiles are lazy O(1) lookups
+//! everywhere — a fleet is never materialized.)
 
 use super::fleet::{Churn, Dist, FleetSpec};
+use crate::algorithms::FLEET_ALGS;
 
 #[derive(Clone, Debug)]
 pub struct Scenario {
@@ -45,13 +50,17 @@ pub struct Scenario {
     pub clients: usize,
     pub fleet: FleetSpec,
     pub churn: Churn,
-    /// fraction of available devices sampled per communication event
+    /// fraction of the fleet drawn per communication event (churn then
+    /// filters the draw down to the cohort)
     pub sample_frac: f64,
     /// fraction of the sampled cohort whose arrival completes the round
     pub quorum_frac: f64,
     /// straggler deadline per round, seconds (INFINITY = no deadline)
     pub deadline_s: f64,
-    /// mega mode: lazy fleet, O(cohort) sampling, cohort-sparse state
+    /// fleet algorithm driving the engine: one of
+    /// [`crate::algorithms::FLEET_ALGS`]
+    pub alg: String,
+    /// mega mode: touched-mode evaluation + enforced resident-bytes bound
     /// (forced on whenever the fleet reaches [`MEGA_THRESHOLD`])
     pub mega: bool,
 }
@@ -80,6 +89,10 @@ pub const PRESETS: &[(&str, &str)] = &[
     ("megafleet-churn",
      "the megafleet under a diurnal availability cycle: sampled devices \
       that are offline simply miss the event"),
+    ("megafleet-fedavg",
+     "the megafleet fleet running the FedAvg baseline (alg=fedavg): fixed \
+      local-step cadence, cohort resets onto the broadcast — the \
+      engine-vs-engine comparison the paper's bits accounting needs"),
 ];
 
 /// Sorted preset names (error messages, docs, CLI listings).
@@ -104,6 +117,7 @@ fn preset(name: &str) -> Option<Scenario> {
             sample_frac: 1.0,
             quorum_frac: 1.0,
             deadline_s: f64::INFINITY,
+            alg: "l2gd".into(),
             mega: false,
         },
         "lognormal-wan" => Scenario {
@@ -120,6 +134,7 @@ fn preset(name: &str) -> Option<Scenario> {
             sample_frac: 1.0,
             quorum_frac: 1.0,
             deadline_s: f64::INFINITY,
+            alg: "l2gd".into(),
             mega: false,
         },
         "diurnal-churn" => Scenario {
@@ -141,6 +156,7 @@ fn preset(name: &str) -> Option<Scenario> {
             sample_frac: 1.0,
             quorum_frac: 1.0,
             deadline_s: f64::INFINITY,
+            alg: "l2gd".into(),
             mega: false,
         },
         "straggler-heavy" => Scenario {
@@ -158,9 +174,10 @@ fn preset(name: &str) -> Option<Scenario> {
             sample_frac: 1.0,
             quorum_frac: 0.6,
             deadline_s: 2.0,
+            alg: "l2gd".into(),
             mega: false,
         },
-        "megafleet" | "megafleet-churn" => Scenario {
+        "megafleet" | "megafleet-churn" | "megafleet-fedavg" => Scenario {
             name: name.into(),
             spec: name.into(),
             clients: 1_000_000,
@@ -183,6 +200,7 @@ fn preset(name: &str) -> Option<Scenario> {
             sample_frac: 0.0002,
             quorum_frac: 0.9,
             deadline_s: 5.0,
+            alg: if name == "megafleet-fedavg" { "fedavg" } else { "l2gd" }.into(),
             mega: true,
         },
         _ => return None,
@@ -221,12 +239,16 @@ pub fn from_spec(spec: &str) -> anyhow::Result<Scenario> {
                 "sample" => sc.sample_frac = fval()?,
                 "quorum" => sc.quorum_frac = fval()?,
                 "deadline" => sc.deadline_s = fval()?,
+                "alg" => sc.alg = val.to_string(),
                 other => anyhow::bail!(
                     "unknown scenario option `{other}` (known: clients, \
-                     sample, quorum, deadline)"),
+                     sample, quorum, deadline, alg)"),
             }
         }
     }
+    anyhow::ensure!(FLEET_ALGS.contains(&sc.alg.as_str()),
+                    "unknown fleet algorithm `{}` (registered: {})",
+                    sc.alg, FLEET_ALGS.join(", "));
     anyhow::ensure!(sc.sample_frac > 0.0 && sc.sample_frac <= 1.0,
                     "sample={} outside (0, 1]", sc.sample_frac);
     anyhow::ensure!(sc.quorum_frac > 0.0 && sc.quorum_frac <= 1.0,
@@ -313,6 +335,33 @@ mod tests {
         assert!(promoted.mega);
         let not_promoted = from_spec("straggler-heavy:clients=1000").unwrap();
         assert!(!not_promoted.mega);
+    }
+
+    #[test]
+    fn alg_key_selects_and_validates_the_algorithm() {
+        assert_eq!(from_spec("uniform").unwrap().alg, "l2gd");
+        assert_eq!(from_spec("uniform:alg=fedavg").unwrap().alg, "fedavg");
+        assert_eq!(from_spec("straggler-heavy:alg=fedopt,clients=10").unwrap().alg,
+                   "fedopt");
+        // the preset bakes the algorithm in; an override still wins
+        assert_eq!(from_spec("megafleet-fedavg").unwrap().alg, "fedavg");
+        assert_eq!(from_spec("megafleet-fedavg:alg=l2gd").unwrap().alg, "l2gd");
+        // unknown algorithms list what is registered
+        let err = format!("{:#}", from_spec("uniform:alg=dropout-sgd").unwrap_err());
+        assert!(err.contains("unknown fleet algorithm `dropout-sgd`"), "{err}");
+        for &name in crate::algorithms::FLEET_ALGS {
+            assert!(err.contains(name), "error should list `{name}`: {err}");
+        }
+    }
+
+    #[test]
+    fn megafleet_fedavg_preset_is_mega_with_fedavg() {
+        let sc = from_spec("megafleet-fedavg").unwrap();
+        assert!(sc.mega);
+        assert_eq!(sc.alg, "fedavg");
+        assert_eq!(sc.clients, 1_000_000);
+        assert_eq!(sc.churn, Churn::AlwaysOn);
+        assert!(sc.sample_frac <= 0.01);
     }
 
     #[test]

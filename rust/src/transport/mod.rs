@@ -43,10 +43,13 @@ impl Default for TimeModel {
 }
 
 pub struct Network {
-    /// one attribution bucket per client (`shard_size == 1`, the dense
-    /// engines) or per client *shard* (the sharded cohort engine at fleet
+    /// one attribution bucket per client (`shard_size == 1`, dense
+    /// stores) or per client *shard* (copy-on-write stores at fleet
     /// scale, where a million per-client buckets would reintroduce O(n)
-    /// memory into a path that is otherwise O(cohort))
+    /// memory into a path that is otherwise O(cohort)). The generic
+    /// engine picks the granularity from
+    /// `crate::model::ClientStore::link_shard_size`, so every fleet
+    /// algorithm meters through the same layout.
     links: Vec<LinkStats>,
     n_clients: usize,
     /// clients per attribution bucket
