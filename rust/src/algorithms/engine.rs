@@ -726,6 +726,16 @@ impl<'e, S: ClientStore> Engine<'e, S> {
                 kernels::add_assign(&mut self.ybar, row);
             }
         }
+        self.server_transform_and_broadcast(k, arrived)?;
+        self.apply_aggregation(arrived);
+        Ok(())
+    }
+
+    /// Shared tail of a communicating aggregate once ȳ is accumulated:
+    /// server transform, anchor compression, downlink metering to the
+    /// arrived cohort, anchor decode, and the round close.
+    fn server_transform_and_broadcast(&mut self, k: u64, arrived: &[u32])
+                                      -> anyhow::Result<()> {
         // server transform: plain averaging broadcasts C_M(ȳ); server
         // Adam treats Δ = w − ȳ as a pseudo-gradient, updates w, and
         // broadcasts C_M(w)
@@ -754,7 +764,79 @@ impl<'e, S: ClientStore> Engine<'e, S> {
         self.master_buf.decode_into(&mut self.anchor);
         self.anchor_is_base = false;
         self.net.end_round();
+        Ok(())
+    }
+
+    /// Phase 2 of an asynchronous *buffered* aggregate: like
+    /// [`Engine::complete_fresh`], but ȳ is the staleness-weighted convex
+    /// combination ȳ = Σ w_j·C_j(x_j) / Σ w_j over the applied updates —
+    /// the anchor stays a weighted average of client models, so the L2GD
+    /// aggregation semantics survive (constant weights recover the
+    /// uniform mean). Only applied updates meter here; the async runner
+    /// meters stale and straggler discards via [`Engine::discard_uplink`].
+    pub fn complete_fresh_weighted(&mut self, k: u64, arrived: &[u32],
+                                   weights: &[f32]) -> anyhow::Result<()> {
+        Self::debug_check_cohort(arrived, self.n);
+        anyhow::ensure!(!arrived.is_empty(),
+                        "weighted aggregation with an empty buffer");
+        anyhow::ensure!(arrived.len() == weights.len(),
+                        "{} updates with {} weights",
+                        arrived.len(), weights.len());
+        let mut wsum = 0.0f64;
+        for &w in weights {
+            anyhow::ensure!(w.is_finite() && w > 0.0,
+                            "staleness weight {w} must be positive and finite");
+            wsum += w as f64;
+        }
+        self.net.begin_round();
+        {
+            let slots = &self.slots;
+            let framing = &mut self.framing;
+            let net = &mut self.net;
+            for &i in arrived {
+                let slot =
+                    slots.get(&i).expect("applied client has no wire buffer");
+                let bits = match framing {
+                    Some(f) => f.uplink_bits(k, i as usize, &slot.wire)?,
+                    None => slot.wire.bits,
+                };
+                net.uplink(k, i as usize, bits);
+            }
+        }
+        // buffered cohorts are buffer-sized (small): accumulate
+        // sequentially in sorted-id order — deterministic whatever the
+        // fleet size, no leaf partials needed
+        self.ybar.fill(0.0);
+        for (&i, &w) in arrived.iter().zip(weights) {
+            let scale = (w as f64 / wsum) as f32;
+            self.slots[&i].wire.decode_add(&mut self.ybar, scale);
+        }
+        self.server_transform_and_broadcast(k, arrived)?;
         self.apply_aggregation(arrived);
+        Ok(())
+    }
+
+    /// Meter client `i`'s pending uplink as traffic the async master
+    /// discarded — stale (`stale = true`, past `max_stale` versions) or
+    /// straggler-wasted — outside any round bracket (overlapping cohorts
+    /// close independently of the engine's rounds). Valid after
+    /// [`Engine::compress_uplinks`] included `i`.
+    pub fn discard_uplink(&mut self, k: u64, i: u32, stale: bool)
+                          -> anyhow::Result<()> {
+        let bits = {
+            let slot = self.slots.get(&i).ok_or_else(|| {
+                anyhow::anyhow!("client {i} has no wire buffer to discard")
+            })?;
+            match &mut self.framing {
+                Some(f) => f.uplink_bits(k, i as usize, &slot.wire)?,
+                None => slot.wire.bits,
+            }
+        };
+        if stale {
+            self.net.offround_uplink_stale(k, i as usize, bits);
+        } else {
+            self.net.offround_uplink_wasted(k, i as usize, bits);
+        }
         Ok(())
     }
 
@@ -1258,6 +1340,69 @@ mod tests {
         assert!(rd.train_loss < first.train_loss,
                 "fedopt must learn: {} -> {}", first.train_loss, rd.train_loss);
         assert!(rd.train_loss.is_finite());
+    }
+
+    /// The weighted buffered aggregate at constant weights over a
+    /// power-of-two cohort is bit-identical to the uniform fresh round
+    /// (w/Σw = 1/count exactly), and weight scaling is invariant — the
+    /// normalization makes ȳ a convex combination whatever the scale.
+    #[test]
+    fn weighted_constant_aggregate_matches_uniform() {
+        let e = env(4, 50);
+        let alg = L2gd::from_local_and_agg(0.35, 0.4, 0.5, 4,
+                                           "natural", "natural").unwrap();
+        let all: Vec<u32> = (0..4).collect();
+        let mut a = ShardedL2gdEngine::new(&alg, &e, 4).unwrap();
+        let mut b = ShardedL2gdEngine::new(&alg, &e, 4).unwrap();
+        let mut c = ShardedL2gdEngine::new(&alg, &e, 4).unwrap();
+        for eng in [&mut a, &mut b, &mut c] {
+            eng.step_local(&all).unwrap();
+            eng.compress_uplinks(&all).unwrap();
+        }
+        a.complete_fresh(1, &all, &all).unwrap();
+        b.complete_fresh_weighted(1, &all, &[1.0; 4]).unwrap();
+        c.complete_fresh_weighted(1, &all, &[2.5; 4]).unwrap();
+        for i in 0..4 {
+            assert_eq!(a.row_or_base(i), b.row_or_base(i), "row {i}");
+            assert_eq!(b.row_or_base(i), c.row_or_base(i), "scaled row {i}");
+        }
+        assert_eq!(a.net().total_bits_up(), b.net().total_bits_up());
+        assert_eq!(a.net().total_bits_down(), b.net().total_bits_down());
+        assert_eq!(b.net().last_round_participants(), 4);
+        assert_eq!(b.net().comm_rounds(), 1);
+        // all applied traffic: goodput 1
+        assert_eq!(b.net().uplink_goodput(), 1.0);
+    }
+
+    /// Weighted-aggregate validation and off-round discard metering.
+    #[test]
+    fn weighted_aggregate_validates_and_discards_meter() {
+        let e = env(4, 51);
+        let alg = L2gd::from_local_and_agg(0.35, 0.4, 0.5, 4,
+                                           "identity", "identity").unwrap();
+        let mut eng = ShardedL2gdEngine::new(&alg, &e, 4).unwrap();
+        eng.enable_wire_framing();
+        let all: Vec<u32> = (0..4).collect();
+        eng.step_local(&all).unwrap();
+        eng.compress_uplinks(&all).unwrap();
+        assert!(eng.complete_fresh_weighted(1, &[], &[]).is_err(), "empty");
+        assert!(eng.complete_fresh_weighted(1, &[0, 1], &[1.0]).is_err(),
+                "length mismatch");
+        assert!(eng.complete_fresh_weighted(1, &[0, 1], &[1.0, 0.0]).is_err(),
+                "non-positive weight");
+        assert!(eng.complete_fresh_weighted(1, &[0, 1], &[1.0, f32::NAN])
+                    .is_err(), "non-finite weight");
+        // discards meter framed bits off-round: no new comm round
+        let frame_bits = eng.uplink_frame_bytes(2) * 8;
+        eng.discard_uplink(1, 2, false).unwrap();
+        eng.discard_uplink(1, 3, true).unwrap();
+        assert_eq!(eng.net().comm_rounds(), 0);
+        assert_eq!(eng.net().total_bits_up_wasted(), frame_bits);
+        assert_eq!(eng.net().total_bits_up_stale(), frame_bits);
+        assert_eq!(eng.net().total_bits_up(), 2 * frame_bits);
+        // a client that never compressed has nothing to discard
+        let mut fresh = ShardedL2gdEngine::new(&alg, &e, 4).unwrap();
+        assert!(fresh.discard_uplink(1, 0, false).is_err());
     }
 
     /// Invalid baseline parameters are rejected at spec construction.

@@ -21,14 +21,17 @@
 //! uploads the file as an artifact). The `sim_algorithms` section adds
 //! the engine-vs-engine comparison: fleet-scheduler events/sec for every
 //! registered algorithm (`l2gd`, `fedavg`, `fedopt`) on the same
-//! straggler-heavy scenario.
+//! straggler-heavy scenario, and the `async_scheduler` section measures
+//! the buffered-aggregation runtime ([`crate::sim::async_runner`]) —
+//! overlapping version-stamped rounds and staleness-weighted applies —
+//! under the same per-event allocation bound.
 
 use std::time::Instant;
 
 use super::fig3;
 use crate::algorithms::l2gd::L2gdEngine;
 use crate::algorithms::{reference, FedAlgorithm as _, FedEnv, L2gd};
-use crate::sim::{self, FleetSim};
+use crate::sim::{self, AsyncShardedSim, FleetSim};
 use crate::util::alloc_count;
 use crate::util::json::Value;
 
@@ -119,6 +122,17 @@ pub struct BenchResult {
     /// same straggler-heavy scenario (`l2gd` repeats the measurement
     /// above; `fedavg`/`fedopt` run the fixed-cadence schedules)
     pub sim_alg_events_per_sec: Vec<(String, f64)>,
+    /// asynchronous-runtime scheduler throughput (events/sec) on the
+    /// `async-bursty` scenario: overlapping version-stamped rounds and
+    /// staleness-weighted buffered aggregation in the shared event queue
+    pub async_events_per_sec: f64,
+    /// allocations per processed async-scheduler event; `None` without
+    /// the counting allocator. Asserted `< SIM_ALLOCS_PER_EVENT_BOUND` —
+    /// the async path reuses the sync path's scratch discipline.
+    pub async_allocs_per_event: Option<f64>,
+    /// staleness-weighted updates applied across the async run — proves
+    /// the throughput number actually exercised the buffered-apply path
+    pub async_applied_updates: u64,
     pub final_personal_loss: f64,
 }
 
@@ -188,6 +202,16 @@ impl BenchResult {
                     .iter()
                     .map(|(alg, eps)| (alg.clone(), Value::Num(*eps)))
                     .collect())),
+            ("async_scheduler".into(), Value::obj(vec![
+                ("scenario".into(), Value::Str("async-bursty".into())),
+                ("events_per_sec".into(),
+                 Value::Num(self.async_events_per_sec)),
+                ("allocs_per_event".into(), opt(self.async_allocs_per_event)),
+                ("allocs_per_event_bound".into(),
+                 Value::Num(SIM_ALLOCS_PER_EVENT_BOUND)),
+                ("applied_updates".into(),
+                 Value::Num(self.async_applied_updates as f64)),
+            ])),
             ("speedup_vs_reference".into(), Value::Num(self.speedup())),
             ("final_personal_loss".into(), Value::Num(self.final_personal_loss)),
         ])
@@ -331,6 +355,45 @@ pub fn run(cfg: &BenchCfg) -> anyhow::Result<BenchResult> {
         sim_alg_events.push((alg_name.to_string(), alg_events as f64 / dt));
     }
 
+    // async scheduler: the buffered-aggregation runtime's hot loop —
+    // overlapping rounds, staleness re-checks at apply time, and weighted
+    // aggregations all run out of the sync path's reusable scratch, so the
+    // same per-event allocation bound applies. A small buffer and a modest
+    // in-flight cap keep the apply path busy at bench-sized fleets.
+    let scenario = sim::scenario::from_spec(
+        "async-bursty:quorum=0.6,deadline=1,buffer=2,inflight=4")?;
+    let mut a_cfg = sim::SimCfg::fig3(scenario);
+    a_cfg.n_clients = cfg.n_clients;
+    a_cfg.rows_per_worker = cfg.rows_per_worker;
+    a_cfg.seed = cfg.seed;
+    a_cfg.p = cfg.p;
+    a_cfg.lambda = cfg.lambda;
+    a_cfg.eta = cfg.eta;
+    let a_env = sim::runner::build_env(&a_cfg);
+    let mut asim = AsyncShardedSim::new(&a_cfg, &a_env)?;
+    asim.run_steps(0, cfg.warmup)?;
+    let ev0 = asim.stats().events;
+    let before = alloc_count::allocations();
+    let t0 = Instant::now();
+    asim.run_steps(cfg.warmup, cfg.steps)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let allocs = alloc_count::allocations() - before;
+    let a_events = (asim.stats().events - ev0).max(1);
+    let async_events_per_sec = a_events as f64 / dt;
+    let async_allocs_per_event = counting.then(|| allocs as f64 / a_events as f64);
+    let async_applied_updates = asim.async_stats().applied_updates;
+    anyhow::ensure!(async_applied_updates > 0,
+                    "async scheduler applied no buffered updates");
+    if cfg.assert_zero_alloc {
+        if let Some(per_event) = async_allocs_per_event {
+            anyhow::ensure!(
+                per_event < SIM_ALLOCS_PER_EVENT_BOUND,
+                "async scheduler allocated {per_event:.2}/event over \
+                 {a_events} events (bound {SIM_ALLOCS_PER_EVENT_BOUND})"
+            );
+        }
+    }
+
     Ok(BenchResult {
         cfg: cfg.clone(),
         engine_steps_per_sec: engine_sps,
@@ -341,6 +404,9 @@ pub fn run(cfg: &BenchCfg) -> anyhow::Result<BenchResult> {
         sim_events_per_sec,
         sim_allocs_per_event,
         sim_alg_events_per_sec: sim_alg_events,
+        async_events_per_sec,
+        async_allocs_per_event,
+        async_applied_updates,
         final_personal_loss,
     })
 }
@@ -551,6 +617,13 @@ mod tests {
             assert!(algs.get(name).unwrap().as_f64().unwrap() > 0.0,
                     "sim_algorithms must report `{name}`");
         }
+        // the async-runtime section reports throughput and proves the
+        // buffered-apply path actually ran
+        let a = v.get("async_scheduler").unwrap();
+        assert_eq!(a.get("scenario").unwrap().as_str(), Some("async-bursty"));
+        assert!(a.get("events_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(a.get("applied_updates").unwrap().as_f64().unwrap() > 0.0);
+        assert!(res.async_allocs_per_event.is_none());
         let c = v.get("config").unwrap();
         assert_eq!(c.get("n_clients").unwrap().as_usize(), Some(5));
     }

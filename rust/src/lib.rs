@@ -4,6 +4,13 @@
 //! Burlachenko, Dutta & Richtárik (2022), executing JAX/Pallas-authored
 //! compute (L2/L1) through AOT-compiled XLA artifacts via PJRT.
 //! See DESIGN.md for the full system inventory and experiment index.
+//!
+//! The [`sim`] layer runs every registered algorithm over discrete-event
+//! device fleets — synchronously round-by-round or asynchronously with
+//! overlapping rounds and staleness-weighted buffered aggregation
+//! ([`sim::async_runner`]) — and [`transport`] meters every message as a
+//! byte-accurate wire frame, replayable over real TCP
+//! ([`transport::loopback`]).
 
 pub mod algorithms;
 pub mod compress;

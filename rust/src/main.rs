@@ -93,7 +93,9 @@ commands:
                scenario presets (partial participation, churn, stragglers,
                byte-accurate wire frames, million-device megafleet presets
                on copy-on-write sharded state) for any registered fleet
-               algorithm (alg=l2gd|fedavg|fedopt); `pfl sim --help` documents
+               algorithm (alg=l2gd|fedavg|fedopt), synchronously or with
+               overlapping rounds and staleness-weighted buffered
+               aggregation (async=buffered); `pfl sim --help` documents
                the scenario grammar  [--scenarios a;b] [--smoke] [--out dir]
   models       list AOT models (needs `make artifacts`)
 ";
@@ -365,6 +367,16 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         None => println!("sim allocations:           not measured (counting \
                           allocator absent)"),
     }
+    println!("async scheduler:           {:>10.0} events/s  (async-bursty, \
+              {} applied)",
+             res.async_events_per_sec, res.async_applied_updates);
+    match res.async_allocs_per_event {
+        Some(a) => println!("async allocations:         {a:>10.2} per event \
+                             (asserted < {})",
+                            pfl::experiments::bench_round::SIM_ALLOCS_PER_EVENT_BOUND),
+        None => println!("async allocations:         not measured (counting \
+                          allocator absent)"),
+    }
     println!("final personal loss:       {:>10.4}", res.final_personal_loss);
     println!("wrote {out}");
 
@@ -429,11 +441,27 @@ alike.
 scenario spec grammar (like the codec registry):
   scenario := name [\":\" key \"=\" value (\",\" key \"=\" value)*]
   keys     := clients | sample | quorum | deadline | alg
+            | async | buffer | inflight | stale | max_stale
   sample   = fraction of the fleet drawn per comm event, (0,1]
              (drawn devices that churn has offline drop out of the cohort)
   quorum   = fraction of the sampled cohort to wait for, (0,1]
   deadline = straggler deadline in seconds (inf = wait for quorum)
   alg      = fleet algorithm (unknown names list what is registered)
+  async    = dispatch discipline: buffered | sync. `buffered` overlaps up
+             to `inflight` version-stamped rounds in the event queue and
+             meters the staleness distribution plus uplink goodput
+  buffer   = updates to buffer before a staleness-weighted server commit
+             (`cohort` = commit whole rounds; requires async=buffered)
+  inflight = max overlapping rounds (requires async=buffered);
+             inflight=1 with buffer=cohort reproduces the synchronous
+             runner bit for bit
+  stale    = staleness weight: const | inv | poly | poly:ALPHA
+             (const: w=1; inv: w=1/(1+s); poly: w=(1+s)^-ALPHA)
+  max_stale= discard updates staler than this many server commits
+             (their bytes still meter as stale traffic)
+
+async runs additionally emit a sim_stale_<scenario>.csv staleness
+histogram and staleness/goodput keys in sim_summary.json.
 
 registered algorithms:
 ";
@@ -453,11 +481,15 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
         println!("  pfl sim --scenarios \"uniform;diurnal-churn:clients=16\" --steps 800");
         println!("  pfl sim --scenario \"megafleet-fedavg\" --smoke");
         println!("  pfl sim --scenario \"uniform:alg=fedopt\" --local-steps 5");
+        println!("  pfl sim --scenario \"async-bursty:inflight=8,stale=poly:1\"");
+        println!("  pfl sim --scenario \"megafleet-async\" --smoke");
+        println!("  pfl sim --scenario \
+                  \"diurnal-churn:async=buffered,buffer=4,inflight=6,stale=inv\"");
         return Ok(());
     }
     let smoke = args.flag("smoke");
     let default_scenarios = if smoke {
-        "uniform;straggler-heavy".to_string()
+        "uniform;straggler-heavy;async-bursty".to_string()
     } else {
         sim::scenario::preset_names().join(";")
     };
@@ -490,7 +522,11 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
         eprintln!("sim {} [{}]: n={} steps={} wire {}|{}",
                   cfg.scenario.name, cfg.scenario.alg, cfg.effective_clients(),
                   cfg.steps, cfg.client_comp, cfg.master_comp);
-        let res = sim::runner::run(&cfg)?;
+        let res = if cfg.scenario.async_sched.is_async() {
+            sim::async_runner::run(&cfg)?
+        } else {
+            sim::runner::run(&cfg)?
+        };
         // filename from the full spec (two variants of one preset must not
         // clobber each other), with shell/FS-hostile characters mapped away
         let slug: String = res.scenario.chars()
@@ -518,6 +554,20 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
                      "", res.fleet_size, res.touched_clients,
                      res.resident_rows,
                      res.resident_bytes as f64 / res.fleet_size.max(1) as f64);
+        }
+        if let Some(ast) = &res.async_stats {
+            println!("{:<18} async: {} dispatched, {} applied, {} stale  \
+                      staleness mean {:.2} p95 {}  goodput {:.3}",
+                     "", ast.dispatched_rounds, ast.applied_updates,
+                     ast.stale_discarded, ast.mean_staleness(),
+                     ast.p95_staleness(), res.goodput);
+            let mut csv = String::from("staleness,count\n");
+            for (s, &count) in ast.histogram().iter().enumerate() {
+                csv.push_str(&format!("{s},{count}\n"));
+            }
+            let stale_path = format!("{out}/sim_stale_{slug}.csv");
+            std::fs::write(&stale_path, csv)?;
+            println!("{:<18} staleness histogram → {stale_path}", "");
         }
         summaries.push(res.to_json());
     }

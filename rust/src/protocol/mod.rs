@@ -22,8 +22,121 @@
 //!   fresh round resets clients onto the broadcast, so there is no cached
 //!   anchor left to reuse — Figs 7–8's "FedAvg = L2GD at ηλ/np = 1 with a
 //!   deterministic number of local steps").
+//!
+//! A second, orthogonal axis lives here too: the **dispatch discipline**
+//! ([`AsyncSchedule`]). The [`CommSchedule`] decides *when* an algorithm
+//! communicates; the dispatch discipline decides *how many* communicating
+//! rounds may overlap in simulated time and how late (stale) arrivals are
+//! weighted ([`StalenessWeight`]). [`AsyncSchedule::RoundSync`] is the
+//! classical one-round-at-a-time regime every synchronous runner uses;
+//! [`AsyncSchedule::Buffered`] is the FedBuff-style buffered-aggregation
+//! regime driven by [`crate::sim::async_runner`]. Either discipline
+//! composes with any schedule — L2GD's coin, FedAvg's cadence, and
+//! FedOpt's server Adam all run under both.
 
 use crate::util::Rng;
+
+/// How an arriving update of staleness `s` (server versions advanced
+/// between dispatch and apply) is weighted inside a buffered aggregate.
+/// Weights are *relative*: the async runner normalizes them into a convex
+/// combination, so the anchor stays a weighted average of client models
+/// (the L2GD aggregation semantics survive unchanged; constant weights
+/// reduce exactly to the synchronous uniform mean).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StalenessWeight {
+    /// w(s) = 1 — staleness-blind (the synchronous-equivalent choice).
+    Constant,
+    /// w(s) = 1/(1+s) — the FedBuff default (Nguyen et al. 2022).
+    Inverse,
+    /// w(s) = (1+s)^(−α) — polynomial decay; α = 1 recovers `Inverse`.
+    Polynomial { alpha: f64 },
+}
+
+impl StalenessWeight {
+    /// The (unnormalized) weight of an update that is `s` versions stale.
+    pub fn weight(&self, s: u64) -> f64 {
+        match self {
+            StalenessWeight::Constant => 1.0,
+            StalenessWeight::Inverse => 1.0 / (1.0 + s as f64),
+            StalenessWeight::Polynomial { alpha } => {
+                (1.0 + s as f64).powf(-alpha)
+            }
+        }
+    }
+
+    /// Parse a weight spec: `const` | `inv` | `poly` (α = 0.5) |
+    /// `poly:A`. Unknown names list what exists (registry-style UX).
+    pub fn from_spec(spec: &str) -> anyhow::Result<StalenessWeight> {
+        let spec = spec.trim();
+        let (name, arg) = match spec.split_once(':') {
+            Some((n, a)) => (n.trim(), Some(a.trim())),
+            None => (spec, None),
+        };
+        match (name, arg) {
+            ("const", None) => Ok(StalenessWeight::Constant),
+            ("inv", None) => Ok(StalenessWeight::Inverse),
+            ("poly", arg) => {
+                let alpha = match arg {
+                    None => 0.5,
+                    Some(a) => a.parse::<f64>().map_err(|e| {
+                        anyhow::anyhow!("stale=poly:{a}: {e}")
+                    })?,
+                };
+                anyhow::ensure!(alpha.is_finite() && alpha > 0.0,
+                                "poly staleness exponent {alpha} must be \
+                                 positive and finite");
+                Ok(StalenessWeight::Polynomial { alpha })
+            }
+            _ => anyhow::bail!(
+                "unknown staleness weight `{spec}` (known: const, inv, \
+                 poly, poly:ALPHA)"),
+        }
+    }
+
+    /// Canonical spec string (`from_spec(w.spec())` round-trips).
+    pub fn spec(&self) -> String {
+        match self {
+            StalenessWeight::Constant => "const".into(),
+            StalenessWeight::Inverse => "inv".into(),
+            StalenessWeight::Polynomial { alpha } => format!("poly:{alpha}"),
+        }
+    }
+}
+
+/// The dispatch discipline: how many communicating rounds overlap and how
+/// a filled buffer aggregates. Orthogonal to [`CommSchedule`] — see the
+/// module docs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AsyncSchedule {
+    /// One round at a time: a communication event fully completes (or
+    /// aborts) before the next cohort is drawn. The synchronous
+    /// `FleetSim` regime.
+    RoundSync,
+    /// FedBuff-style buffered aggregation: up to `max_in_flight` cohorts
+    /// overlap, each dispatched model stamped with the server version;
+    /// arrivals accumulate into a buffer that aggregates
+    /// staleness-weighted once `buffer` updates fill (`buffer` = 0 means
+    /// "the whole cohort" — close each round on its own quorum, the
+    /// synchronous-equivalent buffering). Updates staler than `max_stale`
+    /// versions are discarded (metered as wasted stale traffic).
+    Buffered {
+        /// updates per aggregate; 0 = per-cohort (quorum) buffering
+        buffer: usize,
+        /// overlapping dispatched cohorts allowed, ≥ 1
+        max_in_flight: usize,
+        /// relative weight of an `s`-stale update in the aggregate
+        stale: StalenessWeight,
+        /// discard updates staler than this many server versions
+        max_stale: u64,
+    },
+}
+
+impl AsyncSchedule {
+    /// True for any discipline other than the synchronous one.
+    pub fn is_async(&self) -> bool {
+        !matches!(self, AsyncSchedule::RoundSync)
+    }
+}
 
 /// What iteration k must do.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -300,5 +413,67 @@ mod tests {
             assert!((agg - p).abs() < tol.max(3e-3),
                     "p={p}: aggregate rate {agg:.5}");
         }
+    }
+
+    #[test]
+    fn staleness_weights_evaluate_and_decay() {
+        assert_eq!(StalenessWeight::Constant.weight(0), 1.0);
+        assert_eq!(StalenessWeight::Constant.weight(100), 1.0);
+        assert_eq!(StalenessWeight::Inverse.weight(0), 1.0);
+        assert_eq!(StalenessWeight::Inverse.weight(3), 0.25);
+        let poly = StalenessWeight::Polynomial { alpha: 2.0 };
+        assert_eq!(poly.weight(0), 1.0);
+        assert!((poly.weight(1) - 0.25).abs() < 1e-12);
+        // poly at α = 1 recovers inverse
+        let p1 = StalenessWeight::Polynomial { alpha: 1.0 };
+        for s in [0u64, 1, 5, 40] {
+            assert!((p1.weight(s) - StalenessWeight::Inverse.weight(s)).abs()
+                        < 1e-12, "s={s}");
+        }
+        // every weight is positive and non-increasing in s
+        for w in [StalenessWeight::Constant, StalenessWeight::Inverse, poly] {
+            let mut prev = f64::INFINITY;
+            for s in 0..50u64 {
+                let v = w.weight(s);
+                assert!(v > 0.0 && v <= prev, "{w:?} at s={s}");
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn staleness_weight_specs_round_trip() {
+        for spec in ["const", "inv", "poly", "poly:1.5"] {
+            let w = StalenessWeight::from_spec(spec).unwrap();
+            assert_eq!(StalenessWeight::from_spec(&w.spec()).unwrap(), w,
+                       "{spec}");
+        }
+        assert_eq!(StalenessWeight::from_spec("const").unwrap(),
+                   StalenessWeight::Constant);
+        assert_eq!(StalenessWeight::from_spec("inv").unwrap(),
+                   StalenessWeight::Inverse);
+        assert_eq!(StalenessWeight::from_spec("poly:2").unwrap(),
+                   StalenessWeight::Polynomial { alpha: 2.0 });
+        // unknown names list what exists
+        let err = format!("{:#}", StalenessWeight::from_spec("linear").unwrap_err());
+        assert!(err.contains("unknown staleness weight"), "{err}");
+        for known in ["const", "inv", "poly"] {
+            assert!(err.contains(known), "{err}");
+        }
+        assert!(StalenessWeight::from_spec("poly:0").is_err());
+        assert!(StalenessWeight::from_spec("poly:nope").is_err());
+        assert!(StalenessWeight::from_spec("const:1").is_err());
+    }
+
+    #[test]
+    fn async_schedule_classifies() {
+        assert!(!AsyncSchedule::RoundSync.is_async());
+        let b = AsyncSchedule::Buffered {
+            buffer: 8,
+            max_in_flight: 4,
+            stale: StalenessWeight::Inverse,
+            max_stale: 16,
+        };
+        assert!(b.is_async());
     }
 }

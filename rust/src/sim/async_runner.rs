@@ -1,0 +1,867 @@
+//! The asynchronous fleet runtime: overlapping communication rounds with
+//! staleness-weighted buffered aggregation (FedBuff-style), over the same
+//! generic cohort engine, event queue, fleet model, and byte-accurate
+//! framing the synchronous [`super::runner::FleetSim`] uses.
+//!
+//! ### Why asynchrony
+//! The paper's protocol is *probabilistic* — communication is a Bernoulli
+//! coin, not a fixed schedule — yet the synchronous runner still serializes
+//! rounds: one fresh aggregation fully closes before the next cohort is
+//! drawn. Production FL servers instead keep several cohorts in flight and
+//! aggregate whatever arrives. This module supplies that regime for every
+//! registered fleet algorithm: L2GD's coin, FedAvg's cadence, and FedOpt's
+//! server Adam all draw through the same [`AsyncSchedule`] axis.
+//!
+//! ### Versioned dispatch and the two buffer modes
+//! Every dispatched round is stamped with the server model version at
+//! dispatch time. An applied update's **staleness** is
+//! `server_version_at_apply − version_at_dispatch` — the number of server
+//! commits that landed while the update was in flight.
+//!
+//! * **Cohort mode** (`buffer=cohort`): each round commits as a unit when
+//!   its quorum is met or its deadline passes — exactly the synchronous
+//!   close rule — but up to `max_in_flight` rounds overlap. With
+//!   `inflight=1` this *is* the synchronous runner: the equivalence is
+//!   structural (the same [`Engine::complete_fresh`] path runs with the
+//!   same arguments at the same simulated times), pinned bit-for-bit by
+//!   the integration suite.
+//! * **Buffered mode** (`buffer=K`): arrivals from *any* in-flight round
+//!   accumulate in a cross-round buffer; when K updates are waiting the
+//!   server applies them as one staleness-weighted convex combination
+//!   ([`Engine::complete_fresh_weighted`], weights from the pluggable
+//!   [`StalenessWeight`]) and bumps its version. Updates staler than
+//!   `max_stale` at arrival *or* at apply time are discarded (their bytes
+//!   still metered). Rounds still close on quorum/deadline — closing only
+//!   settles straggler accounting; useful arrivals were already buffered.
+//!
+//! ### Accounting invariants (tested)
+//! Every sampled device transmits exactly one uplink frame, and every
+//! frame lands in exactly one bucket: **applied** (entered a commit),
+//! **stale-discarded**, or **straggler-wasted** — so
+//! `applied + stale_discarded + dropped_stragglers` frames account for
+//! every uplink bit ([`crate::transport::Network::uplink_goodput`] is the
+//! applied fraction). Updates still in flight or parked in a partially
+//! filled buffer at run end have not been metered and appear in no bucket.
+//! One caveat inherited from the synchronous straggler path: a discarded
+//! update advanced its client's error-feedback residual without being
+//! delivered — the residual simply carries the miss forward.
+//!
+//! ### Time and determinism
+//! The clock rules are the synchronous runner's, generalized to overlap:
+//! local/cached steps advance by the slowest cohort device, commits by the
+//! slowest applied downlink, and the clock never runs backwards when an
+//! older round closes late. All randomness forks from the run seed through
+//! the identical stream layout, so async runs replay bit-exactly too.
+
+use std::cmp::Ordering;
+use std::collections::HashSet;
+
+use crate::algorithms::{Engine, FedEnv};
+use crate::metrics::{Record, Series};
+use crate::model::{ClientStore, DenseStore, ShardedStore};
+use crate::protocol::{AsyncSchedule, StalenessWeight, StepKind};
+use crate::util::Rng;
+
+use super::fleet::{Churn, DeviceProfile, FleetSpec};
+use super::queue::EventQueue;
+use super::runner::{build_env, resident_bound_bytes, sample_device_ids, SimCfg,
+                    SimResult, SimStats};
+
+/// Staleness histogram buckets: one per staleness value `0..=31`, with the
+/// last bucket absorbing everything `≥ 32`.
+pub const STALE_HIST_BUCKETS: usize = 33;
+
+/// Counters specific to the asynchronous runtime, alongside the shared
+/// [`SimStats`]. The `(version_at_apply, version_at_dispatch)` log backs
+/// the staleness property tests and the summary percentiles.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AsyncStats {
+    /// fresh rounds dispatched (≥ committed: some abort or stay in flight)
+    pub dispatched_rounds: u64,
+    /// client updates that entered a server commit
+    pub applied_updates: u64,
+    /// client updates discarded for exceeding `max_stale`
+    pub stale_discarded: u64,
+    hist: Vec<u64>,
+    log: Vec<(u64, u64)>,
+}
+
+impl Default for AsyncStats {
+    fn default() -> AsyncStats {
+        AsyncStats {
+            dispatched_rounds: 0,
+            applied_updates: 0,
+            stale_discarded: 0,
+            hist: vec![0; STALE_HIST_BUCKETS],
+            log: Vec::new(),
+        }
+    }
+}
+
+impl AsyncStats {
+    fn record_applied(&mut self, v_apply: u64, v_dispatch: u64) {
+        debug_assert!(v_apply >= v_dispatch,
+                      "apply version {v_apply} precedes dispatch {v_dispatch}");
+        let s = v_apply - v_dispatch;
+        self.applied_updates += 1;
+        let bucket = (s as usize).min(STALE_HIST_BUCKETS - 1);
+        self.hist[bucket] += 1;
+        self.log.push((v_apply, v_dispatch));
+    }
+
+    /// Per-staleness applied-update counts (last bucket saturating).
+    pub fn histogram(&self) -> &[u64] {
+        &self.hist
+    }
+
+    /// Sum over the histogram — equals `applied_updates` by construction
+    /// (the property test pins it).
+    pub fn hist_total(&self) -> u64 {
+        self.hist.iter().sum()
+    }
+
+    /// One `(server_version_at_apply, version_at_dispatch)` pair per
+    /// applied update, in apply order.
+    pub fn staleness_log(&self) -> &[(u64, u64)] {
+        &self.log
+    }
+
+    /// Mean staleness over applied updates (0.0 when none applied).
+    pub fn mean_staleness(&self) -> f64 {
+        if self.log.is_empty() {
+            return 0.0;
+        }
+        let sum: u64 = self.log.iter().map(|&(a, d)| a - d).sum();
+        sum as f64 / self.log.len() as f64
+    }
+
+    /// Exact 95th-percentile staleness (0 when none applied) — computed
+    /// from the log, so it is not subject to histogram saturation.
+    pub fn p95_staleness(&self) -> u64 {
+        if self.log.is_empty() {
+            return 0;
+        }
+        let mut s: Vec<u64> = self.log.iter().map(|&(a, d)| a - d).collect();
+        s.sort_unstable();
+        let rank = ((0.95 * s.len() as f64).ceil() as usize).clamp(1, s.len());
+        s[rank - 1]
+    }
+}
+
+/// An update waiting in the cross-round buffer: which client, the server
+/// version its round was dispatched at, and that round's step index (for
+/// frame headers if it is later discarded). Carrying copies keeps entries
+/// valid after their round slot closes and is reused.
+#[derive(Clone, Copy, Debug)]
+struct BufEntry {
+    client: u32,
+    version: u64,
+    k: u64,
+}
+
+/// One in-flight communication round. Slots are pooled and reused; the
+/// generation counter is bumped when a slot closes, so arrival events of a
+/// dead round (still sitting in the shared queue) no longer match and pop
+/// as silent no-ops — the overlap-safe equivalent of the synchronous
+/// runner's per-round `queue.clear()`.
+#[derive(Debug, Default)]
+struct RoundSlot {
+    gen: u32,
+    open: bool,
+    /// server version stamped at dispatch
+    version: u64,
+    /// protocol step that dispatched the round (frame-header round index)
+    k: u64,
+    quorum: usize,
+    deadline: f64,
+    /// arrival events still in the queue for this generation
+    pending: usize,
+    /// arrivals so far (stale-discarded ones included: quorum measures
+    /// responsiveness, not usefulness)
+    responded: usize,
+    sampled: Vec<u32>,
+    /// cohort-mode arrivals, committed together at close
+    arrived: Vec<u32>,
+    /// every arrival id — `sampled ∖ responded_ids` is the wasted traffic
+    /// metered when a buffered-mode round closes
+    responded_ids: Vec<u32>,
+}
+
+/// The asynchronous fleet simulation: the synchronous runner's fleet,
+/// churn, sampling, and clock semantics, with up to `max_in_flight`
+/// version-stamped rounds overlapping in one shared event queue. Generic
+/// over the client store like the engine itself ([`AsyncDenseSim`] /
+/// [`AsyncShardedSim`]).
+pub struct AsyncFleetSim<'e, S: ClientStore> {
+    eng: Engine<'e, S>,
+    fleet: FleetSpec,
+    fleet_seed: u64,
+    churn: Churn,
+    churn_seed: u64,
+    sample_frac: f64,
+    quorum_frac: f64,
+    deadline_s: f64,
+    sampler: Rng,
+    clock: f64,
+    mean_step_s: f64,
+    stats: SimStats,
+    anchor_holders: Option<Vec<u32>>,
+    // dispatch discipline
+    /// cross-round buffer size; 0 = cohort mode (commit whole rounds)
+    buffer_target: usize,
+    max_in_flight: usize,
+    stale_weight: StalenessWeight,
+    max_stale: u64,
+    server_version: u64,
+    in_flight: usize,
+    slots: Vec<RoundSlot>,
+    free_slots: Vec<u32>,
+    /// clients with an undelivered compressed update in flight — excluded
+    /// from new cohorts so their wire buffer survives until applied,
+    /// discarded, or written off at round close
+    busy: HashSet<u32>,
+    buffer: Vec<BufEntry>,
+    astats: AsyncStats,
+    // reusable per-step scratch (the hot loop is allocation-bounded)
+    cohort: Vec<u32>,
+    agg_cohort: Vec<u32>,
+    apply_ids: Vec<u32>,
+    apply_weights: Vec<f32>,
+    apply_versions: Vec<u64>,
+    seen: HashSet<u32>,
+    /// (slot index, slot generation, client id) arrival events
+    queue: EventQueue<(u32, u32, u32)>,
+}
+
+/// Dense-store asynchronous runtime (lockstep-comparable fleet sizes).
+pub type AsyncDenseSim<'e> = AsyncFleetSim<'e, DenseStore>;
+/// Copy-on-write sharded asynchronous runtime (mega-fleet capable).
+pub type AsyncShardedSim<'e> = AsyncFleetSim<'e, ShardedStore>;
+
+impl<'e, S: ClientStore> AsyncFleetSim<'e, S> {
+    pub fn new(cfg: &SimCfg, env: &'e FedEnv)
+               -> anyhow::Result<AsyncFleetSim<'e, S>> {
+        let data_n = env.n_clients();
+        anyhow::ensure!(data_n == cfg.data_clients(),
+                        "environment has {data_n} data shards, config wants {}",
+                        cfg.data_clients());
+        let fleet_n = cfg.effective_clients();
+        let spec = cfg.alg_spec(fleet_n)?;
+        let mut eng = Engine::<S>::from_spec(&spec, env, fleet_n)?;
+        eng.enable_wire_framing();
+        let fleet = cfg.scenario.fleet.clone();
+        let mean_step_s = fleet.mean_step_time();
+        // A RoundSync scenario runs as its own synchronous-equivalent
+        // configuration: one round in flight, committed whole, unweighted.
+        let (buffer_target, max_in_flight, stale_weight, max_stale) =
+            match cfg.scenario.async_sched {
+                AsyncSchedule::Buffered { buffer, max_in_flight, stale,
+                                          max_stale } =>
+                    (buffer, max_in_flight.max(1), stale, max_stale),
+                AsyncSchedule::RoundSync =>
+                    (0, 1, StalenessWeight::Constant, u64::MAX),
+            };
+        Ok(AsyncFleetSim {
+            eng,
+            fleet,
+            fleet_seed: cfg.seed ^ 0xF1EE7,
+            churn: cfg.scenario.churn.clone(),
+            churn_seed: cfg.seed ^ 0xC4A9,
+            sample_frac: cfg.scenario.sample_frac,
+            quorum_frac: cfg.scenario.quorum_frac,
+            deadline_s: cfg.scenario.deadline_s,
+            sampler: Rng::new(cfg.seed ^ 0x5A3E),
+            clock: 0.0,
+            mean_step_s,
+            stats: SimStats::default(),
+            anchor_holders: None,
+            buffer_target,
+            max_in_flight,
+            stale_weight,
+            max_stale,
+            server_version: 0,
+            in_flight: 0,
+            slots: Vec::new(),
+            free_slots: Vec::new(),
+            busy: HashSet::new(),
+            buffer: Vec::new(),
+            astats: AsyncStats::default(),
+            cohort: Vec::new(),
+            agg_cohort: Vec::new(),
+            apply_ids: Vec::new(),
+            apply_weights: Vec::new(),
+            apply_versions: Vec::new(),
+            seen: HashSet::new(),
+            queue: EventQueue::new(),
+        })
+    }
+
+    /// Device `i`'s profile — a pure O(1) function of the fleet seed.
+    fn profile(&self, i: usize) -> DeviceProfile {
+        self.fleet.device(self.fleet_seed, i as u64)
+    }
+
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    pub fn stats(&self) -> &SimStats {
+        &self.stats
+    }
+
+    pub fn async_stats(&self) -> &AsyncStats {
+        &self.astats
+    }
+
+    pub fn engine(&self) -> &Engine<'e, S> {
+        &self.eng
+    }
+
+    /// Server commits so far (each buffered apply or cohort commit).
+    pub fn server_version(&self) -> u64 {
+        self.server_version
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Advance one protocol iteration at the current simulated time.
+    pub fn step(&mut self, k: u64) -> anyhow::Result<()> {
+        // settle arrivals that landed while the clock advanced, so buffer
+        // applies happen in simulated-time order
+        self.catch_up(k)?;
+        self.stats.events += 1;
+        let kind = self.eng.draw();
+        self.select_cohort();
+        if self.cohort.is_empty() {
+            if matches!(kind, StepKind::AggregateFresh) {
+                self.stats.skipped_rounds += 1;
+            }
+            self.idle_tick();
+            return Ok(());
+        }
+        match kind {
+            StepKind::Local => {
+                self.eng.step_local(&self.cohort)?;
+                self.clock += self.max_cohort_step_time();
+            }
+            StepKind::AggregateCached => {
+                // only devices holding the current anchor can aggregate
+                // toward it; the rest idle through the iteration
+                self.intersect_anchor_holders();
+                if !self.agg_cohort.is_empty() {
+                    self.eng.step_aggregate_cached(&self.agg_cohort);
+                }
+                self.clock += self.max_cohort_step_time();
+            }
+            StepKind::AggregateFresh => {
+                self.dispatch(k)?;
+                // at the in-flight cap, drain events until a slot frees —
+                // with `max_in_flight = 1` this completes the round within
+                // its own step, i.e. the synchronous runner
+                while self.in_flight >= self.max_in_flight {
+                    self.process_next_event(k)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn run_steps(&mut self, from: u64, count: u64) -> anyhow::Result<()> {
+        for k in from + 1..=from + count {
+            self.step(k)?;
+        }
+        Ok(())
+    }
+
+    /// Evaluate into a `Record`, with the fleet clock as the sim-time
+    /// column (replacing the engine's transport-model projection).
+    pub fn evaluate(&self, step: u64) -> anyhow::Result<Record> {
+        let mut rec = self.eng.evaluate(step)?;
+        rec.sim_time_s = self.clock;
+        Ok(rec)
+    }
+
+    /// Identical cohort selection to the synchronous runner (same sampler
+    /// and churn streams), then minus clients with an update in flight.
+    fn select_cohort(&mut self) {
+        let n = self.eng.n_fleet();
+        let (churn, seed, clock) = (&self.churn, self.churn_seed, self.clock);
+        self.cohort.clear();
+        let m = ((self.sample_frac * n as f64).ceil() as usize).clamp(1, n);
+        if m >= n {
+            self.cohort.extend(0..n as u32);
+        } else {
+            sample_device_ids(&mut self.sampler, n, m,
+                              &mut self.seen, &mut self.cohort);
+            self.cohort.sort_unstable();
+        }
+        self.cohort
+            .retain(|&i| churn.available(seed, i as usize, clock));
+        let busy = &self.busy;
+        self.cohort.retain(|i| !busy.contains(i));
+    }
+
+    /// Slowest per-iteration compute time in the current cohort.
+    fn max_cohort_step_time(&self) -> f64 {
+        let mut t = 0.0f64;
+        for &i in &self.cohort {
+            t = t.max(self.profile(i as usize).step_time_s);
+        }
+        t
+    }
+
+    /// `agg_cohort ← cohort ∩ anchor_holders` (both sorted).
+    fn intersect_anchor_holders(&mut self) {
+        self.agg_cohort.clear();
+        let cohort = &self.cohort;
+        match &self.anchor_holders {
+            None => self.agg_cohort.extend_from_slice(cohort),
+            Some(h) => {
+                let (mut a, mut b) = (0usize, 0usize);
+                while a < cohort.len() && b < h.len() {
+                    match cohort[a].cmp(&h[b]) {
+                        Ordering::Less => a += 1,
+                        Ordering::Greater => b += 1,
+                        Ordering::Equal => {
+                            self.agg_cohort.push(cohort[a]);
+                            a += 1;
+                            b += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Nobody is online (or everyone is busy): the iteration is a
+    /// fleet-wide no-op, but the clock still moves.
+    fn idle_tick(&mut self) {
+        self.stats.idle_steps += 1;
+        self.clock += self.mean_step_s;
+    }
+
+    /// Process queued arrivals up to the current clock.
+    fn catch_up(&mut self, k: u64) -> anyhow::Result<()> {
+        while let Some(t) = self.queue.peek_time() {
+            if t > self.clock {
+                break;
+            }
+            self.process_next_event(k)?;
+        }
+        Ok(())
+    }
+
+    /// Open a fresh round over the already-selected cohort: compress the
+    /// uplinks now (the update snapshot that will travel), stamp the
+    /// server version, and schedule every member's arrival.
+    fn dispatch(&mut self, k: u64) -> anyhow::Result<()> {
+        self.eng.compress_uplinks(&self.cohort)?;
+        let sidx = self.alloc_slot();
+        let m = self.cohort.len();
+        let quorum = ((self.quorum_frac * m as f64).ceil() as usize).clamp(1, m);
+        {
+            let slot = &mut self.slots[sidx];
+            slot.open = true;
+            slot.version = self.server_version;
+            slot.k = k;
+            slot.quorum = quorum;
+            slot.deadline = self.clock + self.deadline_s;
+            slot.pending = m;
+            slot.responded = 0;
+            slot.sampled.extend_from_slice(&self.cohort);
+        }
+        let gen = self.slots[sidx].gen;
+        // schedule arrivals: compute + latency + serialized frame transfer
+        for &i in &self.cohort {
+            let dev = self.profile(i as usize);
+            let bits = self.eng.uplink_frame_bytes(i as usize) as f64 * 8.0;
+            let t = self.clock + dev.step_time_s + dev.latency_s + bits / dev.up_bps;
+            self.queue.push(t, (sidx as u32, gen, i));
+            self.stats.events += 1;
+            self.busy.insert(i);
+        }
+        self.in_flight += 1;
+        self.astats.dispatched_rounds += 1;
+        Ok(())
+    }
+
+    fn alloc_slot(&mut self) -> usize {
+        if let Some(idx) = self.free_slots.pop() {
+            idx as usize
+        } else {
+            self.slots.push(RoundSlot::default());
+            self.slots.len() - 1
+        }
+    }
+
+    /// Pop and settle the next arrival event. Events of a closed round
+    /// generation vanish silently — the synchronous runner never pops them
+    /// at all (it clears the queue), and neither path counts them.
+    fn process_next_event(&mut self, k_now: u64) -> anyhow::Result<()> {
+        let Some((t, (sidx, gen, i))) = self.queue.pop() else {
+            anyhow::bail!("async runner: {} rounds in flight but the event \
+                           queue is empty", self.in_flight);
+        };
+        let sidx = sidx as usize;
+        if self.slots[sidx].gen != gen {
+            return Ok(());
+        }
+        debug_assert!(self.slots[sidx].open,
+                      "arrival for a live generation on a closed slot");
+        self.stats.events += 1;
+        self.slots[sidx].pending -= 1;
+        if t > self.slots[sidx].deadline {
+            // this device and everything still queued missed the round
+            let deadline = self.slots[sidx].deadline;
+            self.stats.dropped_stragglers += 1 + self.slots[sidx].pending as u64;
+            return self.close_round(sidx, deadline);
+        }
+        self.slots[sidx].responded += 1;
+        self.slots[sidx].responded_ids.push(i);
+        if self.buffer_target == 0 {
+            self.slots[sidx].arrived.push(i);
+        } else {
+            let version = self.slots[sidx].version;
+            let kd = self.slots[sidx].k;
+            if self.server_version - version > self.max_stale {
+                // too many commits landed while this update was in flight
+                self.eng.discard_uplink(kd, i, true)?;
+                self.astats.stale_discarded += 1;
+                self.busy.remove(&i);
+            } else {
+                self.buffer.push(BufEntry { client: i, version, k: kd });
+                if self.buffer.len() >= self.buffer_target {
+                    self.apply_buffer(k_now, t)?;
+                }
+            }
+        }
+        if self.slots[sidx].responded >= self.slots[sidx].quorum {
+            self.stats.dropped_stragglers += self.slots[sidx].pending as u64;
+            return self.close_round(sidx, t);
+        }
+        Ok(())
+    }
+
+    /// Close a round at `round_end`. Cohort mode commits or aborts exactly
+    /// like the synchronous runner; buffered mode only settles accounts —
+    /// arrivals already went to the buffer, so closing meters the members
+    /// that never made it and frees the slot.
+    fn close_round(&mut self, sidx: usize, round_end: f64) -> anyhow::Result<()> {
+        let mut sampled = std::mem::take(&mut self.slots[sidx].sampled);
+        let mut arrived = std::mem::take(&mut self.slots[sidx].arrived);
+        let mut responded_ids = std::mem::take(&mut self.slots[sidx].responded_ids);
+        let kd = self.slots[sidx].k;
+        let version = self.slots[sidx].version;
+        if self.buffer_target == 0 {
+            if arrived.is_empty() {
+                // everyone blew the deadline: the anchor does not move,
+                // but the cohort's frames were transmitted — meter them
+                // as discarded traffic
+                self.eng.abort_fresh(kd, &sampled)?;
+                self.stats.skipped_rounds += 1;
+                self.clock = round_end.max(self.clock + self.mean_step_s);
+            } else {
+                arrived.sort_unstable();
+                self.eng.complete_fresh(kd, &arrived, &sampled)?;
+                for _ in &arrived {
+                    self.astats.record_applied(self.server_version, version);
+                }
+                self.server_version += 1;
+                // the broadcast reached only the arrivals: they alone hold
+                // the new anchor for subsequent cached-aggregation steps
+                match &mut self.anchor_holders {
+                    Some(h) => {
+                        h.clear();
+                        h.extend_from_slice(&arrived);
+                    }
+                    None => self.anchor_holders = Some(arrived.clone()),
+                }
+                self.stats.comm_events += 1;
+                self.stats.total_participants += arrived.len() as u64;
+                let dbits = self.eng.downlink_frame_bytes() as f64 * 8.0;
+                let mut down_t = 0.0f64;
+                for &i in &arrived {
+                    let dev = self.profile(i as usize);
+                    down_t = down_t.max(dev.latency_s + dbits / dev.down_bps);
+                }
+                self.clock = self.clock.max(round_end + down_t);
+            }
+            for &i in &sampled {
+                self.busy.remove(&i);
+            }
+        } else {
+            // buffered mode: responders are in the buffer (or already
+            // applied / stale-discarded); whoever never arrived
+            // transmitted for nothing
+            responded_ids.sort_unstable();
+            for &i in &sampled {
+                if responded_ids.binary_search(&i).is_err() {
+                    self.eng.discard_uplink(kd, i, false)?;
+                    self.busy.remove(&i);
+                }
+            }
+            if responded_ids.is_empty() {
+                self.stats.skipped_rounds += 1;
+            }
+            self.clock = self.clock.max(round_end);
+        }
+        // free the slot: the generation bump invalidates any arrival
+        // events of this round still sitting in the queue
+        let slot = &mut self.slots[sidx];
+        slot.gen = slot.gen.wrapping_add(1);
+        slot.open = false;
+        sampled.clear();
+        arrived.clear();
+        responded_ids.clear();
+        slot.sampled = sampled;
+        slot.arrived = arrived;
+        slot.responded_ids = responded_ids;
+        self.free_slots.push(sidx as u32);
+        self.in_flight -= 1;
+        Ok(())
+    }
+
+    /// The buffer reached K waiting updates: re-check staleness at apply
+    /// time (commits may have landed since arrival), weight the survivors
+    /// by the staleness schedule, and commit them as one server step.
+    fn apply_buffer(&mut self, k_now: u64, t_now: f64) -> anyhow::Result<()> {
+        let mut entries = std::mem::take(&mut self.buffer);
+        entries.sort_unstable_by_key(|e| e.client);
+        self.apply_ids.clear();
+        self.apply_weights.clear();
+        self.apply_versions.clear();
+        for e in &entries {
+            let s = self.server_version - e.version;
+            if s > self.max_stale {
+                // went stale while waiting in the buffer
+                self.eng.discard_uplink(e.k, e.client, true)?;
+                self.astats.stale_discarded += 1;
+                self.busy.remove(&e.client);
+            } else {
+                self.apply_ids.push(e.client);
+                self.apply_weights.push(self.stale_weight.weight(s) as f32);
+                self.apply_versions.push(e.version);
+            }
+        }
+        entries.clear();
+        self.buffer = entries;
+        if self.apply_ids.is_empty() {
+            return Ok(());
+        }
+        self.eng.complete_fresh_weighted(k_now, &self.apply_ids,
+                                         &self.apply_weights)?;
+        for &v in &self.apply_versions {
+            self.astats.record_applied(self.server_version, v);
+        }
+        self.server_version += 1;
+        match &mut self.anchor_holders {
+            Some(h) => {
+                h.clear();
+                h.extend_from_slice(&self.apply_ids);
+            }
+            None => self.anchor_holders = Some(self.apply_ids.clone()),
+        }
+        self.stats.comm_events += 1;
+        self.stats.total_participants += self.apply_ids.len() as u64;
+        // the commit lands once the slowest applied downlink completes
+        let dbits = self.eng.downlink_frame_bytes() as f64 * 8.0;
+        let mut down_t = 0.0f64;
+        for &i in &self.apply_ids {
+            let dev = self.profile(i as usize);
+            down_t = down_t.max(dev.latency_s + dbits / dev.down_bps);
+            self.busy.remove(&i);
+        }
+        self.clock = self.clock.max(t_now + down_t);
+        Ok(())
+    }
+}
+
+/// Run one asynchronous scenario end to end on the sharded store — the
+/// async counterpart of [`super::runner::run`], with the same eval
+/// cadence, the same mega resident-bytes enforcement, and the staleness /
+/// goodput block filled into the [`SimResult`].
+pub fn run(cfg: &SimCfg) -> anyhow::Result<SimResult> {
+    let env = build_env(cfg);
+    let mut sim = AsyncShardedSim::new(cfg, &env)?;
+    let mut series = Series::new(cfg.label());
+    series.records.push(sim.evaluate(0)?);
+    for k in 1..=cfg.steps {
+        sim.step(k)?;
+        if k % cfg.eval_every == 0 || k == cfg.steps {
+            series.records.push(sim.evaluate(k)?);
+            if !series.records.last().unwrap().is_finite() {
+                break; // diverged: record it and stop
+            }
+        }
+    }
+    let store = sim.engine().store();
+    let touched = sim.engine().touched_clients();
+    anyhow::ensure!(store.materialized_rows() <= touched,
+                    "store holds {} rows for {touched} touched clients",
+                    store.materialized_rows());
+    if cfg.scenario.mega {
+        let bound = resident_bound_bytes(store.dim(), touched);
+        anyhow::ensure!(
+            (store.resident_bytes() as u64) <= bound,
+            "mega run resident bytes {} exceed the documented bound {bound} \
+             ({touched} touched clients of {})",
+            store.resident_bytes(), store.len());
+    }
+    Ok(SimResult {
+        scenario: cfg.scenario.spec.clone(),
+        alg: cfg.scenario.alg.clone(),
+        series,
+        stats: sim.stats().clone(),
+        fleet_size: store.len() as u64,
+        touched_clients: touched as u64,
+        resident_rows: store.materialized_rows() as u64,
+        resident_bytes: store.resident_bytes() as u64,
+        goodput: sim.engine().net().uplink_goodput(),
+        async_stats: Some(sim.async_stats().clone()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{runner, scenario};
+
+    fn smoke(spec: &str, seed: u64) -> SimCfg {
+        let mut cfg = SimCfg::smoke(scenario::from_spec(spec).unwrap());
+        cfg.seed = seed;
+        cfg
+    }
+
+    const STRAGGLER: &str = "straggler-heavy:clients=12,quorum=0.5,deadline=0.5";
+
+    /// The tentpole pin: `inflight=1` + `buffer=cohort` + constant weight
+    /// *is* the synchronous runner — series, clock, byte meter, and every
+    /// scheduler counter match bit for bit on a deadline-dropping fleet.
+    #[test]
+    fn inflight_one_reproduces_the_sync_runner_bit_for_bit() {
+        let mut sc = smoke(STRAGGLER, 1);
+        sc.steps = 300;
+        let mut ac = smoke(&format!(
+            "{STRAGGLER},async=buffered,buffer=cohort,inflight=1,stale=const"), 1);
+        ac.steps = 300;
+        let s = runner::run(&sc).unwrap();
+        let a = run(&ac).unwrap();
+        assert_eq!(s.series.records.len(), a.series.records.len());
+        for (rs, ra) in s.series.records.iter().zip(&a.series.records) {
+            assert_eq!(rs.train_loss, ra.train_loss);
+            assert_eq!(rs.personal_loss, ra.personal_loss);
+            assert_eq!(rs.bits_up, ra.bits_up);
+            assert_eq!(rs.bits_down, ra.bits_down);
+            assert_eq!(rs.sim_time_s, ra.sim_time_s);
+            assert_eq!(rs.participants, ra.participants);
+        }
+        assert_eq!(s.stats.comm_events, a.stats.comm_events);
+        assert_eq!(s.stats.skipped_rounds, a.stats.skipped_rounds);
+        assert_eq!(s.stats.dropped_stragglers, a.stats.dropped_stragglers);
+        assert_eq!(s.stats.total_participants, a.stats.total_participants);
+        assert_eq!(s.stats.idle_steps, a.stats.idle_steps);
+        assert_eq!(s.stats.events, a.stats.events);
+        assert_eq!(s.goodput, a.goodput);
+        // lockstep dispatch: nothing is ever stale
+        let ast = a.async_stats.unwrap();
+        assert_eq!(ast.stale_discarded, 0);
+        assert_eq!(ast.mean_staleness(), 0.0);
+        assert_eq!(ast.p95_staleness(), 0);
+        assert_eq!(ast.hist_total(), ast.applied_updates);
+    }
+
+    /// Buffered overlap on the bursty preset: rounds interleave, updates
+    /// apply with recorded staleness, and the uplink byte meter decomposes
+    /// exactly into applied + stale-discarded + straggler-wasted frames.
+    #[test]
+    fn buffered_mode_overlaps_rounds_and_accounts_every_bit() {
+        let mut cfg = smoke("async-bursty", 3);
+        cfg.steps = 300;
+        let res = run(&cfg).unwrap();
+        let ast = res.async_stats.as_ref().unwrap();
+        assert!(ast.dispatched_rounds > 0, "{ast:?}");
+        assert!(ast.applied_updates > 0, "{ast:?}");
+        assert_eq!(ast.hist_total(), ast.applied_updates);
+        for &(a, d) in ast.staleness_log() {
+            assert!(a >= d, "apply version {a} precedes dispatch {d}");
+        }
+        assert!(res.goodput > 0.0 && res.goodput <= 1.0,
+                "goodput {}", res.goodput);
+        // natural wire at d=123: 9·123 bits → 139 B payload + 22 B header
+        // per frame, and every metered frame is exactly one of the three
+        let frame_bits = (22 + 139) * 8;
+        let last = res.series.last().unwrap();
+        assert_eq!(last.bits_up,
+                   (ast.applied_updates + ast.stale_discarded
+                    + res.stats.dropped_stragglers) * frame_bits);
+        assert!(res.stats.comm_events > 0);
+    }
+
+    /// Acceptance: `megafleet-async` (inflight ≥ 4) at reduced-but-mega
+    /// scale stays inside the resident bound — enforced inside `run` —
+    /// with a genuinely non-degenerate staleness distribution.
+    #[test]
+    fn megafleet_async_overlaps_within_the_resident_bound() {
+        let mut cfg = smoke("megafleet-async:clients=100000,sample=0.002", 4);
+        cfg.steps = 40;
+        cfg.eval_every = 20;
+        let res = run(&cfg).unwrap();
+        assert_eq!(res.fleet_size, 100_000);
+        assert!(res.touched_clients > 0);
+        assert!(res.resident_rows <= res.touched_clients);
+        let ast = res.async_stats.as_ref().unwrap();
+        assert!(ast.applied_updates > 0, "{ast:?}");
+        assert!(ast.p95_staleness() > 0, "degenerate staleness: {ast:?}");
+        assert!(res.goodput <= 1.0);
+        assert!(res.series.last().unwrap().train_loss.is_finite());
+    }
+
+    #[test]
+    fn async_runs_replay_bit_exactly() {
+        let mut cfg = smoke("async-bursty", 7);
+        cfg.steps = 200;
+        let r1 = run(&cfg).unwrap();
+        let r2 = run(&cfg).unwrap();
+        assert_eq!(r1.series.records.len(), r2.series.records.len());
+        for (x, y) in r1.series.records.iter().zip(&r2.series.records) {
+            assert_eq!(x.train_loss, y.train_loss);
+            assert_eq!(x.bits_up, y.bits_up);
+            assert_eq!(x.sim_time_s, y.sim_time_s);
+        }
+        assert_eq!(r1.goodput, r2.goodput);
+        assert_eq!(r1.async_stats.unwrap(), r2.async_stats.unwrap());
+    }
+
+    /// The async summary JSON carries the staleness block and parses.
+    #[test]
+    fn async_summary_json_has_staleness_block() {
+        let mut cfg = smoke("async-bursty", 5);
+        cfg.steps = 150;
+        let res = run(&cfg).unwrap();
+        let text = res.to_json().to_string_pretty();
+        assert!(!text.contains("NaN"), "summary contains NaN: {text}");
+        let v = crate::util::json::parse(&text).unwrap();
+        assert!(v.get("staleness_mean").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(v.get("staleness_p95").unwrap().as_f64().is_some());
+        assert!(v.get("goodput").unwrap().as_f64().unwrap() <= 1.0);
+        let hist = v.get("staleness_hist").unwrap().as_arr().unwrap();
+        assert_eq!(hist.len(), STALE_HIST_BUCKETS);
+        let total: f64 = hist.iter().filter_map(|x| x.as_f64()).sum();
+        let applied = v.get("applied_updates").unwrap().as_f64().unwrap();
+        assert_eq!(total, applied);
+    }
+
+    /// The sync runner's summary stays fully defined: goodput present, no
+    /// staleness block.
+    #[test]
+    fn sync_summary_json_has_goodput_but_no_staleness_block() {
+        let res = runner::run(&smoke("uniform", 2)).unwrap();
+        assert!(res.async_stats.is_none());
+        let v = crate::util::json::parse(&res.to_json().to_string_pretty())
+            .unwrap();
+        assert_eq!(v.get("goodput").unwrap().as_f64(), Some(1.0));
+        assert!(v.get("staleness_mean").is_none());
+    }
+}

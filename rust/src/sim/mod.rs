@@ -19,14 +19,20 @@
 //!   random-access streams (never materialized fleet-wide) and seeded
 //!   availability traces (windowed dropout, diurnal cycles).
 //! * [`scenario`] — presets (`uniform`, `lognormal-wan`, `diurnal-churn`,
-//!   `straggler-heavy`, `megafleet`, `megafleet-churn`,
-//!   `megafleet-fedavg`) behind a `name[:key=val,...]` spec grammar with
-//!   an `alg=l2gd|fedavg|fedopt` key.
+//!   `straggler-heavy`, `async-bursty`, `megafleet`, `megafleet-churn`,
+//!   `megafleet-fedavg`, `megafleet-async`) behind a `name[:key=val,...]`
+//!   spec grammar with `alg=l2gd|fedavg|fedopt` and
+//!   `async=buffered,buffer=K,inflight=M,stale=W` keys.
 //! * [`runner`] — drives the generic cohort engine
 //!   ([`crate::algorithms::ShardedL2gdEngine`], copy-on-write client
 //!   state): one O(cohort) id-space cohort draw at every fleet size,
 //!   first-k-of-m quorum under a straggler deadline, and a fleet clock
 //!   advanced by the event queue.
+//! * [`async_runner`] — the asynchronous runtime: up to `max_in_flight`
+//!   version-stamped rounds overlap in the shared event queue, arrivals
+//!   aggregate staleness-weighted once a K-update buffer fills, and the
+//!   staleness distribution plus uplink goodput are metered; `inflight=1`
+//!   with `buffer=cohort` reproduces [`runner`] bit for bit.
 //!
 //! ### Device → data-shard mapping (the canonical definition)
 //! A simulated fleet can be far larger than the number of distinct data
@@ -45,11 +51,13 @@
 //! presets run a million devices — under L2GD *or* the baselines — with
 //! resident state proportional to the clients actually touched.
 
+pub mod async_runner;
 pub mod fleet;
 pub mod queue;
 pub mod runner;
 pub mod scenario;
 
+pub use async_runner::{AsyncDenseSim, AsyncFleetSim, AsyncShardedSim, AsyncStats};
 pub use fleet::{Churn, DeviceProfile, Dist, Fleet, FleetSpec};
 pub use queue::EventQueue;
 pub use runner::{sample_device_ids, FleetSim, SimCfg, SimResult, SimStats};

@@ -6,6 +6,13 @@
 //! identically regardless of heap internals. The heap's backing storage is
 //! retained across [`EventQueue::clear`], which is what keeps the
 //! simulator's per-round arrival scheduling allocation-free once warm.
+//!
+//! The queue carries one round's arrivals in the synchronous runner and the
+//! arrivals of **every in-flight round at once** in the asynchronous one
+//! ([`crate::sim::async_runner`]); the latter cannot `clear()` on a round
+//! close, so it tags each event with its round slot's generation and lets
+//! stale-generation pops fall through silently — same capacity-retention
+//! discipline, per-round instead of whole-queue.
 
 use std::collections::BinaryHeap;
 

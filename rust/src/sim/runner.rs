@@ -63,6 +63,7 @@ use crate::protocol::StepKind;
 use crate::util::json::Value;
 use crate::util::Rng;
 
+use super::async_runner::AsyncStats;
 use super::fleet::{Churn, DeviceProfile, FleetSpec};
 use super::queue::EventQueue;
 use super::scenario::Scenario;
@@ -216,7 +217,7 @@ pub fn sample_device_ids(rng: &mut Rng, n: usize, m: usize,
 }
 
 /// Counters accumulated over a simulated run.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct SimStats {
     /// fresh-aggregation rounds that actually committed
     pub comm_events: u64,
@@ -514,13 +515,20 @@ pub struct SimResult {
     /// copy-on-write store occupancy at the end of the run
     pub resident_rows: u64,
     pub resident_bytes: u64,
+    /// applied fraction of the uplink byte meter
+    /// ([`crate::transport::Network::uplink_goodput`]) — 1.0 for a run
+    /// with no wasted or stale traffic
+    pub goodput: f64,
+    /// staleness accounting, filled only by the asynchronous runtime
+    /// ([`super::async_runner::run`]); `None` for synchronous runs
+    pub async_stats: Option<AsyncStats>,
 }
 
 impl SimResult {
     pub fn to_json(&self) -> Value {
         let last = self.series.last().expect("series has records");
         let per_device = self.resident_bytes as f64 / self.fleet_size.max(1) as f64;
-        Value::obj(vec![
+        let mut pairs = vec![
             ("scenario".into(), Value::Str(self.scenario.clone())),
             ("alg".into(), Value::Str(self.alg.clone())),
             ("label".into(), Value::Str(self.series.label.clone())),
@@ -543,7 +551,22 @@ impl SimResult {
             ("final_train_loss".into(), Value::Num(last.train_loss)),
             ("final_personal_loss".into(), Value::Num(last.personal_loss)),
             ("final_test_acc".into(), Value::Num(last.test_acc)),
-        ])
+            ("goodput".into(), Value::Num(self.goodput)),
+        ];
+        if let Some(a) = &self.async_stats {
+            pairs.push(("async_dispatched".into(),
+                        Value::Num(a.dispatched_rounds as f64)));
+            pairs.push(("applied_updates".into(),
+                        Value::Num(a.applied_updates as f64)));
+            pairs.push(("stale_discarded".into(),
+                        Value::Num(a.stale_discarded as f64)));
+            pairs.push(("staleness_mean".into(), Value::Num(a.mean_staleness())));
+            pairs.push(("staleness_p95".into(),
+                        Value::Num(a.p95_staleness() as f64)));
+            pairs.push(("staleness_hist".into(), Value::Arr(
+                a.histogram().iter().map(|&c| Value::Num(c as f64)).collect())));
+        }
+        Value::obj(pairs)
     }
 }
 
@@ -588,6 +611,8 @@ pub fn run(cfg: &SimCfg) -> anyhow::Result<SimResult> {
         touched_clients: touched as u64,
         resident_rows: store.materialized_rows() as u64,
         resident_bytes: store.resident_bytes() as u64,
+        goodput: sim.engine().net().uplink_goodput(),
+        async_stats: None,
     })
 }
 

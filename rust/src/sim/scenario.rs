@@ -9,7 +9,8 @@
 //! ```
 //!
 //! Presets: `uniform`, `lognormal-wan`, `diurnal-churn`,
-//! `straggler-heavy`, `megafleet`, `megafleet-churn`, `megafleet-fedavg`.
+//! `straggler-heavy`, `async-bursty`, `megafleet`, `megafleet-churn`,
+//! `megafleet-fedavg`, `megafleet-async`.
 //! Override keys:
 //!
 //! * `clients=N`   — fleet size (0 = inherit the run default)
@@ -23,8 +24,20 @@
 //! * `alg=A`       — fleet algorithm: one of
 //!   [`crate::algorithms::FLEET_ALGS`] (`l2gd` | `fedavg` | `fedopt`);
 //!   unknown names list what is registered
+//! * `async=D`     — dispatch discipline: `sync` (one round at a time) or
+//!   `buffered` (FedBuff-style overlapping rounds —
+//!   [`crate::sim::async_runner`])
+//! * `buffer=K`    — updates per buffered aggregate; `cohort` closes each
+//!   round on its own quorum instead (requires `async=buffered`)
+//! * `inflight=M`  — overlapping dispatched cohorts allowed, ≥ 1
+//!   (requires `async=buffered`)
+//! * `stale=W`     — staleness weight `const` | `inv` | `poly[:A]`
+//!   ([`StalenessWeight`]; requires `async=buffered`)
+//! * `max_stale=S` — discard updates staler than S server versions
+//!   (requires `async=buffered`)
 //!
 //! Example: `straggler-heavy:clients=20,sample=0.5,quorum=0.8,deadline=2`.
+//! Async example: `uniform:async=buffered,buffer=4,inflight=8,stale=inv`.
 //!
 //! ### Mega fleets
 //! The `megafleet*` presets (and any scenario whose fleet reaches
@@ -37,6 +50,7 @@
 
 use super::fleet::{Churn, Dist, FleetSpec};
 use crate::algorithms::FLEET_ALGS;
+use crate::protocol::{AsyncSchedule, StalenessWeight};
 
 #[derive(Clone, Debug)]
 pub struct Scenario {
@@ -63,6 +77,9 @@ pub struct Scenario {
     /// mega mode: touched-mode evaluation + enforced resident-bytes bound
     /// (forced on whenever the fleet reaches [`MEGA_THRESHOLD`])
     pub mega: bool,
+    /// dispatch discipline: synchronous one-round-at-a-time or buffered
+    /// overlapping rounds (`async` is a Rust keyword, hence the name)
+    pub async_sched: AsyncSchedule,
 }
 
 /// Fleet size at which a scenario is promoted to mega mode regardless of
@@ -82,6 +99,10 @@ pub const PRESETS: &[(&str, &str)] = &[
     ("straggler-heavy",
      "bimodal phone-vs-laptop fleet; over-selects and closes each round \
       at a 60% quorum under a 2 s deadline"),
+    ("async-bursty",
+     "bimodal fleet under bursty windowed availability, running the \
+      buffered asynchronous runtime: 6 cohorts in flight, 6-update \
+      buffer, 1/(1+s) staleness weights"),
     ("megafleet",
      "one million always-on phone-vs-laptop devices, 0.02% sampled per \
       event (≈200-device cohorts), 90% quorum under a 5 s deadline — \
@@ -93,6 +114,10 @@ pub const PRESETS: &[(&str, &str)] = &[
      "the megafleet fleet running the FedAvg baseline (alg=fedavg): fixed \
       local-step cadence, cohort resets onto the broadcast — the \
       engine-vs-engine comparison the paper's bits accounting needs"),
+    ("megafleet-async",
+     "the megafleet under the buffered asynchronous runtime: 4 cohorts in \
+      flight, 64-update buffer, 1/(1+s) staleness weights — overlapping \
+      rounds at one million devices under the same resident-bytes bound"),
 ];
 
 /// Sorted preset names (error messages, docs, CLI listings).
@@ -119,6 +144,7 @@ fn preset(name: &str) -> Option<Scenario> {
             deadline_s: f64::INFINITY,
             alg: "l2gd".into(),
             mega: false,
+            async_sched: AsyncSchedule::RoundSync,
         },
         "lognormal-wan" => Scenario {
             name: name.into(),
@@ -136,6 +162,7 @@ fn preset(name: &str) -> Option<Scenario> {
             deadline_s: f64::INFINITY,
             alg: "l2gd".into(),
             mega: false,
+            async_sched: AsyncSchedule::RoundSync,
         },
         "diurnal-churn" => Scenario {
             name: name.into(),
@@ -158,6 +185,7 @@ fn preset(name: &str) -> Option<Scenario> {
             deadline_s: f64::INFINITY,
             alg: "l2gd".into(),
             mega: false,
+            async_sched: AsyncSchedule::RoundSync,
         },
         "straggler-heavy" => Scenario {
             name: name.into(),
@@ -176,8 +204,36 @@ fn preset(name: &str) -> Option<Scenario> {
             deadline_s: 2.0,
             alg: "l2gd".into(),
             mega: false,
+            async_sched: AsyncSchedule::RoundSync,
         },
-        "megafleet" | "megafleet-churn" | "megafleet-fedavg" => Scenario {
+        "async-bursty" => Scenario {
+            name: name.into(),
+            spec: name.into(),
+            clients: 24,
+            fleet: FleetSpec {
+                // the straggler-heavy phone-vs-laptop mix: slow devices
+                // are what makes rounds overlap interestingly
+                step_time: Dist::Bimodal { p_slow: 0.3, fast: 0.005, slow: 0.08 },
+                up_bw: Dist::Bimodal { p_slow: 0.3, fast: 20e6, slow: 1e6 },
+                down_bw: Dist::Bimodal { p_slow: 0.3, fast: 50e6, slow: 4e6 },
+                latency: Dist::Uniform { lo: 0.01, hi: 0.1 },
+            },
+            // bursty availability: iid 70%-up windows, re-drawn every 10 s
+            churn: Churn::Windowed { up_frac: 0.7, period_s: 10.0 },
+            sample_frac: 0.35,
+            quorum_frac: 0.6,
+            deadline_s: 2.0,
+            alg: "l2gd".into(),
+            mega: false,
+            async_sched: AsyncSchedule::Buffered {
+                buffer: 6,
+                max_in_flight: 6,
+                stale: StalenessWeight::Inverse,
+                max_stale: 16,
+            },
+        },
+        "megafleet" | "megafleet-churn" | "megafleet-fedavg"
+        | "megafleet-async" => Scenario {
             name: name.into(),
             spec: name.into(),
             clients: 1_000_000,
@@ -202,6 +258,19 @@ fn preset(name: &str) -> Option<Scenario> {
             deadline_s: 5.0,
             alg: if name == "megafleet-fedavg" { "fedavg" } else { "l2gd" }.into(),
             mega: true,
+            // a 64-update buffer against ≈180-device cohorts guarantees
+            // several mid-round aggregates per dispatch — the staleness
+            // histogram is non-degenerate by construction
+            async_sched: if name == "megafleet-async" {
+                AsyncSchedule::Buffered {
+                    buffer: 64,
+                    max_in_flight: 4,
+                    stale: StalenessWeight::Inverse,
+                    max_stale: 16,
+                }
+            } else {
+                AsyncSchedule::RoundSync
+            },
         },
         _ => return None,
     })
@@ -219,6 +288,14 @@ pub fn from_spec(spec: &str) -> anyhow::Result<Scenario> {
         anyhow::anyhow!("unknown scenario `{name}` (known: {})",
                         preset_names().join(", "))
     })?;
+    // async overrides are collected during the loop and assembled after —
+    // they only make sense together (and `buffer=…` without a buffered
+    // discipline is an error, not a silent no-op)
+    let mut a_buffered: Option<bool> = None;
+    let mut a_buffer: Option<usize> = None;
+    let mut a_inflight: Option<usize> = None;
+    let mut a_stale: Option<StalenessWeight> = None;
+    let mut a_max_stale: Option<u64> = None;
     if let Some(args) = args {
         for kv in args.split(',') {
             let kv = kv.trim();
@@ -240,11 +317,88 @@ pub fn from_spec(spec: &str) -> anyhow::Result<Scenario> {
                 "quorum" => sc.quorum_frac = fval()?,
                 "deadline" => sc.deadline_s = fval()?,
                 "alg" => sc.alg = val.to_string(),
+                "async" => {
+                    a_buffered = Some(match val {
+                        "buffered" => true,
+                        "sync" => false,
+                        other => anyhow::bail!(
+                            "async={other}: unknown dispatch discipline \
+                             (known: buffered, sync)"),
+                    });
+                }
+                "buffer" => {
+                    a_buffer = Some(if val == "cohort" {
+                        0
+                    } else {
+                        let k = val.parse::<usize>().map_err(|e| {
+                            anyhow::anyhow!("buffer={val}: {e}")
+                        })?;
+                        anyhow::ensure!(k > 0,
+                                        "buffer=0 is not a buffer; use \
+                                         buffer=cohort for per-round closes");
+                        k
+                    });
+                }
+                "inflight" => {
+                    a_inflight = Some(val.parse::<usize>().map_err(|e| {
+                        anyhow::anyhow!("inflight={val}: {e}")
+                    })?);
+                }
+                "stale" => a_stale = Some(StalenessWeight::from_spec(val)?),
+                "max_stale" => {
+                    a_max_stale = Some(val.parse::<u64>().map_err(|e| {
+                        anyhow::anyhow!("max_stale={val}: {e}")
+                    })?);
+                }
                 other => anyhow::bail!(
                     "unknown scenario option `{other}` (known: clients, \
-                     sample, quorum, deadline, alg)"),
+                     sample, quorum, deadline, alg, async, buffer, \
+                     inflight, stale, max_stale)"),
             }
         }
+    }
+    let buffered = a_buffered.unwrap_or(sc.async_sched.is_async());
+    if buffered {
+        // start from the preset's buffered parameters (or the
+        // synchronous-equivalent defaults) and lay overrides on top
+        let (mut buffer, mut inflight, mut stale, mut max_stale) =
+            match sc.async_sched {
+                AsyncSchedule::Buffered { buffer, max_in_flight, stale,
+                                          max_stale } => {
+                    (buffer, max_in_flight, stale, max_stale)
+                }
+                AsyncSchedule::RoundSync => {
+                    (0, 1, StalenessWeight::Constant, 16)
+                }
+            };
+        if let Some(k) = a_buffer {
+            buffer = k;
+        }
+        if let Some(m) = a_inflight {
+            inflight = m;
+        }
+        if let Some(w) = a_stale {
+            stale = w;
+        }
+        if let Some(s) = a_max_stale {
+            max_stale = s;
+        }
+        anyhow::ensure!(inflight >= 1, "inflight={inflight} must be ≥ 1");
+        sc.async_sched = AsyncSchedule::Buffered {
+            buffer,
+            max_in_flight: inflight,
+            stale,
+            max_stale,
+        };
+    } else {
+        for (key, given) in [("buffer", a_buffer.is_some()),
+                             ("inflight", a_inflight.is_some()),
+                             ("stale", a_stale.is_some()),
+                             ("max_stale", a_max_stale.is_some())] {
+            anyhow::ensure!(!given,
+                            "scenario option `{key}` requires async=buffered");
+        }
+        sc.async_sched = AsyncSchedule::RoundSync;
     }
     anyhow::ensure!(FLEET_ALGS.contains(&sc.alg.as_str()),
                     "unknown fleet algorithm `{}` (registered: {})",
@@ -372,5 +526,93 @@ mod tests {
         assert_eq!(sc.churn, Churn::AlwaysOn);
         assert!(sc.deadline_s.is_infinite());
         assert_eq!(sc.fleet.latency, Dist::Fixed(0.0));
+        assert_eq!(sc.async_sched, AsyncSchedule::RoundSync);
+    }
+
+    #[test]
+    fn async_keys_parse_and_assemble() {
+        let sc = from_spec("uniform:async=buffered,buffer=4,inflight=8,\
+                            stale=inv,max_stale=9")
+            .unwrap();
+        assert_eq!(sc.async_sched,
+                   AsyncSchedule::Buffered {
+                       buffer: 4,
+                       max_in_flight: 8,
+                       stale: StalenessWeight::Inverse,
+                       max_stale: 9,
+                   });
+        // enabling without parameters gets the synchronous-equivalent
+        // defaults: per-cohort buffering, one round in flight, constant
+        // weights
+        let sc = from_spec("uniform:async=buffered").unwrap();
+        assert_eq!(sc.async_sched,
+                   AsyncSchedule::Buffered {
+                       buffer: 0,
+                       max_in_flight: 1,
+                       stale: StalenessWeight::Constant,
+                       max_stale: 16,
+                   });
+        // buffer=cohort is the explicit spelling of per-round closes
+        let sc = from_spec("uniform:async=buffered,buffer=cohort,inflight=3")
+            .unwrap();
+        assert!(matches!(sc.async_sched,
+                         AsyncSchedule::Buffered { buffer: 0,
+                                                   max_in_flight: 3, .. }));
+        // poly weights thread through
+        let sc = from_spec("uniform:async=buffered,stale=poly:2").unwrap();
+        assert!(matches!(sc.async_sched,
+                         AsyncSchedule::Buffered {
+                             stale: StalenessWeight::Polynomial { .. }, ..
+                         }));
+    }
+
+    #[test]
+    fn async_keys_require_buffered_mode() {
+        for spec in ["uniform:buffer=4", "uniform:inflight=2",
+                     "uniform:stale=inv", "uniform:max_stale=3"] {
+            let err = format!("{:#}", from_spec(spec).unwrap_err());
+            assert!(err.contains("requires async=buffered"), "{spec}: {err}");
+        }
+        // async=sync on a buffered preset turns the runtime off — and the
+        // guard then applies to its parameters too
+        let sc = from_spec("async-bursty:async=sync").unwrap();
+        assert_eq!(sc.async_sched, AsyncSchedule::RoundSync);
+        assert!(from_spec("async-bursty:async=sync,buffer=4").is_err());
+        // bad values are rejected with the key named
+        assert!(from_spec("uniform:async=eventually").is_err());
+        assert!(from_spec("uniform:async=buffered,buffer=0").is_err());
+        assert!(from_spec("uniform:async=buffered,inflight=0").is_err());
+        assert!(from_spec("uniform:async=buffered,stale=linear").is_err());
+        assert!(from_spec("uniform:async=buffered,max_stale=many").is_err());
+    }
+
+    #[test]
+    fn async_presets_are_buffered() {
+        let sc = from_spec("async-bursty").unwrap();
+        assert!(!sc.mega);
+        assert!(matches!(sc.churn, Churn::Windowed { .. }));
+        assert_eq!(sc.async_sched,
+                   AsyncSchedule::Buffered {
+                       buffer: 6,
+                       max_in_flight: 6,
+                       stale: StalenessWeight::Inverse,
+                       max_stale: 16,
+                   });
+        let sc = from_spec("megafleet-async").unwrap();
+        assert!(sc.mega);
+        assert_eq!(sc.clients, 1_000_000);
+        assert!(sc.sample_frac <= 0.01);
+        assert!(matches!(sc.async_sched,
+                         AsyncSchedule::Buffered { buffer: 64,
+                                                   max_in_flight: 4, .. }));
+        // preset parameters accept overrides like any other key
+        let sc = from_spec("megafleet-async:inflight=8,stale=const").unwrap();
+        assert_eq!(sc.async_sched,
+                   AsyncSchedule::Buffered {
+                       buffer: 64,
+                       max_in_flight: 8,
+                       stale: StalenessWeight::Constant,
+                       max_stale: 16,
+                   });
     }
 }

@@ -7,8 +7,13 @@
 //! wall-clock time under a configurable latency/bandwidth model — the
 //! "constant speed network" hypothesis the paper cites for why fewer bits
 //! mean faster training.
+//!
+//! [`loopback`] drives the same [`frame`] codec over a real localhost
+//! socket and pins the kernel-observed byte counts to this module's
+//! simulated metering.
 
 pub mod frame;
+pub mod loopback;
 
 /// One communication event (for protocol traces / Fig 2).
 #[derive(Clone, Debug, PartialEq)]
@@ -25,6 +30,22 @@ pub struct LinkStats {
     pub bits_down: u64,
     pub msgs_up: u64,
     pub msgs_down: u64,
+    /// subset of `bits_up` the master discarded as straggler traffic
+    /// (missed quorum or deadline)
+    pub bits_up_wasted: u64,
+    /// subset of `bits_up` the master discarded as too stale (async
+    /// buffered aggregation past `max_stale`)
+    pub bits_up_stale: u64,
+}
+
+/// What happened to an uplink at the master — drives the goodput
+/// attribution (`wasted`/`stale` bits still count toward `bits_up`: the
+/// bytes crossed the network either way).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum UplinkKind {
+    Applied,
+    Wasted,
+    Stale,
 }
 
 /// Simple time model: every communication round costs one latency plus the
@@ -140,18 +161,18 @@ impl Network {
             + self.round_max_bits as f64 / self.time_model.bandwidth_bps;
     }
 
-    /// Shared uplink metering; `participant` controls whether the sender
-    /// counts toward the round's cohort.
+    /// Shared uplink metering: bits, message count, trace, and the
+    /// goodput attribution by `kind`.
     fn record_uplink(&mut self, step: u64, client: usize, bits: u64,
-                     participant: bool) {
-        debug_assert!(self.in_round, "uplink outside a round");
+                     kind: UplinkKind) {
         let b = self.bucket(client);
         let l = &mut self.links[b];
         l.bits_up += bits;
         l.msgs_up += 1;
-        self.round_max_bits = self.round_max_bits.max(bits);
-        if participant {
-            self.round_uplinks += 1;
+        match kind {
+            UplinkKind::Applied => {}
+            UplinkKind::Wasted => l.bits_up_wasted += bits,
+            UplinkKind::Stale => l.bits_up_stale += bits,
         }
         if let Some(t) = &mut self.trace {
             t.push(Event::Up { step, client, bits });
@@ -160,7 +181,10 @@ impl Network {
 
     /// Record a client → master payload of exactly `bits`.
     pub fn uplink(&mut self, step: u64, client: usize, bits: u64) {
-        self.record_uplink(step, client, bits, true);
+        debug_assert!(self.in_round, "uplink outside a round");
+        self.round_max_bits = self.round_max_bits.max(bits);
+        self.round_uplinks += 1;
+        self.record_uplink(step, client, bits, UplinkKind::Applied);
     }
 
     /// Record a client → master payload the master *discarded* (a
@@ -168,7 +192,26 @@ impl Network {
     /// the network, so they meter like any uplink — but the sender does
     /// not count toward the round's participants.
     pub fn uplink_wasted(&mut self, step: u64, client: usize, bits: u64) {
-        self.record_uplink(step, client, bits, false);
+        debug_assert!(self.in_round, "uplink outside a round");
+        self.round_max_bits = self.round_max_bits.max(bits);
+        self.record_uplink(step, client, bits, UplinkKind::Wasted);
+    }
+
+    /// Straggler traffic discarded *outside* any synchronous round — the
+    /// async runner's overlapping cohorts close independently of the
+    /// engine's round brackets, so their discards must not perturb
+    /// `comm_rounds` or the last round's participant count.
+    pub fn offround_uplink_wasted(&mut self, step: u64, client: usize,
+                                  bits: u64) {
+        self.record_uplink(step, client, bits, UplinkKind::Wasted);
+    }
+
+    /// An uplink the async master discarded as too stale (the dispatch's
+    /// server version fell more than `max_stale` behind) — off-round, like
+    /// [`Network::offround_uplink_wasted`].
+    pub fn offround_uplink_stale(&mut self, step: u64, client: usize,
+                                 bits: u64) {
+        self.record_uplink(step, client, bits, UplinkKind::Stale);
     }
 
     /// Record a master → one-client payload of exactly `bits` (the fleet
@@ -213,6 +256,33 @@ impl Network {
 
     pub fn total_bits_down(&self) -> u64 {
         self.links.iter().map(|l| l.bits_down).sum()
+    }
+
+    /// Uplink bits discarded as straggler traffic (subset of
+    /// `total_bits_up`).
+    pub fn total_bits_up_wasted(&self) -> u64 {
+        self.links.iter().map(|l| l.bits_up_wasted).sum()
+    }
+
+    /// Uplink bits discarded as stale (subset of `total_bits_up`).
+    pub fn total_bits_up_stale(&self) -> u64 {
+        self.links.iter().map(|l| l.bits_up_stale).sum()
+    }
+
+    /// Uplink bits the master actually aggregated.
+    pub fn total_bits_up_applied(&self) -> u64 {
+        self.total_bits_up() - self.total_bits_up_wasted()
+            - self.total_bits_up_stale()
+    }
+
+    /// Goodput: applied uplink bits / total uplink bits, in [0, 1]
+    /// (1.0 on a silent network — nothing transmitted, nothing wasted).
+    pub fn uplink_goodput(&self) -> f64 {
+        let total = self.total_bits_up();
+        if total == 0 {
+            return 1.0;
+        }
+        self.total_bits_up_applied() as f64 / total as f64
     }
 
     /// The paper's metric: total communicated bits normalized by n.
@@ -391,6 +461,42 @@ mod tests {
         net.end_round();
         assert_eq!(net.total_bits_down(), 40 + 10 * 8);
         assert_eq!(net.shard_link(2).msgs_down, 2);
+    }
+
+    /// Goodput attribution: wasted and stale bits are disjoint subsets of
+    /// `bits_up`; applied + wasted + stale = total, and goodput is their
+    /// ratio. Off-round discards leave round accounting untouched.
+    #[test]
+    fn goodput_attribution_splits_uplink_bits() {
+        let mut net = Network::new(4);
+        assert_eq!(net.uplink_goodput(), 1.0, "silent network");
+        net.begin_round();
+        net.uplink(0, 0, 100);
+        net.uplink(0, 1, 100);
+        net.uplink_wasted(0, 2, 60);
+        net.end_round();
+        assert_eq!(net.comm_rounds(), 1);
+        assert_eq!(net.last_round_participants(), 2);
+        // discards arriving between rounds (the async regime)
+        net.offround_uplink_wasted(1, 3, 40);
+        net.offround_uplink_stale(1, 0, 30);
+        assert_eq!(net.comm_rounds(), 1, "off-round discards open no round");
+        assert_eq!(net.last_round_participants(), 2);
+        assert_eq!(net.total_bits_up(), 100 + 100 + 60 + 40 + 30);
+        assert_eq!(net.total_bits_up_wasted(), 60 + 40);
+        assert_eq!(net.total_bits_up_stale(), 30);
+        assert_eq!(net.total_bits_up_applied(), 200);
+        assert_eq!(net.total_bits_up_applied() + net.total_bits_up_wasted()
+                       + net.total_bits_up_stale(),
+                   net.total_bits_up());
+        assert!((net.uplink_goodput() - 200.0 / 330.0).abs() < 1e-12);
+        // per-link attribution carries the split
+        assert_eq!(net.link(2).bits_up_wasted, 60);
+        assert_eq!(net.link(0).bits_up_stale, 30);
+        assert_eq!(net.link(0).bits_up, 130);
+        // every message traced, applied or not
+        assert_eq!(net.link(0).msgs_up, 2);
+        assert_eq!(net.link(3).msgs_up, 1);
     }
 
     #[test]

@@ -1,0 +1,101 @@
+//! Asynchronous-runtime property suite: version accounting (staleness =
+//! server version at apply − model version at dispatch), staleness
+//! histogram consistency, and the exact partition of uplink bytes across
+//! outcome buckets (applied / stale-discarded / straggler-wasted).
+
+use pfl::sim::{async_runner, scenario, SimCfg};
+use pfl::transport::frame::HEADER_BYTES;
+
+/// CI-sized Fig-3 configuration under `spec`.
+fn cfg(spec: &str, steps: u64, seed: u64) -> SimCfg {
+    let mut c = SimCfg::smoke(scenario::from_spec(spec).unwrap());
+    c.steps = steps;
+    c.eval_every = 100;
+    c.seed = seed;
+    c
+}
+
+/// The histogram and both summary moments are exact projections of the
+/// (apply-version, dispatch-version) log: versions never run backwards,
+/// bucket = min(staleness, 32) with the last bucket saturating, the
+/// counts sum to the applied-update total, and mean/p95 match a direct
+/// recomputation from the raw pairs.
+#[test]
+fn staleness_log_histogram_and_moments_agree() {
+    for seed in [0u64, 9, 42] {
+        let c = cfg("async-bursty", 300, seed);
+        let res = async_runner::run(&c).unwrap();
+        let ast = res.async_stats.as_ref().unwrap();
+        let log = ast.staleness_log();
+        assert!(ast.applied_updates > 0, "seed {seed}: nothing applied");
+        assert_eq!(log.len() as u64, ast.applied_updates, "seed {seed}");
+        assert_eq!(ast.hist_total(), ast.applied_updates, "seed {seed}");
+        let mut hist = vec![0u64; ast.histogram().len()];
+        let mut sum = 0u64;
+        for &(apply_v, dispatch_v) in log {
+            assert!(apply_v >= dispatch_v,
+                    "seed {seed}: version ran backwards \
+                     ({apply_v} < {dispatch_v})");
+            let s = apply_v - dispatch_v;
+            hist[(s as usize).min(hist.len() - 1)] += 1;
+            sum += s;
+        }
+        assert_eq!(hist.as_slice(), ast.histogram(), "seed {seed}");
+        let mean = sum as f64 / log.len() as f64;
+        assert_eq!(mean, ast.mean_staleness(), "seed {seed}");
+        let mut ss: Vec<u64> = log.iter().map(|&(a, d)| a - d).collect();
+        ss.sort_unstable();
+        let rank = ((0.95 * ss.len() as f64).ceil() as usize).clamp(1, ss.len());
+        assert_eq!(ss[rank - 1], ast.p95_staleness(), "seed {seed}");
+    }
+}
+
+/// Every sampled uplink frame settles in exactly one outcome bucket, so
+/// at the final evaluation total uplink bits factor exactly as
+/// (applied + stale-discarded + straggler-wasted) × framed size — on a
+/// deterministic and a stochastic wire — and goodput is the applied
+/// share of that total.
+#[test]
+fn uplink_bits_partition_exactly_across_outcome_buckets() {
+    // identity: 32 bits/coordinate; natural: 9 bits/coordinate (sign +
+    // exponent), both byte-aligned into the 22-byte-header frame at d=123
+    for (wire, payload_bytes) in [("identity", (32u64 * 123).div_ceil(8)),
+                                  ("natural", (9u64 * 123).div_ceil(8))] {
+        let mut c = cfg("async-bursty", 300, 11);
+        c.client_comp = wire.into();
+        c.master_comp = wire.into();
+        let res = async_runner::run(&c).unwrap();
+        let ast = res.async_stats.as_ref().unwrap();
+        let last = res.series.last().unwrap();
+        let frame_bits = (HEADER_BYTES as u64 + payload_bytes) * 8;
+        let settled = ast.applied_updates + ast.stale_discarded
+            + res.stats.dropped_stragglers;
+        assert!(last.bits_up > 0, "{wire}: no uplink traffic");
+        assert_eq!(last.bits_up, settled * frame_bits, "{wire}");
+        let applied_bits = ast.applied_updates * frame_bits;
+        assert_eq!(res.goodput, applied_bits as f64 / last.bits_up as f64,
+                   "{wire}");
+        assert!(res.goodput > 0.0 && res.goodput <= 1.0, "{wire}");
+    }
+}
+
+/// max_stale=0 under a deep pipeline forces the stale-discard path: a
+/// one-update buffer bumps the server version on nearly every arrival,
+/// so sibling in-flight rounds deliver models that are already behind.
+/// Discards never enter the histogram (every *applied* update has
+/// staleness 0 by construction) but still pay for their bytes, so
+/// goodput drops strictly below one.
+#[test]
+fn deep_pipelines_with_zero_tolerance_discard_stale_updates() {
+    let c = cfg("async-bursty:buffer=1,inflight=8,max_stale=0", 300, 3);
+    let res = async_runner::run(&c).unwrap();
+    let ast = res.async_stats.as_ref().unwrap();
+    assert!(ast.applied_updates > 0, "nothing applied");
+    assert!(ast.stale_discarded > 0, "deep pipeline never went stale");
+    assert_eq!(ast.mean_staleness(), 0.0);
+    assert_eq!(ast.p95_staleness(), 0);
+    assert_eq!(ast.hist_total(), ast.applied_updates);
+    assert_eq!(ast.histogram()[0], ast.applied_updates);
+    assert!(res.goodput < 1.0,
+            "stale discards must cost goodput, got {}", res.goodput);
+}

@@ -228,6 +228,75 @@ fn scenario_spec_errors_are_actionable() {
     assert!(err.contains("budget"), "{err}");
 }
 
+/// Every Record field must agree bit for bit.
+fn assert_records_equal(a: &Record, b: &Record, ctx: &str) {
+    assert_eq!(a.step, b.step, "{ctx}");
+    assert_eq!(a.comm_rounds, b.comm_rounds, "{ctx} step {}", a.step);
+    assert_eq!(a.bits_per_client, b.bits_per_client, "{ctx} step {}", a.step);
+    assert_eq!(a.bits_up, b.bits_up, "{ctx} step {}", a.step);
+    assert_eq!(a.bits_down, b.bits_down, "{ctx} step {}", a.step);
+    assert_eq!(a.train_loss, b.train_loss, "{ctx} step {}", a.step);
+    assert_eq!(a.train_acc, b.train_acc, "{ctx} step {}", a.step);
+    assert_eq!(a.test_loss, b.test_loss, "{ctx} step {}", a.step);
+    assert_eq!(a.test_acc, b.test_acc, "{ctx} step {}", a.step);
+    assert_eq!(a.personal_loss, b.personal_loss, "{ctx} step {}", a.step);
+    assert_eq!(a.personal_acc, b.personal_acc, "{ctx} step {}", a.step);
+    assert_eq!(a.sim_time_s, b.sim_time_s, "{ctx} step {}", a.step);
+    assert_eq!(a.participants, b.participants, "{ctx} step {}", a.step);
+}
+
+/// Acceptance (async runtime): with one round in flight, per-cohort round
+/// closes, and constant staleness weights, the asynchronous runner is the
+/// synchronous runner — the same series, the same byte accounting, on both
+/// client stores and on a deterministic *and* a stochastic wire. This pins
+/// the async scheduler's degenerate corner to the sync path that the
+/// lockstep-equivalence oracle above already anchors to the paper.
+#[test]
+fn async_inflight_one_reproduces_sync_runner_bit_for_bit() {
+    const ASYNC: &str = "uniform:async=buffered,buffer=cohort,inflight=1,\
+                         stale=const";
+    for wire in ["identity", "qsgd:8"] {
+        let mut c_sync = cfg("uniform", 200, 7);
+        c_sync.client_comp = wire.into();
+        c_sync.master_comp = wire.into();
+        let mut c_async = cfg(ASYNC, 200, 7);
+        c_async.client_comp = wire.into();
+        c_async.master_comp = wire.into();
+
+        let sync_res = runner::run(&c_sync).unwrap();
+        // sharded store, through the public entry point
+        let async_res = sim::async_runner::run(&c_async).unwrap();
+        assert_eq!(sync_res.series.records.len(),
+                   async_res.series.records.len(), "{wire}");
+        for (s, a) in sync_res.series.records.iter()
+                              .zip(&async_res.series.records) {
+            assert_records_equal(s, a, &format!("{wire} sharded"));
+        }
+        assert_eq!(sync_res.stats, async_res.stats, "{wire}");
+        assert_eq!(sync_res.goodput, async_res.goodput, "{wire}");
+        // degenerate corner: nothing is ever stale
+        let ast = async_res.async_stats.as_ref().unwrap();
+        assert_eq!(ast.stale_discarded, 0, "{wire}");
+        assert_eq!(ast.mean_staleness(), 0.0, "{wire}");
+
+        // dense store, driven manually with the runner's eval cadence
+        let env = runner::build_env(&c_async);
+        let mut dense = sim::AsyncDenseSim::new(&c_async, &env).unwrap();
+        let mut recs = vec![dense.evaluate(0).unwrap()];
+        for k in 1..=c_async.steps {
+            dense.step(k).unwrap();
+            if k % c_async.eval_every == 0 || k == c_async.steps {
+                recs.push(dense.evaluate(k).unwrap());
+            }
+        }
+        assert_eq!(sync_res.series.records.len(), recs.len(), "{wire}");
+        for (s, a) in sync_res.series.records.iter().zip(&recs) {
+            assert_records_equal(s, a, &format!("{wire} dense"));
+        }
+        assert_eq!(*dense.stats(), sync_res.stats, "{wire}");
+    }
+}
+
 /// The spec-id table round-trips through the engine's framing mode.
 #[test]
 fn spec_table_matches_run_config() {

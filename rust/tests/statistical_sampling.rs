@@ -11,6 +11,9 @@
 //!   prefix of those at 2n, and lazy per-index lookups equal materialized
 //!   builds (the random-access forked-stream contract everything lazy
 //!   rests on).
+//! * **Staleness monotonicity** — under the async runtime, deepening the
+//!   dispatch pipeline (`inflight=`) strictly increases mean staleness on
+//!   a churning fleet, while goodput never exceeds one.
 
 use std::collections::HashSet;
 
@@ -114,6 +117,47 @@ fn mega_sim_occupancy_is_uniform_across_shards() {
         }
     }
     assert!(passes >= 2, "occupancy skewed in {}/3 seeds", 3 - passes);
+}
+
+/// Deeper pipelines are staler: on the diurnal-churn fleet, raising
+/// `inflight` 1 → 4 → 12 strictly increases mean staleness (more rounds
+/// overlap each buffered apply, so dispatch versions lag further behind).
+/// Majority vote over seeds absorbs scheduling noise; the goodput bound
+/// (applied bits ≤ total uplink bits) must hold in **every** run — it is
+/// an accounting identity, not a statistical tendency.
+#[test]
+fn mean_staleness_increases_with_pipeline_depth() {
+    if !gated() {
+        return;
+    }
+    let mut passes = 0;
+    for seed in [2u64, 14, 77] {
+        let mut means = Vec::new();
+        for inflight in [1usize, 4, 12] {
+            let spec = format!(
+                "diurnal-churn:clients=32,sample=0.3,async=buffered,\
+                 buffer=4,inflight={inflight},stale=inv");
+            let mut cfg = SimCfg::smoke(scenario::from_spec(&spec).unwrap());
+            cfg.steps = 400;
+            cfg.eval_every = 200;
+            cfg.seed = seed;
+            let res = pfl::sim::async_runner::run(&cfg).unwrap();
+            assert!(res.goodput <= 1.0,
+                    "seed {seed} inflight {inflight}: goodput {} > 1",
+                    res.goodput);
+            let ast = res.async_stats.as_ref().unwrap();
+            assert!(ast.applied_updates > 0,
+                    "seed {seed} inflight {inflight}: nothing applied");
+            means.push(ast.mean_staleness());
+        }
+        eprintln!("seed {seed}: mean staleness {means:?}");
+        if means.windows(2).all(|w| w[1] > w[0]) {
+            passes += 1;
+        }
+    }
+    assert!(passes >= 2,
+            "staleness not monotone in pipeline depth in {}/3 seeds",
+            3 - passes);
 }
 
 /// The forked-RNG-stream contract: profiles at fleet size n are a prefix
