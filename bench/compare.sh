@@ -1,0 +1,58 @@
+#!/usr/bin/env bash
+# Run every `pfl bench` section (round engine, megafleet shard scale,
+# SIMD kernel microbench) and compare against the committed baselines.
+#
+# Usage:
+#   bench/compare.sh            # full configuration
+#   bench/compare.sh --smoke    # CI-sized configuration
+#
+# Outputs land in bench/out/ — committed baselines are never clobbered:
+#   BENCH_round.json  BENCH_shard.json  BENCH_kernels.json  perf.md
+#
+# When committed BENCH_*.json baselines exist at the repo root, the run
+# renders a delta-per-benchmark table (perf.md) and exits non-zero if a
+# tracked headline number regressed by more than 10%. Without baselines
+# it records current numbers only. Promote a good run to baseline with:
+#   cp bench/out/BENCH_*.json .
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+SMOKE=""
+for arg in "$@"; do
+  case "$arg" in
+    --smoke) SMOKE="--smoke" ;;
+    *) echo "unknown argument: $arg (only --smoke is accepted)" >&2; exit 2 ;;
+  esac
+done
+
+OUT=bench/out
+mkdir -p "$OUT"
+
+cargo build --release
+
+COMPARE=""
+if ls BENCH_*.json >/dev/null 2>&1; then
+  COMPARE="--compare ."
+else
+  echo "no committed BENCH_*.json baselines at the repo root —" \
+       "recording current numbers only (no regression gate)"
+fi
+
+status=0
+# shellcheck disable=SC2086  # SMOKE/COMPARE are intentionally word-split
+./target/release/pfl bench $SMOKE $COMPARE \
+  --out "$OUT/BENCH_round.json" \
+  --shard-out "$OUT/BENCH_shard.json" \
+  --kernels-out "$OUT/BENCH_kernels.json" \
+  --perf-out "$OUT/perf.md" || status=$?
+
+# show the delta table even when the gate failed (CI log + artifact)
+if [ -f "$OUT/perf.md" ]; then
+  echo
+  cat "$OUT/perf.md"
+fi
+
+echo
+echo "outputs in $OUT/  (promote to baseline: cp $OUT/BENCH_*.json .)"
+exit "$status"

@@ -45,13 +45,22 @@
 //! sequential cohort loop — rows are disjoint and the arithmetic is
 //! per-row); after warmup a dense lockstep step touches the allocator
 //! zero times (asserted in `pfl bench` / `benches/perf_round_latency.rs`).
-//! The pooled local sweep requires cached static batches (the convex
-//! hot path `pfl bench` tracks); non-static backends and the uplink
-//! compression phase run the sequential cohort loop — per-client state
-//! lives in a lazy map, and compressing n small models is noise next to
-//! the gradient work. If a dense non-static workload ever becomes hot
-//! (it needs a real PJRT runtime, absent offline), give it a pooled
-//! slot-vector sweep like the pre-unification engine's.
+//! Sharded stores take pooled **per-shard** cohort sweeps: the sorted
+//! cohort partitions into contiguous per-shard spans (`shard_spans_of`)
+//! and each span runs on one worker via
+//! [`ShardedStore::par_cohort_rows`] — shards own disjoint arenas, ids
+//! run in cohort order within a span, and the ȳ reduction already uses
+//! fixed leaves, so the series stays bit-identical to the sequential
+//! loop at any pool size (pinned in `rust/tests/kernel_parity.rs`) and
+//! the CountingAlloc budgets are unchanged (workers perform exactly the
+//! sequential loop's arena growth). The pooled local sweeps require
+//! cached static batches (the convex hot path `pfl bench` tracks);
+//! non-static backends and the uplink compression phase run the
+//! sequential cohort loop — per-client state lives in a lazy map, and
+//! compressing n small models is noise next to the gradient work. If a
+//! dense non-static workload ever becomes hot (it needs a real PJRT
+//! runtime, absent offline), give it a pooled slot-vector sweep like the
+//! pre-unification engine's.
 //!
 //! ### Per-client wire state
 //! Every client's batch-RNG stream, compressor state (own RNG stream, EF
@@ -329,6 +338,9 @@ pub struct Engine<'e, S: ClientStore> {
     // reusable scratch (the hot loops are allocation-bounded)
     leaf_rows: Vec<f32>,
     leaf_spans: Vec<(u32, u32)>,
+    /// per-shard `[lo, hi)` runs of the current cohort — scratch for the
+    /// pooled per-shard sweeps on CoW stores
+    shard_spans: Vec<(u32, u32)>,
     release_scratch: Vec<u32>,
     /// lazily built full-fleet cohort for the lockstep [`Engine::step`]
     full: Vec<u32>,
@@ -436,6 +448,7 @@ impl<'e, S: ClientStore> Engine<'e, S> {
             exact_eval: fleet_n == env.n_clients(),
             leaf_rows: Vec::new(),
             leaf_spans: Vec::new(),
+            shard_spans: Vec::new(),
             release_scratch: Vec::new(),
             full: Vec::new(),
             mask_a: Vec::new(),
@@ -543,6 +556,26 @@ impl<'e, S: ClientStore> Engine<'e, S> {
                       "cohort id out of range");
     }
 
+    /// Partition a sorted cohort into maximal per-shard runs: one
+    /// `[lo, hi)` index range per distinct shard, in cohort order.
+    /// `shard_of(i) = i / shard_size` is monotonic over a sorted cohort,
+    /// so the runs are contiguous and each shard appears at most once —
+    /// the disjointness contract of
+    /// [`ShardedStore::par_cohort_rows`].
+    fn shard_spans_of(cohort: &[u32], shard_size: usize, out: &mut Vec<(u32, u32)>) {
+        out.clear();
+        let mut start = 0usize;
+        while start < cohort.len() {
+            let s = cohort[start] as usize / shard_size;
+            let mut end = start + 1;
+            while end < cohort.len() && cohort[end] as usize / shard_size == s {
+                end += 1;
+            }
+            out.push((start as u32, end as u32));
+            start = end;
+        }
+    }
+
     /// Surface the first worker-parked pooled-sweep error.
     fn take_sweep_err(&mut self) -> anyhow::Result<()> {
         match self.sweep_err.get_mut().unwrap().take() {
@@ -580,6 +613,39 @@ impl<'e, S: ClientStore> Engine<'e, S> {
                     });
                 });
                 return self.take_sweep_err();
+            }
+        }
+        // Pooled per-shard cohort sweep for CoW stores: cached static
+        // batches only (the non-static path threads per-client RNG slots
+        // and stays sequential), and only when the cohort actually spans
+        // several shards — single-shard cohorts (small fleets) keep the
+        // sequential loop. Shards own disjoint arenas and each span runs
+        // its ids in cohort order, so materialization order and
+        // arithmetic are bit-identical to the sequential loop (pinned in
+        // `rust/tests/kernel_parity.rs`).
+        if env.train_batch_cached(0).is_some() {
+            if let Some(st) = self.store.as_sharded_mut() {
+                let mut spans = std::mem::take(&mut self.shard_spans);
+                Self::shard_spans_of(cohort, st.shard_size(), &mut spans);
+                let pooled = spans.len() > 1;
+                if pooled {
+                    let err = &self.sweep_err;
+                    st.par_cohort_rows(&env.pool, cohort, &spans, &self.base, true,
+                                       |i, x| {
+                        let b = env.train_batch_cached(i % nd).expect("static batch");
+                        POOL_GRAD.with(|g| {
+                            let g = &mut *g.borrow_mut();
+                            match env.backend.grad_into(x, b, g) {
+                                Ok(()) => kernels::axpy(x, -coef, &g.grad),
+                                Err(e) => *err.lock().unwrap() = Some(e),
+                            }
+                        });
+                    });
+                }
+                self.shard_spans = spans;
+                if pooled {
+                    return self.take_sweep_err();
+                }
             }
         }
         let seed = self.seed;
@@ -890,13 +956,35 @@ impl<'e, S: ClientStore> Engine<'e, S> {
                 return;
             }
         }
-        for &i in cohort {
-            if self.anchor_is_base && self.store.row(i as usize).is_none() {
-                // x = base, anchor = base ⇒ x − a·(x − x) ≡ x bitwise
-                continue;
+        // Pooled per-shard cohort aggregation for CoW stores (the kernel
+        // is elementwise, so per-shard execution order cannot change a
+        // bit; within a shard rows still materialize in cohort order).
+        // While the anchor is still the base the step is a bitwise no-op
+        // on unmaterialized rows, so skip-missing mode reproduces the
+        // sequential loop's continue exactly. Single-shard cohorts keep
+        // the sequential loop.
+        let mut pooled = false;
+        if let Some(st) = self.store.as_sharded_mut() {
+            let mut spans = std::mem::take(&mut self.shard_spans);
+            Self::shard_spans_of(cohort, st.shard_size(), &mut spans);
+            if spans.len() > 1 {
+                let anchor = &self.anchor;
+                st.par_cohort_rows(&self.env.pool, cohort, &spans, &self.base,
+                                   !self.anchor_is_base,
+                                   |_, x| kernels::aggregation_step(x, a, anchor));
+                pooled = true;
             }
-            let x = self.store.materialize(i as usize, &self.base);
-            kernels::aggregation_step(x, a, &self.anchor);
+            self.shard_spans = spans;
+        }
+        if !pooled {
+            for &i in cohort {
+                if self.anchor_is_base && self.store.row(i as usize).is_none() {
+                    // x = base, anchor = base ⇒ x − a·(x − x) ≡ x bitwise
+                    continue;
+                }
+                let x = self.store.materialize(i as usize, &self.base);
+                kernels::aggregation_step(x, a, &self.anchor);
+            }
         }
         if S::COW && a == 1.0 && cohort.len() == self.n && !self.anchor_is_base {
             self.base.copy_from_slice(&self.anchor);

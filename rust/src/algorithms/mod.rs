@@ -156,6 +156,13 @@ impl FedEnv {
     pub fn test_batch(&self) -> &Batch {
         &self.cache.test
     }
+
+    /// Force every lazily built cache (the per-shard train batches) to
+    /// materialize now. Benchmarks call this before their timed windows so
+    /// the first measured step never pays one-time batch assembly.
+    pub fn warm_caches(&self) {
+        let _ = self.train_batch_cached(0);
+    }
 }
 
 /// Common trait: run for `steps` iterations, evaluating every `eval_every`.

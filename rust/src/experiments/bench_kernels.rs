@@ -1,0 +1,296 @@
+//! Kernel microbench — the `kernels` section of `pfl bench`
+//! (`BENCH_kernels.json`): per-kernel effective bandwidth (GB/s) at every
+//! dispatch level this host can execute, so the trajectory shows both the
+//! intrinsics-vs-scalar speedup and any regression in either path.
+//!
+//! Methodology: one vector length (4096 + 5 — deliberately *not* a lane
+//! multiple, so the intrinsic tail handling is always inside the measured
+//! loop), explicit untimed warmup before every timed window, operands
+//! routed through [`black_box`] so the dispatched call cannot be
+//! constant-folded, and mutation parameters chosen so tens of thousands
+//! of in-place applications stay finite (checked after each window — a
+//! bench that silently degenerated to NaN throughput is worse than a
+//! failed one). Bandwidth counts touched bytes per call: reads + writes
+//! of f32 lanes.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use crate::model::kernels;
+use crate::util::json::Value;
+use crate::util::meta;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct KernelBenchCfg {
+    /// vector length (a non-multiple of 8 keeps the tail path hot)
+    pub dim: usize,
+    /// timed iterations per kernel × level
+    pub iters: u64,
+    /// untimed warmup iterations before each timed window
+    pub warmup: u64,
+}
+
+impl KernelBenchCfg {
+    pub fn full() -> KernelBenchCfg {
+        KernelBenchCfg { dim: 4096 + 5, iters: 60_000, warmup: 6_000 }
+    }
+
+    /// CI-sized: same shapes, ~10× fewer iterations.
+    pub fn smoke() -> KernelBenchCfg {
+        KernelBenchCfg { iters: 6_000, warmup: 600, ..KernelBenchCfg::full() }
+    }
+}
+
+/// The five dispatched kernels, in reporting order.
+pub const KERNEL_NAMES: &[&str] =
+    &["dot", "axpy", "aggregation_step", "add_assign", "scale"];
+
+#[derive(Clone, Debug)]
+pub struct KernelBenchResult {
+    pub dim: usize,
+    pub iters: u64,
+    pub warmup: u64,
+    /// dispatch level the production kernels run at in this process
+    pub active_level: &'static str,
+    /// (kernel, level name, GB/s), levels fastest-first per kernel
+    pub rows: Vec<(&'static str, &'static str, f64)>,
+}
+
+impl KernelBenchResult {
+    pub fn gbps(&self, kernel: &str, level: &str) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|(k, l, _)| *k == kernel && *l == level)
+            .map(|&(_, _, g)| g)
+    }
+
+    /// Active-level throughput over forced-scalar throughput (1.0 when
+    /// the active level *is* scalar) — the headline the AVX2 acceptance
+    /// criterion reads.
+    pub fn speedup_vs_scalar(&self, kernel: &str) -> Option<f64> {
+        let active = self.gbps(kernel, self.active_level)?;
+        let scalar = self.gbps(kernel, "scalar")?;
+        if scalar > 0.0 {
+            Some(active / scalar)
+        } else {
+            None
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut kernels_obj = Vec::new();
+        for &name in KERNEL_NAMES {
+            let mut per_level = vec![(
+                "bytes_per_call".to_string(),
+                Value::Num(bytes_per_call(name, self.dim) as f64),
+            )];
+            for &(k, level, g) in &self.rows {
+                if k == name {
+                    per_level.push((format!("gbps_{level}"), Value::Num(g)));
+                }
+            }
+            kernels_obj.push((name.to_string(), Value::obj(per_level)));
+        }
+        let speedups = KERNEL_NAMES
+            .iter()
+            .map(|&name| {
+                (name.to_string(),
+                 self.speedup_vs_scalar(name).map_or(Value::Null, Value::Num))
+            })
+            .collect();
+        Value::obj(vec![
+            ("bench".into(), Value::Str("kernels".into())),
+            // the microbench itself is single-threaded by design
+            ("meta".into(), meta::bench_meta(1)),
+            ("config".into(),
+             Value::obj(vec![
+                 ("dim".into(), Value::Num(self.dim as f64)),
+                 ("iters".into(), Value::Num(self.iters as f64)),
+                 ("warmup".into(), Value::Num(self.warmup as f64)),
+             ])),
+            ("active_level".into(), Value::Str(self.active_level.into())),
+            ("kernels".into(), Value::obj(kernels_obj)),
+            ("speedup_active_vs_scalar".into(), Value::obj(speedups)),
+        ])
+    }
+}
+
+/// Touched f32 bytes per call: reads + writes.
+fn bytes_per_call(kernel: &str, d: usize) -> usize {
+    let f = std::mem::size_of::<f32>();
+    match kernel {
+        // read a + read b
+        "dot" => 2 * d * f,
+        // read x + read y/anchor/v + write x
+        "axpy" | "aggregation_step" | "add_assign" => 3 * d * f,
+        // read x + write x
+        "scale" => 2 * d * f,
+        _ => unreachable!("unknown kernel {kernel}"),
+    }
+}
+
+/// Untimed warmup, then a timed window; returns elapsed seconds.
+fn timed_window(iters: u64, warmup: u64, mut f: impl FnMut()) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn gbps(bytes_per_call: usize, iters: u64, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        return 0.0;
+    }
+    (bytes_per_call as f64 * iters as f64) / secs / 1e9
+}
+
+pub fn run(cfg: &KernelBenchCfg) -> anyhow::Result<KernelBenchResult> {
+    let d = cfg.dim;
+    let mut rng = Rng::new(0xBE9C);
+    let x0: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let y: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut rows: Vec<(&'static str, &'static str, f64)> = Vec::new();
+
+    for &level in kernels::available_levels() {
+        let lname = level.name();
+
+        // dot: pure — accumulate into a sink so no call can be elided
+        let mut sink = 0.0f32;
+        let dt = timed_window(cfg.iters, cfg.warmup, || {
+            sink += kernels::dot_at(level, black_box(&x0), black_box(&y));
+        });
+        anyhow::ensure!(sink.is_finite(), "dot bench diverged at {lname}");
+        rows.push(("dot", lname, gbps(bytes_per_call("dot", d), cfg.iters, dt)));
+
+        // axpy: a tiny enough that iters applications stay O(1) magnitude
+        let mut x = x0.clone();
+        let dt = timed_window(cfg.iters, cfg.warmup, || {
+            kernels::axpy_at(level, black_box(x.as_mut_slice()),
+                             black_box(1e-7f32), black_box(&y));
+        });
+        anyhow::ensure!(x.iter().all(|v| v.is_finite()),
+                        "axpy bench diverged at {lname}");
+        rows.push(("axpy", lname, gbps(bytes_per_call("axpy", d), cfg.iters, dt)));
+
+        // aggregation_step: contraction toward y — unconditionally stable
+        let mut x = x0.clone();
+        let dt = timed_window(cfg.iters, cfg.warmup, || {
+            kernels::aggregation_step_at(level, black_box(x.as_mut_slice()),
+                                         black_box(1e-7f32), black_box(&y));
+        });
+        anyhow::ensure!(x.iter().all(|v| v.is_finite()),
+                        "aggregation bench diverged at {lname}");
+        rows.push(("aggregation_step", lname,
+                   gbps(bytes_per_call("aggregation_step", d), cfg.iters, dt)));
+
+        // add_assign: grows linearly in iters — fine at ~1e5 magnitude
+        let mut acc = vec![0.0f32; d];
+        let dt = timed_window(cfg.iters, cfg.warmup, || {
+            kernels::add_assign_at(level, black_box(acc.as_mut_slice()),
+                                   black_box(&y));
+        });
+        anyhow::ensure!(acc.iter().all(|v| v.is_finite()),
+                        "add_assign bench diverged at {lname}");
+        rows.push(("add_assign", lname,
+                   gbps(bytes_per_call("add_assign", d), cfg.iters, dt)));
+
+        // scale by exactly 1.0 (runtime-opaque): bit-preserving forever
+        let mut x = x0.clone();
+        let dt = timed_window(cfg.iters, cfg.warmup, || {
+            kernels::scale_at(level, black_box(x.as_mut_slice()),
+                              black_box(1.0f32));
+        });
+        anyhow::ensure!(x.iter().all(|v| v.is_finite()),
+                        "scale bench diverged at {lname}");
+        rows.push(("scale", lname,
+                   gbps(bytes_per_call("scale", d), cfg.iters, dt)));
+    }
+
+    Ok(KernelBenchResult {
+        dim: cfg.dim,
+        iters: cfg.iters,
+        warmup: cfg.warmup,
+        active_level: kernels::active_level().name(),
+        rows,
+    })
+}
+
+pub fn run_and_write(cfg: &KernelBenchCfg, path: &str)
+                     -> anyhow::Result<KernelBenchResult> {
+    let res = run(cfg)?;
+    std::fs::write(path, res.to_json().to_string_pretty())
+        .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+    Ok(res)
+}
+
+/// Console rendering for `pfl bench`.
+pub fn print_summary(res: &KernelBenchResult) {
+    println!("  kernels microbench (d={}, {} iters/level, active: {})",
+             res.dim, res.iters, res.active_level);
+    for &name in KERNEL_NAMES {
+        let levels: Vec<String> = res
+            .rows
+            .iter()
+            .filter(|(k, _, _)| *k == name)
+            .map(|(_, l, g)| format!("{l} {g:.2} GB/s"))
+            .collect();
+        let speedup = res
+            .speedup_vs_scalar(name)
+            .map_or("n/a".to_string(), |s| format!("{s:.2}x"));
+        println!("    {name:<16} {}  (active vs scalar: {speedup})",
+                 levels.join(" | "));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> KernelBenchCfg {
+        KernelBenchCfg { dim: 123, iters: 40, warmup: 8 }
+    }
+
+    #[test]
+    fn microbench_reports_every_kernel_at_every_level() {
+        let res = run(&tiny()).unwrap();
+        let n_levels = kernels::available_levels().len();
+        assert_eq!(res.rows.len(), KERNEL_NAMES.len() * n_levels);
+        for &name in KERNEL_NAMES {
+            for &level in kernels::available_levels() {
+                let g = res.gbps(name, level.name()).unwrap();
+                assert!(g.is_finite() && g > 0.0, "{name}@{}: {g}", level.name());
+            }
+            assert!(res.speedup_vs_scalar(name).unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn json_has_meta_and_per_level_numbers() {
+        let res = run(&tiny()).unwrap();
+        let v = crate::util::json::parse(&res.to_json().to_string_pretty()).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str(), Some("kernels"));
+        let m = v.get("meta").unwrap();
+        assert!(m.get("threads").unwrap().as_usize().is_some());
+        assert!(m.get("cpu_features").unwrap().as_str().is_some());
+        assert!(m.get("git_rev").unwrap().as_str().is_some());
+        let dot = v.get("kernels").unwrap().get("dot").unwrap();
+        assert!(dot.get("bytes_per_call").unwrap().as_f64().unwrap() > 0.0);
+        let active = v.get("active_level").unwrap().as_str().unwrap();
+        assert!(dot.get(&format!("gbps_{active}")).unwrap()
+                    .as_f64().unwrap() > 0.0);
+        assert!(v.get("speedup_active_vs_scalar").unwrap()
+                    .get("dot").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn bytes_per_call_counts_reads_and_writes() {
+        assert_eq!(bytes_per_call("dot", 10), 80);
+        assert_eq!(bytes_per_call("axpy", 10), 120);
+        assert_eq!(bytes_per_call("scale", 10), 80);
+    }
+}

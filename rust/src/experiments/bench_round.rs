@@ -34,6 +34,7 @@ use crate::algorithms::{reference, FedAlgorithm as _, FedEnv, L2gd};
 use crate::sim::{self, AsyncShardedSim, FleetSim};
 use crate::util::alloc_count;
 use crate::util::json::Value;
+use crate::util::meta;
 
 /// Allocation ceiling for the fleet-sim scheduler's hot loop, per
 /// processed event (steps + arrival pushes/pops). The loop's scratch —
@@ -133,6 +134,9 @@ pub struct BenchResult {
     /// staleness-weighted updates applied across the async run — proves
     /// the throughput number actually exercised the buffered-apply path
     pub async_applied_updates: u64,
+    /// worker-pool size the measured environment ran with (recorded in
+    /// the JSON `meta` so cross-machine deltas stay interpretable)
+    pub threads: usize,
     pub final_personal_loss: f64,
 }
 
@@ -148,6 +152,7 @@ impl BenchResult {
         let opt = |v: Option<f64>| v.map_or(Value::Null, Value::Num);
         Value::obj(vec![
             ("bench".into(), Value::Str("round_engine".into())),
+            ("meta".into(), meta::bench_meta(self.threads)),
             ("config".into(), Value::obj(vec![
                 ("n_clients".into(), Value::Num(c.n_clients as f64)),
                 ("dim".into(), Value::Num(c.dim as f64)),
@@ -259,6 +264,9 @@ fn time_engine<'e>(alg: &L2gd, env: &'e FedEnv, warmup: u64, steps: u64)
 
 pub fn run(cfg: &BenchCfg) -> anyhow::Result<BenchResult> {
     let env = build_env(cfg);
+    // untimed: materialize the lazily built per-shard train batches before
+    // anything is measured (first-touch batch assembly is one-time cost)
+    env.warm_caches();
 
     // engine, identity wire (the Fig-3 configuration)
     let a_id = alg(cfg, "identity", "identity")?;
@@ -284,12 +292,17 @@ pub fn run(cfg: &BenchCfg) -> anyhow::Result<BenchResult> {
     // symmetric comparison: engine and reference both measured through the
     // identical `run` shape — ref_steps steps, evaluations at step 0 and
     // the end — so per-step evaluation cost amortizes equally on both
-    // sides of the ratio
+    // sides of the ratio. Each side gets the same short untimed warmup run
+    // first (evaluation scratch, pool spin-up), keeping the ratio fair.
+    let warm_steps = (cfg.ref_steps / 10).clamp(1, 50).min(cfg.ref_steps);
+    let _ = alg(cfg, "identity", "identity")?.run(&env, warm_steps, warm_steps)?;
     let mut a_paired = alg(cfg, "identity", "identity")?;
     let t0 = Instant::now();
     let _ = a_paired.run(&env, cfg.ref_steps, cfg.ref_steps)?;
     let engine_paired_sps = cfg.ref_steps as f64 / t0.elapsed().as_secs_f64();
 
+    let _ = reference::run_l2gd(&alg(cfg, "identity", "identity")?, &env,
+                                warm_steps, warm_steps)?;
     let a_ref = alg(cfg, "identity", "identity")?;
     let t0 = Instant::now();
     let _ = reference::run_l2gd(&a_ref, &env, cfg.ref_steps, cfg.ref_steps)?;
@@ -307,7 +320,9 @@ pub fn run(cfg: &BenchCfg) -> anyhow::Result<BenchResult> {
     sim_cfg.lambda = cfg.lambda;
     sim_cfg.eta = cfg.eta;
     let sim_env = sim::runner::build_env(&sim_cfg);
+    sim_env.warm_caches();
     let mut fsim = FleetSim::new(&sim_cfg, &sim_env)?;
+    // untimed warmup before the measured window
     fsim.run_steps(0, cfg.warmup)?;
     let counting = alloc_count::counting_enabled();
     let ev0 = fsim.stats().events;
@@ -343,7 +358,9 @@ pub fn run(cfg: &BenchCfg) -> anyhow::Result<BenchResult> {
         c.rows_per_worker = cfg.rows_per_worker;
         c.seed = cfg.seed;
         let e = sim::runner::build_env(&c);
+        e.warm_caches();
         let mut fs = FleetSim::new(&c, &e)?;
+        // untimed warmup before the measured window
         fs.run_steps(0, cfg.warmup)?;
         let ev0 = fs.stats().events;
         let t0 = Instant::now();
@@ -370,7 +387,9 @@ pub fn run(cfg: &BenchCfg) -> anyhow::Result<BenchResult> {
     a_cfg.lambda = cfg.lambda;
     a_cfg.eta = cfg.eta;
     let a_env = sim::runner::build_env(&a_cfg);
+    a_env.warm_caches();
     let mut asim = AsyncShardedSim::new(&a_cfg, &a_env)?;
+    // untimed warmup before the measured window
     asim.run_steps(0, cfg.warmup)?;
     let ev0 = asim.stats().events;
     let before = alloc_count::allocations();
@@ -396,6 +415,7 @@ pub fn run(cfg: &BenchCfg) -> anyhow::Result<BenchResult> {
 
     Ok(BenchResult {
         cfg: cfg.clone(),
+        threads: env.pool.size(),
         engine_steps_per_sec: engine_sps,
         engine_natural_steps_per_sec: natural_sps,
         engine_paired_steps_per_sec: engine_paired_sps,
@@ -469,6 +489,8 @@ impl ShardBenchCfg {
 #[derive(Clone, Debug)]
 pub struct ShardBenchResult {
     pub cfg: ShardBenchCfg,
+    /// worker-pool size of the measured environment (JSON `meta`)
+    pub threads: usize,
     pub fleet_size: u64,
     /// scheduler events/sec over the measured window
     pub events_per_sec: f64,
@@ -491,6 +513,7 @@ impl ShardBenchResult {
         let opt = |v: Option<f64>| v.map_or(Value::Null, Value::Num);
         Value::obj(vec![
             ("bench".into(), Value::Str("sharded_cohort_engine".into())),
+            ("meta".into(), meta::bench_meta(self.threads)),
             ("config".into(), Value::obj(vec![
                 ("scenario".into(), Value::Str(self.cfg.scenario.clone())),
                 ("steps".into(), Value::Num(self.cfg.steps as f64)),
@@ -531,7 +554,9 @@ pub fn run_shard(cfg: &ShardBenchCfg) -> anyhow::Result<ShardBenchResult> {
     sim_cfg.rows_per_worker = cfg.rows_per_worker;
     sim_cfg.seed = cfg.seed;
     let env = sim::runner::build_env(&sim_cfg);
+    env.warm_caches();
     let mut fsim = FleetSim::new(&sim_cfg, &env)?;
+    // untimed warmup before the measured window
     fsim.run_steps(0, cfg.warmup)?;
     let counting = alloc_count::counting_enabled();
     let ev0 = fsim.stats().events;
@@ -558,6 +583,7 @@ pub fn run_shard(cfg: &ShardBenchCfg) -> anyhow::Result<ShardBenchResult> {
                     "occupancy exceeds touched clients");
     Ok(ShardBenchResult {
         cfg: cfg.clone(),
+        threads: env.pool.size(),
         fleet_size,
         events_per_sec: events as f64 / dt,
         allocs_per_event: counting.then(|| allocs as f64 / events as f64),
@@ -606,6 +632,10 @@ mod tests {
         assert!(res.sim_allocs_per_event.is_none());
         let v = res.to_json();
         assert_eq!(v.get("bench").unwrap().as_str(), Some("round_engine"));
+        let m = v.get("meta").unwrap();
+        assert!(m.get("threads").unwrap().as_usize().unwrap() >= 1);
+        assert!(m.get("cpu_features").unwrap().as_str().is_some());
+        assert!(m.get("git_rev").unwrap().as_str().is_some());
         assert!(v.get("speedup_vs_reference").unwrap().as_f64().unwrap() > 0.0);
         let s = v.get("sim_scheduler").unwrap();
         assert_eq!(s.get("scenario").unwrap().as_str(), Some("straggler-heavy"));
@@ -649,6 +679,8 @@ mod tests {
         let v = res.to_json();
         assert_eq!(v.get("bench").unwrap().as_str(),
                    Some("sharded_cohort_engine"));
+        assert!(v.get("meta").unwrap().get("threads").unwrap()
+                 .as_usize().unwrap() >= 1);
         let text = v.to_string_pretty();
         let parsed = crate::util::json::parse(&text).unwrap();
         assert!(parsed.get("events_per_sec").unwrap().as_f64().unwrap() > 0.0);

@@ -4,9 +4,11 @@
 //! versions that print the paper's rows/series; `pfl repro <id>` runs the
 //! full configuration and writes CSVs under `results/`.
 
+pub mod bench_kernels;
 pub mod bench_round;
 pub mod dnn;
 pub mod fig2;
 pub mod fig3;
 pub mod fig78;
+pub mod perf_compare;
 pub mod table1;

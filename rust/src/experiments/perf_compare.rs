@@ -1,0 +1,441 @@
+//! `pfl bench --compare <baseline>` — delta-per-benchmark reporting.
+//!
+//! Compares the JSON the current bench run just emitted against a
+//! committed baseline set (`BENCH_round.json` / `BENCH_shard.json` /
+//! `BENCH_kernels.json`), renders a markdown table (`perf.md`) with one
+//! row per benchmark, and fails the run when any **tracked** headline
+//! number regresses by more than [`REGRESSION_TOLERANCE`].
+//!
+//! Tracked metrics (the numbers CI guards):
+//!
+//! * round — `engine.steps_per_sec`, `sim_scheduler.events_per_sec`,
+//!   `async_scheduler.events_per_sec`
+//! * shard — `events_per_sec` (megafleet events/sec)
+//! * kernels — per-kernel GB/s at the *current* active dispatch level
+//!
+//! Everything else in the files (reference loop, natural wire, per-level
+//! kernel numbers, sim_algorithms) is reported informationally — visible
+//! drift, but machine differences there don't fail CI. A baseline file
+//! that predates a section (or was recorded at a different CPU feature
+//! level) simply yields blank baseline cells: comparison never demands
+//! history that doesn't exist.
+
+use crate::util::json::{self, Value};
+
+/// A tracked metric may drop this fraction below baseline before the
+/// comparison fails (bench noise on shared CI runners is real; a genuine
+/// perf bug is rarely subtle).
+pub const REGRESSION_TOLERANCE: f64 = 0.10;
+
+/// The three benchmark files a baseline set can carry. Any of them may be
+/// absent — older baselines predate newer sections.
+#[derive(Debug, Default)]
+pub struct BaselineSet {
+    pub round: Option<Value>,
+    pub shard: Option<Value>,
+    pub kernels: Option<Value>,
+    /// where the set was loaded from, for the report header
+    pub source: String,
+}
+
+impl BaselineSet {
+    /// Load from a path that is either a directory holding the standard
+    /// `BENCH_*.json` names, or one of the files (its siblings are picked
+    /// up from the same directory). Individual files are slotted by their
+    /// `"bench"` tag, so renamed baselines still land in the right spot.
+    pub fn load(path: &str) -> anyhow::Result<BaselineSet> {
+        let p = std::path::Path::new(path);
+        anyhow::ensure!(p.exists(), "baseline path `{path}` does not exist");
+        let dir = if p.is_dir() {
+            p.to_path_buf()
+        } else {
+            p.parent()
+                .filter(|d| !d.as_os_str().is_empty())
+                .map(|d| d.to_path_buf())
+                .unwrap_or_else(|| std::path::PathBuf::from("."))
+        };
+        let mut set = BaselineSet { source: path.to_string(), ..Default::default() };
+        for name in ["BENCH_round.json", "BENCH_shard.json", "BENCH_kernels.json"] {
+            if let Ok(text) = std::fs::read_to_string(dir.join(name)) {
+                set.slot(json::parse(&text).map_err(|e| {
+                    anyhow::anyhow!("baseline {name}: {e}")
+                })?);
+            }
+        }
+        if p.is_file() {
+            let text = std::fs::read_to_string(p)
+                .map_err(|e| anyhow::anyhow!("baseline {path}: {e}"))?;
+            set.slot(json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("baseline {path}: {e}"))?);
+        }
+        anyhow::ensure!(
+            set.round.is_some() || set.shard.is_some() || set.kernels.is_some(),
+            "no BENCH_*.json baselines found at `{path}`"
+        );
+        Ok(set)
+    }
+
+    /// Place a parsed document by its `"bench"` tag.
+    fn slot(&mut self, v: Value) {
+        match v.get("bench").and_then(Value::as_str) {
+            Some("round_engine") => self.round = Some(v),
+            Some("sharded_cohort_engine") => self.shard = Some(v),
+            Some("kernels") => self.kernels = Some(v),
+            _ => {}
+        }
+    }
+}
+
+/// One comparison row: a metric in both (or either) run.
+#[derive(Clone, Debug)]
+pub struct MetricRow {
+    pub section: &'static str,
+    pub name: String,
+    pub baseline: Option<f64>,
+    pub current: Option<f64>,
+    /// tracked rows participate in the regression gate
+    pub tracked: bool,
+}
+
+impl MetricRow {
+    /// Fractional change vs baseline (`+0.05` = 5% faster); `None` when
+    /// either side is missing or the baseline is non-positive.
+    pub fn delta(&self) -> Option<f64> {
+        match (self.baseline, self.current) {
+            (Some(b), Some(c)) if b > 0.0 => Some(c / b - 1.0),
+            _ => None,
+        }
+    }
+
+    /// A tracked row that dropped more than `tol` below its baseline.
+    pub fn regressed(&self, tol: f64) -> bool {
+        self.tracked && self.delta().is_some_and(|d| d < -tol)
+    }
+}
+
+/// The full comparison: rows plus the metadata of both sides.
+#[derive(Debug)]
+pub struct Comparison {
+    pub rows: Vec<MetricRow>,
+    pub baseline_source: String,
+    pub baseline_meta: String,
+    pub current_meta: String,
+}
+
+impl Comparison {
+    pub fn regressions(&self) -> Vec<&MetricRow> {
+        self.rows
+            .iter()
+            .filter(|r| r.regressed(REGRESSION_TOLERANCE))
+            .collect()
+    }
+
+    /// Err (one line per offending metric) when a tracked headline
+    /// regressed beyond tolerance — this is what flips CI red.
+    pub fn check(&self) -> anyhow::Result<()> {
+        let bad = self.regressions();
+        if bad.is_empty() {
+            return Ok(());
+        }
+        let lines: Vec<String> = bad
+            .iter()
+            .map(|r| {
+                format!(
+                    "{}/{} {} (baseline {}, current {})",
+                    r.section,
+                    r.name,
+                    fmt_delta(r.delta()),
+                    fmt_num(r.baseline),
+                    fmt_num(r.current)
+                )
+            })
+            .collect();
+        anyhow::bail!(
+            "tracked perf regression beyond {:.0}%: {}",
+            REGRESSION_TOLERANCE * 100.0,
+            lines.join("; ")
+        )
+    }
+
+    /// Render the delta table as markdown (`perf.md`).
+    pub fn to_markdown(&self) -> String {
+        let mut md = String::from("# pfl bench comparison\n\n");
+        md.push_str(&format!("- baseline: `{}` — {}\n",
+                             self.baseline_source, self.baseline_meta));
+        md.push_str(&format!("- current: {}\n", self.current_meta));
+        md.push_str(&format!(
+            "- gate: tracked metrics may not drop more than {:.0}% below \
+             baseline\n\n",
+            REGRESSION_TOLERANCE * 100.0
+        ));
+        md.push_str("| section | benchmark | baseline | current | delta | tracked |\n");
+        md.push_str("|---|---|---:|---:|---:|:---:|\n");
+        for r in &self.rows {
+            let mark = if r.regressed(REGRESSION_TOLERANCE) {
+                " ⚠"
+            } else {
+                ""
+            };
+            md.push_str(&format!(
+                "| {} | {} | {} | {} | {}{} | {} |\n",
+                r.section,
+                r.name,
+                fmt_num(r.baseline),
+                fmt_num(r.current),
+                fmt_delta(r.delta()),
+                mark,
+                if r.tracked { "yes" } else { "" }
+            ));
+        }
+        md.push('\n');
+        let bad = self.regressions();
+        if bad.is_empty() {
+            md.push_str("**OK** — no tracked metric regressed beyond tolerance.\n");
+        } else {
+            md.push_str(&format!(
+                "**REGRESSION** — {} tracked metric(s) beyond tolerance: {}\n",
+                bad.len(),
+                bad.iter()
+                    .map(|r| format!("{}/{}", r.section, r.name))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ));
+        }
+        md
+    }
+}
+
+fn fmt_num(v: Option<f64>) -> String {
+    match v {
+        None => "—".into(),
+        Some(x) if x.abs() >= 1000.0 => format!("{x:.0}"),
+        Some(x) => format!("{x:.3}"),
+    }
+}
+
+fn fmt_delta(d: Option<f64>) -> String {
+    match d {
+        None => "—".into(),
+        Some(d) => format!("{:+.1}%", d * 100.0),
+    }
+}
+
+/// Number at a dotted path into nested JSON objects.
+fn num_at(v: Option<&Value>, path: &str) -> Option<f64> {
+    let mut cur = v?;
+    for key in path.split('.') {
+        cur = cur.get(key)?;
+    }
+    cur.as_f64()
+}
+
+/// One-line description of a bench document's `meta` block.
+fn meta_line(v: Option<&Value>) -> String {
+    let Some(m) = v.and_then(|v| v.get("meta")) else {
+        return "no metadata recorded".into();
+    };
+    let s = |k: &str| m.get(k).and_then(Value::as_str).unwrap_or("?").to_string();
+    let threads = m
+        .get("threads")
+        .and_then(Value::as_usize)
+        .map_or("?".into(), |t| t.to_string());
+    format!("git {}, {} threads, kernels {}",
+            s("git_rev"), threads, s("cpu_features"))
+}
+
+/// Build the comparison from the baseline set and the three documents the
+/// current run just produced (pass what ran; `None` skips the section).
+pub fn compare(
+    baseline: &BaselineSet,
+    round: Option<&Value>,
+    shard: Option<&Value>,
+    kernels: Option<&Value>,
+) -> Comparison {
+    let mut rows = Vec::new();
+    let mut row = |section: &'static str, name: &str,
+                   b: Option<&Value>, c: Option<&Value>,
+                   path: &str, tracked: bool,
+                   rows: &mut Vec<MetricRow>| {
+        let baseline = num_at(b, path);
+        let current = num_at(c, path);
+        if baseline.is_some() || current.is_some() {
+            rows.push(MetricRow {
+                section,
+                name: name.to_string(),
+                baseline,
+                current,
+                tracked,
+            });
+        }
+    };
+
+    let (b, c) = (baseline.round.as_ref(), round);
+    for (path, tracked) in [
+        ("engine.steps_per_sec", true),
+        ("sim_scheduler.events_per_sec", true),
+        ("async_scheduler.events_per_sec", true),
+        ("engine_natural.steps_per_sec", false),
+        ("engine_paired.steps_per_sec", false),
+        ("reference.steps_per_sec", false),
+        ("speedup_vs_reference", false),
+        ("sim_algorithms.fedavg", false),
+        ("sim_algorithms.fedopt", false),
+    ] {
+        row("round", path, b, c, path, tracked, &mut rows);
+    }
+
+    let (b, c) = (baseline.shard.as_ref(), shard);
+    for (path, tracked) in [
+        ("events_per_sec", true),
+        ("resident_bytes_per_device", false),
+        ("touched_clients", false),
+    ] {
+        row("shard", path, b, c, path, tracked, &mut rows);
+    }
+
+    let (b, c) = (baseline.kernels.as_ref(), kernels);
+    // tracked at the level the *current* run dispatches to; a baseline from
+    // a different machine simply has no matching key and the row degrades
+    // to informational (regressed() needs both sides)
+    let active = c
+        .and_then(|v| v.get("active_level"))
+        .and_then(Value::as_str)
+        .unwrap_or("scalar")
+        .to_string();
+    for kernel in super::bench_kernels::KERNEL_NAMES {
+        let path = format!("kernels.{kernel}.gbps_{active}");
+        row("kernels", &path["kernels.".len()..], b, c, &path, true, &mut rows);
+        if active != "scalar" {
+            let spath = format!("kernels.{kernel}.gbps_scalar");
+            row("kernels", &spath["kernels.".len()..], b, c, &spath, false,
+                &mut rows);
+        }
+        let sp = format!("speedup_active_vs_scalar.{kernel}");
+        row("kernels", &format!("{kernel}.speedup_vs_scalar"), b, c, &sp,
+            false, &mut rows);
+    }
+
+    Comparison {
+        rows,
+        baseline_source: baseline.source.clone(),
+        baseline_meta: meta_line(
+            baseline.round.as_ref()
+                .or_else(|| baseline.kernels.as_ref())
+                .or_else(|| baseline.shard.as_ref()),
+        ),
+        current_meta: meta_line(kernels.or(round).or(shard)),
+    }
+}
+
+/// Write `perf.md` and return the comparison for the regression gate.
+pub fn write_markdown(cmp: &Comparison, path: &str) -> anyhow::Result<()> {
+    std::fs::write(path, cmp.to_markdown())
+        .map_err(|e| anyhow::anyhow!("write {path}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(bench: &str, pairs: &[(&str, Value)]) -> Value {
+        let mut obj = vec![("bench".to_string(), Value::Str(bench.into()))];
+        obj.extend(pairs.iter().map(|(k, v)| (k.to_string(), v.clone())));
+        Value::obj(obj)
+    }
+
+    fn round_doc(steps_per_sec: f64) -> Value {
+        doc("round_engine", &[
+            ("engine", Value::obj(vec![
+                ("steps_per_sec".into(), Value::Num(steps_per_sec)),
+            ])),
+            ("sim_scheduler", Value::obj(vec![
+                ("events_per_sec".into(), Value::Num(500.0)),
+            ])),
+            ("async_scheduler", Value::obj(vec![
+                ("events_per_sec".into(), Value::Num(400.0)),
+            ])),
+            ("meta", Value::obj(vec![
+                ("threads".into(), Value::Num(4.0)),
+                ("cpu_features".into(), Value::Str("avx2".into())),
+                ("git_rev".into(), Value::Str("abc1234".into())),
+            ])),
+        ])
+    }
+
+    #[test]
+    fn regression_beyond_tolerance_fails_the_gate() {
+        let base = BaselineSet {
+            round: Some(round_doc(1000.0)),
+            source: "test".into(),
+            ..Default::default()
+        };
+        // 20% slower on a tracked headline
+        let cur = round_doc(800.0);
+        let cmp = compare(&base, Some(&cur), None, None);
+        assert_eq!(cmp.regressions().len(), 1);
+        let err = cmp.check().unwrap_err().to_string();
+        assert!(err.contains("engine.steps_per_sec"), "{err}");
+        assert!(cmp.to_markdown().contains("REGRESSION"));
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let base = BaselineSet {
+            round: Some(round_doc(1000.0)),
+            source: "test".into(),
+            ..Default::default()
+        };
+        let cur = round_doc(950.0); // -5% < 10% tolerance
+        let cmp = compare(&base, Some(&cur), None, None);
+        assert!(cmp.check().is_ok());
+        let md = cmp.to_markdown();
+        assert!(md.contains("| round | engine.steps_per_sec |"), "{md}");
+        assert!(md.contains("-5.0%"), "{md}");
+        assert!(md.contains("**OK**"), "{md}");
+    }
+
+    #[test]
+    fn missing_sections_degrade_to_blank_cells() {
+        // baseline has only the round file; current also ran kernels
+        let base = BaselineSet {
+            round: Some(round_doc(1000.0)),
+            source: "test".into(),
+            ..Default::default()
+        };
+        let kernels = doc("kernels", &[
+            ("active_level", Value::Str("avx2".into())),
+            ("kernels", Value::obj(vec![("dot".into(), Value::obj(vec![
+                ("gbps_avx2".into(), Value::Num(30.0)),
+                ("gbps_scalar".into(), Value::Num(10.0)),
+            ]))])),
+            ("speedup_active_vs_scalar", Value::obj(vec![
+                ("dot".into(), Value::Num(3.0)),
+            ])),
+        ]);
+        let cur = round_doc(1000.0);
+        let cmp = compare(&base, Some(&cur), None, Some(&kernels));
+        // kernel rows exist with no baseline ⇒ informational, not failing
+        let dot = cmp.rows.iter()
+            .find(|r| r.section == "kernels" && r.name == "dot.gbps_avx2")
+            .unwrap();
+        assert!(dot.tracked && dot.baseline.is_none() && !dot.regressed(0.1));
+        assert!(cmp.check().is_ok());
+        assert!(cmp.to_markdown().contains("| kernels | dot.gbps_avx2 | — |"));
+    }
+
+    #[test]
+    fn baseline_loader_slots_by_bench_tag() {
+        let dir = std::env::temp_dir().join("pfl_perf_compare_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_round.json");
+        std::fs::write(&path, round_doc(1234.0).to_string_pretty()).unwrap();
+        let set = BaselineSet::load(dir.to_str().unwrap()).unwrap();
+        assert!(set.round.is_some());
+        assert!(set.shard.is_none() && set.kernels.is_none());
+        // loading via the file path finds the same sibling set
+        let set2 = BaselineSet::load(path.to_str().unwrap()).unwrap();
+        assert!(set2.round.is_some());
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(BaselineSet::load("/no/such/dir").is_err());
+    }
+}

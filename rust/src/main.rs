@@ -24,7 +24,8 @@
 use pfl::algorithms::FedAlgorithm as _;
 use pfl::config::TrainConfig;
 use pfl::coordinator;
-use pfl::experiments::{bench_round, dnn, fig2, fig3, fig78, table1};
+use pfl::experiments::{bench_kernels, bench_round, dnn, fig2, fig3, fig78,
+                       perf_compare, table1};
 use pfl::runtime::XlaRuntime;
 use pfl::sim;
 use pfl::theory::Consts;
@@ -87,8 +88,13 @@ commands:
                vs seed-semantics baseline, zero-alloc assertion, emits
                BENCH_round.json — plus the million-device sharded-engine
                scale section (events/sec, resident-bytes/device, emits
-               BENCH_shard.json)   [--smoke] [--steps N] [--out file]
-               [--shard-out file]
+               BENCH_shard.json) and the SIMD kernel microbench (per-kernel
+               GB/s at every dispatch level, emits BENCH_kernels.json).
+               --compare <baseline file|dir> renders a delta table (perf.md)
+               against committed BENCH_*.json and fails on >10% regression
+               of tracked headline numbers (see bench/compare.sh).
+               [--smoke] [--steps N] [--out file] [--shard-out file]
+               [--kernels-out file] [--compare path] [--perf-out file]
   sim          discrete-event fleet simulation of the Fig-3 config under
                scenario presets (partial participation, churn, stragglers,
                byte-accurate wire frames, million-device megafleet presets
@@ -403,6 +409,35 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                           allocator absent)"),
     }
     println!("wrote {shard_out}");
+
+    // kernels microbench: per-kernel effective GB/s at every runtime
+    // dispatch level (avx2/sse2/scalar as available on this host)
+    let kcfg = if args.flag("smoke") {
+        bench_kernels::KernelBenchCfg::smoke()
+    } else {
+        bench_kernels::KernelBenchCfg::full()
+    };
+    let kernels_out = args.str_or("kernels-out", "BENCH_kernels.json");
+    eprintln!("kernels microbench: d={} ({} iters + {} warmup per level)",
+              kcfg.dim, kcfg.iters, kcfg.warmup);
+    let kres = bench_kernels::run_and_write(&kcfg, &kernels_out)?;
+    bench_kernels::print_summary(&kres);
+    println!("wrote {kernels_out}");
+
+    // delta report against a committed baseline set; a tracked headline
+    // more than 10% below baseline fails the whole command (CI gate)
+    if let Some(baseline) = args.get("compare") {
+        let set = perf_compare::BaselineSet::load(baseline)?;
+        let (rj, sj, kj) = (res.to_json(), sres.to_json(), kres.to_json());
+        let cmp = perf_compare::compare(&set, Some(&rj), Some(&sj), Some(&kj));
+        let perf_out = args.str_or("perf-out", "perf.md");
+        perf_compare::write_markdown(&cmp, &perf_out)?;
+        println!("wrote {perf_out}");
+        cmp.check()?;
+        println!("perf gate: OK — no tracked metric more than {:.0}% below \
+                  baseline",
+                 perf_compare::REGRESSION_TOLERANCE * 100.0);
+    }
     Ok(())
 }
 

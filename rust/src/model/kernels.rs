@@ -1,102 +1,553 @@
-//! 8-lane unrolled f32 kernels written for reliable autovectorization.
+//! Runtime-dispatched SIMD f32 kernels with scalar bit-exactness oracles.
 //!
-//! Every loop body is shaped so LLVM's loop vectorizer maps it onto one
-//! `<8 x f32>` operation per iteration (fixed-width inner loops over
-//! `chunks_exact(8)`, independent lanes, no cross-lane reduction inside
-//! the hot loop). The elementwise kernels ([`axpy`], [`aggregation_step`],
-//! [`add_assign`], [`scale`]) are **bit-identical** to their scalar
-//! equivalents — each output element depends only on the same-index
-//! inputs, so unrolling cannot reassociate anything. [`dot`] carries 8
-//! independent accumulators and therefore rounds differently from a
-//! strictly sequential sum; callers that need sequential-bit-exact sums
-//! should not use it (nothing in the training path does — the gradient
-//! dot products were never compared bitwise across layouts).
+//! The hot kernels ([`dot`], [`axpy`], [`aggregation_step`], [`add_assign`],
+//! [`scale`]) no longer rely on LLVM autovectorization: on x86-64 they
+//! dispatch at runtime to hand-written AVX2 intrinsics (detected via
+//! `is_x86_feature_detected!`) with an SSE2 path as the baseline-ABI
+//! fallback; every other architecture takes the portable [`scalar`] path.
+//! The dispatch decision is made once per process ([`active_level`]) and
+//! `PFL_FORCE_SCALAR_KERNELS=1` forces the scalar path regardless of
+//! hardware — the escape hatch for A/B timing and for debugging a
+//! suspected intrinsics bug.
+//!
+//! Bit-exactness contract: the previous 8-lane autovectorizable forms are
+//! retained verbatim in [`scalar`] as oracles, and **every intrinsic path
+//! is bit-identical to them**. The elementwise kernels are trivially so
+//! (each output element depends only on same-index inputs, so the vector
+//! width cannot reassociate anything). `dot` carries 8 independent
+//! accumulators; the AVX2 path keeps exactly one 8-lane accumulator whose
+//! lane `l` sees the same multiply/add sequence as the oracle's `acc[l]`,
+//! uses separate mul+add (never FMA — fused rounding would diverge), and
+//! reduces the lanes in the oracle's exact tree order; the SSE2 path
+//! splits the same 8 accumulators across two 4-lane registers over 8-wide
+//! blocks. Golden series (`rust/tests/golden/`) are therefore unchanged by
+//! dispatch level, and `rust/tests/kernel_parity.rs` pins every kernel ×
+//! every available level bitwise. As before, `dot` rounds differently
+//! from a strictly sequential fold; nothing in the training path compares
+//! sums bitwise across layouts.
 
-// fixed-width index loops over `chunks_exact` blocks are the
-// autovectorization idiom; iterator rewrites obscure the lane structure
+// fixed-width index loops over `chunks_exact` blocks (and intrinsic tail
+// loops) are the lane-structure idiom; iterator rewrites obscure it
 #![allow(clippy::needless_range_loop)]
+
+use std::sync::OnceLock;
 
 const LANES: usize = 8;
 
-/// Dot product with 8 independent accumulators (vectorizes to one FMA-free
-/// multiply-add per lane; ~4-6× the throughput of the naive sequential
-/// fold at logreg dimensions).
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let split = a.len() - a.len() % LANES;
-    let mut acc = [0.0f32; LANES];
-    for (xa, xb) in a[..split].chunks_exact(LANES).zip(b[..split].chunks_exact(LANES)) {
-        for l in 0..LANES {
-            acc[l] += xa[l] * xb[l];
+/// Portable 8-lane unrolled forms — the bit-exactness oracles the
+/// intrinsic paths are pinned against, and the production path on
+/// non-x86-64 targets (each loop body still autovectorizes; on aarch64
+/// LLVM maps it onto NEON). Kept verbatim from the pre-dispatch kernels.
+pub mod scalar {
+    use super::LANES;
+
+    /// Dot product with 8 independent accumulators and a fixed reduction
+    /// tree (vectorizes to one FMA-free multiply-add per lane).
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let split = a.len() - a.len() % LANES;
+        let mut acc = [0.0f32; LANES];
+        for (xa, xb) in a[..split].chunks_exact(LANES).zip(b[..split].chunks_exact(LANES)) {
+            for l in 0..LANES {
+                acc[l] += xa[l] * xb[l];
+            }
+        }
+        let mut s = ((acc[0] + acc[4]) + (acc[2] + acc[6]))
+            + ((acc[1] + acc[5]) + (acc[3] + acc[7]));
+        for (xa, xb) in a[split..].iter().zip(&b[split..]) {
+            s += xa * xb;
+        }
+        s
+    }
+
+    /// In-place `x ← x + a·y`. Elementwise ⇒ bit-identical to the scalar
+    /// loop.
+    pub fn axpy(x: &mut [f32], a: f32, y: &[f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let split = x.len() - x.len() % LANES;
+        let (cx, rx) = x.split_at_mut(split);
+        for (xs, ys) in cx.chunks_exact_mut(LANES).zip(y[..split].chunks_exact(LANES)) {
+            for l in 0..LANES {
+                xs[l] += a * ys[l];
+            }
+        }
+        for (xi, yi) in rx.iter_mut().zip(&y[split..]) {
+            *xi += a * yi;
         }
     }
-    let mut s = ((acc[0] + acc[4]) + (acc[2] + acc[6]))
-        + ((acc[1] + acc[5]) + (acc[3] + acc[7]));
-    for (xa, xb) in a[split..].iter().zip(&b[split..]) {
-        s += xa * xb;
+
+    /// In-place aggregation step (Algorithm 1, ξ = 1):
+    /// `x ← x − a·(x − anchor)` ≡ `x ← (1−a)·x + a·anchor`.
+    pub fn aggregation_step(x: &mut [f32], a: f32, anchor: &[f32]) {
+        debug_assert_eq!(x.len(), anchor.len());
+        let split = x.len() - x.len() % LANES;
+        let (cx, rx) = x.split_at_mut(split);
+        for (xs, ms) in cx.chunks_exact_mut(LANES).zip(anchor[..split].chunks_exact(LANES)) {
+            for l in 0..LANES {
+                xs[l] -= a * (xs[l] - ms[l]);
+            }
+        }
+        for (xi, mi) in rx.iter_mut().zip(&anchor[split..]) {
+            *xi -= a * (*xi - mi);
+        }
     }
-    s
+
+    /// In-place `acc ← acc + v` (the tree-reduction combine).
+    pub fn add_assign(acc: &mut [f32], v: &[f32]) {
+        debug_assert_eq!(acc.len(), v.len());
+        let split = acc.len() - acc.len() % LANES;
+        let (ca, ra) = acc.split_at_mut(split);
+        for (xs, vs) in ca.chunks_exact_mut(LANES).zip(v[..split].chunks_exact(LANES)) {
+            for l in 0..LANES {
+                xs[l] += vs[l];
+            }
+        }
+        for (ai, vi) in ra.iter_mut().zip(&v[split..]) {
+            *ai += vi;
+        }
+    }
+
+    /// In-place `x ← s·x`.
+    pub fn scale(x: &mut [f32], s: f32) {
+        let split = x.len() - x.len() % LANES;
+        let (cx, rx) = x.split_at_mut(split);
+        for xs in cx.chunks_exact_mut(LANES) {
+            for l in 0..LANES {
+                xs[l] *= s;
+            }
+        }
+        for xi in rx {
+            *xi *= s;
+        }
+    }
 }
 
-/// In-place `x ← x + a·y`. Elementwise ⇒ bit-identical to the scalar loop.
-pub fn axpy(x: &mut [f32], a: f32, y: &[f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    let split = x.len() - x.len() % LANES;
-    let (cx, rx) = x.split_at_mut(split);
-    for (xs, ys) in cx.chunks_exact_mut(LANES).zip(y[..split].chunks_exact(LANES)) {
-        for l in 0..LANES {
-            xs[l] += a * ys[l];
+/// x86-64 intrinsic paths. Unaligned loads/stores throughout (the stores
+/// hand out arbitrary row offsets); bit-identity to [`scalar`] is argued
+/// per function and pinned by `rust/tests/kernel_parity.rs`.
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// AVX2 dot: one 8-lane accumulator whose lane `l` performs exactly
+    /// the oracle's `acc[l] += a[8k+l] * b[8k+l]` sequence (separate
+    /// `mul`+`add`, never FMA), then a store-and-scalar reduction in the
+    /// oracle's exact tree order, then the same sequential tail.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2 (`active_level()` /
+    /// `available_levels()` gate on `is_x86_feature_detected!("avx2")`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let split = a.len() - a.len() % 8;
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let mut k = 0usize;
+        while k < split {
+            let va = _mm256_loadu_ps(pa.add(k));
+            let vb = _mm256_loadu_ps(pb.add(k));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+            k += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut s = ((lanes[0] + lanes[4]) + (lanes[2] + lanes[6]))
+            + ((lanes[1] + lanes[5]) + (lanes[3] + lanes[7]));
+        for i in split..a.len() {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    /// SSE2 dot: the oracle's 8 accumulators split across two 4-lane
+    /// registers (`acc_lo` ≡ `acc[0..4]`, `acc_hi` ≡ `acc[4..8]`) over the
+    /// same 8-wide blocks, reduced in the same tree order. SSE2 is part of
+    /// the x86-64 baseline ABI, so this needs no feature gate.
+    pub fn dot_sse2(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let split = a.len() - a.len() % 8;
+        // Safety: in-bounds unaligned loads — `k + 8 <= split <= len`.
+        unsafe {
+            let pa = a.as_ptr();
+            let pb = b.as_ptr();
+            let mut acc_lo = _mm_setzero_ps();
+            let mut acc_hi = _mm_setzero_ps();
+            let mut k = 0usize;
+            while k < split {
+                let a_lo = _mm_loadu_ps(pa.add(k));
+                let b_lo = _mm_loadu_ps(pb.add(k));
+                acc_lo = _mm_add_ps(acc_lo, _mm_mul_ps(a_lo, b_lo));
+                let a_hi = _mm_loadu_ps(pa.add(k + 4));
+                let b_hi = _mm_loadu_ps(pb.add(k + 4));
+                acc_hi = _mm_add_ps(acc_hi, _mm_mul_ps(a_hi, b_hi));
+                k += 8;
+            }
+            let mut lanes = [0.0f32; 8];
+            _mm_storeu_ps(lanes.as_mut_ptr(), acc_lo);
+            _mm_storeu_ps(lanes.as_mut_ptr().add(4), acc_hi);
+            let mut s = ((lanes[0] + lanes[4]) + (lanes[2] + lanes[6]))
+                + ((lanes[1] + lanes[5]) + (lanes[3] + lanes[7]));
+            for i in split..a.len() {
+                s += a[i] * b[i];
+            }
+            s
         }
     }
-    for (xi, yi) in rx.iter_mut().zip(&y[split..]) {
-        *xi += a * yi;
+
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_avx2(x: &mut [f32], a: f32, y: &[f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let split = x.len() - x.len() % 8;
+        let px = x.as_mut_ptr();
+        let py = y.as_ptr();
+        let va = _mm256_set1_ps(a);
+        let mut k = 0usize;
+        while k < split {
+            let vx = _mm256_loadu_ps(px.add(k));
+            let vy = _mm256_loadu_ps(py.add(k));
+            // x + (a·y): same operation order as the oracle's
+            // `xs[l] += a * ys[l]` — no FMA
+            _mm256_storeu_ps(px.add(k), _mm256_add_ps(vx, _mm256_mul_ps(va, vy)));
+            k += 8;
+        }
+        for i in split..x.len() {
+            x[i] += a * y[i];
+        }
     }
+
+    pub fn axpy_sse2(x: &mut [f32], a: f32, y: &[f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let split = x.len() - x.len() % 4;
+        // Safety: in-bounds unaligned loads/stores; x and y are distinct
+        // slices (aliasing is ruled out by &mut).
+        unsafe {
+            let px = x.as_mut_ptr();
+            let py = y.as_ptr();
+            let va = _mm_set1_ps(a);
+            let mut k = 0usize;
+            while k < split {
+                let vx = _mm_loadu_ps(px.add(k));
+                let vy = _mm_loadu_ps(py.add(k));
+                _mm_storeu_ps(px.add(k), _mm_add_ps(vx, _mm_mul_ps(va, vy)));
+                k += 4;
+            }
+        }
+        for i in split..x.len() {
+            x[i] += a * y[i];
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn aggregation_step_avx2(x: &mut [f32], a: f32, anchor: &[f32]) {
+        debug_assert_eq!(x.len(), anchor.len());
+        let split = x.len() - x.len() % 8;
+        let px = x.as_mut_ptr();
+        let pm = anchor.as_ptr();
+        let va = _mm256_set1_ps(a);
+        let mut k = 0usize;
+        while k < split {
+            let vx = _mm256_loadu_ps(px.add(k));
+            let vm = _mm256_loadu_ps(pm.add(k));
+            // x − a·(x − m): oracle order `xs[l] -= a * (xs[l] - ms[l])`
+            let step = _mm256_mul_ps(va, _mm256_sub_ps(vx, vm));
+            _mm256_storeu_ps(px.add(k), _mm256_sub_ps(vx, step));
+            k += 8;
+        }
+        for i in split..x.len() {
+            x[i] -= a * (x[i] - anchor[i]);
+        }
+    }
+
+    pub fn aggregation_step_sse2(x: &mut [f32], a: f32, anchor: &[f32]) {
+        debug_assert_eq!(x.len(), anchor.len());
+        let split = x.len() - x.len() % 4;
+        // Safety: in-bounds unaligned loads/stores, distinct slices.
+        unsafe {
+            let px = x.as_mut_ptr();
+            let pm = anchor.as_ptr();
+            let va = _mm_set1_ps(a);
+            let mut k = 0usize;
+            while k < split {
+                let vx = _mm_loadu_ps(px.add(k));
+                let vm = _mm_loadu_ps(pm.add(k));
+                let step = _mm_mul_ps(va, _mm_sub_ps(vx, vm));
+                _mm_storeu_ps(px.add(k), _mm_sub_ps(vx, step));
+                k += 4;
+            }
+        }
+        for i in split..x.len() {
+            x[i] -= a * (x[i] - anchor[i]);
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_assign_avx2(acc: &mut [f32], v: &[f32]) {
+        debug_assert_eq!(acc.len(), v.len());
+        let split = acc.len() - acc.len() % 8;
+        let pa = acc.as_mut_ptr();
+        let pv = v.as_ptr();
+        let mut k = 0usize;
+        while k < split {
+            let va = _mm256_loadu_ps(pa.add(k));
+            let vv = _mm256_loadu_ps(pv.add(k));
+            _mm256_storeu_ps(pa.add(k), _mm256_add_ps(va, vv));
+            k += 8;
+        }
+        for i in split..acc.len() {
+            acc[i] += v[i];
+        }
+    }
+
+    pub fn add_assign_sse2(acc: &mut [f32], v: &[f32]) {
+        debug_assert_eq!(acc.len(), v.len());
+        let split = acc.len() - acc.len() % 4;
+        // Safety: in-bounds unaligned loads/stores, distinct slices.
+        unsafe {
+            let pa = acc.as_mut_ptr();
+            let pv = v.as_ptr();
+            let mut k = 0usize;
+            while k < split {
+                let va = _mm_loadu_ps(pa.add(k));
+                let vv = _mm_loadu_ps(pv.add(k));
+                _mm_storeu_ps(pa.add(k), _mm_add_ps(va, vv));
+                k += 4;
+            }
+        }
+        for i in split..acc.len() {
+            acc[i] += v[i];
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_avx2(x: &mut [f32], s: f32) {
+        let split = x.len() - x.len() % 8;
+        let px = x.as_mut_ptr();
+        let vs = _mm256_set1_ps(s);
+        let mut k = 0usize;
+        while k < split {
+            let vx = _mm256_loadu_ps(px.add(k));
+            _mm256_storeu_ps(px.add(k), _mm256_mul_ps(vx, vs));
+            k += 8;
+        }
+        for i in split..x.len() {
+            x[i] *= s;
+        }
+    }
+
+    pub fn scale_sse2(x: &mut [f32], s: f32) {
+        let split = x.len() - x.len() % 4;
+        // Safety: in-bounds unaligned loads/stores.
+        unsafe {
+            let px = x.as_mut_ptr();
+            let vs = _mm_set1_ps(s);
+            let mut k = 0usize;
+            while k < split {
+                let vx = _mm_loadu_ps(px.add(k));
+                _mm_storeu_ps(px.add(k), _mm_mul_ps(vx, vs));
+                k += 4;
+            }
+        }
+        for i in split..x.len() {
+            x[i] *= s;
+        }
+    }
+}
+
+/// Instruction-set level a kernel call executes at. Ordered fastest
+/// first; recorded as `cpu_features` in every `BENCH_*.json`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum KernelLevel {
+    /// 8-lane AVX2 intrinsics (x86-64 with runtime-detected AVX2).
+    Avx2,
+    /// 4-lane SSE2 intrinsics (the x86-64 baseline ABI).
+    Sse2,
+    /// Portable 8-lane unrolled loops (non-x86 targets, or the
+    /// `PFL_FORCE_SCALAR_KERNELS=1` escape hatch).
+    Scalar,
+}
+
+impl KernelLevel {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelLevel::Avx2 => "avx2",
+            KernelLevel::Sse2 => "sse2",
+            KernelLevel::Scalar => "scalar",
+        }
+    }
+}
+
+/// Best level the hardware supports (ignoring the escape hatch).
+#[cfg(target_arch = "x86_64")]
+fn hw_level() -> KernelLevel {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        KernelLevel::Avx2
+    } else {
+        KernelLevel::Sse2
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn hw_level() -> KernelLevel {
+    KernelLevel::Scalar
+}
+
+/// The dispatch decision as a pure function of the escape hatch — what
+/// [`active_level`] caches after reading `PFL_FORCE_SCALAR_KERNELS`.
+pub fn level_for(force_scalar: bool) -> KernelLevel {
+    if force_scalar {
+        KernelLevel::Scalar
+    } else {
+        hw_level()
+    }
+}
+
+/// True when `PFL_FORCE_SCALAR_KERNELS=1` is set.
+pub fn force_scalar_requested() -> bool {
+    std::env::var_os("PFL_FORCE_SCALAR_KERNELS").is_some_and(|v| v == "1")
+}
+
+static LEVEL: OnceLock<KernelLevel> = OnceLock::new();
+
+/// The level every dispatched kernel call runs at, decided once per
+/// process: the env escape hatch first, then feature detection. The env
+/// read and detection happen only on the first call, so the steady state
+/// is a single atomic load — the zero-allocation wire path never sees an
+/// env lookup.
+pub fn active_level() -> KernelLevel {
+    *LEVEL.get_or_init(|| level_for(force_scalar_requested()))
+}
+
+/// Every level this host can execute, fastest first. `active_level()` is
+/// always `available_levels()[0]` unless the scalar escape hatch is set.
+/// The parity tests and the kernels microbench sweep this list so one
+/// process exercises every path.
+#[cfg(target_arch = "x86_64")]
+pub fn available_levels() -> &'static [KernelLevel] {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        &[KernelLevel::Avx2, KernelLevel::Sse2, KernelLevel::Scalar]
+    } else {
+        &[KernelLevel::Sse2, KernelLevel::Scalar]
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub fn available_levels() -> &'static [KernelLevel] {
+    &[KernelLevel::Scalar]
+}
+
+#[cfg(target_arch = "x86_64")]
+mod dispatch {
+    use super::{scalar, x86, KernelLevel};
+
+    pub fn dot_at(level: KernelLevel, a: &[f32], b: &[f32]) -> f32 {
+        match level {
+            // Safety: Avx2 is only handed out by active_level() /
+            // available_levels() after runtime detection succeeded.
+            KernelLevel::Avx2 => unsafe { x86::dot_avx2(a, b) },
+            KernelLevel::Sse2 => x86::dot_sse2(a, b),
+            KernelLevel::Scalar => scalar::dot(a, b),
+        }
+    }
+
+    pub fn axpy_at(level: KernelLevel, x: &mut [f32], a: f32, y: &[f32]) {
+        match level {
+            // Safety: see dot_at.
+            KernelLevel::Avx2 => unsafe { x86::axpy_avx2(x, a, y) },
+            KernelLevel::Sse2 => x86::axpy_sse2(x, a, y),
+            KernelLevel::Scalar => scalar::axpy(x, a, y),
+        }
+    }
+
+    pub fn aggregation_step_at(level: KernelLevel, x: &mut [f32], a: f32, anchor: &[f32]) {
+        match level {
+            // Safety: see dot_at.
+            KernelLevel::Avx2 => unsafe { x86::aggregation_step_avx2(x, a, anchor) },
+            KernelLevel::Sse2 => x86::aggregation_step_sse2(x, a, anchor),
+            KernelLevel::Scalar => scalar::aggregation_step(x, a, anchor),
+        }
+    }
+
+    pub fn add_assign_at(level: KernelLevel, acc: &mut [f32], v: &[f32]) {
+        match level {
+            // Safety: see dot_at.
+            KernelLevel::Avx2 => unsafe { x86::add_assign_avx2(acc, v) },
+            KernelLevel::Sse2 => x86::add_assign_sse2(acc, v),
+            KernelLevel::Scalar => scalar::add_assign(acc, v),
+        }
+    }
+
+    pub fn scale_at(level: KernelLevel, x: &mut [f32], s: f32) {
+        match level {
+            // Safety: see dot_at.
+            KernelLevel::Avx2 => unsafe { x86::scale_avx2(x, s) },
+            KernelLevel::Sse2 => x86::scale_sse2(x, s),
+            KernelLevel::Scalar => scalar::scale(x, s),
+        }
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+mod dispatch {
+    use super::{scalar, KernelLevel};
+
+    pub fn dot_at(_level: KernelLevel, a: &[f32], b: &[f32]) -> f32 {
+        scalar::dot(a, b)
+    }
+
+    pub fn axpy_at(_level: KernelLevel, x: &mut [f32], a: f32, y: &[f32]) {
+        scalar::axpy(x, a, y);
+    }
+
+    pub fn aggregation_step_at(_level: KernelLevel, x: &mut [f32], a: f32, anchor: &[f32]) {
+        scalar::aggregation_step(x, a, anchor);
+    }
+
+    pub fn add_assign_at(_level: KernelLevel, acc: &mut [f32], v: &[f32]) {
+        scalar::add_assign(acc, v);
+    }
+
+    pub fn scale_at(_level: KernelLevel, x: &mut [f32], s: f32) {
+        scalar::scale(x, s);
+    }
+}
+
+pub use dispatch::{add_assign_at, aggregation_step_at, axpy_at, dot_at, scale_at};
+
+/// Dot product (dispatched; bit-identical to [`scalar::dot`] at every
+/// level — see the module docs for the accumulator/reduction contract).
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    dot_at(active_level(), a, b)
+}
+
+/// In-place `x ← x + a·y` (dispatched; bit-identical across levels).
+pub fn axpy(x: &mut [f32], a: f32, y: &[f32]) {
+    axpy_at(active_level(), x, a, y);
 }
 
 /// In-place aggregation step (Algorithm 1, ξ = 1):
-/// `x ← x − a·(x − anchor)` ≡ `x ← (1−a)·x + a·anchor`.
-/// Elementwise ⇒ bit-identical to the scalar loop.
+/// `x ← x − a·(x − anchor)` (dispatched; bit-identical across levels).
 pub fn aggregation_step(x: &mut [f32], a: f32, anchor: &[f32]) {
-    debug_assert_eq!(x.len(), anchor.len());
-    let split = x.len() - x.len() % LANES;
-    let (cx, rx) = x.split_at_mut(split);
-    for (xs, ms) in cx.chunks_exact_mut(LANES).zip(anchor[..split].chunks_exact(LANES)) {
-        for l in 0..LANES {
-            xs[l] -= a * (xs[l] - ms[l]);
-        }
-    }
-    for (xi, mi) in rx.iter_mut().zip(&anchor[split..]) {
-        *xi -= a * (*xi - mi);
-    }
+    aggregation_step_at(active_level(), x, a, anchor);
 }
 
-/// In-place `acc ← acc + v` (the tree-reduction combine).
+/// In-place `acc ← acc + v` (dispatched; bit-identical across levels).
 pub fn add_assign(acc: &mut [f32], v: &[f32]) {
-    debug_assert_eq!(acc.len(), v.len());
-    let split = acc.len() - acc.len() % LANES;
-    let (ca, ra) = acc.split_at_mut(split);
-    for (xs, vs) in ca.chunks_exact_mut(LANES).zip(v[..split].chunks_exact(LANES)) {
-        for l in 0..LANES {
-            xs[l] += vs[l];
-        }
-    }
-    for (ai, vi) in ra.iter_mut().zip(&v[split..]) {
-        *ai += vi;
-    }
+    add_assign_at(active_level(), acc, v);
 }
 
-/// In-place `x ← s·x`.
+/// In-place `x ← s·x` (dispatched; bit-identical across levels).
 pub fn scale(x: &mut [f32], s: f32) {
-    let split = x.len() - x.len() % LANES;
-    let (cx, rx) = x.split_at_mut(split);
-    for xs in cx.chunks_exact_mut(LANES) {
-        for l in 0..LANES {
-            xs[l] *= s;
-        }
-    }
-    for xi in rx {
-        *xi *= s;
-    }
+    scale_at(active_level(), x, s);
 }
 
 #[cfg(test)]
@@ -157,5 +608,38 @@ mod tests {
         let expect2: Vec<f32> = a.iter().map(|x| x * 0.5).collect();
         scale(&mut a, 0.5);
         assert_eq!(a, expect2);
+    }
+
+    /// Every available intrinsic level reproduces the scalar oracle dot
+    /// bit-for-bit (the full-length sweep lives in
+    /// `rust/tests/kernel_parity.rs`).
+    #[test]
+    fn every_level_matches_the_scalar_dot_oracle() {
+        for d in [9usize, 123, 1000] {
+            let (a, b) = vecs(d, 21 + d as u64);
+            let want = scalar::dot(&a, &b);
+            for &level in available_levels() {
+                let got = dot_at(level, &a, &b);
+                assert_eq!(got.to_bits(), want.to_bits(),
+                           "d={d} level={}", level.name());
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_decision_honors_the_escape_hatch() {
+        assert_eq!(level_for(true), KernelLevel::Scalar);
+        assert_eq!(level_for(false), available_levels()[0]);
+        // the cached decision is one of the executable levels
+        assert!(available_levels().contains(&active_level()));
+        assert_eq!(active_level(), level_for(force_scalar_requested()));
+    }
+
+    #[test]
+    fn level_names_are_the_bench_metadata_vocabulary() {
+        assert_eq!(KernelLevel::Avx2.name(), "avx2");
+        assert_eq!(KernelLevel::Sse2.name(), "sse2");
+        assert_eq!(KernelLevel::Scalar.name(), "scalar");
+        assert!(!available_levels().is_empty());
     }
 }

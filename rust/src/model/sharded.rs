@@ -36,6 +36,8 @@
 
 use std::collections::HashMap;
 
+use crate::util::threadpool::ThreadPool;
+
 /// One contiguous client-range shard: a compact arena of materialized rows.
 #[derive(Clone, Debug, Default)]
 struct Shard {
@@ -46,6 +48,41 @@ struct Shard {
     /// row-major arena, `ids.len() × d`
     rows: Vec<f32>,
 }
+
+impl Shard {
+    /// Copy-on-write materialization local to this shard (see
+    /// [`ShardedStore::materialize`]). Safe to run concurrently across
+    /// *different* shards — each shard's arena is independent.
+    fn materialize(&mut self, id: u32, d: usize, base: &[f32]) -> &mut [f32] {
+        let slot = match self.slot_of.get(&id) {
+            Some(&slot) => slot as usize,
+            None => {
+                let slot = self.ids.len();
+                self.ids.push(id);
+                self.slot_of.insert(id, slot as u32);
+                self.rows.extend_from_slice(base);
+                slot
+            }
+        };
+        let at = slot * d;
+        &mut self.rows[at..at + d]
+    }
+
+    /// Mutable access to an already-materialized row of this shard.
+    fn row_mut(&mut self, id: u32, d: usize) -> Option<&mut [f32]> {
+        self.slot_of.get(&id).copied().map(move |slot| {
+            let at = slot as usize * d;
+            &mut self.rows[at..at + d]
+        })
+    }
+}
+
+/// Raw-pointer wrapper so disjoint per-shard `&mut` access can cross the
+/// pool's `Sync` closure boundary (the same pattern the pool's own
+/// `scope_chunks_mut` uses over the dense matrix).
+struct ShardPtr(*mut Shard);
+unsafe impl Send for ShardPtr {}
+unsafe impl Sync for ShardPtr {}
 
 #[derive(Clone, Debug)]
 pub struct ShardedStore {
@@ -116,11 +153,7 @@ impl ShardedStore {
     pub fn row_mut(&mut self, i: usize) -> Option<&mut [f32]> {
         let d = self.d;
         let s = self.shard_of(i);
-        let sh = &mut self.shards[s];
-        sh.slot_of.get(&(i as u32)).copied().map(move |slot| {
-            let at = slot as usize * d;
-            &mut sh.rows[at..at + d]
-        })
+        self.shards[s].row_mut(i as u32, d)
     }
 
     /// Copy-on-write materialization: return client `i`'s row, copying
@@ -130,19 +163,69 @@ impl ShardedStore {
         debug_assert_eq!(base.len(), self.d);
         let d = self.d;
         let s = self.shard_of(i);
-        let sh = &mut self.shards[s];
-        let slot = match sh.slot_of.get(&(i as u32)) {
-            Some(&slot) => slot as usize,
-            None => {
-                let slot = sh.ids.len();
-                sh.ids.push(i as u32);
-                sh.slot_of.insert(i as u32, slot as u32);
-                sh.rows.extend_from_slice(base);
-                slot
+        self.shards[s].materialize(i as u32, d, base)
+    }
+
+    /// Run `f(id, row)` for every client of the sorted `cohort`, with the
+    /// per-shard runs `spans` (`[lo, hi)` index ranges into `cohort`, one
+    /// per distinct shard, in order — contiguous because `shard_of` is
+    /// monotonic over a sorted cohort) executing concurrently on `pool`.
+    ///
+    /// `materialize_missing` selects the copy-on-write behaviour: `true`
+    /// materializes absent rows from `base` first (local-sweep semantics),
+    /// `false` skips clients that still equal the base (the engine's
+    /// cached-aggregation no-op while the anchor *is* the base).
+    ///
+    /// Bit-identity to the sequential cohort loop: shards own disjoint
+    /// arenas, each span runs its ids in cohort (ascending) order on one
+    /// worker, so every shard materializes rows in exactly the order the
+    /// sequential loop would produce, and `f` only touches the row it was
+    /// handed — the result is independent of the pool size. Worker-side
+    /// allocations are the same arena/map growth the sequential loop
+    /// performs, so the CountingAlloc budgets are unchanged.
+    ///
+    /// # Panics
+    /// Debug builds assert that every span is a non-empty single-shard
+    /// range and that consecutive spans hit strictly increasing shards —
+    /// the soundness contract for handing each worker its own `&mut
+    /// Shard`.
+    pub fn par_cohort_rows(
+        &mut self,
+        pool: &ThreadPool,
+        cohort: &[u32],
+        spans: &[(u32, u32)],
+        base: &[f32],
+        materialize_missing: bool,
+        f: impl Fn(usize, &mut [f32]) + Sync,
+    ) {
+        debug_assert_eq!(base.len(), self.d);
+        debug_assert!(spans.windows(2).all(|w| {
+            w[0].1 <= w[1].0
+                && self.shard_of(cohort[w[0].0 as usize] as usize)
+                    < self.shard_of(cohort[w[1].0 as usize] as usize)
+        }), "spans must be ordered and shard-distinct");
+        let d = self.d;
+        let shard_size = self.shard_size;
+        let shards = ShardPtr(self.shards.as_mut_ptr());
+        pool.scope_for(spans.len(), |j| {
+            let (lo, hi) = spans[j];
+            let ids = &cohort[lo as usize..hi as usize];
+            debug_assert!(!ids.is_empty(), "empty span");
+            let s = ids[0] as usize / shard_size;
+            debug_assert!(ids.iter().all(|&i| i as usize / shard_size == s),
+                          "span straddles shards");
+            // Safety: each span addresses a distinct shard (debug-checked
+            // above), so this &mut aliases no other worker's; the borrow
+            // of `self.shards` outlives the scope (scope_for blocks).
+            let shard = unsafe { &mut *shards.0.add(s) };
+            for &id in ids {
+                if materialize_missing {
+                    f(id as usize, shard.materialize(id, d, base));
+                } else if let Some(row) = shard.row_mut(id, d) {
+                    f(id as usize, row);
+                }
             }
-        };
-        let at = slot * d;
-        &mut sh.rows[at..at + d]
+        });
     }
 
     /// Release one row (its client snaps back to the implicit base).
@@ -294,6 +377,71 @@ mod tests {
         let mut seen = Vec::new();
         st.for_each_row(|id, row| seen.push((id, row[0])));
         assert_eq!(seen, vec![(9, 1.0), (30, 2.0)]);
+    }
+
+    /// The parallel per-shard cohort sweep materializes the same rows, in
+    /// the same per-shard order, with the same values as the sequential
+    /// loop — at several pool sizes, with and without the skip-missing
+    /// mode.
+    #[test]
+    fn par_cohort_rows_matches_sequential_loop() {
+        let d = 5;
+        let n = 1000;
+        let base = vec![1.0f32; d];
+        let cohort: Vec<u32> = (0..n as u32).step_by(7).collect();
+        let spans = spans_of(&cohort, 8);
+        assert!(spans.len() > 1, "cohort must span several shards");
+
+        // sequential oracle: materialize + touch in cohort order
+        let mut seq = ShardedStore::new(n, d, 8);
+        for &i in &cohort {
+            let row = seq.materialize(i as usize, &base);
+            row[0] += i as f32;
+        }
+
+        for pool_size in [1usize, 2, 8] {
+            let pool = ThreadPool::new(pool_size);
+            let mut par = ShardedStore::new(n, d, 8);
+            par.par_cohort_rows(&pool, &cohort, &spans, &base, true,
+                                |i, row| row[0] += i as f32);
+            assert_eq!(par.materialized_rows(), seq.materialized_rows());
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            seq.for_each_row(|i, r| a.push((i, r.to_vec())));
+            par.for_each_row(|i, r| b.push((i, r.to_vec())));
+            assert_eq!(a, b, "pool={pool_size}: order or values diverge");
+
+            // skip-missing mode touches only already-resident rows
+            let before = par.materialized_rows();
+            let wider: Vec<u32> = (0..n as u32).step_by(3).collect();
+            let wider_spans = spans_of(&wider, 8);
+            par.par_cohort_rows(&pool, &wider, &wider_spans, &base, false,
+                                |_, row| row[1] = -3.0);
+            assert_eq!(par.materialized_rows(), before,
+                       "skip mode must not materialize");
+            for &i in &wider {
+                match par.row(i as usize) {
+                    Some(r) => assert_eq!(r[1], -3.0, "resident id {i}"),
+                    None => assert!(!cohort.contains(&i)),
+                }
+            }
+        }
+    }
+
+    /// Test-local span partition (the engine owns the production one).
+    fn spans_of(cohort: &[u32], shard_size: usize) -> Vec<(u32, u32)> {
+        let mut out = Vec::new();
+        let mut start = 0usize;
+        while start < cohort.len() {
+            let s = cohort[start] as usize / shard_size;
+            let mut end = start + 1;
+            while end < cohort.len() && cohort[end] as usize / shard_size == s {
+                end += 1;
+            }
+            out.push((start as u32, end as u32));
+            start = end;
+        }
+        out
     }
 
     #[test]

@@ -155,6 +155,14 @@ pub trait ClientStore {
     fn as_dense_mut(&mut self) -> Option<&mut ParamMatrix> {
         None
     }
+
+    /// The copy-on-write sharded store, when this store is one — the
+    /// engine's pooled per-shard cohort sweeps
+    /// ([`ShardedStore::par_cohort_rows`]) go straight over it. `None`
+    /// for dense stores.
+    fn as_sharded_mut(&mut self) -> Option<&mut ShardedStore> {
+        None
+    }
 }
 
 /// Eager dense storage: one [`ParamMatrix`] row per client.
@@ -267,6 +275,10 @@ impl ClientStore for ShardedStore {
 
     fn view<'a>(&'a self, base: &'a [f32]) -> ModelView<'a> {
         ModelView::Cow { store: self, base }
+    }
+
+    fn as_sharded_mut(&mut self) -> Option<&mut ShardedStore> {
+        Some(self)
     }
 }
 

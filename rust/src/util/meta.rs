@@ -1,0 +1,95 @@
+//! Build/run metadata stamped into every `BENCH_*.json` so perf deltas
+//! across machines and revisions stay interpretable: without the
+//! revision, a thread count, and the kernel dispatch level, a "12% faster"
+//! row could as easily be a different laptop as a different commit.
+
+use crate::model::kernels;
+use crate::util::json::Value;
+
+/// Git revision of the working tree, read straight from `.git` (the
+/// bench environments have no `git` binary on PATH guarantees): `HEAD`
+/// is either a detached sha or `ref: <branch>`, dereferenced one level
+/// through the loose ref file or `packed-refs`. Falls back to the
+/// `GITHUB_SHA` env (Actions checkouts can be packed in exotic ways),
+/// then `"unknown"` — metadata must never fail a bench run.
+pub fn git_revision() -> String {
+    let mut dir = std::env::current_dir().ok();
+    while let Some(d) = dir {
+        if d.join(".git").exists() {
+            if let Some(rev) = revision_in(&d) {
+                return rev;
+            }
+            break;
+        }
+        dir = d.parent().map(|p| p.to_path_buf());
+    }
+    std::env::var("GITHUB_SHA").unwrap_or_else(|_| "unknown".into())
+}
+
+fn revision_in(repo: &std::path::Path) -> Option<String> {
+    let head = std::fs::read_to_string(repo.join(".git/HEAD")).ok()?;
+    let head = head.trim();
+    let Some(branch_ref) = head.strip_prefix("ref: ") else {
+        // detached HEAD: the sha is right there
+        return non_empty(head);
+    };
+    if let Ok(sha) = std::fs::read_to_string(repo.join(".git").join(branch_ref)) {
+        if let Some(s) = non_empty(sha.trim()) {
+            return Some(s);
+        }
+    }
+    // loose ref absent ⇒ look the branch up in packed-refs
+    let packed = std::fs::read_to_string(repo.join(".git/packed-refs")).ok()?;
+    for line in packed.lines() {
+        if let Some(sha) = line.strip_suffix(branch_ref) {
+            if let Some(s) = non_empty(sha.trim()) {
+                return Some(s);
+            }
+        }
+    }
+    None
+}
+
+fn non_empty(s: &str) -> Option<String> {
+    if s.is_empty() {
+        None
+    } else {
+        Some(s.to_string())
+    }
+}
+
+/// The shared `meta` object every bench emitter embeds: worker threads
+/// the measured section actually ran with, the kernel dispatch level
+/// ([`kernels::active_level`] — reflects the `PFL_FORCE_SCALAR_KERNELS`
+/// escape hatch), and the git revision.
+pub fn bench_meta(threads: usize) -> Value {
+    Value::obj(vec![
+        ("threads".into(), Value::Num(threads as f64)),
+        ("cpu_features".into(),
+         Value::Str(kernels::active_level().name().into())),
+        ("git_rev".into(), Value::Str(git_revision())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_meta_has_the_three_keys() {
+        let m = bench_meta(7);
+        assert_eq!(m.get("threads").unwrap().as_usize(), Some(7));
+        let feats = m.get("cpu_features").unwrap().as_str().unwrap();
+        assert!(["avx2", "sse2", "scalar"].contains(&feats), "{feats}");
+        let rev = m.get("git_rev").unwrap().as_str().unwrap();
+        assert!(!rev.is_empty());
+    }
+
+    #[test]
+    fn git_revision_resolves_in_this_repo_or_falls_back() {
+        // under `cargo test` the CWD is the workspace root, which is a git
+        // repo — either a real sha (40 hex chars) or a declared fallback
+        let rev = git_revision();
+        assert!(rev == "unknown" || rev.len() >= 7, "suspicious rev {rev:?}");
+    }
+}

@@ -6,6 +6,7 @@ pub mod alloc_count;
 pub mod bitio;
 pub mod cli;
 pub mod json;
+pub mod meta;
 pub mod rng;
 pub mod stats;
 pub mod threadpool;

@@ -135,12 +135,26 @@ impl ThreadPool {
         ThreadPool { inner, handles, size }
     }
 
-    /// Pool sized to the machine (cores, capped at 16).
+    /// Pool sized to the machine (cores, capped at 16), unless the
+    /// `PFL_THREADS` env override pins it — the reproducibility knob
+    /// `pfl bench` records as `threads` in every `BENCH_*.json`, so perf
+    /// deltas across machines stay interpretable (and a bench can be
+    /// replayed at the baseline's width).
     pub fn default_size() -> usize {
+        if let Some(n) = Self::size_from_override(
+            std::env::var("PFL_THREADS").ok().as_deref()) {
+            return n;
+        }
         thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(4)
             .min(16)
+    }
+
+    /// `PFL_THREADS` parsing as a pure function: a positive integer wins,
+    /// anything else (unset, garbage, 0) falls through to autodetection.
+    fn size_from_override(v: Option<&str>) -> Option<usize> {
+        v.and_then(|s| s.trim().parse::<usize>().ok()).filter(|&n| n >= 1)
     }
 
     pub fn size(&self) -> usize {
@@ -354,6 +368,17 @@ impl Drop for ThreadPool {
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn thread_override_parses_positive_integers_only() {
+        assert_eq!(ThreadPool::size_from_override(Some("3")), Some(3));
+        assert_eq!(ThreadPool::size_from_override(Some(" 12 ")), Some(12));
+        assert_eq!(ThreadPool::size_from_override(Some("0")), None);
+        assert_eq!(ThreadPool::size_from_override(Some("-2")), None);
+        assert_eq!(ThreadPool::size_from_override(Some("lots")), None);
+        assert_eq!(ThreadPool::size_from_override(None), None);
+        assert!(ThreadPool::default_size() >= 1);
+    }
 
     #[test]
     fn maps_in_order() {

@@ -1,0 +1,182 @@
+//! SIMD kernel dispatch and parallel sharded sweep parity — the PR-7
+//! acceptance surface:
+//!
+//! * every intrinsic dispatch level (`avx2`/`sse2` where the host has
+//!   them) is **bit-identical** to the scalar 8-lane oracles for every
+//!   kernel, across lengths that hit the empty, sub-lane, exact-lane,
+//!   lane+tail, and large cases;
+//! * the dispatched entry points actually follow the active level, and
+//!   the `PFL_FORCE_SCALAR_KERNELS` decision logic picks scalar;
+//! * the per-shard parallel cohort sweeps are bit-identical across
+//!   worker-pool sizes and to the dense store (whose partial-cohort paths
+//!   are the pre-existing oracle).
+
+use std::sync::Arc;
+
+use pfl::algorithms::{AlgSpec, Engine, FedEnv, L2gd};
+use pfl::model::kernels::{self, scalar, KernelLevel};
+use pfl::model::{ClientStore, DenseStore, ShardedStore};
+use pfl::util::threadpool::ThreadPool;
+use pfl::util::Rng;
+
+/// Empty, below one lane, exactly one lane, lane+1, several lanes with a
+/// tail, the Fig-3 dimension, a large block, and large-with-tail.
+const LENS: &[usize] = &[1, 7, 8, 9, 63, 123, 1000, 4096 + 5];
+
+fn vecs(d: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let a = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let b = (0..d).map(|_| rng.normal_f32(0.5, 2.0)).collect();
+    (a, b)
+}
+
+fn bits(x: &[f32]) -> Vec<u32> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn every_level_matches_the_scalar_oracles_bit_for_bit() {
+    for &d in LENS {
+        let (x0, y) = vecs(d, 0xD15 + d as u64);
+        // awkward multipliers: not powers of two, nothing cancels
+        let (a, s) = (0.37f32, -1.73f32);
+        for &level in kernels::available_levels() {
+            let name = level.name();
+
+            let got = kernels::dot_at(level, &x0, &y);
+            assert_eq!(got.to_bits(), scalar::dot(&x0, &y).to_bits(),
+                       "dot d={d} level={name}");
+
+            let mut want = x0.clone();
+            scalar::axpy(&mut want, a, &y);
+            let mut x = x0.clone();
+            kernels::axpy_at(level, &mut x, a, &y);
+            assert_eq!(bits(&x), bits(&want), "axpy d={d} level={name}");
+
+            let mut want = x0.clone();
+            scalar::aggregation_step(&mut want, a, &y);
+            let mut x = x0.clone();
+            kernels::aggregation_step_at(level, &mut x, a, &y);
+            assert_eq!(bits(&x), bits(&want),
+                       "aggregation_step d={d} level={name}");
+
+            let mut want = x0.clone();
+            scalar::add_assign(&mut want, &y);
+            let mut x = x0.clone();
+            kernels::add_assign_at(level, &mut x, &y);
+            assert_eq!(bits(&x), bits(&want), "add_assign d={d} level={name}");
+
+            let mut want = x0.clone();
+            scalar::scale(&mut want, s);
+            let mut x = x0.clone();
+            kernels::scale_at(level, &mut x, s);
+            assert_eq!(bits(&x), bits(&want), "scale d={d} level={name}");
+        }
+    }
+}
+
+#[test]
+fn dispatched_entry_points_follow_the_active_level() {
+    let lvl = kernels::active_level();
+    let (x0, y) = vecs(123, 0xFACE);
+    assert_eq!(kernels::dot(&x0, &y).to_bits(),
+               kernels::dot_at(lvl, &x0, &y).to_bits());
+    let mut via_dispatch = x0.clone();
+    kernels::axpy(&mut via_dispatch, 0.21, &y);
+    let mut via_level = x0.clone();
+    kernels::axpy_at(lvl, &mut via_level, 0.21, &y);
+    assert_eq!(bits(&via_dispatch), bits(&via_level));
+}
+
+#[test]
+fn escape_hatch_decision_and_level_ordering() {
+    // the pure decision function behind PFL_FORCE_SCALAR_KERNELS=1
+    assert_eq!(kernels::level_for(true), KernelLevel::Scalar);
+    let fastest = kernels::available_levels()[0];
+    assert_eq!(kernels::level_for(false), fastest);
+    // scalar is always available, always last (it is the oracle)
+    assert_eq!(*kernels::available_levels().last().unwrap(),
+               KernelLevel::Scalar);
+}
+
+// ---------------------------------------------------------------------------
+// Parallel per-shard cohort sweeps: pool-size and store invariance
+// ---------------------------------------------------------------------------
+
+const FLEET: usize = 5000;
+const DATA_SHARDS: usize = 12;
+
+fn build_env(pool_size: usize) -> FedEnv {
+    let (data, test) =
+        pfl::data::synth::logistic_split(50 * DATA_SHARDS, 100, 16, 0.02, 77);
+    let shards = data.split_contiguous(DATA_SHARDS);
+    FedEnv::new(
+        Arc::new(pfl::runtime::NativeLogreg::new(16, 0.01, 64, 128)),
+        shards, data, test,
+        ThreadPool::new(pool_size), 77)
+}
+
+/// One fixed, deterministic driving sequence: sorted strided cohorts over
+/// the whole id space (many shard spans per sweep), hitting the local
+/// sweep, the cached aggregation (first with anchor == base — the
+/// skip-missing path — then against a materialized ȳ), and fresh rounds.
+fn drive<S: ClientStore>(eng: &mut Engine<'_, S>) {
+    let mut k = 0u64;
+    for round in 0..4usize {
+        let sampled: Vec<u32> =
+            (0..FLEET as u32).skip(round).step_by(37 + round).collect();
+        eng.step_local(&sampled).unwrap();
+        let agg: Vec<u32> = (0..FLEET as u32).step_by(29 + round).collect();
+        eng.step_aggregate_cached(&agg);
+        k += 1;
+        let arrived: Vec<u32> = sampled.iter().copied().step_by(2).collect();
+        eng.compress_uplinks(&sampled).unwrap();
+        eng.complete_fresh(k, &arrived, &sampled).unwrap();
+        eng.step_local(&arrived).unwrap();
+    }
+}
+
+#[test]
+fn parallel_sharded_sweeps_are_pool_size_and_store_invariant() {
+    let alg = L2gd::from_local_and_agg(0.4, 0.3, 0.5, FLEET,
+                                       "natural", "natural").unwrap();
+    let spec = AlgSpec::l2gd(&alg, FLEET).unwrap();
+
+    // the dense engine's partial-cohort paths are the pre-existing oracle
+    let dense_env = build_env(4);
+    let mut dense = Engine::<DenseStore>::from_spec(&spec, &dense_env, FLEET)
+        .unwrap();
+    drive(&mut dense);
+
+    let mut reference_rows: Option<Vec<Vec<u32>>> = None;
+    for pool_size in [1usize, 2, 8] {
+        let env = build_env(pool_size);
+        let mut cow = Engine::<ShardedStore>::from_spec(&spec, &env, FLEET)
+            .unwrap();
+        drive(&mut cow);
+
+        // bit-identical to the dense oracle, row by row
+        for i in 0..FLEET {
+            assert_eq!(bits(cow.row_or_base(i)), bits(dense.xs().row(i)),
+                       "row {i} diverged (pool={pool_size})");
+        }
+        // and identical wire accounting
+        assert_eq!(cow.net().total_bits_up(), dense.net().total_bits_up(),
+                   "uplink bits diverged (pool={pool_size})");
+        assert_eq!(cow.net().total_bits_down(), dense.net().total_bits_down(),
+                   "downlink bits diverged (pool={pool_size})");
+        assert_eq!(cow.net().comm_rounds(), dense.net().comm_rounds());
+
+        // pool-size invariance among the sharded runs themselves,
+        // including which rows were materialized at all
+        let rows: Vec<Vec<u32>> =
+            (0..FLEET).map(|i| bits(cow.row_or_base(i))).collect();
+        match &reference_rows {
+            None => reference_rows = Some(rows),
+            Some(r) => assert_eq!(&rows, r,
+                                  "pool={pool_size} diverged from pool=1"),
+        }
+        assert!(cow.touched_clients() > 0);
+        assert!(cow.store().materialized_rows() <= cow.touched_clients());
+    }
+}
