@@ -87,6 +87,7 @@ use crate::compress::{Compressed, Compressor, CompressorState};
 use crate::metrics::Record;
 use crate::model::{kernels, ClientStore, DenseStore, ParamMatrix, ShardedStore,
                    REDUCE_LEAF};
+use crate::obs;
 use crate::protocol::{Coin, CoinStats, CommSchedule, FixedCadence, StepKind};
 use crate::runtime::{Backend as _, GradBuf};
 use crate::transport::frame::{self, FrameHeader, SpecTable};
@@ -587,6 +588,13 @@ impl<'e, S: ClientStore> Engine<'e, S> {
     /// Local gradient step for the cohort — each member materializes its
     /// row on this first divergent step and updates it in place.
     pub fn step_local(&mut self, cohort: &[u32]) -> anyhow::Result<()> {
+        obs::span_begin(obs::LOCAL_SWEEP, obs::LANE_ENGINE, obs::NO_SIM_TIME);
+        let res = self.step_local_inner(cohort);
+        obs::span_end(obs::LOCAL_SWEEP, obs::LANE_ENGINE, obs::NO_SIM_TIME);
+        res
+    }
+
+    fn step_local_inner(&mut self, cohort: &[u32]) -> anyhow::Result<()> {
         Self::debug_check_cohort(cohort, self.n);
         for &i in cohort {
             self.touched.insert(i);
@@ -685,6 +693,7 @@ impl<'e, S: ClientStore> Engine<'e, S> {
     /// into their (lazily created) wire buffers. Read-only on the store —
     /// an undiverged member compresses the base without materializing.
     pub fn compress_uplinks(&mut self, cohort: &[u32]) -> anyhow::Result<()> {
+        obs::span_begin(obs::COMPRESS, obs::LANE_ENGINE, obs::NO_SIM_TIME);
         Self::debug_check_cohort(cohort, self.n);
         let (seed, d) = (self.seed, self.d);
         let comp = &self.client_comp;
@@ -697,6 +706,7 @@ impl<'e, S: ClientStore> Engine<'e, S> {
             let slot = slots.entry(i).or_insert_with(|| new_slot(seed, d, comp, i));
             slot.comp.compress_into(x, &mut slot.wire)?;
         }
+        obs::span_end(obs::COMPRESS, obs::LANE_ENGINE, obs::NO_SIM_TIME);
         Ok(())
     }
 
@@ -723,6 +733,7 @@ impl<'e, S: ClientStore> Engine<'e, S> {
         Self::debug_check_cohort(arrived, self.n);
         Self::debug_check_cohort(sampled, self.n);
         anyhow::ensure!(!arrived.is_empty(), "fresh aggregation with an empty cohort");
+        obs::span_begin(obs::AGGREGATE, obs::LANE_ENGINE, obs::NO_SIM_TIME);
         let count = arrived.len();
         self.net.begin_round();
         // meter every transmitted frame; only arrived devices participate
@@ -794,6 +805,7 @@ impl<'e, S: ClientStore> Engine<'e, S> {
         }
         self.server_transform_and_broadcast(k, arrived)?;
         self.apply_aggregation(arrived);
+        obs::span_end(obs::AGGREGATE, obs::LANE_ENGINE, obs::NO_SIM_TIME);
         Ok(())
     }
 
@@ -827,7 +839,9 @@ impl<'e, S: ClientStore> Engine<'e, S> {
         for &i in arrived {
             self.net.downlink(k, i as usize, down_bits);
         }
+        obs::span_begin(obs::DECOMPRESS, obs::LANE_ENGINE, obs::NO_SIM_TIME);
         self.master_buf.decode_into(&mut self.anchor);
+        obs::span_end(obs::DECOMPRESS, obs::LANE_ENGINE, obs::NO_SIM_TIME);
         self.anchor_is_base = false;
         self.net.end_round();
         Ok(())
@@ -848,6 +862,7 @@ impl<'e, S: ClientStore> Engine<'e, S> {
         anyhow::ensure!(arrived.len() == weights.len(),
                         "{} updates with {} weights",
                         arrived.len(), weights.len());
+        obs::span_begin(obs::AGGREGATE, obs::LANE_ENGINE, obs::NO_SIM_TIME);
         let mut wsum = 0.0f64;
         for &w in weights {
             anyhow::ensure!(w.is_finite() && w > 0.0,
@@ -879,6 +894,7 @@ impl<'e, S: ClientStore> Engine<'e, S> {
         }
         self.server_transform_and_broadcast(k, arrived)?;
         self.apply_aggregation(arrived);
+        obs::span_end(obs::AGGREGATE, obs::LANE_ENGINE, obs::NO_SIM_TIME);
         Ok(())
     }
 

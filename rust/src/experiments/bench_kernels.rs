@@ -101,8 +101,9 @@ impl KernelBenchResult {
             .collect();
         Value::obj(vec![
             ("bench".into(), Value::Str("kernels".into())),
-            // the microbench itself is single-threaded by design
-            ("meta".into(), meta::bench_meta(1)),
+            // the microbench itself is single-threaded by design — no
+            // pool, so the busy fraction is identically zero
+            ("meta".into(), meta::bench_meta(1, 0.0)),
             ("config".into(),
              Value::obj(vec![
                  ("dim".into(), Value::Num(self.dim as f64)),
@@ -278,6 +279,7 @@ mod tests {
         assert!(m.get("threads").unwrap().as_usize().is_some());
         assert!(m.get("cpu_features").unwrap().as_str().is_some());
         assert!(m.get("git_rev").unwrap().as_str().is_some());
+        assert_eq!(m.get("pool_utilization").unwrap().as_f64(), Some(0.0));
         let dot = v.get("kernels").unwrap().get("dot").unwrap();
         assert!(dot.get("bytes_per_call").unwrap().as_f64().unwrap() > 0.0);
         let active = v.get("active_level").unwrap().as_str().unwrap();

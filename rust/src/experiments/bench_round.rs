@@ -31,6 +31,7 @@ use std::time::Instant;
 use super::fig3;
 use crate::algorithms::l2gd::L2gdEngine;
 use crate::algorithms::{reference, FedAlgorithm as _, FedEnv, L2gd};
+use crate::obs;
 use crate::sim::{self, AsyncShardedSim, FleetSim};
 use crate::util::alloc_count;
 use crate::util::json::Value;
@@ -137,6 +138,9 @@ pub struct BenchResult {
     /// worker-pool size the measured environment ran with (recorded in
     /// the JSON `meta` so cross-machine deltas stay interpretable)
     pub threads: usize,
+    /// busy fraction of the engine environment's worker pool over the
+    /// bench (thread-pool profiling hooks; JSON `meta.pool_utilization`)
+    pub pool_utilization: f64,
     pub final_personal_loss: f64,
 }
 
@@ -152,7 +156,7 @@ impl BenchResult {
         let opt = |v: Option<f64>| v.map_or(Value::Null, Value::Num);
         Value::obj(vec![
             ("bench".into(), Value::Str("round_engine".into())),
-            ("meta".into(), meta::bench_meta(self.threads)),
+            ("meta".into(), meta::bench_meta(self.threads, self.pool_utilization)),
             ("config".into(), Value::obj(vec![
                 ("n_clients".into(), Value::Num(c.n_clients as f64)),
                 ("dim".into(), Value::Num(c.dim as f64)),
@@ -263,10 +267,19 @@ fn time_engine<'e>(alg: &L2gd, env: &'e FedEnv, warmup: u64, steps: u64)
 }
 
 pub fn run(cfg: &BenchCfg) -> anyhow::Result<BenchResult> {
+    // every zero-alloc assertion below doubles as a pin on the
+    // *disabled-tracing* no-op path (obs emit = one relaxed atomic
+    // load): refuse to measure with the trace gate open, so a stray
+    // enable can never silently absorb an allocation regression
+    anyhow::ensure!(!obs::enabled(),
+                    "bench requires tracing disabled — the allocation \
+                     bounds pin the no-op instrumentation path");
     let env = build_env(cfg);
     // untimed: materialize the lazily built per-shard train batches before
     // anything is measured (first-touch batch assembly is one-time cost)
     env.warm_caches();
+    // arm the thread-pool profiling hooks for `meta.pool_utilization`
+    env.pool.enable_profiling();
 
     // engine, identity wire (the Fig-3 configuration)
     let a_id = alg(cfg, "identity", "identity")?;
@@ -416,6 +429,7 @@ pub fn run(cfg: &BenchCfg) -> anyhow::Result<BenchResult> {
     Ok(BenchResult {
         cfg: cfg.clone(),
         threads: env.pool.size(),
+        pool_utilization: env.pool.utilization(),
         engine_steps_per_sec: engine_sps,
         engine_natural_steps_per_sec: natural_sps,
         engine_paired_steps_per_sec: engine_paired_sps,
@@ -491,6 +505,8 @@ pub struct ShardBenchResult {
     pub cfg: ShardBenchCfg,
     /// worker-pool size of the measured environment (JSON `meta`)
     pub threads: usize,
+    /// pool busy fraction over the bench (JSON `meta.pool_utilization`)
+    pub pool_utilization: f64,
     pub fleet_size: u64,
     /// scheduler events/sec over the measured window
     pub events_per_sec: f64,
@@ -513,7 +529,7 @@ impl ShardBenchResult {
         let opt = |v: Option<f64>| v.map_or(Value::Null, Value::Num);
         Value::obj(vec![
             ("bench".into(), Value::Str("sharded_cohort_engine".into())),
-            ("meta".into(), meta::bench_meta(self.threads)),
+            ("meta".into(), meta::bench_meta(self.threads, self.pool_utilization)),
             ("config".into(), Value::obj(vec![
                 ("scenario".into(), Value::Str(self.cfg.scenario.clone())),
                 ("steps".into(), Value::Num(self.cfg.steps as f64)),
@@ -555,6 +571,8 @@ pub fn run_shard(cfg: &ShardBenchCfg) -> anyhow::Result<ShardBenchResult> {
     sim_cfg.seed = cfg.seed;
     let env = sim::runner::build_env(&sim_cfg);
     env.warm_caches();
+    // profiling hooks for `meta.pool_utilization`
+    env.pool.enable_profiling();
     let mut fsim = FleetSim::new(&sim_cfg, &env)?;
     // untimed warmup before the measured window
     fsim.run_steps(0, cfg.warmup)?;
@@ -584,6 +602,7 @@ pub fn run_shard(cfg: &ShardBenchCfg) -> anyhow::Result<ShardBenchResult> {
     Ok(ShardBenchResult {
         cfg: cfg.clone(),
         threads: env.pool.size(),
+        pool_utilization: env.pool.utilization(),
         fleet_size,
         events_per_sec: events as f64 / dt,
         allocs_per_event: counting.then(|| allocs as f64 / events as f64),
@@ -636,6 +655,8 @@ mod tests {
         assert!(m.get("threads").unwrap().as_usize().unwrap() >= 1);
         assert!(m.get("cpu_features").unwrap().as_str().is_some());
         assert!(m.get("git_rev").unwrap().as_str().is_some());
+        let util = m.get("pool_utilization").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&util), "pool_utilization {util}");
         assert!(v.get("speedup_vs_reference").unwrap().as_f64().unwrap() > 0.0);
         let s = v.get("sim_scheduler").unwrap();
         assert_eq!(s.get("scenario").unwrap().as_str(), Some("straggler-heavy"));
@@ -681,6 +702,8 @@ mod tests {
                    Some("sharded_cohort_engine"));
         assert!(v.get("meta").unwrap().get("threads").unwrap()
                  .as_usize().unwrap() >= 1);
+        assert!(v.get("meta").unwrap().get("pool_utilization").unwrap()
+                 .as_f64().is_some());
         let text = v.to_string_pretty();
         let parsed = crate::util::json::parse(&text).unwrap();
         assert!(parsed.get("events_per_sec").unwrap().as_f64().unwrap() > 0.0);

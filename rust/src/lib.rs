@@ -20,6 +20,7 @@ pub mod data;
 pub mod experiments;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod protocol;
 pub mod runtime;
 pub mod sim;

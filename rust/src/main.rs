@@ -39,7 +39,7 @@ use pfl::util::json::Value;
 static ALLOC: pfl::util::alloc_count::CountingAlloc =
     pfl::util::alloc_count::CountingAlloc;
 
-const FLAGS: &[&str] = &["trace", "help", "full", "smoke"];
+const FLAGS: &[&str] = &["help", "full", "smoke"];
 
 fn main() {
     if let Err(e) = run() {
@@ -472,6 +472,16 @@ alike.
   --local-lr --local-steps --server-lr   FedAvg/FedOpt parameters
   --client-comp --master-comp   compressor specs (default natural)
   --out <dir>           output directory (default results)
+  --trace <file>        record round/engine/transport spans and write a
+                        Chrome trace-event JSON (open in chrome://tracing
+                        or Perfetto): pid 1 = sim-time lanes (round slots,
+                        sampled devices), pid 2 = wall-clock lanes
+                        (engine, transport, pool workers)
+  --trace-jsonl <file>  raw event stream, one JSON object per line
+  --metrics-out <file>  Prometheus text exposition of the always-on
+                        histogram/counter registry (staleness, queue
+                        depth, cohort size, round bits, shard occupancy,
+                        worker busy-ns) — default <out>/metrics.prom
 
 scenario spec grammar (like the codec registry):
   scenario := name [\":\" key \"=\" value (\",\" key \"=\" value)*]
@@ -534,6 +544,16 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     };
     let out = args.str_or("out", "results");
     std::fs::create_dir_all(&out)?;
+    // observability: the registry is always on (pure atomics) and starts
+    // this command from zero; span recording is opt-in via --trace /
+    // --trace-jsonl (one relaxed atomic load per call site when off —
+    // the bench harness pins that path allocation-free)
+    pfl::obs::registry::reset();
+    let trace_out = args.get("trace").map(str::to_string);
+    let jsonl_out = args.get("trace-jsonl").map(str::to_string);
+    if trace_out.is_some() || jsonl_out.is_some() {
+        pfl::obs::enable(1 << 18);
+    }
     let mut summaries: Vec<Value> = Vec::new();
     for spec in spec_list.split(';').filter(|s| !s.trim().is_empty()) {
         let scenario = sim::scenario::from_spec(spec)?;
@@ -607,8 +627,24 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
         summaries.push(res.to_json());
     }
     anyhow::ensure!(!summaries.is_empty(), "no scenarios given");
+    if let Some(sink) = pfl::obs::disable() {
+        if let Some(p) = &trace_out {
+            write_creating_parent(p, &sink.to_chrome_trace())?;
+            println!("wrote {p} ({} events, {} overwritten)",
+                     sink.len(), sink.dropped());
+        }
+        if let Some(p) = &jsonl_out {
+            write_creating_parent(p, &sink.to_jsonl())?;
+            println!("wrote {p}");
+        }
+    }
+    let snap = pfl::obs::registry::snapshot();
+    let prom_path = args.str_or("metrics-out", &format!("{out}/metrics.prom"));
+    write_creating_parent(&prom_path, &snap.to_prom())?;
+    println!("wrote {prom_path}");
     let summary = Value::obj(vec![
         ("bench".into(), Value::Str("fleet_sim".into())),
+        ("obs".into(), snap.to_json()),
         ("scenarios".into(), Value::Arr(summaries)),
     ]);
     let path = format!("{out}/sim_summary.json");
@@ -617,6 +653,17 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     std::fs::write(&path, text)?;
     println!("wrote {path}");
     Ok(())
+}
+
+/// Write `text`, creating the file's parent directory if needed — trace
+/// and metrics paths routinely point into not-yet-created output dirs.
+fn write_creating_parent(path: &str, text: &str) -> anyhow::Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, text).map_err(|e| anyhow::anyhow!("writing {path}: {e}"))
 }
 
 fn cmd_models(args: &Args) -> anyhow::Result<()> {

@@ -42,7 +42,8 @@ impl Record {
     /// False once training has diverged (any headline metric non-finite).
     pub fn is_finite(&self) -> bool {
         self.train_loss.is_finite() && self.test_loss.is_finite()
-            && self.personal_loss.is_finite()
+            && self.personal_loss.is_finite() && self.train_acc.is_finite()
+            && self.test_acc.is_finite() && self.personal_acc.is_finite()
     }
 }
 
@@ -64,7 +65,7 @@ impl Series {
         s.push('\n');
         for r in &self.records {
             s.push_str(&format!(
-                "{},{},{:.1},{},{},{:.6},{:.4},{:.6},{:.4},{:.6},{:.4},{:.3},{}\n",
+                "{},{},{},{},{},{:.6},{:.4},{:.6},{:.4},{:.6},{:.4},{:.3},{}\n",
                 r.step, r.comm_rounds, r.bits_per_client, r.bits_up, r.bits_down,
                 r.train_loss, r.train_acc, r.test_loss, r.test_acc,
                 r.personal_loss, r.personal_acc, r.sim_time_s, r.participants
@@ -120,8 +121,20 @@ impl Series {
     }
 }
 
+/// RFC 4180 field escaping: quote when the value contains a comma, quote,
+/// CR, or LF, doubling embedded quotes. Plain labels pass through verbatim.
+fn csv_escape(field: &str) -> String {
+    if field.contains(['"', ',', '\r', '\n']) {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
 /// Write several series side by side as one long-format CSV
-/// (`label` column first), convenient for plotting.
+/// (`label` column first), convenient for plotting. Labels carry raw
+/// scenario specs (commas included), so the label column is RFC
+/// 4180-escaped.
 pub fn write_multi_csv(series: &[Series], path: impl AsRef<Path>) -> anyhow::Result<()> {
     if let Some(parent) = path.as_ref().parent() {
         std::fs::create_dir_all(parent)?;
@@ -130,8 +143,9 @@ pub fn write_multi_csv(series: &[Series], path: impl AsRef<Path>) -> anyhow::Res
     out.push_str(CSV_HEADER);
     out.push('\n');
     for s in series {
+        let label = csv_escape(&s.label);
         for line in s.to_csv().lines().skip(1) {
-            out.push_str(&s.label);
+            out.push_str(&label);
             out.push(',');
             out.push_str(line);
             out.push('\n');
@@ -192,7 +206,17 @@ mod tests {
         let mut lines = csv.lines();
         assert_eq!(lines.next().unwrap(), CSV_HEADER);
         let row = lines.next().unwrap();
-        assert!(row.starts_with("5,2,10.0,10,0,1.25"), "{row}");
+        assert!(row.starts_with("5,2,10,10,0,1.25"), "{row}");
+    }
+
+    /// `bits_per_client` is written at full precision — a `{:.1}` round
+    /// would alias distinct per-step bit counts at DNN scales.
+    #[test]
+    fn csv_keeps_bits_per_client_precision() {
+        let mut s = Series::new("alg");
+        s.records.push(rec(1, 123456789.0625, 0.5, 1.0));
+        let row = s.to_csv().lines().nth(1).unwrap().to_string();
+        assert!(row.contains(",123456789.0625,"), "{row}");
     }
 
     #[test]
@@ -207,5 +231,22 @@ mod tests {
         assert!(text.contains("\na,0,"));
         assert!(text.contains("\nb,0,"));
         let _ = std::fs::remove_file(dir);
+    }
+
+    /// Scenario-spec labels carry commas and may carry quotes — the label
+    /// column must stay one RFC 4180 field, not shift every column right.
+    #[test]
+    fn multi_csv_escapes_hostile_labels() {
+        let mut a = Series::new("straggler-heavy:clients=12,quorum=0.5");
+        a.records.push(rec(0, 1.0, 0.1, 3.0));
+        let mut b = Series::new("say \"hi\"\nplease");
+        b.records.push(rec(0, 2.0, 0.2, 2.0));
+        let path = std::env::temp_dir().join("pfl_test_multi_escape.csv");
+        write_multi_csv(&[a, b], &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\n\"straggler-heavy:clients=12,quorum=0.5\",0,"),
+                "{text}");
+        assert!(text.contains("\"say \"\"hi\"\"\nplease\",0,"), "{text}");
+        let _ = std::fs::remove_file(path);
     }
 }

@@ -1,0 +1,316 @@
+//! Structured tracing + metrics for the engine, sim runners, transport
+//! and thread pool.
+//!
+//! Two cooperating pieces:
+//!
+//! * a **span/event recorder** ([`sink::TraceSink`]) — a preallocated
+//!   ring buffer of fixed-size [`Event`]s with interned static names and
+//!   dual-clock stamps: deterministic sim-time (seconds from the event
+//!   queue, stored as integer µs) and monotonic wall-clock ns. Exported
+//!   as Chrome trace-event JSON (Perfetto-loadable) or raw JSONL.
+//! * an **alloc-free metrics registry** ([`registry`]) — log₂-bucketed
+//!   histograms, counters and gauges backed by static atomics, snapshot
+//!   into the `obs` block of `sim_summary.json` and a Prometheus-style
+//!   `metrics.prom` text dump.
+//!
+//! Tracing is **off by default** and every emit helper starts with a
+//! single relaxed [`AtomicBool`] load: the disabled path performs no
+//! locking and no allocation, which the bench harness asserts under the
+//! counting allocator (`SIM_ALLOCS_PER_EVENT_BOUND` holds with the
+//! instrumented scheduler). The registry's atomics are always live —
+//! they never allocate either.
+//!
+//! Instrumentation must be *purely observational*: nothing in this
+//! module touches an RNG stream, a float accumulator, or a scheduler
+//! counter, so bit-for-bit pins (golden series, sync≡async at
+//! `inflight=1`) hold with tracing on or off.
+
+pub mod registry;
+pub mod sink;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use sink::TraceSink;
+
+// ---------------------------------------------------------------------------
+// Interned event names
+// ---------------------------------------------------------------------------
+
+/// Interned event-name id; index into [`NAMES`].
+pub type Name = u16;
+
+pub const ROUND: Name = 0;
+pub const COHORT_DRAW: Name = 1;
+pub const QUORUM_WAIT: Name = 2;
+pub const ROUND_COMMIT: Name = 3;
+pub const ROUND_ABORT: Name = 4;
+pub const DEADLINE_ABORT: Name = 5;
+pub const DEVICE_ARRIVAL: Name = 6;
+pub const STALE_APPLY: Name = 7;
+pub const STALE_DISCARD: Name = 8;
+pub const LOCAL_SWEEP: Name = 9;
+pub const AGGREGATE: Name = 10;
+pub const COMPRESS: Name = 11;
+pub const DECOMPRESS: Name = 12;
+pub const FRAME_ENCODE: Name = 13;
+pub const FRAME_DECODE: Name = 14;
+pub const LOOPBACK_TX: Name = 15;
+pub const LOOPBACK_RX: Name = 16;
+pub const WORKER_TASK: Name = 17;
+pub const QUEUE_DEPTH: Name = 18;
+pub const COHORT_SIZE: Name = 19;
+
+/// Static name table — `NAMES[name as usize]` is the display string.
+pub const NAMES: &[&str] = &[
+    "round",
+    "cohort_draw",
+    "quorum_wait",
+    "round_commit",
+    "round_abort",
+    "deadline_abort",
+    "device_arrival",
+    "stale_apply",
+    "stale_discard",
+    "local_sweep",
+    "aggregate",
+    "compress",
+    "decompress",
+    "frame_encode",
+    "frame_decode",
+    "loopback_tx",
+    "loopback_rx",
+    "worker_task",
+    "queue_depth",
+    "cohort_size",
+];
+
+pub fn name_str(n: Name) -> &'static str {
+    NAMES.get(n as usize).copied().unwrap_or("?")
+}
+
+// ---------------------------------------------------------------------------
+// Lanes (Chrome `tid`s)
+// ---------------------------------------------------------------------------
+
+/// Engine-internal work (sweeps, aggregation, codec stages).
+pub const LANE_ENGINE: u32 = 1;
+/// Transport-layer events (frame codec, loopback TX/RX).
+pub const LANE_TRANSPORT: u32 = 2;
+
+const ROUND_LANE_BASE: u32 = 0x2000_0000;
+const DEVICE_LANE_BASE: u32 = 0x1000_0000;
+const WORKER_LANE_BASE: u32 = 0x4000_0000;
+
+/// Round-lifecycle lane for an in-flight round slot. The sync runner has
+/// exactly one round in flight and always uses slot 0, so at
+/// `inflight=1` the async runner lands on the same lane.
+pub fn round_lane(slot: usize) -> u32 {
+    ROUND_LANE_BASE + slot as u32
+}
+
+/// Sim-time lane for one sampled device.
+pub fn device_lane(device: usize) -> u32 {
+    DEVICE_LANE_BASE + device as u32
+}
+
+/// Wall-clock lane for one worker thread of the pool.
+pub fn worker_lane(worker: usize) -> u32 {
+    WORKER_LANE_BASE + worker as u32
+}
+
+/// True iff `lane` is a round-lifecycle lane (see [`round_lane`]).
+pub fn is_round_lane(lane: u32) -> bool {
+    (ROUND_LANE_BASE..ROUND_LANE_BASE + 0x1000_0000).contains(&lane)
+}
+
+// ---------------------------------------------------------------------------
+// Events
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// Span begin (`ph: "B"`).
+    Begin,
+    /// Span end (`ph: "E"`).
+    End,
+    /// Instant (`ph: "i"`).
+    Instant,
+    /// Counter sample (`ph: "C"`, value in `args`).
+    Counter,
+}
+
+impl Kind {
+    pub fn ph(self) -> &'static str {
+        match self {
+            Kind::Begin => "B",
+            Kind::End => "E",
+            Kind::Instant => "i",
+            Kind::Counter => "C",
+        }
+    }
+}
+
+/// One fixed-size trace record. `sim_us < 0` means the event carries no
+/// deterministic sim-time stamp (wall-clock only — engine/pool work).
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub name: Name,
+    pub kind: Kind,
+    pub lane: u32,
+    pub sim_us: i64,
+    pub wall_ns: u64,
+    pub value: f64,
+}
+
+/// Sentinel sim-time for events that only exist on the wall clock.
+pub const NO_SIM_TIME: f64 = -1.0;
+
+// ---------------------------------------------------------------------------
+// Global gate + sink
+// ---------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Option<TraceSink>> = Mutex::new(None);
+
+fn wall_anchor() -> &'static Instant {
+    static ANCHOR: OnceLock<Instant> = OnceLock::new();
+    ANCHOR.get_or_init(Instant::now)
+}
+
+/// The no-op gate: one relaxed atomic load. Every emit helper returns
+/// immediately when this is false — no lock, no allocation.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Install a fresh ring-buffer sink of `capacity` events and open the
+/// gate. A previously installed sink is discarded.
+pub fn enable(capacity: usize) {
+    let mut guard = lock_sink();
+    *guard = Some(TraceSink::with_capacity(capacity));
+    drop(guard);
+    // touch the anchor before the gate opens so first stamps are cheap
+    let _ = wall_anchor();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Close the gate and take the recorded sink out (if any).
+pub fn disable() -> Option<TraceSink> {
+    ENABLED.store(false, Ordering::SeqCst);
+    lock_sink().take()
+}
+
+fn lock_sink() -> std::sync::MutexGuard<'static, Option<TraceSink>> {
+    SINK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[inline]
+fn record(kind: Kind, name: Name, lane: u32, sim_s: f64, value: f64) {
+    let wall_ns = wall_anchor().elapsed().as_nanos() as u64;
+    let sim_us = if sim_s >= 0.0 { (sim_s * 1e6).round() as i64 } else { -1 };
+    let ev = Event { name, kind, lane, sim_us, wall_ns, value };
+    let mut guard = lock_sink();
+    if let Some(sink) = guard.as_mut() {
+        if sink.push(ev) {
+            drop(guard);
+            registry::count(registry::Counter::TraceEventsDropped, 1);
+        }
+    }
+}
+
+/// Open a span on `lane` at sim time `sim_s` (pass [`NO_SIM_TIME`] for
+/// wall-clock-only work).
+#[inline]
+pub fn span_begin(name: Name, lane: u32, sim_s: f64) {
+    if enabled() {
+        record(Kind::Begin, name, lane, sim_s, 0.0);
+    }
+}
+
+/// Close the most recent open span on `lane`.
+#[inline]
+pub fn span_end(name: Name, lane: u32, sim_s: f64) {
+    if enabled() {
+        record(Kind::End, name, lane, sim_s, 0.0);
+    }
+}
+
+/// A point event, with an optional payload in `value`.
+#[inline]
+pub fn instant(name: Name, lane: u32, sim_s: f64, value: f64) {
+    if enabled() {
+        record(Kind::Instant, name, lane, sim_s, value);
+    }
+}
+
+/// A counter sample (rendered as a Chrome counter track).
+#[inline]
+pub fn counter(name: Name, lane: u32, sim_s: f64, value: f64) {
+    if enabled() {
+        record(Kind::Counter, name, lane, sim_s, value);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // obs state is process-global; serialize the tests that toggle it
+    // (the lib test binary runs tests concurrently).
+    fn serial() -> std::sync::MutexGuard<'static, ()> {
+        static GATE: Mutex<()> = Mutex::new(());
+        GATE.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_emits_are_no_ops() {
+        let _g = serial();
+        let _ = disable();
+        span_begin(ROUND, round_lane(0), 0.0);
+        instant(COHORT_DRAW, round_lane(0), 0.5, 3.0);
+        // no sink installed, gate closed: nothing recorded, nothing panics
+        assert!(disable().is_none());
+    }
+
+    #[test]
+    fn enable_records_and_disable_returns_the_sink() {
+        let _g = serial();
+        enable(16);
+        assert!(enabled());
+        span_begin(LOCAL_SWEEP, LANE_ENGINE, NO_SIM_TIME);
+        span_end(LOCAL_SWEEP, LANE_ENGINE, NO_SIM_TIME);
+        instant(DEVICE_ARRIVAL, device_lane(3), 1.25, 0.0);
+        let sink = disable().expect("sink");
+        assert!(!enabled());
+        let evs = sink.events_in_order();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].kind, Kind::Begin);
+        assert_eq!(evs[0].sim_us, -1);
+        assert_eq!(evs[2].sim_us, 1_250_000);
+        assert_eq!(evs[2].lane, device_lane(3));
+    }
+
+    #[test]
+    fn name_table_covers_every_id() {
+        let _g = serial();
+        for n in 0..NAMES.len() as Name {
+            assert_ne!(name_str(n), "?");
+        }
+        assert_eq!(name_str(999), "?");
+        assert_eq!(NAMES.len(), COHORT_SIZE as usize + 1);
+    }
+
+    #[test]
+    fn lane_helpers_do_not_collide() {
+        let _g = serial();
+        assert!(is_round_lane(round_lane(0)));
+        assert!(is_round_lane(round_lane(7)));
+        assert!(!is_round_lane(device_lane(0)));
+        assert!(!is_round_lane(worker_lane(0)));
+        assert!(!is_round_lane(LANE_ENGINE));
+        assert!(!is_round_lane(LANE_TRANSPORT));
+    }
+}

@@ -1,0 +1,372 @@
+//! Alloc-free global metrics registry: log₂-bucketed histograms,
+//! monotonic counters, and gauges, all backed by static atomics.
+//!
+//! `observe`/`count`/`set_gauge` are a handful of relaxed atomic ops —
+//! no locks, no allocation — so they are safe to leave live inside the
+//! zero-alloc scheduler and engine hot loops (the bench harness keeps
+//! asserting `SIM_ALLOCS_PER_EVENT_BOUND` with the instrumented paths).
+//!
+//! A [`snapshot`] turns the atomics into plain numbers for the `obs`
+//! block of `sim_summary.json` (p50/p95/p99 per histogram) and the
+//! Prometheus text dump (`metrics.prom`). [`reset`] zeroes everything —
+//! the registry is process-global, so runs that want a clean slate
+//! (e.g. `pfl sim`) reset it up front.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Value;
+
+const N_BUCKETS: usize = 64;
+
+/// Histogram ids. Values are observed as `u64`s into log₂ buckets:
+/// bucket 0 holds zeros, bucket `i ≥ 1` holds `[2^(i-1), 2^i)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Hist {
+    /// server-version lag of each applied async update (rounds)
+    Staleness = 0,
+    /// event-queue depth sampled after each round's arrivals are queued
+    QueueDepth = 1,
+    /// drawn cohort size per fresh round
+    CohortSize = 2,
+    /// metered uplink+downlink bits per committed round
+    RoundBits = 3,
+    /// materialized (copy-on-write) client rows at evaluation points
+    ShardOccupancy = 4,
+    /// per-worker busy nanoseconds from the thread-pool profiling hooks
+    WorkerBusyNs = 5,
+}
+
+const N_HISTS: usize = 6;
+const HIST_NAMES: [&str; N_HISTS] = [
+    "staleness",
+    "queue_depth",
+    "cohort_size",
+    "round_bits",
+    "shard_occupancy",
+    "worker_busy_ns",
+];
+const ALL_HISTS: [Hist; N_HISTS] = [
+    Hist::Staleness,
+    Hist::QueueDepth,
+    Hist::CohortSize,
+    Hist::RoundBits,
+    Hist::ShardOccupancy,
+    Hist::WorkerBusyNs,
+];
+
+/// Monotonic counter ids.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// wire frames serialized by `transport::frame::encode_frame`
+    FramesEncoded = 0,
+    /// wire frames accepted by `transport::frame::decode_frame`
+    FramesDecoded = 1,
+    /// bytes written by the loopback TCP client
+    LoopbackTxBytes = 2,
+    /// bytes read back by the loopback TCP client
+    LoopbackRxBytes = 3,
+    /// trace events overwritten by ring wrap-around
+    TraceEventsDropped = 4,
+}
+
+const N_COUNTERS: usize = 5;
+const COUNTER_NAMES: [&str; N_COUNTERS] = [
+    "frames_encoded",
+    "frames_decoded",
+    "loopback_tx_bytes",
+    "loopback_rx_bytes",
+    "trace_events_dropped",
+];
+
+/// Gauge ids (last-write-wins f64).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Gauge {
+    /// thread-pool busy fraction over the profiled window, 0..=1
+    PoolUtilization = 0,
+}
+
+const N_GAUGES: usize = 1;
+const GAUGE_NAMES: [&str; N_GAUGES] = ["pool_utilization"];
+
+static BUCKETS: [AtomicU64; N_HISTS * N_BUCKETS] =
+    [const { AtomicU64::new(0) }; N_HISTS * N_BUCKETS];
+static COUNTS: [AtomicU64; N_HISTS] = [const { AtomicU64::new(0) }; N_HISTS];
+static SUMS: [AtomicU64; N_HISTS] = [const { AtomicU64::new(0) }; N_HISTS];
+static COUNTERS: [AtomicU64; N_COUNTERS] = [const { AtomicU64::new(0) }; N_COUNTERS];
+static GAUGES: [AtomicU64; N_GAUGES] = [const { AtomicU64::new(0) }; N_GAUGES];
+
+fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros() as usize).min(N_BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound of bucket `i` (`0` for the zero bucket).
+fn bucket_upper(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else if i >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// Record one observation. Three relaxed atomic adds, nothing else.
+#[inline]
+pub fn observe(h: Hist, v: u64) {
+    let base = h as usize * N_BUCKETS;
+    BUCKETS[base + bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+    COUNTS[h as usize].fetch_add(1, Ordering::Relaxed);
+    SUMS[h as usize].fetch_add(v, Ordering::Relaxed);
+}
+
+/// Bump a monotonic counter.
+#[inline]
+pub fn count(c: Counter, delta: u64) {
+    COUNTERS[c as usize].fetch_add(delta, Ordering::Relaxed);
+}
+
+/// Set a gauge (stored as f64 bits).
+#[inline]
+pub fn set_gauge(g: Gauge, v: f64) {
+    GAUGES[g as usize].store(v.to_bits(), Ordering::Relaxed);
+}
+
+pub fn gauge_value(g: Gauge) -> f64 {
+    f64::from_bits(GAUGES[g as usize].load(Ordering::Relaxed))
+}
+
+pub fn counter_value(c: Counter) -> u64 {
+    COUNTERS[c as usize].load(Ordering::Relaxed)
+}
+
+/// Zero every histogram, counter and gauge.
+pub fn reset() {
+    for b in BUCKETS.iter().chain(&COUNTS).chain(&SUMS).chain(&COUNTERS).chain(&GAUGES) {
+        b.store(0, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Snapshots
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    pub name: &'static str,
+    pub count: u64,
+    pub sum: u64,
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+    /// per-bucket counts, truncated after the last non-empty bucket
+    pub buckets: Vec<u64>,
+}
+
+impl HistSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub hists: Vec<HistSnapshot>,
+    pub counters: Vec<(&'static str, u64)>,
+    pub gauges: Vec<(&'static str, f64)>,
+}
+
+/// Quantile from log₂ buckets: the inclusive upper bound of the bucket
+/// containing the `ceil(q·count)`-th observation — an upper estimate
+/// within one power of two, monotone in `q` by construction.
+fn quantile(buckets: &[u64], total: u64, q: f64) -> u64 {
+    if total == 0 {
+        return 0;
+    }
+    let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+    let mut seen = 0u64;
+    for (i, &c) in buckets.iter().enumerate() {
+        seen += c;
+        if seen >= rank {
+            return bucket_upper(i);
+        }
+    }
+    bucket_upper(N_BUCKETS - 1)
+}
+
+/// Read every metric into plain numbers (relaxed loads; concurrent
+/// observers may land either side of the cut — fine for reporting).
+pub fn snapshot() -> Snapshot {
+    let mut hists = Vec::with_capacity(N_HISTS);
+    for h in ALL_HISTS {
+        let base = h as usize * N_BUCKETS;
+        let buckets: Vec<u64> =
+            (0..N_BUCKETS).map(|i| BUCKETS[base + i].load(Ordering::Relaxed)).collect();
+        let count = COUNTS[h as usize].load(Ordering::Relaxed);
+        let sum = SUMS[h as usize].load(Ordering::Relaxed);
+        let last = buckets.iter().rposition(|&c| c > 0).map_or(0, |i| i + 1);
+        hists.push(HistSnapshot {
+            name: HIST_NAMES[h as usize],
+            count,
+            sum,
+            p50: quantile(&buckets, count, 0.50),
+            p95: quantile(&buckets, count, 0.95),
+            p99: quantile(&buckets, count, 0.99),
+            buckets: buckets[..last].to_vec(),
+        });
+    }
+    let counters = COUNTER_NAMES
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| (n, COUNTERS[i].load(Ordering::Relaxed)))
+        .collect();
+    let gauges = GAUGE_NAMES
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| (n, f64::from_bits(GAUGES[i].load(Ordering::Relaxed))))
+        .collect();
+    Snapshot { hists, counters, gauges }
+}
+
+impl Snapshot {
+    /// The `obs` block of `sim_summary.json`.
+    pub fn to_json(&self) -> Value {
+        let hists = self
+            .hists
+            .iter()
+            .map(|h| {
+                (
+                    h.name.to_string(),
+                    Value::obj(vec![
+                        ("count".into(), Value::Num(h.count as f64)),
+                        ("mean".into(), Value::Num(h.mean())),
+                        ("p50".into(), Value::Num(h.p50 as f64)),
+                        ("p95".into(), Value::Num(h.p95 as f64)),
+                        ("p99".into(), Value::Num(h.p99 as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        let counters = self
+            .counters
+            .iter()
+            .map(|&(n, v)| (n.to_string(), Value::Num(v as f64)))
+            .collect();
+        let gauges =
+            self.gauges.iter().map(|&(n, v)| (n.to_string(), Value::Num(v))).collect();
+        Value::obj(vec![
+            ("histograms".into(), Value::Obj(hists)),
+            ("counters".into(), Value::Obj(counters)),
+            ("gauges".into(), Value::Obj(gauges)),
+        ])
+    }
+
+    /// Prometheus text exposition (histograms with cumulative `le`
+    /// buckets, `_total` counters, plain gauges).
+    pub fn to_prom(&self) -> String {
+        let mut out = String::new();
+        for h in &self.hists {
+            let name = format!("pfl_{}", h.name);
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            let mut cum = 0u64;
+            for (i, &c) in h.buckets.iter().enumerate() {
+                cum += c;
+                out.push_str(&format!(
+                    "{name}_bucket{{le=\"{}\"}} {cum}\n",
+                    bucket_upper(i)
+                ));
+            }
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+            out.push_str(&format!("{name}_sum {}\n", h.sum));
+            out.push_str(&format!("{name}_count {}\n", h.count));
+        }
+        for &(n, v) in &self.counters {
+            out.push_str(&format!("# TYPE pfl_{n}_total counter\npfl_{n}_total {v}\n"));
+        }
+        for &(n, v) in &self.gauges {
+            out.push_str(&format!("# TYPE pfl_{n} gauge\npfl_{n} {v}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // the registry is process-global and the lib test binary is
+    // concurrent, so assertions here are tolerant: they check structure
+    // and monotonicity, not exact counts.
+
+    #[test]
+    fn buckets_are_log2_with_zero_bucket() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), N_BUCKETS - 1);
+        assert_eq!(bucket_upper(0), 0);
+        assert_eq!(bucket_upper(1), 1);
+        assert_eq!(bucket_upper(10), 1023);
+    }
+
+    #[test]
+    fn quantiles_are_monotone_and_bound_the_data() {
+        let mut buckets = vec![0u64; N_BUCKETS];
+        // 100 observations of 3 (bucket 2), 10 of 1000 (bucket 10)
+        buckets[2] = 100;
+        buckets[10] = 10;
+        let p50 = quantile(&buckets, 110, 0.50);
+        let p95 = quantile(&buckets, 110, 0.95);
+        let p99 = quantile(&buckets, 110, 0.99);
+        assert_eq!(p50, 3);
+        assert!(p95 >= p50 && p99 >= p95);
+        assert_eq!(p99, 1023);
+        assert_eq!(quantile(&buckets, 0, 0.99), 0);
+    }
+
+    #[test]
+    fn observe_count_gauge_roundtrip_into_snapshot() {
+        observe(Hist::CohortSize, 5);
+        observe(Hist::CohortSize, 9);
+        count(Counter::FramesEncoded, 3);
+        set_gauge(Gauge::PoolUtilization, 0.5);
+        let s = snapshot();
+        let h = s.hists.iter().find(|h| h.name == "cohort_size").unwrap();
+        assert!(h.count >= 2);
+        assert!(h.p50 <= h.p95 && h.p95 <= h.p99);
+        let (_, frames) =
+            s.counters.iter().find(|(n, _)| *n == "frames_encoded").unwrap();
+        assert!(*frames >= 3);
+        let (_, util) =
+            s.gauges.iter().find(|(n, _)| *n == "pool_utilization").unwrap();
+        assert!(util.is_finite());
+    }
+
+    #[test]
+    fn snapshot_serializes_to_json_and_prom() {
+        observe(Hist::QueueDepth, 4);
+        let s = snapshot();
+        let v = s.to_json();
+        let q = v.get("histograms").unwrap().get("queue_depth").unwrap();
+        assert!(q.get("count").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(q.get("p50").unwrap().as_f64().is_some());
+        assert!(v.get("counters").unwrap().get("frames_encoded").is_some());
+        assert!(v.get("gauges").unwrap().get("pool_utilization").is_some());
+        let prom = s.to_prom();
+        assert!(prom.contains("# TYPE pfl_queue_depth histogram"));
+        assert!(prom.contains("pfl_queue_depth_bucket{le=\"+Inf\"}"));
+        assert!(prom.contains("pfl_frames_encoded_total"));
+        assert!(prom.contains("# TYPE pfl_pool_utilization gauge"));
+    }
+}

@@ -1,0 +1,334 @@
+//! Preallocated ring-buffer trace sink and its two exporters.
+//!
+//! * [`TraceSink::to_chrome_trace`] — Chrome trace-event JSON
+//!   (`chrome://tracing` / Perfetto). Events are split into two
+//!   processes: **pid 1** is the deterministic sim-time domain (`ts` =
+//!   sim µs) and **pid 2** is the wall clock (`ts` = monotonic µs since
+//!   the trace anchor). Lanes map to `tid`s — round slots, sampled
+//!   devices, the engine, the transport, and one lane per worker
+//!   thread — each named through `thread_name` metadata events.
+//! * [`TraceSink::to_jsonl`] — one compact JSON object per event, in
+//!   recording order, for scripting.
+//!
+//! The ring keeps the **newest** `capacity` events: when full, the
+//! oldest event is overwritten and counted. Because a wrapped ring can
+//! open mid-span, the Chrome exporter re-balances each lane at export
+//! time (unmatched `E`s dropped, dangling `B`s closed at the lane's
+//! last timestamp) and clamps per-lane timestamps monotone, so the
+//! emitted file always loads clean.
+
+use std::collections::BTreeMap;
+
+use super::{name_str, Event, Kind, LANE_ENGINE, LANE_TRANSPORT};
+use crate::util::json::Value;
+
+pub struct TraceSink {
+    buf: Vec<Event>,
+    capacity: usize,
+    /// next write position once the ring has wrapped
+    head: usize,
+    dropped: u64,
+}
+
+impl TraceSink {
+    pub fn with_capacity(capacity: usize) -> TraceSink {
+        let capacity = capacity.max(1);
+        TraceSink { buf: Vec::with_capacity(capacity), capacity, head: 0, dropped: 0 }
+    }
+
+    /// Append one event; returns `true` if an old event was overwritten.
+    pub fn push(&mut self, ev: Event) -> bool {
+        if self.buf.len() < self.capacity {
+            self.buf.push(ev);
+            false
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.capacity;
+            self.dropped += 1;
+            true
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events overwritten by ring wrap-around.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Recorded events, oldest first.
+    pub fn events_in_order(&self) -> Vec<Event> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+
+    // -- exporters ----------------------------------------------------------
+
+    /// Raw event stream: one compact JSON object per line.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for ev in self.events_in_order() {
+            let v = Value::obj(vec![
+                ("name".into(), Value::Str(name_str(ev.name).into())),
+                ("ph".into(), Value::Str(ev.kind.ph().into())),
+                ("lane".into(), Value::Num(ev.lane as f64)),
+                ("sim_us".into(), Value::Num(ev.sim_us as f64)),
+                ("wall_ns".into(), Value::Num(ev.wall_ns as f64)),
+                ("value".into(), Value::Num(ev.value)),
+            ]);
+            out.push_str(&v.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Chrome trace-event JSON (`{"traceEvents": [...]}`).
+    pub fn to_chrome_trace(&self) -> String {
+        // (pid, tid) -> events, grouped in recording order. BTreeMap keeps
+        // the output deterministic.
+        let mut lanes: BTreeMap<(u8, u32), Vec<Event>> = BTreeMap::new();
+        for ev in self.events_in_order() {
+            lanes.entry((domain_pid(&ev), ev.lane)).or_default().push(ev);
+        }
+        let mut out: Vec<Value> =
+            vec![process_name(SIM_PID, "sim-time"), process_name(WALL_PID, "wall-clock")];
+        for (&(pid, tid), evs) in &lanes {
+            out.push(thread_name(pid, tid));
+            export_lane(&mut out, pid, tid, evs);
+        }
+        Value::obj(vec![
+            ("traceEvents".into(), Value::Arr(out)),
+            ("displayTimeUnit".into(), Value::Str("ms".into())),
+        ])
+        .to_string_pretty()
+    }
+}
+
+/// Deterministic sim-time process.
+const SIM_PID: u8 = 1;
+/// Monotonic wall-clock process.
+const WALL_PID: u8 = 2;
+
+fn domain_pid(ev: &Event) -> u8 {
+    if ev.sim_us >= 0 {
+        SIM_PID
+    } else {
+        WALL_PID
+    }
+}
+
+fn ts_us(pid: u8, ev: &Event) -> i64 {
+    if pid == SIM_PID {
+        ev.sim_us
+    } else {
+        (ev.wall_ns / 1_000) as i64
+    }
+}
+
+/// One lane, re-balanced (B/E stack discipline) with monotone clamped
+/// timestamps, appended to `out` as trace-event objects.
+fn export_lane(out: &mut Vec<Value>, pid: u8, tid: u32, evs: &[Event]) {
+    let mut last_ts = i64::MIN;
+    // names of currently open spans, so dangling ones can be closed
+    let mut open: Vec<&'static str> = Vec::new();
+    for ev in evs {
+        let ts = ts_us(pid, ev).max(last_ts).max(0);
+        last_ts = ts.max(0);
+        match ev.kind {
+            Kind::Begin => {
+                open.push(name_str(ev.name));
+                out.push(trace_event(name_str(ev.name), "B", ts, pid, tid, None));
+            }
+            Kind::End => {
+                // a ring that wrapped mid-span can hold an E with no B:
+                // drop it, the lane stays balanced
+                if let Some(name) = open.pop() {
+                    out.push(trace_event(name, "E", ts, pid, tid, None));
+                }
+            }
+            Kind::Instant => {
+                out.push(trace_event(name_str(ev.name), "i", ts, pid, tid, Some(ev.value)));
+            }
+            Kind::Counter => {
+                out.push(trace_event(name_str(ev.name), "C", ts, pid, tid, Some(ev.value)));
+            }
+        }
+    }
+    // close dangling spans (trace stopped mid-round) at the last stamp
+    while let Some(name) = open.pop() {
+        out.push(trace_event(name, "E", last_ts.max(0), pid, tid, None));
+    }
+}
+
+fn trace_event(name: &str, ph: &str, ts: i64, pid: u8, tid: u32, value: Option<f64>) -> Value {
+    let mut pairs = vec![
+        ("name".into(), Value::Str(name.into())),
+        ("ph".into(), Value::Str(ph.into())),
+        ("ts".into(), Value::Num(ts as f64)),
+        ("pid".into(), Value::Num(pid as f64)),
+        ("tid".into(), Value::Num(tid as f64)),
+    ];
+    if ph == "i" {
+        pairs.push(("s".into(), Value::Str("t".into())));
+    }
+    if let Some(v) = value {
+        pairs.push(("args".into(), Value::obj(vec![("value".into(), Value::Num(v))])));
+    }
+    Value::obj(pairs)
+}
+
+fn process_name(pid: u8, name: &str) -> Value {
+    Value::obj(vec![
+        ("name".into(), Value::Str("process_name".into())),
+        ("ph".into(), Value::Str("M".into())),
+        ("pid".into(), Value::Num(pid as f64)),
+        ("args".into(), Value::obj(vec![("name".into(), Value::Str(name.into()))])),
+    ])
+}
+
+fn thread_name(pid: u8, tid: u32) -> Value {
+    let label = lane_label(tid);
+    Value::obj(vec![
+        ("name".into(), Value::Str("thread_name".into())),
+        ("ph".into(), Value::Str("M".into())),
+        ("pid".into(), Value::Num(pid as f64)),
+        ("tid".into(), Value::Num(tid as f64)),
+        ("args".into(), Value::obj(vec![("name".into(), Value::Str(label))])),
+    ])
+}
+
+fn lane_label(tid: u32) -> String {
+    match tid {
+        LANE_ENGINE => "engine".into(),
+        LANE_TRANSPORT => "transport".into(),
+        t if super::is_round_lane(t) => format!("round slot {}", t - 0x2000_0000),
+        t if (0x1000_0000..0x2000_0000).contains(&t) => {
+            format!("device {}", t - 0x1000_0000)
+        }
+        t if t >= 0x4000_0000 => format!("worker {}", t - 0x4000_0000),
+        t => format!("lane {t}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{
+        device_lane, round_lane, COHORT_DRAW, DEVICE_ARRIVAL, LOCAL_SWEEP, QUORUM_WAIT, ROUND,
+    };
+    use super::*;
+    use crate::util::json;
+
+    fn ev(name: u16, kind: Kind, lane: u32, sim_us: i64, wall_ns: u64) -> Event {
+        Event { name, kind, lane, sim_us, wall_ns, value: 0.0 }
+    }
+
+    #[test]
+    fn ring_keeps_the_newest_events() {
+        let mut sink = TraceSink::with_capacity(3);
+        for i in 0..5 {
+            sink.push(ev(ROUND, Kind::Instant, 0, i, i as u64));
+        }
+        assert_eq!(sink.len(), 3);
+        assert_eq!(sink.dropped(), 2);
+        let order: Vec<i64> = sink.events_in_order().iter().map(|e| e.sim_us).collect();
+        assert_eq!(order, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn chrome_export_parses_and_balances() {
+        let mut sink = TraceSink::with_capacity(64);
+        let lane = round_lane(0);
+        sink.push(ev(ROUND, Kind::Begin, lane, 0, 10));
+        sink.push(ev(COHORT_DRAW, Kind::Instant, lane, 0, 20));
+        sink.push(ev(QUORUM_WAIT, Kind::Begin, lane, 0, 30));
+        sink.push(ev(QUORUM_WAIT, Kind::End, lane, 500, 40));
+        sink.push(ev(ROUND, Kind::End, lane, 500, 50));
+        // wall-only engine span
+        sink.push(ev(LOCAL_SWEEP, Kind::Begin, LANE_ENGINE, -1, 100));
+        sink.push(ev(LOCAL_SWEEP, Kind::End, LANE_ENGINE, -1, 9_000));
+        let v = json::parse(&sink.to_chrome_trace()).unwrap();
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        // per-lane B/E balance
+        let mut depth = 0i64;
+        for e in evs {
+            match e.get("ph").unwrap().as_str().unwrap() {
+                "B" => depth += 1,
+                "E" => depth -= 1,
+                _ => {}
+            }
+            assert!(depth >= 0);
+        }
+        assert_eq!(depth, 0);
+        // the sim lane rides pid 1, the engine lane pid 2
+        let pids: Vec<f64> = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() != Some("M"))
+            .map(|e| e.get("pid").unwrap().as_f64().unwrap())
+            .collect();
+        assert!(pids.contains(&1.0) && pids.contains(&2.0));
+    }
+
+    #[test]
+    fn wrapped_ring_still_exports_balanced_spans() {
+        let mut sink = TraceSink::with_capacity(3);
+        let lane = round_lane(0);
+        // the B falls out of the ring; only the E and a fresh B survive
+        sink.push(ev(ROUND, Kind::Begin, lane, 0, 0));
+        sink.push(ev(COHORT_DRAW, Kind::Instant, lane, 1, 1));
+        sink.push(ev(ROUND, Kind::End, lane, 2, 2));
+        sink.push(ev(ROUND, Kind::Begin, lane, 3, 3)); // evicts the first B
+        let v = json::parse(&sink.to_chrome_trace()).unwrap();
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        let mut depth = 0i64;
+        for e in evs {
+            match e.get("ph").unwrap().as_str().unwrap() {
+                "B" => depth += 1,
+                "E" => depth -= 1,
+                _ => {}
+            }
+            assert!(depth >= 0, "unmatched E must be dropped");
+        }
+        assert_eq!(depth, 0, "dangling B must be closed at export");
+    }
+
+    #[test]
+    fn timestamps_are_clamped_monotone_per_lane() {
+        let mut sink = TraceSink::with_capacity(8);
+        let lane = device_lane(7);
+        sink.push(ev(DEVICE_ARRIVAL, Kind::Instant, lane, 900, 0));
+        sink.push(ev(DEVICE_ARRIVAL, Kind::Instant, lane, 100, 1)); // out of order
+        let v = json::parse(&sink.to_chrome_trace()).unwrap();
+        let ts: Vec<f64> = v
+            .get("traceEvents")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("i"))
+            .map(|e| e.get("ts").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(ts, vec![900.0, 900.0]);
+    }
+
+    #[test]
+    fn jsonl_emits_one_object_per_event() {
+        let mut sink = TraceSink::with_capacity(8);
+        sink.push(ev(ROUND, Kind::Begin, round_lane(0), 0, 0));
+        sink.push(ev(ROUND, Kind::End, round_lane(0), 5, 5));
+        let text = sink.to_jsonl();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let v = json::parse(line).unwrap();
+            assert_eq!(v.get("name").unwrap().as_str(), Some("round"));
+        }
+    }
+}

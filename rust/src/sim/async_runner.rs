@@ -59,6 +59,8 @@ use std::collections::HashSet;
 use crate::algorithms::{Engine, FedEnv};
 use crate::metrics::{Record, Series};
 use crate::model::{ClientStore, DenseStore, ShardedStore};
+use crate::obs;
+use crate::obs::registry;
 use crate::protocol::{AsyncSchedule, StalenessWeight, StepKind};
 use crate::util::Rng;
 
@@ -380,6 +382,9 @@ impl<'e, S: ClientStore> AsyncFleetSim<'e, S> {
     pub fn evaluate(&self, step: u64) -> anyhow::Result<Record> {
         let mut rec = self.eng.evaluate(step)?;
         rec.sim_time_s = self.clock;
+        // copy-on-write occupancy at each evaluation point
+        registry::observe(registry::Hist::ShardOccupancy,
+                          self.eng.store().materialized_rows() as u64);
         Ok(rec)
     }
 
@@ -459,6 +464,12 @@ impl<'e, S: ClientStore> AsyncFleetSim<'e, S> {
     fn dispatch(&mut self, k: u64) -> anyhow::Result<()> {
         self.eng.compress_uplinks(&self.cohort)?;
         let sidx = self.alloc_slot();
+        // per-slot round lane: overlapping rounds each get their own
+        // Chrome-trace lane, so B/E stacks never interleave; at
+        // `inflight=1` every round rides slot 0 — the synchronous lane
+        obs::span_begin(obs::ROUND, obs::round_lane(sidx), self.clock);
+        obs::instant(obs::COHORT_DRAW, obs::round_lane(sidx), self.clock,
+                     self.cohort.len() as f64);
         let m = self.cohort.len();
         let quorum = ((self.quorum_frac * m as f64).ceil() as usize).clamp(1, m);
         {
@@ -482,6 +493,9 @@ impl<'e, S: ClientStore> AsyncFleetSim<'e, S> {
             self.stats.events += 1;
             self.busy.insert(i);
         }
+        registry::observe(registry::Hist::CohortSize, m as u64);
+        registry::observe(registry::Hist::QueueDepth, self.queue.len() as u64);
+        obs::span_begin(obs::QUORUM_WAIT, obs::round_lane(sidx), self.clock);
         self.in_flight += 1;
         self.astats.dispatched_rounds += 1;
         Ok(())
@@ -516,10 +530,13 @@ impl<'e, S: ClientStore> AsyncFleetSim<'e, S> {
             // this device and everything still queued missed the round
             let deadline = self.slots[sidx].deadline;
             self.stats.dropped_stragglers += 1 + self.slots[sidx].pending as u64;
+            obs::instant(obs::DEADLINE_ABORT, obs::round_lane(sidx), deadline,
+                         (1 + self.slots[sidx].pending) as f64);
             return self.close_round(sidx, deadline);
         }
         self.slots[sidx].responded += 1;
         self.slots[sidx].responded_ids.push(i);
+        obs::instant(obs::DEVICE_ARRIVAL, obs::device_lane(i as usize), t, 0.0);
         if self.buffer_target == 0 {
             self.slots[sidx].arrived.push(i);
         } else {
@@ -527,6 +544,9 @@ impl<'e, S: ClientStore> AsyncFleetSim<'e, S> {
             let kd = self.slots[sidx].k;
             if self.server_version - version > self.max_stale {
                 // too many commits landed while this update was in flight
+                let s = self.server_version - version;
+                obs::instant(obs::STALE_DISCARD, obs::LANE_ENGINE, t, s as f64);
+                registry::observe(registry::Hist::Staleness, s);
                 self.eng.discard_uplink(kd, i, true)?;
                 self.astats.stale_discarded += 1;
                 self.busy.remove(&i);
@@ -562,8 +582,20 @@ impl<'e, S: ClientStore> AsyncFleetSim<'e, S> {
                 self.eng.abort_fresh(kd, &sampled)?;
                 self.stats.skipped_rounds += 1;
                 self.clock = round_end.max(self.clock + self.mean_step_s);
+                obs::span_end(obs::QUORUM_WAIT, obs::round_lane(sidx), round_end);
+                obs::instant(obs::ROUND_ABORT, obs::round_lane(sidx),
+                             round_end, 0.0);
+                obs::span_end(obs::ROUND, obs::round_lane(sidx), round_end);
             } else {
                 arrived.sort_unstable();
+                // committed-round wire volume, mirroring the sync runner
+                let mut round_bits = 0u64;
+                for &i in &sampled {
+                    round_bits += self.eng.uplink_frame_bytes(i as usize) as u64 * 8;
+                }
+                round_bits += self.eng.downlink_frame_bytes() as u64 * 8
+                    * arrived.len() as u64;
+                registry::observe(registry::Hist::RoundBits, round_bits);
                 self.eng.complete_fresh(kd, &arrived, &sampled)?;
                 for _ in &arrived {
                     self.astats.record_applied(self.server_version, version);
@@ -587,6 +619,10 @@ impl<'e, S: ClientStore> AsyncFleetSim<'e, S> {
                     down_t = down_t.max(dev.latency_s + dbits / dev.down_bps);
                 }
                 self.clock = self.clock.max(round_end + down_t);
+                obs::span_end(obs::QUORUM_WAIT, obs::round_lane(sidx), round_end);
+                obs::instant(obs::ROUND_COMMIT, obs::round_lane(sidx), round_end,
+                             arrived.len() as f64);
+                obs::span_end(obs::ROUND, obs::round_lane(sidx), self.clock);
             }
             for &i in &sampled {
                 self.busy.remove(&i);
@@ -606,6 +642,10 @@ impl<'e, S: ClientStore> AsyncFleetSim<'e, S> {
                 self.stats.skipped_rounds += 1;
             }
             self.clock = self.clock.max(round_end);
+            // buffered rounds never commit at close (applies happen in
+            // `apply_buffer`); only the span pair needs closing
+            obs::span_end(obs::QUORUM_WAIT, obs::round_lane(sidx), round_end);
+            obs::span_end(obs::ROUND, obs::round_lane(sidx), self.clock);
         }
         // free the slot: the generation bump invalidates any arrival
         // events of this round still sitting in the queue
@@ -634,12 +674,16 @@ impl<'e, S: ClientStore> AsyncFleetSim<'e, S> {
         self.apply_versions.clear();
         for e in &entries {
             let s = self.server_version - e.version;
+            registry::observe(registry::Hist::Staleness, s);
             if s > self.max_stale {
                 // went stale while waiting in the buffer
+                obs::instant(obs::STALE_DISCARD, obs::LANE_ENGINE, t_now,
+                             s as f64);
                 self.eng.discard_uplink(e.k, e.client, true)?;
                 self.astats.stale_discarded += 1;
                 self.busy.remove(&e.client);
             } else {
+                obs::instant(obs::STALE_APPLY, obs::LANE_ENGINE, t_now, s as f64);
                 self.apply_ids.push(e.client);
                 self.apply_weights.push(self.stale_weight.weight(s) as f32);
                 self.apply_versions.push(e.version);
@@ -684,6 +728,7 @@ impl<'e, S: ClientStore> AsyncFleetSim<'e, S> {
 /// goodput block filled into the [`SimResult`].
 pub fn run(cfg: &SimCfg) -> anyhow::Result<SimResult> {
     let env = build_env(cfg);
+    env.pool.enable_profiling();
     let mut sim = AsyncShardedSim::new(cfg, &env)?;
     let mut series = Series::new(cfg.label());
     series.records.push(sim.evaluate(0)?);
@@ -709,6 +754,10 @@ pub fn run(cfg: &SimCfg) -> anyhow::Result<SimResult> {
              ({touched} touched clients of {})",
             store.resident_bytes(), store.len());
     }
+    for ns in env.pool.busy_ns() {
+        registry::observe(registry::Hist::WorkerBusyNs, ns);
+    }
+    registry::set_gauge(registry::Gauge::PoolUtilization, env.pool.utilization());
     Ok(SimResult {
         scenario: cfg.scenario.spec.clone(),
         alg: cfg.scenario.alg.clone(),

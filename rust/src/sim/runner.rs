@@ -59,6 +59,8 @@ use std::collections::HashSet;
 use crate::algorithms::{AlgSpec, FedEnv, L2gd, ShardedL2gdEngine, FLEET_ALGS};
 use crate::experiments::fig3;
 use crate::metrics::{Record, Series};
+use crate::obs;
+use crate::obs::registry;
 use crate::protocol::StepKind;
 use crate::util::json::Value;
 use crate::util::Rng;
@@ -367,6 +369,9 @@ impl<'e> FleetSim<'e> {
     pub fn evaluate(&self, step: u64) -> anyhow::Result<Record> {
         let mut rec = self.eng.evaluate(step)?;
         rec.sim_time_s = self.clock;
+        // copy-on-write occupancy at each evaluation point
+        registry::observe(registry::Hist::ShardOccupancy,
+                          self.eng.store().materialized_rows() as u64);
         Ok(rec)
     }
 
@@ -436,6 +441,13 @@ impl<'e> FleetSim<'e> {
     /// schedule upload arrivals through the event queue, close at quorum
     /// or deadline, and commit the round over whoever made it.
     fn fresh_round(&mut self, k: u64) -> anyhow::Result<()> {
+        // round-lifecycle trace: the sync runner has exactly one round in
+        // flight, so it always rides round slot 0 (the async runner at
+        // `inflight=1` lands on the same lane and emits the same ordered
+        // name sequence — pinned by the obs_trace integration test)
+        obs::span_begin(obs::ROUND, obs::round_lane(0), self.clock);
+        obs::instant(obs::COHORT_DRAW, obs::round_lane(0), self.clock,
+                     self.cohort.len() as f64);
         self.eng.compress_uplinks(&self.cohort)?;
         // schedule arrivals: compute + latency + serialized frame transfer
         self.queue.clear();
@@ -447,6 +459,9 @@ impl<'e> FleetSim<'e> {
             self.stats.events += 1;
         }
         let m = self.cohort.len();
+        registry::observe(registry::Hist::CohortSize, m as u64);
+        registry::observe(registry::Hist::QueueDepth, self.queue.len() as u64);
+        obs::span_begin(obs::QUORUM_WAIT, obs::round_lane(0), self.clock);
         let quorum = ((self.quorum_frac * m as f64).ceil() as usize).clamp(1, m);
         let deadline = self.clock + self.deadline_s;
         self.arrived.clear();
@@ -457,9 +472,12 @@ impl<'e> FleetSim<'e> {
                 // this device and everything still queued missed the round
                 self.stats.dropped_stragglers += 1 + self.queue.len() as u64;
                 round_end = deadline;
+                obs::instant(obs::DEADLINE_ABORT, obs::round_lane(0), deadline,
+                             (1 + self.queue.len()) as f64);
                 break;
             }
             self.arrived.push(i);
+            obs::instant(obs::DEVICE_ARRIVAL, obs::device_lane(i as usize), t, 0.0);
             round_end = t;
             if self.arrived.len() >= quorum {
                 self.stats.dropped_stragglers += self.queue.len() as u64;
@@ -473,9 +491,21 @@ impl<'e> FleetSim<'e> {
             self.eng.abort_fresh(k, &self.cohort)?;
             self.stats.skipped_rounds += 1;
             self.clock = round_end.max(self.clock + self.mean_step_s);
+            obs::span_end(obs::QUORUM_WAIT, obs::round_lane(0), round_end);
+            obs::instant(obs::ROUND_ABORT, obs::round_lane(0), round_end, 0.0);
+            obs::span_end(obs::ROUND, obs::round_lane(0), round_end);
             return Ok(());
         }
         self.arrived.sort_unstable();
+        // committed-round wire volume: every sampled uplink frame crossed
+        // the network (arrived or dropped) + the anchor broadcast
+        let mut round_bits = 0u64;
+        for &i in &self.cohort {
+            round_bits += self.eng.uplink_frame_bytes(i as usize) as u64 * 8;
+        }
+        round_bits +=
+            self.eng.downlink_frame_bytes() as u64 * 8 * self.arrived.len() as u64;
+        registry::observe(registry::Hist::RoundBits, round_bits);
         self.eng.complete_fresh(k, &self.arrived, &self.cohort)?;
         // the broadcast reached only the cohort: they alone hold the new
         // anchor for subsequent cached-aggregation steps
@@ -496,6 +526,10 @@ impl<'e> FleetSim<'e> {
             down_t = down_t.max(dev.latency_s + dbits / dev.down_bps);
         }
         self.clock = round_end + down_t;
+        obs::span_end(obs::QUORUM_WAIT, obs::round_lane(0), round_end);
+        obs::instant(obs::ROUND_COMMIT, obs::round_lane(0), round_end,
+                     self.arrived.len() as f64);
+        obs::span_end(obs::ROUND, obs::round_lane(0), self.clock);
         Ok(())
     }
 }
@@ -577,6 +611,7 @@ impl SimResult {
 /// `scale-smoke` CI job with it).
 pub fn run(cfg: &SimCfg) -> anyhow::Result<SimResult> {
     let env = build_env(cfg);
+    env.pool.enable_profiling();
     let mut sim = FleetSim::new(cfg, &env)?;
     let mut series = Series::new(cfg.label());
     series.records.push(sim.evaluate(0)?);
@@ -602,6 +637,10 @@ pub fn run(cfg: &SimCfg) -> anyhow::Result<SimResult> {
              ({touched} touched clients of {})",
             store.resident_bytes(), store.len());
     }
+    for ns in env.pool.busy_ns() {
+        registry::observe(registry::Hist::WorkerBusyNs, ns);
+    }
+    registry::set_gauge(registry::Gauge::PoolUtilization, env.pool.utilization());
     Ok(SimResult {
         scenario: cfg.scenario.spec.clone(),
         alg: cfg.scenario.alg.clone(),

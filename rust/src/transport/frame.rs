@@ -24,6 +24,8 @@
 //! never drift from what a receiver would actually parse.
 
 use crate::compress::Compressed;
+use crate::obs;
+use crate::obs::registry;
 
 pub const MAGIC: u16 = 0x5046;
 pub const VERSION: u8 = 1;
@@ -93,6 +95,9 @@ pub fn encode_frame(h: &FrameHeader, payload: &[u8], out: &mut Vec<u8>) {
     out.extend_from_slice(&h.payload_bits.to_le_bytes());
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     out.extend_from_slice(payload);
+    registry::count(registry::Counter::FramesEncoded, 1);
+    obs::instant(obs::FRAME_ENCODE, obs::LANE_TRANSPORT, obs::NO_SIM_TIME,
+                 out.len() as f64);
 }
 
 /// Parse a frame, validating magic, version, direction, length, and the
@@ -128,6 +133,9 @@ pub fn decode_frame(buf: &[u8]) -> anyhow::Result<(FrameHeader, &[u8])> {
         spec_id: u16_at(12),
         payload_bits,
     };
+    registry::count(registry::Counter::FramesDecoded, 1);
+    obs::instant(obs::FRAME_DECODE, obs::LANE_TRANSPORT, obs::NO_SIM_TIME,
+                 buf.len() as f64);
     Ok((h, &buf[HEADER_BYTES..]))
 }
 

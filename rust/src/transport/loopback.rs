@@ -34,6 +34,9 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use crate::obs;
+use crate::obs::registry;
+
 use super::frame::{decode_frame, encode_frame, Direction, FrameHeader,
                    BROADCAST, HEADER_BYTES};
 
@@ -220,6 +223,10 @@ impl LoopbackClient {
         encode_frame(h, payload, &mut self.tx_buf);
         self.stream.write_all(&self.tx_buf)?;
         self.bytes_sent += self.tx_buf.len() as u64;
+        registry::count(registry::Counter::LoopbackTxBytes,
+                        self.tx_buf.len() as u64);
+        obs::instant(obs::LOOPBACK_TX, obs::LANE_TRANSPORT, obs::NO_SIM_TIME,
+                     self.tx_buf.len() as f64);
         Ok(())
     }
 
@@ -237,6 +244,10 @@ impl LoopbackClient {
         self.rx_buf.resize(HEADER_BYTES + payload_len, 0);
         self.stream.read_exact(&mut self.rx_buf[HEADER_BYTES..])?;
         self.bytes_received += self.rx_buf.len() as u64;
+        registry::count(registry::Counter::LoopbackRxBytes,
+                        self.rx_buf.len() as u64);
+        obs::instant(obs::LOOPBACK_RX, obs::LANE_TRANSPORT, obs::NO_SIM_TIME,
+                     self.rx_buf.len() as f64);
         let (h, payload) = decode_frame(&self.rx_buf)?;
         Ok((h, payload.to_vec()))
     }

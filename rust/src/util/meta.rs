@@ -61,13 +61,16 @@ fn non_empty(s: &str) -> Option<String> {
 /// The shared `meta` object every bench emitter embeds: worker threads
 /// the measured section actually ran with, the kernel dispatch level
 /// ([`kernels::active_level`] — reflects the `PFL_FORCE_SCALAR_KERNELS`
-/// escape hatch), and the git revision.
-pub fn bench_meta(threads: usize) -> Value {
+/// escape hatch), the git revision, and the thread pool's busy fraction
+/// over the measured window (0.0 when the emitter ran without a pool or
+/// without the profiling hooks armed).
+pub fn bench_meta(threads: usize, pool_utilization: f64) -> Value {
     Value::obj(vec![
         ("threads".into(), Value::Num(threads as f64)),
         ("cpu_features".into(),
          Value::Str(kernels::active_level().name().into())),
         ("git_rev".into(), Value::Str(git_revision())),
+        ("pool_utilization".into(), Value::Num(pool_utilization)),
     ])
 }
 
@@ -76,13 +79,14 @@ mod tests {
     use super::*;
 
     #[test]
-    fn bench_meta_has_the_three_keys() {
-        let m = bench_meta(7);
+    fn bench_meta_has_the_four_keys() {
+        let m = bench_meta(7, 0.25);
         assert_eq!(m.get("threads").unwrap().as_usize(), Some(7));
         let feats = m.get("cpu_features").unwrap().as_str().unwrap();
         assert!(["avx2", "sse2", "scalar"].contains(&feats), "{feats}");
         let rev = m.get("git_rev").unwrap().as_str().unwrap();
         assert!(!rev.is_empty());
+        assert_eq!(m.get("pool_utilization").unwrap().as_f64(), Some(0.25));
     }
 
     #[test]

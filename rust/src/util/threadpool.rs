@@ -24,8 +24,12 @@
 
 use std::cell::Cell;
 use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
+use std::time::Instant;
+
+use crate::obs;
 
 thread_local! {
     /// True while this thread is executing a posted scope closure. Lets
@@ -64,6 +68,12 @@ struct Inner {
     work: Condvar,
     /// the submitter waits here for task completion
     done: Condvar,
+    /// profiling hooks: per-worker busy nanoseconds, accumulated around
+    /// each executed closure while `profile` is set (or tracing is on)
+    busy: Vec<AtomicU64>,
+    profile: AtomicBool,
+    /// wall anchor of the current profiling window (None = never enabled)
+    profile_since: Mutex<Option<Instant>>,
 }
 
 pub struct ThreadPool {
@@ -72,7 +82,7 @@ pub struct ThreadPool {
     size: usize,
 }
 
-fn worker(inner: Arc<Inner>) {
+fn worker(inner: Arc<Inner>, widx: usize) {
     let mut st = inner.state.lock().unwrap();
     loop {
         if st.shutdown {
@@ -87,9 +97,18 @@ fn worker(inner: Arc<Inner>) {
                 // Safety: the submitter keeps the closure alive until the
                 // task completes (it is blocked in scope_for).
                 let f = unsafe { &*ptr };
+                // busy-time accounting (profiling hook) — a stack Instant
+                // when armed, nothing at all otherwise
+                let t0 = inner.profile.load(Ordering::Relaxed).then(Instant::now);
+                obs::span_begin(obs::WORKER_TASK, obs::worker_lane(widx), obs::NO_SIM_TIME);
                 IN_SCOPE_WORKER.with(|w| w.set(true));
                 let res = std::panic::catch_unwind(AssertUnwindSafe(|| f(i)));
                 IN_SCOPE_WORKER.with(|w| w.set(false));
+                obs::span_end(obs::WORKER_TASK, obs::worker_lane(widx), obs::NO_SIM_TIME);
+                if let Some(t0) = t0 {
+                    let ns = t0.elapsed().as_nanos() as u64;
+                    inner.busy[widx].fetch_add(ns, Ordering::Relaxed);
+                }
                 st = inner.state.lock().unwrap();
                 st.active -= 1;
                 if let Err(p) = res {
@@ -121,6 +140,9 @@ impl ThreadPool {
             }),
             work: Condvar::new(),
             done: Condvar::new(),
+            busy: (0..size).map(|_| AtomicU64::new(0)).collect(),
+            profile: AtomicBool::new(false),
+            profile_since: Mutex::new(None),
         });
         let mut handles = Vec::with_capacity(size);
         for i in 0..size {
@@ -128,7 +150,7 @@ impl ThreadPool {
             handles.push(
                 thread::Builder::new()
                     .name(format!("pfl-worker-{i}"))
-                    .spawn(move || worker(inner))
+                    .spawn(move || worker(inner, i))
                     .expect("spawn worker"),
             );
         }
@@ -159,6 +181,44 @@ impl ThreadPool {
 
     pub fn size(&self) -> usize {
         self.size
+    }
+
+    /// Arm the per-worker busy-time profiling hooks: zero the busy
+    /// counters and open a fresh measurement window. Off by default —
+    /// un-profiled dispatch takes exactly one extra relaxed load per
+    /// executed closure.
+    pub fn enable_profiling(&self) {
+        for b in &self.inner.busy {
+            b.store(0, Ordering::Relaxed);
+        }
+        let mut since =
+            self.inner.profile_since.lock().unwrap_or_else(|e| e.into_inner());
+        *since = Some(Instant::now());
+        drop(since);
+        self.inner.profile.store(true, Ordering::SeqCst);
+    }
+
+    /// Per-worker busy nanoseconds accumulated since
+    /// [`Self::enable_profiling`] (all zeros if never armed).
+    pub fn busy_ns(&self) -> Vec<u64> {
+        self.inner.busy.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Busy fraction of the pool over the profiling window:
+    /// Σ busy-ns / (window-ns × workers), clamped to `0..=1`.
+    /// Returns `0.0` if profiling was never enabled.
+    pub fn utilization(&self) -> f64 {
+        let since =
+            *self.inner.profile_since.lock().unwrap_or_else(|e| e.into_inner());
+        let Some(t0) = since else {
+            return 0.0;
+        };
+        let window = t0.elapsed().as_nanos() as f64;
+        if window <= 0.0 {
+            return 0.0;
+        }
+        let busy: u64 = self.busy_ns().iter().sum();
+        (busy as f64 / (window * self.size as f64)).clamp(0.0, 1.0)
     }
 
     /// Run `f(i)` for every `i in 0..n` on the pool and block until all
@@ -498,6 +558,26 @@ mod tests {
         });
         assert_eq!(hits.load(Ordering::SeqCst), 4);
         assert_eq!(distinct.lock().unwrap().len(), 4, "must run on 4 distinct workers");
+    }
+
+    #[test]
+    fn profiling_accumulates_busy_time_and_bounds_utilization() {
+        let pool = ThreadPool::new(2);
+        // never armed: identically zero
+        assert_eq!(pool.utilization(), 0.0);
+        assert!(pool.busy_ns().iter().all(|&ns| ns == 0));
+        pool.enable_profiling();
+        pool.scope_for(8, |_| {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        let busy: u64 = pool.busy_ns().iter().sum();
+        assert!(busy >= 8 * 1_000_000, "8 × 2ms of work must register, got {busy}ns");
+        let u = pool.utilization();
+        assert!((0.0..=1.0).contains(&u), "utilization {u} out of range");
+        assert!(u > 0.0);
+        // re-arming zeroes the window
+        pool.enable_profiling();
+        assert!(pool.busy_ns().iter().all(|&ns| ns == 0));
     }
 
     #[test]

@@ -1,0 +1,153 @@
+//! Observability acceptance: the Chrome trace emitted by the real `pfl`
+//! binary is well-formed (balanced span stacks, monotone per-lane
+//! timestamps), and the round-lifecycle event sequence is identical
+//! between the synchronous runner and the async runner at
+//! `inflight=1,buffer=cohort` — the tracing counterpart of the
+//! bit-for-bit series pin in `async_sim.rs`.
+
+use std::process::Command;
+
+use pfl::obs;
+use pfl::sim::{async_runner, runner, scenario, SimCfg};
+use pfl::util::json::{self, Value};
+
+/// Serialize tests that toggle the process-global obs gate.
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    static GATE: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Per-(pid, tid) lane validation over a parsed Chrome trace: span
+/// stacks balance (never a dangling E, depth ends at zero), span
+/// durations are non-negative, and timestamps never run backwards.
+fn validate_chrome_trace(v: &Value) -> (usize, usize) {
+    let evs = v.get("traceEvents").expect("traceEvents").as_arr().unwrap();
+    assert!(!evs.is_empty());
+    use std::collections::HashMap;
+    let mut stacks = HashMap::new();
+    let mut last_ts: HashMap<(u64, u64), f64> = HashMap::new();
+    let (mut spans, mut round_begins) = (0usize, 0usize);
+    for e in evs {
+        let ph = e.get("ph").unwrap().as_str().unwrap();
+        if ph == "M" {
+            continue; // metadata events carry no ts
+        }
+        let name = e.get("name").unwrap().as_str().unwrap().to_string();
+        let ts = e.get("ts").unwrap().as_f64().unwrap();
+        let pid = e.get("pid").unwrap().as_f64().unwrap() as u64;
+        let tid = e.get("tid").unwrap().as_f64().unwrap() as u64;
+        assert!(ts >= 0.0, "negative ts {ts} on lane {pid}/{tid}");
+        let lane = (pid, tid);
+        let prev = last_ts.insert(lane, ts).unwrap_or(f64::MIN);
+        assert!(ts >= prev,
+                "lane {pid}/{tid}: ts {ts} precedes {prev} ({name})");
+        match ph {
+            "B" => {
+                if name == "round" {
+                    round_begins += 1;
+                }
+                stacks.entry(lane).or_default().push((name, ts));
+            }
+            "E" => {
+                let (bname, bts) = stacks
+                    .get_mut(&lane)
+                    .and_then(Vec::pop)
+                    .unwrap_or_else(|| panic!("unmatched E on lane {pid}/{tid}"));
+                assert_eq!(bname, name, "B/E name mismatch on lane {pid}/{tid}");
+                assert!(ts >= bts, "negative duration for {name}: {bts}..{ts}");
+                spans += 1;
+            }
+            "i" | "C" => {}
+            other => panic!("unexpected ph {other:?}"),
+        }
+    }
+    for (lane, stack) in &stacks {
+        assert!(stack.is_empty(), "lane {lane:?} left {} open spans",
+                stack.len());
+    }
+    (spans, round_begins)
+}
+
+/// Acceptance: `pfl sim --scenario straggler-heavy --smoke --trace ...`
+/// emits a Chrome trace that parses, balances, and stays monotone per
+/// lane — plus the Prometheus dump and the `obs` summary block.
+#[test]
+fn sim_binary_emits_a_valid_chrome_trace() {
+    let dir = std::env::temp_dir().join(format!("pfl_obs_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let trace = dir.join("trace.json");
+    let out = Command::new(env!("CARGO_BIN_EXE_pfl"))
+        .args(["sim", "--scenario", "straggler-heavy", "--smoke",
+               "--trace", trace.to_str().unwrap(),
+               "--out", dir.to_str().unwrap()])
+        .output()
+        .expect("spawning pfl");
+    assert!(out.status.success(), "pfl sim failed:\n{}{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr));
+
+    let text = std::fs::read_to_string(&trace).expect("trace.json written");
+    let v = json::parse(&text).expect("trace.json parses");
+    let (spans, round_begins) = validate_chrome_trace(&v);
+    assert!(spans > 0, "trace holds no completed spans");
+    assert!(round_begins > 0, "trace holds no round spans");
+
+    let prom = std::fs::read_to_string(dir.join("metrics.prom")).unwrap();
+    assert!(prom.contains("pfl_cohort_size"), "{prom}");
+    assert!(prom.contains("# TYPE"), "{prom}");
+
+    let summary =
+        std::fs::read_to_string(dir.join("sim_summary.json")).unwrap();
+    let sv = json::parse(&summary).unwrap();
+    let obs_block = sv.get("obs").expect("summary obs block");
+    let cohort = obs_block
+        .get("histograms").unwrap()
+        .get("cohort_size").expect("cohort_size histogram");
+    assert!(cohort.get("count").unwrap().as_f64().unwrap() > 0.0);
+    assert!(cohort.get("p95").unwrap().as_f64().is_some());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Record one run's round-lifecycle events: (name, ph) in emit order,
+/// filtered to the round lanes — the scheduler's observable skeleton.
+fn round_sequence(cfg: &SimCfg, use_async: bool) -> Vec<(String, String)> {
+    obs::enable(1 << 18);
+    let res = if use_async {
+        async_runner::run(cfg)
+    } else {
+        runner::run(cfg)
+    };
+    let sink = obs::disable().expect("sink installed");
+    res.unwrap();
+    assert_eq!(sink.dropped(), 0, "ring wrapped — raise the test capacity");
+    sink.events_in_order()
+        .iter()
+        .filter(|e| obs::is_round_lane(e.lane))
+        .map(|e| (obs::name_str(e.name).to_string(), e.kind.ph().to_string()))
+        .collect()
+}
+
+/// The tracing counterpart of the sync≡async pin: at
+/// `inflight=1,buffer=cohort` both runners emit the same ordered
+/// round-lifecycle event-name sequence.
+#[test]
+fn sync_and_inflight_one_async_emit_the_same_round_sequence() {
+    let _g = serial();
+    const SPEC: &str = "straggler-heavy:clients=12,quorum=0.5,deadline=0.5";
+    let mut sc = SimCfg::smoke(scenario::from_spec(SPEC).unwrap());
+    sc.steps = 300;
+    sc.seed = 1;
+    let mut ac = SimCfg::smoke(scenario::from_spec(&format!(
+        "{SPEC},async=buffered,buffer=cohort,inflight=1,stale=const"
+    )).unwrap());
+    ac.steps = 300;
+    ac.seed = 1;
+    let sync_seq = round_sequence(&sc, false);
+    let async_seq = round_sequence(&ac, true);
+    assert!(!sync_seq.is_empty());
+    assert!(sync_seq.iter().any(|(n, _)| n == "round_commit"),
+            "no committed round in the pinned scenario");
+    assert_eq!(sync_seq, async_seq,
+               "round-lifecycle sequences diverge at inflight=1");
+}
