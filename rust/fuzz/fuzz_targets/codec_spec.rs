@@ -1,0 +1,17 @@
+//! Codec-spec fuzz target: the registry parser never panics, and every
+//! accepted spec's canonical name (`Compressor::name`) reparses to the
+//! same canonical name.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+use pfl::compress::Compressor as _;
+
+fuzz_target!(|data: &[u8]| {
+    let Ok(s) = std::str::from_utf8(data) else { return };
+    let Ok(codec) = pfl::compress::from_spec(s) else { return };
+    let name = codec.name();
+    let re = pfl::compress::from_spec(&name).unwrap_or_else(|e| {
+        panic!("`{s}` parsed but its name `{name}` fails: {e:#}")
+    });
+    assert_eq!(re.name(), name, "name of `{s}` is not a fixpoint");
+});

@@ -1,0 +1,15 @@
+//! Wire-frame fuzz target: `decode_frame` never panics on arbitrary
+//! bytes, and every accepted frame re-encodes to exactly the input
+//! (decode∘encode = id on the accepted set).
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+use pfl::transport::frame::{decode_frame, encode_frame};
+
+fuzz_target!(|data: &[u8]| {
+    let Ok((header, payload)) = decode_frame(data) else { return };
+    let mut out = Vec::new();
+    encode_frame(&header, payload, &mut out);
+    assert_eq!(out.as_slice(), data,
+               "decode→encode did not reproduce the frame bytes");
+});

@@ -1,0 +1,19 @@
+//! Scenario-spec fuzz target: parsing never panics on arbitrary input,
+//! and every accepted spec round-trips — `to_spec()` reparses to the
+//! same configuration and printing is a fixpoint.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let Ok(s) = std::str::from_utf8(data) else { return };
+    // must never panic — errors are the contract for malformed specs
+    let Ok(sc) = pfl::sim::scenario::from_spec(s) else { return };
+    let printed = sc.to_spec();
+    let re = pfl::sim::scenario::from_spec(&printed).unwrap_or_else(|e| {
+        panic!("`{s}` parsed but its print `{printed}` fails: {e:#}")
+    });
+    assert!(sc.same_config(&re),
+            "`{s}` → `{printed}` changed the configuration");
+    assert_eq!(printed, re.to_spec(), "print of `{s}` is not a fixpoint");
+});

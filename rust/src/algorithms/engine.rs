@@ -506,6 +506,33 @@ impl<'e, S: ClientStore> Engine<'e, S> {
         self.framing.as_ref().map(|f| &f.table)
     }
 
+    /// Swap the wire codecs mid-run (scenario phase boundaries). Safe on
+    /// a live engine: in-flight [`Compressed`] buffers are self-describing
+    /// and stay decodable whatever compressor produced them, so only the
+    /// *next* compression uses the new codec. Per-client compressor
+    /// states are re-instantiated under their original per-client stream
+    /// seeds (a codec switch starts wire memory — EF residuals, RNG —
+    /// fresh), and frame metering interns the new spec strings into the
+    /// existing table, so ids already stamped on emitted frames keep
+    /// resolving.
+    pub fn set_compressors(&mut self, client: Arc<dyn Compressor>,
+                           master: Arc<dyn Compressor>) {
+        self.master_state = master.instantiate(self.d, self.seed ^ 0x3a57e5);
+        self.client_spec = client.name();
+        self.master_spec = master.name();
+        for (&i, slot) in self.slots.iter_mut() {
+            slot.comp = client
+                .instantiate(self.d,
+                             stream_seed(self.seed ^ COMP_STREAM_SALT,
+                                         i as u64));
+        }
+        self.client_comp = client;
+        if let Some(f) = &mut self.framing {
+            f.client_id = f.table.intern(&self.client_spec);
+            f.master_id = f.table.intern(&self.master_spec);
+        }
+    }
+
     /// Deal the next iteration's step kind — the simulator's dispatch
     /// point (lockstep [`Engine::step`] draws from the same schedule, so
     /// a simulator that executes every drawn kind reproduces it exactly).

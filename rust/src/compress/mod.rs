@@ -240,14 +240,48 @@ pub trait CompressorState: Send + Sync {
 /// spec in stateful error feedback (residual carried across rounds).
 /// Registered names: see [`registered_names`] / `pfl compressors`.
 pub fn from_spec(spec: &str) -> anyhow::Result<Arc<dyn Compressor>> {
-    let s = spec.trim();
+    Ok(parse_spec_at(spec, 0..spec.len())?)
+}
+
+/// [`from_spec`] for a spec living at `span` inside `src`: errors are
+/// span-pointing [`crate::sim::lang::SpecError`]s against the whole
+/// source string (the scenario parser's `codec=` key hands in the full
+/// scenario spec so the caret lands inside the original text).
+pub fn parse_spec_at(
+    src: &str,
+    span: std::ops::Range<usize>,
+) -> Result<Arc<dyn Compressor>, crate::sim::lang::SpecError> {
+    use crate::sim::lang::SpecError;
+    let raw = &src[span.clone()];
+    let lo = span.start + (raw.len() - raw.trim_start().len());
+    let hi = span.start + raw.trim_end().len();
+    let s = &src[lo..hi.max(lo)];
     if let Some(body) = s.strip_prefix("ef(") {
-        let inner = body.strip_suffix(')').ok_or_else(|| {
-            anyhow::anyhow!("`ef(...)` must wrap the entire spec (got `{spec}`)")
-        })?;
-        return Ok(Arc::new(ErrorFeedback::new(from_spec(inner)?)));
+        if body.strip_suffix(')').is_some() {
+            // recurse on the parenthesized interior (nested `ef` allowed)
+            let inner = parse_spec_at(src, lo + 3..hi - 1)?;
+            return Ok(Arc::new(ErrorFeedback::new(inner)));
+        }
+        return Err(SpecError::new(
+            src,
+            lo..hi.max(lo),
+            format!("`ef(...)` must wrap the entire spec (got `{s}`)"),
+        )
+        .with_help("missing the closing `)`"));
     }
-    Ok(Arc::new(Pipeline::new(codec_from_spec(s)?)))
+    Ok(Arc::new(Pipeline::new(registry::codec_from_spec_at(
+        src,
+        lo..hi.max(lo),
+    )?)))
+}
+
+/// Validate the codec spec at `span` inside `src` without keeping the
+/// built compressor — the scenario parser's eager `codec=` check.
+pub fn validate_spec_at(
+    src: &str,
+    span: std::ops::Range<usize>,
+) -> Result<(), crate::sim::lang::SpecError> {
+    parse_spec_at(src, span).map(|_| ())
 }
 
 /// The unbiased client-side set used across the paper's DNN experiments —

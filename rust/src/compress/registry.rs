@@ -7,10 +7,12 @@
 //! test harness ([`examples`]) are all table-driven off this map.
 
 use std::collections::BTreeMap;
+use std::ops::Range;
 use std::sync::{Arc, OnceLock, RwLock};
 
 use super::pipeline::DenseStage;
 use super::Codec;
+use crate::sim::lang::{suggest, SpecError};
 
 /// Builds a codec from its optional `:arg` and the already-built rest of
 /// the chain to its right (`None` when the atom is last). Selector codecs
@@ -111,16 +113,54 @@ pub fn dense_chain(codec: Arc<dyn Codec>, inner: Option<Arc<dyn Codec>>) -> Arc<
 /// Parse a chain spec (`atom (">" atom)*`) into one codec, right-to-left so
 /// each stage receives the already-built remainder as its inner codec.
 pub fn codec_from_spec(spec: &str) -> anyhow::Result<Arc<dyn Codec>> {
-    let spec = spec.trim();
-    anyhow::ensure!(!spec.is_empty(), "empty compressor spec");
+    Ok(codec_from_spec_at(spec, 0..spec.len())?)
+}
+
+/// [`codec_from_spec`] for a chain living at `span` inside `src`: errors
+/// are span-pointing [`SpecError`]s against the whole source string, so
+/// the scenario parser's `codec=` key puts the caret on the offending
+/// stage of the original spec.
+pub fn codec_from_spec_at(
+    src: &str,
+    span: Range<usize>,
+) -> Result<Arc<dyn Codec>, SpecError> {
+    let raw = &src[span.clone()];
+    let lo = span.start + (raw.len() - raw.trim_start().len());
+    let hi = span.start + raw.trim_end().len();
+    let spec = &src[lo..hi.max(lo)];
+    if spec.is_empty() {
+        return Err(SpecError::new(src, span, "empty compressor spec"));
+    }
+    // absolute start offset of every `>`-separated stage
+    let mut stages: Vec<(usize, &str)> = Vec::new();
+    let mut pos = lo;
+    for piece in spec.split('>') {
+        stages.push((pos, piece));
+        pos += piece.len() + 1;
+    }
     let mut inner: Option<Arc<dyn Codec>> = None;
-    for atom in spec.split('>').rev() {
-        let atom = atom.trim();
-        anyhow::ensure!(!atom.is_empty(), "empty stage in pipeline spec `{spec}`");
-        anyhow::ensure!(
-            !atom.contains("ef("),
-            "`ef(...)` must wrap the entire spec, not a pipeline stage (got `{spec}`)"
-        );
+    for (start, piece) in stages.into_iter().rev() {
+        let a_lo = start + (piece.len() - piece.trim_start().len());
+        let atom = piece.trim();
+        let a_hi = a_lo + atom.len();
+        if atom.is_empty() {
+            return Err(SpecError::new(
+                src,
+                start..start + piece.len().max(1),
+                format!("empty stage in pipeline spec `{spec}`"),
+            )
+            .with_help("stages chain as `a>b`; drop the dangling `>`"));
+        }
+        if atom.contains("ef(") {
+            return Err(SpecError::new(
+                src,
+                a_lo..a_hi,
+                format!(
+                    "`ef(...)` must wrap the entire spec, not a pipeline \
+                     stage (got `{spec}`)"
+                ),
+            ));
+        }
         let (name, arg) = match atom.split_once(':') {
             Some((n, a)) => (n, Some(a)),
             None => (atom, None),
@@ -129,15 +169,25 @@ pub fn codec_from_spec(spec: &str) -> anyhow::Result<Arc<dyn Codec>> {
         // a builder is then free to consult the registry itself
         let build = {
             let guard = global().read().unwrap();
-            let entry = guard.map.get(name).ok_or_else(|| {
-                let names: Vec<&str> = guard.map.keys().map(|s| s.as_str()).collect();
-                anyhow::anyhow!("unknown compressor `{name}` (registered: {})",
-                                names.join(", "))
-            })?;
-            Arc::clone(&entry.build)
+            match guard.map.get(name) {
+                Some(entry) => Arc::clone(&entry.build),
+                None => {
+                    let names: Vec<&str> =
+                        guard.map.keys().map(|s| s.as_str()).collect();
+                    return Err(SpecError::new(
+                        src,
+                        a_lo..a_lo + name.len(),
+                        format!("unknown compressor `{name}` (registered: {})",
+                                names.join(", ")),
+                    )
+                    .maybe_help(suggest(name, names.iter().copied())
+                        .map(|s| format!("did you mean `{s}`?"))));
+                }
+            }
         };
-        let built = (*build)(arg, inner.take())
-            .map_err(|e| anyhow::anyhow!("in stage `{atom}`: {e}"))?;
+        let built = (*build)(arg, inner.take()).map_err(|e| {
+            SpecError::new(src, a_lo..a_hi, format!("in stage `{atom}`: {e}"))
+        })?;
         inner = Some(built);
     }
     Ok(inner.expect("non-empty spec yields a codec"))
@@ -168,6 +218,22 @@ mod tests {
     fn stage_errors_name_the_stage() {
         let err = format!("{:#}", codec_from_spec("natural>qsgd:zero").unwrap_err());
         assert!(err.contains("qsgd:zero"), "{err}");
+    }
+
+    #[test]
+    fn codec_errors_carry_spans_and_suggestions() {
+        let err = codec_from_spec_at("natural>qzgd:8", 0..14).unwrap_err();
+        assert_eq!(err.span(), 8..12, "span covers the unknown stage name");
+        assert!(err.to_string().contains("did you mean `qsgd`?"), "{err}");
+
+        // a bad stage argument spans the whole stage
+        let err = codec_from_spec_at("natural>qsgd:zero", 0..17).unwrap_err();
+        assert_eq!(err.span(), 8..17);
+
+        // and offsets survive embedding in a larger source string
+        let src = "uniform:codec=natural>qzgd:8";
+        let err = codec_from_spec_at(src, 14..28).unwrap_err();
+        assert_eq!(err.span(), 22..26);
     }
 
     #[test]

@@ -483,27 +483,38 @@ alike.
                         depth, cohort size, round bits, shard occupancy,
                         worker busy-ns) — default <out>/metrics.prom
 
-scenario spec grammar (like the codec registry):
-  scenario := name [\":\" key \"=\" value (\",\" key \"=\" value)*]
-  keys     := clients | sample | quorum | deadline | alg
-            | async | buffer | inflight | stale | max_stale
+scenario spec grammar (parsed by a real lexer — malformed specs get a
+caret pointing at the offending bytes plus a \"did you mean\" suggestion;
+whitespace is insignificant, each key may appear once per phase):
+  spec     := \"phases\" \"(\" phase (\";\" phase)+ \")\" | single
+  phase    := single [\"@\" \"rounds\" \"=\" N]   (every phase but the last
+             needs @rounds; fleet size, mega mode, and alg stay constant
+             across phases, everything else may change at the boundary)
+  single   := name [\":\" key \"=\" value (\",\" key \"=\" value)*]
+  keys     := alg | async | buffer | clients | codec | deadline
+            | inflight | max_stale | quorum | sample | stale
   sample   = fraction of the fleet drawn per comm event, (0,1]
              (drawn devices that churn has offline drop out of the cohort)
   quorum   = fraction of the sampled cohort to wait for, (0,1]
   deadline = straggler deadline in seconds (inf = wait for quorum)
   alg      = fleet algorithm (unknown names list what is registered)
+  codec    = compressor spec from the codec registry, applied in both
+             directions (e.g. codec=qsgd:8 or codec=ef(randk:50>qsgd:8));
+             overrides --client-comp/--master-comp for the phase
   async    = dispatch discipline: buffered | sync. `buffered` overlaps up
              to `inflight` version-stamped rounds in the event queue and
              meters the staleness distribution plus uplink goodput
-  buffer   = updates to buffer before a staleness-weighted server commit
-             (`cohort` = commit whole rounds; requires async=buffered)
+  buffer   = K updates to buffer before a staleness-weighted server
+             commit, K ≥ 1, or `cohort` to commit whole rounds
+             (requires async=buffered)
   inflight = max overlapping rounds (requires async=buffered);
              inflight=1 with buffer=cohort reproduces the synchronous
              runner bit for bit
   stale    = staleness weight: const | inv | poly | poly:ALPHA
              (const: w=1; inv: w=1/(1+s); poly: w=(1+s)^-ALPHA)
-  max_stale= discard updates staler than this many server commits
-             (their bytes still meter as stale traffic)
+  max_stale= discard updates staler than this many server commits, ≥ 1
+             (their bytes still meter as stale traffic); `none` = no
+             cutoff (`max_stale=0` is rejected as silently degenerate)
 
 async runs additionally emit a sim_stale_<scenario>.csv staleness
 histogram and staleness/goodput keys in sim_summary.json.
@@ -518,7 +529,9 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
             println!("  {alg}");
         }
         println!("\npresets:");
-        for &(name, help) in sim::scenario::PRESETS {
+        let mut presets = sim::scenario::PRESETS.to_vec();
+        presets.sort_by_key(|&(name, _)| name);
+        for (name, help) in presets {
             println!("  {name:<16} {help}");
         }
         println!("\nexamples:");
@@ -530,6 +543,9 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
         println!("  pfl sim --scenario \"megafleet-async\" --smoke");
         println!("  pfl sim --scenario \
                   \"diurnal-churn:async=buffered,buffer=4,inflight=6,stale=inv\"");
+        println!("  pfl sim --scenario \"uniform:codec=ef(randk:50>qsgd:8)\"");
+        println!("  pfl sim --scenario \
+                  \"phases(uniform @rounds=200; uniform:codec=qsgd:4)\"");
         return Ok(());
     }
     let smoke = args.flag("smoke");
@@ -555,7 +571,9 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
         pfl::obs::enable(1 << 18);
     }
     let mut summaries: Vec<Value> = Vec::new();
-    for spec in spec_list.split(';').filter(|s| !s.trim().is_empty()) {
+    // paren-aware split: a `;` inside `phases(...)` separates phases,
+    // not list entries
+    for spec in sim::scenario::split_specs(&spec_list) {
         let scenario = sim::scenario::from_spec(spec)?;
         let mut cfg = if smoke {
             sim::SimCfg::smoke(scenario)

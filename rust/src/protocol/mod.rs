@@ -34,6 +34,7 @@
 //! composes with any schedule — L2GD's coin, FedAvg's cadence, and
 //! FedOpt's server Adam all run under both.
 
+use crate::sim::lang::SpecError;
 use crate::util::Rng;
 
 /// How an arriving update of staleness `s` (server versions advanced
@@ -67,29 +68,74 @@ impl StalenessWeight {
     /// Parse a weight spec: `const` | `inv` | `poly` (α = 0.5) |
     /// `poly:A`. Unknown names list what exists (registry-style UX).
     pub fn from_spec(spec: &str) -> anyhow::Result<StalenessWeight> {
-        let spec = spec.trim();
+        let lo = spec.len() - spec.trim_start().len();
+        let hi = spec.trim_end().len();
+        Ok(Self::parse_at(spec, lo..hi.max(lo))?)
+    }
+
+    /// Parse the weight spec living at `span` inside `src`, reporting
+    /// errors as span-pointing [`SpecError`]s against the *whole* source
+    /// string — the scenario parser hands in the full spec so the caret
+    /// lands on the offending `stale=` value, while [`Self::from_spec`]
+    /// passes the bare weight spec.
+    pub fn parse_at(
+        src: &str,
+        span: std::ops::Range<usize>,
+    ) -> Result<StalenessWeight, SpecError> {
+        let spec = &src[span.clone()];
         let (name, arg) = match spec.split_once(':') {
-            Some((n, a)) => (n.trim(), Some(a.trim())),
-            None => (spec, None),
+            Some((n, a)) => {
+                let arg_lo = span.start + n.len() + 1;
+                (n.trim(), Some((a.trim(), arg_lo..span.end)))
+            }
+            None => (spec.trim(), None),
         };
-        match (name, arg) {
+        // clone into the scrutinee: the fallthrough arm still needs `arg`
+        match (name, arg.clone()) {
             ("const", None) => Ok(StalenessWeight::Constant),
             ("inv", None) => Ok(StalenessWeight::Inverse),
             ("poly", arg) => {
-                let alpha = match arg {
+                let alpha = match &arg {
                     None => 0.5,
-                    Some(a) => a.parse::<f64>().map_err(|e| {
-                        anyhow::anyhow!("stale=poly:{a}: {e}")
+                    Some((a, a_span)) => a.parse::<f64>().map_err(|e| {
+                        SpecError::new(
+                            src,
+                            a_span.clone(),
+                            format!("stale=poly:{a}: {e}"),
+                        )
                     })?,
                 };
-                anyhow::ensure!(alpha.is_finite() && alpha > 0.0,
-                                "poly staleness exponent {alpha} must be \
-                                 positive and finite");
+                if !(alpha.is_finite() && alpha > 0.0) {
+                    let at = arg.map_or(span.clone(), |(_, s)| s);
+                    return Err(SpecError::new(
+                        src,
+                        at,
+                        format!(
+                            "poly staleness exponent {alpha} must be \
+                             positive and finite"
+                        ),
+                    ));
+                }
                 Ok(StalenessWeight::Polynomial { alpha })
             }
-            _ => anyhow::bail!(
-                "unknown staleness weight `{spec}` (known: const, inv, \
-                 poly, poly:ALPHA)"),
+            _ => {
+                let help = match (&arg, name) {
+                    (Some(_), "const" | "inv") => {
+                        Some(format!("`{name}` takes no argument"))
+                    }
+                    _ => crate::sim::lang::suggest(name, ["const", "inv", "poly"])
+                        .map(|s| format!("did you mean `{s}`?")),
+                };
+                Err(SpecError::new(
+                    src,
+                    span,
+                    format!(
+                        "unknown staleness weight `{spec}` (known: const, \
+                         inv, poly, poly:ALPHA)"
+                    ),
+                )
+                .maybe_help(help))
+            }
         }
     }
 
@@ -99,6 +145,41 @@ impl StalenessWeight {
             StalenessWeight::Constant => "const".into(),
             StalenessWeight::Inverse => "inv".into(),
             StalenessWeight::Polynomial { alpha } => format!("poly:{alpha}"),
+        }
+    }
+}
+
+/// When a buffered-aggregation buffer closes. Historically "per-cohort"
+/// was spelled as the sentinel `buffer: 0` while `buffer=0` was rejected
+/// as invalid input — the same value meaning both "per-round closes" and
+/// "illegal" made every printed spec unparseable. The explicit enum
+/// removes the collision: `Cohort` prints as `buffer=cohort`, and an
+/// update-count target is a [`NonZeroUsize`] by construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BufferPolicy {
+    /// Close each dispatched cohort's round on its own quorum — the
+    /// synchronous-equivalent buffering (`buffer=cohort`).
+    Cohort,
+    /// Aggregate once this many updates accumulate, regardless of which
+    /// cohort they came from (`buffer=K`, K ≥ 1).
+    Updates(std::num::NonZeroUsize),
+}
+
+impl BufferPolicy {
+    /// The update-count target, or `None` for per-cohort closes.
+    pub fn target(&self) -> Option<usize> {
+        match self {
+            BufferPolicy::Cohort => None,
+            BufferPolicy::Updates(k) => Some(k.get()),
+        }
+    }
+
+    /// The `buffer=` value this policy prints as (round-trips through
+    /// the scenario parser).
+    pub fn spec(&self) -> String {
+        match self {
+            BufferPolicy::Cohort => "cohort".into(),
+            BufferPolicy::Updates(k) => k.to_string(),
         }
     }
 }
@@ -115,18 +196,18 @@ pub enum AsyncSchedule {
     /// FedBuff-style buffered aggregation: up to `max_in_flight` cohorts
     /// overlap, each dispatched model stamped with the server version;
     /// arrivals accumulate into a buffer that aggregates
-    /// staleness-weighted once `buffer` updates fill (`buffer` = 0 means
-    /// "the whole cohort" — close each round on its own quorum, the
-    /// synchronous-equivalent buffering). Updates staler than `max_stale`
-    /// versions are discarded (metered as wasted stale traffic).
+    /// staleness-weighted per the [`BufferPolicy`]. Updates staler than
+    /// `max_stale` versions are discarded (metered as wasted stale
+    /// traffic).
     Buffered {
-        /// updates per aggregate; 0 = per-cohort (quorum) buffering
-        buffer: usize,
+        /// when the buffer aggregates: per-cohort or every K updates
+        buffer: BufferPolicy,
         /// overlapping dispatched cohorts allowed, ≥ 1
         max_in_flight: usize,
         /// relative weight of an `s`-stale update in the aggregate
         stale: StalenessWeight,
         /// discard updates staler than this many server versions
+        /// (`u64::MAX` = no cutoff, spelled `max_stale=none`)
         max_stale: u64,
     },
 }
@@ -469,11 +550,36 @@ mod tests {
     fn async_schedule_classifies() {
         assert!(!AsyncSchedule::RoundSync.is_async());
         let b = AsyncSchedule::Buffered {
-            buffer: 8,
+            buffer: BufferPolicy::Updates(std::num::NonZeroUsize::new(8).unwrap()),
             max_in_flight: 4,
             stale: StalenessWeight::Inverse,
             max_stale: 16,
         };
         assert!(b.is_async());
+    }
+
+    #[test]
+    fn buffer_policy_targets_and_specs() {
+        assert_eq!(BufferPolicy::Cohort.target(), None);
+        assert_eq!(BufferPolicy::Cohort.spec(), "cohort");
+        let k = BufferPolicy::Updates(std::num::NonZeroUsize::new(6).unwrap());
+        assert_eq!(k.target(), Some(6));
+        assert_eq!(k.spec(), "6");
+    }
+
+    #[test]
+    fn staleness_weight_errors_carry_spans() {
+        // parse error points at the alpha argument inside the full
+        // scenario source handed in by the scenario parser
+        let src = "uniform:stale=poly:nope";
+        let err = StalenessWeight::parse_at(src, 14..src.len()).unwrap_err();
+        assert_eq!(err.span(), 19..23);
+        let rendered = err.to_string();
+        assert!(rendered.contains("^^^^"), "{rendered}");
+
+        // unknown name spans the whole weight spec and suggests
+        let err = StalenessWeight::parse_at("inx", 0..3).unwrap_err();
+        assert_eq!(err.span(), 0..3);
+        assert!(err.to_string().contains("did you mean `inv`?"), "{err}");
     }
 }

@@ -61,13 +61,14 @@ use crate::metrics::{Record, Series};
 use crate::model::{ClientStore, DenseStore, ShardedStore};
 use crate::obs;
 use crate::obs::registry;
-use crate::protocol::{AsyncSchedule, StalenessWeight, StepKind};
+use crate::protocol::{AsyncSchedule, BufferPolicy, StalenessWeight, StepKind};
 use crate::util::Rng;
 
 use super::fleet::{Churn, DeviceProfile, FleetSpec};
 use super::queue::EventQueue;
 use super::runner::{build_env, resident_bound_bytes, sample_device_ids, SimCfg,
                     SimResult, SimStats};
+use super::scenario::Scenario;
 
 /// Staleness histogram buckets: one per staleness value `0..=31`, with the
 /// last bucket absorbing everything `≥ 32`.
@@ -206,11 +207,16 @@ pub struct AsyncFleetSim<'e, S: ClientStore> {
     sampler: Rng,
     clock: f64,
     mean_step_s: f64,
+    /// `(client, master)` compressor specs currently installed in the
+    /// engine — compared against the incoming phase's to skip no-op swaps
+    comp_specs: (String, String),
     stats: SimStats,
     anchor_holders: Option<Vec<u32>>,
     // dispatch discipline
-    /// cross-round buffer size; 0 = cohort mode (commit whole rounds)
-    buffer_target: usize,
+    /// cross-round buffer policy: commit whole rounds ([`BufferPolicy::
+    /// Cohort`]) or apply every K buffered updates
+    /// ([`BufferPolicy::Updates`])
+    buffer_policy: BufferPolicy,
     max_in_flight: usize,
     stale_weight: StalenessWeight,
     max_stale: u64,
@@ -255,13 +261,14 @@ impl<'e, S: ClientStore> AsyncFleetSim<'e, S> {
         let mean_step_s = fleet.mean_step_time();
         // A RoundSync scenario runs as its own synchronous-equivalent
         // configuration: one round in flight, committed whole, unweighted.
-        let (buffer_target, max_in_flight, stale_weight, max_stale) =
+        let (buffer_policy, max_in_flight, stale_weight, max_stale) =
             match cfg.scenario.async_sched {
                 AsyncSchedule::Buffered { buffer, max_in_flight, stale,
                                           max_stale } =>
                     (buffer, max_in_flight.max(1), stale, max_stale),
                 AsyncSchedule::RoundSync =>
-                    (0, 1, StalenessWeight::Constant, u64::MAX),
+                    (BufferPolicy::Cohort, 1, StalenessWeight::Constant,
+                     u64::MAX),
             };
         Ok(AsyncFleetSim {
             eng,
@@ -275,9 +282,10 @@ impl<'e, S: ClientStore> AsyncFleetSim<'e, S> {
             sampler: Rng::new(cfg.seed ^ 0x5A3E),
             clock: 0.0,
             mean_step_s,
+            comp_specs: cfg.comps(),
             stats: SimStats::default(),
             anchor_holders: None,
-            buffer_target,
+            buffer_policy,
             max_in_flight,
             stale_weight,
             max_stale,
@@ -326,6 +334,48 @@ impl<'e, S: ClientStore> AsyncFleetSim<'e, S> {
 
     pub fn in_flight(&self) -> usize {
         self.in_flight
+    }
+
+    /// Cross a phase boundary (`phases(...)`): install the new phase's
+    /// fleet model, sampling/quorum/deadline knobs, dispatch parameters
+    /// (buffer policy, in-flight cap, staleness schedule, cutoff), and —
+    /// when its `codec=` differs from what the engine currently runs —
+    /// swap the compressors. Updates already parked in the cross-round
+    /// buffer that the *new* policy considers ready (a full `buffer=K`
+    /// buffer, or any entries at all under `buffer=cohort`, which never
+    /// drains it) are applied at the boundary rather than carried over or
+    /// stranded; in-flight wire buffers survive the codec swap untouched
+    /// because decoding reads the self-describing per-frame spec.
+    pub fn apply_phase(&mut self, cfg: &SimCfg, ph: &Scenario, k: u64)
+                       -> anyhow::Result<()> {
+        self.fleet = ph.fleet.clone();
+        self.mean_step_s = self.fleet.mean_step_time();
+        self.churn = ph.churn.clone();
+        self.sample_frac = ph.sample_frac;
+        self.quorum_frac = ph.quorum_frac;
+        self.deadline_s = ph.deadline_s;
+        if let AsyncSchedule::Buffered { buffer, max_in_flight, stale,
+                                         max_stale } = ph.async_sched {
+            self.buffer_policy = buffer;
+            self.max_in_flight = max_in_flight.max(1);
+            self.stale_weight = stale;
+            self.max_stale = max_stale;
+        }
+        let flush = match self.buffer_policy.target() {
+            None => !self.buffer.is_empty(),
+            Some(t) => self.buffer.len() >= t,
+        };
+        if flush {
+            self.apply_buffer(k, self.clock)?;
+        }
+        let specs = cfg.comps_for(ph);
+        if specs != self.comp_specs {
+            let client = crate::compress::from_spec(&specs.0)?;
+            let master = crate::compress::from_spec(&specs.1)?;
+            self.eng.set_compressors(client, master);
+            self.comp_specs = specs;
+        }
+        Ok(())
     }
 
     /// Advance one protocol iteration at the current simulated time.
@@ -537,23 +587,25 @@ impl<'e, S: ClientStore> AsyncFleetSim<'e, S> {
         self.slots[sidx].responded += 1;
         self.slots[sidx].responded_ids.push(i);
         obs::instant(obs::DEVICE_ARRIVAL, obs::device_lane(i as usize), t, 0.0);
-        if self.buffer_target == 0 {
-            self.slots[sidx].arrived.push(i);
-        } else {
-            let version = self.slots[sidx].version;
-            let kd = self.slots[sidx].k;
-            if self.server_version - version > self.max_stale {
-                // too many commits landed while this update was in flight
-                let s = self.server_version - version;
-                obs::instant(obs::STALE_DISCARD, obs::LANE_ENGINE, t, s as f64);
-                registry::observe(registry::Hist::Staleness, s);
-                self.eng.discard_uplink(kd, i, true)?;
-                self.astats.stale_discarded += 1;
-                self.busy.remove(&i);
-            } else {
-                self.buffer.push(BufEntry { client: i, version, k: kd });
-                if self.buffer.len() >= self.buffer_target {
-                    self.apply_buffer(k_now, t)?;
+        match self.buffer_policy.target() {
+            None => self.slots[sidx].arrived.push(i),
+            Some(target) => {
+                let version = self.slots[sidx].version;
+                let kd = self.slots[sidx].k;
+                if self.server_version - version > self.max_stale {
+                    // too many commits landed while this update was in flight
+                    let s = self.server_version - version;
+                    obs::instant(obs::STALE_DISCARD, obs::LANE_ENGINE, t,
+                                 s as f64);
+                    registry::observe(registry::Hist::Staleness, s);
+                    self.eng.discard_uplink(kd, i, true)?;
+                    self.astats.stale_discarded += 1;
+                    self.busy.remove(&i);
+                } else {
+                    self.buffer.push(BufEntry { client: i, version, k: kd });
+                    if self.buffer.len() >= target {
+                        self.apply_buffer(k_now, t)?;
+                    }
                 }
             }
         }
@@ -574,7 +626,7 @@ impl<'e, S: ClientStore> AsyncFleetSim<'e, S> {
         let mut responded_ids = std::mem::take(&mut self.slots[sidx].responded_ids);
         let kd = self.slots[sidx].k;
         let version = self.slots[sidx].version;
-        if self.buffer_target == 0 {
+        if self.buffer_policy == BufferPolicy::Cohort {
             if arrived.is_empty() {
                 // everyone blew the deadline: the anchor does not move,
                 // but the cohort's frames were transmitted — meter them
@@ -732,7 +784,13 @@ pub fn run(cfg: &SimCfg) -> anyhow::Result<SimResult> {
     let mut sim = AsyncShardedSim::new(cfg, &env)?;
     let mut series = Series::new(cfg.label());
     series.records.push(sim.evaluate(0)?);
+    let changes = cfg.scenario.phase_changes();
+    let mut next = 0usize;
     for k in 1..=cfg.steps {
+        while next < changes.len() && changes[next].0 <= k {
+            sim.apply_phase(cfg, changes[next].1, k)?;
+            next += 1;
+        }
         sim.step(k)?;
         if k % cfg.eval_every == 0 || k == cfg.steps {
             series.records.push(sim.evaluate(k)?);
@@ -881,6 +939,29 @@ mod tests {
         }
         assert_eq!(r1.goodput, r2.goodput);
         assert_eq!(r1.async_stats.unwrap(), r2.async_stats.unwrap());
+    }
+
+    /// Phase boundaries may retune the dispatch discipline (buffer
+    /// policy, in-flight cap, staleness schedule) and swap codecs; the
+    /// run stays deterministic and every update still lands in a bucket.
+    #[test]
+    fn phased_async_run_swaps_dispatch_knobs_mid_run() {
+        let mut cfg = smoke(
+            "phases(async-bursty @rounds=100; \
+             async-bursty:buffer=cohort,inflight=1,stale=const,codec=qsgd:8)",
+            9);
+        cfg.steps = 250;
+        let a = run(&cfg).unwrap();
+        let b = run(&cfg).unwrap();
+        assert_eq!(a.series.records.len(), b.series.records.len());
+        for (x, y) in a.series.records.iter().zip(&b.series.records) {
+            assert_eq!(x.train_loss, y.train_loss);
+            assert_eq!(x.bits_up, y.bits_up);
+            assert_eq!(x.sim_time_s, y.sim_time_s);
+        }
+        let ast = a.async_stats.unwrap();
+        assert!(ast.applied_updates > 0, "{ast:?}");
+        assert!(a.series.last().unwrap().train_loss.is_finite());
     }
 
     /// The async summary JSON carries the staleness block and parses.

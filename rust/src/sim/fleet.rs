@@ -73,7 +73,7 @@ pub struct DeviceProfile {
 }
 
 /// Distributions the fleet is drawn from.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct FleetSpec {
     pub step_time: Dist,
     pub up_bw: Dist,

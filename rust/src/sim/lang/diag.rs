@@ -1,0 +1,216 @@
+//! Span-carrying diagnostics shared by every spec surface.
+//!
+//! All three attacker-facing parsers (scenario specs, codec pipeline
+//! specs, staleness-weight specs) report through [`SpecError`]: a
+//! message, the source string, and the byte-span of the offending
+//! token.  `Display` renders the classic caret form:
+//!
+//! ```text
+//! unknown scenario option `sampel` (known: alg, async, ...)
+//!   | uniform:sampel=0.5
+//!   |         ^^^^^^ (bytes 8..14)
+//!   = help: did you mean `sample`?
+//! ```
+//!
+//! The error is a plain `std::error::Error + Send + Sync`, so it flows
+//! into `anyhow::Error` through `?` at the boundaries that still expose
+//! `anyhow::Result` (the registry, `StalenessWeight::from_spec`, the
+//! CLI) without losing the rendered span.
+
+use std::fmt;
+use std::ops::Range;
+
+/// A parse/validation error pointing at a byte-span of the source spec.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpecError {
+    src: String,
+    start: usize,
+    end: usize,
+    msg: String,
+    help: Option<String>,
+}
+
+impl SpecError {
+    /// Build an error over `span` (byte offsets into `src`).  Spans are
+    /// clamped to the source and snapped to `char` boundaries so a
+    /// malformed span (e.g. from fuzzed multi-byte input) can never
+    /// panic the renderer.
+    pub fn new(src: &str, span: Range<usize>, msg: impl Into<String>) -> Self {
+        let mut start = span.start.min(src.len());
+        let mut end = span.end.min(src.len()).max(start);
+        while start > 0 && !src.is_char_boundary(start) {
+            start -= 1;
+        }
+        while end < src.len() && !src.is_char_boundary(end) {
+            end += 1;
+        }
+        SpecError {
+            src: src.to_string(),
+            start,
+            end,
+            msg: msg.into(),
+            help: None,
+        }
+    }
+
+    /// Attach a one-line `= help:` suffix (e.g. a spelling suggestion).
+    pub fn with_help(mut self, help: impl Into<String>) -> Self {
+        self.help = Some(help.into());
+        self
+    }
+
+    /// [`Self::with_help`] that tolerates the common "maybe there is a
+    /// suggestion" shape without an `if let` at every call site.
+    pub fn maybe_help(self, help: Option<String>) -> Self {
+        match help {
+            Some(h) => self.with_help(h),
+            None => self,
+        }
+    }
+
+    /// The byte-span of the offending token within the source spec.
+    pub fn span(&self) -> Range<usize> {
+        self.start..self.end
+    }
+
+    /// The bare message (first `Display` line, without the caret frame).
+    pub fn message(&self) -> &str {
+        &self.msg
+    }
+
+    /// The source spec the span indexes into.
+    pub fn source_spec(&self) -> &str {
+        &self.src
+    }
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{}", self.msg)?;
+        // Control characters would wreck caret alignment; every one is a
+        // single byte in the inputs we accept, so a 1-for-1 swap keeps
+        // the char-counted columns honest.
+        let shown: String = self
+            .src
+            .chars()
+            .map(|c| if c.is_control() { ' ' } else { c })
+            .collect();
+        writeln!(f, "  | {shown}")?;
+        let pad = self.src[..self.start].chars().count();
+        let width = self.src[self.start..self.end].chars().count().max(1);
+        writeln!(
+            f,
+            "  | {:pad$}{} (bytes {}..{})",
+            "",
+            "^".repeat(width),
+            self.start,
+            self.end
+        )?;
+        if let Some(h) = &self.help {
+            writeln!(f, "  = help: {h}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// Closest candidate within Levenshtein distance 2 of `input`, for
+/// "did you mean ...?" help lines.  Returns `None` when nothing is
+/// close, when several are equally close (an ambiguous hint is worse
+/// than none), or when the input is degenerate.
+pub fn suggest<'a>(
+    input: &str,
+    candidates: impl IntoIterator<Item = &'a str>,
+) -> Option<&'a str> {
+    if input.is_empty() || input.len() > 64 {
+        return None;
+    }
+    let mut best: Option<(usize, &str)> = None;
+    let mut tied = false;
+    for cand in candidates {
+        if cand.len() > 64 {
+            continue;
+        }
+        let d = levenshtein(input, cand);
+        if d > 2 {
+            continue;
+        }
+        match best {
+            Some((bd, _)) if d > bd => {}
+            Some((bd, b)) if d == bd => tied = b != cand,
+            _ => {
+                best = Some((d, cand));
+                tied = false;
+            }
+        }
+    }
+    match best {
+        Some((_, c)) if !tied => Some(c),
+        _ => None,
+    }
+}
+
+/// Char-level edit distance (classic two-row dynamic program).
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    if a.is_empty() {
+        return b.len();
+    }
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn caret_points_at_the_span() {
+        let e = SpecError::new("uniform:sampel=0.5", 8..14, "unknown option")
+            .with_help("did you mean `sample`?");
+        let out = e.to_string();
+        assert!(out.contains("unknown option"), "{out}");
+        assert!(out.contains("uniform:sampel=0.5"), "{out}");
+        assert!(out.contains("        ^^^^^^ (bytes 8..14)"), "{out}");
+        assert!(out.contains("= help: did you mean `sample`?"), "{out}");
+    }
+
+    #[test]
+    fn spans_are_clamped_and_snapped_to_char_boundaries() {
+        // 'é' is two bytes; a span splitting it must not panic.
+        let e = SpecError::new("caf\u{e9}", 4..5, "boom");
+        let _ = e.to_string();
+        let e = SpecError::new("ab", 7..9, "past the end");
+        assert_eq!(e.span(), 2..2);
+        let _ = e.to_string();
+    }
+
+    #[test]
+    fn suggest_finds_close_names_and_rejects_far_or_ambiguous_ones() {
+        let keys = ["sample", "quorum", "clients"];
+        assert_eq!(suggest("sampel", keys), Some("sample"));
+        assert_eq!(suggest("quoram", keys), Some("quorum"));
+        assert_eq!(suggest("zzzzzz", keys), None);
+        // equidistant candidates → no hint
+        assert_eq!(suggest("ax", ["ab", "ay"]), None);
+        assert_eq!(suggest("", keys), None);
+    }
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein("", "abc"), 3);
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
+        assert_eq!(levenshtein("same", "same"), 0);
+    }
+}

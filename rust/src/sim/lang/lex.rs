@@ -1,0 +1,232 @@
+//! Span-tracking lexer for the scenario grammar.
+//!
+//! The grammar mixes two token disciplines:
+//!
+//! * *identifiers* — preset names, option keys, the `phases` / `rounds`
+//!   keywords — are runs of `[A-Za-z0-9_-]`;
+//! * *values* are raw: everything up to the next separator (`,`, `;`,
+//!   `@`, or a `)` at paren depth 0), so `stale=poly:1` and
+//!   `codec=ef(randk:50>qsgd:8)` need no quoting.
+//!
+//! Whitespace is insignificant around every token (`uniform : clients
+//! = 5` parses), and every consumed token reports its byte-span for
+//! [`SpecError`] rendering.
+
+use std::ops::Range;
+
+use super::diag::SpecError;
+
+/// Single-character punctuation the grammar uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Punct {
+    Colon,
+    Eq,
+    Comma,
+    Semi,
+    At,
+    LParen,
+    RParen,
+}
+
+impl Punct {
+    fn ch(self) -> char {
+        match self {
+            Punct::Colon => ':',
+            Punct::Eq => '=',
+            Punct::Comma => ',',
+            Punct::Semi => ';',
+            Punct::At => '@',
+            Punct::LParen => '(',
+            Punct::RParen => ')',
+        }
+    }
+}
+
+/// Cursor over a spec string; all positions are byte offsets.
+pub struct Lexer<'s> {
+    src: &'s str,
+    pos: usize,
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '-' || c == '_'
+}
+
+impl<'s> Lexer<'s> {
+    pub fn new(src: &'s str) -> Self {
+        Lexer { src, pos: 0 }
+    }
+
+    pub fn src(&self) -> &'s str {
+        self.src
+    }
+
+    /// Current byte offset (before any whitespace skipping).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Rewind to a previously saved offset.
+    pub fn rewind(&mut self, pos: usize) {
+        self.pos = pos.min(self.src.len());
+    }
+
+    pub fn skip_ws(&mut self) {
+        let rest = &self.src[self.pos..];
+        self.pos += rest.len() - rest.trim_start().len();
+    }
+
+    /// True once only whitespace remains.
+    pub fn at_end(&mut self) -> bool {
+        self.skip_ws();
+        self.pos >= self.src.len()
+    }
+
+    /// Next non-whitespace char, without consuming it.
+    pub fn peek_char(&mut self) -> Option<char> {
+        self.skip_ws();
+        self.src[self.pos..].chars().next()
+    }
+
+    /// Span of the next non-whitespace char (or an empty span at the
+    /// end of input) — the anchor for "unexpected ..." diagnostics.
+    pub fn here(&mut self) -> Range<usize> {
+        match self.peek_char() {
+            Some(c) => self.pos..self.pos + c.len_utf8(),
+            None => self.pos..self.pos,
+        }
+    }
+
+    /// An error anchored at the current position.
+    pub fn err_here(&mut self, msg: impl Into<String>) -> SpecError {
+        let span = self.here();
+        SpecError::new(self.src, span, msg)
+    }
+
+    /// Consume an identifier (`[A-Za-z0-9_-]+`), or `None` if the next
+    /// char does not start one.
+    pub fn ident_opt(&mut self) -> Option<(String, Range<usize>)> {
+        self.skip_ws();
+        let start = self.pos;
+        let rest = &self.src[start..];
+        let len = rest.len() - rest.trim_start_matches(is_ident_char).len();
+        if len == 0 {
+            return None;
+        }
+        self.pos = start + len;
+        Some((rest[..len].to_string(), start..start + len))
+    }
+
+    /// Consume an identifier or error with "expected {what}".
+    pub fn ident(&mut self, what: &str) -> Result<(String, Range<usize>), SpecError> {
+        self.ident_opt().ok_or_else(|| {
+            let found = match self.peek_char() {
+                Some(c) => format!("found `{c}`"),
+                None => "found end of spec".to_string(),
+            };
+            self.err_here(format!("expected {what}, {found}"))
+        })
+    }
+
+    /// Consume `p` if it is the next non-whitespace char; returns its
+    /// byte offset.
+    pub fn eat(&mut self, p: Punct) -> Option<usize> {
+        if self.peek_char() == Some(p.ch()) {
+            let at = self.pos;
+            self.pos += 1;
+            Some(at)
+        } else {
+            None
+        }
+    }
+
+    /// Require `p`, erroring with "expected {what}" otherwise.
+    pub fn expect(&mut self, p: Punct, what: &str) -> Result<usize, SpecError> {
+        self.eat(p).ok_or_else(|| {
+            let found = match self.peek_char() {
+                Some(c) => format!("found `{c}`"),
+                None => "found end of spec".to_string(),
+            };
+            self.err_here(format!("expected {what}, {found}"))
+        })
+    }
+
+    /// Consume a raw value: everything up to the next `,`, `;`, `@`, or
+    /// a `)` at paren depth 0 (parens nest, so `ef(randk:50>qsgd:8)`
+    /// is one value).  Surrounding whitespace is trimmed; the span
+    /// covers the trimmed text.  Empty values are an error anchored at
+    /// `key`'s span.
+    pub fn value(
+        &mut self,
+        key: &str,
+        key_span: &Range<usize>,
+    ) -> Result<(String, Range<usize>), SpecError> {
+        self.skip_ws();
+        let start = self.pos;
+        let mut depth = 0usize;
+        for (i, c) in self.src[start..].char_indices() {
+            match c {
+                '(' => depth += 1,
+                ')' if depth > 0 => depth -= 1,
+                ',' | ';' | '@' | ')' => {
+                    self.pos = start + i;
+                    break;
+                }
+                _ => {}
+            }
+            self.pos = start + i + c.len_utf8();
+        }
+        let raw = &self.src[start..self.pos];
+        let trimmed = raw.trim_end();
+        let end = start + trimmed.len();
+        if trimmed.is_empty() {
+            return Err(SpecError::new(
+                self.src,
+                key_span.clone(),
+                format!("scenario option `{key}` is missing a value"),
+            )
+            .with_help(format!("write `{key}=<value>`")));
+        }
+        Ok((trimmed.to_string(), start..end))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idents_and_punct_track_spans_across_whitespace() {
+        let mut lx = Lexer::new("  uniform : clients = 5");
+        let (name, span) = lx.ident("a name").unwrap();
+        assert_eq!((name.as_str(), span), ("uniform", 2..9));
+        assert_eq!(lx.eat(Punct::Colon), Some(10));
+        let (key, key_span) = lx.ident("a key").unwrap();
+        assert_eq!(key, "clients");
+        assert_eq!(lx.eat(Punct::Eq), Some(20));
+        let (val, vspan) = lx.value(&key, &key_span).unwrap();
+        assert_eq!((val.as_str(), vspan), ("5", 22..23));
+        assert!(lx.at_end());
+    }
+
+    #[test]
+    fn values_stop_at_separators_but_not_inside_parens() {
+        let mut lx = Lexer::new("ef(randk:50>qsgd:8),next");
+        let (val, _) = lx.value("codec", &(0..0)).unwrap();
+        assert_eq!(val, "ef(randk:50>qsgd:8)");
+        assert_eq!(lx.peek_char(), Some(','));
+
+        let mut lx = Lexer::new("poly:1 @rounds=3");
+        let (val, _) = lx.value("stale", &(0..0)).unwrap();
+        assert_eq!(val, "poly:1");
+        assert_eq!(lx.peek_char(), Some('@'));
+    }
+
+    #[test]
+    fn empty_values_point_at_the_key() {
+        let mut lx = Lexer::new("");
+        let err = lx.value("sample", &(3..9)).unwrap_err();
+        assert_eq!(err.span(), 3..9);
+        assert!(err.message().contains("`sample` is missing a value"));
+    }
+}

@@ -1,0 +1,18 @@
+//! Scenario spec language: lexer, recursive-descent parser, and the
+//! shared span-pointing diagnostic type.
+//!
+//! This module owns *syntax* only.  The semantic layer — preset lookup,
+//! option validation, cross-phase constraints — lives in
+//! [`crate::sim::scenario`], which consumes the [`parse::SpecAst`]
+//! produced here.  The codec pipeline parser
+//! ([`crate::compress::registry`]) and
+//! [`crate::protocol::StalenessWeight`] reuse [`SpecError`] so all
+//! three attacker-facing spec surfaces report identically: a message,
+//! the source echoed, and a caret under the offending byte-span.
+
+pub mod diag;
+pub mod lex;
+pub mod parse;
+
+pub use diag::{suggest, SpecError};
+pub use parse::{parse_spec, KeyVal, PhaseAst, SpecAst, Spanned};

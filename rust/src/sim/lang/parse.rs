@@ -1,0 +1,286 @@
+//! Recursive-descent parser producing the scenario spec AST.
+//!
+//! Grammar (whitespace insignificant between tokens):
+//!
+//! ```text
+//! spec    := "phases" "(" phase ( ";" phase )+ ")"
+//!          | single
+//! phase   := single [ "@" "rounds" "=" uint ]
+//! single  := name [ ":" kv ( "," kv )* ]
+//! kv      := key "=" value
+//! name    := ident        key := ident
+//! value   := raw text up to `,` `;` `@` or `)` at paren depth 0
+//! ```
+//!
+//! The parser is purely syntactic: key validity, duplicate detection,
+//! ranges, and cross-phase constraints live in the semantic layer
+//! (`sim::scenario`), which also owns the preset table.  Every error is
+//! a [`SpecError`] spanning the offending token.
+
+use std::ops::Range;
+
+use super::diag::SpecError;
+use super::lex::{Lexer, Punct};
+
+/// A `T` plus the byte-span it was parsed from.
+#[derive(Clone, Debug)]
+pub struct Spanned<T> {
+    pub node: T,
+    pub span: Range<usize>,
+}
+
+/// One `key=value` option.
+#[derive(Clone, Debug)]
+pub struct KeyVal {
+    pub key: Spanned<String>,
+    pub val: Spanned<String>,
+}
+
+/// One phase: `name[:k=v,...]` plus an optional `@rounds=N` bound.
+#[derive(Clone, Debug)]
+pub struct PhaseAst {
+    pub name: Spanned<String>,
+    pub args: Vec<KeyVal>,
+    /// `@rounds=N` — `None` on the (open-ended) final phase and on
+    /// single-phase specs.
+    pub rounds: Option<Spanned<u64>>,
+    /// Span of `name[:k=v,...]`, excluding any `@rounds` suffix.
+    pub span: Range<usize>,
+}
+
+/// A full spec: one phase for the plain form, two or more for
+/// `phases(...)`.
+#[derive(Clone, Debug)]
+pub struct SpecAst {
+    pub phases: Vec<PhaseAst>,
+    /// True when written with the `phases(...)` wrapper.
+    pub phased: bool,
+}
+
+/// Parse a scenario spec string into its AST.
+pub fn parse_spec(src: &str) -> Result<SpecAst, SpecError> {
+    let mut lx = Lexer::new(src);
+    if lx.at_end() {
+        return Err(SpecError::new(src, 0..src.len(), "empty scenario spec"));
+    }
+    let save = lx.pos();
+    let first = lx.ident_opt();
+    let phased = matches!(&first, Some((w, _)) if w == "phases")
+        && lx.peek_char() == Some('(');
+    lx.rewind(save);
+
+    let ast = if phased {
+        parse_phases(&mut lx)?
+    } else {
+        let ph = parse_phase(&mut lx, false)?;
+        SpecAst {
+            phases: vec![ph],
+            phased: false,
+        }
+    };
+    if !lx.at_end() {
+        return Err(lx.err_here("unexpected trailing text after the scenario spec"));
+    }
+    Ok(ast)
+}
+
+fn parse_phases(lx: &mut Lexer<'_>) -> Result<SpecAst, SpecError> {
+    let (_, kw_span) = lx.ident("`phases`")?;
+    lx.expect(Punct::LParen, "`(` after `phases`")?;
+    let mut phases = Vec::new();
+    loop {
+        phases.push(parse_phase(lx, true)?);
+        if lx.eat(Punct::Semi).is_none() {
+            break;
+        }
+    }
+    lx.expect(Punct::RParen, "`;` or `)` closing `phases(...)`")?;
+    if phases.len() < 2 {
+        return Err(SpecError::new(
+            lx.src(),
+            kw_span,
+            "`phases(...)` needs at least two `;`-separated phases",
+        )
+        .with_help("a single-phase run needs no wrapper: write the spec bare"));
+    }
+    Ok(SpecAst {
+        phases,
+        phased: true,
+    })
+}
+
+fn parse_phase(lx: &mut Lexer<'_>, in_phases: bool) -> Result<PhaseAst, SpecError> {
+    let (name, name_span) =
+        lx.ident("a scenario name (e.g. `uniform`, `straggler-heavy`)")?;
+    let mut args = Vec::new();
+    let mut end = name_span.end;
+    if lx.eat(Punct::Colon).is_some() {
+        loop {
+            let (key, key_span) = match lx.ident_opt() {
+                Some(k) => k,
+                None => {
+                    let (msg, help) = match lx.peek_char() {
+                        Some(',') => (
+                            "empty scenario option (consecutive commas)",
+                            "drop the extra `,`",
+                        ),
+                        _ if args.is_empty() => (
+                            "expected a key=value option after `:`",
+                            "write `name:key=value,...` or drop the `:`",
+                        ),
+                        _ => (
+                            "trailing comma: expected another `key=value` option",
+                            "drop the trailing `,` or add an option after it",
+                        ),
+                    };
+                    // anchor on the comma that promised another option,
+                    // or on the stray char itself
+                    return Err(lx.err_here(msg).with_help(help));
+                }
+            };
+            if lx.eat(Punct::Eq).is_none() {
+                return Err(SpecError::new(
+                    lx.src(),
+                    key_span,
+                    format!("scenario option `{key}` is not key=value"),
+                )
+                .with_help(format!("write `{key}=<value>`")));
+            }
+            let (val, val_span) = lx.value(&key, &key_span)?;
+            end = val_span.end;
+            args.push(KeyVal {
+                key: Spanned {
+                    node: key,
+                    span: key_span,
+                },
+                val: Spanned {
+                    node: val,
+                    span: val_span,
+                },
+            });
+            if lx.eat(Punct::Comma).is_none() {
+                break;
+            }
+        }
+    }
+    let rounds = if in_phases && lx.eat(Punct::At).is_some() {
+        Some(parse_rounds(lx)?)
+    } else {
+        None
+    };
+    Ok(PhaseAst {
+        name: Spanned {
+            node: name,
+            span: name_span.clone(),
+        },
+        args,
+        rounds,
+        span: name_span.start..end,
+    })
+}
+
+fn parse_rounds(lx: &mut Lexer<'_>) -> Result<Spanned<u64>, SpecError> {
+    let (kw, kw_span) = lx.ident("`rounds` after `@`")?;
+    if kw != "rounds" {
+        return Err(SpecError::new(
+            lx.src(),
+            kw_span,
+            format!("expected `rounds=N` after `@`, found `{kw}`"),
+        ));
+    }
+    lx.expect(Punct::Eq, "`=` after `rounds`")?;
+    let (val, val_span) = lx.value(&kw, &kw_span)?;
+    let n: u64 = val.parse().map_err(|e| {
+        SpecError::new(lx.src(), val_span.clone(), format!("rounds={val}: {e}"))
+    })?;
+    if n == 0 {
+        return Err(SpecError::new(
+            lx.src(),
+            val_span,
+            "rounds=0: a phase must run for at least one round",
+        ));
+    }
+    Ok(Spanned {
+        node: n,
+        span: val_span,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_phase_spec_parses_with_spans() {
+        let ast = parse_spec("straggler-heavy:clients=12,quorum=0.5").unwrap();
+        assert!(!ast.phased);
+        let ph = &ast.phases[0];
+        assert_eq!(ph.name.node, "straggler-heavy");
+        assert_eq!(ph.name.span, 0..15);
+        assert_eq!(ph.args.len(), 2);
+        assert_eq!(ph.args[0].key.node, "clients");
+        assert_eq!(ph.args[0].val.node, "12");
+        assert_eq!(ph.args[1].val.span, 34..37);
+        assert!(ph.rounds.is_none());
+    }
+
+    #[test]
+    fn whitespace_forms_parse() {
+        let ast = parse_spec(" uniform : clients = 5 , sample = 0.5 ").unwrap();
+        let ph = &ast.phases[0];
+        assert_eq!(ph.name.node, "uniform");
+        assert_eq!(ph.args[0].val.node, "5");
+        assert_eq!(ph.args[1].key.node, "sample");
+    }
+
+    #[test]
+    fn phases_wrapper_parses_rounds_bounds() {
+        let ast =
+            parse_spec("phases(uniform:sample=0.5 @rounds=100; uniform)").unwrap();
+        assert!(ast.phased);
+        assert_eq!(ast.phases.len(), 2);
+        assert_eq!(ast.phases[0].rounds.as_ref().unwrap().node, 100);
+        assert!(ast.phases[1].rounds.is_none());
+    }
+
+    #[test]
+    fn a_preset_literally_named_phases_still_parses_bare() {
+        // Only `phases` followed by `(` engages the wrapper.
+        let ast = parse_spec("phases").unwrap();
+        assert!(!ast.phased);
+        assert_eq!(ast.phases[0].name.node, "phases");
+    }
+
+    #[test]
+    fn trailing_comma_and_empty_segment_are_spanned() {
+        let err = parse_spec("uniform:clients=20,").unwrap_err();
+        assert!(err.message().contains("trailing comma"), "{err}");
+        assert_eq!(err.span(), 19..19);
+
+        let err = parse_spec("uniform:clients=20,,sample=0.5").unwrap_err();
+        assert!(err.message().contains("consecutive commas"), "{err}");
+        assert_eq!(err.span(), 19..20);
+    }
+
+    #[test]
+    fn missing_eq_and_bad_rounds_are_spanned() {
+        let err = parse_spec("uniform:sample").unwrap_err();
+        assert!(err.message().contains("`sample` is not key=value"), "{err}");
+        assert_eq!(err.span(), 8..14);
+
+        let err = parse_spec("phases(uniform @rounds=0; uniform)").unwrap_err();
+        assert!(err.message().contains("at least one round"), "{err}");
+
+        let err = parse_spec("phases(uniform @laps=3; uniform)").unwrap_err();
+        assert!(err.message().contains("expected `rounds=N`"), "{err}");
+    }
+
+    #[test]
+    fn one_phase_wrapper_and_trailing_text_are_rejected() {
+        let err = parse_spec("phases(uniform)").unwrap_err();
+        assert!(err.message().contains("at least two"), "{err}");
+
+        let err = parse_spec("uniform)").unwrap_err();
+        assert!(err.message().contains("unexpected trailing text"), "{err}");
+    }
+}

@@ -18,11 +18,18 @@
 //!   (uniform / log-normal / bimodal "phone vs laptop") via O(1)
 //!   random-access streams (never materialized fleet-wide) and seeded
 //!   availability traces (windowed dropout, diurnal cycles).
-//! * [`scenario`] — presets (`uniform`, `lognormal-wan`, `diurnal-churn`,
-//!   `straggler-heavy`, `async-bursty`, `megafleet`, `megafleet-churn`,
-//!   `megafleet-fedavg`, `megafleet-async`) behind a `name[:key=val,...]`
-//!   spec grammar with `alg=l2gd|fedavg|fedopt` and
-//!   `async=buffered,buffer=K,inflight=M,stale=W` keys.
+//! * [`lang`] — the spec language: span-tracking lexer,
+//!   recursive-descent parser, and the [`lang::SpecError`] diagnostic
+//!   type (caret rendering + "did you mean" suggestions) shared with the
+//!   codec and staleness-weight parsers.
+//! * [`scenario`] — presets (`async-bursty`, `diurnal-churn`,
+//!   `lognormal-wan`, `megafleet`, `megafleet-async`, `megafleet-churn`,
+//!   `megafleet-fedavg`, `straggler-heavy`, `uniform`) behind a
+//!   `name[:key=val,...]` spec grammar with `alg=l2gd|fedavg|fedopt`,
+//!   `codec=<registry spec>`, and
+//!   `async=buffered,buffer=K|cohort,inflight=M,stale=W,max_stale=S|none`
+//!   keys, plus round-boundary phase sequencing:
+//!   `phases(<spec> @rounds=N; ...; <spec>)`.
 //! * [`runner`] — drives the generic cohort engine
 //!   ([`crate::algorithms::ShardedL2gdEngine`], copy-on-write client
 //!   state): one O(cohort) id-space cohort draw at every fleet size,
@@ -53,12 +60,14 @@
 
 pub mod async_runner;
 pub mod fleet;
+pub mod lang;
 pub mod queue;
 pub mod runner;
 pub mod scenario;
 
 pub use async_runner::{AsyncDenseSim, AsyncFleetSim, AsyncShardedSim, AsyncStats};
 pub use fleet::{Churn, DeviceProfile, Dist, Fleet, FleetSpec};
+pub use lang::SpecError;
 pub use queue::EventQueue;
 pub use runner::{sample_device_ids, FleetSim, SimCfg, SimResult, SimStats};
-pub use scenario::Scenario;
+pub use scenario::{Phase, Scenario};

@@ -142,22 +142,38 @@ impl SimCfg {
         }
     }
 
+    /// Effective `(client, master)` compressor specs for the run's first
+    /// phase: the scenario's `codec=` override (applied in both
+    /// directions) when present, else the run defaults.
+    pub fn comps(&self) -> (String, String) {
+        self.comps_for(&self.scenario)
+    }
+
+    /// [`Self::comps`] for an arbitrary phase configuration — phase
+    /// boundaries may swap codecs mid-run (`phases(...)`).
+    pub fn comps_for(&self, ph: &Scenario) -> (String, String) {
+        match &ph.codec {
+            Some(c) => (c.clone(), c.clone()),
+            None => (self.client_comp.clone(), self.master_comp.clone()),
+        }
+    }
+
     /// The engine spec for this run's `alg=` choice ([`FLEET_ALGS`]) at
     /// fleet size `fleet_n`. L2GD gets the same λ stability clamp the
     /// Fig-3 sweeps use.
     pub fn alg_spec(&self, fleet_n: usize) -> anyhow::Result<AlgSpec> {
+        let (cc, mc) = self.comps();
         match self.scenario.alg.as_str() {
             "l2gd" => {
                 let mut alg = L2gd::new(self.p, self.lambda, self.eta, fleet_n,
-                                        &self.client_comp, &self.master_comp)?;
+                                        &cc, &mc)?;
                 fig3::clamp_agg_stability(&mut alg, fleet_n);
                 AlgSpec::l2gd(&alg, fleet_n)
             }
             "fedavg" => AlgSpec::fedavg(self.local_lr, self.local_steps,
-                                        &self.client_comp, &self.master_comp),
+                                        &cc, &mc),
             "fedopt" => AlgSpec::fedopt(self.local_lr, self.local_steps,
-                                        self.server_lr, &self.client_comp,
-                                        &self.master_comp),
+                                        self.server_lr, &cc, &mc),
             other => anyhow::bail!(
                 "unknown fleet algorithm `{other}` (registered: {})",
                 FLEET_ALGS.join(", ")),
@@ -263,6 +279,9 @@ pub struct FleetSim<'e> {
     sampler: Rng,
     clock: f64,
     mean_step_s: f64,
+    /// `(client, master)` compressor specs currently installed in the
+    /// engine — compared against the incoming phase's to skip no-op swaps
+    comp_specs: (String, String),
     stats: SimStats,
     /// sorted clients holding the current anchor; `None` = everyone (the
     /// identical inits double as the shared ξ₋₁ = 1 anchor)
@@ -299,6 +318,7 @@ impl<'e> FleetSim<'e> {
             sampler: Rng::new(cfg.seed ^ 0x5A3E),
             clock: 0.0,
             mean_step_s,
+            comp_specs: cfg.comps(),
             stats: SimStats::default(),
             anchor_holders: None,
             cohort: Vec::new(),
@@ -324,6 +344,29 @@ impl<'e> FleetSim<'e> {
 
     pub fn engine(&self) -> &ShardedL2gdEngine<'e> {
         &self.eng
+    }
+
+    /// Cross a phase boundary (`phases(...)`): install the new phase's
+    /// fleet model, sampling/quorum/deadline knobs, and — when its
+    /// `codec=` differs from what the engine currently runs — swap the
+    /// compressors. Fleet size, mega mode, and the algorithm are pinned
+    /// constant across phases by the scenario parser, so the engine's
+    /// client state carries over untouched.
+    pub fn apply_phase(&mut self, cfg: &SimCfg, ph: &Scenario) -> anyhow::Result<()> {
+        self.fleet = ph.fleet.clone();
+        self.mean_step_s = self.fleet.mean_step_time();
+        self.churn = ph.churn.clone();
+        self.sample_frac = ph.sample_frac;
+        self.quorum_frac = ph.quorum_frac;
+        self.deadline_s = ph.deadline_s;
+        let specs = cfg.comps_for(ph);
+        if specs != self.comp_specs {
+            let client = crate::compress::from_spec(&specs.0)?;
+            let master = crate::compress::from_spec(&specs.1)?;
+            self.eng.set_compressors(client, master);
+            self.comp_specs = specs;
+        }
+        Ok(())
     }
 
     /// Advance one protocol iteration at the current simulated time.
@@ -615,7 +658,13 @@ pub fn run(cfg: &SimCfg) -> anyhow::Result<SimResult> {
     let mut sim = FleetSim::new(cfg, &env)?;
     let mut series = Series::new(cfg.label());
     series.records.push(sim.evaluate(0)?);
+    let changes = cfg.scenario.phase_changes();
+    let mut next = 0usize;
     for k in 1..=cfg.steps {
+        while next < changes.len() && changes[next].0 <= k {
+            sim.apply_phase(cfg, changes[next].1)?;
+            next += 1;
+        }
         sim.step(k)?;
         if k % cfg.eval_every == 0 || k == cfg.steps {
             series.records.push(sim.evaluate(k)?);
@@ -685,6 +734,39 @@ mod tests {
         // every client of a 5-device uniform fleet diverges immediately
         assert_eq!(res.fleet_size, 5);
         assert_eq!(res.touched_clients, 5);
+    }
+
+    #[test]
+    fn phased_run_swaps_codecs_and_stays_deterministic() {
+        let spec = "phases(uniform @rounds=60; \
+                    uniform:codec=qsgd:8,sample=0.6)";
+        let a = run(&smoke(spec, 7)).unwrap();
+        let b = run(&smoke(spec, 7)).unwrap();
+        assert_eq!(a.series.records.len(), b.series.records.len());
+        for (ra, rb) in a.series.records.iter().zip(&b.series.records) {
+            assert_eq!(ra.train_loss, rb.train_loss);
+            assert_eq!(ra.bits_up, rb.bits_up);
+        }
+        assert!(a.stats.comm_events > 0);
+        assert!(a.series.last().unwrap().train_loss.is_finite());
+    }
+
+    #[test]
+    fn phase_zero_prefix_matches_the_unphased_run() {
+        // before the first boundary a phased run is bit-identical to a
+        // plain run of its phase-0 configuration
+        let cfg_ph = smoke("phases(uniform @rounds=60; \
+                            uniform:codec=qsgd:8)", 7);
+        let cfg_u = smoke("uniform", 7);
+        let env = build_env(&cfg_u);
+        let mut s1 = FleetSim::new(&cfg_ph, &env).unwrap();
+        let mut s2 = FleetSim::new(&cfg_u, &env).unwrap();
+        s1.run_steps(0, 60).unwrap();
+        s2.run_steps(0, 60).unwrap();
+        let (r1, r2) = (s1.evaluate(60).unwrap(), s2.evaluate(60).unwrap());
+        assert_eq!(r1.train_loss, r2.train_loss);
+        assert_eq!(r1.bits_up, r2.bits_up);
+        assert_eq!(r1.sim_time_s, r2.sim_time_s);
     }
 
     #[test]

@@ -1,16 +1,20 @@
-//! Scenario presets behind a small spec grammar (mirroring the codec
-//! registry's UX: unknown names list what exists).
+//! Scenario presets behind the spec grammar (parsed by
+//! [`crate::sim::lang`]; mirroring the codec registry's UX: unknown
+//! names list what exists, and every error points a caret at the
+//! offending byte-span).
 //!
-//! Grammar:
+//! Grammar (whitespace insignificant between tokens):
 //!
 //! ```text
+//! spec     := "phases" "(" phase (";" phase)+ ")" | scenario
+//! phase    := scenario ["@" "rounds" "=" N]
 //! scenario := name [":" kv ("," kv)*]
 //! kv       := key "=" value
 //! ```
 //!
-//! Presets: `uniform`, `lognormal-wan`, `diurnal-churn`,
-//! `straggler-heavy`, `async-bursty`, `megafleet`, `megafleet-churn`,
-//! `megafleet-fedavg`, `megafleet-async`.
+//! Presets: `async-bursty`, `diurnal-churn`, `lognormal-wan`,
+//! `megafleet`, `megafleet-async`, `megafleet-churn`,
+//! `megafleet-fedavg`, `straggler-heavy`, `uniform`.
 //! Override keys:
 //!
 //! * `clients=N`   — fleet size (0 = inherit the run default)
@@ -24,20 +28,38 @@
 //! * `alg=A`       — fleet algorithm: one of
 //!   [`crate::algorithms::FLEET_ALGS`] (`l2gd` | `fedavg` | `fedopt`);
 //!   unknown names list what is registered
+//! * `codec=C`     — wire codec override for both directions, any
+//!   registry spec (`natural`, `ef(randk:50>qsgd:8)`, …); without it
+//!   the run's `--client-comp`/`--master-comp` defaults apply
 //! * `async=D`     — dispatch discipline: `sync` (one round at a time) or
 //!   `buffered` (FedBuff-style overlapping rounds —
 //!   [`crate::sim::async_runner`])
-//! * `buffer=K`    — updates per buffered aggregate; `cohort` closes each
-//!   round on its own quorum instead (requires `async=buffered`)
+//! * `buffer=K`    — updates per buffered aggregate, K ≥ 1; `cohort`
+//!   closes each round on its own quorum instead (requires
+//!   `async=buffered`)
 //! * `inflight=M`  — overlapping dispatched cohorts allowed, ≥ 1
 //!   (requires `async=buffered`)
 //! * `stale=W`     — staleness weight `const` | `inv` | `poly[:A]`
 //!   ([`StalenessWeight`]; requires `async=buffered`)
-//! * `max_stale=S` — discard updates staler than S server versions
-//!   (requires `async=buffered`)
+//! * `max_stale=S` — discard updates staler than S ≥ 1 server versions,
+//!   or `none` for no cutoff (requires `async=buffered`; `0` is
+//!   rejected — it would discard every update that saw even one
+//!   in-flight commit)
 //!
 //! Example: `straggler-heavy:clients=20,sample=0.5,quorum=0.8,deadline=2`.
 //! Async example: `uniform:async=buffered,buffer=4,inflight=8,stale=inv`.
+//!
+//! ### Phases
+//! `phases(<spec> @rounds=N; ...; <spec>)` switches fleet conditions
+//! and/or the codec at round boundaries: every phase but the last
+//! carries `@rounds=N` (how many rounds it runs), the last runs to the
+//! end of the simulation. Fleet size (`clients`), the algorithm
+//! (`alg`), and the dispatch discipline (`async=`) must be constant
+//! across phases — the engine, schedule, model state, clock, and all
+//! statistics carry across a boundary unchanged; only the
+//! fleet-condition knobs (`sample`, `quorum`, `deadline`, churn via the
+//! preset, `codec`, and the buffered-aggregation parameters) may move.
+//! Example: `phases(megafleet @rounds=500; megafleet:codec=qsgd:4)`.
 //!
 //! ### Mega fleets
 //! The `megafleet*` presets (and any scenario whose fleet reaches
@@ -48,11 +70,15 @@
 //! the copy-on-write store. (Device profiles are lazy O(1) lookups
 //! everywhere — a fleet is never materialized.)
 
-use super::fleet::{Churn, Dist, FleetSpec};
-use crate::algorithms::FLEET_ALGS;
-use crate::protocol::{AsyncSchedule, StalenessWeight};
+use std::num::NonZeroUsize;
+use std::ops::Range;
 
-#[derive(Clone, Debug)]
+use super::fleet::{Churn, Dist, FleetSpec};
+use super::lang::{self, KeyVal, PhaseAst, SpecError};
+use crate::algorithms::FLEET_ALGS;
+use crate::protocol::{AsyncSchedule, BufferPolicy, StalenessWeight};
+
+#[derive(Clone, Debug, PartialEq)]
 pub struct Scenario {
     /// preset name (`uniform`, `straggler-heavy`, …)
     pub name: String,
@@ -74,12 +100,28 @@ pub struct Scenario {
     /// fleet algorithm driving the engine: one of
     /// [`crate::algorithms::FLEET_ALGS`]
     pub alg: String,
+    /// wire codec override (both directions); `None` = the run default
+    pub codec: Option<String>,
     /// mega mode: touched-mode evaluation + enforced resident-bytes bound
     /// (forced on whenever the fleet reaches [`MEGA_THRESHOLD`])
     pub mega: bool,
     /// dispatch discipline: synchronous one-round-at-a-time or buffered
     /// overlapping rounds (`async` is a Rust keyword, hence the name)
     pub async_sched: AsyncSchedule,
+    /// phase sequence for `phases(...)` specs (two or more entries whose
+    /// first config mirrors this scenario's own fields); empty for the
+    /// ordinary single-phase form
+    pub phases: Vec<Phase>,
+}
+
+/// One phase of a `phases(...)` scenario.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Phase {
+    /// rounds this phase runs before the next takes over; 0 only on the
+    /// final phase (open-ended — it runs to the end of the simulation)
+    pub rounds: u64,
+    /// the phase's full configuration (its `phases` list is empty)
+    pub config: Scenario,
 }
 
 /// Fleet size at which a scenario is promoted to mega mode regardless of
@@ -122,7 +164,14 @@ pub const PRESETS: &[(&str, &str)] = &[
 
 /// Sorted preset names (error messages, docs, CLI listings).
 pub fn preset_names() -> Vec<&'static str> {
-    PRESETS.iter().map(|(n, _)| *n).collect()
+    let mut names: Vec<&'static str> = PRESETS.iter().map(|(n, _)| *n).collect();
+    names.sort_unstable();
+    names
+}
+
+/// `BufferPolicy::Updates` from a statically nonzero count.
+fn updates(k: usize) -> BufferPolicy {
+    BufferPolicy::Updates(NonZeroUsize::new(k).expect("nonzero buffer target"))
 }
 
 fn preset(name: &str) -> Option<Scenario> {
@@ -143,8 +192,10 @@ fn preset(name: &str) -> Option<Scenario> {
             quorum_frac: 1.0,
             deadline_s: f64::INFINITY,
             alg: "l2gd".into(),
+            codec: None,
             mega: false,
             async_sched: AsyncSchedule::RoundSync,
+            phases: Vec::new(),
         },
         "lognormal-wan" => Scenario {
             name: name.into(),
@@ -161,8 +212,10 @@ fn preset(name: &str) -> Option<Scenario> {
             quorum_frac: 1.0,
             deadline_s: f64::INFINITY,
             alg: "l2gd".into(),
+            codec: None,
             mega: false,
             async_sched: AsyncSchedule::RoundSync,
+            phases: Vec::new(),
         },
         "diurnal-churn" => Scenario {
             name: name.into(),
@@ -184,8 +237,10 @@ fn preset(name: &str) -> Option<Scenario> {
             quorum_frac: 1.0,
             deadline_s: f64::INFINITY,
             alg: "l2gd".into(),
+            codec: None,
             mega: false,
             async_sched: AsyncSchedule::RoundSync,
+            phases: Vec::new(),
         },
         "straggler-heavy" => Scenario {
             name: name.into(),
@@ -203,8 +258,10 @@ fn preset(name: &str) -> Option<Scenario> {
             quorum_frac: 0.6,
             deadline_s: 2.0,
             alg: "l2gd".into(),
+            codec: None,
             mega: false,
             async_sched: AsyncSchedule::RoundSync,
+            phases: Vec::new(),
         },
         "async-bursty" => Scenario {
             name: name.into(),
@@ -224,13 +281,15 @@ fn preset(name: &str) -> Option<Scenario> {
             quorum_frac: 0.6,
             deadline_s: 2.0,
             alg: "l2gd".into(),
+            codec: None,
             mega: false,
             async_sched: AsyncSchedule::Buffered {
-                buffer: 6,
+                buffer: updates(6),
                 max_in_flight: 6,
                 stale: StalenessWeight::Inverse,
                 max_stale: 16,
             },
+            phases: Vec::new(),
         },
         "megafleet" | "megafleet-churn" | "megafleet-fedavg"
         | "megafleet-async" => Scenario {
@@ -257,13 +316,14 @@ fn preset(name: &str) -> Option<Scenario> {
             quorum_frac: 0.9,
             deadline_s: 5.0,
             alg: if name == "megafleet-fedavg" { "fedavg" } else { "l2gd" }.into(),
+            codec: None,
             mega: true,
             // a 64-update buffer against ≈180-device cohorts guarantees
             // several mid-round aggregates per dispatch — the staleness
             // histogram is non-degenerate by construction
             async_sched: if name == "megafleet-async" {
                 AsyncSchedule::Buffered {
-                    buffer: 64,
+                    buffer: updates(64),
                     max_in_flight: 4,
                     stale: StalenessWeight::Inverse,
                     max_stale: 16,
@@ -271,91 +331,258 @@ fn preset(name: &str) -> Option<Scenario> {
             } else {
                 AsyncSchedule::RoundSync
             },
+            phases: Vec::new(),
         },
         _ => return None,
     })
 }
 
-/// Parse a scenario spec (`name[:key=val,...]`, see the module docs).
+/// Parse a scenario spec (`name[:key=val,...]` or `phases(...)`, see the
+/// module docs). Errors render a caret under the offending byte-span.
 pub fn from_spec(spec: &str) -> anyhow::Result<Scenario> {
-    let spec = spec.trim();
-    anyhow::ensure!(!spec.is_empty(), "empty scenario spec");
-    let (name, args) = match spec.split_once(':') {
-        Some((n, a)) => (n.trim(), Some(a)),
-        None => (spec, None),
-    };
+    Ok(parse(spec)?)
+}
+
+/// [`from_spec`] returning the structured [`SpecError`] (span + message)
+/// instead of an opaque `anyhow::Error`.
+pub fn parse(spec: &str) -> Result<Scenario, SpecError> {
+    let ast = lang::parse_spec(spec)?;
+    if !ast.phased {
+        let mut sc = build_single(spec, &ast.phases[0])?;
+        sc.spec = spec.trim().to_string();
+        return Ok(sc);
+    }
+    let mut configs = Vec::with_capacity(ast.phases.len());
+    for ph in &ast.phases {
+        configs.push(build_single(spec, ph)?);
+    }
+    // rounds bounds: every phase but the last is bounded, the last open
+    for (i, ph) in ast.phases.iter().enumerate() {
+        let last = i + 1 == ast.phases.len();
+        match (&ph.rounds, last) {
+            (None, false) => {
+                return Err(SpecError::new(
+                    spec, ph.span.clone(),
+                    format!("phase {} needs `@rounds=N` (every phase but \
+                             the last is bounded)", i + 1),
+                )
+                .with_help("append ` @rounds=N` to this phase"));
+            }
+            (Some(r), true) => {
+                return Err(SpecError::new(
+                    spec, r.span.clone(),
+                    "the final phase runs to the end of the simulation",
+                )
+                .with_help("drop `@rounds` from the last phase"));
+            }
+            _ => {}
+        }
+    }
+    // the engine, schedule, and model state carry across a phase
+    // boundary unchanged — anything they were built from must be
+    // constant across phases
+    let first = &configs[0];
+    for (i, sc) in configs.iter().enumerate().skip(1) {
+        let at = || ast.phases[i].span.clone();
+        if sc.clients != first.clients {
+            return Err(SpecError::new(
+                spec, at(),
+                format!("fleet size must be constant across phases \
+                         (phase 1 has clients={}, this phase {})",
+                        first.clients, sc.clients),
+            ));
+        }
+        if sc.mega != first.mega {
+            return Err(SpecError::new(
+                spec, at(),
+                "mega mode must be constant across phases (mixing a \
+                 megafleet preset with an ordinary one)",
+            ));
+        }
+        if sc.alg != first.alg {
+            return Err(SpecError::new(
+                spec, at(),
+                format!("the fleet algorithm must be constant across \
+                         phases (phase 1 runs alg={}, this phase alg={}) \
+                         — mid-run algorithm switching is not supported",
+                        first.alg, sc.alg),
+            ));
+        }
+        if sc.async_sched.is_async() != first.async_sched.is_async() {
+            return Err(SpecError::new(
+                spec, at(),
+                "the dispatch discipline (async=) must be constant \
+                 across phases: a run is driven end-to-end by either the \
+                 synchronous or the buffered runner",
+            ));
+        }
+    }
+    let phases: Vec<Phase> = configs
+        .into_iter()
+        .zip(&ast.phases)
+        .map(|(config, ph)| Phase {
+            rounds: ph.rounds.as_ref().map(|r| r.node).unwrap_or(0),
+            config,
+        })
+        .collect();
+    let mut top = phases[0].config.clone();
+    top.phases = phases;
+    top.spec = spec.trim().to_string();
+    Ok(top)
+}
+
+const KNOWN_KEYS: [&str; 11] = [
+    "alg", "async", "buffer", "clients", "codec", "deadline", "inflight",
+    "max_stale", "quorum", "sample", "stale",
+];
+
+/// Semantic layer for one phase: preset lookup, option validation, async
+/// assembly. The caller owns `spec`/`phases` stitching.
+fn build_single(src: &str, ph: &PhaseAst) -> Result<Scenario, SpecError> {
+    let name = &ph.name.node;
     let mut sc = preset(name).ok_or_else(|| {
-        anyhow::anyhow!("unknown scenario `{name}` (known: {})",
-                        preset_names().join(", "))
+        SpecError::new(
+            src, ph.name.span.clone(),
+            format!("unknown scenario `{name}` (known: {})",
+                    preset_names().join(", ")),
+        )
+        .maybe_help(lang::suggest(name, preset_names())
+            .map(|s| format!("did you mean `{s}`?")))
     })?;
+    sc.spec = src[ph.span.clone()].trim().to_string();
     // async overrides are collected during the loop and assembled after —
     // they only make sense together (and `buffer=…` without a buffered
     // discipline is an error, not a silent no-op)
     let mut a_buffered: Option<bool> = None;
-    let mut a_buffer: Option<usize> = None;
-    let mut a_inflight: Option<usize> = None;
-    let mut a_stale: Option<StalenessWeight> = None;
-    let mut a_max_stale: Option<u64> = None;
-    if let Some(args) = args {
-        for kv in args.split(',') {
-            let kv = kv.trim();
-            let (key, val) = kv.split_once('=').ok_or_else(|| {
-                anyhow::anyhow!("scenario option `{kv}` is not key=value")
-            })?;
-            let val = val.trim();
-            let fval = || -> anyhow::Result<f64> {
-                val.parse::<f64>()
-                    .map_err(|e| anyhow::anyhow!("{key}={val}: {e}"))
-            };
-            match key.trim() {
-                "clients" => {
-                    sc.clients = val
-                        .parse::<usize>()
-                        .map_err(|e| anyhow::anyhow!("clients={val}: {e}"))?;
-                }
-                "sample" => sc.sample_frac = fval()?,
-                "quorum" => sc.quorum_frac = fval()?,
-                "deadline" => sc.deadline_s = fval()?,
-                "alg" => sc.alg = val.to_string(),
-                "async" => {
-                    a_buffered = Some(match val {
-                        "buffered" => true,
-                        "sync" => false,
-                        other => anyhow::bail!(
+    let mut a_buffer: Option<(BufferPolicy, Range<usize>)> = None;
+    let mut a_inflight: Option<(usize, Range<usize>)> = None;
+    let mut a_stale: Option<(StalenessWeight, Range<usize>)> = None;
+    let mut a_max_stale: Option<(u64, Range<usize>)> = None;
+    let mut alg_span: Option<Range<usize>> = None;
+    // value spans of the range-checked keys, so a violation's caret
+    // lands on the number, not the whole phase
+    let mut sample_span: Option<Range<usize>> = None;
+    let mut quorum_span: Option<Range<usize>> = None;
+    let mut deadline_span: Option<Range<usize>> = None;
+    let mut seen: Vec<&str> = Vec::with_capacity(ph.args.len());
+    for KeyVal { key, val } in &ph.args {
+        if seen.contains(&key.node.as_str()) {
+            return Err(SpecError::new(
+                src, key.span.clone(),
+                format!("duplicate scenario option `{}`", key.node),
+            )
+            .with_help("each key may be given once per phase; the \
+                        earlier value would be silently overridden"));
+        }
+        let v = val.node.as_str();
+        let verr = |msg: String| SpecError::new(src, val.span.clone(), msg);
+        let fval = || -> Result<f64, SpecError> {
+            v.parse::<f64>()
+                .map_err(|e| verr(format!("{}={v}: {e}", key.node)))
+        };
+        match key.node.as_str() {
+            "clients" => {
+                sc.clients = v
+                    .parse::<usize>()
+                    .map_err(|e| verr(format!("clients={v}: {e}")))?;
+            }
+            "sample" => {
+                sc.sample_frac = fval()?;
+                sample_span = Some(val.span.clone());
+            }
+            "quorum" => {
+                sc.quorum_frac = fval()?;
+                quorum_span = Some(val.span.clone());
+            }
+            "deadline" => {
+                sc.deadline_s = fval()?;
+                deadline_span = Some(val.span.clone());
+            }
+            "alg" => {
+                sc.alg = v.to_string();
+                alg_span = Some(val.span.clone());
+            }
+            "codec" => {
+                // validate eagerly so the caret lands on the spec text,
+                // not on a runner failure hundreds of rounds in
+                crate::compress::validate_spec_at(src, val.span.clone())?;
+                sc.codec = Some(v.to_string());
+            }
+            "async" => {
+                a_buffered = Some(match v {
+                    "buffered" => true,
+                    "sync" => false,
+                    other => {
+                        return Err(verr(format!(
                             "async={other}: unknown dispatch discipline \
-                             (known: buffered, sync)"),
-                    });
-                }
-                "buffer" => {
-                    a_buffer = Some(if val == "cohort" {
-                        0
+                             (known: buffered, sync)")));
+                    }
+                });
+            }
+            "buffer" => {
+                a_buffer = Some((
+                    if v == "cohort" {
+                        BufferPolicy::Cohort
                     } else {
-                        let k = val.parse::<usize>().map_err(|e| {
-                            anyhow::anyhow!("buffer={val}: {e}")
-                        })?;
-                        anyhow::ensure!(k > 0,
-                                        "buffer=0 is not a buffer; use \
-                                         buffer=cohort for per-round closes");
-                        k
-                    });
-                }
-                "inflight" => {
-                    a_inflight = Some(val.parse::<usize>().map_err(|e| {
-                        anyhow::anyhow!("inflight={val}: {e}")
-                    })?);
-                }
-                "stale" => a_stale = Some(StalenessWeight::from_spec(val)?),
-                "max_stale" => {
-                    a_max_stale = Some(val.parse::<u64>().map_err(|e| {
-                        anyhow::anyhow!("max_stale={val}: {e}")
-                    })?);
-                }
-                other => anyhow::bail!(
-                    "unknown scenario option `{other}` (known: clients, \
-                     sample, quorum, deadline, alg, async, buffer, \
-                     inflight, stale, max_stale)"),
+                        let k = v
+                            .parse::<usize>()
+                            .map_err(|e| verr(format!("buffer={v}: {e}")))?;
+                        match NonZeroUsize::new(k) {
+                            Some(k) => BufferPolicy::Updates(k),
+                            None => {
+                                return Err(verr(
+                                    "buffer=0 is not a buffer; use \
+                                     buffer=cohort for per-round closes"
+                                        .into(),
+                                ));
+                            }
+                        }
+                    },
+                    key.span.clone(),
+                ));
+            }
+            "inflight" => {
+                let m = v
+                    .parse::<usize>()
+                    .map_err(|e| verr(format!("inflight={v}: {e}")))?;
+                a_inflight = Some((m, key.span.clone()));
+            }
+            "stale" => {
+                let w = StalenessWeight::parse_at(src, val.span.clone())?;
+                a_stale = Some((w, key.span.clone()));
+            }
+            "max_stale" => {
+                let s = if v == "none" {
+                    u64::MAX
+                } else {
+                    let s = v
+                        .parse::<u64>()
+                        .map_err(|e| verr(format!("max_stale={v}: {e}")))?;
+                    if s == 0 {
+                        return Err(verr(
+                            "max_stale=0 would discard every update that \
+                             saw even one commit in flight — a silently \
+                             degenerate run"
+                                .into(),
+                        )
+                        .with_help("use max_stale=none for no cutoff, or \
+                                    a bound ≥ 1"));
+                    }
+                    s
+                };
+                a_max_stale = Some((s, key.span.clone()));
+            }
+            other => {
+                return Err(SpecError::new(
+                    src, key.span.clone(),
+                    format!("unknown scenario option `{other}` (known: {})",
+                            KNOWN_KEYS.join(", ")),
+                )
+                .maybe_help(lang::suggest(other, KNOWN_KEYS)
+                    .map(|s| format!("did you mean `{s}`?"))));
             }
         }
+        seen.push(key.node.as_str());
     }
     let buffered = a_buffered.unwrap_or(sc.async_sched.is_async());
     if buffered {
@@ -368,22 +595,26 @@ pub fn from_spec(spec: &str) -> anyhow::Result<Scenario> {
                     (buffer, max_in_flight, stale, max_stale)
                 }
                 AsyncSchedule::RoundSync => {
-                    (0, 1, StalenessWeight::Constant, 16)
+                    (BufferPolicy::Cohort, 1, StalenessWeight::Constant, 16)
                 }
             };
-        if let Some(k) = a_buffer {
+        if let Some((k, _)) = a_buffer {
             buffer = k;
         }
-        if let Some(m) = a_inflight {
+        if let Some((m, span)) = a_inflight {
+            if m < 1 {
+                return Err(SpecError::new(
+                    src, span, format!("inflight={m} must be ≥ 1"),
+                ));
+            }
             inflight = m;
         }
-        if let Some(w) = a_stale {
+        if let Some((w, _)) = a_stale {
             stale = w;
         }
-        if let Some(s) = a_max_stale {
+        if let Some((s, _)) = a_max_stale {
             max_stale = s;
         }
-        anyhow::ensure!(inflight >= 1, "inflight={inflight} must be ≥ 1");
         sc.async_sched = AsyncSchedule::Buffered {
             buffer,
             max_in_flight: inflight,
@@ -391,31 +622,189 @@ pub fn from_spec(spec: &str) -> anyhow::Result<Scenario> {
             max_stale,
         };
     } else {
-        for (key, given) in [("buffer", a_buffer.is_some()),
-                             ("inflight", a_inflight.is_some()),
-                             ("stale", a_stale.is_some()),
-                             ("max_stale", a_max_stale.is_some())] {
-            anyhow::ensure!(!given,
-                            "scenario option `{key}` requires async=buffered");
+        for (key, span) in [
+            ("buffer", a_buffer.map(|(_, s)| s)),
+            ("inflight", a_inflight.map(|(_, s)| s)),
+            ("stale", a_stale.map(|(_, s)| s)),
+            ("max_stale", a_max_stale.map(|(_, s)| s)),
+        ] {
+            if let Some(span) = span {
+                return Err(SpecError::new(
+                    src, span,
+                    format!("scenario option `{key}` requires async=buffered"),
+                ));
+            }
         }
         sc.async_sched = AsyncSchedule::RoundSync;
     }
-    anyhow::ensure!(FLEET_ALGS.contains(&sc.alg.as_str()),
-                    "unknown fleet algorithm `{}` (registered: {})",
-                    sc.alg, FLEET_ALGS.join(", "));
-    anyhow::ensure!(sc.sample_frac > 0.0 && sc.sample_frac <= 1.0,
-                    "sample={} outside (0, 1]", sc.sample_frac);
-    anyhow::ensure!(sc.quorum_frac > 0.0 && sc.quorum_frac <= 1.0,
-                    "quorum={} outside (0, 1]", sc.quorum_frac);
-    anyhow::ensure!(sc.deadline_s > 0.0, "deadline={} must be positive",
-                    sc.deadline_s);
+    if !FLEET_ALGS.contains(&sc.alg.as_str()) {
+        let span = alg_span.unwrap_or_else(|| ph.name.span.clone());
+        return Err(SpecError::new(
+            src, span,
+            format!("unknown fleet algorithm `{}` (registered: {})",
+                    sc.alg, FLEET_ALGS.join(", ")),
+        )
+        .maybe_help(lang::suggest(&sc.alg, FLEET_ALGS.iter().copied())
+            .map(|s| format!("did you mean `{s}`?"))));
+    }
+    if !(sc.sample_frac > 0.0 && sc.sample_frac <= 1.0) {
+        let span = sample_span.unwrap_or_else(|| ph.span.clone());
+        return Err(SpecError::new(
+            src, span, format!("sample={} outside (0, 1]", sc.sample_frac),
+        ));
+    }
+    if !(sc.quorum_frac > 0.0 && sc.quorum_frac <= 1.0) {
+        let span = quorum_span.unwrap_or_else(|| ph.span.clone());
+        return Err(SpecError::new(
+            src, span, format!("quorum={} outside (0, 1]", sc.quorum_frac),
+        ));
+    }
+    if !(sc.deadline_s > 0.0) {
+        let span = deadline_span.unwrap_or_else(|| ph.span.clone());
+        return Err(SpecError::new(
+            src, span,
+            format!("deadline={} must be positive", sc.deadline_s),
+        ));
+    }
     // a fleet this size cannot afford O(fleet)-per-event bookkeeping,
     // whatever the preset says
     if sc.clients >= MEGA_THRESHOLD {
         sc.mega = true;
     }
-    sc.spec = spec.to_string();
     Ok(sc)
+}
+
+impl Scenario {
+    /// `(first_round, phase config)` for every phase after the first:
+    /// phase 0 starts at step 1, phase i+1 at phase i's start plus its
+    /// `rounds`. Empty for single-phase scenarios — the runners apply a
+    /// switch right before executing its first round.
+    pub fn phase_changes(&self) -> Vec<(u64, &Scenario)> {
+        let mut out = Vec::new();
+        let mut start = 1u64;
+        for (i, p) in self.phases.iter().enumerate() {
+            if i > 0 {
+                out.push((start, &p.config));
+            }
+            start = start.saturating_add(p.rounds);
+        }
+        out
+    }
+
+    /// Print the canonical spec string: the preset name plus only the
+    /// overrides that differ from the preset, in a fixed key order.
+    /// `from_spec(sc.to_spec())` parses back to an equal configuration
+    /// and printing is a fixpoint (`to_spec` of the reparse is
+    /// identical) — the property the fuzz targets assert.
+    pub fn to_spec(&self) -> String {
+        if self.phases.len() >= 2 {
+            let parts: Vec<String> = self
+                .phases
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    let s = p.config.to_spec_single();
+                    if i + 1 < self.phases.len() {
+                        format!("{s} @rounds={}", p.rounds)
+                    } else {
+                        s
+                    }
+                })
+                .collect();
+            format!("phases({})", parts.join("; "))
+        } else {
+            self.to_spec_single()
+        }
+    }
+
+    fn to_spec_single(&self) -> String {
+        let base = preset(&self.name)
+            .expect("scenario names come from the preset table");
+        let mut kvs: Vec<String> = Vec::new();
+        if self.clients != base.clients {
+            kvs.push(format!("clients={}", self.clients));
+        }
+        if self.sample_frac != base.sample_frac {
+            kvs.push(format!("sample={}", self.sample_frac));
+        }
+        if self.quorum_frac != base.quorum_frac {
+            kvs.push(format!("quorum={}", self.quorum_frac));
+        }
+        if self.deadline_s != base.deadline_s {
+            // f64 Display prints `inf` and shortest-round-trip decimals,
+            // both of which reparse exactly
+            kvs.push(format!("deadline={}", self.deadline_s));
+        }
+        if self.alg != base.alg {
+            kvs.push(format!("alg={}", self.alg));
+        }
+        if let Some(c) = &self.codec {
+            kvs.push(format!("codec={c}"));
+        }
+        if self.async_sched != base.async_sched {
+            match self.async_sched {
+                AsyncSchedule::RoundSync => kvs.push("async=sync".into()),
+                AsyncSchedule::Buffered { buffer, max_in_flight, stale,
+                                          max_stale } => {
+                    kvs.push("async=buffered".into());
+                    kvs.push(format!("buffer={}", buffer.spec()));
+                    kvs.push(format!("inflight={max_in_flight}"));
+                    kvs.push(format!("stale={}", stale.spec()));
+                    kvs.push(format!(
+                        "max_stale={}",
+                        if max_stale == u64::MAX {
+                            "none".to_string()
+                        } else {
+                            max_stale.to_string()
+                        }
+                    ));
+                }
+            }
+        }
+        if kvs.is_empty() {
+            self.name.clone()
+        } else {
+            format!("{}:{}", self.name, kvs.join(","))
+        }
+    }
+
+    /// Configuration equality ignoring the `spec` source strings —
+    /// `uniform:clients=5` and `uniform:clients=5,sample=1` differ as
+    /// specs but are the same configuration.
+    pub fn same_config(&self, other: &Scenario) -> bool {
+        let strip = |sc: &Scenario| {
+            let mut sc = sc.clone();
+            sc.spec = String::new();
+            for p in &mut sc.phases {
+                p.config.spec = String::new();
+            }
+            sc
+        };
+        strip(self) == strip(other)
+    }
+}
+
+/// Split a `;`-separated scenario list, ignoring separators inside
+/// parentheses — a `;` inside `phases(...)` separates phases, not
+/// list entries. Empty entries are dropped.
+pub fn split_specs(list: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, c) in list.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => depth = depth.saturating_sub(1),
+            ';' if depth == 0 => {
+                out.push(&list[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&list[start..]);
+    out.retain(|s| !s.trim().is_empty());
+    out
 }
 
 #[cfg(test)]
@@ -431,12 +820,34 @@ mod tests {
     }
 
     #[test]
+    fn preset_names_are_sorted() {
+        let names = preset_names();
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        assert_eq!(names, sorted, "preset_names() must be sorted");
+        assert_eq!(names.len(), PRESETS.len());
+    }
+
+    #[test]
     fn unknown_scenario_lists_presets() {
         let err = format!("{:#}", from_spec("5g-dreams").unwrap_err());
         assert!(err.contains("unknown scenario `5g-dreams`"), "{err}");
         for &(name, _) in PRESETS {
             assert!(err.contains(name), "error should list `{name}`: {err}");
         }
+    }
+
+    #[test]
+    fn unknown_names_get_span_and_suggestion() {
+        let err = parse("uniform:sampel=0.5").unwrap_err();
+        assert_eq!(err.span(), 8..14, "span must cover `sampel`");
+        let shown = err.to_string();
+        assert!(shown.contains("unknown scenario option `sampel`"), "{shown}");
+        assert!(shown.contains("did you mean `sample`?"), "{shown}");
+        assert!(shown.contains("^^^^^^"), "caret rendering: {shown}");
+
+        let err = parse("unifrom").unwrap_err();
+        assert!(err.to_string().contains("did you mean `uniform`?"), "{err}");
     }
 
     #[test]
@@ -457,6 +868,16 @@ mod tests {
     }
 
     #[test]
+    fn whitespace_is_insignificant_between_tokens() {
+        let tight = from_spec("uniform:clients=5").unwrap();
+        let spaced = from_spec(" uniform : clients = 5 ").unwrap();
+        assert!(tight.same_config(&spaced));
+        let spaced = from_spec("uniform : clients = 5 , sample = 0.5").unwrap();
+        assert_eq!(spaced.clients, 5);
+        assert_eq!(spaced.sample_frac, 0.5);
+    }
+
+    #[test]
     fn bad_overrides_are_rejected() {
         assert!(from_spec("uniform:sample=0").is_err());
         assert!(from_spec("uniform:sample=1.5").is_err());
@@ -465,6 +886,45 @@ mod tests {
         assert!(from_spec("uniform:sample").is_err(), "missing =value");
         assert!(from_spec("uniform:warp=9").is_err(), "unknown key");
         assert!(from_spec("").is_err());
+    }
+
+    #[test]
+    fn trailing_commas_and_empty_segments_are_diagnosed() {
+        let err = parse("uniform:clients=20,").unwrap_err();
+        assert!(err.message().contains("trailing comma"), "{err}");
+        assert_eq!(err.span(), 19..19);
+
+        let err = parse("uniform:clients=20,,sample=0.5").unwrap_err();
+        assert!(err.message().contains("consecutive commas"), "{err}");
+        assert_eq!(err.span(), 19..20);
+
+        let err = parse("uniform:").unwrap_err();
+        assert!(err.message().contains("after `:`"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_keys_are_rejected_with_the_second_span() {
+        let err = parse("uniform:sample=0.5,sample=0.9").unwrap_err();
+        assert!(err.message().contains("duplicate scenario option `sample`"),
+                "{err}");
+        assert_eq!(err.span(), 19..25, "span covers the second `sample`");
+        // distinct keys with the same value are fine
+        assert!(parse("uniform:sample=0.5,quorum=0.5").is_ok());
+    }
+
+    #[test]
+    fn max_stale_zero_is_rejected_and_none_disables_the_cutoff() {
+        let err = format!(
+            "{:#}",
+            from_spec("uniform:async=buffered,max_stale=0").unwrap_err()
+        );
+        assert!(err.contains("max_stale=0 would discard every update"),
+                "{err}");
+        assert!(err.contains("max_stale=none"), "help must name the \
+                 explicit spelling: {err}");
+        let sc = from_spec("uniform:async=buffered,max_stale=none").unwrap();
+        assert!(matches!(sc.async_sched,
+                         AsyncSchedule::Buffered { max_stale: u64::MAX, .. }));
     }
 
     #[test]
@@ -509,6 +969,18 @@ mod tests {
     }
 
     #[test]
+    fn codec_key_validates_against_the_registry() {
+        let sc = from_spec("uniform:codec=qsgd:4").unwrap();
+        assert_eq!(sc.codec.as_deref(), Some("qsgd:4"));
+        let sc = from_spec("uniform:codec=ef(randk:50>qsgd:8)").unwrap();
+        assert_eq!(sc.codec.as_deref(), Some("ef(randk:50>qsgd:8)"));
+        assert_eq!(from_spec("uniform").unwrap().codec, None);
+        let err = parse("uniform:codec=zstd").unwrap_err();
+        assert!(err.message().contains("unknown compressor `zstd`"), "{err}");
+        assert_eq!(err.span(), 14..18, "span covers the codec value");
+    }
+
+    #[test]
     fn megafleet_fedavg_preset_is_mega_with_fedavg() {
         let sc = from_spec("megafleet-fedavg").unwrap();
         assert!(sc.mega);
@@ -536,7 +1008,7 @@ mod tests {
             .unwrap();
         assert_eq!(sc.async_sched,
                    AsyncSchedule::Buffered {
-                       buffer: 4,
+                       buffer: updates(4),
                        max_in_flight: 8,
                        stale: StalenessWeight::Inverse,
                        max_stale: 9,
@@ -547,7 +1019,7 @@ mod tests {
         let sc = from_spec("uniform:async=buffered").unwrap();
         assert_eq!(sc.async_sched,
                    AsyncSchedule::Buffered {
-                       buffer: 0,
+                       buffer: BufferPolicy::Cohort,
                        max_in_flight: 1,
                        stale: StalenessWeight::Constant,
                        max_stale: 16,
@@ -556,7 +1028,7 @@ mod tests {
         let sc = from_spec("uniform:async=buffered,buffer=cohort,inflight=3")
             .unwrap();
         assert!(matches!(sc.async_sched,
-                         AsyncSchedule::Buffered { buffer: 0,
+                         AsyncSchedule::Buffered { buffer: BufferPolicy::Cohort,
                                                    max_in_flight: 3, .. }));
         // poly weights thread through
         let sc = from_spec("uniform:async=buffered,stale=poly:2").unwrap();
@@ -593,7 +1065,7 @@ mod tests {
         assert!(matches!(sc.churn, Churn::Windowed { .. }));
         assert_eq!(sc.async_sched,
                    AsyncSchedule::Buffered {
-                       buffer: 6,
+                       buffer: updates(6),
                        max_in_flight: 6,
                        stale: StalenessWeight::Inverse,
                        max_stale: 16,
@@ -603,16 +1075,143 @@ mod tests {
         assert_eq!(sc.clients, 1_000_000);
         assert!(sc.sample_frac <= 0.01);
         assert!(matches!(sc.async_sched,
-                         AsyncSchedule::Buffered { buffer: 64,
-                                                   max_in_flight: 4, .. }));
+                         AsyncSchedule::Buffered { max_in_flight: 4, .. }));
         // preset parameters accept overrides like any other key
         let sc = from_spec("megafleet-async:inflight=8,stale=const").unwrap();
         assert_eq!(sc.async_sched,
                    AsyncSchedule::Buffered {
-                       buffer: 64,
+                       buffer: updates(64),
                        max_in_flight: 8,
                        stale: StalenessWeight::Constant,
                        max_stale: 16,
                    });
+    }
+
+    #[test]
+    fn to_spec_round_trips_presets_and_overrides() {
+        let specs = [
+            "uniform",
+            "async-bursty",
+            "megafleet-async",
+            "straggler-heavy:clients=20,quorum=0.8,deadline=3.5",
+            "uniform:async=buffered,buffer=4,inflight=8,stale=inv,max_stale=9",
+            "uniform:async=buffered,buffer=cohort,inflight=3",
+            "uniform:async=buffered,max_stale=none",
+            "async-bursty:async=sync",
+            "uniform:alg=fedopt",
+            "uniform:codec=ef(randk:50>qsgd:8)",
+            "megafleet:clients=131072,sample=0.002",
+        ];
+        for spec in specs {
+            let sc = from_spec(spec).unwrap();
+            let printed = sc.to_spec();
+            let re = from_spec(&printed)
+                .unwrap_or_else(|e| panic!("{spec} printed `{printed}`: {e}"));
+            assert!(sc.same_config(&re), "{spec} → `{printed}` changed config");
+            assert_eq!(printed, re.to_spec(), "{spec}: print not a fixpoint");
+        }
+    }
+
+    #[test]
+    fn buffer_cohort_round_trips_through_to_spec() {
+        // the old sentinel encoding printed `buffer=0`, which the parser
+        // rejects — the regression this enum removed
+        let sc = from_spec("diurnal-churn:async=buffered,buffer=cohort,\
+                            inflight=6")
+            .unwrap();
+        let printed = sc.to_spec();
+        assert!(printed.contains("buffer=cohort"), "{printed}");
+        let re = from_spec(&printed).unwrap();
+        assert!(sc.same_config(&re));
+    }
+
+    #[test]
+    fn phases_parse_sequence_and_validate_bounds() {
+        let sc = from_spec("phases(megafleet @rounds=500; \
+                            megafleet:codec=qsgd:4)")
+            .unwrap();
+        assert_eq!(sc.phases.len(), 2);
+        assert_eq!(sc.phases[0].rounds, 500);
+        assert_eq!(sc.phases[1].rounds, 0);
+        assert_eq!(sc.phases[1].config.codec.as_deref(), Some("qsgd:4"));
+        // top-level fields mirror phase 0
+        assert_eq!(sc.name, "megafleet");
+        assert_eq!(sc.codec, None);
+        assert_eq!(sc.phase_changes(), vec![(501, &sc.phases[1].config)]);
+
+        // three phases accumulate start rounds
+        let sc = from_spec("phases(uniform @rounds=10; \
+                            uniform:sample=0.5 @rounds=20; uniform)")
+            .unwrap();
+        let changes = sc.phase_changes();
+        assert_eq!(changes.len(), 2);
+        assert_eq!(changes[0].0, 11);
+        assert_eq!(changes[1].0, 31);
+
+        // a non-final phase must be bounded; the final one must not be
+        assert!(from_spec("phases(uniform; uniform)").is_err());
+        assert!(from_spec("phases(uniform @rounds=5; uniform @rounds=5)")
+            .is_err());
+        assert!(from_spec("phases(uniform @rounds=0; uniform)").is_err());
+        assert!(from_spec("phases(uniform)").is_err());
+    }
+
+    #[test]
+    fn phases_pin_engine_shaping_parameters() {
+        // clients, alg, and the dispatch discipline must be constant
+        let err = parse("phases(uniform:clients=8 @rounds=5; \
+                         uniform:clients=9)")
+            .unwrap_err();
+        assert!(err.message().contains("fleet size must be constant"), "{err}");
+        let err = parse("phases(uniform @rounds=5; uniform:alg=fedavg)")
+            .unwrap_err();
+        assert!(err.message().contains("algorithm must be constant"), "{err}");
+        let err = parse("phases(uniform @rounds=5; \
+                         uniform:async=buffered)")
+            .unwrap_err();
+        assert!(err.message().contains("dispatch discipline"), "{err}");
+        let err = parse("phases(uniform:clients=1000 @rounds=5; \
+                         megafleet:clients=1000)")
+            .unwrap_err();
+        // same clients, but the preset flips mega — still pinned
+        assert!(err.message().contains("mega mode"), "{err}");
+        // fleet-condition knobs may move freely
+        assert!(from_spec("phases(straggler-heavy @rounds=5; \
+                           straggler-heavy:sample=0.5,quorum=0.8,\
+                           deadline=1,codec=qsgd:4)")
+            .is_ok());
+    }
+
+    #[test]
+    fn phased_specs_round_trip_through_to_spec() {
+        let spec = "phases(uniform:sample=0.5 @rounds=100; \
+                    uniform:codec=qsgd:4)";
+        let sc = from_spec(spec).unwrap();
+        let printed = sc.to_spec();
+        let re = from_spec(&printed).unwrap();
+        assert!(sc.same_config(&re), "`{printed}`");
+        assert_eq!(printed, re.to_spec());
+    }
+
+    #[test]
+    fn split_specs_respects_phase_parens() {
+        assert_eq!(split_specs("uniform;megafleet"),
+                   vec!["uniform", "megafleet"]);
+        assert_eq!(
+            split_specs("phases(uniform @rounds=5; uniform);megafleet"),
+            vec!["phases(uniform @rounds=5; uniform)", "megafleet"]
+        );
+        assert_eq!(split_specs(";uniform;;"), vec!["uniform"]);
+        assert_eq!(split_specs(""), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn same_config_ignores_spec_strings_only() {
+        let a = from_spec("uniform:clients=5").unwrap();
+        let b = from_spec(" uniform : clients = 5 ").unwrap();
+        assert_ne!(a.spec, b.spec);
+        assert!(a.same_config(&b));
+        let c = from_spec("uniform:clients=6").unwrap();
+        assert!(!a.same_config(&c));
     }
 }

@@ -1,0 +1,490 @@
+//! Old-parser parity corpus + print→parse→print fixpoint property.
+//!
+//! The scenario grammar moved from a hand-rolled string splitter onto a
+//! real lexer/parser (`pfl::sim::lang`). These tests pin the migration:
+//!
+//! 1. **Parity corpus** — every scenario spec string that appears
+//!    anywhere in this repository (tests, benches, README, CLI examples)
+//!    parses to the *exact* configuration the old splitter produced,
+//!    asserted field by field against hand-built expectations (preset
+//!    base + manually applied overrides — deliberately not routed
+//!    through the parser under test).
+//! 2. **Fixpoint property** — a seeded generator emits hundreds of
+//!    random valid specs (single-phase and phased); for each,
+//!    `parse → to_spec → parse` preserves the configuration and a second
+//!    `to_spec` is bit-identical to the first (the invariant the fuzz
+//!    targets assert on arbitrary inputs).
+
+use std::num::NonZeroUsize;
+
+use pfl::protocol::{AsyncSchedule, BufferPolicy, StalenessWeight};
+use pfl::sim::scenario::{self, from_spec, preset_names, PRESETS};
+use pfl::sim::Scenario;
+use pfl::util::Rng;
+
+fn updates(k: usize) -> BufferPolicy {
+    BufferPolicy::Updates(NonZeroUsize::new(k).unwrap())
+}
+
+/// Parse `spec` and compare against `preset` with `mutate` applied — the
+/// expectation is built by plain struct mutation, never by the parser
+/// under test.
+fn check(spec: &str, preset: &str, mutate: impl FnOnce(&mut Scenario)) {
+    let got = from_spec(spec)
+        .unwrap_or_else(|e| panic!("`{spec}` must parse: {e:#}"));
+    assert_eq!(got.spec, spec.trim(), "`{spec}`: spec echo");
+    let mut want = from_spec(preset).unwrap();
+    mutate(&mut want);
+    assert!(got.same_config(&want),
+            "`{spec}` drifted from the old parser:\n   got {got:?}\n  want {want:?}");
+}
+
+#[test]
+fn every_preset_parses_to_itself() {
+    for &(name, _) in PRESETS {
+        check(name, name, |_| {});
+    }
+}
+
+/// Every single-phase spec string appearing in the repository, pinned
+/// field-exact. Grouped by where the string lives so a future grep can
+/// reconcile the corpus.
+#[test]
+fn repo_spec_corpus_parses_bit_identical() {
+    // README + `pfl sim --help` examples
+    check("straggler-heavy:clients=20,quorum=0.6,deadline=2",
+          "straggler-heavy", |s| {
+              s.clients = 20;
+              s.quorum_frac = 0.6;
+              s.deadline_s = 2.0;
+          });
+    check("diurnal-churn:clients=16", "diurnal-churn", |s| s.clients = 16);
+    check("uniform:alg=fedopt", "uniform", |s| s.alg = "fedopt".into());
+    check("uniform:alg=fedavg", "uniform", |s| s.alg = "fedavg".into());
+    check("async-bursty:inflight=8,stale=poly:1", "async-bursty", |s| {
+        s.async_sched = AsyncSchedule::Buffered {
+            buffer: updates(6),
+            max_in_flight: 8,
+            stale: StalenessWeight::Polynomial { alpha: 1.0 },
+            max_stale: 16,
+        };
+    });
+    check("diurnal-churn:async=buffered,buffer=4,inflight=6,stale=inv",
+          "diurnal-churn", |s| {
+              s.async_sched = AsyncSchedule::Buffered {
+                  buffer: updates(4),
+                  max_in_flight: 6,
+                  stale: StalenessWeight::Inverse,
+                  max_stale: 16,
+              };
+          });
+    check("megafleet-fedavg:sample=0.0002", "megafleet-fedavg",
+          |s| s.sample_frac = 0.0002);
+    check("uniform:codec=ef(randk:50>qsgd:8)", "uniform",
+          |s| s.codec = Some("ef(randk:50>qsgd:8)".into()));
+    check("uniform:codec=qsgd:4", "uniform",
+          |s| s.codec = Some("qsgd:4".into()));
+
+    // module docs
+    check("straggler-heavy:clients=20,sample=0.5,quorum=0.8,deadline=2",
+          "straggler-heavy", |s| {
+              s.clients = 20;
+              s.sample_frac = 0.5;
+              s.quorum_frac = 0.8;
+              s.deadline_s = 2.0;
+          });
+    check("uniform:async=buffered,buffer=4,inflight=8,stale=inv", "uniform",
+          |s| {
+              s.async_sched = AsyncSchedule::Buffered {
+                  buffer: updates(4),
+                  max_in_flight: 8,
+                  stale: StalenessWeight::Inverse,
+                  max_stale: 16,
+              };
+          });
+
+    // unit/integration tests and benches
+    check("straggler-heavy:clients=12,quorum=0.5", "straggler-heavy", |s| {
+        s.clients = 12;
+        s.quorum_frac = 0.5;
+    });
+    check("straggler-heavy:clients=12,quorum=0.5,deadline=0.5",
+          "straggler-heavy", |s| {
+              s.clients = 12;
+              s.quorum_frac = 0.5;
+              s.deadline_s = 0.5;
+          });
+    check("straggler-heavy:clients=12,quorum=0.5,deadline=0.5,\
+           async=buffered,buffer=cohort,inflight=1,stale=const",
+          "straggler-heavy", |s| {
+              s.clients = 12;
+              s.quorum_frac = 0.5;
+              s.deadline_s = 0.5;
+              s.async_sched = AsyncSchedule::Buffered {
+                  buffer: BufferPolicy::Cohort,
+                  max_in_flight: 1,
+                  stale: StalenessWeight::Constant,
+                  max_stale: 16,
+              };
+          });
+    check("straggler-heavy:clients=10,quorum=0.5,deadline=0.5",
+          "straggler-heavy", |s| {
+              s.clients = 10;
+              s.quorum_frac = 0.5;
+              s.deadline_s = 0.5;
+          });
+    check("straggler-heavy:clients=8,deadline=0.000001", "straggler-heavy",
+          |s| {
+              s.clients = 8;
+              s.deadline_s = 0.000001;
+          });
+    check("straggler-heavy:clients=20,quorum=0.8,deadline=3.5",
+          "straggler-heavy", |s| {
+              s.clients = 20;
+              s.quorum_frac = 0.8;
+              s.deadline_s = 3.5;
+          });
+    check("straggler-heavy:alg=fedopt,clients=10", "straggler-heavy", |s| {
+        s.alg = "fedopt".into();
+        s.clients = 10;
+    });
+    check("straggler-heavy:clients=512,sample=0.1,quorum=0.8,deadline=2",
+          "straggler-heavy", |s| {
+              s.clients = 512;
+              s.sample_frac = 0.1;
+              s.quorum_frac = 0.8;
+              s.deadline_s = 2.0;
+          });
+    check("straggler-heavy:quorum=0.6,deadline=1", "straggler-heavy", |s| {
+        s.quorum_frac = 0.6;
+        s.deadline_s = 1.0;
+    });
+    check("async-bursty:quorum=0.6,deadline=1,buffer=2,inflight=4",
+          "async-bursty", |s| {
+              s.quorum_frac = 0.6;
+              s.deadline_s = 1.0;
+              s.async_sched = AsyncSchedule::Buffered {
+                  buffer: updates(2),
+                  max_in_flight: 4,
+                  stale: StalenessWeight::Inverse,
+                  max_stale: 16,
+              };
+          });
+    check("async-bursty:async=sync", "async-bursty",
+          |s| s.async_sched = AsyncSchedule::RoundSync);
+    check("uniform:clients=5", "uniform", |s| s.clients = 5);
+    check("uniform:clients=5,sample=1", "uniform", |s| {
+        s.clients = 5;
+        s.sample_frac = 1.0;
+    });
+    check("uniform:sample=0.5,quorum=0.5", "uniform", |s| {
+        s.sample_frac = 0.5;
+        s.quorum_frac = 0.5;
+    });
+    check("uniform:async=buffered", "uniform", |s| {
+        s.async_sched = AsyncSchedule::Buffered {
+            buffer: BufferPolicy::Cohort,
+            max_in_flight: 1,
+            stale: StalenessWeight::Constant,
+            max_stale: 16,
+        };
+    });
+    check("uniform:async=buffered,buffer=cohort,inflight=1,stale=const",
+          "uniform", |s| {
+              s.async_sched = AsyncSchedule::Buffered {
+                  buffer: BufferPolicy::Cohort,
+                  max_in_flight: 1,
+                  stale: StalenessWeight::Constant,
+                  max_stale: 16,
+              };
+          });
+    check("uniform:async=buffered,buffer=cohort,inflight=3", "uniform", |s| {
+        s.async_sched = AsyncSchedule::Buffered {
+            buffer: BufferPolicy::Cohort,
+            max_in_flight: 3,
+            stale: StalenessWeight::Constant,
+            max_stale: 16,
+        };
+    });
+    check("uniform:async=buffered,stale=poly:2", "uniform", |s| {
+        s.async_sched = AsyncSchedule::Buffered {
+            buffer: BufferPolicy::Cohort,
+            max_in_flight: 1,
+            stale: StalenessWeight::Polynomial { alpha: 2.0 },
+            max_stale: 16,
+        };
+    });
+    check("uniform:async=buffered,buffer=4,inflight=8,stale=inv,max_stale=9",
+          "uniform", |s| {
+              s.async_sched = AsyncSchedule::Buffered {
+                  buffer: updates(4),
+                  max_in_flight: 8,
+                  stale: StalenessWeight::Inverse,
+                  max_stale: 9,
+              };
+          });
+    check("uniform:async=buffered,max_stale=none", "uniform", |s| {
+        s.async_sched = AsyncSchedule::Buffered {
+            buffer: BufferPolicy::Cohort,
+            max_in_flight: 1,
+            stale: StalenessWeight::Constant,
+            max_stale: u64::MAX,
+        };
+    });
+    check("megafleet:alg=fedopt", "megafleet", |s| s.alg = "fedopt".into());
+    check("megafleet:clients=1000", "megafleet", |s| s.clients = 1000);
+    check("megafleet:clients=131072,sample=0.002", "megafleet", |s| {
+        s.clients = 131_072;
+        s.sample_frac = 0.002;
+    });
+    check("megafleet:clients=100000,sample=0.001", "megafleet", |s| {
+        s.clients = 100_000;
+        s.sample_frac = 0.001;
+    });
+    check("megafleet-fedavg:alg=l2gd", "megafleet-fedavg",
+          |s| s.alg = "l2gd".into());
+    check("megafleet-async:clients=100000,sample=0.002", "megafleet-async",
+          |s| {
+              s.clients = 100_000;
+              s.sample_frac = 0.002;
+          });
+    check("megafleet-async:inflight=8,stale=const", "megafleet-async", |s| {
+        s.async_sched = AsyncSchedule::Buffered {
+            buffer: updates(64),
+            max_in_flight: 8,
+            stale: StalenessWeight::Constant,
+            max_stale: 16,
+        };
+    });
+    check("diurnal-churn:clients=10", "diurnal-churn", |s| s.clients = 10);
+    check("diurnal-churn:clients=32,sample=0.3,async=buffered,\
+           buffer=4,inflight=12,stale=inv",
+          "diurnal-churn", |s| {
+              s.clients = 32;
+              s.sample_frac = 0.3;
+              s.async_sched = AsyncSchedule::Buffered {
+                  buffer: updates(4),
+                  max_in_flight: 12,
+                  stale: StalenessWeight::Inverse,
+                  max_stale: 16,
+              };
+          });
+
+    // mega promotion at the threshold (not a megafleet preset)
+    check("straggler-heavy:clients=100000", "straggler-heavy", |s| {
+        s.clients = 100_000;
+        s.mega = true;
+    });
+    check("straggler-heavy:clients=1000", "straggler-heavy",
+          |s| s.clients = 1000);
+
+    // whitespace-insensitive forms parse to the same configuration
+    check(" uniform : clients = 5 ", "uniform", |s| s.clients = 5);
+    check("uniform: clients=5, sample=0.5", "uniform", |s| {
+        s.clients = 5;
+        s.sample_frac = 0.5;
+    });
+}
+
+#[test]
+fn phased_repo_specs_parse_with_exact_boundaries() {
+    let sc = from_spec("phases(uniform @rounds=60; \
+                        uniform:codec=qsgd:8,sample=0.6)").unwrap();
+    assert_eq!(sc.phases.len(), 2);
+    assert_eq!(sc.phases[0].rounds, 60);
+    assert_eq!(sc.phases[1].rounds, 0, "final phase is open-ended");
+    // the top-level config mirrors phase 0
+    assert!(sc.phases[0].config.same_config(&{
+        let mut top = sc.clone();
+        top.phases = Vec::new();
+        top
+    }));
+    assert_eq!(sc.phases[1].config.codec.as_deref(), Some("qsgd:8"));
+    assert_eq!(sc.phases[1].config.sample_frac, 0.6);
+    assert_eq!(sc.phase_changes(), vec![(61, &sc.phases[1].config)]);
+
+    let sc = from_spec("phases(megafleet @rounds=500; megafleet:codec=qsgd:4)")
+        .unwrap();
+    assert_eq!(sc.phase_changes()[0].0, 501);
+    assert!(sc.mega);
+}
+
+/// Old-parser error-message compatibility: every message fragment that
+/// pre-existing tests assert on still comes out of the new parser.
+#[test]
+fn legacy_error_fragments_survive() {
+    for (spec, frag) in [
+        ("5g-dreams", "unknown scenario `"),
+        ("uniform:warp=9", "unknown scenario option"),
+        ("uniform:buffer=4", "requires async=buffered"),
+        ("uniform:alg=dropout-sgd", "unknown fleet algorithm"),
+        ("", "empty scenario spec"),
+        ("uniform:async=eventually", "unknown dispatch discipline"),
+        ("uniform:sample=0", "(0, 1]"),
+        ("uniform:async=buffered,inflight=0", "must be ≥ 1"),
+        ("uniform:async=buffered,buffer=0", "buffer=0 is not a buffer"),
+        ("uniform:async=buffered,max_stale=0", "max_stale=0"),
+    ] {
+        let err = format!("{:#}", from_spec(spec).unwrap_err());
+        assert!(err.contains(frag), "`{spec}`: `{frag}` not in `{err}`");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Randomized print→parse→print fixpoint (proptest-style, seeded)
+// ---------------------------------------------------------------------------
+
+fn pick<'a>(rng: &mut Rng, xs: &[&'a str]) -> &'a str {
+    xs[rng.usize_below(xs.len())]
+}
+
+/// A random valid `key=value` tail for one phase. `discipline` is the
+/// run-constant async decision: `Some("buffered")`, `Some("sync")`, or
+/// `None` (inherit the preset); buffered sub-keys are only emitted when
+/// they are legal under it.
+fn random_kvs(rng: &mut Rng, preset: &str, clients: Option<usize>,
+              alg: Option<&str>, discipline: Option<&str>) -> Vec<String> {
+    let mut kvs = Vec::new();
+    if let Some(c) = clients {
+        kvs.push(format!("clients={c}"));
+    }
+    if rng.bernoulli(0.4) {
+        kvs.push(format!("sample={}", pick(rng, &["0.25", "0.5", "0.75", "1"])));
+    }
+    if rng.bernoulli(0.4) {
+        kvs.push(format!("quorum={}", pick(rng, &["0.25", "0.5", "0.9", "1"])));
+    }
+    if rng.bernoulli(0.3) {
+        kvs.push(format!("deadline={}", pick(rng, &["0.5", "2", "inf"])));
+    }
+    if let Some(a) = alg {
+        kvs.push(format!("alg={a}"));
+    }
+    if rng.bernoulli(0.3) {
+        kvs.push(format!(
+            "codec={}",
+            pick(rng, &["natural", "identity", "qsgd:8", "randk:50>qsgd:4",
+                        "ef(randk:50>qsgd:8)"])));
+    }
+    let preset_is_async = matches!(preset, "async-bursty" | "megafleet-async");
+    let buffered = match discipline {
+        Some(d) => {
+            kvs.push(format!("async={d}"));
+            d == "buffered"
+        }
+        None => preset_is_async,
+    };
+    if buffered {
+        if rng.bernoulli(0.5) {
+            kvs.push(format!("buffer={}", pick(rng, &["cohort", "2", "6", "64"])));
+        }
+        if rng.bernoulli(0.5) {
+            kvs.push(format!("inflight={}", pick(rng, &["1", "2", "4", "8"])));
+        }
+        if rng.bernoulli(0.5) {
+            kvs.push(format!("stale={}",
+                             pick(rng, &["const", "inv", "poly:0.5", "poly:2"])));
+        }
+        if rng.bernoulli(0.5) {
+            kvs.push(format!("max_stale={}", pick(rng, &["none", "1", "4", "16"])));
+        }
+    }
+    kvs
+}
+
+fn join_single(preset: &str, kvs: &[String]) -> String {
+    if kvs.is_empty() {
+        preset.to_string()
+    } else {
+        format!("{preset}:{}", kvs.join(","))
+    }
+}
+
+/// One random valid spec: single-phase, or a `phases(...)` sequence that
+/// keeps the parser-pinned knobs (clients, mega, alg, discipline)
+/// constant across phases.
+fn random_spec(rng: &mut Rng) -> String {
+    let presets = preset_names();
+    let preset = presets[rng.usize_below(presets.len())];
+    let clients = if rng.bernoulli(0.5) {
+        Some([5usize, 12, 24, 100, 1000][rng.usize_below(5)])
+    } else {
+        None
+    };
+    let alg = if rng.bernoulli(0.3) {
+        Some(pick(rng, &["l2gd", "fedavg", "fedopt"]))
+    } else {
+        None
+    };
+    let discipline = if rng.bernoulli(0.4) {
+        Some("buffered")
+    } else if rng.bernoulli(0.25) {
+        Some("sync")
+    } else {
+        None
+    };
+    if rng.bernoulli(0.3) {
+        let n_phases = 2 + rng.usize_below(2);
+        let mut parts = Vec::new();
+        for i in 0..n_phases {
+            let kvs = random_kvs(rng, preset, clients, alg, discipline);
+            let single = join_single(preset, &kvs);
+            if i + 1 < n_phases {
+                let rounds = [5u64, 50, 500][rng.usize_below(3)];
+                parts.push(format!("{single} @rounds={rounds}"));
+            } else {
+                parts.push(single);
+            }
+        }
+        format!("phases({})", parts.join("; "))
+    } else {
+        let kvs = random_kvs(rng, preset, clients, alg, discipline);
+        join_single(preset, &kvs)
+    }
+}
+
+#[test]
+fn random_specs_print_parse_print_fixpoint() {
+    let mut rng = Rng::new(0x5EC_9A51);
+    for i in 0..300 {
+        let spec = random_spec(&mut rng);
+        let sc = scenario::parse(&spec)
+            .unwrap_or_else(|e| panic!("iter {i}: `{spec}` must parse:\n{e}"));
+        let printed = sc.to_spec();
+        let re = scenario::parse(&printed).unwrap_or_else(|e| {
+            panic!("iter {i}: `{spec}` printed `{printed}` which fails:\n{e}")
+        });
+        assert!(sc.same_config(&re),
+                "iter {i}: `{spec}` → `{printed}` changed the configuration");
+        assert_eq!(printed, re.to_spec(),
+                   "iter {i}: printing `{spec}` is not a fixpoint");
+    }
+}
+
+/// The generator's specs survive whitespace injection — the lexer treats
+/// whitespace as insignificant everywhere outside values.
+#[test]
+fn random_specs_survive_whitespace_injection() {
+    let mut rng = Rng::new(0xD1A6);
+    for _ in 0..100 {
+        let spec = random_spec(&mut rng);
+        let spaced: String = spec
+            .chars()
+            .flat_map(|c| {
+                // pad only punctuation the grammar owns unambiguously:
+                // `:` `(` `)` also occur *inside* codec/stale values,
+                // where whitespace is significant (codec atom names are
+                // deliberately not trimmed, matching the old parser)
+                if matches!(c, ',' | ';' | '=' | '@') {
+                    vec![' ', c, ' ']
+                } else {
+                    vec![c]
+                }
+            })
+            .collect();
+        let a = scenario::parse(&spec).unwrap();
+        let b = scenario::parse(&spaced)
+            .unwrap_or_else(|e| panic!("`{spaced}`:\n{e}"));
+        assert!(a.same_config(&b), "whitespace changed `{spec}`");
+    }
+}
