@@ -1,0 +1,72 @@
+#!/usr/bin/env bash
+# Profile-guided-optimization build of the `pfl` binary:
+#
+#   1. rebuild with -Cprofile-generate (instrumented),
+#   2. drive the instrumented binary through the profile workload —
+#      `pfl bench --smoke` (round engine + megafleet shard scale + the
+#      event-queue and kernel microbenches) and two sim presets
+#      (`megafleet` sync, `megafleet-async` buffered) so both the
+#      timing-wheel scheduler and the sharded cohort engine get hot
+#      profiles,
+#   3. merge the raw profiles with llvm-profdata (located inside the
+#      active rustc's sysroot — `rustup component add llvm-tools` if the
+#      probe comes up empty),
+#   4. rebuild with -Cprofile-use against the merged profile.
+#
+# Usage:
+#   bench/run_pgo.sh                 # instrument → profile → rebuild
+#   PGO_DIR=/tmp/pfl-pgo bench/run_pgo.sh   # override the profile dir
+#
+# The optimized binary lands at target/release/pfl (same path as a plain
+# release build). Run `bench/compare.sh` afterwards to quantify the win —
+# and only promote baselines recorded by the build configuration CI
+# actually runs, or the regression gate will compare unlike with unlike.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PGO_DIR="${PGO_DIR:-$(pwd)/bench/pgo-data}"
+rm -rf "$PGO_DIR"
+mkdir -p "$PGO_DIR"
+
+# locate llvm-profdata: llvm-tools ships it inside the rustc sysroot
+SYSROOT="$(rustc --print sysroot)"
+PROFDATA="$(find "$SYSROOT" -name llvm-profdata -type f 2>/dev/null | head -n1)"
+if [ -z "$PROFDATA" ]; then
+  PROFDATA="$(command -v llvm-profdata || true)"
+fi
+if [ -z "$PROFDATA" ]; then
+  echo "llvm-profdata not found — install it with:" >&2
+  echo "  rustup component add llvm-tools" >&2
+  exit 1
+fi
+echo "using $PROFDATA"
+
+echo "== 1/4: instrumented build =="
+RUSTFLAGS="-Cprofile-generate=$PGO_DIR" cargo build --release
+
+echo "== 2/4: profile workload =="
+PROFILE_OUT="$PGO_DIR/run-out"
+mkdir -p "$PROFILE_OUT"
+./target/release/pfl bench --smoke \
+  --out "$PROFILE_OUT/BENCH_round.json" \
+  --shard-out "$PROFILE_OUT/BENCH_shard.json" \
+  --kernels-out "$PROFILE_OUT/BENCH_kernels.json"
+./target/release/pfl sim --scenario megafleet --smoke \
+  --out "$PROFILE_OUT/sim-megafleet"
+./target/release/pfl sim --scenario megafleet-async --smoke \
+  --out "$PROFILE_OUT/sim-megafleet-async"
+
+echo "== 3/4: merge profiles =="
+"$PROFDATA" merge -o "$PGO_DIR/merged.profdata" "$PGO_DIR"/*.profraw
+
+echo "== 4/4: optimized rebuild =="
+# touch the crate so cargo actually rebuilds under the new RUSTFLAGS
+cargo clean --release -p pfl
+RUSTFLAGS="-Cprofile-use=$PGO_DIR/merged.profdata -Cllvm-args=-pgo-warn-missing-function" \
+  cargo build --release
+
+echo
+echo "PGO build complete: target/release/pfl"
+echo "profiles: $PGO_DIR/merged.profdata"
+echo "quantify: bench/compare.sh"

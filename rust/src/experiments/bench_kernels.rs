@@ -1,6 +1,7 @@
 //! Kernel microbench — the `kernels` section of `pfl bench`
 //! (`BENCH_kernels.json`): per-kernel effective bandwidth (GB/s) at every
-//! dispatch level this host can execute, so the trajectory shows both the
+//! dispatch level this host can execute (`gbps_avx512` down to
+//! `gbps_scalar` as available), so the trajectory shows both the
 //! intrinsics-vs-scalar speedup and any regression in either path.
 //!
 //! Methodology: one vector length (4096 + 5 — deliberately *not* a lane
@@ -23,7 +24,8 @@ use crate::util::Rng;
 
 #[derive(Clone, Debug)]
 pub struct KernelBenchCfg {
-    /// vector length (a non-multiple of 8 keeps the tail path hot)
+    /// vector length (a non-multiple of every lane width — 16 at avx512,
+    /// 8 at avx2 — keeps the tail path hot)
     pub dim: usize,
     /// timed iterations per kernel × level
     pub iters: u64,

@@ -32,7 +32,8 @@ use super::fig3;
 use crate::algorithms::l2gd::L2gdEngine;
 use crate::algorithms::{reference, FedAlgorithm as _, FedEnv, L2gd};
 use crate::obs;
-use crate::sim::{self, AsyncShardedSim, FleetSim};
+use crate::protocol::AsyncSchedule;
+use crate::sim::{self, AsyncShardedSim, EventQueue, FleetSim, HeapQueue};
 use crate::util::alloc_count;
 use crate::util::json::Value;
 use crate::util::meta;
@@ -479,6 +480,10 @@ pub struct ShardBenchCfg {
     /// fail (Err) if the measured window exceeds the allocation bound
     /// while the counting allocator is installed
     pub assert_alloc_bounded: bool,
+    /// fail (Err) if the `event_queue` microbench measures the timing
+    /// wheel below this many ops/sec (0 = disabled; CI's queue-smoke job
+    /// sets a conservative floor via `pfl bench --queue-floor`)
+    pub queue_ops_floor: f64,
 }
 
 impl ShardBenchCfg {
@@ -490,6 +495,7 @@ impl ShardBenchCfg {
             rows_per_worker: 40,
             seed: 0,
             assert_alloc_bounded: true,
+            queue_ops_floor: 0.0,
         }
     }
 
@@ -522,6 +528,32 @@ pub struct ShardBenchResult {
     pub resident_bytes_per_device: f64,
     pub mean_cohort: f64,
     pub link_shards: u64,
+    /// timing-wheel vs binary-heap scheduler microbench (the
+    /// `event_queue` JSON section)
+    pub queue: QueueBenchResult,
+}
+
+/// Event-queue microbench: the timing wheel ([`EventQueue`]) against the
+/// binary-heap oracle ([`HeapQueue`]) on a `megafleet-async`-shaped
+/// stream — cohort-sized push bursts from the preset's device
+/// distributions, `inflight` rounds overlapping before drains begin.
+/// Both replay the identical pre-generated schedule; a separate untimed
+/// pass asserts the pop sequences are bit-identical first.
+#[derive(Clone, Debug)]
+pub struct QueueBenchResult {
+    pub scenario: String,
+    /// total timed queue operations (pushes + pops, same for both queues)
+    pub ops: u64,
+    pub wheel_ops_per_sec: f64,
+    pub heap_ops_per_sec: f64,
+    /// high-water pending-event depth the stream reached
+    pub max_depth: u64,
+}
+
+impl QueueBenchResult {
+    pub fn speedup(&self) -> f64 {
+        self.wheel_ops_per_sec / self.heap_ops_per_sec
+    }
 }
 
 impl ShardBenchResult {
@@ -553,8 +585,148 @@ impl ShardBenchResult {
              Value::Num(self.resident_bytes_per_device)),
             ("mean_cohort".into(), Value::Num(self.mean_cohort)),
             ("link_shards".into(), Value::Num(self.link_shards as f64)),
+            ("event_queue".into(), Value::obj(vec![
+                ("scenario".into(), Value::Str(self.queue.scenario.clone())),
+                ("ops".into(), Value::Num(self.queue.ops as f64)),
+                ("wheel_ops_per_sec".into(),
+                 Value::Num(self.queue.wheel_ops_per_sec)),
+                ("heap_ops_per_sec".into(),
+                 Value::Num(self.queue.heap_ops_per_sec)),
+                ("speedup_vs_heap".into(), Value::Num(self.queue.speedup())),
+                ("max_depth".into(), Value::Num(self.queue.max_depth as f64)),
+            ])),
         ])
     }
+}
+
+/// Generate the `megafleet-async` arrival schedule once: `rounds` bursts
+/// of `cohort` events each, event times drawn from the scenario's device
+/// distributions (compute + latency + uplink transfer of one nominal
+/// frame), the dispatch clock advancing by the fleet's mean step time per
+/// round.
+fn queue_bench_schedule(spec: &str, rounds: usize)
+                        -> anyhow::Result<(sim::Scenario, Vec<f64>, usize, usize)> {
+    let scenario = sim::scenario::from_spec(spec)?;
+    let n = scenario.clients.max(1);
+    let cohort =
+        ((scenario.sample_frac * n as f64).ceil() as usize).clamp(1, n);
+    let inflight = match scenario.async_sched {
+        AsyncSchedule::Buffered { max_in_flight, .. } => max_in_flight.max(1),
+        AsyncSchedule::RoundSync => 1,
+    };
+    // the async runner's uplink frame for the bench-sized model: 22-byte
+    // header + payload; exact size only shifts the transfer term
+    const FRAME_BITS: f64 = (22.0 + 139.0) * 8.0;
+    let fleet_seed = 0xF1EE7u64;
+    let mean_step = scenario.fleet.mean_step_time();
+    let mut times = Vec::with_capacity(rounds * cohort);
+    let mut clock = 0.0f64;
+    for r in 0..rounds {
+        for j in 0..cohort {
+            let id = ((r * cohort + j) % n) as u64;
+            let dev = scenario.fleet.device(fleet_seed, id);
+            times.push(
+                clock + dev.step_time_s + dev.latency_s + FRAME_BITS / dev.up_bps,
+            );
+        }
+        clock += mean_step;
+    }
+    Ok((scenario, times, cohort, inflight))
+}
+
+/// Replay the schedule: burst-push each round's cohort, start draining a
+/// cohort's worth per round once `inflight` rounds overlap, drain the
+/// rest at the end. Identical op sequence for both queue types.
+macro_rules! queue_replay {
+    ($q:expr, $times:expr, $cohort:expr, $inflight:expr) => {{
+        let q = $q;
+        let mut ops = 0u64;
+        for (r, chunk) in $times.chunks($cohort).enumerate() {
+            for &t in chunk {
+                q.push(t, 0u32);
+                ops += 1;
+            }
+            if r + 1 >= $inflight {
+                for _ in 0..$cohort {
+                    if q.pop().is_some() {
+                        ops += 1;
+                    }
+                }
+            }
+        }
+        while q.pop().is_some() {
+            ops += 1;
+        }
+        ops
+    }};
+}
+
+/// Time the wheel and the heap on the same `megafleet-async`-shaped
+/// stream. An untimed differential pass pins the pop sequences
+/// bit-identical first, and each timed replay is preceded by an untimed
+/// warmup replay on the same instance so bucket/heap capacities settle —
+/// both sides measure steady-state scheduling only.
+pub fn run_queue_bench(spec: &str, rounds: usize)
+                       -> anyhow::Result<QueueBenchResult> {
+    let (scenario, times, cohort, inflight) = queue_bench_schedule(spec, rounds)?;
+    let granularity = EventQueue::<u32>::granularity_for(
+        scenario.fleet.mean_step_time() + scenario.fleet.latency.mean(),
+    );
+    let cap = cohort * inflight;
+
+    // differential pass: the wheel must pop bit-identically to the heap
+    {
+        let mut wheel = EventQueue::with_capacity_and_granularity(cap, granularity);
+        let mut heap = HeapQueue::with_capacity(cap);
+        for (r, chunk) in times.chunks(cohort).enumerate() {
+            for (j, &t) in chunk.iter().enumerate() {
+                wheel.push(t, j as u32);
+                heap.push(t, j as u32);
+            }
+            if r + 1 >= inflight {
+                for _ in 0..cohort {
+                    let (w, h) = (wheel.pop(), heap.pop());
+                    anyhow::ensure!(
+                        w.map(|(t, v)| (t.to_bits(), v))
+                            == h.map(|(t, v)| (t.to_bits(), v)),
+                        "wheel diverged from heap oracle at round {r}: \
+                         {w:?} vs {h:?}"
+                    );
+                }
+            }
+        }
+        loop {
+            let (w, h) = (wheel.pop(), heap.pop());
+            anyhow::ensure!(
+                w.map(|(t, v)| (t.to_bits(), v)) == h.map(|(t, v)| (t.to_bits(), v)),
+                "wheel diverged from heap oracle in the final drain: {w:?} vs {h:?}"
+            );
+            if w.is_none() {
+                break;
+            }
+        }
+    }
+
+    let mut wheel = EventQueue::with_capacity_and_granularity(cap, granularity);
+    queue_replay!(&mut wheel, &times, cohort, inflight);
+    let t0 = Instant::now();
+    let wheel_ops = queue_replay!(&mut wheel, &times, cohort, inflight);
+    let wheel_dt = t0.elapsed().as_secs_f64();
+
+    let mut heap = HeapQueue::with_capacity(cap);
+    queue_replay!(&mut heap, &times, cohort, inflight);
+    let t0 = Instant::now();
+    let heap_ops = queue_replay!(&mut heap, &times, cohort, inflight);
+    let heap_dt = t0.elapsed().as_secs_f64();
+
+    anyhow::ensure!(wheel_ops == heap_ops, "replays diverged in op count");
+    Ok(QueueBenchResult {
+        scenario: scenario.name.clone(),
+        ops: wheel_ops,
+        wheel_ops_per_sec: wheel_ops as f64 / wheel_dt.max(1e-12),
+        heap_ops_per_sec: heap_ops as f64 / heap_dt.max(1e-12),
+        max_depth: wheel.max_depth() as u64,
+    })
 }
 
 /// Measure the sharded cohort engine under the mega-fleet scenario:
@@ -599,6 +771,20 @@ pub fn run_shard(cfg: &ShardBenchCfg) -> anyhow::Result<ShardBenchResult> {
     let touched = fsim.engine().touched_clients();
     anyhow::ensure!(store.materialized_rows() <= touched,
                     "occupancy exceeds touched clients");
+
+    // event-queue microbench on the megafleet-async stream shape (queue
+    // ops only — no engine — so the scheduler swap is isolated); scale
+    // the synthetic round count up from cfg.steps for a stable timing
+    // window
+    let queue = run_queue_bench("megafleet-async", cfg.steps as usize * 25)?;
+    if cfg.queue_ops_floor > 0.0 {
+        anyhow::ensure!(
+            queue.wheel_ops_per_sec >= cfg.queue_ops_floor,
+            "event-queue wheel measured {:.0} ops/sec, below the floor {:.0}",
+            queue.wheel_ops_per_sec, cfg.queue_ops_floor
+        );
+    }
+
     Ok(ShardBenchResult {
         cfg: cfg.clone(),
         threads: env.pool.size(),
@@ -614,6 +800,7 @@ pub fn run_shard(cfg: &ShardBenchCfg) -> anyhow::Result<ShardBenchResult> {
             / fleet_size.max(1) as f64,
         mean_cohort: fsim.stats().mean_participants(),
         link_shards: fsim.engine().net().n_shards() as u64,
+        queue,
     })
 }
 
@@ -708,6 +895,39 @@ mod tests {
         let parsed = crate::util::json::parse(&text).unwrap();
         assert!(parsed.get("events_per_sec").unwrap().as_f64().unwrap() > 0.0);
         assert!(parsed.get("link_shards").unwrap().as_f64().unwrap() > 1.0);
+        // the event-queue microbench rode along and pinned the wheel to
+        // the heap oracle before timing either
+        let q = parsed.get("event_queue").unwrap();
+        assert_eq!(q.get("scenario").unwrap().as_str(), Some("megafleet-async"));
+        assert!(q.get("ops").unwrap().as_f64().unwrap() > 0.0);
+        assert!(q.get("wheel_ops_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(q.get("heap_ops_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(q.get("speedup_vs_heap").unwrap().as_f64().unwrap()
+                 .is_finite());
+        assert!(q.get("max_depth").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    /// The queue microbench's differential pass is itself a test: the
+    /// wheel pops bit-identically to the heap on the megafleet-async
+    /// arrival stream, and an armed floor rejects an absurd demand.
+    #[test]
+    fn queue_bench_pins_wheel_to_heap_and_floors_arm() {
+        let res = run_queue_bench("megafleet-async", 200).unwrap();
+        assert_eq!(res.scenario, "megafleet-async");
+        assert!(res.ops > 0);
+        assert!(res.wheel_ops_per_sec > 0.0);
+        assert!(res.heap_ops_per_sec > 0.0);
+        assert!(res.speedup().is_finite());
+        // inflight bursts overlap, so the high-water mark spans several
+        // cohorts of 200
+        assert!(res.max_depth >= 200, "max_depth {}", res.max_depth);
+
+        let mut cfg = ShardBenchCfg::smoke();
+        cfg.steps = 20;
+        cfg.warmup = 5;
+        cfg.queue_ops_floor = f64::INFINITY;
+        let err = run_shard(&cfg).unwrap_err().to_string();
+        assert!(err.contains("below the floor"), "{err}");
     }
 
     #[test]

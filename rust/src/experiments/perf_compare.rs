@@ -10,7 +10,8 @@
 //!
 //! * round — `engine.steps_per_sec`, `sim_scheduler.events_per_sec`,
 //!   `async_scheduler.events_per_sec`
-//! * shard — `events_per_sec` (megafleet events/sec)
+//! * shard — `events_per_sec` (megafleet events/sec) and
+//!   `event_queue.wheel_ops_per_sec` (timing-wheel scheduler ops/sec)
 //! * kernels — per-kernel GB/s at the *current* active dispatch level
 //!
 //! Everything else in the files (reference loop, natural wire, per-level
@@ -287,6 +288,8 @@ pub fn compare(
     let (b, c) = (baseline.shard.as_ref(), shard);
     for (path, tracked) in [
         ("events_per_sec", true),
+        ("event_queue.wheel_ops_per_sec", true),
+        ("event_queue.speedup_vs_heap", false),
         ("resident_bytes_per_device", false),
         ("touched_clients", false),
     ] {

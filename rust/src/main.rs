@@ -93,8 +93,13 @@ commands:
                --compare <baseline file|dir> renders a delta table (perf.md)
                against committed BENCH_*.json and fails on >10% regression
                of tracked headline numbers (see bench/compare.sh).
+               --queue-floor <N> fails the run when the timing-wheel
+               event-queue microbench (the BENCH_shard.json `event_queue`
+               section, wheel vs binary-heap oracle on a megafleet-async
+               stream) measures below N ops/sec (CI's queue-smoke job).
                [--smoke] [--steps N] [--out file] [--shard-out file]
                [--kernels-out file] [--compare path] [--perf-out file]
+               [--queue-floor N]
   sim          discrete-event fleet simulation of the Fig-3 config under
                scenario presets (partial participation, churn, stragglers,
                byte-accurate wire frames, million-device megafleet presets
@@ -393,6 +398,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         bench_round::ShardBenchCfg::megafleet()
     };
     scfg.seed = cfg.seed;
+    scfg.queue_ops_floor = args.parse_or("queue-floor", scfg.queue_ops_floor)?;
     eprintln!("scale bench: {} ({} steps + {} warmup)",
               scfg.scenario, scfg.steps, scfg.warmup);
     let sres = bench_round::run_and_write_shard(&scfg, &shard_out)?;
@@ -407,6 +413,14 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                             bench_round::SHARD_ALLOCS_PER_TOUCH_BOUND),
         None => println!("allocations:               not measured (counting \
                           allocator absent)"),
+    }
+    println!("event queue (wheel):       {:>10.0} ops/s  ({:.2}x vs heap, \
+              depth {})",
+             sres.queue.wheel_ops_per_sec, sres.queue.speedup(),
+             sres.queue.max_depth);
+    if scfg.queue_ops_floor > 0.0 {
+        println!("queue floor:               {:>10.0} ops/s  (passed)",
+                 scfg.queue_ops_floor);
     }
     println!("wrote {shard_out}");
 

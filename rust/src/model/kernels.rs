@@ -2,13 +2,15 @@
 //!
 //! The hot kernels ([`dot`], [`axpy`], [`aggregation_step`], [`add_assign`],
 //! [`scale`]) no longer rely on LLVM autovectorization: on x86-64 they
-//! dispatch at runtime to hand-written AVX2 intrinsics (detected via
-//! `is_x86_feature_detected!`) with an SSE2 path as the baseline-ABI
-//! fallback; every other architecture takes the portable [`scalar`] path.
-//! The dispatch decision is made once per process ([`active_level`]) and
-//! `PFL_FORCE_SCALAR_KERNELS=1` forces the scalar path regardless of
-//! hardware — the escape hatch for A/B timing and for debugging a
-//! suspected intrinsics bug.
+//! dispatch at runtime to hand-written AVX-512 or AVX2 intrinsics
+//! (detected via `is_x86_feature_detected!`) with an SSE2 path as the
+//! baseline-ABI fallback; every other architecture takes the portable
+//! [`scalar`] path. The dispatch decision is made once per process
+//! ([`active_level`]) and `PFL_FORCE_KERNEL_LEVEL=<avx512|avx2|sse2|scalar>`
+//! pins any tier (clamped to the next-slower level the host can actually
+//! run) — the escape hatch for A/B timing and for debugging a suspected
+//! intrinsics bug. `PFL_FORCE_SCALAR_KERNELS=1` is kept as an alias for
+//! `PFL_FORCE_KERNEL_LEVEL=scalar`.
 //!
 //! Bit-exactness contract: the previous 8-lane autovectorizable forms are
 //! retained verbatim in [`scalar`] as oracles, and **every intrinsic path
@@ -20,7 +22,11 @@
 //! uses separate mul+add (never FMA — fused rounding would diverge), and
 //! reduces the lanes in the oracle's exact tree order; the SSE2 path
 //! splits the same 8 accumulators across two 4-lane registers over 8-wide
-//! blocks. Golden series (`rust/tests/golden/`) are therefore unchanged by
+//! blocks; the AVX-512 path widens loads and multiplies to 512 bits but
+//! keeps the *accumulator* 8 lanes wide, folding each product's low then
+//! high 256-bit half into it — lane `l` still sees products in the
+//! oracle's exact `k = 0, 1, 2, …` block order, so nothing reassociates.
+//! Golden series (`rust/tests/golden/`) are therefore unchanged by
 //! dispatch level, and `rust/tests/kernel_parity.rs` pins every kernel ×
 //! every available level bitwise. As before, `dot` rounds differently
 //! from a strictly sequential fold; nothing in the training path compares
@@ -128,6 +134,150 @@ pub mod scalar {
 #[cfg(target_arch = "x86_64")]
 mod x86 {
     use std::arch::x86_64::*;
+
+    /// Low 256-bit half of a 512-bit f32 vector.
+    #[target_feature(enable = "avx512f")]
+    unsafe fn lo256(v: __m512) -> __m256 {
+        _mm512_castps512_ps256(v)
+    }
+
+    /// High 256-bit half of a 512-bit f32 vector. Routed through the f64
+    /// domain because `_mm512_extractf32x8_ps` needs AVX512DQ while the
+    /// `f64x4` extract is plain AVX512F; bit casts don't touch lanes.
+    #[target_feature(enable = "avx512f")]
+    unsafe fn hi256(v: __m512) -> __m256 {
+        _mm256_castpd_ps(_mm512_extractf64x4_pd(_mm512_castps_pd(v), 1))
+    }
+
+    /// AVX-512 dot: 512-bit loads and multiplies, but the accumulator
+    /// stays one 8-lane register — each 16-wide block's product folds its
+    /// low then high 256-bit half into it, so lane `l` performs exactly
+    /// the oracle's `acc[l] += a[8k+l] * b[8k+l]` sequence for
+    /// `k = 2j, 2j+1, …` (separate `mul`+`add`, never FMA). A widened
+    /// 16-lane accumulator would reassociate the sum; this keeps the
+    /// memory bandwidth win without changing a single rounding step. The
+    /// reduction reuses the oracle's exact tree order, then the same
+    /// sequential tail (one 8-wide AVX2 block first when `len % 16 ≥ 8` —
+    /// `avx512f` implies `avx2`, so 256-bit ops are in-budget here).
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX-512F (`active_level()` /
+    /// `available_levels()` gate on `is_x86_feature_detected!("avx512f")`).
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn dot_avx512(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let split16 = a.len() - a.len() % 16;
+        let split8 = a.len() - a.len() % 8;
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let mut k = 0usize;
+        while k < split16 {
+            let va = _mm512_loadu_ps(pa.add(k));
+            let vb = _mm512_loadu_ps(pb.add(k));
+            let prod = _mm512_mul_ps(va, vb);
+            acc = _mm256_add_ps(acc, lo256(prod));
+            acc = _mm256_add_ps(acc, hi256(prod));
+            k += 16;
+        }
+        if split8 > split16 {
+            let va = _mm256_loadu_ps(pa.add(k));
+            let vb = _mm256_loadu_ps(pb.add(k));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut s = ((lanes[0] + lanes[4]) + (lanes[2] + lanes[6]))
+            + ((lanes[1] + lanes[5]) + (lanes[3] + lanes[7]));
+        for i in split8..a.len() {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX-512F. Elementwise ⇒ the
+    /// 16-lane width cannot reassociate anything (see module docs).
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn axpy_avx512(x: &mut [f32], a: f32, y: &[f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let split = x.len() - x.len() % 16;
+        let px = x.as_mut_ptr();
+        let py = y.as_ptr();
+        let va = _mm512_set1_ps(a);
+        let mut k = 0usize;
+        while k < split {
+            let vx = _mm512_loadu_ps(px.add(k));
+            let vy = _mm512_loadu_ps(py.add(k));
+            // x + (a·y): same operation order as the oracle — no FMA
+            _mm512_storeu_ps(px.add(k), _mm512_add_ps(vx, _mm512_mul_ps(va, vy)));
+            k += 16;
+        }
+        for i in split..x.len() {
+            x[i] += a * y[i];
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX-512F.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn aggregation_step_avx512(x: &mut [f32], a: f32, anchor: &[f32]) {
+        debug_assert_eq!(x.len(), anchor.len());
+        let split = x.len() - x.len() % 16;
+        let px = x.as_mut_ptr();
+        let pm = anchor.as_ptr();
+        let va = _mm512_set1_ps(a);
+        let mut k = 0usize;
+        while k < split {
+            let vx = _mm512_loadu_ps(px.add(k));
+            let vm = _mm512_loadu_ps(pm.add(k));
+            // x − a·(x − m): oracle order `xs[l] -= a * (xs[l] - ms[l])`
+            let step = _mm512_mul_ps(va, _mm512_sub_ps(vx, vm));
+            _mm512_storeu_ps(px.add(k), _mm512_sub_ps(vx, step));
+            k += 16;
+        }
+        for i in split..x.len() {
+            x[i] -= a * (x[i] - anchor[i]);
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX-512F.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn add_assign_avx512(acc: &mut [f32], v: &[f32]) {
+        debug_assert_eq!(acc.len(), v.len());
+        let split = acc.len() - acc.len() % 16;
+        let pa = acc.as_mut_ptr();
+        let pv = v.as_ptr();
+        let mut k = 0usize;
+        while k < split {
+            let va = _mm512_loadu_ps(pa.add(k));
+            let vv = _mm512_loadu_ps(pv.add(k));
+            _mm512_storeu_ps(pa.add(k), _mm512_add_ps(va, vv));
+            k += 16;
+        }
+        for i in split..acc.len() {
+            acc[i] += v[i];
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX-512F.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn scale_avx512(x: &mut [f32], s: f32) {
+        let split = x.len() - x.len() % 16;
+        let px = x.as_mut_ptr();
+        let vs = _mm512_set1_ps(s);
+        let mut k = 0usize;
+        while k < split {
+            let vx = _mm512_loadu_ps(px.add(k));
+            _mm512_storeu_ps(px.add(k), _mm512_mul_ps(vx, vs));
+            k += 16;
+        }
+        for i in split..x.len() {
+            x[i] *= s;
+        }
+    }
 
     /// AVX2 dot: one 8-lane accumulator whose lane `l` performs exactly
     /// the oracle's `acc[l] += a[8k+l] * b[8k+l]` sequence (separate
@@ -364,56 +514,80 @@ mod x86 {
 }
 
 /// Instruction-set level a kernel call executes at. Ordered fastest
-/// first; recorded as `cpu_features` in every `BENCH_*.json`.
+/// first (discriminants are the speed rank, used by the dispatch clamp);
+/// recorded as `cpu_features` in every `BENCH_*.json`.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum KernelLevel {
+    /// 16-lane AVX-512 intrinsics (x86-64 with runtime-detected AVX512F).
+    Avx512 = 0,
     /// 8-lane AVX2 intrinsics (x86-64 with runtime-detected AVX2).
-    Avx2,
+    Avx2 = 1,
     /// 4-lane SSE2 intrinsics (the x86-64 baseline ABI).
-    Sse2,
+    Sse2 = 2,
     /// Portable 8-lane unrolled loops (non-x86 targets, or the
-    /// `PFL_FORCE_SCALAR_KERNELS=1` escape hatch).
-    Scalar,
+    /// `PFL_FORCE_KERNEL_LEVEL=scalar` escape hatch).
+    Scalar = 3,
 }
 
 impl KernelLevel {
     pub fn name(self) -> &'static str {
         match self {
+            KernelLevel::Avx512 => "avx512",
             KernelLevel::Avx2 => "avx2",
             KernelLevel::Sse2 => "sse2",
             KernelLevel::Scalar => "scalar",
         }
     }
-}
 
-/// Best level the hardware supports (ignoring the escape hatch).
-#[cfg(target_arch = "x86_64")]
-fn hw_level() -> KernelLevel {
-    if std::arch::is_x86_feature_detected!("avx2") {
-        KernelLevel::Avx2
-    } else {
-        KernelLevel::Sse2
+    /// Parse a `PFL_FORCE_KERNEL_LEVEL` value (the `name()` vocabulary).
+    pub fn parse(s: &str) -> Option<KernelLevel> {
+        match s {
+            "avx512" => Some(KernelLevel::Avx512),
+            "avx2" => Some(KernelLevel::Avx2),
+            "sse2" => Some(KernelLevel::Sse2),
+            "scalar" => Some(KernelLevel::Scalar),
+            _ => None,
+        }
     }
-}
-
-#[cfg(not(target_arch = "x86_64"))]
-fn hw_level() -> KernelLevel {
-    KernelLevel::Scalar
 }
 
 /// The dispatch decision as a pure function of the escape hatch — what
-/// [`active_level`] caches after reading `PFL_FORCE_SCALAR_KERNELS`.
-pub fn level_for(force_scalar: bool) -> KernelLevel {
-    if force_scalar {
-        KernelLevel::Scalar
-    } else {
-        hw_level()
+/// [`active_level`] caches after reading the env. `None` (no forcing)
+/// picks the fastest level the hardware supports; `Some(level)` pins that
+/// tier, clamped to the next-slower level this host can actually execute
+/// (e.g. `avx512` requested on an AVX2-only box runs AVX2), so a forced
+/// run can never hand out an illegal instruction.
+pub fn level_for(forced: Option<KernelLevel>) -> KernelLevel {
+    let avail = available_levels();
+    match forced {
+        None => avail[0],
+        Some(want) => *avail
+            .iter()
+            .find(|&&l| l as usize >= want as usize)
+            .unwrap_or(&KernelLevel::Scalar),
     }
 }
 
-/// True when `PFL_FORCE_SCALAR_KERNELS=1` is set.
-pub fn force_scalar_requested() -> bool {
-    std::env::var_os("PFL_FORCE_SCALAR_KERNELS").is_some_and(|v| v == "1")
+/// The tier pinned by `PFL_FORCE_KERNEL_LEVEL=<avx512|avx2|sse2|scalar>`,
+/// or by the legacy alias `PFL_FORCE_SCALAR_KERNELS=1` (= `scalar`).
+/// Unknown values warn once on stderr and fall through to auto-detection
+/// rather than silently changing the dispatch.
+pub fn forced_level() -> Option<KernelLevel> {
+    if let Some(v) = std::env::var_os("PFL_FORCE_KERNEL_LEVEL") {
+        let s = v.to_string_lossy();
+        let parsed = KernelLevel::parse(s.trim());
+        if parsed.is_none() {
+            eprintln!(
+                "warning: ignoring PFL_FORCE_KERNEL_LEVEL={s:?} \
+                 (expected avx512|avx2|sse2|scalar)"
+            );
+        }
+        return parsed;
+    }
+    if std::env::var_os("PFL_FORCE_SCALAR_KERNELS").is_some_and(|v| v == "1") {
+        return Some(KernelLevel::Scalar);
+    }
+    None
 }
 
 static LEVEL: OnceLock<KernelLevel> = OnceLock::new();
@@ -424,16 +598,18 @@ static LEVEL: OnceLock<KernelLevel> = OnceLock::new();
 /// is a single atomic load — the zero-allocation wire path never sees an
 /// env lookup.
 pub fn active_level() -> KernelLevel {
-    *LEVEL.get_or_init(|| level_for(force_scalar_requested()))
+    *LEVEL.get_or_init(|| level_for(forced_level()))
 }
 
 /// Every level this host can execute, fastest first. `active_level()` is
-/// always `available_levels()[0]` unless the scalar escape hatch is set.
+/// always `available_levels()[0]` unless the escape hatch is set.
 /// The parity tests and the kernels microbench sweep this list so one
 /// process exercises every path.
 #[cfg(target_arch = "x86_64")]
 pub fn available_levels() -> &'static [KernelLevel] {
-    if std::arch::is_x86_feature_detected!("avx2") {
+    if std::arch::is_x86_feature_detected!("avx512f") {
+        &[KernelLevel::Avx512, KernelLevel::Avx2, KernelLevel::Sse2, KernelLevel::Scalar]
+    } else if std::arch::is_x86_feature_detected!("avx2") {
         &[KernelLevel::Avx2, KernelLevel::Sse2, KernelLevel::Scalar]
     } else {
         &[KernelLevel::Sse2, KernelLevel::Scalar]
@@ -451,8 +627,9 @@ mod dispatch {
 
     pub fn dot_at(level: KernelLevel, a: &[f32], b: &[f32]) -> f32 {
         match level {
-            // Safety: Avx2 is only handed out by active_level() /
+            // Safety: Avx512/Avx2 are only handed out by active_level() /
             // available_levels() after runtime detection succeeded.
+            KernelLevel::Avx512 => unsafe { x86::dot_avx512(a, b) },
             KernelLevel::Avx2 => unsafe { x86::dot_avx2(a, b) },
             KernelLevel::Sse2 => x86::dot_sse2(a, b),
             KernelLevel::Scalar => scalar::dot(a, b),
@@ -462,6 +639,7 @@ mod dispatch {
     pub fn axpy_at(level: KernelLevel, x: &mut [f32], a: f32, y: &[f32]) {
         match level {
             // Safety: see dot_at.
+            KernelLevel::Avx512 => unsafe { x86::axpy_avx512(x, a, y) },
             KernelLevel::Avx2 => unsafe { x86::axpy_avx2(x, a, y) },
             KernelLevel::Sse2 => x86::axpy_sse2(x, a, y),
             KernelLevel::Scalar => scalar::axpy(x, a, y),
@@ -471,6 +649,7 @@ mod dispatch {
     pub fn aggregation_step_at(level: KernelLevel, x: &mut [f32], a: f32, anchor: &[f32]) {
         match level {
             // Safety: see dot_at.
+            KernelLevel::Avx512 => unsafe { x86::aggregation_step_avx512(x, a, anchor) },
             KernelLevel::Avx2 => unsafe { x86::aggregation_step_avx2(x, a, anchor) },
             KernelLevel::Sse2 => x86::aggregation_step_sse2(x, a, anchor),
             KernelLevel::Scalar => scalar::aggregation_step(x, a, anchor),
@@ -480,6 +659,7 @@ mod dispatch {
     pub fn add_assign_at(level: KernelLevel, acc: &mut [f32], v: &[f32]) {
         match level {
             // Safety: see dot_at.
+            KernelLevel::Avx512 => unsafe { x86::add_assign_avx512(acc, v) },
             KernelLevel::Avx2 => unsafe { x86::add_assign_avx2(acc, v) },
             KernelLevel::Sse2 => x86::add_assign_sse2(acc, v),
             KernelLevel::Scalar => scalar::add_assign(acc, v),
@@ -489,6 +669,7 @@ mod dispatch {
     pub fn scale_at(level: KernelLevel, x: &mut [f32], s: f32) {
         match level {
             // Safety: see dot_at.
+            KernelLevel::Avx512 => unsafe { x86::scale_avx512(x, s) },
             KernelLevel::Avx2 => unsafe { x86::scale_avx2(x, s) },
             KernelLevel::Sse2 => x86::scale_sse2(x, s),
             KernelLevel::Scalar => scalar::scale(x, s),
@@ -628,15 +809,45 @@ mod tests {
 
     #[test]
     fn dispatch_decision_honors_the_escape_hatch() {
-        assert_eq!(level_for(true), KernelLevel::Scalar);
-        assert_eq!(level_for(false), available_levels()[0]);
+        assert_eq!(level_for(Some(KernelLevel::Scalar)), KernelLevel::Scalar);
+        assert_eq!(level_for(None), available_levels()[0]);
         // the cached decision is one of the executable levels
         assert!(available_levels().contains(&active_level()));
-        assert_eq!(active_level(), level_for(force_scalar_requested()));
+        assert_eq!(active_level(), level_for(forced_level()));
+    }
+
+    #[test]
+    fn forced_levels_clamp_to_what_the_host_can_run() {
+        for &want in
+            &[KernelLevel::Avx512, KernelLevel::Avx2, KernelLevel::Sse2, KernelLevel::Scalar]
+        {
+            let got = level_for(Some(want));
+            // never faster than requested, always executable
+            assert!(got as usize >= want as usize, "{:?} -> {:?}", want, got);
+            assert!(available_levels().contains(&got));
+        }
+        // a request the host can satisfy is honored exactly
+        for &l in available_levels() {
+            assert_eq!(level_for(Some(l)), l);
+        }
+    }
+
+    #[test]
+    fn level_names_parse_back() {
+        for &l in &[
+            KernelLevel::Avx512,
+            KernelLevel::Avx2,
+            KernelLevel::Sse2,
+            KernelLevel::Scalar,
+        ] {
+            assert_eq!(KernelLevel::parse(l.name()), Some(l));
+        }
+        assert_eq!(KernelLevel::parse("neon"), None);
     }
 
     #[test]
     fn level_names_are_the_bench_metadata_vocabulary() {
+        assert_eq!(KernelLevel::Avx512.name(), "avx512");
         assert_eq!(KernelLevel::Avx2.name(), "avx2");
         assert_eq!(KernelLevel::Sse2.name(), "sse2");
         assert_eq!(KernelLevel::Scalar.name(), "scalar");

@@ -67,15 +67,21 @@ pub enum Counter {
     LoopbackRxBytes = 3,
     /// trace events overwritten by ring wrap-around
     TraceEventsDropped = 4,
+    /// events scheduled into the timing-wheel event queue
+    QueuePush = 5,
+    /// events drained from the timing-wheel event queue
+    QueuePop = 6,
 }
 
-const N_COUNTERS: usize = 5;
+const N_COUNTERS: usize = 7;
 const COUNTER_NAMES: [&str; N_COUNTERS] = [
     "frames_encoded",
     "frames_decoded",
     "loopback_tx_bytes",
     "loopback_rx_bytes",
     "trace_events_dropped",
+    "queue_push",
+    "queue_pop",
 ];
 
 /// Gauge ids (last-write-wins f64).
@@ -83,10 +89,12 @@ const COUNTER_NAMES: [&str; N_COUNTERS] = [
 pub enum Gauge {
     /// thread-pool busy fraction over the profiled window, 0..=1
     PoolUtilization = 0,
+    /// high-water mark of pending events in the timing-wheel queue
+    QueueMaxDepth = 1,
 }
 
-const N_GAUGES: usize = 1;
-const GAUGE_NAMES: [&str; N_GAUGES] = ["pool_utilization"];
+const N_GAUGES: usize = 2;
+const GAUGE_NAMES: [&str; N_GAUGES] = ["pool_utilization", "queue_max_depth"];
 
 static BUCKETS: [AtomicU64; N_HISTS * N_BUCKETS] =
     [const { AtomicU64::new(0) }; N_HISTS * N_BUCKETS];
@@ -362,7 +370,10 @@ mod tests {
         assert!(q.get("count").unwrap().as_f64().unwrap() >= 1.0);
         assert!(q.get("p50").unwrap().as_f64().is_some());
         assert!(v.get("counters").unwrap().get("frames_encoded").is_some());
+        assert!(v.get("counters").unwrap().get("queue_push").is_some());
+        assert!(v.get("counters").unwrap().get("queue_pop").is_some());
         assert!(v.get("gauges").unwrap().get("pool_utilization").is_some());
+        assert!(v.get("gauges").unwrap().get("queue_max_depth").is_some());
         let prom = s.to_prom();
         assert!(prom.contains("# TYPE pfl_queue_depth histogram"));
         assert!(prom.contains("pfl_queue_depth_bucket{le=\"+Inf\"}"));

@@ -270,6 +270,17 @@ impl<'e, S: ClientStore> AsyncFleetSim<'e, S> {
                     (BufferPolicy::Cohort, 1, StalenessWeight::Constant,
                      u64::MAX),
             };
+        // Wheel bucket width from the fleet's mean arrival delay; unlike
+        // the sync runner the queue carries every in-flight round's
+        // arrivals at once, so reserve `inflight × cohort` up front —
+        // warm megafleet-async runs then stay allocation-free under the
+        // CountingAlloc per-event bound.
+        let granularity = EventQueue::<(u32, u32, u32)>::granularity_for(
+            mean_step_s + fleet.latency.mean(),
+        );
+        let cohort_cap =
+            ((cfg.scenario.sample_frac * fleet_n as f64).ceil() as usize).clamp(1, fleet_n);
+        let queue_cap = max_in_flight.saturating_mul(cohort_cap);
         Ok(AsyncFleetSim {
             eng,
             fleet,
@@ -302,7 +313,7 @@ impl<'e, S: ClientStore> AsyncFleetSim<'e, S> {
             apply_weights: Vec::new(),
             apply_versions: Vec::new(),
             seen: HashSet::new(),
-            queue: EventQueue::new(),
+            queue: EventQueue::with_capacity_and_granularity(queue_cap, granularity),
         })
     }
 

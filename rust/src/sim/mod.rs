@@ -12,8 +12,11 @@
 //! paper's bits-per-accuracy comparison holds up under realistic cohort
 //! sampling, churn, and million-device scale.
 //!
-//! * [`queue`] — deterministic timestamped event queue (binary heap, FIFO
-//!   ties).
+//! * [`queue`] — deterministic timestamped event queue: an O(1)-amortized
+//!   timing wheel (bucket granularity derived from the fleet's delay
+//!   distributions, overflow rung for far-future events) pinned
+//!   bit-identical against the retained binary-heap oracle
+//!   (`HeapQueue`), FIFO ties either way.
 //! * [`fleet`] — device profiles drawn from configurable distributions
 //!   (uniform / log-normal / bimodal "phone vs laptop") via O(1)
 //!   random-access streams (never materialized fleet-wide) and seeded
@@ -68,6 +71,6 @@ pub mod scenario;
 pub use async_runner::{AsyncDenseSim, AsyncFleetSim, AsyncShardedSim, AsyncStats};
 pub use fleet::{Churn, DeviceProfile, Dist, Fleet, FleetSpec};
 pub use lang::SpecError;
-pub use queue::EventQueue;
+pub use queue::{EventQueue, HeapQueue};
 pub use runner::{sample_device_ids, FleetSim, SimCfg, SimResult, SimStats};
 pub use scenario::{Phase, Scenario};

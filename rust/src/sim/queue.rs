@@ -1,20 +1,67 @@
-//! Deterministic discrete-event queue: a binary min-heap of timestamped
-//! events with FIFO tie-breaking.
+//! Deterministic discrete-event queue: a timing wheel of timestamped
+//! events with FIFO tie-breaking, plus the original binary heap kept as a
+//! bit-exactness oracle ([`HeapQueue`]).
 //!
-//! `f64` timestamps are ordered by `total_cmp`; equal timestamps pop in
-//! insertion order via a monotone sequence number, so a simulation replays
-//! identically regardless of heap internals. The heap's backing storage is
-//! retained across [`EventQueue::clear`], which is what keeps the
-//! simulator's per-round arrival scheduling allocation-free once warm.
+//! Both implementations pop in exactly the same order: `f64` timestamps
+//! ordered by `total_cmp`, equal timestamps in insertion order via a
+//! monotone sequence number — so a simulation replays identically
+//! regardless of which queue backs it, and `rust/tests/queue_wheel.rs`
+//! pins the two against each other on adversarial streams.
+//!
+//! ### Wheel layout
+//! [`EventQueue`] spreads pending events over [`WHEEL_BUCKETS`] buckets of
+//! `granularity` seconds each, covering the window
+//! `[origin, origin + WHEEL_BUCKETS·granularity)`:
+//!
+//! * **push** is O(1): compute the bucket index with one subtract/multiply
+//!   and a saturating float→int cast, append. Times past the window land
+//!   in the **overflow rung**; times before the window (possible after the
+//!   clock has advanced) clamp into the cursor bucket, which re-sorts.
+//! * **pop** drains the cursor bucket, kept sorted *descending* by
+//!   `(total_cmp time, seq)` under a dirty flag so `Vec::pop` yields the
+//!   minimum; empty buckets are skipped via a 4-word occupancy bitmap
+//!   (find-first-set, no linear scan). When the whole window is drained
+//!   the overflow rung re-buckets around its minimum time.
+//! * The backing storage of every bucket is retained across
+//!   [`EventQueue::clear`], which is what keeps the simulator's per-round
+//!   arrival scheduling allocation-free once warm.
+//!
+//! Amortized cost per event is O(1) plus the per-bucket sort, which is
+//! O(b log b) on the handful of events sharing one granularity slot —
+//! versus O(log n) over *all* pending events for the heap. The win grows
+//! with queue depth, i.e. exactly in the async runner's
+//! `inflight × cohort` regime. Bucket granularity should be derived from
+//! the fleet's latency/compute distributions via
+//! [`EventQueue::granularity_for`] so a typical round's arrivals spread
+//! across the window instead of piling into one bucket.
 //!
 //! The queue carries one round's arrivals in the synchronous runner and the
 //! arrivals of **every in-flight round at once** in the asynchronous one
 //! ([`crate::sim::async_runner`]); the latter cannot `clear()` on a round
 //! close, so it tags each event with its round slot's generation and lets
 //! stale-generation pops fall through silently — same capacity-retention
-//! discipline, per-round instead of whole-queue.
+//! discipline, per-round instead of whole-queue. Push/pop totals and the
+//! high-water depth are metered into the [`crate::obs::registry`]
+//! ([`registry::Counter::QueuePush`], [`registry::Counter::QueuePop`],
+//! [`registry::Gauge::QueueMaxDepth`]); the oracle meters nothing so
+//! microbenchmarks time pure scheduling.
 
 use std::collections::BinaryHeap;
+
+use crate::obs::registry;
+
+/// Number of buckets in the wheel window. 256 keeps the occupancy bitmap
+/// at four words and the window at `256 × granularity` — with
+/// [`EventQueue::granularity_for`]'s mean-delay/64 choice, about 4× the
+/// mean arrival delay, so straggler tails (not typical rounds) hit the
+/// overflow rung.
+pub const WHEEL_BUCKETS: usize = 256;
+
+const WORDS: usize = WHEEL_BUCKETS / 64;
+
+/// Fallback bucket width (seconds) for queues built without a fleet to
+/// derive one from ([`EventQueue::new`] / [`EventQueue::with_capacity`]).
+pub const DEFAULT_GRANULARITY: f64 = 1e-2;
 
 struct Entry<T> {
     time: f64,
@@ -47,18 +94,286 @@ impl<T> Ord for Entry<T> {
     }
 }
 
+/// Timing-wheel event queue (the default scheduler).
 pub struct EventQueue<T> {
-    heap: BinaryHeap<Entry<T>>,
+    buckets: Vec<Vec<Entry<T>>>,
+    /// One bit per bucket; set iff the bucket is non-empty.
+    occupied: [u64; WORDS],
+    /// Events at or past `origin + WHEEL_BUCKETS × granularity`.
+    overflow: Vec<Entry<T>>,
+    /// Bucket width in seconds.
+    granularity: f64,
+    inv_granularity: f64,
+    /// Left edge of bucket 0. Re-anchored on the first push after
+    /// construction/clear and on every overflow re-bucket.
+    origin: f64,
+    /// First possibly non-empty bucket; never retreats between clears.
+    cursor: usize,
+    /// Whether the cursor bucket is sorted descending by `(time, seq)`.
+    front_sorted: bool,
+    /// Whether `origin` has been anchored yet.
+    started: bool,
     seq: u64,
+    len: usize,
+    max_depth: usize,
 }
 
 impl<T> EventQueue<T> {
     pub fn new() -> EventQueue<T> {
-        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+        Self::with_capacity_and_granularity(0, DEFAULT_GRANULARITY)
     }
 
     pub fn with_capacity(cap: usize) -> EventQueue<T> {
-        EventQueue { heap: BinaryHeap::with_capacity(cap), seq: 0 }
+        Self::with_capacity_and_granularity(cap, DEFAULT_GRANULARITY)
+    }
+
+    pub fn with_granularity(granularity: f64) -> EventQueue<T> {
+        Self::with_capacity_and_granularity(0, granularity)
+    }
+
+    /// Pre-reserve for `cap` simultaneously pending events with the given
+    /// bucket width. Capacity is spread uniformly across the wheel (and
+    /// mirrored in the overflow rung, whose entries are `(f64, u64, T)`
+    /// triples — cheap); skewed streams grow their hot buckets once during
+    /// warmup and stay allocation-free after.
+    pub fn with_capacity_and_granularity(cap: usize, granularity: f64) -> EventQueue<T> {
+        let granularity = if granularity.is_finite() && granularity > 0.0 {
+            granularity
+        } else {
+            DEFAULT_GRANULARITY
+        };
+        let per_bucket = cap.div_ceil(WHEEL_BUCKETS);
+        EventQueue {
+            buckets: (0..WHEEL_BUCKETS)
+                .map(|_| Vec::with_capacity(per_bucket))
+                .collect(),
+            occupied: [0; WORDS],
+            overflow: Vec::with_capacity(cap),
+            granularity,
+            inv_granularity: 1.0 / granularity,
+            origin: 0.0,
+            cursor: 0,
+            front_sorted: true,
+            started: false,
+            seq: 0,
+            len: 0,
+            max_depth: 0,
+        }
+    }
+
+    /// Bucket width for a fleet whose arrivals are spaced
+    /// `mean_event_spacing` seconds apart on average (compute + network
+    /// latency + transfer): mean/64, so the 256-bucket window covers ~4×
+    /// the mean and log-normal straggler tails spill to the overflow rung
+    /// instead of stretching the window.
+    pub fn granularity_for(mean_event_spacing: f64) -> f64 {
+        if mean_event_spacing.is_finite() && mean_event_spacing > 0.0 {
+            (mean_event_spacing / 64.0).max(1e-9)
+        } else {
+            DEFAULT_GRANULARITY
+        }
+    }
+
+    /// Schedule `item` at absolute time `time` (NaN is rejected).
+    pub fn push(&mut self, time: f64, item: T) {
+        debug_assert!(!time.is_nan(), "NaN event time");
+        let seq = self.seq;
+        self.seq += 1;
+        if !self.started {
+            self.started = true;
+            self.origin = if time.is_finite() { time } else { 0.0 };
+            self.cursor = 0;
+            self.front_sorted = self.buckets[0].is_empty();
+        }
+        // Saturating cast: negative offsets (before the window) clamp to
+        // 0, +inf and far-future offsets saturate past WHEEL_BUCKETS.
+        let idx = ((time - self.origin) * self.inv_granularity) as usize;
+        if idx >= WHEEL_BUCKETS {
+            self.overflow.push(Entry { time, seq, item });
+        } else {
+            // Never behind the cursor: late events join the front bucket,
+            // whose sort restores (time, seq) order before the next pop.
+            let b = idx.max(self.cursor);
+            if b == self.cursor {
+                self.front_sorted = false;
+            }
+            self.buckets[b].push(Entry { time, seq, item });
+            self.occupied[b >> 6] |= 1u64 << (b & 63);
+        }
+        self.len += 1;
+        if self.len > self.max_depth {
+            self.max_depth = self.len;
+            registry::set_gauge(registry::Gauge::QueueMaxDepth, self.max_depth as f64);
+        }
+        registry::count(registry::Counter::QueuePush, 1);
+    }
+
+    /// Pop the earliest event.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            if !self.buckets[self.cursor].is_empty() {
+                if !self.front_sorted {
+                    self.buckets[self.cursor].sort_unstable_by(|a, b| {
+                        // Descending (time, seq): Vec::pop takes the min.
+                        b.time.total_cmp(&a.time).then_with(|| b.seq.cmp(&a.seq))
+                    });
+                    self.front_sorted = true;
+                }
+                let e = self.buckets[self.cursor].pop().expect("non-empty bucket");
+                if self.buckets[self.cursor].is_empty() {
+                    self.occupied[self.cursor >> 6] &= !(1u64 << (self.cursor & 63));
+                }
+                self.len -= 1;
+                registry::count(registry::Counter::QueuePop, 1);
+                return Some((e.time, e.item));
+            }
+            match self.first_occupied(self.cursor + 1) {
+                Some(b) => {
+                    self.cursor = b;
+                    self.front_sorted = false;
+                }
+                // Window drained; len > 0 guarantees the overflow rung
+                // has events to re-anchor the wheel around.
+                None => self.rebucket(),
+            }
+        }
+    }
+
+    /// Time of the earliest pending event.
+    pub fn peek_time(&self) -> Option<f64> {
+        if self.len == 0 {
+            return None;
+        }
+        if let Some(b) = self.first_occupied(self.cursor) {
+            let bucket = &self.buckets[b];
+            if b == self.cursor && self.front_sorted {
+                return bucket.last().map(|e| e.time);
+            }
+            return Some(min_time(bucket));
+        }
+        Some(min_time(&self.overflow))
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// High-water mark of pending events since construction.
+    pub fn max_depth(&self) -> usize {
+        self.max_depth
+    }
+
+    /// Bucket width in seconds.
+    pub fn granularity(&self) -> f64 {
+        self.granularity
+    }
+
+    /// Drop all pending events, keeping the backing capacity (of every
+    /// bucket and the overflow rung). The next push re-anchors `origin`.
+    pub fn clear(&mut self) {
+        for b in &mut self.buckets {
+            b.clear();
+        }
+        self.overflow.clear();
+        self.occupied = [0; WORDS];
+        self.len = 0;
+        self.cursor = 0;
+        self.front_sorted = true;
+        self.started = false;
+    }
+
+    /// First non-empty bucket at or after `from`, via the occupancy bitmap.
+    fn first_occupied(&self, from: usize) -> Option<usize> {
+        if from >= WHEEL_BUCKETS {
+            return None;
+        }
+        let mut w = from >> 6;
+        let mut word = self.occupied[w] & (!0u64 << (from & 63));
+        loop {
+            if word != 0 {
+                return Some((w << 6) + word.trailing_zeros() as usize);
+            }
+            w += 1;
+            if w >= WORDS {
+                return None;
+            }
+            word = self.occupied[w];
+        }
+    }
+
+    /// Re-anchor the (fully drained) wheel around the overflow rung's
+    /// minimum time and move every event inside the new window into its
+    /// bucket. Events at or past the new window end stay in overflow —
+    /// the rung's invariant (all overflow times ≥ window end) is what
+    /// makes bucket-order draining globally correct.
+    fn rebucket(&mut self) {
+        debug_assert!(!self.overflow.is_empty(), "rebucket of an empty rung");
+        self.occupied = [0; WORDS];
+        self.cursor = 0;
+        self.front_sorted = false;
+        let min_t = min_time(&self.overflow);
+        self.origin = min_t;
+        if !min_t.is_finite() {
+            // Everything left is at +inf: one bucket, FIFO by seq.
+            let dst = &mut self.buckets[0];
+            dst.append(&mut self.overflow);
+            self.occupied[0] |= 1;
+            return;
+        }
+        let mut i = 0;
+        while i < self.overflow.len() {
+            let idx = ((self.overflow[i].time - min_t) * self.inv_granularity) as usize;
+            if idx < WHEEL_BUCKETS {
+                let e = self.overflow.swap_remove(i);
+                self.buckets[idx].push(e);
+                self.occupied[idx >> 6] |= 1u64 << (idx & 63);
+            } else {
+                i += 1;
+            }
+        }
+        // min_t itself always lands in bucket 0, so progress is guaranteed.
+    }
+}
+
+fn min_time<T>(entries: &[Entry<T>]) -> f64 {
+    let mut best = f64::INFINITY;
+    for e in entries {
+        if e.time.total_cmp(&best).is_lt() {
+            best = e.time;
+        }
+    }
+    best
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The original binary-heap queue, kept as the wheel's bit-exactness
+/// oracle: identical API, identical pop order (`total_cmp` time, FIFO seq
+/// tie-break), no registry metering — so differential tests and the
+/// `event_queue` microbench compare pure scheduling cost.
+pub struct HeapQueue<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+}
+
+impl<T> HeapQueue<T> {
+    pub fn new() -> HeapQueue<T> {
+        HeapQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn with_capacity(cap: usize) -> HeapQueue<T> {
+        HeapQueue { heap: BinaryHeap::with_capacity(cap), seq: 0 }
     }
 
     /// Schedule `item` at absolute time `time` (NaN is rejected).
@@ -93,7 +408,7 @@ impl<T> EventQueue<T> {
     }
 }
 
-impl<T> Default for EventQueue<T> {
+impl<T> Default for HeapQueue<T> {
     fn default() -> Self {
         Self::new()
     }
@@ -154,5 +469,97 @@ mod tests {
         q.push(2.0, 1);
         q.push(1.0, 2);
         assert_eq!(q.pop(), Some((1.0, 2)));
+    }
+
+    #[test]
+    fn far_future_events_take_the_overflow_rung() {
+        // Granularity 1s, window 256s: events at +1e6 and +inf overflow,
+        // yet still pop in order after the window drains and rebuckets.
+        let mut q = EventQueue::with_granularity(1.0);
+        q.push(1e6, "far");
+        q.push(0.5, "near");
+        q.push(f64::INFINITY, "never");
+        q.push(1e6, "far2");
+        assert_eq!(q.pop(), Some((0.5, "near")));
+        assert_eq!(q.pop(), Some((1e6, "far")));
+        assert_eq!(q.pop(), Some((1e6, "far2")));
+        assert_eq!(q.pop(), Some((f64::INFINITY, "never")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn past_time_pushes_still_pop_first() {
+        // After the cursor has advanced, a push *behind* it clamps into
+        // the front bucket and the re-sort pops it before everything else.
+        let mut q = EventQueue::with_granularity(0.1);
+        for i in 0..50 {
+            q.push(i as f64, i);
+        }
+        for want in 0..10 {
+            assert_eq!(q.pop(), Some((want as f64, want)));
+        }
+        q.push(3.25, 999); // earlier than every pending event
+        assert_eq!(q.pop(), Some((3.25, 999)));
+        assert_eq!(q.pop(), Some((10.0, 10)));
+    }
+
+    #[test]
+    fn matches_heap_oracle_on_a_random_stream() {
+        let mut rng = crate::util::Rng::new(0x51_EE7);
+        let mut wheel = EventQueue::with_granularity(0.01);
+        let mut heap = HeapQueue::new();
+        let mut clock = 0.0f64;
+        for step in 0..5_000u32 {
+            let r = rng.f64();
+            if r < 0.55 {
+                // cluster times to force dense ties and shared buckets
+                let t = clock + (rng.f64() * 40.0).floor() * 0.05;
+                wheel.push(t, step);
+                heap.push(t, step);
+            } else {
+                assert_eq!(wheel.peek_time(), heap.peek_time());
+                let got = wheel.pop();
+                assert_eq!(got, heap.pop());
+                if let Some((t, _)) = got {
+                    clock = clock.max(t);
+                }
+            }
+            assert_eq!(wheel.len(), heap.len());
+        }
+        loop {
+            let got = wheel.pop();
+            assert_eq!(got, heap.pop());
+            if got.is_none() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn max_depth_tracks_the_high_water_mark() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.push(i as f64, i);
+        }
+        for _ in 0..5 {
+            q.pop();
+        }
+        q.push(100.0, 99);
+        assert_eq!(q.max_depth(), 10);
+        assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn granularity_is_sanitized_and_derived() {
+        assert_eq!(EventQueue::<u32>::with_granularity(0.0).granularity(), DEFAULT_GRANULARITY);
+        assert_eq!(
+            EventQueue::<u32>::with_granularity(f64::NAN).granularity(),
+            DEFAULT_GRANULARITY
+        );
+        let g = EventQueue::<u32>::granularity_for(6.4);
+        assert!((g - 0.1).abs() < 1e-12);
+        assert_eq!(EventQueue::<u32>::granularity_for(0.0), DEFAULT_GRANULARITY);
+        // floor: absurdly fast fleets still get a positive bucket width
+        assert!(EventQueue::<u32>::granularity_for(1e-30) >= 1e-9);
     }
 }

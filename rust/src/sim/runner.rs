@@ -306,6 +306,12 @@ impl<'e> FleetSim<'e> {
         eng.enable_wire_framing();
         let fleet = cfg.scenario.fleet.clone();
         let mean_step_s = fleet.mean_step_time();
+        // Wheel bucket width from the fleet's mean arrival delay
+        // (compute + network latency); capacity for one round's cohort.
+        let granularity =
+            EventQueue::<u32>::granularity_for(mean_step_s + fleet.latency.mean());
+        let cohort_cap =
+            ((cfg.scenario.sample_frac * fleet_n as f64).ceil() as usize).clamp(1, fleet_n);
         Ok(FleetSim {
             eng,
             fleet,
@@ -325,7 +331,7 @@ impl<'e> FleetSim<'e> {
             agg_cohort: Vec::new(),
             arrived: Vec::new(),
             seen: HashSet::new(),
-            queue: EventQueue::new(),
+            queue: EventQueue::with_capacity_and_granularity(cohort_cap, granularity),
         })
     }
 

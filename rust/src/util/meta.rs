@@ -60,7 +60,7 @@ fn non_empty(s: &str) -> Option<String> {
 
 /// The shared `meta` object every bench emitter embeds: worker threads
 /// the measured section actually ran with, the kernel dispatch level
-/// ([`kernels::active_level`] — reflects the `PFL_FORCE_SCALAR_KERNELS`
+/// ([`kernels::active_level`] — reflects the `PFL_FORCE_KERNEL_LEVEL`
 /// escape hatch), the git revision, and the thread pool's busy fraction
 /// over the measured window (0.0 when the emitter ran without a pool or
 /// without the profiling hooks armed).
@@ -83,7 +83,7 @@ mod tests {
         let m = bench_meta(7, 0.25);
         assert_eq!(m.get("threads").unwrap().as_usize(), Some(7));
         let feats = m.get("cpu_features").unwrap().as_str().unwrap();
-        assert!(["avx2", "sse2", "scalar"].contains(&feats), "{feats}");
+        assert!(["avx512", "avx2", "sse2", "scalar"].contains(&feats), "{feats}");
         let rev = m.get("git_rev").unwrap().as_str().unwrap();
         assert!(!rev.is_empty());
         assert_eq!(m.get("pool_utilization").unwrap().as_f64(), Some(0.25));

@@ -10,10 +10,17 @@
 //! * The bool-mask adapters are bit-identical to the sorted-cohort entry
 //!   points for random masks, including `LinkStats` and wasted straggler
 //!   traffic (satellite 3).
+//! * Fleet runs are worker-pool-size invariant under the timing-wheel
+//!   event scheduler (PR-10: the wheel replaced the binary heap as the
+//!   default queue; scheduling must stay deterministic whatever the
+//!   parallelism underneath).
 
-use pfl::algorithms::{AlgSpec, Engine, L2gd};
+use std::sync::Arc;
+
+use pfl::algorithms::{AlgSpec, Engine, FedEnv, L2gd};
 use pfl::model::{DenseStore, ShardedStore};
-use pfl::sim::{runner, scenario, SimCfg};
+use pfl::sim::{runner, scenario, FleetSim, SimCfg};
+use pfl::util::threadpool::ThreadPool;
 use pfl::util::Rng;
 
 /// CI-sized Fig-3 configuration under `spec`.
@@ -214,7 +221,55 @@ fn random_mask_adapters_match_cohort_entry_points() {
     assert!(evaluated.bits_up > 0);
 }
 
-/// The uniform preset stays the lockstep oracle under the baselines too:
+/// PR-10 rerun: fleet runs scheduled by the timing-wheel queue are
+/// bit-identical across worker-pool sizes. The arrival stream (device
+/// compute + latency + transfer times) flows through the wheel's
+/// bucket/overflow machinery, so any order divergence from the old heap
+/// would surface here as pool-dependent state or accounting.
+#[test]
+fn fleet_runs_on_the_wheel_are_pool_size_invariant() {
+    const N: usize = 512;
+    let spec = "straggler-heavy:clients=512,sample=0.15,quorum=0.8,deadline=2";
+    let mut c = cfg(spec, 110, 23);
+    c.n_clients = N;
+    let build_env = |pool_size: usize| {
+        let (data, test) =
+            pfl::data::synth::logistic_split(20 * N, 60, 16, 0.02, 91);
+        let shards = data.split_contiguous(N);
+        FedEnv::new(
+            Arc::new(pfl::runtime::NativeLogreg::new(16, 0.01, 64, 128)),
+            shards, data, test,
+            ThreadPool::new(pool_size), 91)
+    };
+    let mut reference: Option<(Vec<Vec<u32>>, u64, u64, u64, u64)> = None;
+    for pool_size in [1usize, 2, 8] {
+        let env = build_env(pool_size);
+        let mut fsim = FleetSim::new(&c, &env).unwrap();
+        fsim.run_steps(0, c.steps).unwrap();
+        let eng = fsim.engine();
+        let rows: Vec<Vec<u32>> = (0..N)
+            .map(|i| eng.row_or_base(i).iter().map(|v| v.to_bits()).collect())
+            .collect();
+        let fingerprint = (
+            rows,
+            fsim.stats().comm_events,
+            fsim.stats().total_participants,
+            eng.net().total_bits_up(),
+            eng.net().total_bits_down(),
+        );
+        match &reference {
+            None => reference = Some(fingerprint),
+            Some(r) => assert_eq!(
+                r, &fingerprint,
+                "pool={pool_size} diverged from pool=1 under the wheel"
+            ),
+        }
+    }
+    let (_, comm, parts, up, _) = reference.unwrap();
+    assert!(comm > 0 && parts > 0 && up > 0, "run degenerated");
+}
+
+///// The uniform preset stays the lockstep oracle under the baselines too:
 /// rerunning a FedAvg scenario is bit-stable.
 #[test]
 fn fedavg_fleet_runs_are_seed_stable() {

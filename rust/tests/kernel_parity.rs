@@ -1,12 +1,13 @@
 //! SIMD kernel dispatch and parallel sharded sweep parity — the PR-7
 //! acceptance surface:
 //!
-//! * every intrinsic dispatch level (`avx2`/`sse2` where the host has
-//!   them) is **bit-identical** to the scalar 8-lane oracles for every
-//!   kernel, across lengths that hit the empty, sub-lane, exact-lane,
-//!   lane+tail, and large cases;
+//! * every intrinsic dispatch level (`avx512`/`avx2`/`sse2` where the
+//!   host has them) is **bit-identical** to the scalar 8-lane oracles for
+//!   every kernel, across lengths that hit the empty, sub-lane,
+//!   exact-lane, lane+tail, and large cases;
 //! * the dispatched entry points actually follow the active level, and
-//!   the `PFL_FORCE_SCALAR_KERNELS` decision logic picks scalar;
+//!   the `PFL_FORCE_KERNEL_LEVEL` decision logic pins/clamps tiers
+//!   (`PFL_FORCE_SCALAR_KERNELS=1` stays the scalar alias);
 //! * the per-shard parallel cohort sweeps are bit-identical across
 //!   worker-pool sizes and to the dense store (whose partial-cohort paths
 //!   are the pre-existing oracle).
@@ -90,10 +91,20 @@ fn dispatched_entry_points_follow_the_active_level() {
 
 #[test]
 fn escape_hatch_decision_and_level_ordering() {
-    // the pure decision function behind PFL_FORCE_SCALAR_KERNELS=1
-    assert_eq!(kernels::level_for(true), KernelLevel::Scalar);
+    // the pure decision function behind PFL_FORCE_KERNEL_LEVEL (and the
+    // PFL_FORCE_SCALAR_KERNELS=1 alias, which maps to Some(Scalar))
+    assert_eq!(kernels::level_for(Some(KernelLevel::Scalar)),
+               KernelLevel::Scalar);
     let fastest = kernels::available_levels()[0];
-    assert_eq!(kernels::level_for(false), fastest);
+    assert_eq!(kernels::level_for(None), fastest);
+    // a forced tier the host lacks clamps to the next-slower available
+    // level, never to something faster than requested
+    for &want in &[KernelLevel::Avx512, KernelLevel::Avx2,
+                   KernelLevel::Sse2, KernelLevel::Scalar] {
+        let got = kernels::level_for(Some(want));
+        assert!(got as usize >= want as usize, "{want:?} -> {got:?}");
+        assert!(kernels::available_levels().contains(&got));
+    }
     // scalar is always available, always last (it is the oracle)
     assert_eq!(*kernels::available_levels().last().unwrap(),
                KernelLevel::Scalar);
